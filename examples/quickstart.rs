@@ -1,0 +1,51 @@
+//! Quickstart: the 60-second tour of parframe's public API.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! 1. Build a model graph from the zoo and analyse its width.
+//! 2. Tune framework knobs with the paper's guideline.
+//! 3. Simulate it against the recommended baselines.
+//! 4. If AOT artifacts exist, run real numerics through PJRT.
+
+use parframe::config::CpuPlatform;
+use parframe::graph::analyze_width;
+use parframe::models;
+use parframe::runtime::ModelRuntime;
+use parframe::sim;
+use parframe::tuner;
+
+fn main() -> anyhow::Result<()> {
+    // 1. a model graph
+    let platform = CpuPlatform::large2();
+    let graph = models::build("wide_deep", 16).expect("model in zoo");
+    let width = analyze_width(&graph);
+    println!("wide_deep: {} ops, {} heavy, avg width {}", graph.len(), width.heavy_ops, width.avg_width);
+
+    // 2. tune (paper §8: pools = avg width, threads = cores / pools)
+    let tuned = tuner::tune(&graph, &platform);
+    println!(
+        "guideline setting: {} pools × ({} MKL + {} intra-op) threads",
+        tuned.config.inter_op_pools, tuned.config.mkl_threads, tuned.config.intra_op_threads
+    );
+
+    // 3. simulate vs the published recommendations
+    let ours = sim::simulate(&graph, &platform, &tuned.config);
+    println!("simulated latency: {:.3} ms", ours.latency_s * 1e3);
+    for b in tuner::Baseline::ALL {
+        let r = sim::simulate(&graph, &platform, &tuner::baseline_config(b, &platform));
+        println!("  {:<26} {:>8.3} ms ({:.2}x ours)", b.name(), r.latency_s * 1e3, r.latency_s / ours.latency_s);
+    }
+
+    // 4. real numerics (build-time artifacts, PJRT CPU)
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        let rt = ModelRuntime::load_some(dir, |e| e.name == "mlp_b1")?;
+        rt.self_check("mlp_b1")?;
+        println!("PJRT check: mlp_b1 digest verified on {}", rt.platform());
+    } else {
+        println!("(run `make artifacts` to enable the PJRT quickstart step)");
+    }
+    Ok(())
+}

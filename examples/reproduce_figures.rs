@@ -1,0 +1,46 @@
+//! Regenerate the paper's full evaluation: every figure and table, written
+//! to stdout and to `figures_out/` as text files (plus a Chrome trace for
+//! Fig. 8 you can load in `chrome://tracing`).
+//!
+//! ```sh
+//! cargo run --release --example reproduce_figures
+//! ```
+
+use std::fs;
+use std::io::Write as _;
+
+use parframe::bench_tables;
+use parframe::config::{CpuPlatform, FrameworkConfig, OperatorImpl};
+use parframe::models;
+use parframe::sim::{self, SimOptions};
+use parframe::trace;
+
+fn main() -> anyhow::Result<()> {
+    let out_dir = std::path::Path::new("figures_out");
+    fs::create_dir_all(out_dir)?;
+
+    for n in bench_tables::FIGURES {
+        let s = bench_tables::figure(n).unwrap();
+        println!("{s}");
+        fs::write(out_dir.join(format!("fig{n:02}.txt")), &s)?;
+    }
+    let t2 = bench_tables::table(2).unwrap();
+    println!("{t2}");
+    fs::write(out_dir.join("table02.txt"), &t2)?;
+
+    // bonus: interactive Chrome trace of the Fig. 8 best case
+    let p = CpuPlatform::small();
+    let g = models::build("inception_v2", 16).unwrap();
+    let cfg = FrameworkConfig {
+        inter_op_pools: 2,
+        mkl_threads: 2,
+        intra_op_threads: 1,
+        operator_impl: OperatorImpl::Serial,
+        ..FrameworkConfig::tuned_default()
+    };
+    let r = sim::simulate_opts(&g, &p, &cfg, &SimOptions { record_timelines: true });
+    let mut f = fs::File::create(out_dir.join("fig08_2x2.trace.json"))?;
+    f.write_all(trace::chrome_trace(&r.timelines).as_bytes())?;
+    println!("wrote figures_out/*.txt and fig08_2x2.trace.json (chrome://tracing)");
+    Ok(())
+}

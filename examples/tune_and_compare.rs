@@ -1,0 +1,74 @@
+//! Domain example: capacity planning for a datacenter serving fleet.
+//!
+//! Given a mixed fleet of models (the paper's motivation: CPUs serve "a
+//! large, diverse collection of DL use cases in production datacenter
+//! fleets"), compute per-model tuned settings and the fleet-wide capacity
+//! win over the one-size-fits-all recommended settings.
+//!
+//! ```sh
+//! cargo run --release --example tune_and_compare
+//! ```
+
+use parframe::config::CpuPlatform;
+use parframe::models;
+use parframe::sim;
+use parframe::tuner::{self, Baseline};
+use parframe::util::stats;
+
+/// A production fleet slice: (model, share of traffic).
+const FLEET: [(&str, f64); 5] = [
+    ("resnet50", 0.25),     // vision filtering
+    ("inception_v3", 0.10), // vision tagging
+    ("wide_deep", 0.30),    // ads ranking
+    ("ncf", 0.25),          // feed recommendation
+    ("transformer", 0.10),  // translation
+];
+
+fn main() {
+    let platform = CpuPlatform::large2();
+    println!("fleet capacity planning on {} ({} cores)\n", platform.name, platform.physical_cores());
+    println!(
+        "{:<14} {:>7} {:<22} {:>12} {:>12} {:>9}",
+        "model", "share", "tuned setting", "tuned ms", "TF-rec ms", "speedup"
+    );
+
+    let mut weighted_speedup = Vec::new();
+    let mut weights = Vec::new();
+    for (name, share) in FLEET {
+        let g = models::build(name, models::canonical_batch(name)).unwrap();
+        let tuned = tuner::tune(&g, &platform);
+        let ours = sim::simulate(&g, &platform, &tuned.config).latency_s;
+        let rec = sim::simulate(
+            &g,
+            &platform,
+            &tuner::baseline_config(Baseline::TensorFlowRecommended, &platform),
+        )
+        .latency_s;
+        let setting = format!(
+            "{}p x {}mkl x {}intra",
+            tuned.config.inter_op_pools, tuned.config.mkl_threads, tuned.config.intra_op_threads
+        );
+        println!(
+            "{:<14} {:>6.0}% {:<22} {:>12.3} {:>12.3} {:>8.2}x",
+            name,
+            share * 100.0,
+            setting,
+            ours * 1e3,
+            rec * 1e3,
+            rec / ours
+        );
+        weighted_speedup.push((rec / ours).ln() * share);
+        weights.push(share);
+    }
+    let fleet_gain =
+        (weighted_speedup.iter().sum::<f64>() / weights.iter().sum::<f64>()).exp();
+    println!(
+        "\ntraffic-weighted fleet speedup from per-model tuning: {:.2}x",
+        fleet_gain
+    );
+    println!(
+        "(equivalently: {:.1}% of the serving fleet's machines freed)",
+        (1.0 - 1.0 / fleet_gain) * 100.0
+    );
+    let _ = stats::mean(&weights); // touch stats to show the util API
+}

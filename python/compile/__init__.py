@@ -1,0 +1,5 @@
+"""Build-time compile path: L2 JAX models + L1 Pallas kernels + AOT export.
+
+Nothing in this package is imported at run time; the Rust coordinator only
+consumes the HLO-text artifacts that ``python -m compile.aot`` writes.
+"""

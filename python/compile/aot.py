@@ -1,0 +1,177 @@
+"""AOT export: lower the L2 JAX models (calling L1 Pallas kernels) to HLO text.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from ``python/``)::
+
+    python -m compile.aot --out-dir ../artifacts
+
+Emits one ``<name>.hlo.txt`` per (model, batch-size) bucket — the dynamic
+batcher on the Rust side routes requests to the nearest bucket — plus
+``manifest.json`` describing each artifact's I/O contract and a deterministic
+expected-output digest the Rust integration tests verify numerics against.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+MLP_BATCHES = [1, 2, 4, 8]
+TRANSFORMER_BATCHES = [1, 2, 4]
+MATMUL_SIZES = [128, 256, 512]
+
+# Input-generation scheme shared with rust/src/runtime/artifact.rs::gen_input.
+# x[i] = sin(i * 0.9898 + tag * 78.233) * scale
+INPUT_RULE = "sin(i * 0.9898 + tag * 78.233) * scale"
+
+
+def gen_input(tag: int, shape, scale: float = 1.0) -> jnp.ndarray:
+    """Deterministic input tensor; must match the Rust reimplementation."""
+    n = int(math.prod(shape))
+    idx = jnp.arange(n, dtype=jnp.float32)
+    return (jnp.sin(idx * 0.9898 + float(tag) * 78.233) * scale).reshape(shape)
+
+
+def materialize(spec: Dict[str, Any]) -> jnp.ndarray:
+    """Turn an input spec (det ``tag/scale`` or constant ``fill``) into data."""
+    if "fill" in spec:
+        return jnp.full(tuple(spec["shape"]), float(spec["fill"]),
+                        dtype=jnp.float32)
+    return gen_input(spec["tag"], tuple(spec["shape"]), spec.get("scale", 1.0))
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def digest(arr: np.ndarray, prefix_len: int = 16) -> Dict[str, Any]:
+    """Compact numeric fingerprint for cross-language comparison."""
+    flat = np.asarray(arr, dtype=np.float64).reshape(-1)
+    return {
+        "prefix": [float(v) for v in flat[:prefix_len]],
+        "sum": float(flat.sum()),
+        "abs_sum": float(np.abs(flat).sum()),
+        "count": int(flat.size),
+    }
+
+
+def export_one(name: str, fn, ref_fn, input_specs: List[Dict[str, Any]],
+               out_dir: str) -> Dict[str, Any]:
+    """Lower ``fn`` for the given inputs, validate vs oracle, write artifact."""
+    shapes = [jax.ShapeDtypeStruct(tuple(s["shape"]), jnp.float32)
+              for s in input_specs]
+    lowered = jax.jit(fn).lower(*shapes)
+    text = to_hlo_text(lowered)
+    # weights travel as arguments precisely to avoid elided large constants
+    # ("constant({...})"), which the text parser would zero-fill
+    assert "constant({...})" not in text, f"{name}: elided constant in HLO"
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+
+    inputs = [materialize(s) for s in input_specs]
+    out = np.asarray(jax.jit(fn)(*inputs)[0])
+    ref_out = np.asarray(ref_fn(*inputs)[0])
+    np.testing.assert_allclose(out, ref_out, rtol=2e-4, atol=2e-4)
+
+    def spec_json(s: Dict[str, Any]) -> Dict[str, Any]:
+        out_s: Dict[str, Any] = {"shape": list(s["shape"]), "dtype": "f32"}
+        if "fill" in s:
+            out_s["fill"] = float(s["fill"])
+        else:
+            out_s["tag"] = s["tag"]
+            out_s["scale"] = s.get("scale", 1.0)
+        return out_s
+
+    return {
+        "name": name,
+        "file": fname,
+        "inputs": [spec_json(s) for s in input_specs],
+        "output_shape": list(out.shape),
+        "expected": digest(out),
+    }
+
+
+def build_all(out_dir: str) -> Dict[str, Any]:
+    """Export every serving artifact + the manifest dict."""
+    os.makedirs(out_dir, exist_ok=True)
+    entries: List[Dict[str, Any]] = []
+
+    mlp_spec = M.MlpSpec()
+    mlp_params = M.mlp_param_specs(mlp_spec)
+    for b in MLP_BATCHES:
+        entries.append(export_one(
+            f"mlp_b{b}",
+            M.make_mlp_fn(mlp_spec, use_pallas=True),
+            M.make_mlp_fn(mlp_spec, use_pallas=False),
+            [{"shape": (b, mlp_spec.in_dim), "tag": 7, "scale": 1.0}, *mlp_params],
+            out_dir,
+        ) | {"kind": "mlp", "batch": b})
+
+    tr_spec = M.TransformerSpec()
+    tr_params = M.transformer_param_specs(tr_spec)
+    for b in TRANSFORMER_BATCHES:
+        tokens = b * tr_spec.seq
+        entries.append(export_one(
+            f"transformer_b{b}",
+            M.make_transformer_fn(tr_spec, use_pallas=True),
+            M.make_transformer_fn(tr_spec, use_pallas=False),
+            [{"shape": (tokens, tr_spec.d_model), "tag": 11, "scale": 0.5},
+             *tr_params],
+            out_dir,
+        ) | {"kind": "transformer", "batch": b, "seq": tr_spec.seq})
+
+    for n in MATMUL_SIZES:
+        entries.append(export_one(
+            f"matmul_{n}",
+            M.make_matmul_fn(n, use_pallas=True),
+            M.make_matmul_fn(n, use_pallas=False),
+            [{"shape": (n, n), "tag": 3, "scale": 1.0 / math.sqrt(n)},
+             {"shape": (n, n), "tag": 5, "scale": 1.0 / math.sqrt(n)}],
+            out_dir,
+        ) | {"kind": "matmul", "size": n})
+
+    manifest = {
+        "version": 1,
+        "input_rule": INPUT_RULE,
+        "mlp": {"in_dim": mlp_spec.in_dim, "out_dim": mlp_spec.out_dim,
+                "hidden": list(mlp_spec.hidden), "batches": MLP_BATCHES},
+        "transformer": {"seq": tr_spec.seq, "d_model": tr_spec.d_model,
+                        "n_heads": tr_spec.n_heads, "d_ff": tr_spec.d_ff,
+                        "batches": TRANSFORMER_BATCHES},
+        "artifacts": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    manifest = build_all(args.out_dir)
+    n = len(manifest["artifacts"])
+    print(f"wrote {n} artifacts + manifest.json to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

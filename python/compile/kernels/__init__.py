@@ -1,0 +1,2 @@
+"""Pallas kernels (L1) and their pure-jnp oracles."""
+from . import matmul_pallas, ref  # noqa: F401

@@ -1,0 +1,158 @@
+"""L1: tiled matmul Pallas kernel — the paper's GEMM hot-spot on TPU terms.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper tiles GEMM
+for AVX-512 FMA units and core-private caches and parallelises across MKL
+(OpenMP) threads.  On TPU the same insight maps to:
+
+* the 128×128 MXU systolic array  → block shapes are multiples of 128 where
+  the problem allows (8-lane sublane × 128-lane vregs for f32),
+* VMEM (~16 MiB scratchpad)       → the ``BlockSpec`` tile working set
+  ``(bm·bk + bk·bn + bm·bn)·4 B`` is kept well under VMEM,
+* MKL-thread parallelism          → the Pallas *grid*: each (i, j) grid cell
+  owns one output tile, the k-loop is the innermost grid axis so partial
+  products accumulate in the output ref.
+
+Kernels are lowered with ``interpret=True`` — the CPU PJRT client cannot run
+Mosaic custom-calls; real-TPU numbers are estimated analytically in
+EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, n_k: int):
+    """One grid step: accumulate ``x_tile @ w_tile`` into the output tile.
+
+    Grid layout is ``(m_tiles, n_tiles, k_tiles)`` with k innermost; the
+    output BlockSpec maps every k step of a given (i, j) onto the same tile,
+    so ``o_ref`` acts as the f32 accumulator the MXU would use.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+    del n_k  # part of the cache key; the grid bound carries the loop count
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is ≤ target (prefers MXU multiples)."""
+    if dim <= target:
+        return dim
+    for cand in range(target, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x: jnp.ndarray, w: jnp.ndarray, *, bm: int = 128, bn: int = 128,
+           bk: int = 128) -> jnp.ndarray:
+    """Tiled Pallas matmul: ``x[m,k] @ w[k,n] -> [m,n]``.
+
+    Block sizes are clamped to divisors of the problem shape so the kernel
+    handles the small/ragged shapes the hypothesis sweep throws at it; for
+    MXU-friendly shapes (multiples of 128) the requested tiling is used
+    as-is.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {w.shape}"
+    bm, bn, bk = _pick_block(m, bm), _pick_block(n, bn), _pick_block(k, bk)
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, *, n_k: int, activation: str):
+    """Fused linear layer tile: GEMM accumulate + bias/activation epilogue."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+    # Epilogue runs once, on the last k step: this is the fusion the paper's
+    # MatMul2 operator achieves by keeping the post-GEMM work inside the
+    # kernel instead of a separate framework-native op.
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        y = o_ref[...] + b_ref[...]
+        if activation == "relu":
+            y = jnp.maximum(y, 0.0)
+        elif activation == "tanh":
+            y = jnp.tanh(y)
+        o_ref[...] = y
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "bm", "bn", "bk"))
+def matmul_bias_act(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, *,
+                    activation: str = "relu", bm: int = 128, bn: int = 128,
+                    bk: int = 128) -> jnp.ndarray:
+    """Fused ``act(x @ w + b)`` Pallas kernel (the FC-layer hot path)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,)
+    bm, bn, bk = _pick_block(m, bm), _pick_block(n, bn), _pick_block(k, bk)
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_linear_kernel, n_k=n_k, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w, b)
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int,
+                         dtype_bytes: int = 4) -> int:
+    """VMEM working set of one grid step (x-tile + w-tile + o-tile).
+
+    Used by the perf notes in EXPERIMENTS.md and asserted <16 MiB in tests.
+    """
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization_estimate(m: int, n: int, k: int, bm: int = 128,
+                             bn: int = 128, bk: int = 128) -> float:
+    """Fraction of MXU issue slots doing useful work for this tiling.
+
+    The 128×128 MXU retires a full tile per pass; ragged edges waste the
+    remainder. This mirrors the paper's FMA-utilisation argument (§5.1) in
+    TPU terms.
+    """
+    def eff(dim, block, native=128):
+        per_block = -(-dim // block) * block  # padded to block multiple
+        per_pass = -(-per_block // native) * native
+        return dim / per_pass
+
+    return eff(m, bm, 8) * eff(n, bn, 128) * eff(k, bk, 128)

@@ -1,0 +1,72 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its oracle to float32 tolerance under pytest (see
+``python/tests/test_kernel.py``). The oracles are deliberately written with
+plain ``jnp`` ops only — no Pallas, no custom calls — so they lower to
+vanilla HLO on any backend.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Plain matrix multiplication oracle: ``x @ w``.
+
+    Args:
+        x: ``[m, k]`` activation matrix.
+        w: ``[k, n]`` weight matrix.
+
+    Returns:
+        ``[m, n]`` product, accumulated in float32.
+    """
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def matmul_bias_act(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    activation: str = "relu",
+) -> jnp.ndarray:
+    """Fused linear-layer oracle: ``act(x @ w + b)``.
+
+    This is the compute hot-spot the paper's FC-layer analysis revolves
+    around (MatMul-512 / MatMul-4k in §5): a GEMM plus its epilogue.
+    """
+    y = jnp.matmul(x, w, preferred_element_type=jnp.float32) + b.astype(jnp.float32)
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "tanh":
+        y = jnp.tanh(y)
+    elif activation == "none":
+        pass
+    else:  # pragma: no cover - defensive
+        raise ValueError(f"unknown activation: {activation}")
+    return y.astype(x.dtype)
+
+
+def softmax(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Numerically-stable softmax oracle."""
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def layernorm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    """Layer normalisation oracle over the last axis."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Single-head scaled-dot-product attention oracle.
+
+    Shapes: q ``[s, d]``, k ``[s, d]``, v ``[s, d]`` → ``[s, d]``.
+    """
+    d = q.shape[-1]
+    scores = jnp.matmul(q, k.T) / jnp.sqrt(jnp.float32(d))
+    return jnp.matmul(softmax(scores, axis=-1), v)

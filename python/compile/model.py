@@ -1,0 +1,249 @@
+"""L2: JAX forward graphs for the models the Rust coordinator serves.
+
+Two serving workloads, matching the paper's evaluation mix:
+
+* ``mlp`` — a wide&deep-style ranking MLP (the YouTube/Facebook
+  recommendation FC stacks of §5.1: hidden sizes in the 256–512 range).
+* ``transformer`` — a single pre-norm transformer encoder block (the
+  Transformer FC/attention mix of §5, MatMul-4k class).
+
+Every dense layer calls the L1 Pallas kernel
+(:func:`compile.kernels.matmul_pallas.matmul_bias_act`), so the AOT-lowered
+HLO exercises the full three-layer stack. Weights are generated from a
+counter-based deterministic scheme (no PRNG state needed at load time) so the
+Rust integration tests can check numerics against ``expected_*.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul_pallas as K
+from .kernels import ref
+
+
+# --------------------------------------------------------------------------
+# Deterministic weights
+# --------------------------------------------------------------------------
+
+def det_array(tag: int, shape: Tuple[int, ...], scale: float) -> jnp.ndarray:
+    """Deterministic pseudo-random weights: sin over an affine index grid.
+
+    Cheap, seed-free, identical across hosts — the Rust side never needs to
+    reproduce this (it reads expected outputs from the manifest), but pytest
+    re-derives it when checking the AOT artifacts.
+    """
+    n = int(math.prod(shape))
+    idx = jnp.arange(n, dtype=jnp.float32)
+    vals = jnp.sin(idx * 0.9898 + float(tag) * 78.233)
+    return (vals * scale).reshape(shape)
+
+
+# --------------------------------------------------------------------------
+# MLP ranker (wide & deep style)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MlpSpec:
+    """Architecture of the ranking MLP."""
+
+    in_dim: int = 256
+    hidden: Tuple[int, ...] = (512, 256, 128)
+    out_dim: int = 8
+
+    @property
+    def layer_dims(self) -> List[Tuple[int, int]]:
+        dims = (self.in_dim, *self.hidden, self.out_dim)
+        return list(zip(dims[:-1], dims[1:]))
+
+
+def mlp_params(spec: MlpSpec) -> Dict[str, jnp.ndarray]:
+    """Deterministic parameters for :func:`mlp_forward`."""
+    params: Dict[str, jnp.ndarray] = {}
+    for li, (din, dout) in enumerate(spec.layer_dims):
+        scale = 1.0 / math.sqrt(din)
+        params[f"w{li}"] = det_array(2 * li, (din, dout), scale)
+        params[f"b{li}"] = det_array(2 * li + 1, (dout,), 0.1)
+    return params
+
+
+def mlp_forward(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
+                use_pallas: bool = True) -> jnp.ndarray:
+    """Forward pass of the ranking MLP; final layer is linear (logits)."""
+    n_layers = len([k for k in params if k.startswith("w")])
+    h = x
+    for li in range(n_layers):
+        act = "relu" if li < n_layers - 1 else "none"
+        if use_pallas:
+            h = K.matmul_bias_act(h, params[f"w{li}"], params[f"b{li}"],
+                                  activation=act)
+        else:
+            h = ref.matmul_bias_act(h, params[f"w{li}"], params[f"b{li}"],
+                                    activation=act)
+    return h
+
+
+# --------------------------------------------------------------------------
+# Transformer encoder block
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TransformerSpec:
+    """Single pre-norm encoder block (batch of independent sequences)."""
+
+    seq: int = 32
+    d_model: int = 128
+    n_heads: int = 4
+    d_ff: int = 512
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+def transformer_params(spec: TransformerSpec) -> Dict[str, jnp.ndarray]:
+    """Deterministic parameters for :func:`transformer_forward`."""
+    d, f = spec.d_model, spec.d_ff
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "wq": det_array(101, (d, d), s), "bq": det_array(102, (d,), 0.02),
+        "wk": det_array(103, (d, d), s), "bk": det_array(104, (d,), 0.02),
+        "wv": det_array(105, (d, d), s), "bv": det_array(106, (d,), 0.02),
+        "wo": det_array(107, (d, d), s), "bo": det_array(108, (d,), 0.02),
+        "w1": det_array(109, (d, f), s), "b1": det_array(110, (f,), 0.02),
+        "w2": det_array(111, (f, d), 1.0 / math.sqrt(f)),
+        "b2": det_array(112, (d,), 0.02),
+        "ln1_g": jnp.ones((d,)), "ln1_b": jnp.zeros((d,)),
+        "ln2_g": jnp.ones((d,)), "ln2_b": jnp.zeros((d,)),
+    }
+    return p
+
+
+def _heads(x: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """[tokens, d_model] -> [heads, tokens, d_head]."""
+    t, d = x.shape
+    return x.reshape(t, n_heads, d // n_heads).transpose(1, 0, 2)
+
+
+def transformer_forward(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
+                        spec: TransformerSpec,
+                        use_pallas: bool = True) -> jnp.ndarray:
+    """Pre-norm encoder block over ``x: [batch*seq, d_model]``.
+
+    The Q/K/V/O projections are four *independent heavy ops* — exactly the
+    inter-op-parallelism structure that gives Transformer an average graph
+    width of 4 in the paper's Table 2. Attention itself is applied per
+    sequence within the flattened batch.
+    """
+    mm = (lambda a, w, b: K.matmul_bias_act(a, w, b, activation="none")) \
+        if use_pallas else \
+        (lambda a, w, b: ref.matmul_bias_act(a, w, b, activation="none"))
+
+    tokens, d = x.shape
+    assert d == spec.d_model and tokens % spec.seq == 0
+    n_seqs = tokens // spec.seq
+
+    h = ref.layernorm(x, params["ln1_g"], params["ln1_b"])
+    q, k, v = (mm(h, params[f"w{n}"], params[f"b{n}"]) for n in "qkv")
+
+    outs = []
+    for si in range(n_seqs):
+        sl = slice(si * spec.seq, (si + 1) * spec.seq)
+        qh, kh, vh = (_heads(t[sl], spec.n_heads) for t in (q, k, v))
+        per_head = [ref.attention(qh[hh], kh[hh], vh[hh])
+                    for hh in range(spec.n_heads)]
+        att = jnp.concatenate(per_head, axis=-1)
+        outs.append(att)
+    att = jnp.concatenate(outs, axis=0)
+
+    x = x + mm(att, params["wo"], params["bo"])
+
+    h = ref.layernorm(x, params["ln2_g"], params["ln2_b"])
+    ff = mm(h, params["w1"], params["b1"])
+    ff = jnp.maximum(ff, 0.0)
+    ff = mm(ff, params["w2"], params["b2"])
+    return x + ff
+
+
+# --------------------------------------------------------------------------
+# Entry points used by aot.py
+#
+# Weights are passed as ARGUMENTS, not closed-over constants: HLO *text*
+# elides large constants ("constant({...})"), which the 0.5.1 text parser
+# fills with zeros. The Rust runtime regenerates every parameter from the
+# same deterministic (tag, scale) rule recorded in the manifest.
+# --------------------------------------------------------------------------
+
+def mlp_param_specs(spec: MlpSpec) -> List[dict]:
+    """(name, shape, gen-rule) for every MLP parameter, in argument order."""
+    specs = []
+    for li, (din, dout) in enumerate(spec.layer_dims):
+        specs.append({"name": f"w{li}", "shape": (din, dout),
+                      "tag": 2 * li, "scale": 1.0 / math.sqrt(din)})
+        specs.append({"name": f"b{li}", "shape": (dout,),
+                      "tag": 2 * li + 1, "scale": 0.1})
+    return specs
+
+
+def make_mlp_fn(spec: MlpSpec, use_pallas: bool = True):
+    """Returns ``f(x, *params) -> (logits,)`` taking weights as arguments."""
+    names = [s["name"] for s in mlp_param_specs(spec)]
+
+    def fn(x, *args):
+        params = dict(zip(names, args))
+        return (mlp_forward(params, x, use_pallas=use_pallas),)
+
+    return fn
+
+
+# transformer parameter argument order (ln params use fill rules)
+TRANSFORMER_PARAM_ORDER: Tuple[str, ...] = (
+    "wq", "bq", "wk", "bk", "wv", "bv", "wo", "bo",
+    "w1", "b1", "w2", "b2", "ln1_g", "ln1_b", "ln2_g", "ln2_b",
+)
+
+
+def transformer_param_specs(spec: TransformerSpec) -> List[dict]:
+    """(name, shape, gen-rule) for every transformer parameter, in order."""
+    d, f = spec.d_model, spec.d_ff
+    s = 1.0 / math.sqrt(d)
+    det = lambda name, tag, shape, scale: {
+        "name": name, "shape": shape, "tag": tag, "scale": scale}
+    fill = lambda name, shape, value: {
+        "name": name, "shape": shape, "fill": value}
+    return [
+        det("wq", 101, (d, d), s), det("bq", 102, (d,), 0.02),
+        det("wk", 103, (d, d), s), det("bk", 104, (d,), 0.02),
+        det("wv", 105, (d, d), s), det("bv", 106, (d,), 0.02),
+        det("wo", 107, (d, d), s), det("bo", 108, (d,), 0.02),
+        det("w1", 109, (d, f), s), det("b1", 110, (f,), 0.02),
+        det("w2", 111, (f, d), 1.0 / math.sqrt(f)),
+        det("b2", 112, (d,), 0.02),
+        fill("ln1_g", (d,), 1.0), fill("ln1_b", (d,), 0.0),
+        fill("ln2_g", (d,), 1.0), fill("ln2_b", (d,), 0.0),
+    ]
+
+
+def make_transformer_fn(spec: TransformerSpec, use_pallas: bool = True):
+    """Returns ``f(x, *params) -> (y,)`` taking weights as arguments."""
+
+    def fn(x, *args):
+        params = dict(zip(TRANSFORMER_PARAM_ORDER, args))
+        return (transformer_forward(params, x, spec, use_pallas=use_pallas),)
+
+    return fn
+
+
+def make_matmul_fn(n: int, use_pallas: bool = True):
+    """Square matmul micro-workload (the paper's MatMul-N)."""
+    def fn(x, w):
+        if use_pallas:
+            return (K.matmul(x, w),)
+        return (ref.matmul(x, w),)
+
+    return fn

@@ -1,0 +1,87 @@
+"""AOT export contract: HLO text artifacts + manifest digests.
+
+Runs the full exporter into a temp dir (session-scoped: it is the expensive
+part) and checks the manifest is exactly what the Rust loader
+(rust/src/runtime/artifact.rs) expects.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="session")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.build_all(str(out))
+    return str(out), manifest
+
+
+class TestManifest:
+    def test_artifact_files_exist(self, built):
+        out, manifest = built
+        for e in manifest["artifacts"]:
+            p = os.path.join(out, e["file"])
+            assert os.path.exists(p), e["file"]
+            assert os.path.getsize(p) > 100
+
+    def test_manifest_json_roundtrip(self, built):
+        out, manifest = built
+        with open(os.path.join(out, "manifest.json")) as f:
+            loaded = json.load(f)
+        assert loaded["version"] == 1
+        assert len(loaded["artifacts"]) == len(manifest["artifacts"])
+
+    def test_expected_batch_buckets(self, built):
+        _, manifest = built
+        mlp = [e for e in manifest["artifacts"] if e["kind"] == "mlp"]
+        assert sorted(e["batch"] for e in mlp) == aot.MLP_BATCHES
+        tr = [e for e in manifest["artifacts"] if e["kind"] == "transformer"]
+        assert sorted(e["batch"] for e in tr) == aot.TRANSFORMER_BATCHES
+
+    def test_hlo_is_text(self, built):
+        out, manifest = built
+        path = os.path.join(out, manifest["artifacts"][0]["file"])
+        head = open(path).read(200)
+        assert "HloModule" in head  # text format, not proto bytes
+
+    def test_digest_matches_recomputation(self, built):
+        """Expected digests are reproducible from the deterministic inputs."""
+        _, manifest = built
+        entry = next(e for e in manifest["artifacts"] if e["kind"] == "mlp"
+                     and e["batch"] == 2)
+        spec = M.MlpSpec()
+        fn = M.make_mlp_fn(spec, use_pallas=False)
+        inputs = [aot.materialize(s) for s in entry["inputs"]]
+        out = np.asarray(fn(*inputs)[0], dtype=np.float64).reshape(-1)
+        assert out.size == entry["expected"]["count"]
+        np.testing.assert_allclose(out.sum(), entry["expected"]["sum"],
+                                   rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(out[:16], entry["expected"]["prefix"],
+                                   rtol=1e-3, atol=1e-4)
+
+    def test_output_shapes_recorded(self, built):
+        _, manifest = built
+        for e in manifest["artifacts"]:
+            n = math.prod(e["output_shape"])
+            assert n == e["expected"]["count"]
+
+
+class TestDigest:
+    def test_digest_fields(self):
+        d = aot.digest(np.arange(5, dtype=np.float32))
+        assert d["count"] == 5
+        assert d["sum"] == pytest.approx(10.0)
+        assert d["abs_sum"] == pytest.approx(10.0)
+        assert d["prefix"] == [0.0, 1.0, 2.0, 3.0, 4.0]
+
+    def test_digest_prefix_truncates(self):
+        d = aot.digest(np.ones(100), prefix_len=4)
+        assert len(d["prefix"]) == 4

@@ -1,0 +1,67 @@
+//! Bench: coordinator hot paths — batch formation and router validation
+//! (these run per request; they must stay far below model-execution time).
+
+use std::path::Path;
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+
+use parframe::coordinator::batcher::{BatchPolicy, DynamicBatcher};
+use parframe::coordinator::request::{Request, RequestId};
+use parframe::coordinator::router::Router;
+use parframe::runtime::{Manifest, Tensor};
+use parframe::util::bench::Bench;
+
+const MANIFEST: &str = r#"{"version":1,"artifacts":[
+  {"name":"mlp_b1","file":"f","kind":"mlp","batch":1,
+   "inputs":[{"shape":[1,256],"tag":0,"scale":1.0}],"output_shape":[1,8],
+   "expected":{"prefix":[],"sum":0,"abs_sum":0,"count":8}},
+  {"name":"mlp_b2","file":"f","kind":"mlp","batch":2,
+   "inputs":[{"shape":[2,256],"tag":0,"scale":1.0}],"output_shape":[2,8],
+   "expected":{"prefix":[],"sum":0,"abs_sum":0,"count":16}},
+  {"name":"mlp_b4","file":"f","kind":"mlp","batch":4,
+   "inputs":[{"shape":[4,256],"tag":0,"scale":1.0}],"output_shape":[4,8],
+   "expected":{"prefix":[],"sum":0,"abs_sum":0,"count":32}},
+  {"name":"mlp_b8","file":"f","kind":"mlp","batch":8,
+   "inputs":[{"shape":[8,256],"tag":0,"scale":1.0}],"output_shape":[8,8],
+   "expected":{"prefix":[],"sum":0,"abs_sum":0,"count":64}}
+]}"#;
+
+fn req(id: u64) -> Request {
+    let (tx, _rx) = channel();
+    Request {
+        id: RequestId(id),
+        kind: "mlp".into(),
+        input: Tensor { shape: vec![1, 256], data: vec![0.0; 256] },
+        enqueued: Instant::now(),
+        reply: tx,
+    }
+}
+
+fn main() {
+    let mut b = Bench::new("batcher");
+    let manifest = Manifest::parse(Path::new("/tmp"), MANIFEST).unwrap();
+
+    b.run("push+cut/64-requests", || {
+        let mut batcher = DynamicBatcher::new(
+            "mlp",
+            &manifest,
+            BatchPolicy { max_wait: Duration::ZERO, max_batch: 8 },
+        );
+        for i in 0..64 {
+            batcher.push(req(i));
+        }
+        while !batcher.is_empty() {
+            std::hint::black_box(batcher.cut());
+        }
+    });
+
+    let router = Router::new(&manifest, &["mlp"]).unwrap();
+    let r = req(0);
+    b.run_with_output("router/validate", || router.route(&r).is_ok());
+
+    b.run_with_output("manifest/parse", || {
+        Manifest::parse(Path::new("/tmp"), MANIFEST).unwrap().artifacts.len()
+    });
+
+    b.finish();
+}

@@ -1,0 +1,22 @@
+//! Bench: end-to-end figure regeneration — one case per paper table/figure
+//! (the `cargo bench` entry the DESIGN.md experiment index points at).
+//!
+//! Each case regenerates the figure's full data series; timings bound how
+//! long `parframe figures --all` takes.
+
+use parframe::bench_tables;
+use parframe::util::bench::Bench;
+
+fn main() {
+    // figure generation involves exhaustive search for fig 18 — keep the
+    // harness snappy unless the user asked for full statistics
+    if std::env::var("PARFRAME_BENCH_FULL").is_err() {
+        std::env::set_var("PARFRAME_BENCH_FAST", "1");
+    }
+    let mut b = Bench::new("figures");
+    for n in bench_tables::FIGURES {
+        b.run_with_output(&format!("fig{n:02}"), || bench_tables::figure(n).unwrap().len());
+    }
+    b.run_with_output("table02", || bench_tables::table(2).unwrap().len());
+    b.finish();
+}

@@ -1,0 +1,53 @@
+//! Bench: the real serving hot path — PJRT execution of the AOT artifacts
+//! and end-to-end coordinator round-trips.
+//!
+//! Skips (with a notice) when `make artifacts` has not been run.
+
+use std::path::Path;
+use std::time::Duration;
+
+use parframe::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use parframe::runtime::{gen_input, ModelRuntime};
+use parframe::util::bench::Bench;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("runtime bench skipped: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    let mut b = Bench::new("runtime");
+
+    let rt = ModelRuntime::load_some(dir, |e| e.kind == "mlp" || e.name == "matmul_256")
+        .expect("load artifacts");
+
+    // raw PJRT execution per batch bucket
+    for bucket in [1usize, 4, 8] {
+        let name = format!("mlp_b{bucket}");
+        let x = gen_input(7, &[bucket, 256], 1.0);
+        b.run_with_output(&format!("pjrt/{name}"), || {
+            rt.execute_x(&name, x.clone()).unwrap().data.len()
+        });
+    }
+    let entry = rt.manifest().get("matmul_256").unwrap().clone();
+    let inputs: Vec<_> = entry.inputs.iter().map(|s| s.generate()).collect();
+    b.run_with_output("pjrt/matmul_256", || {
+        rt.execute("matmul_256", &inputs).unwrap().data.len()
+    });
+
+    // coordinator round-trip (batching + channels + PJRT)
+    let mut cfg = CoordinatorConfig::for_kind(dir, "mlp");
+    cfg.policy = BatchPolicy { max_wait: Duration::from_micros(200), max_batch: 8 };
+    let coord = Coordinator::start(cfg).expect("start coordinator");
+    b.run_with_output("coordinator/single-roundtrip", || {
+        coord.infer("mlp", gen_input(3, &[1, 256], 1.0)).unwrap().is_ok()
+    });
+    b.run_with_output("coordinator/8-concurrent", || {
+        let rxs: Vec<_> = (0..8)
+            .map(|t| coord.submit("mlp", gen_input(t, &[1, 256], 1.0)).unwrap())
+            .collect();
+        rxs.into_iter().filter(|rx| rx.recv().unwrap().is_ok()).count()
+    });
+    println!("coordinator metrics: {}", coord.metrics().summary());
+    b.finish();
+}

@@ -1,0 +1,47 @@
+//! Bench: DES engine throughput — how fast the simulator schedules and
+//! accounts operator graphs (the L3 hot path for every figure harness).
+
+use parframe::config::{CpuPlatform, FrameworkConfig, OperatorImpl};
+use parframe::models;
+use parframe::sim::{self, SimOptions};
+use parframe::util::bench::Bench;
+
+fn cfg(pools: usize, mkl: usize) -> FrameworkConfig {
+    FrameworkConfig {
+        inter_op_pools: pools,
+        mkl_threads: mkl,
+        intra_op_threads: mkl,
+        operator_impl: OperatorImpl::IntraOpParallel,
+        ..FrameworkConfig::tuned_default()
+    }
+}
+
+fn main() {
+    let mut b = Bench::new("scheduler");
+    let p = CpuPlatform::large2();
+
+    for name in ["resnet50", "inception_v3", "transformer", "densenet121"] {
+        let g = models::build(name, models::canonical_batch(name)).unwrap();
+        b.run_with_output(&format!("simulate/{name}"), || {
+            sim::simulate(&g, &p, &cfg(4, 12)).latency_s
+        });
+    }
+
+    // graph construction itself
+    b.run_with_output("build/transformer", || models::build("transformer", 16).unwrap().len());
+    b.run_with_output("build/inception_v3", || models::build("inception_v3", 16).unwrap().len());
+
+    // width analysis
+    let g = models::build("transformer", 16).unwrap();
+    b.run_with_output("width/transformer", || parframe::graph::analyze_width(&g).avg_width);
+
+    // trace-recording overhead
+    let g2 = models::build("inception_v2", 16).unwrap();
+    b.run_with_output("simulate+timelines/inception_v2", || {
+        sim::simulate_opts(&g2, &p, &cfg(2, 24), &SimOptions { record_timelines: true })
+            .timelines
+            .len()
+    });
+
+    b.finish();
+}

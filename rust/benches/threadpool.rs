@@ -1,0 +1,26 @@
+//! Bench: the paper's Fig. 14 measurement for real — 10k micro-tasks
+//! through each thread-pool implementation at 4 and 64 threads.
+//! (In-tree harness; criterion is unavailable offline.)
+
+use parframe::bench_tables::libraries::measure_pool_10k;
+use parframe::config::PoolLib;
+use parframe::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("threadpool");
+    for lib in PoolLib::ALL {
+        for threads in [4usize, 64] {
+            b.run_with_output(&format!("{}/{}threads/10k-tasks", lib.name(), threads), || {
+                measure_pool_10k(lib, threads)
+            });
+        }
+    }
+    // dispatch-only cost: single submit+join round-trips
+    for lib in PoolLib::ALL {
+        let pool = parframe::libs::threadpool::make_pool(lib, 2);
+        b.run(&format!("{}/single-task-roundtrip", lib.name()), || {
+            parframe::libs::threadpool::scatter_gather(pool.as_ref(), vec![Box::new(|| {})]);
+        });
+    }
+    b.finish();
+}

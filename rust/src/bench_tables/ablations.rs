@@ -1,0 +1,117 @@
+//! Ablations: isolate each framework design feature's contribution on the
+//! evaluation set (the "which knob bought what" analysis the paper's Fig. 1
+//! staircase hints at, run across all models).
+//!
+//! Each ablation flips ONE feature of the guideline-tuned configuration and
+//! reports the geomean slowdown — regenerate with `parframe ablations`.
+
+use std::fmt::Write as _;
+
+use crate::config::{CpuPlatform, FrameworkConfig, MathLib, OperatorImpl, ParallelismMode, PoolLib};
+use crate::models;
+use crate::tuner;
+use crate::util::stats;
+
+use super::evaluation::EVAL_MODELS;
+use super::run;
+
+/// One ablation: name + config mutation.
+type Mutation = (&'static str, fn(&mut FrameworkConfig));
+
+/// The ablation set: each entry degrades one design feature.
+pub fn mutations() -> Vec<Mutation> {
+    vec![
+        ("sync scheduling (pools=1)", |c| {
+            c.inter_op_pools = 1;
+        }),
+        ("serial operators (MatMul1)", |c| {
+            c.operator_impl = OperatorImpl::Serial;
+        }),
+        ("Eigen GEMM kernels", |c| {
+            c.math_lib = MathLib::Eigen;
+        }),
+        ("std::thread pool", |c| {
+            c.pool_lib = PoolLib::StdThread;
+        }),
+        ("no model parallelism", |c| {
+            c.parallelism = ParallelismMode::DataParallel;
+        }),
+        ("half the threads", |c| {
+            c.mkl_threads = (c.mkl_threads / 2).max(1);
+            c.intra_op_threads = (c.intra_op_threads / 2).max(1);
+        }),
+        ("2x the pools", |c| {
+            c.inter_op_pools *= 2;
+        }),
+    ]
+}
+
+/// Geomean slowdown of one mutation across the evaluation set.
+pub fn ablation_slowdown(mutate: fn(&mut FrameworkConfig), p: &CpuPlatform) -> f64 {
+    let mut ratios = Vec::new();
+    for name in EVAL_MODELS {
+        let g = models::build(name, models::canonical_batch(name)).unwrap();
+        let tuned = tuner::tune(&g, p).config;
+        let mut ablated = tuned.clone();
+        mutate(&mut ablated);
+        if ablated.validate(p).is_err() {
+            continue;
+        }
+        let base = run(&g, p, &tuned).latency_s;
+        let abl = run(&g, p, &ablated).latency_s;
+        ratios.push(abl / base);
+    }
+    stats::geomean(&ratios)
+}
+
+/// Render the ablation table.
+pub fn ablation_table() -> String {
+    let p = CpuPlatform::large2();
+    let mut out = String::from(
+        "Ablations — geomean slowdown from degrading one feature of the tuned\n\
+         setting (large.2, evaluation set):\n",
+    );
+    let _ = writeln!(out, "{:<32} {:>10}", "ablation", "slowdown");
+    let mut rows: Vec<(String, f64)> = mutations()
+        .into_iter()
+        .map(|(name, m)| (name.to_string(), ablation_slowdown(m, &p)))
+        .collect();
+    rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    for (name, s) in rows {
+        let _ = writeln!(out, "{:<32} {:>9.2}x", name, s);
+    }
+    out.push_str("(1.00x = no effect; the guideline's pool/thread balance and the\n MatMul2 operator design carry most of the win)\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_ablation_helps() {
+        // every mutation moves away from the tuned point; none may yield a
+        // meaningful speedup (small slack for lattice coarseness)
+        let p = CpuPlatform::large2();
+        for (name, m) in mutations() {
+            let s = ablation_slowdown(m, &p);
+            assert!(s > 0.97, "{name}: {s}");
+        }
+    }
+
+    #[test]
+    fn serial_operators_hurt_most_of_all_single_knobs() {
+        // the paper's §5 finding: operator design (intra-op prep
+        // parallelism) is a first-order effect
+        let p = CpuPlatform::large2();
+        let serial = ablation_slowdown(|c| c.operator_impl = OperatorImpl::Serial, &p);
+        assert!(serial > 1.1, "serial={serial}");
+    }
+
+    #[test]
+    fn table_renders() {
+        let t = ablation_table();
+        assert!(t.contains("sync scheduling"));
+        assert!(t.contains("Eigen"));
+    }
+}

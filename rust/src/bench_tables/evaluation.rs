@@ -1,0 +1,201 @@
+//! Figure 18 + Table 2 — the headline evaluation (paper §8): the width
+//! guideline vs the Intel/TensorFlow recommendations vs the exhaustive
+//! global optimum, on the holdout workload set, on `large.2`.
+
+use std::fmt::Write as _;
+
+use crate::config::CpuPlatform;
+use crate::graph::analyze_width;
+use crate::models;
+use crate::tuner::{baseline_config, exhaustive_search, tune, Baseline};
+
+use super::run;
+
+/// The §8 holdout workloads (vision + recommendation + translation).
+pub const EVAL_MODELS: [&str; 7] = [
+    "densenet121",
+    "squeezenet",
+    "resnet50",
+    "inception_v3",
+    "wide_deep",
+    "ncf",
+    "transformer",
+];
+
+/// One model's evaluation row: latencies under every setting.
+#[derive(Debug, Clone)]
+pub struct EvalRow {
+    /// Model name.
+    pub model: String,
+    /// TF-performance-guide setting (the Fig. 18 baseline).
+    pub tf_recommended: f64,
+    /// Intel blog setting.
+    pub intel: f64,
+    /// Out-of-the-box TF default.
+    pub tf_default: f64,
+    /// This work (width guideline).
+    pub ours: f64,
+    /// Exhaustive-search optimum.
+    pub global_opt: f64,
+}
+
+impl EvalRow {
+    /// Speedup of `ours` over the TF-recommended baseline.
+    pub fn speedup_vs_tf(&self) -> f64 {
+        self.tf_recommended / self.ours
+    }
+
+    /// Speedup of `ours` over Intel's setting.
+    pub fn speedup_vs_intel(&self) -> f64 {
+        self.intel / self.ours
+    }
+
+    /// Fraction of globally-optimal performance we achieve.
+    pub fn fraction_of_optimum(&self) -> f64 {
+        self.global_opt / self.ours
+    }
+}
+
+/// Evaluate one model on a platform.
+pub fn eval_model(name: &str, p: &CpuPlatform) -> EvalRow {
+    let g = models::build(name, models::canonical_batch(name)).unwrap();
+    let lat = |cfg: &crate::config::FrameworkConfig| run(&g, p, cfg).latency_s;
+    EvalRow {
+        model: name.to_string(),
+        tf_recommended: lat(&baseline_config(Baseline::TensorFlowRecommended, p)),
+        intel: lat(&baseline_config(Baseline::IntelRecommended, p)),
+        tf_default: lat(&baseline_config(Baseline::TensorFlowDefault, p)),
+        ours: lat(&tune(&g, p).config),
+        global_opt: exhaustive_search(&g, p).best_latency_s,
+    }
+}
+
+/// All Fig. 18 rows.
+pub fn fig18_rows() -> Vec<EvalRow> {
+    let p = CpuPlatform::large2();
+    EVAL_MODELS.iter().map(|m| eval_model(m, &p)).collect()
+}
+
+/// Fig. 18: normalised performance per setting (baseline = TF-recommended).
+pub fn fig18_guideline_evaluation() -> String {
+    let rows = fig18_rows();
+    let mut out =
+        String::from("Fig 18 — performance vs recommended settings (large.2, higher is better)\n");
+    let _ = writeln!(
+        out,
+        "{:<14} {:>8} {:>8} {:>8} {:>8} {:>8}",
+        "model", "TF-rec", "Intel", "TF-dflt", "ours", "optimum"
+    );
+    for r in &rows {
+        let norm = |lat: f64| r.tf_recommended / lat;
+        let _ = writeln!(
+            out,
+            "{:<14} {:>8.2} {:>8.2} {:>8.2} {:>8.2} {:>8.2}",
+            r.model,
+            1.0,
+            norm(r.intel),
+            norm(r.tf_default),
+            norm(r.ours),
+            norm(r.global_opt),
+        );
+    }
+    let gm = |f: &dyn Fn(&EvalRow) -> f64| {
+        crate::util::stats::geomean(&rows.iter().map(|r| f(r)).collect::<Vec<_>>())
+    };
+    let _ = writeln!(
+        out,
+        "geomean: ours/TF-rec = {:.2}x, ours/Intel = {:.2}x, ours/optimum = {:.1}%",
+        gm(&|r| r.speedup_vs_tf()),
+        gm(&|r| r.speedup_vs_intel()),
+        gm(&|r| r.fraction_of_optimum()) * 100.0
+    );
+    out
+}
+
+/// Table 2: average model width (= the pool count our guideline selects).
+pub fn table2_average_widths() -> String {
+    let mut out = String::from("Table 2 — average model width (pools selected by the guideline)\n");
+    let mut names = String::new();
+    let mut widths = String::new();
+    for m in EVAL_MODELS {
+        let g = models::build(m, models::canonical_batch(m)).unwrap();
+        let w = analyze_width(&g);
+        let _ = write!(names, "{:>13}", m);
+        let _ = write!(widths, "{:>13}", w.avg_width);
+    }
+    let _ = writeln!(out, "{names}");
+    let _ = writeln!(out, "{widths}");
+    out.push_str("intra-op and MKL threads = physical cores / width\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::geomean;
+
+    fn rows() -> Vec<EvalRow> {
+        fig18_rows()
+    }
+
+    #[test]
+    fn ours_beats_both_recommendations_on_average() {
+        let rows = rows();
+        let vs_tf = geomean(&rows.iter().map(EvalRow::speedup_vs_tf).collect::<Vec<_>>());
+        let vs_intel = geomean(&rows.iter().map(EvalRow::speedup_vs_intel).collect::<Vec<_>>());
+        // paper: 1.34× over TF-rec and 1.29× over Intel. Our simulator
+        // reproduces the ordering with more conservative magnitudes
+        // (~1.25× / ~1.06×) because our conv kernels saturate earlier,
+        // which *helps* Intel's 24-thread setting — see EXPERIMENTS.md.
+        assert!(vs_tf > 1.15, "vs TF-rec: {vs_tf}");
+        assert!(vs_intel > 1.03, "vs Intel: {vs_intel}");
+    }
+
+    #[test]
+    fn ours_within_5pct_of_optimum_everywhere() {
+        for r in rows() {
+            let frac = r.fraction_of_optimum();
+            assert!(frac > 0.949, "{}: {:.3} of optimum", r.model, frac);
+        }
+    }
+
+    #[test]
+    fn tf_default_much_worse() {
+        let rows = rows();
+        let dflt = geomean(&rows.iter().map(|r| r.tf_recommended / r.tf_default).collect::<Vec<_>>());
+        assert!(dflt < 0.9, "TF default should lag TF recommended: {dflt}");
+    }
+
+    #[test]
+    fn intel_beats_tf_on_recsys_and_translation() {
+        // paper: "Intel's settings perform better than TensorFlow's for
+        // recommendation and translation models"
+        for r in rows() {
+            if ["ncf", "transformer", "wide_deep"].contains(&r.model.as_str()) {
+                assert!(r.intel <= r.tf_recommended * 1.001, "{}: intel={} tf={}", r.model, r.intel, r.tf_recommended);
+            }
+        }
+    }
+
+    #[test]
+    fn never_meaningfully_slower_than_recommended() {
+        // the paper's robustness claim: worst case ≥95% of the optimum;
+        // SqueezeNet is one of its two acknowledged sub-optimal cases (the
+        // guideline picks avg-width 1 pools while the fire modules have
+        // max width 2), so allow the same ≤5% slack vs the baselines
+        for r in rows() {
+            assert!(r.ours <= r.tf_recommended * 1.053, "{}", r.model);
+            assert!(r.ours <= r.intel * 1.053, "{}", r.model);
+        }
+    }
+
+    #[test]
+    fn ours_strictly_wins_on_recsys_and_translation() {
+        for r in rows() {
+            if ["ncf", "wide_deep", "transformer"].contains(&r.model.as_str()) {
+                assert!(r.ours < r.tf_recommended, "{}", r.model);
+                assert!(r.ours <= r.intel * 1.001, "{}", r.model);
+            }
+        }
+    }
+}

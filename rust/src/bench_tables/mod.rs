@@ -1,0 +1,90 @@
+//! Figure/table regeneration harness: one function per figure and table of
+//! the paper's evaluation. Each returns the printable rows (and is smoke-
+//! tested for the paper's qualitative relations in
+//! `rust/tests/figures_smoke.rs`).
+//!
+//! CLI: `parframe figures --fig 9`, `parframe figures --table 2`,
+//! `parframe figures --all`.
+
+pub mod ablations;
+pub mod evaluation;
+pub mod libraries;
+pub mod multisocket;
+pub mod operators;
+pub mod scheduling;
+
+use crate::config::{CpuPlatform, FrameworkConfig, OperatorImpl};
+use crate::graph::Graph;
+use crate::sim::{self, Category, SimReport};
+
+/// Render one figure by number.
+pub fn figure(n: usize) -> Option<String> {
+    Some(match n {
+        1 => scheduling::fig1_inception_v3_breakdown(),
+        4 => scheduling::fig4_async_speedup(),
+        6 => scheduling::fig6_pool_thread_sweep(),
+        7 => scheduling::fig7_case_breakdowns(),
+        8 => scheduling::fig8_traces(),
+        9 => operators::fig9_mkl_thread_scaling(),
+        10 => operators::fig10_matmul_breakdown(),
+        11 => operators::fig11_intra_op_threads(),
+        12 => operators::fig12_hyperthread_breakdown(),
+        13 => libraries::fig13_library_comparison(),
+        14 => libraries::fig14_threadpool_overhead(),
+        15 => multisocket::fig15_resnet_two_socket(),
+        16 => multisocket::fig16_upi_bandwidth(),
+        17 => multisocket::fig17_multisocket_breakdown(),
+        18 => evaluation::fig18_guideline_evaluation(),
+        _ => return None,
+    })
+}
+
+/// Render one table by number.
+pub fn table(n: usize) -> Option<String> {
+    match n {
+        2 => Some(evaluation::table2_average_widths()),
+        _ => None,
+    }
+}
+
+/// All figure numbers with generators.
+pub const FIGURES: [usize; 15] = [1, 4, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16, 17, 18];
+
+/// Shared helper: a framework config with explicit thread knobs.
+pub(crate) fn cfg(pools: usize, mkl: usize, intra: usize, op: OperatorImpl) -> FrameworkConfig {
+    FrameworkConfig {
+        inter_op_pools: pools,
+        mkl_threads: mkl,
+        intra_op_threads: intra,
+        operator_impl: op,
+        ..FrameworkConfig::tuned_default()
+    }
+}
+
+/// Shared helper: simulate and return the report.
+pub(crate) fn run(g: &Graph, p: &CpuPlatform, c: &FrameworkConfig) -> SimReport {
+    sim::simulate(g, p, c)
+}
+
+/// Shared helper: format a breakdown as percentage columns.
+pub(crate) fn breakdown_cols(r: &SimReport) -> String {
+    let cats = [
+        Category::MklCompute,
+        Category::MklPrep,
+        Category::FwPrep,
+        Category::FwNative,
+        Category::FwSched,
+        Category::Barrier,
+        Category::UpiTransfer,
+        Category::Idle,
+    ];
+    cats.iter()
+        .map(|c| format!("{:>5.1}%", r.breakdown.frac(*c) * 100.0))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+/// Header matching [`breakdown_cols`].
+pub(crate) fn breakdown_header() -> &'static str {
+    "  mkl   mklp  tfprep native sched  barr   upi   idle"
+}

@@ -1,0 +1,135 @@
+//! Figures 15–17 — beyond-one-socket experiments (paper §7).
+
+use std::fmt::Write as _;
+
+use crate::config::{CpuPlatform, OperatorImpl};
+use crate::models;
+
+use super::{breakdown_cols, breakdown_header, cfg, run};
+use super::operators::matmul_graph;
+
+/// Data-parallel config: one pool spanning everything, all threads.
+fn dp(p: &CpuPlatform) -> crate::config::FrameworkConfig {
+    cfg(1, p.physical_cores(), p.physical_cores(), OperatorImpl::IntraOpParallel)
+}
+
+/// Fig. 15: ResNet-50 on one vs two sockets (data parallelism): the UPI
+/// link keeps the second socket from doubling throughput.
+pub fn fig15_resnet_two_socket() -> String {
+    let one = CpuPlatform::large();
+    let two = CpuPlatform::large2();
+    let g = models::build("resnet50", 16).unwrap();
+    let r1 = run(&g, &one, &dp(&one));
+    let r2 = run(&g, &two, &dp(&two));
+    let mut out = String::from("Fig 15 — ResNet-50 (bs16) data parallelism across sockets\n");
+    let _ = writeln!(out, "{:<12} latency  speedup {}", "platform", breakdown_header());
+    let _ = writeln!(out, "{:<12} {:>6.1}ms {:>7} {}", "large", r1.latency_s * 1e3, "1.00x", breakdown_cols(&r1));
+    let _ = writeln!(
+        out,
+        "{:<12} {:>6.1}ms {:>6.2}x {}",
+        "large.2",
+        r2.latency_s * 1e3,
+        r1.latency_s / r2.latency_s,
+        breakdown_cols(&r2)
+    );
+    let _ = writeln!(out, "peak UPI demand: {:.1} GB/s", r2.upi_peak_bps / 1e9);
+    out
+}
+
+/// Two-socket speedup + peak UPI consumption for a MatMul size.
+pub fn two_socket_speedup(n: usize) -> (f64, f64) {
+    let one = CpuPlatform::large();
+    let two = CpuPlatform::large2();
+    let g = matmul_graph(n);
+    let r1 = run(&g, &one, &dp(&one));
+    let r2 = run(&g, &two, &dp(&two));
+    (r1.latency_s / r2.latency_s, r2.upi_peak_bps / 1e9)
+}
+
+/// Fig. 16: two-socket speedup and UPI bandwidth vs MatMul size (peaks at
+/// 8k, declines at 16k as NUMA thrash sets in).
+pub fn fig16_upi_bandwidth() -> String {
+    let sizes = [512usize, 1024, 2048, 4096, 8192, 16384];
+    let mut out = String::from("Fig 16 — two-socket (large.2) scaling of TF MatMul\n");
+    let _ = writeln!(out, "{:<8} {:>9} {:>14}", "size", "speedup", "UPI GB/s");
+    for n in sizes {
+        let (s, bw) = two_socket_speedup(n);
+        let _ = writeln!(out, "{:<8} {:>8.2}x {:>13.1}", n, s, bw);
+    }
+    out
+}
+
+/// Fig. 17: breakdowns of the MatMuls on one vs two sockets.
+pub fn fig17_multisocket_breakdown() -> String {
+    let one = CpuPlatform::large();
+    let two = CpuPlatform::large2();
+    let mut out = String::from("Fig 17 — MatMul breakdowns, one vs two sockets\n");
+    let _ = writeln!(out, "{:<20} latency  {}", "case", breakdown_header());
+    for n in [512usize, 4096, 8192] {
+        let g = matmul_graph(n);
+        for (pname, p) in [("large", &one), ("large.2", &two)] {
+            let r = run(&g, p, &dp(p));
+            let _ = writeln!(
+                out,
+                "MatMul-{:<5} {:<7} {:>6.1}ms {}",
+                n,
+                pname,
+                r.latency_s * 1e3,
+                breakdown_cols(&r)
+            );
+        }
+    }
+    out
+}
+
+/// Model parallelism for NCF (§7.2): one pool per socket over the four
+/// embeddings vs single-socket execution.
+pub fn ncf_model_parallel_speedup() -> f64 {
+    let two = CpuPlatform::large2();
+    let g = models::build("ncf", models::canonical_batch("ncf")).unwrap();
+    let mut mp = cfg(4, 12, 12, OperatorImpl::IntraOpParallel);
+    mp.parallelism = crate::config::ParallelismMode::ModelParallel;
+    let sync = run(&g, &two, &cfg(1, 48, 48, OperatorImpl::IntraOpParallel));
+    let par = run(&g, &two, &mp);
+    sync.latency_s / par.latency_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig15_speedup_below_2x() {
+        let g = models::build("resnet50", 16).unwrap();
+        let one = CpuPlatform::large();
+        let two = CpuPlatform::large2();
+        let s = run(&g, &one, &dp(&one)).latency_s / run(&g, &two, &dp(&two)).latency_s;
+        // paper: 1.43×
+        assert!(s > 1.1 && s < 1.9, "speedup={s}");
+    }
+
+    #[test]
+    fn fig16_peak_at_8k_decline_at_16k() {
+        let (s4k, _) = two_socket_speedup(4096);
+        let (s8k, bw8k) = two_socket_speedup(8192);
+        let (s16k, _) = two_socket_speedup(16384);
+        assert!(s8k > s4k, "8k={s8k} 4k={s4k}");
+        assert!(s16k < s8k, "16k={s16k} 8k={s8k}");
+        // paper: ~1.8× at 8k; our saturating thread-scaling model yields a
+        // more conservative ~1.4× with the same rise-then-fall shape
+        assert!(s8k > 1.3 && s8k <= 2.0, "8k={s8k} (paper: ~1.8x)");
+        assert!(bw8k > 50.0 && bw8k <= 110.0, "bw={bw8k} (paper: ~100 GB/s)");
+    }
+
+    #[test]
+    fn fig16_small_matmul_barely_scales() {
+        let (s512, _) = two_socket_speedup(512);
+        assert!(s512 < 1.3, "512={s512}");
+    }
+
+    #[test]
+    fn ncf_benefits_from_model_parallelism() {
+        let s = ncf_model_parallel_speedup();
+        assert!(s > 1.0, "ncf model-parallel speedup {s}");
+    }
+}

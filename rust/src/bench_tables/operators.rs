@@ -1,0 +1,224 @@
+//! Figures 9–12 — operator-design experiments (paper §5).
+
+use std::fmt::Write as _;
+
+use crate::config::{CpuPlatform, OperatorImpl};
+use crate::graph::{GraphBuilder, Graph};
+use crate::models;
+use crate::ops::OpKind;
+use crate::sim::{self, Category, SimOptions};
+
+use super::{breakdown_cols, breakdown_header, cfg, run};
+
+/// A single-op MatMul graph (the §5 micro-workload).
+pub fn matmul_graph(n: usize) -> Graph {
+    let mut b = GraphBuilder::new(&format!("matmul_{n}"), n);
+    b.add("matmul", OpKind::MatMul { m: n, k: n, n }, &[]);
+    b.build()
+}
+
+/// A kernel-only MatMul graph: zero framework prep, modelling the bare
+/// library call (Fig. 9's "MKL" series).
+pub fn kernel_only_graph(n: usize) -> Graph {
+    let mut b = GraphBuilder::new(&format!("mkl_{n}"), n);
+    let id = b.add("matmul", OpKind::MatMul { m: n, k: n, n }, &[]);
+    let _ = id;
+    let mut g = b.build();
+    g.nodes[0].cost.prep_bytes = 0.0; // strip the framework term
+    g
+}
+
+/// 24-vs-1 MKL-thread speedup for a graph.
+fn scaling(g: &Graph, p: &CpuPlatform, strip_fw_prep: bool) -> f64 {
+    let _ = strip_fw_prep;
+    let t1 = run(g, p, &cfg(1, 1, 1, OperatorImpl::Serial)).latency_s;
+    let t24 = run(g, p, &cfg(1, 24, 1, OperatorImpl::Serial)).latency_s;
+    t1 / t24
+}
+
+/// Fig. 9: speedup from 24 MKL threads, TF operator vs bare MKL kernel.
+pub fn fig9_mkl_thread_scaling() -> String {
+    let p = CpuPlatform::large();
+    let sizes = [256usize, 512, 1024, 2048, 4096, 8192, 16384];
+    let mut out = String::from("Fig 9 — speedup of 24 MKL threads over 1 (large)\n");
+    let _ = writeln!(out, "{:<8} {:>10} {:>10}", "size", "TF op", "MKL kernel");
+    for n in sizes {
+        // TF series: framework prep included; MKL series: kernel+packing only
+        let tf = scaling(&matmul_graph(n), &p, false);
+        let mkl = scaling(&kernel_only_graph(n), &p, true);
+        let _ = writeln!(out, "{:<8} {:>9.2}x {:>9.2}x", n, tf, mkl);
+    }
+    out
+}
+
+/// Fig. 10: run-time breakdown of MatMul-512 / MatMul-4k at 1 and 24 MKL
+/// threads — data preparation is the scaling wall.
+pub fn fig10_matmul_breakdown() -> String {
+    let p = CpuPlatform::large();
+    let mut out = String::from("Fig 10 — MatMul breakdowns (large), latency normalised to 1 thread\n");
+    let _ = writeln!(out, "{:<22} rel.time {}", "case", breakdown_header());
+    for n in [512usize, 4096] {
+        let g = matmul_graph(n);
+        let t1 = run(&g, &p, &cfg(1, 1, 1, OperatorImpl::Serial));
+        for threads in [1usize, 24] {
+            let r = run(&g, &p, &cfg(1, threads, 1, OperatorImpl::Serial));
+            let _ = writeln!(
+                out,
+                "MatMul-{:<5} {:>2} thread{} {:>7.3} {}",
+                n,
+                threads,
+                if threads == 1 { " " } else { "s" },
+                r.latency_s / t1.latency_s,
+                breakdown_cols(&r)
+            );
+        }
+    }
+    out
+}
+
+/// Fig. 11 rows: workload, 24-intra-thread speedup, programmability tax.
+pub fn fig11_rows() -> Vec<(String, f64, f64)> {
+    let p = CpuPlatform::large();
+    let mut rows = Vec::new();
+    let mut workloads: Vec<(String, Graph)> = vec![
+        ("MatMul-512".into(), matmul_graph(512)),
+        ("MatMul-4k".into(), matmul_graph(4096)),
+    ];
+    for name in ["squeezenet", "resnet50", "densenet121", "inception_v2"] {
+        workloads.push((name.to_string(), models::build(name, 16).unwrap()));
+    }
+    for (name, g) in workloads {
+        let serial = run(&g, &p, &cfg(1, 24, 1, OperatorImpl::Serial));
+        let par = run(&g, &p, &cfg(1, 24, 24, OperatorImpl::IntraOpParallel));
+        let speedup = serial.latency_s / par.latency_s;
+        let tax = par.breakdown.programmability_tax();
+        rows.push((name, speedup, tax));
+    }
+    rows
+}
+
+/// Fig. 11: intra-op-thread speedups + the programmability tax.
+pub fn fig11_intra_op_threads() -> String {
+    let mut out = String::from(
+        "Fig 11 — 24 intra-op threads vs 1 (both 24 MKL threads, large)\n",
+    );
+    let _ = writeln!(out, "{:<14} {:>9} {:>18}", "workload", "speedup", "programmability tax");
+    for (name, speedup, tax) in fig11_rows() {
+        let _ = writeln!(out, "{:<14} {:>8.2}x {:>17.1}%", name, speedup, tax * 100.0);
+    }
+    out
+}
+
+/// Fig. 12: per-hyperthread activity for the MatMuls with 24 intra-op
+/// threads — kernel threads on cores 0–23, intra threads on 24–47.
+pub fn fig12_hyperthread_breakdown() -> String {
+    let p = CpuPlatform::large();
+    let mut out = String::from(
+        "Fig 12 — hyperthread roles with 24 MKL + 24 intra-op threads (large)\n",
+    );
+    for n in [512usize, 4096] {
+        let g = matmul_graph(n);
+        let r = sim::simulate_opts(
+            &g,
+            &p,
+            &cfg(1, 24, 24, OperatorImpl::IntraOpParallel),
+            &SimOptions { record_timelines: true },
+        );
+        let busy = |core: usize, cat: Category| -> f64 {
+            (r.timelines[core]
+                .iter()
+                .filter(|s| s.cat == cat)
+                .map(|s| s.dur())
+                .sum::<f64>()
+                / r.latency_s)
+                .max(0.0)
+        };
+        let _ = writeln!(
+            out,
+            "MatMul-{n}: core0 mkl={:.0}% prep={:.0}% | core24 (HT partner) prep={:.0}% mkl={:.0}%",
+            busy(0, Category::MklCompute) * 100.0,
+            busy(0, Category::FwPrep) * 100.0,
+            busy(24, Category::FwPrep) * 100.0,
+            busy(24, Category::MklCompute) * 100.0,
+        );
+    }
+    out.push_str("(framework prep rides the idle hyperthread partners of the FMA-bound kernel threads)\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9_tf_below_mkl_and_below_cores() {
+        let p = CpuPlatform::large();
+        for n in [512usize, 4096] {
+            let tf = scaling(&matmul_graph(n), &p, false);
+            let mkl = scaling(&kernel_only_graph(n), &p, true);
+            assert!(tf <= mkl + 1e-9, "n={n}: tf={tf} mkl={mkl}");
+            assert!(mkl < 24.0, "n={n}: mkl={mkl}");
+        }
+    }
+
+    #[test]
+    fn fig9_small_matrices_scale_worst() {
+        let p = CpuPlatform::large();
+        let small = scaling(&matmul_graph(256), &p, false);
+        let big = scaling(&matmul_graph(8192), &p, false);
+        assert!(small < big, "small={small} big={big}");
+        assert!(big > 8.0, "big={big}");
+        assert!(big < 20.0, "big={big} (paper: ~16x max)");
+    }
+
+    #[test]
+    fn fig10_prep_dominates_512_at_24_threads() {
+        // wall-clock durations: the serial prep exceeds the (parallel)
+        // kernel's duration at 24 threads (Fig. 10's scaling wall). The
+        // breakdown stores core-seconds, so divide compute by its width.
+        let p = CpuPlatform::large();
+        let g = matmul_graph(512);
+        let r = run(&g, &p, &cfg(1, 24, 1, OperatorImpl::Serial));
+        let prep_wall = r.breakdown.get(Category::FwPrep); // serial: 1 core
+        let compute_wall = r.breakdown.get(Category::MklCompute) / 24.0;
+        assert!(
+            prep_wall > compute_wall,
+            "prep={prep_wall} compute={compute_wall}"
+        );
+    }
+
+    #[test]
+    fn fig11_speedup_band_matches_paper() {
+        // paper: 1.05× (DenseNet) … 4.21× (SqueezeNet). We reproduce the
+        // band and the prep-bound-vs-compute-bound contrast; the exact
+        // DenseNet-vs-SqueezeNet ordering differs (our DenseNet models its
+        // 3×3 convs via im2col where MKL-DNN used direct convolution) —
+        // see EXPERIMENTS.md §Deviations.
+        let rows = fig11_rows();
+        let get = |n: &str| rows.iter().find(|r| r.0 == n).unwrap().1;
+        assert!(get("MatMul-512") > 1.5, "mm512={}", get("MatMul-512"));
+        assert!(get("MatMul-512") > get("MatMul-4k"), "512 should gain more");
+        assert!(get("squeezenet") > 1.3, "squeeze={}", get("squeezenet"));
+        for (name, s, _) in &rows {
+            assert!(*s >= 0.95 && *s < 8.0, "{name}: {s}");
+        }
+    }
+
+    #[test]
+    fn fig11_tax_band_matches_paper() {
+        // paper: tax ranges 1.3% … 63%, MatMul-512 highest, 4k small
+        let rows = fig11_rows();
+        let tax = |n: &str| rows.iter().find(|r| r.0 == n).unwrap().2;
+        assert!(tax("MatMul-512") > 0.3, "512 tax={}", tax("MatMul-512"));
+        assert!(tax("MatMul-4k") < tax("MatMul-512"));
+        for (name, _, t) in &rows {
+            assert!(*t > 0.005 && *t < 0.85, "{name}: tax={t}");
+        }
+    }
+
+    #[test]
+    fn fig12_intra_threads_on_hyperthread_partners() {
+        let s = fig12_hyperthread_breakdown();
+        assert!(s.contains("core24"));
+    }
+}

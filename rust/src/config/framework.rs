@@ -1,0 +1,255 @@
+//! Framework configuration — the five design features of the paper's Fig. 2.
+//!
+//! * scheduling mechanism → [`FrameworkConfig::inter_op_pools`] (1 = fully
+//!   synchronous, >1 = asynchronous over that many pools),
+//! * operator design → [`OperatorImpl`] (`MatMul1` serial data-prep vs
+//!   `MatMul2` intra-op-parallel data-prep),
+//! * math library back end → [`MathLib`],
+//! * thread-pool library → [`PoolLib`],
+//! * beyond-one-socket mechanism → [`ParallelismMode`].
+
+use super::platform::CpuPlatform;
+
+/// Which math library provides the compute kernels (paper §6.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MathLib {
+    /// Intel MKL: best GEMM, most effective software prefetching.
+    Mkl,
+    /// MKL-DNN (oneDNN): DL-specific kernels, slightly weaker GEMM.
+    MklDnn,
+    /// Eigen: portable C++ templates, least aggressive prefetching.
+    Eigen,
+}
+
+impl MathLib {
+    /// All supported libraries.
+    pub const ALL: [MathLib; 3] = [MathLib::Mkl, MathLib::MklDnn, MathLib::Eigen];
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "mkl" => Some(MathLib::Mkl),
+            "mkldnn" | "mkl-dnn" | "onednn" => Some(MathLib::MklDnn),
+            "eigen" => Some(MathLib::Eigen),
+            _ => None,
+        }
+    }
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            MathLib::Mkl => "MKL",
+            MathLib::MklDnn => "MKL-DNN",
+            MathLib::Eigen => "Eigen",
+        }
+    }
+}
+
+/// Which thread-pool implementation dispatches tasks (paper §6.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PoolLib {
+    /// Naive mutex + condvar pool over `std::thread`.
+    StdThread,
+    /// Eigen-style non-blocking pool with per-thread work-stealing deques.
+    Eigen,
+    /// Folly-style MPMC queue with LIFO wake-up semaphore.
+    Folly,
+}
+
+impl PoolLib {
+    /// All supported pool libraries.
+    pub const ALL: [PoolLib; 3] = [PoolLib::StdThread, PoolLib::Eigen, PoolLib::Folly];
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "std" | "stdthread" | "std::thread" => Some(PoolLib::StdThread),
+            "eigen" => Some(PoolLib::Eigen),
+            "folly" => Some(PoolLib::Folly),
+            _ => None,
+        }
+    }
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PoolLib::StdThread => "std::thread",
+            PoolLib::Eigen => "Eigen",
+            PoolLib::Folly => "Folly",
+        }
+    }
+}
+
+/// Operator implementation strategy (paper §5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OperatorImpl {
+    /// `MatMul1`: framework-native data preparation runs serially on the
+    /// pool's main thread before entering the library kernel.
+    Serial,
+    /// `MatMul2`: data preparation is split across an intra-op thread pool
+    /// colocated with the kernel threads (hyperthread co-scheduling).
+    IntraOpParallel,
+}
+
+/// How work is spread beyond one socket (paper §7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ParallelismMode {
+    /// Split the batch across sockets; weights are replicated, halves of
+    /// the activations travel over UPI.
+    DataParallel,
+    /// Schedule different operators (inter-op pools) on different sockets.
+    ModelParallel,
+}
+
+/// A complete framework parameter setting — one point in the design space
+/// the paper sweeps (|settings| = logical_cores³ on `large.2`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrameworkConfig {
+    /// Number of independent asynchronous scheduling pools
+    /// ("inter-op parallelism threads" in TensorFlow terms). 1 ⇒ fully
+    /// synchronous scheduling.
+    pub inter_op_pools: usize,
+    /// Math-library (MKL) threads per pool — the intra-op kernel threads.
+    pub mkl_threads: usize,
+    /// Framework-level intra-op threads per pool (the `MatMul2` pool).
+    pub intra_op_threads: usize,
+    /// Operator implementation strategy.
+    pub operator_impl: OperatorImpl,
+    /// Math library back end.
+    pub math_lib: MathLib,
+    /// Thread-pool library.
+    pub pool_lib: PoolLib,
+    /// Beyond-one-socket mechanism.
+    pub parallelism: ParallelismMode,
+    /// Bind one software thread per physical core first (Intel guidance).
+    pub pin_threads: bool,
+}
+
+impl FrameworkConfig {
+    /// The paper's tuned default: async pools with MatMul2 operators,
+    /// MKL-DNN kernels and a Folly-class pool.
+    pub fn tuned_default() -> Self {
+        FrameworkConfig {
+            inter_op_pools: 1,
+            mkl_threads: 1,
+            intra_op_threads: 1,
+            operator_impl: OperatorImpl::IntraOpParallel,
+            math_lib: MathLib::MklDnn,
+            pool_lib: PoolLib::Folly,
+            parallelism: ParallelismMode::DataParallel,
+            pin_threads: true,
+        }
+    }
+
+    /// TensorFlow performance-guide recommendation [14]: MKL/intra-op
+    /// threads = physical cores, inter-op pools = sockets.
+    pub fn tensorflow_recommended(p: &CpuPlatform) -> Self {
+        FrameworkConfig {
+            inter_op_pools: p.sockets,
+            mkl_threads: p.physical_cores(),
+            intra_op_threads: p.physical_cores(),
+            ..Self::tuned_default()
+        }
+    }
+
+    /// Intel blog recommendation [3]: MKL/intra-op threads = physical cores
+    /// per socket, inter-op pools = sockets.
+    pub fn intel_recommended(p: &CpuPlatform) -> Self {
+        FrameworkConfig {
+            inter_op_pools: p.sockets,
+            mkl_threads: p.cores_per_socket,
+            intra_op_threads: p.cores_per_socket,
+            ..Self::tuned_default()
+        }
+    }
+
+    /// TensorFlow's out-of-the-box default: every knob = logical cores.
+    pub fn tensorflow_default(p: &CpuPlatform) -> Self {
+        FrameworkConfig {
+            inter_op_pools: p.logical_cores(),
+            mkl_threads: p.logical_cores(),
+            intra_op_threads: p.logical_cores(),
+            ..Self::tuned_default()
+        }
+    }
+
+    /// Total software threads this setting creates.
+    pub fn total_threads(&self) -> usize {
+        self.inter_op_pools * (self.mkl_threads + self.intra_op_threads)
+    }
+
+    /// True when more software threads than hardware threads exist
+    /// ("over-threading" in the paper's Fig. 6).
+    pub fn over_threaded(&self, p: &CpuPlatform) -> bool {
+        self.total_threads() > p.logical_cores()
+    }
+
+    /// Sanity-check the setting against a platform.
+    pub fn validate(&self, p: &CpuPlatform) -> Result<(), String> {
+        if self.inter_op_pools == 0 {
+            return Err("inter_op_pools must be >= 1".into());
+        }
+        if self.mkl_threads == 0 {
+            return Err("mkl_threads must be >= 1".into());
+        }
+        if self.intra_op_threads == 0 {
+            return Err("intra_op_threads must be >= 1".into());
+        }
+        if self.inter_op_pools > p.logical_cores() {
+            return Err(format!(
+                "inter_op_pools={} exceeds logical cores={}",
+                self.inter_op_pools,
+                p.logical_cores()
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recommended_settings_match_paper() {
+        let l2 = CpuPlatform::large2();
+        let tf = FrameworkConfig::tensorflow_recommended(&l2);
+        assert_eq!((tf.inter_op_pools, tf.mkl_threads), (2, 48));
+        let intel = FrameworkConfig::intel_recommended(&l2);
+        assert_eq!((intel.inter_op_pools, intel.mkl_threads), (2, 24));
+        let dflt = FrameworkConfig::tensorflow_default(&l2);
+        assert_eq!((dflt.inter_op_pools, dflt.mkl_threads), (96, 96));
+    }
+
+    #[test]
+    fn over_threading_detection() {
+        let small = CpuPlatform::small();
+        let mut c = FrameworkConfig::tuned_default();
+        c.inter_op_pools = 4;
+        c.mkl_threads = 4;
+        c.intra_op_threads = 4;
+        assert!(c.over_threaded(&small)); // 32 > 8
+        c.inter_op_pools = 2;
+        c.mkl_threads = 2;
+        c.intra_op_threads = 2;
+        assert!(!c.over_threaded(&small)); // 8 <= 8
+    }
+
+    #[test]
+    fn validate_rejects_zeroes() {
+        let p = CpuPlatform::small();
+        let mut c = FrameworkConfig::tuned_default();
+        c.inter_op_pools = 0;
+        assert!(c.validate(&p).is_err());
+        c = FrameworkConfig::tuned_default();
+        c.mkl_threads = 0;
+        assert!(c.validate(&p).is_err());
+    }
+
+    #[test]
+    fn parse_enums() {
+        assert_eq!(MathLib::parse("mkl-dnn"), Some(MathLib::MklDnn));
+        assert_eq!(PoolLib::parse("folly"), Some(PoolLib::Folly));
+        assert_eq!(MathLib::parse("cuda"), None);
+    }
+}

@@ -1,0 +1,185 @@
+//! Config-file loader.
+//!
+//! Deployments describe a run with a small JSON document (TOML is not
+//! available offline; the schema is flat enough that JSON stays readable):
+//!
+//! ```json
+//! {
+//!   "platform": "large.2",
+//!   "inter_op_pools": 3,
+//!   "mkl_threads": 16,
+//!   "intra_op_threads": 16,
+//!   "operator_impl": "intra_op_parallel",
+//!   "math_lib": "mkl-dnn",
+//!   "pool_lib": "folly",
+//!   "parallelism": "data",
+//!   "pin_threads": true
+//! }
+//! ```
+//!
+//! Every field is optional; omitted knobs keep their
+//! [`FrameworkConfig::tuned_default`] value, and omitted `platform` means
+//! `large`.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::framework::{FrameworkConfig, MathLib, OperatorImpl, ParallelismMode, PoolLib};
+use super::platform::CpuPlatform;
+
+/// A fully-resolved run configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunConfig {
+    /// Hardware platform the simulator models.
+    pub platform: CpuPlatform,
+    /// Framework knob setting.
+    pub framework: FrameworkConfig,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            platform: CpuPlatform::large(),
+            framework: FrameworkConfig::tuned_default(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse a JSON config document.
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        let doc = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let mut cfg = RunConfig::default();
+
+        if let Some(p) = doc.get("platform") {
+            let name = p.as_str().context("platform must be a string")?;
+            cfg.platform = CpuPlatform::by_name(name)
+                .ok_or_else(|| anyhow!("unknown platform '{name}'"))?;
+        }
+        let fw = &mut cfg.framework;
+        if let Some(v) = doc.get("inter_op_pools") {
+            fw.inter_op_pools = usize_field(v, "inter_op_pools")?;
+        }
+        if let Some(v) = doc.get("mkl_threads") {
+            fw.mkl_threads = usize_field(v, "mkl_threads")?;
+        }
+        if let Some(v) = doc.get("intra_op_threads") {
+            fw.intra_op_threads = usize_field(v, "intra_op_threads")?;
+        }
+        if let Some(v) = doc.get("operator_impl") {
+            fw.operator_impl = match v.as_str() {
+                Some("serial") | Some("matmul1") => OperatorImpl::Serial,
+                Some("intra_op_parallel") | Some("matmul2") => OperatorImpl::IntraOpParallel,
+                other => bail!("bad operator_impl: {other:?}"),
+            };
+        }
+        if let Some(v) = doc.get("math_lib") {
+            let s = v.as_str().context("math_lib must be a string")?;
+            fw.math_lib = MathLib::parse(s).ok_or_else(|| anyhow!("bad math_lib '{s}'"))?;
+        }
+        if let Some(v) = doc.get("pool_lib") {
+            let s = v.as_str().context("pool_lib must be a string")?;
+            fw.pool_lib = PoolLib::parse(s).ok_or_else(|| anyhow!("bad pool_lib '{s}'"))?;
+        }
+        if let Some(v) = doc.get("parallelism") {
+            fw.parallelism = match v.as_str() {
+                Some("data") => ParallelismMode::DataParallel,
+                Some("model") => ParallelismMode::ModelParallel,
+                other => bail!("bad parallelism: {other:?}"),
+            };
+        }
+        if let Some(v) = doc.get("pin_threads") {
+            fw.pin_threads = matches!(v, Json::Bool(true));
+        }
+        fw.validate(&cfg.platform).map_err(|e| anyhow!(e))?;
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        Self::from_json_str(&text)
+    }
+
+    /// Apply `key=value` CLI overrides on top of this config.
+    pub fn apply_override(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "platform" => {
+                self.platform = CpuPlatform::by_name(value)
+                    .ok_or_else(|| anyhow!("unknown platform '{value}'"))?;
+            }
+            "inter_op_pools" => self.framework.inter_op_pools = value.parse()?,
+            "mkl_threads" => self.framework.mkl_threads = value.parse()?,
+            "intra_op_threads" => self.framework.intra_op_threads = value.parse()?,
+            "math_lib" => {
+                self.framework.math_lib =
+                    MathLib::parse(value).ok_or_else(|| anyhow!("bad math_lib '{value}'"))?;
+            }
+            "pool_lib" => {
+                self.framework.pool_lib =
+                    PoolLib::parse(value).ok_or_else(|| anyhow!("bad pool_lib '{value}'"))?;
+            }
+            "operator_impl" => {
+                self.framework.operator_impl = match value {
+                    "serial" | "matmul1" => OperatorImpl::Serial,
+                    "intra_op_parallel" | "matmul2" => OperatorImpl::IntraOpParallel,
+                    _ => bail!("bad operator_impl '{value}'"),
+                };
+            }
+            _ => bail!("unknown config key '{key}'"),
+        }
+        Ok(())
+    }
+}
+
+fn usize_field(v: &Json, name: &str) -> Result<usize> {
+    v.as_usize().with_context(|| format!("{name} must be a number"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_document() {
+        let cfg = RunConfig::from_json_str(
+            r#"{"platform":"large.2","inter_op_pools":3,"mkl_threads":16,
+                "intra_op_threads":16,"operator_impl":"matmul2",
+                "math_lib":"mkl","pool_lib":"eigen","parallelism":"model",
+                "pin_threads":true}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.platform.name, "large.2");
+        assert_eq!(cfg.framework.inter_op_pools, 3);
+        assert_eq!(cfg.framework.mkl_threads, 16);
+        assert_eq!(cfg.framework.math_lib, MathLib::Mkl);
+        assert_eq!(cfg.framework.pool_lib, PoolLib::Eigen);
+        assert_eq!(cfg.framework.parallelism, ParallelismMode::ModelParallel);
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let cfg = RunConfig::from_json_str("{}").unwrap();
+        assert_eq!(cfg.platform.name, "large");
+        assert_eq!(cfg.framework, FrameworkConfig::tuned_default());
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(RunConfig::from_json_str(r#"{"platform":"tpu"}"#).is_err());
+        assert!(RunConfig::from_json_str(r#"{"math_lib":"blas"}"#).is_err());
+        assert!(RunConfig::from_json_str(r#"{"inter_op_pools":0}"#).is_err());
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut cfg = RunConfig::default();
+        cfg.apply_override("platform", "small").unwrap();
+        cfg.apply_override("mkl_threads", "4").unwrap();
+        assert_eq!(cfg.platform.name, "small");
+        assert_eq!(cfg.framework.mkl_threads, 4);
+        assert!(cfg.apply_override("bogus", "1").is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Configuration: hardware platforms (paper Table 1), framework knobs
+//! (paper Fig. 2), and the JSON config-file loader.
+
+pub mod framework;
+pub mod loader;
+pub mod platform;
+
+pub use framework::{FrameworkConfig, MathLib, OperatorImpl, ParallelismMode, PoolLib};
+pub use loader::RunConfig;
+pub use platform::CpuPlatform;

@@ -1,0 +1,143 @@
+//! Hardware platform descriptions (the paper's Table 1).
+//!
+//! These drive the discrete-event simulator in [`crate::sim`]: core counts,
+//! SMT topology (two hyperthreads share one FMA unit), per-socket LLC and
+//! memory bandwidth, and the inter-socket UPI link for `large.2`.
+
+/// A CPU platform under study.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CpuPlatform {
+    /// Display name ("small", "large", "large.2").
+    pub name: String,
+    /// Number of CPU sockets.
+    pub sockets: usize,
+    /// Physical cores per socket.
+    pub cores_per_socket: usize,
+    /// Hyperthreads per physical core (2 on Skylake).
+    pub smt: usize,
+    /// Core frequency in GHz.
+    pub freq_ghz: f64,
+    /// Peak dense-FP32 GFLOP/s of ONE physical core (both hyperthreads
+    /// share the FMA units, so SMT does not add peak FLOPs — paper §4.2).
+    pub peak_gflops_per_core: f64,
+    /// Last-level cache per socket, MiB.
+    pub llc_mib_per_socket: f64,
+    /// DRAM bandwidth per socket, GB/s.
+    pub mem_bw_gbps: f64,
+    /// Peak bidirectional UPI bandwidth between sockets, GB/s (0 when
+    /// single-socket).
+    pub upi_gbps: f64,
+}
+
+impl CpuPlatform {
+    /// `small`: i7-6700K — 4 cores @ 4 GHz, 0.423 TFLOPS, 8 MiB LLC.
+    pub fn small() -> Self {
+        CpuPlatform {
+            name: "small".into(),
+            sockets: 1,
+            cores_per_socket: 4,
+            smt: 2,
+            freq_ghz: 4.0,
+            peak_gflops_per_core: 423.0 / 4.0,
+            llc_mib_per_socket: 8.0,
+            mem_bw_gbps: 34.0,
+            upi_gbps: 0.0,
+        }
+    }
+
+    /// `large`: Xeon Platinum 8175M — 24 cores @ 2.5 GHz, 1.64 TFLOPS,
+    /// 33 MiB LLC.
+    pub fn large() -> Self {
+        CpuPlatform {
+            name: "large".into(),
+            sockets: 1,
+            cores_per_socket: 24,
+            smt: 2,
+            freq_ghz: 2.5,
+            peak_gflops_per_core: 1640.0 / 24.0,
+            llc_mib_per_socket: 33.0,
+            mem_bw_gbps: 100.0,
+            upi_gbps: 0.0,
+        }
+    }
+
+    /// `large.2`: two sockets of `large`, 120 GB/s peak bidirectional UPI.
+    pub fn large2() -> Self {
+        CpuPlatform {
+            sockets: 2,
+            name: "large.2".into(),
+            upi_gbps: 120.0,
+            ..Self::large()
+        }
+    }
+
+    /// Look up a preset by name.
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "small" => Some(Self::small()),
+            "large" => Some(Self::large()),
+            "large.2" | "large2" => Some(Self::large2()),
+            _ => None,
+        }
+    }
+
+    /// Total physical cores across sockets.
+    pub fn physical_cores(&self) -> usize {
+        self.sockets * self.cores_per_socket
+    }
+
+    /// Total logical cores (hyperthreads).
+    pub fn logical_cores(&self) -> usize {
+        self.physical_cores() * self.smt
+    }
+
+    /// Peak GFLOP/s of the whole machine.
+    pub fn peak_gflops(&self) -> f64 {
+        self.peak_gflops_per_core * self.physical_cores() as f64
+    }
+
+    /// Socket that owns a given physical core index.
+    pub fn socket_of(&self, phys_core: usize) -> usize {
+        phys_core / self.cores_per_socket
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_table1() {
+        let s = CpuPlatform::small();
+        assert_eq!(s.physical_cores(), 4);
+        assert_eq!(s.logical_cores(), 8);
+        assert!((s.peak_gflops() - 423.0).abs() < 1e-9);
+
+        let l = CpuPlatform::large();
+        assert_eq!(l.physical_cores(), 24);
+        assert_eq!(l.logical_cores(), 48);
+        assert!((l.peak_gflops() - 1640.0).abs() < 1e-9);
+
+        let l2 = CpuPlatform::large2();
+        assert_eq!(l2.physical_cores(), 48);
+        assert_eq!(l2.logical_cores(), 96);
+        assert_eq!(l2.upi_gbps, 120.0);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ["small", "large", "large.2"] {
+            assert_eq!(CpuPlatform::by_name(n).unwrap().name, n);
+        }
+        assert!(CpuPlatform::by_name("gpu").is_none());
+    }
+
+    #[test]
+    fn socket_of_split() {
+        let l2 = CpuPlatform::large2();
+        assert_eq!(l2.socket_of(0), 0);
+        assert_eq!(l2.socket_of(23), 0);
+        assert_eq!(l2.socket_of(24), 1);
+        assert_eq!(l2.socket_of(47), 1);
+    }
+}

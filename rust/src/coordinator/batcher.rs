@@ -1,0 +1,226 @@
+//! Dynamic batcher: maps request-level parallelism onto the batch
+//! dimension (paper §2.2.3), bucketed to the AOT-compiled batch sizes.
+//!
+//! Policy: dispatch when the largest bucket fills, or when the oldest
+//! queued request has waited `max_wait` (latency bound). The chosen bucket
+//! is the smallest compiled batch ≥ the queue depth; short batches are
+//! zero-padded (tracked in metrics as `padded`).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::runtime::Manifest;
+
+use super::request::Request;
+
+/// Batching policy knobs.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Max time the oldest request may wait before a partial batch ships.
+    pub max_wait: Duration,
+    /// Cap on requests per batch (defaults to the largest compiled bucket).
+    pub max_batch: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_wait: Duration::from_millis(2), max_batch: usize::MAX }
+    }
+}
+
+/// A batch ready for a worker lane.
+pub struct PendingBatch {
+    /// Model family.
+    pub kind: String,
+    /// Compiled bucket (≥ requests.len()).
+    pub bucket: usize,
+    /// The member requests, in arrival order.
+    pub requests: Vec<Request>,
+}
+
+/// Per-model-family batching queue.
+pub struct DynamicBatcher {
+    kind: String,
+    queue: VecDeque<Request>,
+    policy: BatchPolicy,
+    buckets: Vec<usize>,
+}
+
+impl DynamicBatcher {
+    /// Create a batcher for one model family from the artifact manifest.
+    pub fn new(kind: &str, manifest: &Manifest, policy: BatchPolicy) -> Self {
+        let buckets = manifest.buckets(kind);
+        assert!(!buckets.is_empty(), "no compiled buckets for kind '{kind}'");
+        DynamicBatcher { kind: kind.to_string(), queue: VecDeque::new(), policy, buckets }
+    }
+
+    /// Largest compiled bucket.
+    pub fn max_bucket(&self) -> usize {
+        *self.buckets.last().unwrap()
+    }
+
+    /// Effective batch cap.
+    fn cap(&self) -> usize {
+        self.policy.max_batch.min(self.max_bucket())
+    }
+
+    /// Enqueue a request.
+    pub fn push(&mut self, req: Request) {
+        debug_assert_eq!(req.kind, self.kind);
+        self.queue.push_back(req);
+    }
+
+    /// Queue depth.
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// True when nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Smallest compiled bucket that fits `n` items.
+    pub fn bucket_for(&self, n: usize) -> usize {
+        self.buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or_else(|| self.max_bucket())
+    }
+
+    /// Should a batch be cut right now?
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.is_empty() {
+            return false;
+        }
+        if self.queue.len() >= self.cap() {
+            return true;
+        }
+        let oldest = self.queue.front().unwrap().enqueued;
+        now.duration_since(oldest) >= self.policy.max_wait
+    }
+
+    /// Cut the next batch (assumes `ready()`); requests keep arrival order.
+    pub fn cut(&mut self) -> PendingBatch {
+        let take = self.queue.len().min(self.cap());
+        let requests: Vec<Request> = self.queue.drain(..take).collect();
+        let bucket = self.bucket_for(requests.len());
+        PendingBatch { kind: self.kind.clone(), bucket, requests }
+    }
+
+    /// Time until the oldest request hits `max_wait` (None if empty) —
+    /// lets the serving loop sleep precisely instead of spinning.
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.queue.front().map(|r| {
+            let waited = now.duration_since(r.enqueued);
+            self.policy.max_wait.saturating_sub(waited)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Tensor;
+    use std::path::Path;
+    use std::sync::mpsc::channel;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(
+            Path::new("/tmp"),
+            r#"{"version":1,"artifacts":[
+              {"name":"mlp_b1","file":"f","kind":"mlp","batch":1,
+               "inputs":[{"shape":[1,4],"tag":0,"scale":1.0}],"output_shape":[1,2],
+               "expected":{"prefix":[],"sum":0,"abs_sum":0,"count":2}},
+              {"name":"mlp_b2","file":"f","kind":"mlp","batch":2,
+               "inputs":[{"shape":[2,4],"tag":0,"scale":1.0}],"output_shape":[2,2],
+               "expected":{"prefix":[],"sum":0,"abs_sum":0,"count":4}},
+              {"name":"mlp_b4","file":"f","kind":"mlp","batch":4,
+               "inputs":[{"shape":[4,4],"tag":0,"scale":1.0}],"output_shape":[4,2],
+               "expected":{"prefix":[],"sum":0,"abs_sum":0,"count":8}}
+            ]}"#,
+        )
+        .unwrap()
+    }
+
+    fn req(id: u64) -> Request {
+        let (tx, _rx) = channel();
+        Request {
+            id: super::super::request::RequestId(id),
+            kind: "mlp".into(),
+            input: Tensor { shape: vec![1, 4], data: vec![0.0; 4] },
+            enqueued: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn buckets_from_manifest() {
+        let b = DynamicBatcher::new("mlp", &manifest(), BatchPolicy::default());
+        assert_eq!(b.max_bucket(), 4);
+        assert_eq!(b.bucket_for(1), 1);
+        assert_eq!(b.bucket_for(3), 4);
+        assert_eq!(b.bucket_for(9), 4);
+    }
+
+    #[test]
+    fn full_bucket_is_ready_immediately() {
+        let mut b = DynamicBatcher::new("mlp", &manifest(), BatchPolicy::default());
+        for i in 0..4 {
+            b.push(req(i));
+        }
+        assert!(b.ready(Instant::now()));
+        let batch = b.cut();
+        assert_eq!(batch.requests.len(), 4);
+        assert_eq!(batch.bucket, 4);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn partial_batch_waits_for_deadline() {
+        let policy = BatchPolicy { max_wait: Duration::from_millis(50), max_batch: usize::MAX };
+        let mut b = DynamicBatcher::new("mlp", &manifest(), policy);
+        b.push(req(0));
+        let now = Instant::now();
+        assert!(!b.ready(now));
+        assert!(b.ready(now + Duration::from_millis(51)));
+        let batch = b.cut();
+        assert_eq!(batch.requests.len(), 1);
+        assert_eq!(batch.bucket, 1);
+    }
+
+    #[test]
+    fn arrival_order_preserved() {
+        let mut b = DynamicBatcher::new("mlp", &manifest(), BatchPolicy::default());
+        for i in 0..3 {
+            b.push(req(i));
+        }
+        b.push(req(3));
+        let batch = b.cut();
+        let ids: Vec<u64> = batch.requests.iter().map(|r| r.id.0).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn max_batch_caps_cut() {
+        let policy = BatchPolicy { max_wait: Duration::ZERO, max_batch: 2 };
+        let mut b = DynamicBatcher::new("mlp", &manifest(), policy);
+        for i in 0..5 {
+            b.push(req(i));
+        }
+        let batch = b.cut();
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    fn deadline_shrinks() {
+        let policy = BatchPolicy { max_wait: Duration::from_millis(10), max_batch: usize::MAX };
+        let mut b = DynamicBatcher::new("mlp", &manifest(), policy);
+        assert!(b.next_deadline(Instant::now()).is_none());
+        b.push(req(0));
+        let d = b.next_deadline(Instant::now()).unwrap();
+        assert!(d <= Duration::from_millis(10));
+    }
+}

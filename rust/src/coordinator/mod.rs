@@ -1,0 +1,25 @@
+//! Serving coordinator: the deployment layer that exploits the paper's
+//! §2.2.3 *parallelism among requests* — independent inference requests are
+//! batched onto the batch dimension and executed on AOT-compiled artifacts
+//! via PJRT, with framework knobs chosen by the [`crate::tuner`].
+//!
+//! Dataflow:
+//!
+//! ```text
+//! submit() ─▶ Router (validate, per-model queue)
+//!                  └─▶ DynamicBatcher (bucketed batching, max-wait)
+//!                           └─▶ Worker lanes (one ModelRuntime each; the
+//!                               PJRT client is !Sync, so each lane owns
+//!                               its runtime and drains a channel)
+//! ```
+
+pub mod batcher;
+pub mod request;
+pub mod router;
+pub mod server;
+pub mod worker;
+
+pub use batcher::{BatchPolicy, DynamicBatcher, PendingBatch};
+pub use request::{Request, RequestId, Response};
+pub use router::Router;
+pub use server::{Coordinator, CoordinatorConfig};

@@ -1,0 +1,67 @@
+//! Request/response types for the serving path.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+use crate::runtime::Tensor;
+
+/// Monotonically-assigned request identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RequestId(pub u64);
+
+/// One inference request: a single item (one MLP feature row, one
+/// transformer sequence) for a model family.
+pub struct Request {
+    /// Assigned id.
+    pub id: RequestId,
+    /// Model family ("mlp", "transformer").
+    pub kind: String,
+    /// Input tensor for ONE item; first dimension is the per-item row
+    /// count (1 for mlp, `seq` for transformer).
+    pub input: Tensor,
+    /// Submission time (for queue-latency accounting).
+    pub enqueued: Instant,
+    /// Where to deliver the response.
+    pub reply: Sender<Response>,
+}
+
+/// Completed inference.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// Request this answers.
+    pub id: RequestId,
+    /// Output rows for this item only (padding stripped).
+    pub output: Result<Tensor, String>,
+    /// Seconds spent queued before dispatch.
+    pub queue_s: f64,
+    /// Seconds of model execution for the carrying batch.
+    pub execute_s: f64,
+    /// Batch bucket the request rode in.
+    pub bucket: usize,
+}
+
+impl Response {
+    /// True when inference succeeded.
+    pub fn is_ok(&self) -> bool {
+        self.output.is_ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn response_ok_flag() {
+        let ok = Response {
+            id: RequestId(1),
+            output: Ok(Tensor { shape: vec![1], data: vec![0.0] }),
+            queue_s: 0.0,
+            execute_s: 0.0,
+            bucket: 1,
+        };
+        assert!(ok.is_ok());
+        let err = Response { output: Err("boom".into()), ..ok };
+        assert!(!err.is_ok());
+    }
+}

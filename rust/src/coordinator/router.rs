@@ -1,0 +1,143 @@
+//! Request router: validates incoming requests against the artifact
+//! manifest and routes them to the right per-model batching queue.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Manifest;
+
+use super::request::Request;
+
+/// Per-item input shape for a model family (first dim = rows per item).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ItemShape {
+    /// Rows one item contributes to the batch dimension.
+    pub rows_per_item: usize,
+    /// Trailing feature dimensions.
+    pub feature_dims: Vec<usize>,
+}
+
+/// Routes requests by model kind.
+pub struct Router {
+    shapes: HashMap<String, ItemShape>,
+}
+
+impl Router {
+    /// Derive routing tables from the manifest: the bucket-1 artifact of
+    /// each family defines the per-item shape.
+    pub fn new(manifest: &Manifest, kinds: &[&str]) -> Result<Self> {
+        let mut shapes = HashMap::new();
+        for kind in kinds {
+            let entry = manifest
+                .artifact_for(kind, 1)
+                .or_else(|| {
+                    let b = manifest.buckets(kind).first().copied()?;
+                    manifest.artifact_for(kind, b)
+                })
+                .ok_or_else(|| anyhow::anyhow!("no artifacts for kind '{kind}'"))?;
+            let batch = entry.batch.max(1);
+            let full = &entry.inputs[0].shape;
+            if full.is_empty() || full[0] % batch != 0 {
+                bail!("kind '{kind}': first dim {:?} not divisible by batch {batch}", full);
+            }
+            shapes.insert(
+                kind.to_string(),
+                ItemShape { rows_per_item: full[0] / batch, feature_dims: full[1..].to_vec() },
+            );
+        }
+        Ok(Router { shapes })
+    }
+
+    /// Families this router serves.
+    pub fn kinds(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.shapes.keys().map(String::as_str).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Shape contract for a family.
+    pub fn item_shape(&self, kind: &str) -> Option<&ItemShape> {
+        self.shapes.get(kind)
+    }
+
+    /// Validate a request; returns the queue key (the kind) on success.
+    pub fn route(&self, req: &Request) -> Result<String> {
+        let Some(shape) = self.shapes.get(&req.kind) else {
+            bail!("unknown model kind '{}'", req.kind);
+        };
+        let want: Vec<usize> =
+            std::iter::once(shape.rows_per_item).chain(shape.feature_dims.iter().copied()).collect();
+        if req.input.shape != want {
+            bail!(
+                "kind '{}': input shape {:?} != expected {:?}",
+                req.kind,
+                req.input.shape,
+                want
+            );
+        }
+        let n: usize = want.iter().product();
+        if req.input.data.len() != n {
+            bail!("kind '{}': data length {} != {}", req.kind, req.input.data.len(), n);
+        }
+        Ok(req.kind.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::RequestId;
+    use crate::runtime::Tensor;
+    use std::path::Path;
+    use std::sync::mpsc::channel;
+    use std::time::Instant;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(
+            Path::new("/tmp"),
+            r#"{"version":1,"artifacts":[
+              {"name":"mlp_b1","file":"f","kind":"mlp","batch":1,
+               "inputs":[{"shape":[1,8],"tag":0,"scale":1.0}],"output_shape":[1,2],
+               "expected":{"prefix":[],"sum":0,"abs_sum":0,"count":2}},
+              {"name":"transformer_b2","file":"f","kind":"transformer","batch":2,
+               "inputs":[{"shape":[64,16],"tag":0,"scale":1.0}],"output_shape":[64,16],
+               "expected":{"prefix":[],"sum":0,"abs_sum":0,"count":1024}}
+            ]}"#,
+        )
+        .unwrap()
+    }
+
+    fn req(kind: &str, shape: Vec<usize>) -> Request {
+        let n: usize = shape.iter().product();
+        let (tx, _rx) = channel();
+        Request {
+            id: RequestId(0),
+            kind: kind.into(),
+            input: Tensor { shape, data: vec![0.0; n] },
+            enqueued: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn derives_item_shapes() {
+        let r = Router::new(&manifest(), &["mlp", "transformer"]).unwrap();
+        assert_eq!(r.item_shape("mlp").unwrap().rows_per_item, 1);
+        // transformer bucket-2 artifact has 64 rows ⇒ 32 rows per sequence
+        assert_eq!(r.item_shape("transformer").unwrap().rows_per_item, 32);
+    }
+
+    #[test]
+    fn routes_valid_rejects_invalid() {
+        let r = Router::new(&manifest(), &["mlp"]).unwrap();
+        assert_eq!(r.route(&req("mlp", vec![1, 8])).unwrap(), "mlp");
+        assert!(r.route(&req("mlp", vec![2, 8])).is_err());
+        assert!(r.route(&req("bert", vec![1, 8])).is_err());
+    }
+
+    #[test]
+    fn unknown_kind_at_construction() {
+        assert!(Router::new(&manifest(), &["resnet"]).is_err());
+    }
+}

@@ -1,0 +1,205 @@
+//! The coordinator: ties router + batchers + worker lanes together behind
+//! a submit/await API, with the lane count chosen by the paper's tuning
+//! guideline (inter-op pools → independent execution lanes).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::metrics::ServingMetrics;
+use crate::runtime::{Manifest, Tensor};
+
+use super::batcher::{BatchPolicy, DynamicBatcher};
+use super::request::{Request, RequestId, Response};
+use super::router::Router;
+use super::worker::WorkerLane;
+
+/// Coordinator construction options.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Where `manifest.json` + HLO artifacts live.
+    pub artifacts_dir: PathBuf,
+    /// Model families to serve.
+    pub kinds: Vec<String>,
+    /// Worker lanes (each compiles its own runtime). Defaults to 1; the
+    /// `serve` CLI sets it from the tuner's inter-op pool count.
+    pub lanes: usize,
+    /// Batching policy.
+    pub policy: BatchPolicy,
+}
+
+impl CoordinatorConfig {
+    /// Config serving one family with defaults.
+    pub fn for_kind(artifacts_dir: impl Into<PathBuf>, kind: &str) -> Self {
+        CoordinatorConfig {
+            artifacts_dir: artifacts_dir.into(),
+            kinds: vec![kind.to_string()],
+            lanes: 1,
+            policy: BatchPolicy::default(),
+        }
+    }
+}
+
+/// Running serving system.
+pub struct Coordinator {
+    inbox: Sender<Request>,
+    metrics: Arc<ServingMetrics>,
+    router: Arc<Router>,
+    next_id: AtomicU64,
+    shutdown: Arc<AtomicBool>,
+    loop_handle: Option<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start lanes + the batching loop. Blocks until all lanes compiled.
+    pub fn start(cfg: CoordinatorConfig) -> Result<Self> {
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let kinds: Vec<&str> = cfg.kinds.iter().map(String::as_str).collect();
+        let router = Arc::new(Router::new(&manifest, &kinds)?);
+        let metrics = Arc::new(ServingMetrics::new());
+
+        let lanes: Vec<WorkerLane> = (0..cfg.lanes.max(1))
+            .map(|i| {
+                WorkerLane::spawn(
+                    i,
+                    cfg.artifacts_dir.clone(),
+                    cfg.kinds.clone(),
+                    Arc::clone(&metrics),
+                )
+            })
+            .collect::<Result<_>>()?;
+
+        let mut batchers: HashMap<String, DynamicBatcher> = cfg
+            .kinds
+            .iter()
+            .map(|k| (k.clone(), DynamicBatcher::new(k, &manifest, cfg.policy.clone())))
+            .collect();
+
+        let (inbox, rx) = channel::<Request>();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let stop = Arc::clone(&shutdown);
+        let loop_handle = std::thread::Builder::new()
+            .name("coordinator-loop".into())
+            .spawn(move || batching_loop(rx, &mut batchers, &lanes, &stop))?;
+
+        Ok(Coordinator {
+            inbox,
+            metrics,
+            router,
+            next_id: AtomicU64::new(0),
+            shutdown,
+            loop_handle: Some(loop_handle),
+        })
+    }
+
+    /// Submit one item; returns the receiver for its response.
+    pub fn submit(&self, kind: &str, input: Tensor) -> Result<Receiver<Response>> {
+        let (tx, rx) = channel();
+        let req = Request {
+            id: RequestId(self.next_id.fetch_add(1, Ordering::Relaxed)),
+            kind: kind.to_string(),
+            input,
+            enqueued: Instant::now(),
+            reply: tx,
+        };
+        self.router.route(&req)?;
+        self.inbox
+            .send(req)
+            .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
+        Ok(rx)
+    }
+
+    /// Submit and block for the response.
+    pub fn infer(&self, kind: &str, input: Tensor) -> Result<Response> {
+        let rx = self.submit(kind, input)?;
+        Ok(rx.recv()?)
+    }
+
+    /// Serving metrics.
+    pub fn metrics(&self) -> &ServingMetrics {
+        &self.metrics
+    }
+
+    /// Router (shape contracts).
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Release);
+        if let Some(h) = self.loop_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The serving loop: drain the inbox into per-kind batchers, cut batches
+/// when full or timed out, round-robin them over lanes.
+fn batching_loop(
+    rx: Receiver<Request>,
+    batchers: &mut HashMap<String, DynamicBatcher>,
+    lanes: &[WorkerLane],
+    shutdown: &AtomicBool,
+) {
+    let mut next_lane = 0usize;
+    loop {
+        // sleep until the nearest deadline (or a short poll when idle)
+        let now = Instant::now();
+        let wait = batchers
+            .values()
+            .filter_map(|b| b.next_deadline(now))
+            .min()
+            .unwrap_or(Duration::from_millis(1));
+        match rx.recv_timeout(wait) {
+            Ok(req) => {
+                if let Some(b) = batchers.get_mut(&req.kind) {
+                    b.push(req);
+                }
+                // drain whatever else arrived
+                while let Ok(req) = rx.try_recv() {
+                    if let Some(b) = batchers.get_mut(&req.kind) {
+                        b.push(req);
+                    }
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                // flush remaining queues, then exit
+                for b in batchers.values_mut() {
+                    while !b.is_empty() {
+                        lanes[next_lane % lanes.len()].submit(b.cut());
+                        next_lane += 1;
+                    }
+                }
+                return;
+            }
+        }
+        let now = Instant::now();
+        for b in batchers.values_mut() {
+            while b.ready(now) {
+                lanes[next_lane % lanes.len()].submit(b.cut());
+                next_lane += 1;
+            }
+        }
+        if shutdown.load(Ordering::Acquire) {
+            for b in batchers.values_mut() {
+                while !b.is_empty() {
+                    lanes[next_lane % lanes.len()].submit(b.cut());
+                    next_lane += 1;
+                }
+            }
+            return;
+        }
+    }
+}
+
+/// A `Mutex`-free alias kept for API clarity in examples.
+pub type SharedCoordinator = Arc<Mutex<Coordinator>>;

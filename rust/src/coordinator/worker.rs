@@ -1,0 +1,153 @@
+//! Worker lane: one thread owning a `ModelRuntime` (the PJRT client is not
+//! `Sync`), draining batches from a channel, executing, and scattering
+//! per-request responses.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::metrics::ServingMetrics;
+use crate::runtime::{ModelRuntime, Tensor};
+
+use super::batcher::PendingBatch;
+use super::request::Response;
+
+/// Handle to a running worker lane.
+pub struct WorkerLane {
+    tx: Sender<LaneMsg>,
+    handle: Option<JoinHandle<()>>,
+}
+
+enum LaneMsg {
+    Batch(PendingBatch),
+    Shutdown,
+}
+
+impl WorkerLane {
+    /// Spawn a lane that loads the artifacts for `kinds` from
+    /// `artifacts_dir`. Returns once the runtime has compiled (so startup
+    /// failures surface synchronously).
+    pub fn spawn(
+        lane_id: usize,
+        artifacts_dir: PathBuf,
+        kinds: Vec<String>,
+        metrics: Arc<ServingMetrics>,
+    ) -> Result<Self> {
+        let (tx, rx) = channel::<LaneMsg>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name(format!("worker-lane-{lane_id}"))
+            .spawn(move || {
+                let rt = match ModelRuntime::load_some(&artifacts_dir, |e| {
+                    kinds.iter().any(|k| *k == e.kind)
+                }) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                lane_loop(rt, rx, metrics);
+            })?;
+        ready_rx.recv()??;
+        Ok(WorkerLane { tx, handle: Some(handle) })
+    }
+
+    /// Queue a batch for execution.
+    pub fn submit(&self, batch: PendingBatch) {
+        let _ = self.tx.send(LaneMsg::Batch(batch));
+    }
+}
+
+impl Drop for WorkerLane {
+    fn drop(&mut self) {
+        let _ = self.tx.send(LaneMsg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn lane_loop(rt: ModelRuntime, rx: Receiver<LaneMsg>, metrics: Arc<ServingMetrics>) {
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            LaneMsg::Shutdown => return,
+            LaneMsg::Batch(batch) => execute_batch(&rt, batch, &metrics),
+        }
+    }
+}
+
+/// Execute one batch: gather rows → run bucketed executable → scatter.
+pub fn execute_batch(rt: &ModelRuntime, batch: PendingBatch, metrics: &ServingMetrics) {
+    let name = format!("{}_b{}", batch.kind, batch.bucket);
+    let dispatch_time = Instant::now();
+    let n = batch.requests.len();
+
+    // gather: rows of each item, zero-padding up to the bucket
+    let rows_per_item = batch.requests[0].input.shape[0];
+    let feat: usize = batch.requests[0].input.shape[1..].iter().product();
+    let mut data = Vec::with_capacity(batch.bucket * rows_per_item * feat);
+    for r in &batch.requests {
+        data.extend_from_slice(&r.input.data);
+    }
+    data.resize(batch.bucket * rows_per_item * feat, 0.0);
+    let mut shape = batch.requests[0].input.shape.clone();
+    shape[0] = batch.bucket * rows_per_item;
+    let x = Tensor { shape, data };
+
+    let result = rt.execute_x(&name, x);
+    let execute_s = dispatch_time.elapsed().as_secs_f64();
+    metrics.batches.inc();
+    metrics.execute_latency.record(execute_s);
+    if batch.bucket > n {
+        metrics.padded.add((batch.bucket - n) as u64);
+    }
+
+    // scatter: slice each item's rows back out
+    match result {
+        Ok(out) => {
+            let out_rows: usize = out.shape[0];
+            let out_feat: usize = out.shape[1..].iter().product();
+            let rows_per_out_item = out_rows / batch.bucket;
+            for (i, req) in batch.requests.into_iter().enumerate() {
+                let lo = i * rows_per_out_item * out_feat;
+                let hi = lo + rows_per_out_item * out_feat;
+                let mut item_shape = out.shape.clone();
+                item_shape[0] = rows_per_out_item;
+                let queue_s = dispatch_time.duration_since(req.enqueued).as_secs_f64();
+                metrics.requests.inc();
+                metrics.queue_latency.record(queue_s);
+                metrics
+                    .request_latency
+                    .record(req.enqueued.elapsed().as_secs_f64());
+                let _ = req.reply.send(Response {
+                    id: req.id,
+                    output: Ok(Tensor { shape: item_shape, data: out.data[lo..hi].to_vec() }),
+                    queue_s,
+                    execute_s,
+                    bucket: batch.bucket,
+                });
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for req in batch.requests {
+                metrics.requests.inc();
+                let _ = req.reply.send(Response {
+                    id: req.id,
+                    output: Err(msg.clone()),
+                    queue_s: 0.0,
+                    execute_s,
+                    bucket: batch.bucket,
+                });
+            }
+        }
+    }
+}

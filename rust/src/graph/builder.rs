@@ -1,0 +1,91 @@
+//! Fluent graph construction used by the model zoo.
+
+use crate::ops::{OpCost, OpKind};
+
+use super::{Graph, Node, NodeId};
+
+/// Builder that enforces topological insertion order.
+pub struct GraphBuilder {
+    name: String,
+    batch: usize,
+    nodes: Vec<Node>,
+}
+
+impl GraphBuilder {
+    /// Start a graph for `name` at `batch`.
+    pub fn new(name: &str, batch: usize) -> Self {
+        GraphBuilder { name: name.to_string(), batch, nodes: Vec::new() }
+    }
+
+    /// Append an operator; `deps` must already exist.
+    pub fn add(&mut self, name: &str, kind: OpKind, deps: &[NodeId]) -> NodeId {
+        let id = NodeId(self.nodes.len());
+        for d in deps {
+            assert!(d.0 < id.0, "dep {} of '{}' not yet inserted", d.0, name);
+        }
+        let cost = OpCost::of(&kind);
+        self.nodes.push(Node {
+            id,
+            name: name.to_string(),
+            kind,
+            cost,
+            deps: deps.to_vec(),
+        });
+        id
+    }
+
+    /// Append a chain of `n` identical ops, each depending on the previous
+    /// (first depends on `deps`). Returns the last id.
+    pub fn chain(&mut self, base: &str, kind: OpKind, deps: &[NodeId], n: usize) -> NodeId {
+        assert!(n > 0);
+        let mut prev: Vec<NodeId> = deps.to_vec();
+        let mut last = NodeId(0);
+        for i in 0..n {
+            last = self.add(&format!("{base}/{i}"), kind.clone(), &prev);
+            prev = vec![last];
+        }
+        last
+    }
+
+    /// Number of nodes inserted so far.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// True if nothing inserted yet.
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Finish; panics on invariant violations (programmer error in a model
+    /// definition, not a runtime condition).
+    pub fn build(self) -> Graph {
+        let g = Graph { name: self.name, batch: self.batch, nodes: self.nodes };
+        g.validate().expect("builder produced invalid graph");
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_links_sequentially() {
+        let mut b = GraphBuilder::new("t", 1);
+        let root = b.add("root", OpKind::Pool { elems: 10 }, &[]);
+        let last = b.chain("c", OpKind::Pool { elems: 10 }, &[root], 3);
+        let g = b.build();
+        assert_eq!(g.len(), 4);
+        assert_eq!(last, NodeId(3));
+        assert_eq!(g.nodes[3].deps, vec![NodeId(2)]);
+        assert_eq!(g.nodes[1].deps, vec![NodeId(0)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not yet inserted")]
+    fn rejects_forward_dep() {
+        let mut b = GraphBuilder::new("t", 1);
+        b.add("a", OpKind::Pool { elems: 1 }, &[NodeId(5)]);
+    }
+}

@@ -1,0 +1,152 @@
+//! Computational-graph IR.
+//!
+//! A model is a DAG of operator nodes (paper §2.2: "a node represents an
+//! operator, and an edge indicates the dataflow dependencies"). The graph
+//! exposes the two structural quantities the paper's analysis is built on:
+//!
+//! * **maximum width** — the largest number of heavy operators that can run
+//!   simultaneously (Fig. 4's table),
+//! * **average width** — `floor(heavy_ops / heavy_levels)`, the §8 quantity
+//!   the tuner sets `inter_op_pools` to (Table 2).
+
+pub mod builder;
+pub mod width;
+
+pub use builder::GraphBuilder;
+pub use width::{WidthAnalysis, analyze_width};
+
+use crate::ops::{OpCost, OpKind};
+
+/// Node identifier (index into [`Graph::nodes`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub usize);
+
+/// One operator in the graph.
+#[derive(Debug, Clone)]
+pub struct Node {
+    /// Stable id == index in `Graph::nodes`.
+    pub id: NodeId,
+    /// Human-readable name ("conv2/3x3", "inception4a/b2/conv1x1", ...).
+    pub name: String,
+    /// Operator kind + shape.
+    pub kind: OpKind,
+    /// Derived cost descriptor.
+    pub cost: OpCost,
+    /// Dataflow dependencies (must finish before this node starts).
+    pub deps: Vec<NodeId>,
+}
+
+impl Node {
+    /// Heavy-operator classification (paper §8).
+    pub fn is_heavy(&self) -> bool {
+        OpCost::is_heavy(&self.kind)
+    }
+}
+
+/// A computational graph for one model at one batch size.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    /// Model name ("inception_v2", ...).
+    pub name: String,
+    /// Batch size this instance was built for.
+    pub batch: usize,
+    /// Nodes in insertion order; edges point backwards (deps have smaller
+    /// indices), so insertion order is already topological.
+    pub nodes: Vec<Node>,
+}
+
+impl Graph {
+    /// Number of operators.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// True when the graph has no operators.
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Iterate nodes in topological (insertion) order.
+    pub fn topo(&self) -> impl Iterator<Item = &Node> {
+        self.nodes.iter()
+    }
+
+    /// Heavy operators only.
+    pub fn heavy_nodes(&self) -> impl Iterator<Item = &Node> {
+        self.nodes.iter().filter(|n| n.is_heavy())
+    }
+
+    /// Total FLOPs of one forward pass.
+    pub fn total_flops(&self) -> f64 {
+        self.nodes.iter().map(|n| n.cost.flops).sum()
+    }
+
+    /// Total bytes moved.
+    pub fn total_bytes(&self) -> f64 {
+        self.nodes.iter().map(|n| n.cost.total_bytes()).sum()
+    }
+
+    /// Consumers of each node (forward adjacency), built on demand.
+    pub fn consumers(&self) -> Vec<Vec<NodeId>> {
+        let mut out = vec![Vec::new(); self.nodes.len()];
+        for n in &self.nodes {
+            for d in &n.deps {
+                out[d.0].push(n.id);
+            }
+        }
+        out
+    }
+
+    /// Validate the DAG invariants (deps precede nodes, no dangling ids).
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.id.0 != i {
+                return Err(format!("node {} id mismatch", i));
+            }
+            for d in &n.deps {
+                if d.0 >= i {
+                    return Err(format!(
+                        "node '{}' depends on later/self node {}",
+                        n.name, d.0
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::OpKind;
+
+    fn diamond() -> Graph {
+        let mut b = GraphBuilder::new("diamond", 1);
+        let a = b.add("a", OpKind::MatMul { m: 512, k: 512, n: 512 }, &[]);
+        let l = b.add("l", OpKind::MatMul { m: 512, k: 512, n: 512 }, &[a]);
+        let r = b.add("r", OpKind::MatMul { m: 512, k: 512, n: 512 }, &[a]);
+        b.add("join", OpKind::MatMul { m: 512, k: 512, n: 512 }, &[l, r]);
+        b.build()
+    }
+
+    #[test]
+    fn validates_topological_order() {
+        assert!(diamond().validate().is_ok());
+    }
+
+    #[test]
+    fn consumers_inverse_of_deps() {
+        let g = diamond();
+        let cons = g.consumers();
+        assert_eq!(cons[0], vec![NodeId(1), NodeId(2)]);
+        assert_eq!(cons[3], Vec::<NodeId>::new());
+    }
+
+    #[test]
+    fn totals_accumulate() {
+        let g = diamond();
+        assert_eq!(g.total_flops(), 4.0 * 2.0 * 512f64.powi(3));
+        assert!(g.total_bytes() > 0.0);
+    }
+}

@@ -1,0 +1,155 @@
+//! Graph-width analysis — the structural quantity behind the paper's
+//! tuning guideline (§8).
+//!
+//! Heavy operators are layered by longest path *through heavy operators*:
+//! `level(n) = 1 + max(level of heavy ancestors reachable through n's deps)`.
+//! Light operators are transparent — they forward their heavy-ancestor level
+//! without occupying a layer, mirroring how the paper counts only "heavy"
+//! operators when measuring model width.
+//!
+//! * `max_width`  = max heavy ops on one level (Fig. 4's "maximum graph
+//!   width": the most operators schedulable in parallel).
+//! * `avg_width`  = `floor(total heavy ops / number of heavy levels)`,
+//!   clamped to ≥ 1 (Table 2; e.g. Fig. 5b: `⌊7/3⌋ = 2`).
+
+use super::Graph;
+
+/// Result of the width analysis.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WidthAnalysis {
+    /// Heavy operators counted.
+    pub heavy_ops: usize,
+    /// Number of heavy levels (longest heavy chain length).
+    pub levels: usize,
+    /// Maximum number of heavy ops on one level.
+    pub max_width: usize,
+    /// `floor(heavy_ops / levels).max(1)` — the §8 average width.
+    pub avg_width: usize,
+    /// Heavy ops per level (index 0 = level 1).
+    pub per_level: Vec<usize>,
+}
+
+/// Run the analysis on a graph.
+pub fn analyze_width(g: &Graph) -> WidthAnalysis {
+    // heavy_level[i]: level of node i if heavy; otherwise the max heavy
+    // level among its ancestors (so light nodes are transparent).
+    let mut carried = vec![0usize; g.len()];
+    let mut per_level: Vec<usize> = Vec::new();
+    let mut heavy_ops = 0usize;
+
+    for n in g.topo() {
+        let anc = n.deps.iter().map(|d| carried[d.0]).max().unwrap_or(0);
+        if n.is_heavy() {
+            let level = anc + 1;
+            carried[n.id.0] = level;
+            heavy_ops += 1;
+            if per_level.len() < level {
+                per_level.resize(level, 0);
+            }
+            per_level[level - 1] += 1;
+        } else {
+            carried[n.id.0] = anc;
+        }
+    }
+
+    let levels = per_level.len();
+    let max_width = per_level.iter().copied().max().unwrap_or(0);
+    let avg_width = if levels == 0 { 1 } else { (heavy_ops / levels).max(1) };
+    WidthAnalysis { heavy_ops, levels, max_width, avg_width, per_level }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::ops::OpKind;
+
+    fn heavy() -> OpKind {
+        OpKind::MatMul { m: 512, k: 512, n: 512 } // 268 MFLOPs > threshold
+    }
+
+    fn light() -> OpKind {
+        OpKind::Elementwise { elems: 100, name: "ReLU" }
+    }
+
+    #[test]
+    fn figure5b_example() {
+        // The paper's worked example: 7 heavy convs over 3 layers → ⌊7/3⌋=2.
+        // Four branches: [1], [1,1], [1,1,1], [1] laid out over 3 levels.
+        let mut b = GraphBuilder::new("fig5b", 1);
+        let src = b.add("in", light(), &[]);
+        let b1 = b.add("b1", heavy(), &[src]);
+        let b2a = b.add("b2a", heavy(), &[src]);
+        let b2b = b.add("b2b", heavy(), &[b2a]);
+        let b3a = b.add("b3a", heavy(), &[src]);
+        let b3b = b.add("b3b", heavy(), &[b3a]);
+        let b3c = b.add("b3c", heavy(), &[b3b]);
+        let b4 = b.add("b4", heavy(), &[src]);
+        b.add("concat", light(), &[b1, b2b, b3c, b4]);
+        let w = analyze_width(&b.build());
+        assert_eq!(w.heavy_ops, 7);
+        assert_eq!(w.levels, 3);
+        assert_eq!(w.max_width, 4);
+        assert_eq!(w.avg_width, 2);
+    }
+
+    #[test]
+    fn chain_has_width_one() {
+        let mut b = GraphBuilder::new("chain", 1);
+        let a = b.add("a", heavy(), &[]);
+        let c = b.chain("c", heavy(), &[a], 5);
+        b.add("out", light(), &[c]);
+        let w = analyze_width(&b.build());
+        assert_eq!((w.max_width, w.avg_width, w.levels), (1, 1, 6));
+    }
+
+    #[test]
+    fn light_nodes_transparent() {
+        // heavy -> light -> heavy still counts two levels
+        let mut b = GraphBuilder::new("t", 1);
+        let a = b.add("a", heavy(), &[]);
+        let l = b.add("l", light(), &[a]);
+        b.add("b", heavy(), &[l]);
+        let w = analyze_width(&b.build());
+        assert_eq!(w.levels, 2);
+        assert_eq!(w.per_level, vec![1, 1]);
+    }
+
+    #[test]
+    fn parallel_embeddings_ncf_shape() {
+        // 4 embeddings + light MLP → avg width 4 (paper Table 2, NCF)
+        let mut b = GraphBuilder::new("ncf-ish", 256);
+        let ids = b.add("ids", light(), &[]);
+        let embs: Vec<_> = (0..4)
+            .map(|i| {
+                b.add(
+                    &format!("emb{i}"),
+                    OpKind::Embedding { vocab: 100_000, dim: 64, rows: 256 },
+                    &[ids],
+                )
+            })
+            .collect();
+        b.add("concat", light(), &embs);
+        let w = analyze_width(&b.build());
+        assert_eq!((w.levels, w.heavy_ops, w.avg_width, w.max_width), (1, 4, 4, 4));
+    }
+
+    #[test]
+    fn empty_graph_defaults() {
+        let b = GraphBuilder::new("empty", 1);
+        let w = analyze_width(&b.build());
+        assert_eq!((w.heavy_ops, w.levels, w.max_width, w.avg_width), (0, 0, 0, 1));
+    }
+
+    #[test]
+    fn avg_width_floors() {
+        // 3 heavy over 2 levels → floor(1.5) = 1
+        let mut b = GraphBuilder::new("t", 1);
+        let a = b.add("a", heavy(), &[]);
+        let c = b.add("bb", heavy(), &[]);
+        b.add("c", heavy(), &[a, c]);
+        let w = analyze_width(&b.build());
+        assert_eq!(w.avg_width, 1);
+        assert_eq!(w.max_width, 2);
+    }
+}

@@ -1,0 +1,38 @@
+//! # parframe
+//!
+//! A parallelism-aware deep-learning framework runtime and auto-tuner — a
+//! production-shaped reproduction of *"Exploiting Parallelism Opportunities
+//! with Deep Learning Frameworks"* (Wang et al., 2019).
+//!
+//! The crate is organised in three layers (see `DESIGN.md`):
+//!
+//! * **Framework core** — [`graph`] (computational-graph IR + width
+//!   analysis), [`ops`] (operator cost descriptors), [`models`] (the paper's
+//!   model zoo), [`sched`] (sync/async operator scheduling over inter-op
+//!   pools), [`libs`] (math-library models + three real thread pools).
+//! * **Platform substrate** — [`sim`], a discrete-event simulator of the
+//!   paper's Skylake testbeds (cores, SMT/FMA contention, LLC, memory and
+//!   UPI bandwidth) that produces the same per-core time breakdowns the
+//!   authors measured with `perf`.
+//! * **Deployment** — [`runtime`] (PJRT client running AOT-compiled JAX/
+//!   Pallas artifacts), [`coordinator`] (request router + dynamic batcher),
+//!   and [`tuner`] (the paper's §8 guidelines + Intel/TensorFlow baselines +
+//!   exhaustive search).
+//!
+//! [`bench_tables`] regenerates every figure and table of the paper's
+//! evaluation.
+
+pub mod bench_tables;
+pub mod config;
+pub mod coordinator;
+pub mod graph;
+pub mod libs;
+pub mod metrics;
+pub mod models;
+pub mod ops;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod trace;
+pub mod tuner;
+pub mod util;

@@ -1,0 +1,272 @@
+//! Analytic models of the math-library GEMM kernels (paper §6.1, Fig. 13).
+//!
+//! The paper's top-down analysis found, for single-threaded GEMM:
+//!
+//! * **MKL** — highest retiring ratio and IPC; LLC MPKI stays low even for
+//!   out-of-cache matrices because its software prefetching is *effective*
+//!   (nearly all memory traffic is prefetch, not demand misses).
+//! * **MKL-DNN** — close second on FLOPs; ~25% back-end-bound beyond 4k,
+//!   MPKI an order of magnitude above MKL.
+//! * **Eigen** — lowest efficiency and IPC; prefetching least aggressive.
+//!
+//! These curves are calibrated to reproduce Fig. 13's *relations* (who wins
+//! and by roughly how much), not the authors' absolute counter values; the
+//! simulator consumes [`MathModel::gemm_efficiency`] and
+//! [`MathModel::parallel_efficiency`] to turn op FLOPs into time.
+
+use crate::config::{CpuPlatform, MathLib};
+
+/// Top-down cycle breakdown (fractions sum to 1.0) + IPC.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TopDown {
+    /// Useful work retired.
+    pub retiring: f64,
+    /// Front-end (fetch/decode) stalls.
+    pub frontend: f64,
+    /// Bad speculation.
+    pub bad_speculation: f64,
+    /// Back-end core-bound (port contention).
+    pub backend_core: f64,
+    /// Back-end memory-bound (cache/DRAM stalls).
+    pub backend_memory: f64,
+    /// Instructions per cycle.
+    pub ipc: f64,
+}
+
+/// Memory-traffic split for one GEMM (GB moved).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemTraffic {
+    /// Bytes brought in by software/hardware prefetch (hidden latency).
+    pub prefetch_gb: f64,
+    /// Bytes brought in by demand LLC misses (exposed latency).
+    pub demand_gb: f64,
+}
+
+/// Per-library analytic model.
+#[derive(Debug, Clone, Copy)]
+pub struct MathModel {
+    /// Which library this models.
+    pub lib: MathLib,
+}
+
+impl MathModel {
+    /// Model for a library.
+    pub fn new(lib: MathLib) -> Self {
+        MathModel { lib }
+    }
+
+    /// Peak-fraction a single-threaded square-`n` GEMM achieves.
+    ///
+    /// Shape: rises with `n` (amortising loop prologue + packing), saturates
+    /// at a per-library ceiling. Small kernels (the SqueezeNet 1×1 regime)
+    /// sit well under half of peak.
+    pub fn gemm_efficiency(&self, n: f64) -> f64 {
+        let (ceil, half_n) = match self.lib {
+            MathLib::Mkl => (0.92, 180.0),
+            MathLib::MklDnn => (0.86, 220.0),
+            MathLib::Eigen => (0.72, 300.0),
+        };
+        // saturating rise: eff = ceil * n / (n + half_n)
+        let base = ceil * n / (n + half_n);
+        // out-of-LLC penalty: Eigen/MKL-DNN lose ~15–25% beyond ~4k because
+        // of demand misses; MKL's prefetching holds its efficiency
+        let oversize = (n / 4096.0).min(2.0).max(0.0);
+        let penalty = match self.lib {
+            MathLib::Mkl => 1.0 - 0.02 * (oversize - 1.0).max(0.0),
+            MathLib::MklDnn => 1.0 - 0.10 * (oversize - 1.0).max(0.0),
+            MathLib::Eigen => 1.0 - 0.12 * (oversize - 1.0).max(0.0),
+        };
+        base * penalty
+    }
+
+    /// Efficiency for a general (possibly non-square) GEMM: use the
+    /// geometric-mean dimension as the effective size.
+    pub fn gemm_efficiency_mkn(&self, m: f64, k: f64, n: f64) -> f64 {
+        self.gemm_efficiency((m * k * n).powf(1.0 / 3.0))
+    }
+
+    /// Thread-scaling efficiency: fraction of linear speedup that `t`
+    /// kernel threads achieve on compute (before the serial prep terms the
+    /// simulator adds). Saturating: `s(t) = t / (1 + (t-1)/T)`, calibrated
+    /// so a large GEMM peaks near the paper's measured ~16× at 24 MKL
+    /// threads (Fig. 9) rather than scaling linearly.
+    pub fn parallel_efficiency(&self, threads: usize) -> f64 {
+        self.saturating_eff(threads, match self.lib {
+            MathLib::Mkl => 40.0,
+            MathLib::MklDnn => 36.0,
+            MathLib::Eigen => 28.0,
+        })
+    }
+
+    /// Thread scaling for im2col convolutions: the staged matrix's
+    /// irregular access pattern saturates much earlier than a packed GEMM
+    /// (this is why the paper's inception workloads prefer 3 pools × 8
+    /// threads over one 24-thread pool, Fig. 4).
+    pub fn parallel_efficiency_conv(&self, threads: usize) -> f64 {
+        self.saturating_eff(threads, match self.lib {
+            MathLib::Mkl => 12.0,
+            MathLib::MklDnn => 12.0,
+            MathLib::Eigen => 9.0,
+        })
+    }
+
+    fn saturating_eff(&self, threads: usize, sat: f64) -> f64 {
+        if threads <= 1 {
+            return 1.0;
+        }
+        let t = threads as f64;
+        // speedup s(t) = t / (1 + (t-1)/sat); efficiency = s(t)/t
+        1.0 / (1.0 + (t - 1.0) / sat)
+    }
+
+    /// LLC misses per kilo-instruction for a square-`n` single-thread GEMM
+    /// on a platform with the given LLC (Fig. 13b).
+    pub fn llc_mpki(&self, n: f64, platform: &CpuPlatform) -> f64 {
+        // working set of the blocked panel ≈ 3 · n² · 4 B; compare to LLC
+        let ws_mib = 3.0 * n * n * 4.0 / (1024.0 * 1024.0);
+        let pressure = (ws_mib / platform.llc_mib_per_socket).min(4.0);
+        let (base, slope) = match self.lib {
+            MathLib::Mkl => (0.05, 0.4), // prefetch hides almost everything
+            MathLib::MklDnn => (0.15, 1.6),
+            MathLib::Eigen => (0.25, 2.0),
+        };
+        if pressure <= 1.0 {
+            base * pressure
+        } else {
+            base + slope * (pressure - 1.0).min(2.0)
+        }
+    }
+
+    /// Memory-traffic split (Fig. 13c): total traffic is similar across
+    /// libraries; MKL moves nearly all of it via prefetch.
+    pub fn mem_traffic(&self, n: f64, platform: &CpuPlatform) -> MemTraffic {
+        // total bytes ≈ reuse-blocked GEMM traffic: 3·n²·4 · (n/block)
+        let block = 256.0;
+        let total_gb = 3.0 * n * n * 4.0 * (n / block).max(1.0) / 1e9;
+        let mpki = self.llc_mpki(n, platform);
+        let max_mpki = 4.3; // Eigen deep out-of-cache
+        let demand_frac = (mpki / max_mpki).min(1.0)
+            * match self.lib {
+                MathLib::Mkl => 0.08,
+                MathLib::MklDnn => 0.55,
+                MathLib::Eigen => 0.75,
+            };
+        MemTraffic { prefetch_gb: total_gb * (1.0 - demand_frac), demand_gb: total_gb * demand_frac }
+    }
+
+    /// Top-down cycle breakdown + IPC (Fig. 13a).
+    pub fn topdown(&self, n: f64, platform: &CpuPlatform) -> TopDown {
+        let mpki = self.llc_mpki(n, platform);
+        // memory-bound cycles grow with MPKI; saturate at 45%
+        let backend_memory = (mpki * 0.085).min(0.45);
+        let (frontend, bad_speculation, backend_core) = match self.lib {
+            MathLib::Mkl => (0.03, 0.01, 0.06),
+            MathLib::MklDnn => (0.05, 0.02, 0.08),
+            MathLib::Eigen => (0.08, 0.03, 0.12),
+        };
+        let retiring = (1.0 - frontend - bad_speculation - backend_core - backend_memory).max(0.1);
+        // Skylake retires up to 4 µops/cycle; GEMM's FMA mix caps ~3.5
+        let ipc = 3.5 * retiring + 0.3;
+        TopDown { retiring, frontend, bad_speculation, backend_core, backend_memory, ipc }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> CpuPlatform {
+        CpuPlatform::small()
+    }
+
+    #[test]
+    fn mkl_wins_gemm_at_all_sizes() {
+        for n in [64.0, 256.0, 1024.0, 4096.0, 16384.0] {
+            let mkl = MathModel::new(MathLib::Mkl).gemm_efficiency(n);
+            let dnn = MathModel::new(MathLib::MklDnn).gemm_efficiency(n);
+            let eig = MathModel::new(MathLib::Eigen).gemm_efficiency(n);
+            assert!(mkl > dnn && dnn > eig, "n={n}: {mkl} {dnn} {eig}");
+        }
+    }
+
+    #[test]
+    fn efficiency_rises_with_size() {
+        let m = MathModel::new(MathLib::Mkl);
+        assert!(m.gemm_efficiency(64.0) < m.gemm_efficiency(512.0));
+        assert!(m.gemm_efficiency(512.0) < m.gemm_efficiency(4096.0));
+    }
+
+    #[test]
+    fn optimization_gap_is_about_25_percent() {
+        // paper §6: "optimization can improve a GEMM kernel's performance
+        // by up to 25%" (MKL over the others)
+        let n = 8192.0;
+        let mkl = MathModel::new(MathLib::Mkl).gemm_efficiency(n);
+        let eig = MathModel::new(MathLib::Eigen).gemm_efficiency(n);
+        let gain = mkl / eig - 1.0;
+        assert!(gain > 0.2 && gain < 0.6, "gain={gain}");
+    }
+
+    #[test]
+    fn mkl_mpki_order_of_magnitude_lower() {
+        let p = small();
+        let n = 8192.0; // far out of 8 MiB LLC
+        let mkl = MathModel::new(MathLib::Mkl).llc_mpki(n, &p);
+        let dnn = MathModel::new(MathLib::MklDnn).llc_mpki(n, &p);
+        let eig = MathModel::new(MathLib::Eigen).llc_mpki(n, &p);
+        assert!(dnn / mkl > 3.0, "mkl={mkl} dnn={dnn}");
+        assert!(eig > dnn, "eigen={eig} dnn={dnn}");
+    }
+
+    #[test]
+    fn backend_bound_25pct_beyond_4k_for_eigen_dnn() {
+        let p = small();
+        for lib in [MathLib::Eigen, MathLib::MklDnn] {
+            let td = MathModel::new(lib).topdown(8192.0, &p);
+            let backend = td.backend_memory + td.backend_core;
+            assert!(backend > 0.2 && backend < 0.6, "{lib:?}: {backend}");
+        }
+        let mkl = MathModel::new(MathLib::Mkl).topdown(8192.0, &p);
+        assert!(mkl.backend_memory < 0.1, "{:?}", mkl);
+    }
+
+    #[test]
+    fn mkl_highest_ipc() {
+        let p = small();
+        let ipc = |l| MathModel::new(l).topdown(4096.0, &p).ipc;
+        assert!(ipc(MathLib::Mkl) > ipc(MathLib::MklDnn));
+        assert!(ipc(MathLib::MklDnn) > ipc(MathLib::Eigen));
+    }
+
+    #[test]
+    fn mkl_traffic_mostly_prefetch() {
+        let p = small();
+        let t = MathModel::new(MathLib::Mkl).mem_traffic(8192.0, &p);
+        assert!(t.prefetch_gb / (t.prefetch_gb + t.demand_gb) > 0.9);
+        let e = MathModel::new(MathLib::Eigen).mem_traffic(8192.0, &p);
+        assert!(e.demand_gb / (e.prefetch_gb + e.demand_gb) > 0.3);
+    }
+
+    #[test]
+    fn breakdown_sums_to_one() {
+        let p = small();
+        for lib in MathLib::ALL {
+            for n in [128.0, 1024.0, 8192.0] {
+                let td = MathModel::new(lib).topdown(n, &p);
+                let sum = td.retiring + td.frontend + td.bad_speculation
+                    + td.backend_core + td.backend_memory;
+                assert!((sum - 1.0).abs() < 1e-9, "{lib:?} n={n}: {sum}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_efficiency_monotone_decreasing() {
+        let m = MathModel::new(MathLib::Mkl);
+        assert_eq!(m.parallel_efficiency(1), 1.0);
+        assert!(m.parallel_efficiency(24) < m.parallel_efficiency(4));
+        // Fig. 9 anchor: ~16× max speedup at 24 threads
+        let s24 = 24.0 * m.parallel_efficiency(24);
+        assert!(s24 > 13.0 && s24 < 18.0, "s24={s24}");
+    }
+}

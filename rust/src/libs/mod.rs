@@ -1,0 +1,16 @@
+//! Library back ends (paper §6).
+//!
+//! * [`math`] — analytic models of the MKL / MKL-DNN / Eigen GEMM kernels:
+//!   efficiency vs size, prefetch effectiveness, LLC behaviour, top-down
+//!   cycle breakdown (the Fig. 13 quantities). These feed the simulator.
+//! * [`threadpool`] — three *real, runnable* thread pools mirroring the
+//!   designs the paper benchmarks in Fig. 14: a naive `std::thread` pool, an
+//!   Eigen-style work-stealing pool, and a Folly-style MPMC pool with LIFO
+//!   wake-up. They execute the coordinator's work and are measured by
+//!   `benches/threadpool.rs`.
+
+pub mod math;
+pub mod threadpool;
+
+pub use math::MathModel;
+pub use threadpool::{make_pool, TaskPool, WaitGroup};

@@ -1,0 +1,293 @@
+//! Folly-style pool: bounded lock-free MPMC ring buffer + LIFO wake-up.
+//!
+//! Two Folly CPUThreadPoolExecutor ideas reproduced here:
+//!
+//! * the queue is a fixed-capacity MPMC ring with per-slot sequence
+//!   numbers (Vyukov's design, what folly::MPMCQueue implements) — enqueue
+//!   and dequeue are single-CAS operations with no shared lock;
+//! * idle workers park on a LIFO stack ("LifoSem"), so the most recently
+//!   active (cache-warm) worker wakes first, and the rest stay asleep
+//!   instead of stampeding.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use super::{Task, TaskPool};
+
+const QUEUE_CAP: usize = 4096; // power of two
+
+struct Slot {
+    seq: AtomicUsize,
+    value: UnsafeCell<MaybeUninit<Task>>,
+}
+
+/// Vyukov bounded MPMC queue specialised for `Task`.
+struct MpmcQueue {
+    slots: Box<[Slot]>,
+    head: AtomicUsize, // dequeue cursor
+    tail: AtomicUsize, // enqueue cursor
+    mask: usize,
+}
+
+unsafe impl Send for MpmcQueue {}
+unsafe impl Sync for MpmcQueue {}
+
+impl MpmcQueue {
+    fn new(cap: usize) -> Self {
+        assert!(cap.is_power_of_two());
+        let slots = (0..cap)
+            .map(|i| Slot { seq: AtomicUsize::new(i), value: UnsafeCell::new(MaybeUninit::uninit()) })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        MpmcQueue { slots, head: AtomicUsize::new(0), tail: AtomicUsize::new(0), mask: cap - 1 }
+    }
+
+    /// Try to enqueue; returns the task back when full.
+    fn push(&self, task: Task) -> Result<(), Task> {
+        let mut pos = self.tail.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let diff = seq as isize - pos as isize;
+            if diff == 0 {
+                match self.tail.compare_exchange_weak(
+                    pos,
+                    pos + 1,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        unsafe { (*slot.value.get()).write(task) };
+                        slot.seq.store(pos + 1, Ordering::Release);
+                        return Ok(());
+                    }
+                    Err(actual) => pos = actual,
+                }
+            } else if diff < 0 {
+                return Err(task); // full
+            } else {
+                pos = self.tail.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Try to dequeue.
+    fn pop(&self) -> Option<Task> {
+        let mut pos = self.head.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let diff = seq as isize - (pos + 1) as isize;
+            if diff == 0 {
+                match self.head.compare_exchange_weak(
+                    pos,
+                    pos + 1,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        let task = unsafe { (*slot.value.get()).assume_init_read() };
+                        slot.seq.store(pos + self.mask + 1, Ordering::Release);
+                        return Some(task);
+                    }
+                    Err(actual) => pos = actual,
+                }
+            } else if diff < 0 {
+                return None; // empty
+            } else {
+                pos = self.head.load(Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// LIFO parking lot: most recently parked worker wakes first.
+struct LifoSem {
+    stack: Mutex<Vec<usize>>, // worker ids, top = most recent
+    cvs: Box<[(Mutex<bool>, Condvar)]>,
+}
+
+impl LifoSem {
+    fn new(n: usize) -> Self {
+        LifoSem {
+            stack: Mutex::new(Vec::with_capacity(n)),
+            cvs: (0..n).map(|_| (Mutex::new(false), Condvar::new())).collect(),
+        }
+    }
+
+    /// Park worker `id` until signalled (or timeout, for shutdown polling).
+    fn park(&self, id: usize) {
+        self.stack.lock().unwrap().push(id);
+        let (lock, cv) = &self.cvs[id];
+        let mut signalled = lock.lock().unwrap();
+        if !*signalled {
+            let (g, _t) = cv
+                .wait_timeout(signalled, std::time::Duration::from_millis(2))
+                .unwrap();
+            signalled = g;
+        }
+        *signalled = false;
+        // remove self if still on the stack (timeout path)
+        let mut st = self.stack.lock().unwrap();
+        if let Some(i) = st.iter().rposition(|&w| w == id) {
+            st.remove(i);
+        }
+    }
+
+    /// Wake the most recently parked worker, if any.
+    fn post(&self) {
+        let popped = self.stack.lock().unwrap().pop();
+        if let Some(id) = popped {
+            let (lock, cv) = &self.cvs[id];
+            *lock.lock().unwrap() = true;
+            cv.notify_one();
+        }
+    }
+}
+
+struct Shared {
+    queue: MpmcQueue,
+    sem: LifoSem,
+    shutdown: AtomicBool,
+    /// overflow list when the ring is full (rare)
+    overflow: Mutex<Vec<Task>>,
+}
+
+/// The Folly-style pool.
+pub struct FollyPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl FollyPool {
+    /// Spawn `n` workers.
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        let shared = Arc::new(Shared {
+            queue: MpmcQueue::new(QUEUE_CAP),
+            sem: LifoSem::new(n),
+            shutdown: AtomicBool::new(false),
+            overflow: Mutex::new(Vec::new()),
+        });
+        let workers = (0..n)
+            .map(|i| {
+                let s = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("folly-pool-{i}"))
+                    .spawn(move || worker(s, i))
+                    .expect("spawn")
+            })
+            .collect();
+        FollyPool { shared, workers }
+    }
+}
+
+fn take(shared: &Shared) -> Option<Task> {
+    if let Some(t) = shared.queue.pop() {
+        return Some(t);
+    }
+    let mut ov = shared.overflow.lock().unwrap();
+    ov.pop()
+}
+
+fn worker(shared: Arc<Shared>, id: usize) {
+    loop {
+        // brief spin for latency
+        let mut got = None;
+        for _ in 0..32 {
+            if let Some(t) = take(&shared) {
+                got = Some(t);
+                break;
+            }
+            std::hint::spin_loop();
+        }
+        if let Some(t) = got {
+            t();
+            continue;
+        }
+        if shared.shutdown.load(Ordering::Acquire) {
+            // drain fully before exiting
+            while let Some(t) = take(&shared) {
+                t();
+            }
+            return;
+        }
+        shared.sem.park(id);
+    }
+}
+
+impl TaskPool for FollyPool {
+    fn execute(&self, task: Task) {
+        match self.shared.queue.push(task) {
+            Ok(()) => {}
+            Err(task) => self.shared.overflow.lock().unwrap().push(task),
+        }
+        self.shared.sem.post();
+    }
+
+    fn threads(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for FollyPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        // wake everyone (parked workers poll shutdown on 2 ms timeout too)
+        for _ in 0..self.workers.len() {
+            self.shared.sem.post();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn mpmc_queue_fifo_single_thread() {
+        let q = MpmcQueue::new(8);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        for i in 0..5 {
+            let l = Arc::clone(&log);
+            assert!(q.push(Box::new(move || l.lock().unwrap().push(i))).is_ok());
+        }
+        while let Some(t) = q.pop() {
+            t();
+        }
+        assert_eq!(*log.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn queue_full_reports_back() {
+        let q = MpmcQueue::new(2);
+        assert!(q.push(Box::new(|| {})).is_ok());
+        assert!(q.push(Box::new(|| {})).is_ok());
+        assert!(q.push(Box::new(|| {})).is_err());
+    }
+
+    #[test]
+    fn overflow_path_executes() {
+        // capacity is 4096; push 5000 no-ops through a 2-thread pool
+        let pool = FollyPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let wg = super::super::WaitGroup::new(5000);
+        for _ in 0..5000 {
+            let c = Arc::clone(&counter);
+            let h = wg.handle();
+            pool.execute(Box::new(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+                h.done();
+            }));
+        }
+        wg.wait();
+        assert_eq!(counter.load(Ordering::Relaxed), 5000);
+    }
+}

@@ -1,0 +1,153 @@
+//! Thread pools — the paper's §6.2 designs, implemented for real.
+//!
+//! | pool        | queue                         | wake policy          |
+//! |-------------|-------------------------------|----------------------|
+//! | `StdPool`   | one mutex-guarded deque       | condvar broadcast    |
+//! | `EigenPool` | per-thread deques + stealing  | spin-then-park       |
+//! | `FollyPool` | bounded MPMC ring (atomics)   | LIFO parking stack   |
+//!
+//! All three run the same [`TaskPool`] interface so the coordinator and the
+//! Fig. 14 benchmark can swap them via [`crate::config::PoolLib`].
+
+mod eigen_pool;
+mod folly_pool;
+mod std_pool;
+
+pub use eigen_pool::EigenPool;
+pub use folly_pool::FollyPool;
+pub use std_pool::StdPool;
+
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::config::PoolLib;
+
+/// A boxed unit of work.
+pub type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Common interface over the three pool designs.
+pub trait TaskPool: Send + Sync {
+    /// Submit a task for asynchronous execution.
+    fn execute(&self, task: Task);
+    /// Number of worker threads.
+    fn threads(&self) -> usize;
+}
+
+/// Construct a pool of `n` workers for the given library flavour.
+pub fn make_pool(lib: PoolLib, n: usize) -> Arc<dyn TaskPool> {
+    match lib {
+        PoolLib::StdThread => Arc::new(StdPool::new(n)),
+        PoolLib::Eigen => Arc::new(EigenPool::new(n)),
+        PoolLib::Folly => Arc::new(FollyPool::new(n)),
+    }
+}
+
+/// Counting latch used to join on a batch of submitted tasks.
+pub struct WaitGroup {
+    inner: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl WaitGroup {
+    /// New latch expecting `count` completions.
+    pub fn new(count: usize) -> Self {
+        WaitGroup { inner: Arc::new((Mutex::new(count), Condvar::new())) }
+    }
+
+    /// Signal one completion (call from the task).
+    pub fn done(&self) {
+        let (lock, cv) = &*self.inner;
+        let mut n = lock.lock().unwrap();
+        *n -= 1;
+        if *n == 0 {
+            cv.notify_all();
+        }
+    }
+
+    /// Cheap clone handle for moving into tasks.
+    pub fn handle(&self) -> WaitGroup {
+        WaitGroup { inner: Arc::clone(&self.inner) }
+    }
+
+    /// Block until all completions arrive.
+    pub fn wait(&self) {
+        let (lock, cv) = &*self.inner;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            n = cv.wait(n).unwrap();
+        }
+    }
+}
+
+/// Run `tasks` on `pool` and wait for all of them (the scatter/gather the
+/// framework's intra-op parallelism uses).
+pub fn scatter_gather(pool: &dyn TaskPool, tasks: Vec<Task>) {
+    let wg = WaitGroup::new(tasks.len());
+    for t in tasks {
+        let h = wg.handle();
+        pool.execute(Box::new(move || {
+            t();
+            h.done();
+        }));
+    }
+    wg.wait();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn exercise(pool: Arc<dyn TaskPool>) {
+        let counter = Arc::new(AtomicUsize::new(0));
+        let tasks: Vec<Task> = (0..1000)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                Box::new(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                }) as Task
+            })
+            .collect();
+        scatter_gather(pool.as_ref(), tasks);
+        assert_eq!(counter.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn all_pools_run_all_tasks() {
+        for lib in PoolLib::ALL {
+            exercise(make_pool(lib, 4));
+        }
+    }
+
+    #[test]
+    fn single_thread_pools_work() {
+        for lib in PoolLib::ALL {
+            exercise(make_pool(lib, 1));
+        }
+    }
+
+    #[test]
+    fn oversubscribed_pools_work() {
+        // 64 threads on this tiny machine — the Fig. 14 stress shape
+        for lib in PoolLib::ALL {
+            let pool = make_pool(lib, 64);
+            assert_eq!(pool.threads(), 64);
+            exercise(pool);
+        }
+    }
+
+    #[test]
+    fn waitgroup_zero_is_immediate() {
+        WaitGroup::new(0).wait();
+    }
+
+    #[test]
+    fn tasks_can_submit_tasks() {
+        let pool = make_pool(PoolLib::Folly, 2);
+        let wg = WaitGroup::new(1);
+        let h = wg.handle();
+        let p2 = Arc::clone(&pool);
+        pool.execute(Box::new(move || {
+            p2.execute(Box::new(move || h.done()));
+        }));
+        wg.wait();
+    }
+}

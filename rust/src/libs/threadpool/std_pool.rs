@@ -1,0 +1,119 @@
+//! Naive `std::thread` pool: one mutex-guarded queue, condvar broadcast.
+//!
+//! This is the paper's baseline design — every push and pop serialises on
+//! the same lock, and every `notify_all` stampedes all sleepers. Fine at
+//! 4 threads, collapses at 64 (Fig. 14's 3× overhead growth, ~60% of each
+//! core spent in synchronisation).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use super::{Task, TaskPool};
+
+struct Shared {
+    queue: Mutex<State>,
+    cv: Condvar,
+}
+
+struct State {
+    tasks: VecDeque<Task>,
+    shutdown: bool,
+}
+
+/// The naive pool.
+pub struct StdPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl StdPool {
+    /// Spawn `n` workers.
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(State { tasks: VecDeque::new(), shutdown: false }),
+            cv: Condvar::new(),
+        });
+        let workers = (0..n)
+            .map(|i| {
+                let s = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("std-pool-{i}"))
+                    .spawn(move || worker(s))
+                    .expect("spawn")
+            })
+            .collect();
+        StdPool { shared, workers }
+    }
+}
+
+fn worker(shared: Arc<Shared>) {
+    loop {
+        let task = {
+            let mut st = shared.queue.lock().unwrap();
+            loop {
+                if let Some(t) = st.tasks.pop_front() {
+                    break t;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.cv.wait(st).unwrap();
+            }
+        };
+        task();
+    }
+}
+
+impl TaskPool for StdPool {
+    fn execute(&self, task: Task) {
+        let mut st = self.shared.queue.lock().unwrap();
+        st.tasks.push_back(task);
+        drop(st);
+        // broadcast wake-up: the design flaw the paper measures
+        self.shared.cv.notify_all();
+    }
+
+    fn threads(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for StdPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.queue.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn drains_queue_on_shutdown() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = StdPool::new(2);
+            for _ in 0..100 {
+                let c = Arc::clone(&counter);
+                pool.execute(Box::new(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                }));
+            }
+            // Drop joins workers only after the queue empties…
+            while counter.load(Ordering::Relaxed) < 100 {
+                std::thread::yield_now();
+            }
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+}

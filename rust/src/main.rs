@@ -1,0 +1,270 @@
+//! `parframe` CLI — leader entrypoint.
+//!
+//! ```text
+//! parframe models                          list the model zoo + widths
+//! parframe tune --model ncf [--platform large.2]
+//! parframe simulate --model resnet50 --pools 2 --mkl 12 --intra 12
+//! parframe figures --fig 18 | --table 2 | --all
+//! parframe serve --artifacts artifacts --kind mlp --requests 64
+//! parframe check --artifacts artifacts     verify artifact digests via PJRT
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use parframe::bench_tables;
+use parframe::config::{CpuPlatform, OperatorImpl, RunConfig};
+use parframe::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use parframe::graph::analyze_width;
+use parframe::models;
+use parframe::runtime::{gen_input, ModelRuntime};
+use parframe::sim;
+use parframe::tuner;
+use parframe::util::prng::Prng;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Minimal flag parser: `--key value` pairs after the subcommand.
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if key == "all" {
+                flags.insert("all".to_string(), "true".to_string());
+                i += 1;
+            } else {
+                let v = args.get(i + 1).ok_or_else(|| anyhow!("missing value for --{key}"))?;
+                flags.insert(key.to_string(), v.clone());
+                i += 2;
+            }
+        } else {
+            bail!("unexpected argument '{a}'");
+        }
+    }
+    Ok(flags)
+}
+
+fn platform_from(flags: &HashMap<String, String>) -> Result<CpuPlatform> {
+    let name = flags.get("platform").map(String::as_str).unwrap_or("large.2");
+    CpuPlatform::by_name(name).ok_or_else(|| anyhow!("unknown platform '{name}'"))
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first().map(String::as_str) else {
+        print_help();
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..])?;
+
+    match cmd {
+        "models" => cmd_models(),
+        "tune" => cmd_tune(&flags),
+        "simulate" => cmd_simulate(&flags),
+        "figures" => cmd_figures(&flags),
+        "ablations" => {
+            println!("{}", bench_tables::ablations::ablation_table());
+            Ok(())
+        }
+        "serve" => cmd_serve(&flags),
+        "check" => cmd_check(&flags),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try 'parframe help')"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "parframe — parallelism-aware DL framework runtime + auto-tuner\n\
+         \n\
+         commands:\n\
+           models                         list the model zoo with width analysis\n\
+           tune     --model M [--platform P] [--batch N]\n\
+           simulate --model M [--pools/--mkl/--intra N] [--platform P]\n\
+           figures  --fig N | --table N | --all\n\
+           ablations                      per-feature degradation table
+           serve    --artifacts DIR [--kind mlp] [--requests N] [--lanes N]\n\
+           check    --artifacts DIR\n\
+         platforms: small | large | large.2 (default large.2)"
+    );
+}
+
+fn cmd_models() -> Result<()> {
+    println!("{:<14} {:>6} {:>7} {:>7} {:>9} {:>12}", "model", "batch", "ops", "heavy", "max-width", "avg-width");
+    for name in models::model_names() {
+        let batch = models::canonical_batch(name);
+        let g = models::build(name, batch).unwrap();
+        let w = analyze_width(&g);
+        println!(
+            "{:<14} {:>6} {:>7} {:>7} {:>9} {:>12}",
+            name, batch, g.len(), w.heavy_ops, w.max_width, w.avg_width
+        );
+    }
+    Ok(())
+}
+
+fn cmd_tune(flags: &HashMap<String, String>) -> Result<()> {
+    let model = flags.get("model").context("--model required")?;
+    let platform = platform_from(flags)?;
+    let batch = flags
+        .get("batch")
+        .map(|b| b.parse::<usize>())
+        .transpose()?
+        .unwrap_or_else(|| models::canonical_batch(model));
+    let g = models::build(model, batch).ok_or_else(|| anyhow!("unknown model '{model}'"))?;
+    let t = tuner::tune(&g, &platform);
+    println!("model {model} (batch {batch}) on {}:", platform.name);
+    println!(
+        "  width: heavy_ops={} levels={} max={} avg={}",
+        t.width.heavy_ops, t.width.levels, t.width.max_width, t.width.avg_width
+    );
+    println!(
+        "  recommended: inter_op_pools={} mkl_threads={} intra_op_threads={}",
+        t.config.inter_op_pools, t.config.mkl_threads, t.config.intra_op_threads
+    );
+    let guided = sim::simulate(&g, &platform, &t.config);
+    println!("  simulated latency: {:.3} ms ({:.0} GFLOP/s)", guided.latency_s * 1e3, guided.gflops);
+    for b in tuner::Baseline::ALL {
+        let cfg = tuner::baseline_config(b, &platform);
+        let r = sim::simulate(&g, &platform, &cfg);
+        println!(
+            "  vs {:<24} {:.3} ms  (ours {:.2}x)",
+            b.name(),
+            r.latency_s * 1e3,
+            r.latency_s / guided.latency_s
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
+    let model = flags.get("model").context("--model required")?;
+    let platform = platform_from(flags)?;
+    let batch = flags
+        .get("batch")
+        .map(|b| b.parse::<usize>())
+        .transpose()?
+        .unwrap_or_else(|| models::canonical_batch(model));
+    let g = models::build(model, batch).ok_or_else(|| anyhow!("unknown model '{model}'"))?;
+    let mut cfg = RunConfig { platform: platform.clone(), ..RunConfig::default() }.framework;
+    cfg.operator_impl = OperatorImpl::IntraOpParallel;
+    if let Some(p) = flags.get("pools") {
+        cfg.inter_op_pools = p.parse()?;
+    }
+    if let Some(m) = flags.get("mkl") {
+        cfg.mkl_threads = m.parse()?;
+    } else {
+        cfg.mkl_threads = (platform.physical_cores() / cfg.inter_op_pools.max(1)).max(1);
+    }
+    if let Some(i) = flags.get("intra") {
+        cfg.intra_op_threads = i.parse()?;
+    } else {
+        cfg.intra_op_threads = cfg.mkl_threads;
+    }
+    cfg.validate(&platform).map_err(|e| anyhow!(e))?;
+    let r = sim::simulate(&g, &platform, &cfg);
+    println!(
+        "{model} (batch {batch}) on {} with pools={} mkl={} intra={}:",
+        platform.name, cfg.inter_op_pools, cfg.mkl_threads, cfg.intra_op_threads
+    );
+    println!(
+        "  latency {:.3} ms | {:.0} GFLOP/s | throughput {:.1} items/s",
+        r.latency_s * 1e3,
+        r.gflops,
+        r.throughput(batch)
+    );
+    for cat in sim::Category::ALL {
+        println!("  {:<14} {:>6.1}%", cat.label(), r.breakdown.frac(cat) * 100.0);
+    }
+    Ok(())
+}
+
+fn cmd_figures(flags: &HashMap<String, String>) -> Result<()> {
+    if flags.contains_key("all") {
+        for n in bench_tables::FIGURES {
+            println!("{}", bench_tables::figure(n).unwrap());
+        }
+        println!("{}", bench_tables::table(2).unwrap());
+        return Ok(());
+    }
+    if let Some(f) = flags.get("fig") {
+        let n: usize = f.parse()?;
+        let s = bench_tables::figure(n).ok_or_else(|| anyhow!("no generator for figure {n}"))?;
+        println!("{s}");
+        return Ok(());
+    }
+    if let Some(t) = flags.get("table") {
+        let n: usize = t.parse()?;
+        let s = bench_tables::table(n).ok_or_else(|| anyhow!("no generator for table {n}"))?;
+        println!("{s}");
+        return Ok(());
+    }
+    bail!("figures needs --fig N, --table N or --all")
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let dir = flags.get("artifacts").map(String::as_str).unwrap_or("artifacts");
+    let kind = flags.get("kind").map(String::as_str).unwrap_or("mlp");
+    let n_requests: usize = flags.get("requests").map(|r| r.parse()).transpose()?.unwrap_or(64);
+    let lanes: usize = flags.get("lanes").map(|l| l.parse()).transpose()?.unwrap_or(1);
+
+    let mut cfg = CoordinatorConfig::for_kind(dir, kind);
+    cfg.lanes = lanes;
+    cfg.policy = BatchPolicy::default();
+    println!("starting coordinator: kind={kind} lanes={lanes} artifacts={dir}");
+    let coord = Coordinator::start(cfg)?;
+    let shape = coord
+        .router()
+        .item_shape(kind)
+        .ok_or_else(|| anyhow!("kind not served"))?
+        .clone();
+
+    let mut rng = Prng::new(42);
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n_requests)
+        .map(|_| {
+            let dims: Vec<usize> = std::iter::once(shape.rows_per_item)
+                .chain(shape.feature_dims.iter().copied())
+                .collect();
+            let input = gen_input(rng.below(1000) as u32, &dims, 1.0);
+            coord.submit(kind, input)
+        })
+        .collect::<Result<_>>()?;
+    let mut ok = 0usize;
+    for rx in rxs {
+        if rx.recv()?.is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "served {ok}/{n_requests} requests in {:.1} ms ({:.1} req/s)",
+        wall * 1e3,
+        ok as f64 / wall
+    );
+    println!("metrics: {}", coord.metrics().summary());
+    Ok(())
+}
+
+fn cmd_check(flags: &HashMap<String, String>) -> Result<()> {
+    let dir = flags.get("artifacts").map(String::as_str).unwrap_or("artifacts");
+    let rt = ModelRuntime::load(std::path::Path::new(dir))?;
+    println!("platform: {}", rt.platform());
+    for name in rt.loaded().into_iter().map(str::to_string).collect::<Vec<_>>() {
+        rt.self_check(&name)?;
+        println!("  {name}: digest OK");
+    }
+    println!("all artifacts verified");
+    Ok(())
+}

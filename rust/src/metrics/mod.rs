@@ -1,0 +1,196 @@
+//! Serving metrics: latency histograms and throughput counters for the
+//! coordinator (and anything else that wants cheap percentile tracking).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// Thread-safe latency recorder with percentile queries.
+#[derive(Debug, Default)]
+pub struct LatencyHistogram {
+    samples: Mutex<Vec<f64>>,
+}
+
+impl LatencyHistogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one latency sample (seconds).
+    pub fn record(&self, secs: f64) {
+        self.samples.lock().unwrap().push(secs);
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> usize {
+        self.samples.lock().unwrap().len()
+    }
+
+    /// Percentile (q in [0, 100]).
+    pub fn percentile(&self, q: f64) -> f64 {
+        stats::percentile(&self.samples.lock().unwrap(), q)
+    }
+
+    /// Mean latency.
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.samples.lock().unwrap())
+    }
+
+    /// Snapshot of all samples (for reports).
+    pub fn snapshot(&self) -> Vec<f64> {
+        self.samples.lock().unwrap().clone()
+    }
+}
+
+/// Monotonic event counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    n: AtomicU64,
+}
+
+impl Counter {
+    /// Zeroed counter.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Increment by one; returns the new value.
+    pub fn inc(&self) -> u64 {
+        self.n.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Add `v`.
+    pub fn add(&self, v: u64) {
+        self.n.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.n.load(Ordering::Relaxed)
+    }
+}
+
+/// Coordinator-wide metrics bundle.
+#[derive(Debug, Default)]
+pub struct ServingMetrics {
+    /// End-to-end request latency.
+    pub request_latency: LatencyHistogram,
+    /// Time spent waiting in the batching queue.
+    pub queue_latency: LatencyHistogram,
+    /// Model-execution time per dispatched batch.
+    pub execute_latency: LatencyHistogram,
+    /// Requests completed.
+    pub requests: Counter,
+    /// Batches dispatched.
+    pub batches: Counter,
+    /// Requests that had to be padded (batch bucket > actual).
+    pub padded: Counter,
+}
+
+impl ServingMetrics {
+    /// Fresh bundle.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Mean requests per dispatched batch.
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.get();
+        if b == 0 {
+            0.0
+        } else {
+            self.requests.get() as f64 / b as f64
+        }
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} batches={} mean_batch={:.2} p50={:.3}ms p95={:.3}ms p99={:.3}ms",
+            self.requests.get(),
+            self.batches.get(),
+            self.mean_batch_size(),
+            self.request_latency.percentile(50.0) * 1e3,
+            self.request_latency.percentile(95.0) * 1e3,
+            self.request_latency.percentile(99.0) * 1e3,
+        )
+    }
+}
+
+/// Simple stopwatch.
+pub struct Timer(Instant);
+
+impl Timer {
+    /// Start timing.
+    pub fn start() -> Self {
+        Timer(Instant::now())
+    }
+
+    /// Elapsed seconds.
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles() {
+        let h = LatencyHistogram::new();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.percentile(50.0) - 50.5).abs() < 1.0);
+        assert!(h.percentile(99.0) > 98.0);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn counter_concurrent() {
+        let c = std::sync::Arc::new(Counter::new());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 4000);
+    }
+
+    #[test]
+    fn serving_summary_formats() {
+        let m = ServingMetrics::new();
+        m.requests.add(10);
+        m.batches.add(4);
+        m.request_latency.record(0.002);
+        let s = m.summary();
+        assert!(s.contains("requests=10"));
+        assert!(s.contains("mean_batch=2.50"));
+    }
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.elapsed_s() >= 0.002);
+    }
+}

@@ -1,0 +1,50 @@
+//! CaffeNet (AlexNet-class, Jia et al.): five convs + three giant FC
+//! layers. A pure chain (width 1) whose FC6 (9216×4096) dominates — the
+//! classic large-GEMM workload.
+
+use crate::graph::{Graph, GraphBuilder};
+use crate::ops::OpKind;
+
+use super::{conv, fc, pool, relu};
+
+/// Build CaffeNet at the given batch size.
+pub fn caffenet(batch: usize) -> Graph {
+    let mut b = GraphBuilder::new("caffenet", batch);
+    let input = b.add(
+        "input",
+        OpKind::DataMovement { bytes: 4 * batch * 227 * 227 * 3, name: "Feed" },
+        &[],
+    );
+    let c1 = conv(&mut b, "conv1/11x11", batch, 55, 3, 96, 11, &[input]);
+    let r1 = relu(&mut b, "relu1", batch, 55, 96, &[c1]);
+    let p1 = pool(&mut b, "pool1", batch, 27, 96, &[r1]);
+    let c2 = conv(&mut b, "conv2/5x5", batch, 27, 96, 256, 5, &[p1]);
+    let p2 = pool(&mut b, "pool2", batch, 13, 256, &[c2]);
+    let c3 = conv(&mut b, "conv3/3x3", batch, 13, 256, 384, 3, &[p2]);
+    let c4 = conv(&mut b, "conv4/3x3", batch, 13, 384, 384, 3, &[c3]);
+    let c5 = conv(&mut b, "conv5/3x3", batch, 13, 384, 256, 3, &[c4]);
+    let p5 = pool(&mut b, "pool5", batch, 6, 256, &[c5]);
+    let f6 = fc(&mut b, "fc6", batch, 9216, 4096, &[p5]);
+    let f7 = fc(&mut b, "fc7", batch, 4096, 4096, &[f6]);
+    fc(&mut b, "fc8", batch, 4096, 1000, &[f7]);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::analyze_width;
+
+    #[test]
+    fn chain_width_1() {
+        let w = analyze_width(&caffenet(16));
+        assert_eq!((w.max_width, w.avg_width), (1, 1), "{w:?}");
+    }
+
+    #[test]
+    fn fc6_dominates_params() {
+        let g = caffenet(16);
+        let fc6 = g.nodes.iter().find(|n| n.name == "fc6").unwrap();
+        assert!(matches!(fc6.kind, OpKind::MatMul { k: 9216, n: 4096, .. }));
+    }
+}

@@ -1,0 +1,70 @@
+//! DenseNet-121 (Huang et al.): dense blocks of 1×1+3×3 conv pairs.
+//! Every layer consumes the concat of all previous features, so the heavy
+//! graph is a strict chain — average width 1 (paper Table 2) and the lowest
+//! intra-op-thread benefit in Fig. 11 (many small convs).
+
+use crate::graph::{Graph, GraphBuilder};
+use crate::ops::OpKind;
+
+use super::{concat, conv, fc, pool};
+
+const GROWTH: usize = 32;
+
+/// Build DenseNet-121 at the given batch size.
+pub fn densenet121(batch: usize) -> Graph {
+    let mut b = GraphBuilder::new("densenet121", batch);
+    let input = b.add(
+        "input",
+        OpKind::DataMovement { bytes: 4 * batch * 224 * 224 * 3, name: "Feed" },
+        &[],
+    );
+    let c1 = conv(&mut b, "conv1/7x7", batch, 112, 3, 64, 7, &[input]);
+    let mut prev = pool(&mut b, "pool1", batch, 56, 64, &[c1]);
+    let mut channels = 64usize;
+
+    let blocks: [(usize, usize); 4] = [(6, 56), (12, 28), (24, 14), (16, 7)];
+    for (bi, (layers, hw)) in blocks.iter().enumerate() {
+        for li in 0..*layers {
+            let nm = format!("dense{}/layer{}", bi + 1, li);
+            // bottleneck 1x1 to 4*growth, then 3x3 to growth
+            let c1x1 = conv(&mut b, &format!("{nm}/conv1x1"), batch, *hw, channels, 4 * GROWTH, 1, &[prev]);
+            let c3x3 = conv(&mut b, &format!("{nm}/conv3x3"), batch, *hw, 4 * GROWTH, GROWTH, 3, &[c1x1]);
+            channels += GROWTH;
+            prev = concat(&mut b, &format!("{nm}/concat"), 4 * batch * hw * hw * channels, &[prev, c3x3]);
+        }
+        if bi < 3 {
+            // transition: 1x1 halve channels + 2x2 pool
+            channels /= 2;
+            let t = conv(&mut b, &format!("trans{}/conv1x1", bi + 1), batch, *hw, channels * 2, channels, 1, &[prev]);
+            prev = pool(&mut b, &format!("trans{}/pool", bi + 1), batch, hw / 2, channels, &[t]);
+        }
+    }
+    let gp = pool(&mut b, "global_pool", batch, 1, channels, &[prev]);
+    fc(&mut b, "fc/logits", batch, channels, 1000, &[gp]);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::analyze_width;
+
+    #[test]
+    fn width_is_chain() {
+        let w = analyze_width(&densenet121(16));
+        assert_eq!(w.avg_width, 1, "{w:?}");
+        assert_eq!(w.max_width, 1, "{w:?}");
+    }
+
+    #[test]
+    fn layer_count_is_121ish() {
+        let g = densenet121(16);
+        let convs = g.nodes.iter().filter(|n| n.kind.name() == "Conv").count();
+        assert_eq!(convs, 1 + 2 * (6 + 12 + 24 + 16) + 3); // stem + pairs + transitions
+    }
+
+    #[test]
+    fn validates() {
+        assert!(densenet121(4).validate().is_ok());
+    }
+}

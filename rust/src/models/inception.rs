@@ -1,0 +1,304 @@
+//! Inception family: GoogLeNet (v1), Inception v2 (BN-Inception), and
+//! Inception v3 — the paper's central inter-op-parallelism workloads
+//! (§4.2's case study is Inception v2; Fig. 1 is Inception v3).
+//!
+//! Module shapes follow the published architectures; the paper's analysis
+//! consumes branch structure (inter-op width) and conv sizes (intra-op
+//! cost), both encoded here.
+
+use crate::graph::{Graph, GraphBuilder, NodeId};
+
+use super::{concat, conv, pool, relu};
+
+/// One inception-module branch: a sequence of (out_c, kernel) convs.
+struct Branch(Vec<(usize, usize)>);
+
+/// Emit an inception module; returns the concat node.
+fn module(
+    b: &mut GraphBuilder,
+    name: &str,
+    batch: usize,
+    hw: usize,
+    in_c: usize,
+    branches: &[Branch],
+    input: NodeId,
+) -> (NodeId, usize) {
+    let mut outs: Vec<NodeId> = Vec::new();
+    let mut out_c_total = 0;
+    for (bi, Branch(convs)) in branches.iter().enumerate() {
+        let mut prev = input;
+        let mut prev_c = in_c;
+        // pooling branch starts with a pool (kernel size 0 marks it)
+        for (ci, &(out_c, k)) in convs.iter().enumerate() {
+            if k == 0 {
+                prev = pool(b, &format!("{name}/b{bi}/pool"), batch, hw, prev_c, &[prev]);
+                continue;
+            }
+            prev = conv(
+                b,
+                &format!("{name}/b{bi}/conv{ci}_{k}x{k}"),
+                batch,
+                hw,
+                prev_c,
+                out_c,
+                k,
+                &[prev],
+            );
+            prev_c = out_c;
+        }
+        out_c_total += prev_c;
+        outs.push(prev);
+    }
+    let cat = concat(b, &format!("{name}/concat"), 4 * batch * hw * hw * out_c_total, &outs);
+    (cat, out_c_total)
+}
+
+/// GoogLeNet / Inception v1: stem + 9 four-branch modules + classifier.
+/// Branches: 1×1 · 1×1→3×3 · 1×1→5×5 · pool→1×1 (max graph width 4).
+pub fn googlenet(batch: usize) -> Graph {
+    build_v1(batch, "googlenet")
+}
+
+/// Inception v1 under its paper alias (same network as GoogLeNet).
+pub fn inception_v1(batch: usize) -> Graph {
+    build_v1(batch, "inception_v1")
+}
+
+fn build_v1(batch: usize, name: &str) -> Graph {
+    let mut b = GraphBuilder::new(name, batch);
+    let input = b.add(
+        "input",
+        crate::ops::OpKind::DataMovement { bytes: 4 * batch * 224 * 224 * 3, name: "Feed" },
+        &[],
+    );
+    // stem: 7x7/2, pool, 1x1, 3x3, pool
+    let c1 = conv(&mut b, "conv1/7x7", batch, 112, 3, 64, 7, &[input]);
+    let r1 = relu(&mut b, "relu1", batch, 112, 64, &[c1]);
+    let p1 = pool(&mut b, "pool1", batch, 56, 64, &[r1]);
+    let c2 = conv(&mut b, "conv2/1x1", batch, 56, 64, 64, 1, &[p1]);
+    let c3 = conv(&mut b, "conv3/3x3", batch, 56, 64, 192, 3, &[c2]);
+    let p2 = pool(&mut b, "pool2", batch, 28, 192, &[c3]);
+
+    // (hw, in_c, [b0 1x1, b1 reduce, b1 3x3, b2 reduce, b2 5x5, b3 proj])
+    let specs: [(usize, usize, [usize; 6]); 9] = [
+        (28, 192, [64, 96, 128, 16, 32, 32]),
+        (28, 256, [128, 128, 192, 32, 96, 64]),
+        (14, 480, [192, 96, 208, 16, 48, 64]),
+        (14, 512, [160, 112, 224, 24, 64, 64]),
+        (14, 512, [128, 128, 256, 24, 64, 64]),
+        (14, 512, [112, 144, 288, 32, 64, 64]),
+        (14, 528, [256, 160, 320, 32, 128, 128]),
+        (7, 832, [256, 160, 320, 32, 128, 128]),
+        (7, 832, [384, 192, 384, 48, 128, 128]),
+    ];
+    let mut prev = p2;
+    for (mi, (hw, in_c, s)) in specs.iter().enumerate() {
+        let branches = [
+            Branch(vec![(s[0], 1)]),
+            Branch(vec![(s[1], 1), (s[2], 3)]),
+            Branch(vec![(s[3], 1), (s[4], 5)]),
+            Branch(vec![(0, 0), (s[5], 1)]),
+        ];
+        let (cat, _c) = module(&mut b, &format!("inc{}", mi + 3), batch, *hw, *in_c, &branches, prev);
+        prev = cat;
+    }
+    let gp = pool(&mut b, "global_pool", batch, 1, 1024, &[prev]);
+    super::fc(&mut b, "fc/logits", batch, 1024, 1000, &[gp]);
+    b.build()
+}
+
+/// Inception v2 (BN-Inception), the §4.2 case-study network: modules with
+/// four branches (1×1 · 1×1→3×3 · 1×1→3×3→3×3 · pool→1×1) and three-branch
+/// reduction modules (Fig. 5).
+pub fn inception_v2(batch: usize) -> Graph {
+    let mut b = GraphBuilder::new("inception_v2", batch);
+    let input = b.add(
+        "input",
+        crate::ops::OpKind::DataMovement { bytes: 4 * batch * 224 * 224 * 3, name: "Feed" },
+        &[],
+    );
+    // area 2 (paper Fig. 5a): sequential stem — intra-op parallelism only
+    let c1 = conv(&mut b, "conv1/7x7", batch, 112, 3, 64, 7, &[input]);
+    let p1 = pool(&mut b, "pool1", batch, 56, 64, &[c1]);
+    let c2a = conv(&mut b, "conv2/1x1", batch, 56, 64, 64, 1, &[p1]);
+    let c2 = conv(&mut b, "conv2/3x3", batch, 56, 64, 192, 3, &[c2a]);
+    let p2 = pool(&mut b, "pool2", batch, 28, 192, &[c2]);
+
+    // area 1: inception modules (4-branch) + reductions (3-branch)
+    // 4-branch spec: [1x1, r3, 3x3, r33, 3x3a(+3x3b), proj]
+    let four = |b: &mut GraphBuilder, nm: &str, hw, in_c, s: [usize; 6], prev| {
+        let branches = [
+            Branch(vec![(s[0], 1)]),
+            Branch(vec![(s[1], 1), (s[2], 3)]),
+            Branch(vec![(s[3], 1), (s[4], 3), (s[4], 3)]),
+            Branch(vec![(0, 0), (s[5], 1)]),
+        ];
+        module(b, nm, batch, hw, in_c, &branches, prev).0
+    };
+    // 3-branch reduction: [r3, 3x3/2, r33, 3x3a, 3x3b/2, pool]
+    let three = |b: &mut GraphBuilder, nm: &str, hw, in_c, s: [usize; 4], prev| {
+        let branches = [
+            Branch(vec![(s[0], 1), (s[1], 3)]),
+            Branch(vec![(s[2], 1), (s[3], 3), (s[3], 3)]),
+            Branch(vec![(0, 0)]),
+        ];
+        module(b, nm, batch, hw, in_c, &branches, prev).0
+    };
+
+    let m = four(&mut b, "inc3a", 28, 192, [64, 64, 64, 64, 96, 32], p2);
+    let m = four(&mut b, "inc3b", 28, 256, [64, 64, 96, 64, 96, 64], m);
+    let m = three(&mut b, "inc3c", 14, 320, [128, 160, 64, 96], m);
+    let m = four(&mut b, "inc4a", 14, 576, [224, 64, 96, 96, 128, 128], m);
+    let m = four(&mut b, "inc4b", 14, 576, [192, 96, 128, 96, 128, 128], m);
+    let m = four(&mut b, "inc4c", 14, 576, [160, 128, 160, 128, 160, 96], m);
+    let m = four(&mut b, "inc4d", 14, 576, [96, 128, 192, 160, 192, 96], m);
+    let m = three(&mut b, "inc4e", 7, 576, [128, 192, 192, 256], m);
+    let m = four(&mut b, "inc5a", 7, 1024, [352, 192, 320, 160, 224, 128], m);
+    let m = four(&mut b, "inc5b", 7, 1024, [352, 192, 320, 192, 224, 128], m);
+
+    let gp = pool(&mut b, "global_pool", batch, 1, 1024, &[m]);
+    super::fc(&mut b, "fc/logits", batch, 1024, 1000, &[gp]);
+    b.build()
+}
+
+/// Inception v3 (the Fig. 1 workload): 299×299 input, factorised 7×1/1×7
+/// modules; average graph width 2 (paper Table 2).
+pub fn inception_v3(batch: usize) -> Graph {
+    let mut b = GraphBuilder::new("inception_v3", batch);
+    let input = b.add(
+        "input",
+        crate::ops::OpKind::DataMovement { bytes: 4 * batch * 299 * 299 * 3, name: "Feed" },
+        &[],
+    );
+    // stem: five sequential convs (intra-op-only area)
+    let c = conv(&mut b, "stem/conv1", batch, 149, 3, 32, 3, &[input]);
+    let c = conv(&mut b, "stem/conv2", batch, 147, 32, 32, 3, &[c]);
+    let c = conv(&mut b, "stem/conv3", batch, 147, 32, 64, 3, &[c]);
+    let p = pool(&mut b, "stem/pool", batch, 73, 64, &[c]);
+    let c = conv(&mut b, "stem/conv4", batch, 73, 64, 80, 1, &[p]);
+    let c = conv(&mut b, "stem/conv5", batch, 71, 80, 192, 3, &[c]);
+    let mut prev = pool(&mut b, "stem/pool2", batch, 35, 192, &[c]);
+
+    // 3× mixed_5 (35×35): 1x1 · 1x1→5x5 · 1x1→3x3→3x3 · pool→1x1
+    let mut in_c = 192;
+    for (i, proj) in [32usize, 64, 64].iter().enumerate() {
+        let branches = [
+            Branch(vec![(64, 1)]),
+            Branch(vec![(48, 1), (64, 5)]),
+            Branch(vec![(64, 1), (96, 3), (96, 3)]),
+            Branch(vec![(0, 0), (*proj, 1)]),
+        ];
+        let (cat, c) = module(&mut b, &format!("mixed5{}", i), batch, 35, in_c, &branches, prev);
+        prev = cat;
+        in_c = 64 + 64 + 96 + proj;
+        debug_assert_eq!(in_c, c);
+    }
+
+    // reduction A (17×17): 3x3/2 · 1x1→3x3→3x3/2 · pool
+    let branches = [
+        Branch(vec![(384, 3)]),
+        Branch(vec![(64, 1), (96, 3), (96, 3)]),
+        Branch(vec![(0, 0)]),
+    ];
+    let (cat, _) = module(&mut b, "reductionA", batch, 17, in_c, &branches, prev);
+    prev = cat;
+    in_c = 384 + 96 + 288;
+
+    // 4× mixed_6 (17×17): 1x1 · 1x1→1x7→7x1 · 1x1→7x1→1x7→7x1→1x7 · pool→1x1
+    for (i, ch) in [128usize, 160, 160, 192].iter().enumerate() {
+        let c7 = *ch;
+        let branches = [
+            Branch(vec![(192, 1)]),
+            Branch(vec![(c7, 1), (c7, 7), (192, 7)]),
+            Branch(vec![(c7, 1), (c7, 7), (c7, 7), (c7, 7), (192, 7)]),
+            Branch(vec![(0, 0), (192, 1)]),
+        ];
+        let (cat, _) = module(&mut b, &format!("mixed6{}", i), batch, 17, in_c, &branches, prev);
+        prev = cat;
+        in_c = 192 * 4;
+    }
+
+    // auxiliary classifier head (part of the published v3 graph): runs in
+    // parallel with the tail of the network
+    let ap = pool(&mut b, "aux/pool", batch, 5, in_c, &[prev]);
+    let ac1 = conv(&mut b, "aux/conv1x1", batch, 5, in_c, 128, 1, &[ap]);
+    let ac2 = conv(&mut b, "aux/conv5x5", batch, 1, 128 * 25, 768, 1, &[ac1]);
+    super::fc(&mut b, "aux/fc", batch, 768, 1000, &[ac2]);
+
+    // reduction B (8×8)
+    let branches = [
+        Branch(vec![(192, 1), (320, 3)]),
+        Branch(vec![(192, 1), (192, 7), (192, 7), (192, 3)]),
+        Branch(vec![(0, 0)]),
+    ];
+    let (cat, _) = module(&mut b, "reductionB", batch, 8, in_c, &branches, prev);
+    prev = cat;
+    in_c = 320 + 192 + 768;
+
+    // 2× mixed_7 (8×8): 1x1 · 1x1→(1x3∥3x1) · 1x1→3x3→(1x3∥3x1) · pool→1x1
+    for i in 0..2 {
+        let nm = format!("mixed7{}", i);
+        let one = conv(&mut b, &format!("{nm}/b0/1x1"), batch, 8, in_c, 320, 1, &[prev]);
+        let b1r = conv(&mut b, &format!("{nm}/b1/1x1"), batch, 8, in_c, 384, 1, &[prev]);
+        let b1a = conv(&mut b, &format!("{nm}/b1/1x3"), batch, 8, 384, 384, 3, &[b1r]);
+        let b1b = conv(&mut b, &format!("{nm}/b1/3x1"), batch, 8, 384, 384, 3, &[b1r]);
+        let b2r = conv(&mut b, &format!("{nm}/b2/1x1"), batch, 8, in_c, 448, 1, &[prev]);
+        let b2m = conv(&mut b, &format!("{nm}/b2/3x3"), batch, 8, 448, 384, 3, &[b2r]);
+        let b2a = conv(&mut b, &format!("{nm}/b2/1x3"), batch, 8, 384, 384, 3, &[b2m]);
+        let b2b = conv(&mut b, &format!("{nm}/b2/3x1"), batch, 8, 384, 384, 3, &[b2m]);
+        let pp = pool(&mut b, &format!("{nm}/pool"), batch, 8, in_c, &[prev]);
+        let proj = conv(&mut b, &format!("{nm}/b3/1x1"), batch, 8, in_c, 192, 1, &[pp]);
+        in_c = 320 + 384 * 2 + 384 * 2 + 192;
+        prev = concat(
+            &mut b,
+            &format!("{nm}/concat"),
+            4 * batch * 8 * 8 * in_c,
+            &[one, b1a, b1b, b2a, b2b, proj],
+        );
+    }
+
+    let gp = pool(&mut b, "global_pool", batch, 1, in_c, &[prev]);
+    super::fc(&mut b, "fc/logits", batch, in_c, 1000, &[gp]);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::analyze_width;
+
+    #[test]
+    fn googlenet_max_width_4() {
+        let w = analyze_width(&googlenet(16));
+        assert_eq!(w.max_width, 4, "{w:?}");
+    }
+
+    #[test]
+    fn v2_has_four_branch_modules() {
+        let w = analyze_width(&inception_v2(16));
+        assert_eq!(w.max_width, 4, "{w:?}");
+        assert!(w.avg_width >= 2, "{w:?}");
+    }
+
+    #[test]
+    fn v3_avg_width_2() {
+        // paper Table 2: IncepV3 = 2
+        let w = analyze_width(&inception_v3(16));
+        assert_eq!(w.avg_width, 2, "{w:?}");
+    }
+
+    #[test]
+    fn graphs_validate() {
+        for g in [googlenet(16), inception_v2(16), inception_v3(16)] {
+            assert!(g.validate().is_ok());
+            assert!(g.total_flops() > 1e9, "{}", g.name);
+        }
+    }
+
+    #[test]
+    fn batch_scales_flops_linearly() {
+        let f1 = inception_v2(1).total_flops();
+        let f16 = inception_v2(16).total_flops();
+        assert!((f16 / f1 - 16.0).abs() < 0.01);
+    }
+}

@@ -1,0 +1,60 @@
+//! Micro-benchmarks: MatMul-N and FC stacks (the paper's §5 workloads).
+//!
+//! `MatMul-512` stands in for the FC layers of the YouTube/Facebook
+//! recommendation models (sizes 64–1k); `MatMul-4k` for Transformer's FC
+//! layers; `MatMul-8k`/`-16k` probe the UPI limit in §7.
+
+use crate::graph::{Graph, GraphBuilder};
+use crate::ops::OpKind;
+
+/// A single square `n×n×n` MatMul operator (the paper's MatMul-N).
+pub fn matmul_n(n: usize) -> Graph {
+    let mut b = GraphBuilder::new(&format!("matmul_{n}"), n);
+    let src = b.add("input", OpKind::DataMovement { bytes: 4 * n * n, name: "Feed" }, &[]);
+    b.add("matmul", OpKind::MatMul { m: n, k: n, n }, &[src]);
+    b.build()
+}
+
+/// A stack of `layers` FC layers of width `n` at `batch` (FC-512 etc.).
+pub fn fc_stack(n: usize, layers: usize, batch: usize) -> Graph {
+    let mut b = GraphBuilder::new(&format!("fc_{n}"), batch);
+    let src = b.add("input", OpKind::DataMovement { bytes: 4 * batch * n, name: "Feed" }, &[]);
+    let mut prev = src;
+    for i in 0..layers {
+        let mm = b.add(&format!("fc{i}"), OpKind::MatMul { m: batch, k: n, n }, &[prev]);
+        prev = b.add(
+            &format!("relu{i}"),
+            OpKind::Elementwise { elems: batch * n, name: "ReLU" },
+            &[mm],
+        );
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::analyze_width;
+
+    #[test]
+    fn matmul_flops() {
+        let g = matmul_n(512);
+        assert_eq!(g.total_flops(), 2.0 * 512f64.powi(3));
+    }
+
+    #[test]
+    fn fc_stack_is_chain() {
+        let g = fc_stack(4096, 3, 512);
+        let w = analyze_width(&g);
+        assert_eq!(w.max_width, 1);
+        assert_eq!(w.levels, 3);
+    }
+
+    #[test]
+    fn small_fc_stack_has_no_heavy_ops() {
+        // FC-512 at batch 16: 2*16*512*512 = 8.4 MFLOPs < threshold
+        let g = fc_stack(512, 3, 16);
+        let w = analyze_width(&g);
+        assert_eq!(w.heavy_ops, 0);
+    }
+}

@@ -1,0 +1,92 @@
+//! Model zoo: the paper's workload set as computational graphs.
+//!
+//! Vision: Inception v1/v2/v3, GoogLeNet, ResNet-50, DenseNet-121,
+//! SqueezeNet, CaffeNet (AlexNet-class), ResNeXt-50.
+//! Recommendation/translation (the §8 holdout set): NCF, Wide&Deep,
+//! Transformer. Micro: MatMul-N / FC-N (§5's MatMul-512 / MatMul-4k).
+//!
+//! Graphs encode *structure and cost*, not weights — real numerics for the
+//! serving path come from the AOT artifacts in [`crate::runtime`].
+
+pub mod caffenet;
+pub mod densenet;
+pub mod inception;
+pub mod micro;
+pub mod ncf;
+pub mod resnet;
+pub mod resnext;
+pub mod squeezenet;
+pub mod training;
+pub mod transformer;
+pub mod wide_deep;
+pub mod zoo;
+
+pub use training::to_training_graph;
+pub use zoo::{build, canonical_batch, model_names};
+
+use crate::graph::{GraphBuilder, NodeId};
+use crate::ops::OpKind;
+
+/// Shorthand: add a convolution described by its output geometry.
+pub(crate) fn conv(
+    b: &mut GraphBuilder,
+    name: &str,
+    batch: usize,
+    hw: usize,
+    in_c: usize,
+    out_c: usize,
+    k: usize,
+    deps: &[NodeId],
+) -> NodeId {
+    b.add(
+        name,
+        OpKind::Conv { batch, out_h: hw, out_w: hw, in_c, out_c, k_h: k, k_w: k },
+        deps,
+    )
+}
+
+/// Shorthand: fully-connected layer `[batch, in] @ [in, out]`.
+pub(crate) fn fc(
+    b: &mut GraphBuilder,
+    name: &str,
+    batch: usize,
+    in_f: usize,
+    out_f: usize,
+    deps: &[NodeId],
+) -> NodeId {
+    b.add(name, OpKind::MatMul { m: batch, k: in_f, n: out_f }, deps)
+}
+
+/// Shorthand: ReLU-class elementwise op sized to a conv output.
+pub(crate) fn relu(
+    b: &mut GraphBuilder,
+    name: &str,
+    batch: usize,
+    hw: usize,
+    c: usize,
+    deps: &[NodeId],
+) -> NodeId {
+    b.add(name, OpKind::Elementwise { elems: batch * hw * hw * c, name: "ReLU" }, deps)
+}
+
+/// Shorthand: max/avg pool.
+pub(crate) fn pool(
+    b: &mut GraphBuilder,
+    name: &str,
+    batch: usize,
+    hw: usize,
+    c: usize,
+    deps: &[NodeId],
+) -> NodeId {
+    b.add(name, OpKind::Pool { elems: batch * hw * hw * c }, deps)
+}
+
+/// Shorthand: concat along channels (framework-native data movement).
+pub(crate) fn concat(
+    b: &mut GraphBuilder,
+    name: &str,
+    bytes: usize,
+    deps: &[NodeId],
+) -> NodeId {
+    b.add(name, OpKind::DataMovement { bytes, name: "Concat" }, deps)
+}

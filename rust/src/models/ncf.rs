@@ -1,0 +1,87 @@
+//! Neural Collaborative Filtering (He et al., MLPerf): four parallel
+//! embedding gathers (user/item × GMF/MLP paths) feeding a small MLP.
+//! The embeddings are the heavy ops (bandwidth-bound) and sit on one level
+//! ⇒ average width 4 (paper Table 2) — the workload where model parallelism
+//! over two sockets pays off (§7.2).
+
+use crate::graph::{Graph, GraphBuilder};
+use crate::ops::OpKind;
+
+use super::fc;
+
+/// MovieLens-20M-class dimensions.
+const N_USERS: usize = 138_000;
+const N_ITEMS: usize = 27_000;
+const GMF_DIM: usize = 64;
+const MLP_DIM: usize = 128;
+
+/// Build NCF (NeuMF variant) at the given batch size.
+pub fn ncf(batch: usize) -> Graph {
+    let mut b = GraphBuilder::new("ncf", batch);
+    let ids = b.add(
+        "input_ids",
+        OpKind::DataMovement { bytes: 8 * batch * 2, name: "Feed" },
+        &[],
+    );
+    // four parallel gathers — the inter-op parallelism
+    let eu_g = b.add("emb/user_gmf", OpKind::Embedding { vocab: N_USERS, dim: GMF_DIM, rows: batch }, &[ids]);
+    let ei_g = b.add("emb/item_gmf", OpKind::Embedding { vocab: N_ITEMS, dim: GMF_DIM, rows: batch }, &[ids]);
+    let eu_m = b.add("emb/user_mlp", OpKind::Embedding { vocab: N_USERS, dim: MLP_DIM, rows: batch }, &[ids]);
+    let ei_m = b.add("emb/item_mlp", OpKind::Embedding { vocab: N_ITEMS, dim: MLP_DIM, rows: batch }, &[ids]);
+
+    // GMF path: elementwise product
+    let gmf = b.add(
+        "gmf/mul",
+        OpKind::Elementwise { elems: batch * GMF_DIM, name: "Mul" },
+        &[eu_g, ei_g],
+    );
+    // MLP path: concat + 3 FC layers (256→128→64), light at serving batch
+    let cat = b.add(
+        "mlp/concat",
+        OpKind::DataMovement { bytes: 4 * batch * 2 * MLP_DIM, name: "Concat" },
+        &[eu_m, ei_m],
+    );
+    let h1 = fc(&mut b, "mlp/fc1", batch, 2 * MLP_DIM, 256, &[cat]);
+    let h2 = fc(&mut b, "mlp/fc2", batch, 256, 128, &[h1]);
+    let h3 = fc(&mut b, "mlp/fc3", batch, 128, 64, &[h2]);
+
+    // NeuMF head: concat GMF and MLP outputs, final FC to a score
+    let head_cat = b.add(
+        "neumf/concat",
+        OpKind::DataMovement { bytes: 4 * batch * (GMF_DIM + 64), name: "Concat" },
+        &[gmf, h3],
+    );
+    fc(&mut b, "neumf/fc", batch, GMF_DIM + 64, 1, &[head_cat]);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::analyze_width;
+
+    #[test]
+    fn avg_width_4() {
+        // paper Table 2: NCF = 4
+        let w = analyze_width(&ncf(256));
+        assert_eq!(w.avg_width, 4, "{w:?}");
+        assert_eq!(w.max_width, 4, "{w:?}");
+        assert_eq!(w.levels, 1, "{w:?}");
+    }
+
+    #[test]
+    fn mlp_fcs_are_light_at_serving_batch() {
+        let g = ncf(256);
+        for n in g.nodes.iter().filter(|n| n.name.starts_with("mlp/fc")) {
+            assert!(!n.is_heavy(), "{} should be light", n.name);
+        }
+    }
+
+    #[test]
+    fn embeddings_heavy_at_any_batch() {
+        let g = ncf(1);
+        let heavy: Vec<_> = g.heavy_nodes().map(|n| n.name.clone()).collect();
+        assert_eq!(heavy.len(), 4, "{heavy:?}");
+        assert!(heavy.iter().all(|n| n.starts_with("emb/")));
+    }
+}

@@ -1,0 +1,110 @@
+//! ResNet-50 (He et al.): bottleneck residual blocks. Average width 1
+//! (paper Table 2) — the residual adds are light, so the heavy-op graph is
+//! almost a chain, with occasional 1×1 projection shortcuts (max width 2).
+
+use crate::graph::{Graph, GraphBuilder, NodeId};
+use crate::ops::OpKind;
+
+use super::{conv, fc, pool, relu};
+
+/// One bottleneck block: 1×1 reduce → 3×3 → 1×1 expand (+ projection
+/// shortcut when the geometry changes).
+#[allow(clippy::too_many_arguments)]
+fn bottleneck(
+    b: &mut GraphBuilder,
+    name: &str,
+    batch: usize,
+    hw: usize,
+    in_c: usize,
+    mid_c: usize,
+    out_c: usize,
+    project: bool,
+    input: NodeId,
+) -> NodeId {
+    let c1 = conv(b, &format!("{name}/conv1x1a"), batch, hw, in_c, mid_c, 1, &[input]);
+    let c2 = conv(b, &format!("{name}/conv3x3"), batch, hw, mid_c, mid_c, 3, &[c1]);
+    let c3 = conv(b, &format!("{name}/conv1x1b"), batch, hw, mid_c, out_c, 1, &[c2]);
+    let shortcut = if project {
+        conv(b, &format!("{name}/proj"), batch, hw, in_c, out_c, 1, &[input])
+    } else {
+        input
+    };
+    let add = b.add(
+        &format!("{name}/add"),
+        OpKind::Elementwise { elems: batch * hw * hw * out_c, name: "Add" },
+        &[c3, shortcut],
+    );
+    relu(b, &format!("{name}/relu"), batch, hw, out_c, &[add])
+}
+
+/// Build ResNet-50 at the given batch size.
+pub fn resnet50(batch: usize) -> Graph {
+    let mut b = GraphBuilder::new("resnet50", batch);
+    let input = b.add(
+        "input",
+        OpKind::DataMovement { bytes: 4 * batch * 224 * 224 * 3, name: "Feed" },
+        &[],
+    );
+    let c1 = conv(&mut b, "conv1/7x7", batch, 112, 3, 64, 7, &[input]);
+    let r1 = relu(&mut b, "relu1", batch, 112, 64, &[c1]);
+    let mut prev = pool(&mut b, "pool1", batch, 56, 64, &[r1]);
+
+    // (blocks, hw, mid_c, out_c)
+    let stages: [(usize, usize, usize, usize); 4] =
+        [(3, 56, 64, 256), (4, 28, 128, 512), (6, 14, 256, 1024), (3, 7, 512, 2048)];
+    let mut in_c = 64;
+    for (si, (blocks, hw, mid, out)) in stages.iter().enumerate() {
+        for bi in 0..*blocks {
+            let project = bi == 0;
+            prev = bottleneck(
+                &mut b,
+                &format!("stage{}/block{}", si + 2, bi),
+                batch,
+                *hw,
+                in_c,
+                *mid,
+                *out,
+                project,
+                prev,
+            );
+            in_c = *out;
+        }
+    }
+    let gp = pool(&mut b, "global_pool", batch, 1, 2048, &[prev]);
+    fc(&mut b, "fc/logits", batch, 2048, 1000, &[gp]);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::analyze_width;
+
+    #[test]
+    fn avg_width_is_1() {
+        let w = analyze_width(&resnet50(16));
+        assert_eq!(w.avg_width, 1, "{w:?}");
+    }
+
+    #[test]
+    fn projection_shortcuts_give_max_width_2() {
+        let w = analyze_width(&resnet50(16));
+        assert_eq!(w.max_width, 2, "{w:?}");
+    }
+
+    #[test]
+    fn has_53_convs_plus_fc() {
+        let g = resnet50(16);
+        let convs = g.nodes.iter().filter(|n| n.kind.name() == "Conv").count();
+        assert_eq!(convs, 1 + 16 * 3 + 4); // stem + 48 block convs + 4 proj
+    }
+
+    #[test]
+    fn flops_match_published_scale() {
+        // ResNet-50 ≈ 4.1 GFLOPs/image (2× MACs); allow wide tolerance for
+        // the simplified geometry.
+        let g = resnet50(1);
+        assert!(g.total_flops() > 5e9 && g.total_flops() < 13e9,
+                "flops={:.2e}", g.total_flops());
+    }
+}

@@ -1,0 +1,86 @@
+//! SqueezeNet (Iandola et al.): fire modules — a 1×1 squeeze conv feeding
+//! parallel 1×1 and 3×3 expand convs. Many small kernels ⇒ framework-native
+//! time dominates ⇒ the biggest intra-op-thread win in the paper's Fig. 11
+//! (4.21×) and a high programmability tax (47%).
+
+use crate::graph::{Graph, GraphBuilder, NodeId};
+use crate::ops::OpKind;
+
+use super::{concat, conv, pool};
+
+/// One fire module; returns the concat of the expand branches.
+fn fire(
+    b: &mut GraphBuilder,
+    name: &str,
+    batch: usize,
+    hw: usize,
+    in_c: usize,
+    squeeze: usize,
+    expand: usize,
+    input: NodeId,
+) -> NodeId {
+    let s = conv(b, &format!("{name}/squeeze1x1"), batch, hw, in_c, squeeze, 1, &[input]);
+    let e1 = conv(b, &format!("{name}/expand1x1"), batch, hw, squeeze, expand, 1, &[s]);
+    let e3 = conv(b, &format!("{name}/expand3x3"), batch, hw, squeeze, expand, 3, &[s]);
+    concat(b, &format!("{name}/concat"), 4 * batch * hw * hw * 2 * expand, &[e1, e3])
+}
+
+/// Build SqueezeNet v1.1 at the given batch size.
+pub fn squeezenet(batch: usize) -> Graph {
+    let mut b = GraphBuilder::new("squeezenet", batch);
+    let input = b.add(
+        "input",
+        OpKind::DataMovement { bytes: 4 * batch * 224 * 224 * 3, name: "Feed" },
+        &[],
+    );
+    let c1 = conv(&mut b, "conv1/3x3", batch, 111, 3, 64, 3, &[input]);
+    let mut prev = pool(&mut b, "pool1", batch, 55, 64, &[c1]);
+
+    // (hw, in_c, squeeze, expand)
+    let fires: [(usize, usize, usize, usize); 8] = [
+        (55, 64, 16, 64),
+        (55, 128, 16, 64),
+        (27, 128, 32, 128),
+        (27, 256, 32, 128),
+        (13, 256, 48, 192),
+        (13, 384, 48, 192),
+        (13, 384, 64, 256),
+        (13, 512, 64, 256),
+    ];
+    for (fi, (hw, in_c, s, e)) in fires.iter().enumerate() {
+        if fi == 2 || fi == 4 {
+            prev = pool(&mut b, &format!("pool{}", fi + 1), batch, *hw, *in_c, &[prev]);
+        }
+        prev = fire(&mut b, &format!("fire{}", fi + 2), batch, *hw, *in_c, *s, *e, prev);
+    }
+    let c_final = conv(&mut b, "conv10/1x1", batch, 13, 512, 1000, 1, &[prev]);
+    pool(&mut b, "global_pool", batch, 1, 1000, &[c_final]);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::analyze_width;
+
+    #[test]
+    fn fire_modules_have_width_2() {
+        let w = analyze_width(&squeezenet(16));
+        assert_eq!(w.max_width, 2, "{w:?}");
+    }
+
+    #[test]
+    fn avg_width_is_1() {
+        // paper Table 2: Squeeze = 1 (⌊26 heavy / 18 levels⌋)
+        let w = analyze_width(&squeezenet(16));
+        assert_eq!(w.avg_width, 1, "{w:?}");
+    }
+
+    #[test]
+    fn small_model_few_flops() {
+        // SqueezeNet is ~0.7 GFLOPs/image — an order less than ResNet
+        let s = squeezenet(1).total_flops();
+        let r = super::super::resnet::resnet50(1).total_flops();
+        assert!(s < r / 5.0, "squeeze={s:.2e} resnet={r:.2e}");
+    }
+}

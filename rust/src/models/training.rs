@@ -1,0 +1,134 @@
+//! Forward-graph → training-graph transform (paper §4.1).
+//!
+//! "The computational graphs of training workloads contain gradient and sum
+//! weight operators, which doubles the number of parallel operators."
+//!
+//! For each heavy forward op (in reverse topological order) we append:
+//!
+//! * a `Gradient` op — depends on the forward op and on the gradient of the
+//!   *consumer* layer (backprop chain), costing ~2× the forward FLOPs;
+//! * a `WeightSum` op — the weight-update for that layer, depending only on
+//!   the layer's gradient, hence free to run *in parallel* with the next
+//!   (earlier-layer) gradient. With large batches the gradient grows
+//!   compute-intensive while the weight sum stays fixed-size — the imbalance
+//!   the paper blames for training's best-pool count dropping at batch 128.
+
+use std::collections::HashMap;
+
+use crate::graph::{Graph, GraphBuilder, NodeId};
+use crate::ops::OpKind;
+
+/// Number of parameters (weights) a forward op trains, if any.
+fn param_count(kind: &OpKind) -> Option<usize> {
+    match *kind {
+        OpKind::MatMul { k, n, .. } => Some(k * n),
+        OpKind::Conv { in_c, out_c, k_h, k_w, .. } => Some(in_c * out_c * k_h * k_w),
+        OpKind::Embedding { vocab, dim, .. } => Some(vocab * dim),
+        _ => None,
+    }
+}
+
+/// Build the training graph for a forward graph.
+pub fn to_training_graph(fwd: &Graph) -> Graph {
+    let mut b = GraphBuilder::new(&format!("{}_train", fwd.name), fwd.batch);
+
+    // Re-insert the forward graph unchanged (ids are preserved because
+    // insertion order is identical).
+    let mut fwd_ids: Vec<NodeId> = Vec::with_capacity(fwd.len());
+    for n in fwd.topo() {
+        let deps: Vec<NodeId> = n.deps.iter().map(|d| fwd_ids[d.0]).collect();
+        fwd_ids.push(b.add(&n.name, n.kind.clone(), &deps));
+    }
+
+    // Loss head: depends on the final node.
+    let last = fwd_ids.last().copied();
+    let loss = b.add(
+        "loss",
+        OpKind::Elementwise { elems: fwd.batch.max(1) * 64, name: "Loss" },
+        last.map(|l| vec![l]).unwrap_or_default().as_slice(),
+    );
+
+    // Backward pass over heavy ops in reverse topo order. grad_of maps a
+    // forward node to its gradient node; a heavy op's gradient depends on
+    // the gradients of its heavy consumers (or the loss for outputs).
+    let consumers = fwd.consumers();
+    let mut grad_of: HashMap<usize, NodeId> = HashMap::new();
+    for n in fwd.nodes.iter().rev() {
+        if !n.is_heavy() {
+            continue;
+        }
+        // nearest heavy consumers (transitively through light ops)
+        let mut heavy_cons: Vec<NodeId> = Vec::new();
+        let mut stack: Vec<NodeId> = consumers[n.id.0].clone();
+        while let Some(c) = stack.pop() {
+            if fwd.nodes[c.0].is_heavy() {
+                if let Some(g) = grad_of.get(&c.0) {
+                    heavy_cons.push(*g);
+                }
+            } else {
+                stack.extend(consumers[c.0].iter().copied());
+            }
+        }
+        let mut deps = vec![fwd_ids[n.id.0]];
+        if heavy_cons.is_empty() {
+            deps.push(loss);
+        } else {
+            heavy_cons.sort();
+            heavy_cons.dedup();
+            deps.extend(heavy_cons);
+        }
+        let g = b.add(
+            &format!("grad/{}", n.name),
+            OpKind::Gradient { fwd_flops: n.cost.flops, fwd_bytes: n.cost.total_bytes() },
+            &deps,
+        );
+        grad_of.insert(n.id.0, g);
+        if let Some(params) = param_count(&n.kind) {
+            b.add(&format!("wsum/{}", n.name), OpKind::WeightSum { params }, &[g]);
+        }
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::analyze_width;
+    use crate::models::micro;
+
+    #[test]
+    fn training_doubles_parallel_ops() {
+        // A heavy chain has max width 1; its training graph runs each
+        // layer's weight-sum in parallel with the previous layer's gradient.
+        let fwd = micro::fc_stack(4096, 4, 512);
+        let train = to_training_graph(&fwd);
+        let wf = analyze_width(&fwd);
+        let wt = analyze_width(&train);
+        assert_eq!(wf.max_width, 1);
+        assert_eq!(wt.max_width, 2, "grad ∥ wsum should double max width");
+        assert_eq!(wt.heavy_ops, 3 * wf.heavy_ops, "grad + wsum per heavy op");
+    }
+
+    #[test]
+    fn gradient_costs_double_forward() {
+        let fwd = micro::matmul_n(1024);
+        let train = to_training_graph(&fwd);
+        let fwd_flops = fwd.total_flops();
+        // total = fwd + grad(2×) + wsum(small)
+        assert!(train.total_flops() > 2.9 * fwd_flops);
+        assert!(train.total_flops() < 3.2 * fwd_flops);
+    }
+
+    #[test]
+    fn training_graph_valid() {
+        let fwd = micro::fc_stack(4096, 3, 256);
+        assert!(to_training_graph(&fwd).validate().is_ok());
+    }
+
+    #[test]
+    fn light_graph_gets_loss_only() {
+        let fwd = micro::fc_stack(64, 2, 4); // nothing heavy
+        let train = to_training_graph(&fwd);
+        assert_eq!(train.len(), fwd.len() + 1); // + loss
+    }
+}

@@ -1,0 +1,90 @@
+//! Google's Wide & Deep recommendation model (Cheng et al.): a wide
+//! cross-feature branch and a deep branch over embedded categorical
+//! features. Three parallel embedding-class heavy ops on one level ⇒
+//! average width 3 (paper Table 2).
+
+use crate::graph::{Graph, GraphBuilder};
+use crate::ops::OpKind;
+
+use super::fc;
+
+/// Census-income-class dimensions (the published W&D benchmark).
+const WIDE_VOCAB: usize = 1_000_000; // crossed-feature hash buckets
+const CAT_VOCAB: usize = 100_000;
+const EMB_DIM: usize = 64;
+const DENSE_FEATURES: usize = 13;
+
+/// Build Wide & Deep at the given batch size.
+pub fn wide_deep(batch: usize) -> Graph {
+    let mut b = GraphBuilder::new("wide_deep", batch);
+    let ids = b.add(
+        "input_ids",
+        OpKind::DataMovement { bytes: 8 * batch * 32, name: "Feed" },
+        &[],
+    );
+    // wide path: one big hashed cross-feature lookup
+    let wide = b.add(
+        "wide/cross_emb",
+        OpKind::Embedding { vocab: WIDE_VOCAB, dim: 1, rows: batch * 16 },
+        &[ids],
+    );
+    // deep path: two grouped categorical-embedding gathers
+    let deep_a = b.add(
+        "deep/emb_group_a",
+        OpKind::Embedding { vocab: CAT_VOCAB, dim: EMB_DIM, rows: batch * 8 },
+        &[ids],
+    );
+    let deep_b = b.add(
+        "deep/emb_group_b",
+        OpKind::Embedding { vocab: CAT_VOCAB, dim: EMB_DIM, rows: batch * 8 },
+        &[ids],
+    );
+    let cat = b.add(
+        "deep/concat",
+        OpKind::DataMovement {
+            bytes: 4 * batch * (16 * EMB_DIM + DENSE_FEATURES),
+            name: "Concat",
+        },
+        &[deep_a, deep_b],
+    );
+    // deep tower: 1024→512→256, light at serving batch sizes
+    let in_f = 16 * EMB_DIM + DENSE_FEATURES;
+    let h1 = fc(&mut b, "deep/fc1", batch, in_f, 1024, &[cat]);
+    let h2 = fc(&mut b, "deep/fc2", batch, 1024, 512, &[h1]);
+    let h3 = fc(&mut b, "deep/fc3", batch, 512, 256, &[h2]);
+    // head: wide logit + deep logit
+    let head = b.add(
+        "head/concat",
+        OpKind::DataMovement { bytes: 4 * batch * (16 + 256), name: "Concat" },
+        &[wide, h3],
+    );
+    fc(&mut b, "head/logit", batch, 16 + 256, 1, &[head]);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::analyze_width;
+
+    #[test]
+    fn avg_width_3() {
+        // paper Table 2: W/D = 3
+        let w = analyze_width(&wide_deep(16));
+        assert_eq!(w.avg_width, 3, "{w:?}");
+        assert_eq!(w.max_width, 3, "{w:?}");
+    }
+
+    #[test]
+    fn deep_tower_light_at_serving_batch() {
+        let g = wide_deep(16);
+        for n in g.nodes.iter().filter(|n| n.name.starts_with("deep/fc")) {
+            assert!(!n.is_heavy(), "{}", n.name);
+        }
+    }
+
+    #[test]
+    fn validates() {
+        assert!(wide_deep(64).validate().is_ok());
+    }
+}

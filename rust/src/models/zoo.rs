@@ -1,0 +1,113 @@
+//! Model registry: name → graph builder, with the canonical batch sizes
+//! used across the paper's experiments.
+
+use crate::graph::Graph;
+
+use super::{
+    caffenet::caffenet,
+    densenet::densenet121,
+    inception::{googlenet, inception_v1, inception_v2, inception_v3},
+    micro::{fc_stack, matmul_n},
+    ncf::ncf,
+    resnet::resnet50,
+    resnext::resnext50,
+    squeezenet::squeezenet,
+    transformer::transformer,
+    wide_deep::wide_deep,
+};
+
+/// All registry names (stable order, used by CLI listings).
+pub fn model_names() -> Vec<&'static str> {
+    vec![
+        "inception_v1",
+        "inception_v2",
+        "inception_v3",
+        "googlenet",
+        "resnet50",
+        "densenet121",
+        "squeezenet",
+        "caffenet",
+        "resnext50",
+        "transformer",
+        "ncf",
+        "wide_deep",
+        "fc512",
+        "fc4k",
+        "matmul_512",
+        "matmul_4k",
+    ]
+}
+
+/// Canonical batch size per model (the sizes the paper evaluates at).
+pub fn canonical_batch(name: &str) -> usize {
+    match name {
+        "ncf" => 256,
+        "wide_deep" => 16,
+        "transformer" => 16,
+        "fc512" | "fc4k" => 512,
+        _ => 16,
+    }
+}
+
+/// Build a model graph by name; `None` for unknown names.
+pub fn build(name: &str, batch: usize) -> Option<Graph> {
+    let g = match name {
+        "inception_v1" => inception_v1(batch),
+        "inception_v2" => inception_v2(batch),
+        "inception_v3" => inception_v3(batch),
+        "googlenet" => googlenet(batch),
+        "resnet50" => resnet50(batch),
+        "densenet121" => densenet121(batch),
+        "squeezenet" => squeezenet(batch),
+        "caffenet" => caffenet(batch),
+        "resnext50" => resnext50(batch),
+        "transformer" => transformer(batch),
+        "ncf" => ncf(batch),
+        "wide_deep" => wide_deep(batch),
+        "fc512" => fc_stack(512, 3, batch),
+        "fc4k" => fc_stack(4096, 3, batch),
+        "matmul_512" => matmul_n(512),
+        "matmul_4k" => matmul_n(4096),
+        _ => return None,
+    };
+    Some(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::analyze_width;
+
+    #[test]
+    fn all_names_build_and_validate() {
+        for name in model_names() {
+            let g = build(name, canonical_batch(name)).unwrap_or_else(|| panic!("{name}"));
+            assert!(g.validate().is_ok(), "{name}");
+            assert!(!g.is_empty(), "{name}");
+        }
+    }
+
+    #[test]
+    fn unknown_name_is_none() {
+        assert!(build("bert", 1).is_none());
+    }
+
+    #[test]
+    fn table2_average_widths() {
+        // The paper's Table 2 (evaluation set, canonical batches).
+        let expect = [
+            ("densenet121", 1),
+            ("squeezenet", 1),
+            ("resnet50", 1),
+            ("inception_v3", 2),
+            ("wide_deep", 3),
+            ("ncf", 4),
+            ("transformer", 4),
+        ];
+        for (name, want) in expect {
+            let g = build(name, canonical_batch(name)).unwrap();
+            let w = analyze_width(&g);
+            assert_eq!(w.avg_width, want, "{name}: {w:?}");
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! Operator cost descriptors.
+//!
+//! The key modelling decision (from the paper's §5.1): a GEMM of size
+//! `n×n×n` does `O(n³)` FLOPs but its framework-native preparation work is
+//! `O(n)`–`O(n²)` *bytes* — an Amdahl serial term that dominates once the
+//! kernel is spread over 24 cores. `prep_bytes` carries that term; the
+//! simulator turns it into serial (MatMul1) or intra-op-parallel (MatMul2)
+//! time.
+
+use super::kind::OpKind;
+use super::HEAVY_FLOPS_THRESHOLD;
+
+/// Cost descriptor attached to every graph node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpCost {
+    /// Floating-point operations of the kernel body.
+    pub flops: f64,
+    /// Bytes read by the kernel (inputs + weights).
+    pub input_bytes: f64,
+    /// Bytes written (outputs).
+    pub output_bytes: f64,
+    /// Framework-native data-preparation bytes touched before the kernel
+    /// runs (tensor validation, layout conversion, im2col staging, argument
+    /// marshalling). The paper's "TF data preparation".
+    pub prep_bytes: f64,
+    /// Library-internal data-preparation bytes (packing/format conversion
+    /// inside MKL — the serial term of Fig. 10's "MKL data prep").
+    pub lib_prep_bytes: f64,
+}
+
+impl OpCost {
+    /// Zero-cost descriptor (control-flow nodes).
+    pub fn zero() -> Self {
+        OpCost { flops: 0.0, input_bytes: 0.0, output_bytes: 0.0, prep_bytes: 0.0, lib_prep_bytes: 0.0 }
+    }
+
+    /// Derive the descriptor for an operator kind.
+    pub fn of(kind: &OpKind) -> Self {
+        const F: f64 = 4.0; // f32 bytes
+        match *kind {
+            OpKind::MatMul { m, k, n } => {
+                let flops = 2.0 * m as f64 * k as f64 * n as f64;
+                let in_b = F * (m as f64 * k as f64 + k as f64 * n as f64);
+                let out_b = F * m as f64 * n as f64;
+                OpCost {
+                    flops,
+                    input_bytes: in_b,
+                    output_bytes: out_b,
+                    // marshalling + validation touches the activation matrix
+                    prep_bytes: F * m as f64 * k as f64,
+                    // kernel packs both operands into its blocked format
+                    lib_prep_bytes: 0.5 * (in_b + out_b),
+                }
+            }
+            OpKind::Conv { batch, out_h, out_w, in_c, out_c, k_h, k_w } => {
+                // im2col GEMM: [batch*oh*ow, ic*kh*kw] @ [ic*kh*kw, oc]
+                let m = (batch * out_h * out_w) as f64;
+                let k = (in_c * k_h * k_w) as f64;
+                let n = out_c as f64;
+                let flops = 2.0 * m * k * n;
+                let in_b = F * (m * k + k * n);
+                OpCost {
+                    flops,
+                    input_bytes: in_b,
+                    output_bytes: F * m * n,
+                    // im2col materialisation is the framework prep
+                    prep_bytes: F * m * k,
+                    lib_prep_bytes: 0.25 * in_b,
+                }
+            }
+            OpKind::Embedding { dim, rows, .. } => {
+                let bytes = F * (rows * dim) as f64;
+                OpCost {
+                    // a gather does no real FLOPs; count one op/element
+                    flops: (rows * dim) as f64,
+                    input_bytes: bytes,
+                    output_bytes: bytes,
+                    prep_bytes: F * rows as f64 * 8.0, // index marshalling
+                    lib_prep_bytes: 0.0,
+                }
+            }
+            OpKind::Elementwise { elems, .. } => OpCost {
+                flops: elems as f64,
+                input_bytes: F * elems as f64,
+                output_bytes: F * elems as f64,
+                prep_bytes: F * 16.0,
+                lib_prep_bytes: 0.0,
+            },
+            OpKind::DataMovement { bytes, .. } => OpCost {
+                flops: 0.0,
+                input_bytes: bytes as f64,
+                output_bytes: bytes as f64,
+                prep_bytes: bytes as f64,
+                lib_prep_bytes: 0.0,
+            },
+            OpKind::Pool { elems } => OpCost {
+                flops: elems as f64,
+                input_bytes: F * elems as f64,
+                output_bytes: F * elems as f64 / 4.0,
+                prep_bytes: F * 16.0,
+                lib_prep_bytes: 0.0,
+            },
+            OpKind::Softmax { rows, cols } => {
+                let e = (rows * cols) as f64;
+                OpCost {
+                    flops: 5.0 * e,
+                    input_bytes: F * e,
+                    output_bytes: F * e,
+                    prep_bytes: F * 16.0,
+                    lib_prep_bytes: 0.0,
+                }
+            }
+            OpKind::Gradient { fwd_flops, fwd_bytes } => OpCost {
+                flops: 2.0 * fwd_flops,
+                input_bytes: 2.0 * fwd_bytes,
+                output_bytes: fwd_bytes,
+                prep_bytes: 0.5 * fwd_bytes,
+                lib_prep_bytes: 0.5 * fwd_bytes,
+            },
+            OpKind::WeightSum { params } => OpCost {
+                flops: 2.0 * params as f64,
+                input_bytes: 2.0 * F * params as f64,
+                output_bytes: F * params as f64,
+                prep_bytes: F * 64.0,
+                lib_prep_bytes: 0.0,
+            },
+        }
+    }
+
+    /// Heavy-operator classification for the width analysis (paper §8):
+    /// compute-intensive (FLOPs over threshold) or an embedding.
+    pub fn is_heavy(kind: &OpKind) -> bool {
+        match kind {
+            OpKind::Embedding { .. } => true,
+            // optimizer-update ops sit on the training step's critical path
+            // and are what the paper schedules in parallel with gradients
+            OpKind::WeightSum { .. } => true,
+            _ => Self::of(kind).flops >= HEAVY_FLOPS_THRESHOLD,
+        }
+    }
+
+    /// Total bytes moved through memory by the kernel.
+    pub fn total_bytes(&self) -> f64 {
+        self.input_bytes + self.output_bytes
+    }
+
+    /// Arithmetic intensity (FLOPs per byte) — used by the roofline check.
+    pub fn intensity(&self) -> f64 {
+        if self.total_bytes() == 0.0 {
+            0.0
+        } else {
+            self.flops / self.total_bytes()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_flops_cubic() {
+        let c = OpCost::of(&OpKind::MatMul { m: 512, k: 512, n: 512 });
+        assert_eq!(c.flops, 2.0 * 512f64.powi(3));
+        // prep is O(n²) while flops are O(n³): the Amdahl term shrinks
+        let c4k = OpCost::of(&OpKind::MatMul { m: 4096, k: 4096, n: 4096 });
+        assert!(c4k.prep_bytes / c4k.flops < c.prep_bytes / c.flops);
+    }
+
+    #[test]
+    fn conv_equals_im2col_gemm() {
+        let conv = OpCost::of(&OpKind::Conv {
+            batch: 16, out_h: 56, out_w: 56, in_c: 64, out_c: 64, k_h: 3, k_w: 3,
+        });
+        let gemm = OpCost::of(&OpKind::MatMul { m: 16 * 56 * 56, k: 64 * 9, n: 64 });
+        assert_eq!(conv.flops, gemm.flops);
+    }
+
+    #[test]
+    fn embedding_always_heavy() {
+        let small_emb = OpKind::Embedding { vocab: 1000, dim: 16, rows: 4 };
+        assert!(OpCost::is_heavy(&small_emb));
+        assert!(OpCost::of(&small_emb).flops < HEAVY_FLOPS_THRESHOLD);
+    }
+
+    #[test]
+    fn light_ops_not_heavy() {
+        assert!(!OpCost::is_heavy(&OpKind::Elementwise { elems: 100, name: "ReLU" }));
+        assert!(!OpCost::is_heavy(&OpKind::MatMul { m: 16, k: 256, n: 256 }));
+    }
+
+    #[test]
+    fn big_matmul_heavy() {
+        assert!(OpCost::is_heavy(&OpKind::MatMul { m: 512, k: 512, n: 512 }));
+    }
+
+    #[test]
+    fn gradient_doubles_forward() {
+        let g = OpCost::of(&OpKind::Gradient { fwd_flops: 1e9, fwd_bytes: 1e6 });
+        assert_eq!(g.flops, 2e9);
+    }
+
+    #[test]
+    fn intensity_positive_for_matmul() {
+        let c = OpCost::of(&OpKind::MatMul { m: 128, k: 128, n: 128 });
+        assert!(c.intensity() > 1.0);
+    }
+}

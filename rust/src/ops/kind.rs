@@ -1,0 +1,91 @@
+//! Operator kinds.
+
+/// The operator vocabulary of the model zoo.
+///
+/// Shapes use the paper's conventions: activations are
+/// `[batch × features]`, convolutions are described by their im2col-GEMM
+/// equivalent (the paper notes Caffe2/TF convert Conv to MatMul via
+/// `im2col()`, §4.2).
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    /// Dense GEMM: `[m,k] @ [k,n]`.
+    MatMul { m: usize, k: usize, n: usize },
+    /// Convolution, described by its im2col GEMM: output pixels ×
+    /// (kernel window) × output channels.
+    Conv {
+        batch: usize,
+        out_h: usize,
+        out_w: usize,
+        in_c: usize,
+        out_c: usize,
+        k_h: usize,
+        k_w: usize,
+    },
+    /// Embedding-table gather: `rows` lookups of `dim` floats from a table
+    /// of `vocab` rows. Bandwidth-bound; always a heavy op for width
+    /// analysis (paper §8).
+    Embedding { vocab: usize, dim: usize, rows: usize },
+    /// Elementwise math (ReLU, add, batchnorm apply, ...) over `elems`.
+    Elementwise { elems: usize, name: &'static str },
+    /// Tensor concat/reshape/transpose-class data movement.
+    DataMovement { bytes: usize, name: &'static str },
+    /// Pooling windows (cheap, bandwidth-ish).
+    Pool { elems: usize },
+    /// Softmax over `rows × cols`.
+    Softmax { rows: usize, cols: usize },
+    /// Backward gradient of a heavy op (training graphs, paper §4.1):
+    /// roughly 2× the forward FLOPs.
+    Gradient { fwd_flops: f64, fwd_bytes: f64 },
+    /// Weight-sum / optimizer-apply over `params` parameters (training).
+    WeightSum { params: usize },
+}
+
+impl OpKind {
+    /// Short display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::MatMul { .. } => "MatMul",
+            OpKind::Conv { .. } => "Conv",
+            OpKind::Embedding { .. } => "Embedding",
+            OpKind::Elementwise { name, .. } => name,
+            OpKind::DataMovement { name, .. } => name,
+            OpKind::Pool { .. } => "Pool",
+            OpKind::Softmax { .. } => "Softmax",
+            OpKind::Gradient { .. } => "Gradient",
+            OpKind::WeightSum { .. } => "WeightSum",
+        }
+    }
+
+    /// True for kinds the scheduler treats as library-kernel work
+    /// (dispatched to MKL/MKL-DNN/Eigen); false for framework-native ops.
+    pub fn uses_library_kernel(&self) -> bool {
+        matches!(
+            self,
+            OpKind::MatMul { .. }
+                | OpKind::Conv { .. }
+                | OpKind::Gradient { .. }
+                | OpKind::Embedding { .. }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names() {
+        assert_eq!(OpKind::MatMul { m: 1, k: 1, n: 1 }.name(), "MatMul");
+        assert_eq!(
+            OpKind::Elementwise { elems: 10, name: "ReLU" }.name(),
+            "ReLU"
+        );
+    }
+
+    #[test]
+    fn library_kernel_classification() {
+        assert!(OpKind::MatMul { m: 8, k: 8, n: 8 }.uses_library_kernel());
+        assert!(!OpKind::Pool { elems: 100 }.uses_library_kernel());
+        assert!(!OpKind::DataMovement { bytes: 4, name: "Concat" }.uses_library_kernel());
+    }
+}

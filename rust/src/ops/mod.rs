@@ -1,0 +1,19 @@
+//! Operators: the building blocks of the computational graph.
+//!
+//! Each operator carries a [`cost::OpCost`] descriptor — FLOPs, bytes moved,
+//! and the framework-native data-preparation work that the paper's §5
+//! identifies as the "programmability tax". The simulator consumes these
+//! descriptors; it never executes real tensors (real numerics go through
+//! [`crate::runtime`]).
+
+pub mod cost;
+pub mod kind;
+
+pub use cost::OpCost;
+pub use kind::OpKind;
+
+/// FLOPs threshold above which an operator counts as *heavy* for the
+/// paper's width analysis (§8: "a heavy operator is a compute-intensive or
+/// embedding operator"). Embeddings are always heavy regardless of FLOPs
+/// (they are bandwidth-bound, not FLOP-bound).
+pub const HEAVY_FLOPS_THRESHOLD: f64 = 50.0e6;

@@ -1,0 +1,312 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.
+//!
+//! `make artifacts` writes `artifacts/manifest.json` describing every
+//! exported HLO module: input shapes, the deterministic input-generation
+//! rule, and an expected-output digest the integration tests verify
+//! numerics against (cross-language, within float32 tolerance).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// A dense f32 tensor (host side).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    /// Dimension sizes.
+    pub shape: Vec<usize>,
+    /// Row-major data; `len == shape.product()`.
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// Deterministic input: `x[i] = sin(i*0.9898 + tag*78.233) * scale`,
+/// computed in f32 exactly like `compile.aot.gen_input`.
+pub fn gen_input(tag: u32, shape: &[usize], scale: f32) -> Tensor {
+    let n: usize = shape.iter().product();
+    let data = (0..n)
+        .map(|i| (i as f32 * 0.9898f32 + tag as f32 * 78.233f32).sin() * scale)
+        .collect();
+    Tensor { shape: shape.to_vec(), data }
+}
+
+/// How an input tensor is generated (mirrors `compile.aot.materialize`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum GenRule {
+    /// Deterministic sin rule with (tag, scale).
+    Det { tag: u32, scale: f32 },
+    /// Constant fill (layer-norm gammas/betas).
+    Fill(f32),
+}
+
+/// Input descriptor in the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InputSpec {
+    /// Tensor shape.
+    pub shape: Vec<usize>,
+    /// Generation rule.
+    pub rule: GenRule,
+}
+
+impl InputSpec {
+    /// Materialise the deterministic input tensor.
+    pub fn generate(&self) -> Tensor {
+        match self.rule {
+            GenRule::Det { tag, scale } => gen_input(tag, &self.shape, scale),
+            GenRule::Fill(v) => Tensor {
+                shape: self.shape.clone(),
+                data: vec![v; self.shape.iter().product()],
+            },
+        }
+    }
+}
+
+/// Expected-output digest (computed by the exporter).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Digest {
+    /// First elements of the flattened output.
+    pub prefix: Vec<f64>,
+    /// Sum over all elements.
+    pub sum: f64,
+    /// Sum of absolute values.
+    pub abs_sum: f64,
+    /// Element count.
+    pub count: usize,
+}
+
+impl Digest {
+    /// Verify a flattened output against this digest (f32-tolerant).
+    pub fn verify(&self, out: &[f32]) -> Result<()> {
+        if out.len() != self.count {
+            bail!("output count {} != expected {}", out.len(), self.count);
+        }
+        let tol = |expected: f64| 1e-3 * expected.abs().max(1.0);
+        for (i, (&got, want)) in out.iter().zip(self.prefix.iter()).enumerate() {
+            if (got as f64 - want).abs() > tol(*want).max(2e-3) {
+                bail!("prefix[{i}]: got {got} want {want}");
+            }
+        }
+        let sum: f64 = out.iter().map(|&v| v as f64).sum();
+        // sums accumulate rounding over `count` elements
+        let sum_tol = self.abs_sum * 1e-5 + 1e-3;
+        if (sum - self.sum).abs() > sum_tol {
+            bail!("sum: got {sum} want {} (tol {sum_tol})", self.sum);
+        }
+        Ok(())
+    }
+}
+
+/// One exported model/bucket.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    /// Artifact name ("mlp_b4").
+    pub name: String,
+    /// HLO text file name within the artifacts dir.
+    pub file: String,
+    /// Model family ("mlp", "transformer", "matmul").
+    pub kind: String,
+    /// Batch bucket (rows for mlp, sequences for transformer; 0 for
+    /// micro-benchmarks).
+    pub batch: usize,
+    /// Input descriptors.
+    pub inputs: Vec<InputSpec>,
+    /// Output shape.
+    pub output_shape: Vec<usize>,
+    /// Expected-output digest.
+    pub expected: Digest,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Directory the artifacts live in.
+    pub dir: PathBuf,
+    /// All exported artifacts.
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text.
+    pub fn parse(dir: &Path, text: &str) -> Result<Self> {
+        let doc = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let version = doc.get("version").and_then(Json::as_usize).unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let arts = doc
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest missing artifacts")?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            artifacts.push(parse_entry(a)?);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Find an artifact by name.
+    pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// All batch buckets for a model kind, ascending.
+    pub fn buckets(&self, kind: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == kind)
+            .map(|a| a.batch)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Smallest bucket that fits `n` requests (or the largest bucket).
+    pub fn bucket_for(&self, kind: &str, n: usize) -> Option<usize> {
+        let buckets = self.buckets(kind);
+        buckets.iter().copied().find(|&b| b >= n).or(buckets.last().copied())
+    }
+
+    /// Artifact for a (kind, bucket) pair.
+    pub fn artifact_for(&self, kind: &str, bucket: usize) -> Option<&ArtifactEntry> {
+        self.artifacts.iter().find(|a| a.kind == kind && a.batch == bucket)
+    }
+}
+
+fn parse_entry(a: &Json) -> Result<ArtifactEntry> {
+    let str_field = |k: &str| -> Result<String> {
+        Ok(a.get(k)
+            .and_then(Json::as_str)
+            .with_context(|| format!("artifact missing {k}"))?
+            .to_string())
+    };
+    let shape_of = |v: &Json| -> Vec<usize> {
+        v.as_arr()
+            .map(|arr| arr.iter().filter_map(Json::as_usize).collect())
+            .unwrap_or_default()
+    };
+    let inputs = a
+        .get("inputs")
+        .and_then(Json::as_arr)
+        .context("artifact missing inputs")?
+        .iter()
+        .map(|i| -> Result<InputSpec> {
+            let rule = if let Some(fill) = i.get("fill").and_then(Json::as_f64) {
+                GenRule::Fill(fill as f32)
+            } else {
+                GenRule::Det {
+                    tag: i.get("tag").and_then(Json::as_usize).unwrap_or(0) as u32,
+                    scale: i.get("scale").and_then(Json::as_f64).unwrap_or(1.0) as f32,
+                }
+            };
+            Ok(InputSpec {
+                shape: shape_of(i.get("shape").context("input missing shape")?),
+                rule,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let exp = a.get("expected").context("artifact missing expected")?;
+    let expected = Digest {
+        prefix: exp
+            .get("prefix")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(Json::as_f64)
+            .collect(),
+        sum: exp.get("sum").and_then(Json::as_f64).unwrap_or(0.0),
+        abs_sum: exp.get("abs_sum").and_then(Json::as_f64).unwrap_or(0.0),
+        count: exp.get("count").and_then(Json::as_usize).unwrap_or(0),
+    };
+    Ok(ArtifactEntry {
+        name: str_field("name")?,
+        file: str_field("file")?,
+        kind: str_field("kind")?,
+        batch: a.get("batch").and_then(Json::as_usize).unwrap_or(0),
+        inputs,
+        output_shape: a.get("output_shape").map(shape_of).unwrap_or_default(),
+        expected,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "mlp_b2", "file": "mlp_b2.hlo.txt", "kind": "mlp", "batch": 2,
+         "inputs": [{"shape": [2, 256], "tag": 7, "scale": 1.0}],
+         "output_shape": [2, 8],
+         "expected": {"prefix": [0.5, -0.25], "sum": 1.0, "abs_sum": 4.0, "count": 16}},
+        {"name": "mlp_b4", "file": "mlp_b4.hlo.txt", "kind": "mlp", "batch": 4,
+         "inputs": [{"shape": [4, 256], "tag": 7, "scale": 1.0}],
+         "output_shape": [4, 8],
+         "expected": {"prefix": [], "sum": 0.0, "abs_sum": 0.0, "count": 32}}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.get("mlp_b2").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![2, 256]);
+        assert_eq!(a.expected.count, 16);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert_eq!(m.buckets("mlp"), vec![2, 4]);
+        assert_eq!(m.bucket_for("mlp", 1), Some(2));
+        assert_eq!(m.bucket_for("mlp", 3), Some(4));
+        assert_eq!(m.bucket_for("mlp", 9), Some(4)); // clamp to largest
+        assert_eq!(m.bucket_for("resnet", 1), None);
+    }
+
+    #[test]
+    fn gen_input_matches_python_pipeline() {
+        // values from compile.aot.gen_input(7, (3,), 2.0)
+        let t = gen_input(7, &[3], 2.0);
+        let want = [1.676_275f32, 1.831_945_7, 0.334_655_7];
+        for (g, w) in t.data.iter().zip(want.iter()) {
+            assert!((g - w).abs() < 2e-5, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn digest_verify_catches_mismatch() {
+        let d = Digest { prefix: vec![1.0, 2.0], sum: 3.0, abs_sum: 3.0, count: 2 };
+        assert!(d.verify(&[1.0, 2.0]).is_ok());
+        assert!(d.verify(&[1.0, 2.5]).is_err());
+        assert!(d.verify(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        assert!(Manifest::parse(Path::new("/tmp"), r#"{"version": 2, "artifacts": []}"#).is_err());
+    }
+}

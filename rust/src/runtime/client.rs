@@ -1,0 +1,149 @@
+//! PJRT execution: HLO-text artifacts → compiled executables → results.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1). Gotchas handled here (see
+//! /opt/xla-example/README.md):
+//!
+//! * artifacts are HLO **text**; `HloModuleProto::from_text_file` reassigns
+//!   instruction ids, avoiding the 64-bit-id proto incompatibility;
+//! * the exporter lowers with `return_tuple=True`, so results unwrap with
+//!   `to_tuple1`;
+//! * `PjRtClient`/`PjRtLoadedExecutable` are not `Sync` — the coordinator
+//!   confines a `ModelRuntime` to one executor thread and feeds it work
+//!   over channels.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifact::{ArtifactEntry, Manifest, Tensor};
+
+/// A loaded set of model executables on one PJRT client.
+pub struct ModelRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl ModelRuntime {
+    /// Load every artifact in `dir` (compiling each HLO module).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        Self::load_filtered(manifest, |_| true)
+    }
+
+    /// Load only artifacts matching a predicate (e.g. one model family) —
+    /// compilation is the slow part, so the coordinator loads what it
+    /// serves.
+    pub fn load_some(dir: &Path, pred: impl Fn(&ArtifactEntry) -> bool) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        Self::load_filtered(manifest, pred)
+    }
+
+    fn load_filtered(
+        manifest: Manifest,
+        pred: impl Fn(&ArtifactEntry) -> bool,
+    ) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut executables = HashMap::new();
+        for entry in manifest.artifacts.iter().filter(|e| pred(e)) {
+            let path = manifest.dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", entry.name))?;
+            executables.insert(entry.name.clone(), exe);
+        }
+        Ok(ModelRuntime { client, manifest, executables })
+    }
+
+    /// The artifact manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Names of the loaded executables.
+    pub fn loaded(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.executables.keys().map(String::as_str).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute a loaded artifact with the given inputs; returns the
+    /// flattened f32 output of the first tuple element.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Tensor> {
+        let entry = self
+            .manifest
+            .get(name)
+            .with_context(|| format!("unknown artifact '{name}'"))?;
+        let exe = self
+            .executables
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not loaded"))?;
+        if inputs.len() != entry.inputs.len() {
+            anyhow::bail!(
+                "'{name}' expects {} inputs, got {}",
+                entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (t, spec) in inputs.iter().zip(entry.inputs.iter()) {
+            if t.shape != spec.shape {
+                anyhow::bail!("'{name}' input shape {:?} != expected {:?}", t.shape, spec.shape);
+            }
+            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&t.data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute '{name}': {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let data = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        Ok(Tensor { shape: entry.output_shape.clone(), data })
+    }
+
+    /// Execute with a caller-supplied activation `x`; all remaining inputs
+    /// (the model weights) are regenerated from the manifest's
+    /// deterministic rules. This is the serving entry point: the request
+    /// supplies only the data, the weights are fixed.
+    pub fn execute_x(&self, name: &str, x: Tensor) -> Result<Tensor> {
+        let entry = self
+            .manifest
+            .get(name)
+            .with_context(|| format!("unknown artifact '{name}'"))?;
+        let mut inputs = Vec::with_capacity(entry.inputs.len());
+        inputs.push(x);
+        for spec in entry.inputs.iter().skip(1) {
+            inputs.push(spec.generate());
+        }
+        self.execute(name, &inputs)
+    }
+
+    /// Run an artifact on its manifest-declared deterministic inputs and
+    /// verify the output digest — the cross-language numerics check.
+    pub fn self_check(&self, name: &str) -> Result<()> {
+        let entry = self
+            .manifest
+            .get(name)
+            .with_context(|| format!("unknown artifact '{name}'"))?;
+        let inputs: Vec<Tensor> = entry.inputs.iter().map(|s| s.generate()).collect();
+        let out = self.execute(name, &inputs)?;
+        entry
+            .expected
+            .verify(&out.data)
+            .with_context(|| format!("digest mismatch for '{name}'"))
+    }
+}

@@ -1,0 +1,13 @@
+//! Runtime: loads the AOT-compiled JAX/Pallas artifacts (HLO text) and
+//! executes them on the PJRT CPU client — the only place real numerics
+//! happen in the Rust layer. Python never runs on this path.
+//!
+//! * [`artifact`] — `artifacts/manifest.json` schema + deterministic input
+//!   generation (mirrors `python/compile/aot.py`).
+//! * [`client`] — the `xla` crate wrapper: HLO text → compile → execute.
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{gen_input, ArtifactEntry, Manifest, Tensor};
+pub use client::ModelRuntime;

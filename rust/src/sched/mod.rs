@@ -1,0 +1,10 @@
+//! Operator-scheduling building blocks shared by the simulator's engine
+//! and the serving coordinator: pool partitioning (how physical cores are
+//! split into inter-op pools, paper Fig. 3c) and the topological ready
+//! queue that implements asynchronous scheduling.
+
+pub mod partition;
+pub mod ready;
+
+pub use partition::{partition_pools, PoolAssignment};
+pub use ready::ReadyQueue;

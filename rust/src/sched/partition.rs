@@ -1,0 +1,97 @@
+//! Splitting the machine into inter-op pools (paper Fig. 3c).
+//!
+//! Pools receive contiguous, equal ranges of physical cores. In
+//! model-parallel mode pools are aligned to sockets where possible
+//! (paper §7.2: "two inter-op pools, one per CPU socket").
+
+use crate::config::{CpuPlatform, FrameworkConfig, ParallelismMode};
+
+/// One pool's slice of the machine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PoolAssignment {
+    /// First physical core.
+    pub first_core: usize,
+    /// Number of physical cores.
+    pub cores: usize,
+    /// Whether the range crosses a socket boundary.
+    pub spans_sockets: bool,
+    /// Number of sockets covered.
+    pub sockets_used: usize,
+}
+
+/// Partition the platform for a framework setting. The pool count is
+/// clamped to the physical core count (additional pools could never run
+/// concurrently anyway; over-threading is penalised separately).
+pub fn partition_pools(platform: &CpuPlatform, cfg: &FrameworkConfig) -> Vec<PoolAssignment> {
+    let phys = platform.physical_cores();
+    let pools = cfg.inter_op_pools.max(1).min(phys.max(1));
+    let cpp = (phys / pools).max(1);
+    (0..pools)
+        .map(|p| {
+            let first = match cfg.parallelism {
+                // model-parallel: round-robin pools over sockets so pool i
+                // lands on socket i % sockets when sizes allow
+                ParallelismMode::ModelParallel if pools % platform.sockets == 0 => {
+                    let per_socket = pools / platform.sockets;
+                    let socket = p % platform.sockets;
+                    let slot = p / platform.sockets;
+                    socket * platform.cores_per_socket + slot * cpp.min(platform.cores_per_socket / per_socket.max(1))
+                }
+                _ => p * cpp,
+            };
+            let last = (first + cpp - 1).min(phys - 1);
+            let spans = platform.sockets > 1 && platform.socket_of(first) != platform.socket_of(last);
+            PoolAssignment {
+                first_core: first,
+                cores: cpp,
+                spans_sockets: spans,
+                sockets_used: if spans { 2 } else { 1 },
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FrameworkConfig;
+
+    #[test]
+    fn even_split_single_socket() {
+        let p = CpuPlatform::large();
+        let mut cfg = FrameworkConfig::tuned_default();
+        cfg.inter_op_pools = 3;
+        let pools = partition_pools(&p, &cfg);
+        assert_eq!(pools.len(), 3);
+        assert!(pools.iter().all(|a| a.cores == 8));
+        assert_eq!(pools[1].first_core, 8);
+        assert!(pools.iter().all(|a| !a.spans_sockets));
+    }
+
+    #[test]
+    fn one_pool_spans_two_sockets() {
+        let p = CpuPlatform::large2();
+        let cfg = FrameworkConfig { inter_op_pools: 1, ..FrameworkConfig::tuned_default() };
+        let pools = partition_pools(&p, &cfg);
+        assert_eq!(pools.len(), 1);
+        assert!(pools[0].spans_sockets);
+        assert_eq!(pools[0].sockets_used, 2);
+    }
+
+    #[test]
+    fn two_pools_align_to_sockets() {
+        let p = CpuPlatform::large2();
+        let cfg = FrameworkConfig { inter_op_pools: 2, ..FrameworkConfig::tuned_default() };
+        let pools = partition_pools(&p, &cfg);
+        assert_eq!(pools[0].first_core, 0);
+        assert_eq!(pools[1].first_core, 24);
+        assert!(pools.iter().all(|a| !a.spans_sockets));
+    }
+
+    #[test]
+    fn pool_count_clamped_to_cores() {
+        let p = CpuPlatform::small();
+        let cfg = FrameworkConfig { inter_op_pools: 100, ..FrameworkConfig::tuned_default() };
+        assert_eq!(partition_pools(&p, &cfg).len(), 4);
+    }
+}

@@ -1,0 +1,197 @@
+//! Time-accounting categories, per-core timelines and aggregate breakdowns
+//! — the simulator's equivalent of the paper's `perf record` stack bars
+//! (Figs. 1, 7, 10, 11, 12, 15, 17) and execution traces (Fig. 8).
+
+/// What a logical core is doing during a segment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Category {
+    /// Library kernel floating-point work (the MKL/MKL-DNN/Eigen body).
+    MklCompute,
+    /// Library-internal data preparation (packing, layout).
+    MklPrep,
+    /// Framework-native data preparation for a kernel (the "TF data prep"
+    /// the paper blames for poor scaling).
+    FwPrep,
+    /// Framework-native operator execution (control flow, reshape, concat).
+    FwNative,
+    /// Operator-scheduling overhead (thread-pool dispatch, wake-ups).
+    FwSched,
+    /// Waiting at an intra-op barrier for peers to finish.
+    Barrier,
+    /// Cross-socket UPI transfer time.
+    UpiTransfer,
+    /// Nothing scheduled on this core.
+    Idle,
+}
+
+impl Category {
+    /// All categories, in stack-bar display order.
+    pub const ALL: [Category; 8] = [
+        Category::MklCompute,
+        Category::MklPrep,
+        Category::FwPrep,
+        Category::FwNative,
+        Category::FwSched,
+        Category::Barrier,
+        Category::UpiTransfer,
+        Category::Idle,
+    ];
+
+    /// Display label matching the paper's figures.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Category::MklCompute => "MKL compute",
+            Category::MklPrep => "MKL data prep",
+            Category::FwPrep => "TF data prep",
+            Category::FwNative => "TF native ops",
+            Category::FwSched => "scheduling",
+            Category::Barrier => "barrier/sync",
+            Category::UpiTransfer => "UPI transfer",
+            Category::Idle => "idle",
+        }
+    }
+
+    fn index(&self) -> usize {
+        Category::ALL.iter().position(|c| c == self).unwrap()
+    }
+}
+
+/// One contiguous activity on one logical core.
+#[derive(Debug, Clone)]
+pub struct Segment {
+    /// Start time (seconds).
+    pub t0: f64,
+    /// End time (seconds).
+    pub t1: f64,
+    /// Activity class.
+    pub cat: Category,
+    /// Index of the graph node responsible (usize::MAX for idle).
+    pub op: usize,
+}
+
+impl Segment {
+    /// Segment duration.
+    pub fn dur(&self) -> f64 {
+        self.t1 - self.t0
+    }
+}
+
+/// Aggregate seconds per category (summed over cores).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Breakdown {
+    secs: [f64; 8],
+}
+
+impl Breakdown {
+    /// Empty breakdown.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Accumulate `dur` seconds of `cat`.
+    pub fn add(&mut self, cat: Category, dur: f64) {
+        self.secs[cat.index()] += dur;
+    }
+
+    /// Seconds spent in a category.
+    pub fn get(&self, cat: Category) -> f64 {
+        self.secs[cat.index()]
+    }
+
+    /// Total accounted core-seconds.
+    pub fn total(&self) -> f64 {
+        self.secs.iter().sum()
+    }
+
+    /// Fraction of total core-time in a category (0 if empty).
+    pub fn frac(&self, cat: Category) -> f64 {
+        let t = self.total();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.get(cat) / t
+        }
+    }
+
+    /// Busy (non-idle, non-barrier) fraction.
+    pub fn busy_frac(&self) -> f64 {
+        1.0 - self.frac(Category::Idle) - self.frac(Category::Barrier)
+    }
+
+    /// Merge another breakdown into this one.
+    pub fn merge(&mut self, other: &Breakdown) {
+        for (a, b) in self.secs.iter_mut().zip(other.secs.iter()) {
+            *a += b;
+        }
+    }
+
+    /// The paper's "programmability tax": the non-MKL fraction of the
+    /// occupied core-time (§5.2 estimates it from the non-MKL stack-bar
+    /// fractions, which include the barrier time that serial framework
+    /// phases impose on waiting kernel threads). Pool-idle time (cores a
+    /// setting never uses) is excluded.
+    pub fn programmability_tax(&self) -> f64 {
+        let lib = self.get(Category::MklCompute) + self.get(Category::MklPrep);
+        let occupied = self.total() - self.get(Category::Idle);
+        if occupied <= 0.0 {
+            0.0
+        } else {
+            (occupied - lib) / occupied
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_get_roundtrip() {
+        let mut b = Breakdown::new();
+        b.add(Category::MklCompute, 2.0);
+        b.add(Category::FwPrep, 1.0);
+        b.add(Category::FwPrep, 0.5);
+        assert_eq!(b.get(Category::MklCompute), 2.0);
+        assert_eq!(b.get(Category::FwPrep), 1.5);
+        assert_eq!(b.total(), 3.5);
+    }
+
+    #[test]
+    fn fractions() {
+        let mut b = Breakdown::new();
+        b.add(Category::MklCompute, 3.0);
+        b.add(Category::Idle, 1.0);
+        assert!((b.frac(Category::MklCompute) - 0.75).abs() < 1e-12);
+        assert!((b.busy_frac() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tax_excludes_library_time() {
+        let mut b = Breakdown::new();
+        b.add(Category::MklCompute, 6.0);
+        b.add(Category::MklPrep, 1.0);
+        b.add(Category::FwPrep, 2.0);
+        b.add(Category::FwNative, 1.0);
+        b.add(Category::Barrier, 5.0); // counted: stalls caused by fw phases
+        b.add(Category::Idle, 5.0); // excluded: cores the setting never uses
+        // occupied = 15, lib = 7 → tax = 8/15
+        assert!((b.programmability_tax() - 8.0 / 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = Breakdown::new();
+        a.add(Category::FwSched, 1.0);
+        let mut b = Breakdown::new();
+        b.add(Category::FwSched, 2.0);
+        a.merge(&b);
+        assert_eq!(a.get(Category::FwSched), 3.0);
+    }
+
+    #[test]
+    fn labels_unique() {
+        let labels: std::collections::HashSet<_> =
+            Category::ALL.iter().map(|c| c.label()).collect();
+        assert_eq!(labels.len(), Category::ALL.len());
+    }
+}

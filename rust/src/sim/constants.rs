@@ -1,0 +1,112 @@
+//! Simulator calibration constants.
+//!
+//! Anchored on the paper's measured ratios (not absolute values):
+//!
+//! * MatMul-512 spends ~10% of single-MKL-thread time in TF data prep and
+//!   >72% with 24 threads (Fig. 10); MatMul-4k < 3% in both.
+//! * Max TF-operator speedup at 24 threads ≈ 16× (Fig. 9).
+//! * Thread-pool micro-task overheads: Folly < Eigen < std::thread, with
+//!   std::thread degrading >3× at 16× oversubscription (Fig. 14).
+//! * Effective UPI ceiling ≈ 100 GB/s of the 120 GB/s peak (Fig. 16).
+
+use crate::config::PoolLib;
+
+/// Framework-native data-prep processing rate per core (bytes/s). Tensor
+/// validation + marshalling, not a raw memcpy.
+pub const FW_PREP_RATE: f64 = 2.0e9;
+
+/// Framework MatMul prep is O(n) in the paper (§5.1): bytes of prep work
+/// per unit of the leading GEMM dimension.
+pub const FW_PREP_BYTES_PER_ROW: f64 = 2048.0;
+
+/// Library-internal packing rate (bytes/s), serial portion inside the
+/// kernel (Fig. 10's "MKL data prep").
+pub const LIB_PACK_RATE: f64 = 12.0e9;
+
+/// Framework-native (non-kernel) op processing rate per core (bytes/s).
+pub const FW_NATIVE_RATE: f64 = 4.0e9;
+
+/// Native-op FLOPs run at this fraction of one core's peak (interpreted,
+/// non-vectorised framework code).
+pub const FW_NATIVE_FLOP_EFF: f64 = 0.08;
+
+/// Fraction of DRAM bandwidth one embedding gather can stream.
+pub const EMBEDDING_BW_FRAC: f64 = 0.6;
+
+/// Over-threading penalty: latency multiplier grows with
+/// `1 + OVERTHREAD_SLOPE * log2(software_threads / logical_cores)`.
+pub const OVERTHREAD_SLOPE: f64 = 0.18;
+
+/// Effective UPI ceiling as a fraction of the platform peak (the paper
+/// measures ~100 of 120 GB/s).
+pub const UPI_EFFECTIVE_FRAC: f64 = 100.0 / 120.0;
+
+/// Beyond this working-set multiple of the socket LLC, cross-socket
+/// traffic re-transfers panels (the 16k falloff in Fig. 16).
+pub const UPI_THRASH_LLC_MULT: f64 = 220.0;
+
+/// Per-task dispatch overhead (seconds) of each pool library at its sweet
+/// spot (threads ≤ physical cores) — Fig. 14's left cluster.
+pub fn pool_dispatch_overhead(lib: PoolLib) -> f64 {
+    match lib {
+        PoolLib::StdThread => 3.0e-6,
+        PoolLib::Eigen => 1.6e-6,
+        PoolLib::Folly => 0.9e-6,
+    }
+}
+
+/// Growth of dispatch overhead when `threads` oversubscribe `cores`
+/// hardware threads (Fig. 14's right cluster: std::thread degrades >3×,
+/// Eigen/Folly stay roughly flat).
+pub fn pool_oversubscription_factor(lib: PoolLib, threads: usize, hw_threads: usize) -> f64 {
+    if threads <= hw_threads {
+        return 1.0;
+    }
+    let ratio = threads as f64 / hw_threads as f64;
+    match lib {
+        // broadcast wake-ups: every task wakes all sleepers
+        PoolLib::StdThread => 1.0 + 0.16 * (ratio - 1.0) * ratio.log2().max(1.0),
+        PoolLib::Eigen => 1.0 + 0.04 * ratio.log2(),
+        PoolLib::Folly => 1.0 + 0.02 * ratio.log2(),
+    }
+}
+
+/// Per-operator scheduling cost on the pool's main thread: dispatch plus a
+/// wake-up per worker notified.
+pub fn sched_overhead(lib: PoolLib, pool_threads: usize) -> f64 {
+    pool_dispatch_overhead(lib) * (1.0 + 0.25 * (pool_threads as f64).log2().max(0.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn folly_cheapest() {
+        assert!(pool_dispatch_overhead(PoolLib::Folly) < pool_dispatch_overhead(PoolLib::Eigen));
+        assert!(pool_dispatch_overhead(PoolLib::Eigen) < pool_dispatch_overhead(PoolLib::StdThread));
+    }
+
+    #[test]
+    fn std_degrades_3x_at_16x_oversub() {
+        // Fig. 14: 64 threads on a 4-core (8 HT) machine
+        let f = pool_oversubscription_factor(PoolLib::StdThread, 64, 8);
+        assert!(f > 3.0, "{f}");
+        assert!(pool_oversubscription_factor(PoolLib::Folly, 64, 8) < 1.2);
+        assert!(pool_oversubscription_factor(PoolLib::Eigen, 64, 8) < 1.3);
+    }
+
+    #[test]
+    fn no_penalty_within_hw() {
+        for lib in PoolLib::ALL {
+            assert_eq!(pool_oversubscription_factor(lib, 8, 8), 1.0);
+        }
+    }
+
+    #[test]
+    fn sched_overhead_grows_with_pool_size() {
+        let small = sched_overhead(PoolLib::Folly, 2);
+        let big = sched_overhead(PoolLib::Folly, 48);
+        assert!(big > small);
+    }
+}

@@ -1,0 +1,378 @@
+//! Discrete-event execution of a computational graph over inter-op pools.
+//!
+//! The scheduler model matches the paper's Fig. 3: the machine's physical
+//! cores are split evenly into `inter_op_pools` pools; ready operators are
+//! dispatched to free pools in topological order; a pool runs one operator
+//! at a time through its phase list ([`super::opexec`]). One pool ⇒
+//! synchronous scheduling; N pools ⇒ asynchronous scheduling over N
+//! operators in flight.
+//!
+//! Per-logical-core timelines are recorded so the harness can reproduce the
+//! paper's `perf`-style stack bars and traces.
+
+use std::collections::BinaryHeap;
+
+use crate::config::{CpuPlatform, FrameworkConfig, ParallelismMode};
+use crate::graph::Graph;
+use crate::sched::{partition_pools, ReadyQueue};
+
+use super::breakdown::{Breakdown, Category, Segment};
+use super::opexec::{op_phases, Phase, PoolCtx, Span};
+
+/// Result of simulating one graph execution.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// End-to-end latency (seconds).
+    pub latency_s: f64,
+    /// Aggregate core-time per category.
+    pub breakdown: Breakdown,
+    /// Per-logical-core segments (kernel threads first, then their
+    /// hyperthread partners), when `record_timelines` was set.
+    pub timelines: Vec<Vec<Segment>>,
+    /// Total bytes that crossed the UPI link.
+    pub upi_bytes: f64,
+    /// Peak UPI throughput observed (bytes/s).
+    pub upi_peak_bps: f64,
+    /// Achieved FLOP/s over the run.
+    pub gflops: f64,
+}
+
+impl SimReport {
+    /// Throughput in items/s given the graph's batch size.
+    pub fn throughput(&self, batch: usize) -> f64 {
+        batch as f64 / self.latency_s
+    }
+}
+
+/// Simulation options.
+#[derive(Debug, Clone)]
+pub struct SimOptions {
+    /// Record per-core segment timelines (needed for traces; costs memory).
+    pub record_timelines: bool,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions { record_timelines: false }
+    }
+}
+
+/// Simulate `graph` under `cfg` on `platform`.
+pub fn simulate(graph: &Graph, platform: &CpuPlatform, cfg: &FrameworkConfig) -> SimReport {
+    simulate_opts(graph, platform, cfg, &SimOptions::default())
+}
+
+/// Event-queue entry: a pool finishing its current op.
+#[derive(PartialEq)]
+struct Completion {
+    time: f64,
+    pool: usize,
+    node: usize,
+}
+
+impl Eq for Completion {}
+
+impl Ord for Completion {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // min-heap on time (BinaryHeap is a max-heap)
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap()
+            .then_with(|| other.node.cmp(&self.node))
+    }
+}
+
+impl PartialOrd for Completion {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Simulate with options.
+pub fn simulate_opts(
+    graph: &Graph,
+    platform: &CpuPlatform,
+    cfg: &FrameworkConfig,
+    opts: &SimOptions,
+) -> SimReport {
+    let assignments = partition_pools(platform, cfg);
+    let pools = assignments.len();
+    let cpp = assignments[0].cores;
+
+    // pool contexts for the op-execution model; data-parallel spanning only
+    // counts when the mode asks for it
+    let pool_ctxs: Vec<PoolCtx> = assignments
+        .iter()
+        .map(|a| PoolCtx {
+            phys_cores: a.cores,
+            spans_sockets: a.spans_sockets && cfg.parallelism == ParallelismMode::DataParallel,
+            sockets_used: a.sockets_used,
+        })
+        .collect();
+
+    let n = graph.len();
+    let mut queue = ReadyQueue::new(graph);
+    let mut free_pools: Vec<usize> = (0..pools).rev().collect();
+    let mut heap: BinaryHeap<Completion> = BinaryHeap::new();
+    let mut pool_free_at = vec![0.0f64; pools];
+    let mut now = 0.0f64;
+    let mut done = 0usize;
+
+    let mut breakdown = Breakdown::new();
+    let mut timelines: Vec<Vec<Segment>> =
+        vec![Vec::new(); if opts.record_timelines { platform.logical_cores() } else { 0 }];
+    let mut upi_bytes = 0.0f64;
+    let mut upi_peak: f64 = 0.0;
+
+    while done < n {
+        // dispatch ready ops to free pools (topological priority)
+        loop {
+            if free_pools.is_empty() {
+                break;
+            }
+            let node = match queue.pop() {
+                Some(nd) => nd,
+                None => break,
+            };
+            let pool = free_pools.pop().unwrap();
+            let phases = op_phases(&graph.nodes[node], cfg, platform, &pool_ctxs[pool]);
+            let start = now.max(pool_free_at[pool]);
+            let dur = super::opexec::total(&phases);
+            record(
+                &mut breakdown,
+                &mut timelines,
+                opts.record_timelines,
+                platform,
+                cfg,
+                pool,
+                cpp,
+                start,
+                &phases,
+                node,
+            );
+            // UPI accounting: every kernel on a socket-spanning pool moves
+            // its cross-socket share over the link (pipelined with compute,
+            // so the achieved rate is bytes over the op's whole duration,
+            // capped at the link's effective ceiling — what the authors'
+            // UPI counters reported)
+            if pool_ctxs[pool].spans_sockets && graph.nodes[node].kind.uses_library_kernel() {
+                let cost = &graph.nodes[node].cost;
+                upi_bytes += super::memory::upi_traffic_bytes(cost, platform);
+                // peak sampled link rate: panel re-streaming keeps the link
+                // busier the further the working set spills past the LLC
+                // (Fig. 16b: consumption climbs towards ~100 GB/s with size)
+                let llc = platform.llc_mib_per_socket * 1024.0 * 1024.0;
+                let pressure = cost.input_bytes / (8.0 * llc);
+                let rate = super::memory::upi_effective_bw(platform) * pressure / (1.0 + pressure);
+                upi_peak = upi_peak.max(rate);
+            }
+            pool_free_at[pool] = start + dur;
+            heap.push(Completion { time: start + dur, pool, node });
+        }
+
+        // advance to the next completion
+        let Completion { time, pool, node } = match heap.pop() {
+            Some(c) => c,
+            None => break, // defensive: disconnected graph
+        };
+        now = time;
+        free_pools.push(pool);
+        done += 1;
+        queue.complete(node);
+    }
+
+    // idle accounting: pools that sat free while others worked
+    let latency = now;
+    for p in 0..pools {
+        let idle = (latency - busy_time(&pool_free_at, p, latency)).max(0.0);
+        // idle applies to all logical cores of the pool
+        breakdown.add(Category::Idle, idle * (cpp * platform.smt) as f64);
+    }
+
+    let gflops = graph.total_flops() / latency.max(1e-12) / 1e9;
+    SimReport { latency_s: latency, breakdown, timelines, upi_bytes, upi_peak_bps: upi_peak, gflops }
+}
+
+/// A pool's busy time is capped by when it last freed up.
+fn busy_time(pool_free_at: &[f64], pool: usize, latency: f64) -> f64 {
+    pool_free_at[pool].min(latency)
+}
+
+/// Record one op's phases into the breakdown (and timelines if requested).
+#[allow(clippy::too_many_arguments)]
+fn record(
+    breakdown: &mut Breakdown,
+    timelines: &mut [Vec<Segment>],
+    record_tl: bool,
+    platform: &CpuPlatform,
+    cfg: &FrameworkConfig,
+    pool: usize,
+    cpp: usize,
+    start: f64,
+    phases: &[Phase],
+    node: usize,
+) {
+    let phys = platform.physical_cores();
+    let base = pool * cpp; // first physical core of the pool
+    let mut t = start;
+    for ph in phases {
+        // how many logical cores this phase occupies (no allocation on the
+        // accounting-only fast path — this runs once per phase per op and
+        // dominates the engine profile under exhaustive search)
+        let active_count = match ph.span {
+            Span::Main => 1,
+            Span::Kernel(k) | Span::Intra(k) => k.min(cpp),
+        };
+        breakdown.add(ph.cat, ph.dur * active_count as f64);
+        // peers inside the pool wait at the barrier during serial phases
+        let kernel_waiters = match ph.span {
+            Span::Main => cpp.saturating_sub(1),
+            Span::Kernel(k) => cpp.saturating_sub(k.min(cpp)),
+            Span::Intra(_) => cpp, // kernel threads wait while prep runs
+        };
+        if cfg.mkl_threads > 1 {
+            breakdown.add(Category::Barrier, ph.dur * kernel_waiters as f64);
+        }
+        if record_tl {
+            // slow path: materialise the active logical-core ids
+            let active: Vec<usize> = match ph.span {
+                Span::Main => vec![base],
+                Span::Kernel(k) => (0..k.min(cpp)).map(|i| base + i).collect(),
+                // intra threads are SMT partners: logical id = phys + core
+                Span::Intra(k) => (0..k.min(cpp)).map(|i| phys + base + i).collect(),
+            };
+            for &c in &active {
+                if c < timelines.len() {
+                    timelines[c].push(Segment { t0: t, t1: t + ph.dur, cat: ph.cat, op: node });
+                }
+            }
+            if cfg.mkl_threads > 1 {
+                for i in 0..cpp {
+                    let c = base + i;
+                    if !active.contains(&c) && c < timelines.len() {
+                        timelines[c].push(Segment {
+                            t0: t,
+                            t1: t + ph.dur,
+                            cat: Category::Barrier,
+                            op: node,
+                        });
+                    }
+                }
+            }
+        }
+        t += ph.dur;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{FrameworkConfig, OperatorImpl};
+    use crate::models;
+
+    fn cfg(pools: usize, mkl: usize, intra: usize) -> FrameworkConfig {
+        FrameworkConfig {
+            inter_op_pools: pools,
+            mkl_threads: mkl,
+            intra_op_threads: intra,
+            operator_impl: OperatorImpl::Serial,
+            ..FrameworkConfig::tuned_default()
+        }
+    }
+
+    #[test]
+    fn all_ops_complete() {
+        let g = models::build("inception_v2", 16).unwrap();
+        let r = simulate(&g, &CpuPlatform::large(), &cfg(1, 24, 1));
+        assert!(r.latency_s > 0.0 && r.latency_s.is_finite());
+    }
+
+    #[test]
+    fn more_kernel_threads_speed_up_wide_matmul() {
+        let g = models::build("matmul_4k", 0).unwrap();
+        let p = CpuPlatform::large();
+        let t1 = simulate(&g, &p, &cfg(1, 1, 1)).latency_s;
+        let t24 = simulate(&g, &p, &cfg(1, 24, 1)).latency_s;
+        let speedup = t1 / t24;
+        assert!(speedup > 8.0 && speedup < 24.0, "speedup={speedup}");
+    }
+
+    #[test]
+    fn async_pools_help_wide_model() {
+        let g = models::build("inception_v1", 16).unwrap();
+        let p = CpuPlatform::large();
+        let sync = simulate(&g, &p, &cfg(1, 24, 1)).latency_s;
+        let async3 = simulate(&g, &p, &cfg(3, 8, 1)).latency_s;
+        assert!(async3 < sync, "sync={sync} async={async3}");
+    }
+
+    #[test]
+    fn async_pools_hurt_chain_model() {
+        // a pure chain gets no inter-op parallelism; splitting cores into
+        // pools only shrinks per-op thread counts
+        let g = models::build("caffenet", 16).unwrap();
+        let p = CpuPlatform::large();
+        let sync = simulate(&g, &p, &cfg(1, 24, 1)).latency_s;
+        let async4 = simulate(&g, &p, &cfg(4, 6, 1)).latency_s;
+        assert!(async4 > sync, "sync={sync} async4={async4}");
+    }
+
+    #[test]
+    fn latency_deterministic() {
+        let g = models::build("resnet50", 16).unwrap();
+        let p = CpuPlatform::large();
+        let a = simulate(&g, &p, &cfg(2, 12, 12)).latency_s;
+        let b = simulate(&g, &p, &cfg(2, 12, 12)).latency_s;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn timelines_cover_latency() {
+        let g = models::build("matmul_512", 0).unwrap();
+        let p = CpuPlatform::large();
+        let r = simulate_opts(&g, &p, &cfg(1, 24, 1), &SimOptions { record_timelines: true });
+        assert_eq!(r.timelines.len(), p.logical_cores());
+        let max_t1 = r
+            .timelines
+            .iter()
+            .flat_map(|tl| tl.iter().map(|s| s.t1))
+            .fold(0.0f64, f64::max);
+        assert!((max_t1 - r.latency_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn timeline_segments_ordered_nonoverlapping() {
+        let g = models::build("inception_v2", 16).unwrap();
+        let p = CpuPlatform::small();
+        let r = simulate_opts(&g, &p, &cfg(2, 2, 2), &SimOptions { record_timelines: true });
+        for tl in &r.timelines {
+            for w in tl.windows(2) {
+                assert!(w[1].t0 >= w[0].t1 - 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn breakdown_has_kernel_time() {
+        let g = models::build("resnet50", 16).unwrap();
+        let r = simulate(&g, &CpuPlatform::large(), &cfg(1, 24, 1));
+        assert!(r.breakdown.get(Category::MklCompute) > 0.0);
+        assert!(r.breakdown.get(Category::FwPrep) > 0.0);
+    }
+
+    #[test]
+    fn two_sockets_speed_up_resnet_partially() {
+        // Fig. 15: 1.43× from the second socket, not 2× (UPI + serial
+        // terms). §7.1 sets intra-op/MKL threads to all physical cores.
+        let g = models::build("resnet50", 16).unwrap();
+        let mut c1 = cfg(1, 24, 24);
+        c1.operator_impl = OperatorImpl::IntraOpParallel;
+        let mut c2 = cfg(1, 48, 48);
+        c2.operator_impl = OperatorImpl::IntraOpParallel;
+        let one = simulate(&g, &CpuPlatform::large(), &c1).latency_s;
+        let two = simulate(&g, &CpuPlatform::large2(), &c2).latency_s;
+        let speedup = one / two;
+        assert!(speedup > 1.1 && speedup < 1.9, "speedup={speedup}");
+    }
+}

@@ -1,0 +1,91 @@
+//! Memory-system model: DRAM bandwidth shares and the inter-socket UPI
+//! link (paper §7).
+//!
+//! The UPI model reproduces Fig. 16's empirical shape: measured throughput
+//! approaches ~100 GB/s of the 120 GB/s peak, two-socket speedup peaks at
+//! MatMul-8k (~1.8×) and *declines* at 16k when the per-socket panel
+//! working set blows past the LLC and panels are re-streamed across the
+//! link (NUMA thrash).
+
+use crate::config::CpuPlatform;
+use crate::ops::OpCost;
+
+use super::constants::UPI_EFFECTIVE_FRAC;
+
+/// Effective (achievable) UPI bandwidth in bytes/s.
+pub fn upi_effective_bw(platform: &CpuPlatform) -> f64 {
+    platform.upi_gbps * 1e9 * UPI_EFFECTIVE_FRAC
+}
+
+/// Cross-socket traffic for a data-parallel kernel execution.
+///
+/// Each socket computes half the output: half the activations plus the
+/// gathered halves of the result cross the link; weight panels are
+/// re-streamed when they no longer fit in the remote socket's LLC.
+pub fn upi_traffic_bytes(cost: &OpCost, platform: &CpuPlatform) -> f64 {
+    let base = 0.5 * (cost.input_bytes + cost.output_bytes);
+    // NUMA-thrash multiplier: once the input working set exceeds ~16× the
+    // socket LLC (a MatMul-8k on `large.2`), remote panels stop being
+    // reused and are re-streamed — the Fig. 16 falloff beyond 8k.
+    let llc_bytes = platform.llc_mib_per_socket * 1024.0 * 1024.0;
+    let pressure = cost.input_bytes / (16.0 * llc_bytes);
+    let thrash = 1.0 + 0.5 * (pressure - 1.0).max(0.0);
+    base * thrash
+}
+
+/// Time for a data-parallel kernel's UPI phase, plus the achieved
+/// throughput (bytes/s) for bandwidth accounting.
+pub fn upi_transfer(cost: &OpCost, platform: &CpuPlatform) -> (f64, f64) {
+    if platform.sockets < 2 {
+        return (0.0, 0.0);
+    }
+    let bytes = upi_traffic_bytes(cost, platform);
+    let bw = upi_effective_bw(platform);
+    (bytes / bw, bw)
+}
+
+/// DRAM-bandwidth floor for a kernel: time below which the socket's memory
+/// system cannot feed the cores.
+pub fn bandwidth_floor(cost: &OpCost, platform: &CpuPlatform, sockets_used: usize) -> f64 {
+    let bw = platform.mem_bw_gbps * 1e9 * sockets_used.max(1) as f64;
+    cost.total_bytes() / bw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::OpKind;
+
+    fn l2() -> CpuPlatform {
+        CpuPlatform::large2()
+    }
+
+    #[test]
+    fn effective_bw_is_100_gbps() {
+        assert!((upi_effective_bw(&l2()) - 100e9).abs() < 1e9);
+    }
+
+    #[test]
+    fn single_socket_has_no_upi() {
+        let c = OpCost::of(&OpKind::MatMul { m: 4096, k: 4096, n: 4096 });
+        assert_eq!(upi_transfer(&c, &CpuPlatform::large()), (0.0, 0.0));
+    }
+
+    #[test]
+    fn thrash_kicks_in_for_16k() {
+        let c8 = OpCost::of(&OpKind::MatMul { m: 8192, k: 8192, n: 8192 });
+        let c16 = OpCost::of(&OpKind::MatMul { m: 16384, k: 16384, n: 16384 });
+        let r8 = upi_traffic_bytes(&c8, &l2()) / (0.5 * (c8.input_bytes + c8.output_bytes));
+        let r16 = upi_traffic_bytes(&c16, &l2()) / (0.5 * (c16.input_bytes + c16.output_bytes));
+        assert!(r8 < 1.5, "8k ratio {r8}");
+        assert!(r16 > 2.0, "16k ratio {r16}");
+    }
+
+    #[test]
+    fn bandwidth_floor_scales_with_sockets() {
+        let c = OpCost::of(&OpKind::Embedding { vocab: 1_000_000, dim: 64, rows: 100_000 });
+        let one = bandwidth_floor(&c, &l2(), 1);
+        let two = bandwidth_floor(&c, &l2(), 2);
+        assert!((one / two - 2.0).abs() < 1e-9);
+    }
+}

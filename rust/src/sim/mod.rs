@@ -1,0 +1,17 @@
+//! Platform simulator — the substrate standing in for the paper's Skylake
+//! testbeds (DESIGN.md §Substitutions).
+//!
+//! A discrete-event engine executes computational graphs over inter-op
+//! pools of cores, modelling FMA sharing between hyperthreads, serial
+//! framework/library prep terms, thread-pool dispatch overheads, DRAM
+//! rooflines and the UPI link. It emits end-to-end latency plus the same
+//! per-core breakdowns/traces the authors collected with `perf`.
+
+pub mod breakdown;
+pub mod constants;
+pub mod engine;
+pub mod memory;
+pub mod opexec;
+
+pub use breakdown::{Breakdown, Category, Segment};
+pub use engine::{simulate, simulate_opts, SimOptions, SimReport};

@@ -1,0 +1,379 @@
+//! Per-operator execution model: turns an op's cost descriptor plus the
+//! framework/platform configuration into a sequence of timed phases.
+//!
+//! This encodes the paper's §5 findings:
+//!
+//! * framework data prep is an Amdahl serial term (O(n) for MatMul, the
+//!   im2col fraction for Conv) unless `MatMul2`-style intra-op threads
+//!   spread it (§5.2);
+//! * library kernels have their own serial packing term (Fig. 10);
+//! * kernel threads beyond the pool's physical cores add no FLOPs (the two
+//!   hyperthreads share FMA units, §4.2);
+//! * creating more software threads than hardware threads slows everything
+//!   down (over-threading, Fig. 6).
+
+use crate::config::{CpuPlatform, FrameworkConfig, OperatorImpl};
+use crate::graph::Node;
+use crate::libs::math::MathModel;
+use crate::ops::OpKind;
+
+use super::breakdown::Category;
+use super::constants::*;
+use super::memory;
+
+/// Which logical cores of the pool a phase occupies.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Span {
+    /// Pool main thread only (serial phases).
+    Main,
+    /// The kernel (MKL) threads: one per physical core, up to the count.
+    Kernel(usize),
+    /// The intra-op threads: hyperthread partners of the kernel threads.
+    Intra(usize),
+}
+
+/// One timed phase of an operator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Phase {
+    /// Accounting category.
+    pub cat: Category,
+    /// Duration in seconds.
+    pub dur: f64,
+    /// Cores occupied.
+    pub span: Span,
+}
+
+/// Total duration of a phase list.
+pub fn total(phases: &[Phase]) -> f64 {
+    phases.iter().map(|p| p.dur).sum()
+}
+
+/// Framework-native prep bytes for a kernel op (the paper's O(n) rule for
+/// MatMul; the im2col fraction for Conv).
+fn fw_prep_bytes(node: &Node) -> f64 {
+    // a zeroed descriptor means "bare library call" (Fig. 9's MKL series)
+    if node.cost.prep_bytes == 0.0 {
+        return 0.0;
+    }
+    match node.kind {
+        OpKind::MatMul { m, .. } => FW_PREP_BYTES_PER_ROW * m as f64,
+        // 1×1 convolutions need no im2col (a reshape suffices); larger
+        // kernels stage half the im2col matrix in framework-native code —
+        // this is why native time dominates the default Inception config
+        // in the paper's Fig. 1/7 and why intra-op threads pay off
+        OpKind::Conv { batch, out_h, out_w, k_h, k_w, .. } => {
+            if k_h * k_w == 1 {
+                FW_PREP_BYTES_PER_ROW * (batch * out_h * out_w) as f64 / 64.0
+            } else {
+                0.5 * node.cost.prep_bytes
+            }
+        }
+        OpKind::Embedding { rows, .. } => 64.0 * rows as f64,
+        OpKind::Gradient { fwd_bytes, .. } => 0.1 * fwd_bytes,
+        _ => node.cost.prep_bytes,
+    }
+}
+
+/// Context for executing ops on one inter-op pool.
+#[derive(Debug, Clone)]
+pub struct PoolCtx {
+    /// Physical cores owned by this pool.
+    pub phys_cores: usize,
+    /// Pool spans both sockets (data-parallel beyond-one-socket mode).
+    pub spans_sockets: bool,
+    /// Number of sockets the pool's cores cover.
+    pub sockets_used: usize,
+}
+
+/// Compute the phase list for `node` on a pool.
+pub fn op_phases(
+    node: &Node,
+    cfg: &FrameworkConfig,
+    platform: &CpuPlatform,
+    pool: &PoolCtx,
+) -> Vec<Phase> {
+    // NOTE(§Perf): a fixed-capacity inline list was tried here and measured
+    // SLOWER than the Vec (the 200-byte by-value copies cost more than one
+    // small allocation) — reverted; see EXPERIMENTS.md §Perf.
+    let mut phases = Vec::with_capacity(4);
+    let overthread = overthread_mult(cfg, platform);
+    let peak_core = platform.peak_gflops_per_core * 1e9;
+    let pool_threads = cfg.mkl_threads + cfg.intra_op_threads;
+
+    // 1. scheduling: dispatch to the pool, wake workers
+    let sched = sched_overhead(cfg.pool_lib, pool_threads)
+        * pool_oversubscription_factor(
+            cfg.pool_lib,
+            cfg.inter_op_pools * pool_threads,
+            platform.logical_cores(),
+        );
+    phases.push(Phase { cat: Category::FwSched, dur: sched * overthread, span: Span::Main });
+
+    if !node.kind.uses_library_kernel() {
+        // framework-native op: bandwidth + interpreted FLOPs; MatMul2-style
+        // intra-op threads parallelise it (§5.2), otherwise single-threaded
+        let serial = node.cost.total_bytes() / FW_NATIVE_RATE
+            + node.cost.flops / (FW_NATIVE_FLOP_EFF * peak_core);
+        let (dur, span) = match cfg.operator_impl {
+            OperatorImpl::Serial => (serial, Span::Main),
+            OperatorImpl::IntraOpParallel => {
+                let t = adaptive_intra_threads(serial, cfg, pool);
+                let scatter = t as f64 * pool_dispatch_overhead(cfg.pool_lib);
+                (serial / t as f64 + scatter, Span::Intra(t))
+            }
+        };
+        phases.push(Phase { cat: Category::FwNative, dur: dur * overthread, span });
+        return phases;
+    }
+
+    // 2. framework data prep
+    let prep_serial = fw_prep_bytes(node) / FW_PREP_RATE;
+    match cfg.operator_impl {
+        OperatorImpl::Serial => {
+            phases.push(Phase { cat: Category::FwPrep, dur: prep_serial * overthread, span: Span::Main });
+        }
+        OperatorImpl::IntraOpParallel => {
+            let t = adaptive_intra_threads(prep_serial, cfg, pool);
+            let scatter = t as f64 * pool_dispatch_overhead(cfg.pool_lib);
+            let dur = prep_serial / t as f64 + scatter;
+            phases.push(Phase { cat: Category::FwPrep, dur: dur * overthread, span: Span::Intra(t) });
+        }
+    }
+
+    // 3. library packing (serial inside the kernel)
+    let lib = MathModel::new(cfg.math_lib);
+    let lib_prep = node.cost.lib_prep_bytes / LIB_PACK_RATE;
+    if lib_prep > 0.0 {
+        phases.push(Phase { cat: Category::MklPrep, dur: lib_prep * overthread, span: Span::Main });
+    }
+
+    // 4. kernel compute. Threads saturate with kernel size: a 33 MFLOP GEMM
+    // cannot feed 24 cores (per-thread slices drown in barrier cost), which
+    // is why Fig. 9's speedups stay far below the core count for small
+    // matrices.
+    let t_cap = ((node.cost.flops / 1e6).sqrt().floor() as usize).max(1);
+    let t_fma = cfg.mkl_threads.min(pool.phys_cores).min(t_cap).max(1);
+    let par_eff = if matches!(node.kind, OpKind::Conv { .. }) {
+        lib.parallel_efficiency_conv(t_fma)
+    } else {
+        lib.parallel_efficiency(t_fma)
+    };
+    let eff = kernel_efficiency(&lib, &node.kind) * par_eff;
+    let mut compute = node.cost.flops / (peak_core * eff * t_fma as f64);
+    // DRAM roofline (embeddings and huge layers are bandwidth-bound)
+    let bw_floor = if matches!(node.kind, OpKind::Embedding { .. }) {
+        node.cost.total_bytes() / (EMBEDDING_BW_FRAC * platform.mem_bw_gbps * 1e9)
+    } else {
+        memory::bandwidth_floor(&node.cost, platform, pool.sockets_used)
+    };
+    compute = compute.max(bw_floor);
+
+    // cross-socket penalties for data-parallel kernels: remote-DRAM NUMA
+    // throttling once the working set blows past the LLC neighbourhood,
+    // plus the UPI transfer (which pipelines with compute — only the
+    // excess beyond half the kernel time is exposed).
+    let mut upi_exposed = 0.0;
+    if pool.spans_sockets {
+        let llc_bytes = platform.llc_mib_per_socket * 1024.0 * 1024.0;
+        let pressure = node.cost.input_bytes / (16.0 * llc_bytes);
+        compute *= 1.0 + 0.10 * (pressure - 1.0).max(0.0);
+        let (upi, _) = memory::upi_transfer(&node.cost, platform);
+        upi_exposed = (upi - 0.5 * compute).max(0.0);
+    }
+    phases.push(Phase {
+        cat: Category::MklCompute,
+        dur: compute * overthread,
+        span: Span::Kernel(t_fma),
+    });
+    if upi_exposed > 0.0 {
+        phases.push(Phase { cat: Category::UpiTransfer, dur: upi_exposed, span: Span::Main });
+    }
+    phases
+}
+
+/// Cost-aware intra-op fan-out (what Eigen's ParallelFor / TF's shard cost
+/// model do): never split work finer than ~8 dispatch overheads per task,
+/// so tiny ops stay serial instead of paying the scatter cost.
+fn adaptive_intra_threads(serial: f64, cfg: &FrameworkConfig, pool: &PoolCtx) -> usize {
+    let t_max = cfg.intra_op_threads.min(pool.phys_cores).max(1);
+    let worth = (serial / (8.0 * pool_dispatch_overhead(cfg.pool_lib))).floor() as usize;
+    worth.clamp(1, t_max)
+}
+
+/// Kernel efficiency for an op kind under a library model.
+fn kernel_efficiency(lib: &MathModel, kind: &OpKind) -> f64 {
+    match *kind {
+        OpKind::MatMul { m, k, n } => lib.gemm_efficiency_mkn(m as f64, k as f64, n as f64),
+        OpKind::Conv { batch, out_h, out_w, in_c, out_c, k_h, k_w } => {
+            let m = (batch * out_h * out_w) as f64;
+            let kk = (in_c * k_h * k_w) as f64;
+            lib.gemm_efficiency_mkn(m, kk, out_c as f64)
+        }
+        OpKind::Gradient { fwd_flops, .. } => {
+            // backward GEMMs have the same blocking behaviour
+            lib.gemm_efficiency(fwd_flops.powf(1.0 / 3.0) / 2f64.powf(1.0 / 3.0))
+        }
+        _ => 0.5,
+    }
+}
+
+/// Over-threading latency multiplier (Fig. 6's "over-threading" region).
+pub fn overthread_mult(cfg: &FrameworkConfig, platform: &CpuPlatform) -> f64 {
+    let sw = cfg.total_threads() as f64;
+    let hw = platform.logical_cores() as f64;
+    if sw <= hw {
+        1.0
+    } else {
+        1.0 + OVERTHREAD_SLOPE * (sw / hw).log2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{FrameworkConfig, MathLib, PoolLib};
+    use crate::graph::GraphBuilder;
+
+    fn large() -> CpuPlatform {
+        CpuPlatform::large()
+    }
+
+    fn cfg(mkl: usize, intra: usize, op: OperatorImpl) -> FrameworkConfig {
+        FrameworkConfig {
+            inter_op_pools: 1,
+            mkl_threads: mkl,
+            intra_op_threads: intra,
+            operator_impl: op,
+            math_lib: MathLib::Mkl,
+            pool_lib: PoolLib::Folly,
+            ..FrameworkConfig::tuned_default()
+        }
+    }
+
+    fn matmul_node(n: usize) -> Node {
+        let mut b = GraphBuilder::new("t", 1);
+        b.add("mm", OpKind::MatMul { m: n, k: n, n }, &[]);
+        b.build().nodes.into_iter().next().unwrap()
+    }
+
+    fn pool24() -> PoolCtx {
+        PoolCtx { phys_cores: 24, spans_sockets: false, sockets_used: 1 }
+    }
+
+    #[test]
+    fn matmul512_prep_fraction_matches_paper() {
+        // Fig. 10: ~10% prep at 1 MKL thread, >60% at 24 (serial prep)
+        let n = matmul_node(512);
+        let p1 = op_phases(&n, &cfg(1, 1, OperatorImpl::Serial), &large(), &pool24());
+        let prep1: f64 = p1.iter().filter(|p| p.cat == Category::FwPrep).map(|p| p.dur).sum();
+        let frac1 = prep1 / total(&p1);
+        assert!(frac1 > 0.04 && frac1 < 0.2, "frac1={frac1}");
+
+        let p24 = op_phases(&n, &cfg(24, 1, OperatorImpl::Serial), &large(), &pool24());
+        let prep24: f64 = p24.iter().filter(|p| p.cat == Category::FwPrep).map(|p| p.dur).sum();
+        let frac24 = prep24 / total(&p24);
+        // the paper reports 72% (including barrier time on waiting cores);
+        // on the main thread alone prep grows from ~10% to roughly half
+        assert!(frac24 > 0.4, "frac24={frac24}");
+    }
+
+    #[test]
+    fn matmul4k_prep_fraction_small() {
+        // Fig. 10: < 3% in both configurations
+        let n = matmul_node(4096);
+        for threads in [1, 24] {
+            let p = op_phases(&n, &cfg(threads, 1, OperatorImpl::Serial), &large(), &pool24());
+            let prep: f64 = p.iter().filter(|p| p.cat == Category::FwPrep).map(|p| p.dur).sum();
+            assert!(prep / total(&p) < 0.05, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn intra_op_threads_shrink_prep() {
+        let n = matmul_node(512);
+        let serial = op_phases(&n, &cfg(24, 1, OperatorImpl::Serial), &large(), &pool24());
+        let par = op_phases(&n, &cfg(24, 24, OperatorImpl::IntraOpParallel), &large(), &pool24());
+        assert!(total(&par) < 0.7 * total(&serial), "par={} serial={}", total(&par), total(&serial));
+    }
+
+    #[test]
+    fn hyperthread_kernel_threads_add_nothing() {
+        let n = matmul_node(2048);
+        let t24 = total(&op_phases(&n, &cfg(24, 1, OperatorImpl::Serial), &large(), &pool24()));
+        let t48 = total(&op_phases(&n, &cfg(48, 1, OperatorImpl::Serial), &large(), &pool24()));
+        // 48 "MKL threads" on 24 cores: no extra FLOPs, at best equal
+        assert!(t48 >= t24 * 0.99, "t48={t48} t24={t24}");
+    }
+
+    #[test]
+    fn overthreading_penalises() {
+        let p = CpuPlatform::small(); // 8 logical
+        let mut c = cfg(4, 4, OperatorImpl::IntraOpParallel);
+        c.inter_op_pools = 4; // 32 software threads on 8 logical cores
+        assert!(overthread_mult(&c, &p) > 1.2);
+        let ok = cfg(2, 2, OperatorImpl::IntraOpParallel);
+        assert_eq!(overthread_mult(&ok, &p), 1.0);
+    }
+
+    #[test]
+    fn light_op_single_threaded_when_serial() {
+        let mut b = GraphBuilder::new("t", 1);
+        b.add("cat", OpKind::DataMovement { bytes: 1 << 20, name: "Concat" }, &[]);
+        let node = b.build().nodes.into_iter().next().unwrap();
+        let p = op_phases(&node, &cfg(24, 24, OperatorImpl::Serial), &large(), &pool24());
+        assert!(p.iter().all(|ph| matches!(ph.span, Span::Main)));
+    }
+
+    #[test]
+    fn embedding_is_bandwidth_bound() {
+        let mut b = GraphBuilder::new("t", 1);
+        b.add(
+            "emb",
+            OpKind::Embedding { vocab: 1_000_000, dim: 256, rows: 100_000 },
+            &[],
+        );
+        let node = b.build().nodes.into_iter().next().unwrap();
+        let t1 = {
+            let p = op_phases(&node, &cfg(1, 1, OperatorImpl::Serial), &large(), &pool24());
+            p.iter().find(|p| p.cat == Category::MklCompute).unwrap().dur
+        };
+        let t24 = {
+            let p = op_phases(&node, &cfg(24, 1, OperatorImpl::Serial), &large(), &pool24());
+            p.iter().find(|p| p.cat == Category::MklCompute).unwrap().dur
+        };
+        // threads don't help a gather: time pinned by DRAM bandwidth
+        assert!((t1 / t24) < 1.05, "t1={t1} t24={t24}");
+    }
+
+    #[test]
+    fn data_parallel_numa_penalises_huge_kernels() {
+        // spanning sockets slows a 16k GEMM (working set ≫ LLC): the
+        // NUMA-thrash penalty behind Fig. 16's decline beyond 8k
+        let n = matmul_node(16384);
+        let spanning = PoolCtx { phys_cores: 48, spans_sockets: true, sockets_used: 2 };
+        let local = PoolCtx { phys_cores: 48, spans_sockets: false, sockets_used: 2 };
+        let p2 = CpuPlatform::large2();
+        let c = cfg(48, 1, OperatorImpl::Serial);
+        let t_span = op_phases(&n, &c, &p2, &spanning)
+            .iter().find(|p| p.cat == Category::MklCompute).unwrap().dur;
+        let t_local = op_phases(&n, &c, &p2, &local)
+            .iter().find(|p| p.cat == Category::MklCompute).unwrap().dur;
+        assert!(t_span > 1.15 * t_local, "span={t_span} local={t_local}");
+    }
+
+    #[test]
+    fn data_parallel_exposes_upi_for_bandwidth_bound_ops() {
+        // an embedding gather moves bytes without FLOPs to hide them
+        // behind: the UPI phase becomes visible
+        let mut b = GraphBuilder::new("t", 1);
+        b.add(
+            "emb",
+            OpKind::Embedding { vocab: 10_000_000, dim: 512, rows: 8_000_000 },
+            &[],
+        );
+        let node = b.build().nodes.into_iter().next().unwrap();
+        let pool = PoolCtx { phys_cores: 48, spans_sockets: true, sockets_used: 2 };
+        let p = op_phases(&node, &cfg(48, 1, OperatorImpl::Serial), &CpuPlatform::large2(), &pool);
+        assert!(p.iter().any(|ph| ph.cat == Category::UpiTransfer), "{p:?}");
+    }
+}

@@ -1,0 +1,135 @@
+//! Trace emitters: render simulator timelines as ASCII (the paper's Fig. 8
+//! execution traces) or Chrome `chrome://tracing` JSON for interactive
+//! inspection.
+
+use std::fmt::Write as _;
+
+use crate::sim::{Category, Segment};
+use crate::util::json::{self, Json};
+
+/// Glyph for a category in ASCII traces.
+fn glyph(cat: Category) -> char {
+    match cat {
+        Category::MklCompute => '#',
+        Category::MklPrep => '+',
+        Category::FwPrep => 'p',
+        Category::FwNative => 'n',
+        Category::FwSched => 's',
+        Category::Barrier => '.',
+        Category::UpiTransfer => 'u',
+        Category::Idle => ' ',
+    }
+}
+
+/// Render per-core timelines as an ASCII trace, `width` columns wide.
+///
+/// Each row is one logical core; each column is a time bucket; the glyph is
+/// the category that dominated the bucket. A legend is appended.
+pub fn ascii_trace(timelines: &[Vec<Segment>], latency: f64, width: usize) -> String {
+    let mut out = String::new();
+    let width = width.max(10);
+    for (core, tl) in timelines.iter().enumerate() {
+        if tl.is_empty() {
+            continue;
+        }
+        let mut row = vec![' '; width];
+        for seg in tl {
+            let c0 = ((seg.t0 / latency) * width as f64).floor() as usize;
+            let c1 = (((seg.t1 / latency) * width as f64).ceil() as usize).min(width);
+            for slot in row.iter_mut().take(c1).skip(c0.min(width)) {
+                // later segments overwrite idle but not real work
+                if *slot == ' ' || *slot == '.' {
+                    *slot = glyph(seg.cat);
+                }
+            }
+        }
+        let exec_frac = executing_fraction(tl, latency);
+        let _ = writeln!(
+            out,
+            "core {core:>3} |{}| {:>4.0}%",
+            row.iter().collect::<String>(),
+            exec_frac * 100.0
+        );
+    }
+    out.push_str("legend: #=MKL compute +=MKL prep p=TF prep n=native s=sched .=barrier u=UPI\n");
+    out
+}
+
+/// Fraction of the run a core spent executing (not barrier/idle) — the
+/// per-trace percentage the paper prints beside Fig. 8.
+pub fn executing_fraction(tl: &[Segment], latency: f64) -> f64 {
+    if latency <= 0.0 {
+        return 0.0;
+    }
+    let busy: f64 = tl
+        .iter()
+        .filter(|s| !matches!(s.cat, Category::Barrier | Category::Idle))
+        .map(|s| s.dur())
+        .sum();
+    (busy / latency).min(1.0)
+}
+
+/// Convert timelines to Chrome trace-event JSON.
+pub fn chrome_trace(timelines: &[Vec<Segment>]) -> String {
+    let mut events = Vec::new();
+    for (core, tl) in timelines.iter().enumerate() {
+        for seg in tl {
+            let mut obj = std::collections::BTreeMap::new();
+            obj.insert("name".to_string(), Json::Str(seg.cat.label().into()));
+            obj.insert("ph".to_string(), Json::Str("X".into()));
+            obj.insert("ts".to_string(), Json::Num(seg.t0 * 1e6));
+            obj.insert("dur".to_string(), Json::Num(seg.dur() * 1e6));
+            obj.insert("pid".to_string(), Json::Num(0.0));
+            obj.insert("tid".to_string(), Json::Num(core as f64));
+            let mut args = std::collections::BTreeMap::new();
+            args.insert("op".to_string(), Json::Num(seg.op as f64));
+            obj.insert("args".to_string(), Json::Obj(args));
+            events.push(Json::Obj(obj));
+        }
+    }
+    json::to_string(&Json::Arr(events))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seg(t0: f64, t1: f64, cat: Category) -> Segment {
+        Segment { t0, t1, cat, op: 0 }
+    }
+
+    #[test]
+    fn ascii_renders_rows_and_legend() {
+        let tls = vec![
+            vec![seg(0.0, 0.5, Category::MklCompute), seg(0.5, 1.0, Category::Barrier)],
+            vec![seg(0.0, 1.0, Category::FwPrep)],
+        ];
+        let s = ascii_trace(&tls, 1.0, 20);
+        assert!(s.contains("core   0"));
+        assert!(s.contains('#'));
+        assert!(s.contains('p'));
+        assert!(s.contains("legend"));
+    }
+
+    #[test]
+    fn executing_fraction_excludes_barrier() {
+        let tl = vec![seg(0.0, 0.6, Category::MklCompute), seg(0.6, 1.0, Category::Barrier)];
+        assert!((executing_fraction(&tl, 1.0) - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json() {
+        let tls = vec![vec![seg(0.0, 0.5, Category::MklCompute)]];
+        let s = chrome_trace(&tls);
+        let v = Json::parse(&s).unwrap();
+        assert_eq!(v.as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn empty_cores_skipped() {
+        let tls = vec![Vec::new(), vec![seg(0.0, 1.0, Category::FwNative)]];
+        let s = ascii_trace(&tls, 1.0, 10);
+        assert!(!s.contains("core   0"));
+        assert!(s.contains("core   1"));
+    }
+}

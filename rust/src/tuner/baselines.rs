@@ -1,0 +1,76 @@
+//! Baseline settings the paper evaluates against (Fig. 18).
+
+use crate::config::{CpuPlatform, FrameworkConfig, OperatorImpl};
+
+/// Which published recommendation to apply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Baseline {
+    /// TensorFlow performance guide [14]: MKL/intra-op threads = physical
+    /// cores, inter-op pools = sockets.
+    TensorFlowRecommended,
+    /// Intel blog [3]: MKL/intra-op threads = physical cores per socket,
+    /// inter-op pools = sockets.
+    IntelRecommended,
+    /// TensorFlow out-of-the-box: every knob = logical core count.
+    TensorFlowDefault,
+}
+
+impl Baseline {
+    /// All baselines in Fig. 18 order.
+    pub const ALL: [Baseline; 3] = [
+        Baseline::TensorFlowRecommended,
+        Baseline::IntelRecommended,
+        Baseline::TensorFlowDefault,
+    ];
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Baseline::TensorFlowRecommended => "TensorFlow-recommended",
+            Baseline::IntelRecommended => "Intel-recommended",
+            Baseline::TensorFlowDefault => "TensorFlow-default",
+        }
+    }
+}
+
+/// Materialise a baseline on a platform. All baselines get the same
+/// operator/library quality as the tuned setting — the comparison is about
+/// threading knobs, not kernel quality.
+pub fn baseline_config(b: Baseline, platform: &CpuPlatform) -> FrameworkConfig {
+    let mut cfg = match b {
+        Baseline::TensorFlowRecommended => FrameworkConfig::tensorflow_recommended(platform),
+        Baseline::IntelRecommended => FrameworkConfig::intel_recommended(platform),
+        Baseline::TensorFlowDefault => FrameworkConfig::tensorflow_default(platform),
+    };
+    cfg.operator_impl = OperatorImpl::IntraOpParallel;
+    cfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tf_recommended_overthreads_large2() {
+        // 2 pools × (48+48) threads = 192 software threads on 96 logical —
+        // the oversubscription the paper calls out
+        let p = CpuPlatform::large2();
+        let cfg = baseline_config(Baseline::TensorFlowRecommended, &p);
+        assert!(cfg.over_threaded(&p));
+    }
+
+    #[test]
+    fn intel_fits_hardware() {
+        let p = CpuPlatform::large2();
+        let cfg = baseline_config(Baseline::IntelRecommended, &p);
+        assert!(!cfg.over_threaded(&p)); // 2 × (24+24) = 96 = logical cores
+    }
+
+    #[test]
+    fn tf_default_is_much_worse() {
+        let p = CpuPlatform::large2();
+        let cfg = baseline_config(Baseline::TensorFlowDefault, &p);
+        assert_eq!(cfg.inter_op_pools, 96);
+        assert_eq!(cfg.total_threads(), 96 * 192);
+    }
+}

@@ -1,0 +1,119 @@
+//! Exhaustive design-space search — the "global optimum" bar of Fig. 18.
+//!
+//! The raw space on `large.2` is `logical³ = 96³ = 884,736` points; like
+//! the authors we sweep the feasible lattice (pool counts that divide the
+//! machine sensibly, thread counts up to the logical core count) and
+//! simulate each point. This is what the guideline is supposed to match
+//! with *one* prediction.
+
+use crate::config::{CpuPlatform, FrameworkConfig, OperatorImpl};
+use crate::graph::Graph;
+use crate::sim;
+
+/// Search outcome.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    /// Best setting found.
+    pub best: FrameworkConfig,
+    /// Its simulated latency.
+    pub best_latency_s: f64,
+    /// Number of design points simulated.
+    pub evaluated: usize,
+}
+
+/// Candidate pool counts for a platform.
+fn pool_candidates(platform: &CpuPlatform) -> Vec<usize> {
+    let phys = platform.physical_cores();
+    let mut v: Vec<usize> = (1..=8).filter(|p| *p <= phys).collect();
+    for extra in [12, 16, 24, phys] {
+        if extra <= phys && !v.contains(&extra) {
+            v.push(extra);
+        }
+    }
+    v
+}
+
+/// Candidate per-pool thread counts.
+fn thread_candidates(platform: &CpuPlatform, pools: usize) -> Vec<usize> {
+    let phys = platform.physical_cores();
+    let fair = (phys / pools).max(1);
+    let mut v = vec![1, 2, 4, fair, 2 * fair, phys, platform.logical_cores()];
+    v.sort_unstable();
+    v.dedup();
+    v.retain(|&t| t >= 1);
+    v
+}
+
+/// Sweep the lattice and return the latency-optimal setting.
+pub fn exhaustive_search(graph: &Graph, platform: &CpuPlatform) -> SearchResult {
+    let mut best: Option<(FrameworkConfig, f64)> = None;
+    let mut evaluated = 0usize;
+    for pools in pool_candidates(platform) {
+        for mkl in thread_candidates(platform, pools) {
+            for intra in thread_candidates(platform, pools) {
+                let cfg = FrameworkConfig {
+                    inter_op_pools: pools,
+                    mkl_threads: mkl,
+                    intra_op_threads: intra,
+                    operator_impl: OperatorImpl::IntraOpParallel,
+                    ..FrameworkConfig::tuned_default()
+                };
+                if cfg.validate(platform).is_err() {
+                    continue;
+                }
+                let lat = sim::simulate(graph, platform, &cfg).latency_s;
+                evaluated += 1;
+                if best.as_ref().map_or(true, |(_, b)| lat < *b) {
+                    best = Some((cfg, lat));
+                }
+            }
+        }
+    }
+    let (best, best_latency_s) = best.expect("non-empty lattice");
+    SearchResult { best, best_latency_s, evaluated }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::tuner::guidelines::tune;
+
+    #[test]
+    fn sweeps_a_substantial_lattice() {
+        let g = models::build("matmul_512", 0).unwrap();
+        let r = exhaustive_search(&g, &CpuPlatform::small());
+        assert!(r.evaluated > 50, "evaluated={}", r.evaluated);
+        assert!(r.best_latency_s > 0.0);
+    }
+
+    #[test]
+    fn optimum_at_least_as_good_as_guideline() {
+        for name in ["squeezenet", "ncf", "wide_deep"] {
+            let g = models::build(name, models::canonical_batch(name)).unwrap();
+            let p = CpuPlatform::large2();
+            let opt = exhaustive_search(&g, &p);
+            let guided = tune(&g, &p);
+            let guided_lat = crate::sim::simulate(&g, &p, &guided.config).latency_s;
+            assert!(
+                opt.best_latency_s <= guided_lat * 1.0001,
+                "{name}: opt={} guided={guided_lat}",
+                opt.best_latency_s
+            );
+        }
+    }
+
+    #[test]
+    fn guideline_within_5_percent_of_optimum() {
+        // the paper's headline robustness claim (§2.3): worst case ≥95%
+        for name in ["resnet50", "inception_v3", "ncf", "wide_deep", "transformer"] {
+            let g = models::build(name, models::canonical_batch(name)).unwrap();
+            let p = CpuPlatform::large2();
+            let opt = exhaustive_search(&g, &p);
+            let guided = tune(&g, &p);
+            let guided_lat = crate::sim::simulate(&g, &p, &guided.config).latency_s;
+            let ratio = guided_lat / opt.best_latency_s;
+            assert!(ratio <= 1.053, "{name}: guided/opt = {ratio:.3}");
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! The paper's tuning guidelines (§8).
+//!
+//! > "The number of inter-op pools (p) is chosen to be the average model
+//! > width. After p is chosen … the number of MKL threads and the number
+//! > of intra-op threads for each thread pool should be equal to the total
+//! > number of physical cores on the system divided by p."
+//!
+//! This collapses the 96³-point design space of `large.2` to a single
+//! setting derived from graph structure — architecture-independent, since
+//! it only reads the model's computational graph.
+
+use crate::config::{CpuPlatform, FrameworkConfig, OperatorImpl, ParallelismMode};
+use crate::graph::{analyze_width, Graph, WidthAnalysis};
+
+/// A tuned setting plus the analysis that produced it.
+#[derive(Debug, Clone)]
+pub struct Tuning {
+    /// The recommended framework setting.
+    pub config: FrameworkConfig,
+    /// The width analysis it was derived from.
+    pub width: WidthAnalysis,
+}
+
+/// Apply the guidelines to a model graph on a platform.
+pub fn tune(graph: &Graph, platform: &CpuPlatform) -> Tuning {
+    let width = analyze_width(graph);
+    let phys = platform.physical_cores();
+    // pools = average width, clamped to the machine
+    let pools = width.avg_width.clamp(1, phys);
+    let threads = (phys / pools).max(1);
+    let config = FrameworkConfig {
+        inter_op_pools: pools,
+        mkl_threads: threads,
+        intra_op_threads: threads,
+        operator_impl: OperatorImpl::IntraOpParallel,
+        // width ≥ 2 on a multi-socket box wants one pool per socket first
+        // (model parallelism); width-1 models split the batch instead
+        parallelism: if pools >= 2 && platform.sockets > 1 {
+            ParallelismMode::ModelParallel
+        } else {
+            ParallelismMode::DataParallel
+        },
+        ..FrameworkConfig::tuned_default()
+    };
+    Tuning { config, width }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    fn tune_named(name: &str, platform: &CpuPlatform) -> Tuning {
+        let g = models::build(name, models::canonical_batch(name)).unwrap();
+        tune(&g, platform)
+    }
+
+    #[test]
+    fn wd_gets_3_pools_16_threads_on_large2() {
+        // the paper's worked example: W/D → 3 pools, 16 MKL + 16 intra
+        let t = tune_named("wide_deep", &CpuPlatform::large2());
+        assert_eq!(t.config.inter_op_pools, 3);
+        assert_eq!(t.config.mkl_threads, 16);
+        assert_eq!(t.config.intra_op_threads, 16);
+    }
+
+    #[test]
+    fn chain_models_get_one_pool_all_cores() {
+        for name in ["resnet50", "densenet121", "squeezenet"] {
+            let t = tune_named(name, &CpuPlatform::large2());
+            assert_eq!(t.config.inter_op_pools, 1, "{name}");
+            assert_eq!(t.config.mkl_threads, 48, "{name}");
+        }
+    }
+
+    #[test]
+    fn ncf_and_transformer_get_4_pools() {
+        for name in ["ncf", "transformer"] {
+            let t = tune_named(name, &CpuPlatform::large2());
+            assert_eq!(t.config.inter_op_pools, 4, "{name}");
+            assert_eq!(t.config.mkl_threads, 12, "{name}");
+        }
+    }
+
+    #[test]
+    fn never_overthreads() {
+        for name in models::model_names() {
+            for p in [CpuPlatform::small(), CpuPlatform::large(), CpuPlatform::large2()] {
+                let t = tune_named(name, &p);
+                assert!(
+                    !t.config.over_threaded(&p),
+                    "{name} on {}: {:?}",
+                    p.name,
+                    t.config
+                );
+                assert!(t.config.validate(&p).is_ok());
+            }
+        }
+    }
+
+    #[test]
+    fn single_point_not_a_search() {
+        // the guideline is closed-form: same graph → same setting
+        let a = tune_named("inception_v3", &CpuPlatform::large2());
+        let b = tune_named("inception_v3", &CpuPlatform::large2());
+        assert_eq!(a.config, b.config);
+        assert_eq!(a.config.inter_op_pools, 2); // Table 2: IncepV3 = 2
+    }
+}

@@ -1,0 +1,16 @@
+//! Framework-parameter tuning — the paper's §8 contribution.
+//!
+//! * [`guidelines`] — the width-based rule: `pools = average graph width`,
+//!   `mkl_threads = intra_op_threads = physical_cores / pools`.
+//! * [`baselines`] — the Intel blog, TensorFlow performance-guide and
+//!   TensorFlow out-of-the-box settings the paper compares against.
+//! * [`exhaustive`] — the global-optimum search over the design cube
+//!   (96³ points on `large.2`; pruned to the feasible lattice).
+
+pub mod baselines;
+pub mod exhaustive;
+pub mod guidelines;
+
+pub use baselines::{baseline_config, Baseline};
+pub use exhaustive::{exhaustive_search, SearchResult};
+pub use guidelines::tune;

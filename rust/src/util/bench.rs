@@ -1,0 +1,125 @@
+//! Micro-bench harness (criterion is unavailable offline).
+//!
+//! Usage from a `harness = false` bench target:
+//!
+//! ```no_run
+//! use parframe::util::bench::Bench;
+//! let mut b = Bench::new("threadpool");
+//! b.run("folly/10k-tasks", || { /* workload */ });
+//! b.finish();
+//! ```
+//!
+//! Each case is warmed up, then timed for a fixed wall-time budget; the
+//! report prints mean / p50 / p95 / stddev per iteration, matching the
+//! summary criterion would give.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// One benchmark suite (a named group of cases).
+pub struct Bench {
+    name: String,
+    /// (case name, per-iteration seconds)
+    pub results: Vec<(String, Vec<f64>)>,
+    /// Wall-clock budget per case.
+    pub budget: Duration,
+    /// Minimum measured iterations per case.
+    pub min_iters: usize,
+}
+
+impl Bench {
+    /// New suite with default budget (0.5 s per case, ≥10 iterations).
+    pub fn new(name: &str) -> Self {
+        // honor PARFRAME_BENCH_FAST=1 for CI smoke runs
+        let fast = std::env::var("PARFRAME_BENCH_FAST").is_ok();
+        Bench {
+            name: name.to_string(),
+            results: Vec::new(),
+            budget: if fast { Duration::from_millis(50) } else { Duration::from_millis(500) },
+            min_iters: if fast { 3 } else { 10 },
+        }
+    }
+
+    /// Time one case; `f` is the workload for a single iteration.
+    pub fn run<F: FnMut()>(&mut self, case: &str, mut f: F) {
+        // warm-up
+        f();
+        f();
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.budget || samples.len() < self.min_iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+            if samples.len() > 100_000 {
+                break;
+            }
+        }
+        self.report_case(case, &samples);
+        self.results.push((case.to_string(), samples));
+    }
+
+    /// Time one case that returns a value (prevents dead-code elimination).
+    pub fn run_with_output<T, F: FnMut() -> T>(&mut self, case: &str, mut f: F) {
+        self.run(case, || {
+            std::hint::black_box(f());
+        });
+    }
+
+    fn report_case(&self, case: &str, samples: &[f64]) {
+        println!(
+            "{}/{:<40} iters={:<7} mean={} p50={} p95={} sd={}",
+            self.name,
+            case,
+            samples.len(),
+            fmt_t(stats::mean(samples)),
+            fmt_t(stats::median(samples)),
+            fmt_t(stats::percentile(samples, 95.0)),
+            fmt_t(stats::stddev(samples)),
+        );
+    }
+
+    /// Print the suite footer.
+    pub fn finish(&self) {
+        println!("bench suite '{}' done: {} cases", self.name, self.results.len());
+    }
+}
+
+/// Human-format a duration in seconds.
+pub fn fmt_t(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{:.3}s", secs)
+    } else if secs >= 1e-3 {
+        format!("{:.3}ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3}us", secs * 1e6)
+    } else {
+        format!("{:.1}ns", secs * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_records() {
+        std::env::set_var("PARFRAME_BENCH_FAST", "1");
+        let mut b = Bench::new("t");
+        let mut counter = 0u64;
+        b.run("noop", || {
+            counter = counter.wrapping_add(1);
+        });
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].1.len() >= 3);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert_eq!(fmt_t(2.0), "2.000s");
+        assert_eq!(fmt_t(2e-3), "2.000ms");
+        assert_eq!(fmt_t(2e-6), "2.000us");
+        assert_eq!(fmt_t(2e-9), "2.0ns");
+    }
+}

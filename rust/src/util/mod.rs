@@ -1,0 +1,11 @@
+//! Small in-tree utilities.
+//!
+//! The build environment is fully offline (only the `xla` crate's dependency
+//! closure is vendored), so the pieces a crate would normally pull from
+//! crates.io — a JSON codec, a seedable PRNG, descriptive statistics, a
+//! micro-bench harness — live here instead.
+
+pub mod bench;
+pub mod json;
+pub mod prng;
+pub mod stats;

@@ -1,0 +1,132 @@
+//! End-to-end coordinator tests: real requests through router → batcher →
+//! PJRT worker lanes, verifying batching invariants on live numerics.
+//!
+//! Skipped (with a notice) when `make artifacts` has not run.
+
+use std::path::Path;
+use std::time::Duration;
+
+use parframe::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use parframe::runtime::{gen_input, ModelRuntime, Tensor};
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping coordinator tests: artifacts/ not built");
+        None
+    }
+}
+
+fn mlp_coordinator(max_wait_ms: u64) -> Option<Coordinator> {
+    let dir = artifacts_dir()?;
+    let mut cfg = CoordinatorConfig::for_kind(dir, "mlp");
+    cfg.policy = BatchPolicy { max_wait: Duration::from_millis(max_wait_ms), max_batch: usize::MAX };
+    Some(Coordinator::start(cfg).expect("start coordinator"))
+}
+
+fn item(tag: u32) -> Tensor {
+    gen_input(tag, &[1, 256], 1.0)
+}
+
+#[test]
+fn single_request_roundtrip() {
+    let Some(c) = mlp_coordinator(1) else { return };
+    let resp = c.infer("mlp", item(7)).unwrap();
+    let out = resp.output.expect("inference ok");
+    assert_eq!(out.shape, vec![1, 8]);
+    assert!(out.data.iter().all(|v| v.is_finite()));
+    assert_eq!(c.metrics().requests.get(), 1);
+}
+
+#[test]
+fn batched_equals_unbatched() {
+    // The §2.2.3 invariant: riding a batch must not change a request's
+    // numerics (beyond f32 noise).
+    let Some(c) = mlp_coordinator(20) else { return };
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = ModelRuntime::load_some(dir, |e| e.name == "mlp_b1").unwrap();
+
+    // submit 4 distinct requests quickly so they share one batch
+    let rxs: Vec<_> = (0..4).map(|t| c.submit("mlp", item(20 + t)).unwrap()).collect();
+    for (t, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap();
+        let got = resp.output.expect("ok");
+        let solo = rt.execute_x("mlp_b1", item(20 + t as u32)).unwrap();
+        for (a, b) in got.data.iter().zip(solo.data.iter()) {
+            assert!((a - b).abs() < 1e-4, "req {t}: {a} vs {b}");
+        }
+        assert!(resp.bucket >= 1);
+    }
+    // 4 requests in ≤ 2 dispatches proves batching actually happened
+    assert!(c.metrics().batches.get() <= 2, "batches={}", c.metrics().batches.get());
+    assert!(c.metrics().mean_batch_size() >= 2.0);
+}
+
+#[test]
+fn burst_of_requests_all_answered() {
+    let Some(c) = mlp_coordinator(2) else { return };
+    let rxs: Vec<_> = (0..25).map(|t| c.submit("mlp", item(t)).unwrap()).collect();
+    let mut ok = 0;
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert!(resp.is_ok(), "{:?}", resp.output.err());
+        ok += 1;
+    }
+    assert_eq!(ok, 25);
+    assert_eq!(c.metrics().requests.get(), 25);
+    // buckets are at most 8, so at least ceil(25/8) = 4 batches
+    assert!(c.metrics().batches.get() >= 4);
+}
+
+#[test]
+fn rejects_malformed_input() {
+    let Some(c) = mlp_coordinator(1) else { return };
+    let bad = Tensor { shape: vec![1, 3], data: vec![0.0; 3] };
+    assert!(c.submit("mlp", bad).is_err());
+    let unknown = Tensor { shape: vec![1, 256], data: vec![0.0; 256] };
+    assert!(c.submit("resnet", unknown).is_err());
+}
+
+#[test]
+fn padding_tracked_for_partial_batches() {
+    let Some(c) = mlp_coordinator(1) else { return };
+    // 3 requests into buckets {1,2,4,8} ⇒ bucket 4 with 1 padded row
+    let rxs: Vec<_> = (0..3).map(|t| c.submit("mlp", item(t)).unwrap()).collect();
+    for rx in rxs {
+        assert!(rx.recv().unwrap().is_ok());
+    }
+    // padding happens unless the batcher split 3 = 2 + 1 exactly
+    let padded = c.metrics().padded.get();
+    let batches = c.metrics().batches.get();
+    assert!(padded > 0 || batches >= 2, "padded={padded} batches={batches}");
+}
+
+#[test]
+fn two_lanes_share_load() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = CoordinatorConfig::for_kind(dir, "mlp");
+    cfg.lanes = 2;
+    cfg.policy = BatchPolicy { max_wait: Duration::from_millis(1), max_batch: 2 };
+    let c = Coordinator::start(cfg).expect("start");
+    let rxs: Vec<_> = (0..12).map(|t| c.submit("mlp", item(t)).unwrap()).collect();
+    for rx in rxs {
+        assert!(rx.recv_timeout(Duration::from_secs(30)).unwrap().is_ok());
+    }
+    assert_eq!(c.metrics().requests.get(), 12);
+    assert!(c.metrics().batches.get() >= 6); // max_batch 2 ⇒ ≥6 dispatches
+}
+
+#[test]
+fn transformer_family_served_too() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = CoordinatorConfig::for_kind(dir, "transformer");
+    let c = Coordinator::start(cfg).expect("start");
+    let shape = c.router().item_shape("transformer").unwrap().clone();
+    let seq_input = gen_input(11, &[shape.rows_per_item, shape.feature_dims[0]], 0.5);
+    let resp = c.infer("transformer", seq_input).unwrap();
+    let out = resp.output.expect("ok");
+    assert_eq!(out.shape[0], shape.rows_per_item);
+    assert!(out.data.iter().all(|v| v.is_finite()));
+}

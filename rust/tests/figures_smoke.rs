@@ -1,0 +1,61 @@
+//! Integration: every figure/table generator produces non-empty output
+//! with its expected headline rows (the CLI `figures --all` path).
+
+use parframe::bench_tables;
+
+#[test]
+fn every_figure_renders() {
+    for n in bench_tables::FIGURES {
+        let s = bench_tables::figure(n).unwrap_or_else(|| panic!("fig {n}"));
+        assert!(s.len() > 80, "fig {n} too short:\n{s}");
+        assert!(s.contains(&format!("Fig {n}")), "fig {n} missing header");
+    }
+}
+
+#[test]
+fn table2_renders() {
+    let s = bench_tables::table(2).unwrap();
+    assert!(s.contains("Table 2"));
+    assert!(s.contains("transformer"));
+}
+
+#[test]
+fn unknown_numbers_are_none() {
+    assert!(bench_tables::figure(2).is_none());
+    assert!(bench_tables::figure(99).is_none());
+    assert!(bench_tables::table(1).is_none());
+}
+
+#[test]
+fn fig9_rows_cover_sweep() {
+    let s = bench_tables::figure(9).unwrap();
+    for size in ["256", "512", "4096", "16384"] {
+        assert!(s.contains(size), "fig9 missing size {size}");
+    }
+}
+
+#[test]
+fn fig18_reports_geomeans() {
+    let s = bench_tables::figure(18).unwrap();
+    assert!(s.contains("geomean"));
+    assert!(s.contains("optimum"));
+    for model in bench_tables::evaluation::EVAL_MODELS {
+        assert!(s.contains(model), "fig18 missing {model}");
+    }
+}
+
+#[test]
+fn fig13_lists_all_libraries() {
+    let s = bench_tables::figure(13).unwrap();
+    for lib in ["MKL-DNN", "Eigen"] {
+        assert!(s.contains(lib));
+    }
+}
+
+#[test]
+fn fig14_has_model_and_measurement() {
+    let s = bench_tables::figure(14).unwrap();
+    assert!(s.contains("modelled"));
+    assert!(s.contains("measured"));
+    assert!(s.contains("Folly"));
+}

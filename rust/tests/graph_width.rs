@@ -1,0 +1,79 @@
+//! Integration: width analysis across the whole model zoo (paper Table 2
+//! + Fig. 4's max-width column), and batch-robustness of the guideline.
+
+use parframe::graph::analyze_width;
+use parframe::models;
+
+#[test]
+fn table2_widths_exact() {
+    let expect = [
+        ("densenet121", 1),
+        ("squeezenet", 1),
+        ("resnet50", 1),
+        ("inception_v3", 2),
+        ("wide_deep", 3),
+        ("ncf", 4),
+        ("transformer", 4),
+    ];
+    for (name, want) in expect {
+        let g = models::build(name, models::canonical_batch(name)).unwrap();
+        assert_eq!(analyze_width(&g).avg_width, want, "{name}");
+    }
+}
+
+#[test]
+fn max_widths_match_architectures() {
+    // four-branch inception modules; two-path residual blocks; parallel
+    // embedding tables
+    let expect_max = [
+        ("googlenet", 4),
+        ("inception_v2", 4),
+        ("resnet50", 2),
+        ("squeezenet", 2),
+        ("densenet121", 1),
+        ("caffenet", 1),
+        ("ncf", 4),
+        ("wide_deep", 3),
+    ];
+    for (name, want) in expect_max {
+        let g = models::build(name, models::canonical_batch(name)).unwrap();
+        assert_eq!(analyze_width(&g).max_width, want, "{name}");
+    }
+}
+
+#[test]
+fn widths_stable_across_batch_sizes() {
+    // the guideline must not flap with batch size for the vision set.
+    // (NCF/W&D are excluded: at larger batches their MLP towers cross the
+    // heavy threshold, genuinely changing the parallel structure —
+    // the paper likewise notes best pool counts shift with batch, §4.1.)
+    for name in ["resnet50", "inception_v3", "squeezenet", "densenet121"] {
+        let w16 = analyze_width(&models::build(name, models::canonical_batch(name)).unwrap());
+        let w2x = analyze_width(
+            &models::build(name, models::canonical_batch(name) * 2).unwrap(),
+        );
+        assert_eq!(w16.avg_width, w2x.avg_width, "{name}");
+    }
+}
+
+#[test]
+fn training_graphs_widen() {
+    for name in ["resnet50", "caffenet", "fc4k"] {
+        let fwd = models::build(name, models::canonical_batch(name)).unwrap();
+        let train = models::to_training_graph(&fwd);
+        let wf = analyze_width(&fwd);
+        let wt = analyze_width(&train);
+        assert!(wt.max_width >= wf.max_width.max(2), "{name}: {wt:?}");
+        assert!(wt.heavy_ops > 2 * wf.heavy_ops, "{name}");
+    }
+}
+
+#[test]
+fn every_zoo_graph_is_valid_dag() {
+    for name in models::model_names() {
+        for batch in [1, models::canonical_batch(name)] {
+            let g = models::build(name, batch).unwrap();
+            g.validate().unwrap_or_else(|e| panic!("{name}@{batch}: {e}"));
+        }
+    }
+}

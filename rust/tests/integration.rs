@@ -1,0 +1,94 @@
+//! Cross-module integration: tuner → coordinator lane-count wiring, config
+//! loader → simulator, trace output on simulated runs.
+
+use parframe::config::{CpuPlatform, RunConfig};
+use parframe::models;
+use parframe::sim::{self, SimOptions};
+use parframe::trace;
+use parframe::tuner;
+
+#[test]
+fn config_file_roundtrip_drives_simulation() {
+    let text = r#"{
+        "platform": "large",
+        "inter_op_pools": 2,
+        "mkl_threads": 12,
+        "intra_op_threads": 12,
+        "operator_impl": "matmul2",
+        "math_lib": "mkl-dnn",
+        "pool_lib": "folly"
+    }"#;
+    let cfg = RunConfig::from_json_str(text).unwrap();
+    let g = models::build("inception_v3", 16).unwrap();
+    let r = sim::simulate(&g, &cfg.platform, &cfg.framework);
+    assert!(r.latency_s > 0.0);
+}
+
+#[test]
+fn tuner_output_feeds_simulator_everywhere() {
+    for name in models::model_names() {
+        let g = models::build(name, models::canonical_batch(name)).unwrap();
+        for p in [CpuPlatform::small(), CpuPlatform::large2()] {
+            let t = tuner::tune(&g, &p);
+            let r = sim::simulate(&g, &p, &t.config);
+            assert!(r.latency_s.is_finite() && r.latency_s > 0.0, "{name} on {}", p.name);
+        }
+    }
+}
+
+#[test]
+fn ascii_and_chrome_traces_from_simulation() {
+    let p = CpuPlatform::small();
+    let g = models::build("squeezenet", 16).unwrap();
+    let t = tuner::tune(&g, &p);
+    let r = sim::simulate_opts(&g, &p, &t.config, &SimOptions { record_timelines: true });
+    let ascii = trace::ascii_trace(&r.timelines, r.latency_s, 60);
+    assert!(ascii.lines().count() >= 2);
+    let chrome = trace::chrome_trace(&r.timelines);
+    let parsed = parframe::util::json::Json::parse(&chrome).unwrap();
+    assert!(!parsed.as_arr().unwrap().is_empty());
+}
+
+#[test]
+fn simulated_throughput_scales_with_batch() {
+    // larger batches amortise framework overhead: items/s should rise
+    let p = CpuPlatform::large();
+    let lat = |b: usize| {
+        let g = models::build("resnet50", b).unwrap();
+        let t = tuner::tune(&g, &p);
+        sim::simulate(&g, &p, &t.config).throughput(b)
+    };
+    let t1 = lat(1);
+    let t16 = lat(16);
+    assert!(t16 > t1, "batch-16 throughput {t16} <= batch-1 {t1}");
+}
+
+#[test]
+fn end_to_end_sim_story_inception() {
+    // the Fig. 1 narrative as an integration check: each tuning step helps
+    let p = CpuPlatform::large();
+    let g = models::build("inception_v3", 16).unwrap();
+    use parframe::config::{FrameworkConfig, OperatorImpl};
+    let base = FrameworkConfig {
+        inter_op_pools: 1,
+        mkl_threads: p.logical_cores(),
+        intra_op_threads: 1,
+        operator_impl: OperatorImpl::Serial,
+        ..FrameworkConfig::tuned_default()
+    };
+    let step2 = FrameworkConfig { inter_op_pools: 2, mkl_threads: 24, ..base.clone() };
+    let step3 = FrameworkConfig {
+        intra_op_threads: 24,
+        operator_impl: OperatorImpl::IntraOpParallel,
+        ..step2.clone()
+    };
+    let guided = tuner::tune(&g, &p).config;
+    let l0 = sim::simulate(&g, &p, &base).latency_s;
+    let l1 = sim::simulate(&g, &p, &step2).latency_s;
+    let l2 = sim::simulate(&g, &p, &step3).latency_s;
+    let l3 = sim::simulate(&g, &p, &guided).latency_s;
+    assert!(l1 < l0, "inter-op step should help: {l0} -> {l1}");
+    assert!(l2 < l1, "intra-op step should help: {l1} -> {l2}");
+    assert!(l3 <= l2 * 1.001, "guideline should be at least as good: {l2} -> {l3}");
+    assert!(l0 / l3 > 1.5, "total win {:.2}x", l0 / l3);
+}

@@ -1,0 +1,224 @@
+//! Property-based tests (in-tree harness: seeded PRNG over many random
+//! cases — crates.io proptest is unavailable offline).
+//!
+//! Invariants covered:
+//! * simulator: monotonicity, determinism, conservation of work;
+//! * batcher: order preservation, bucket sufficiency, no request loss;
+//! * width analysis: bounds and invariance;
+//! * JSON codec: roundtrip on random documents.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use parframe::config::{CpuPlatform, FrameworkConfig, OperatorImpl};
+use parframe::coordinator::batcher::{BatchPolicy, DynamicBatcher};
+use parframe::coordinator::request::{Request, RequestId};
+use parframe::graph::{analyze_width, Graph, GraphBuilder};
+use parframe::ops::OpKind;
+use parframe::runtime::{Manifest, Tensor};
+use parframe::sim;
+use parframe::util::json::{self, Json};
+use parframe::util::prng::Prng;
+
+const CASES: usize = 40;
+
+/// Random layered DAG with heavy/light ops.
+fn random_graph(rng: &mut Prng) -> Graph {
+    let mut b = GraphBuilder::new("random", 16);
+    let layers = rng.range(2, 6);
+    let mut prev_layer: Vec<parframe::graph::NodeId> = Vec::new();
+    let root = b.add("in", OpKind::DataMovement { bytes: 1024, name: "Feed" }, &[]);
+    prev_layer.push(root);
+    for l in 0..layers {
+        let width = rng.range(1, 5);
+        let mut layer = Vec::new();
+        for w in 0..width {
+            let n_deps = rng.range(1, prev_layer.len());
+            let mut deps = prev_layer.clone();
+            rng.shuffle(&mut deps);
+            deps.truncate(n_deps);
+            let kind = if rng.f64() < 0.7 {
+                let m = rng.range(64, 1024);
+                OpKind::MatMul { m, k: rng.range(64, 1024), n: rng.range(64, 1024) }
+            } else {
+                OpKind::Elementwise { elems: rng.range(100, 100_000), name: "ReLU" }
+            };
+            layer.push(b.add(&format!("l{l}w{w}"), kind, &deps));
+        }
+        prev_layer = layer;
+    }
+    b.build()
+}
+
+fn random_cfg(rng: &mut Prng, p: &CpuPlatform) -> FrameworkConfig {
+    FrameworkConfig {
+        inter_op_pools: rng.range(1, p.physical_cores().min(8)),
+        mkl_threads: rng.range(1, p.physical_cores()),
+        intra_op_threads: rng.range(1, p.physical_cores()),
+        operator_impl: if rng.f64() < 0.5 { OperatorImpl::Serial } else { OperatorImpl::IntraOpParallel },
+        ..FrameworkConfig::tuned_default()
+    }
+}
+
+#[test]
+fn prop_simulation_deterministic_and_finite() {
+    let mut rng = Prng::new(0xC0FFEE);
+    let p = CpuPlatform::large();
+    for case in 0..CASES {
+        let g = random_graph(&mut rng);
+        let cfg = random_cfg(&mut rng, &p);
+        let a = sim::simulate(&g, &p, &cfg);
+        let b = sim::simulate(&g, &p, &cfg);
+        assert_eq!(a.latency_s, b.latency_s, "case {case}");
+        assert!(a.latency_s.is_finite() && a.latency_s > 0.0, "case {case}");
+        assert!(a.breakdown.total().is_finite(), "case {case}");
+    }
+}
+
+#[test]
+fn prop_tuned_big_platform_never_loses_to_tuned_small() {
+    // tuner-level monotonicity: a tuned `large` run beats a tuned `small`
+    // run (raw per-core speed differs — small clocks higher — but the
+    // tuned large config has 6× the cores to deploy)
+    let mut rng = Prng::new(0xBEEF);
+    for case in 0..CASES {
+        let g = random_graph(&mut rng);
+        let small_p = CpuPlatform::small();
+        let large_p = CpuPlatform::large();
+        let small = sim::simulate(&g, &small_p, &parframe::tuner::tune(&g, &small_p).config).latency_s;
+        let large = sim::simulate(&g, &large_p, &parframe::tuner::tune(&g, &large_p).config).latency_s;
+        assert!(large <= small * 1.05, "case {case}: small={small} large={large}");
+    }
+}
+
+#[test]
+fn prop_width_bounds() {
+    let mut rng = Prng::new(0xF00D);
+    for case in 0..CASES {
+        let g = random_graph(&mut rng);
+        let w = analyze_width(&g);
+        let heavy = g.heavy_nodes().count();
+        assert_eq!(w.heavy_ops, heavy, "case {case}");
+        assert!(w.max_width <= heavy.max(1), "case {case}");
+        assert!(w.avg_width >= 1, "case {case}");
+        assert!(w.avg_width <= w.max_width.max(1), "case {case}");
+        assert_eq!(w.per_level.iter().sum::<usize>(), heavy, "case {case}");
+    }
+}
+
+#[test]
+fn prop_tuned_config_always_valid() {
+    let mut rng = Prng::new(0xDADA);
+    for case in 0..CASES {
+        let g = random_graph(&mut rng);
+        for p in [CpuPlatform::small(), CpuPlatform::large(), CpuPlatform::large2()] {
+            let t = parframe::tuner::tune(&g, &p);
+            assert!(t.config.validate(&p).is_ok(), "case {case} on {}", p.name);
+            assert!(!t.config.over_threaded(&p), "case {case} on {}", p.name);
+        }
+    }
+}
+
+fn mini_manifest(buckets: &[usize]) -> Manifest {
+    let arts: Vec<String> = buckets
+        .iter()
+        .map(|b| {
+            format!(
+                r#"{{"name":"mlp_b{b}","file":"f","kind":"mlp","batch":{b},
+                  "inputs":[{{"shape":[{b},4],"tag":0,"scale":1.0}}],
+                  "output_shape":[{b},2],
+                  "expected":{{"prefix":[],"sum":0,"abs_sum":0,"count":{}}}}}"#,
+                b * 2
+            )
+        })
+        .collect();
+    Manifest::parse(
+        std::path::Path::new("/tmp"),
+        &format!(r#"{{"version":1,"artifacts":[{}]}}"#, arts.join(",")),
+    )
+    .unwrap()
+}
+
+fn mk_req(id: u64) -> Request {
+    let (tx, _rx) = std::sync::mpsc::channel();
+    Request {
+        id: RequestId(id),
+        kind: "mlp".into(),
+        input: Tensor { shape: vec![1, 4], data: vec![0.0; 4] },
+        enqueued: Instant::now(),
+        reply: tx,
+    }
+}
+
+#[test]
+fn prop_batcher_no_loss_no_reorder() {
+    let mut rng = Prng::new(0xABCD);
+    for case in 0..CASES {
+        let m = mini_manifest(&[1, 2, 4, 8]);
+        let policy = BatchPolicy {
+            max_wait: Duration::ZERO,
+            max_batch: rng.range(1, 12),
+        };
+        let mut b = DynamicBatcher::new("mlp", &m, policy);
+        let n = rng.range(1, 60);
+        for i in 0..n {
+            b.push(mk_req(i as u64));
+        }
+        let mut seen: Vec<u64> = Vec::new();
+        while !b.is_empty() {
+            let batch = b.cut();
+            assert!(batch.bucket >= batch.requests.len().min(8), "case {case}");
+            assert!(batch.requests.len() <= batch.bucket, "case {case}");
+            seen.extend(batch.requests.iter().map(|r| r.id.0));
+        }
+        let want: Vec<u64> = (0..n as u64).collect();
+        assert_eq!(seen, want, "case {case}: loss or reorder");
+    }
+}
+
+#[test]
+fn prop_bucket_is_smallest_sufficient() {
+    let m = mini_manifest(&[1, 2, 4, 8]);
+    let b = DynamicBatcher::new("mlp", &m, BatchPolicy::default());
+    for n in 1..=20usize {
+        let bucket = b.bucket_for(n);
+        if n <= 8 {
+            assert!(bucket >= n);
+            // no smaller compiled bucket would fit
+            for smaller in [1usize, 2, 4, 8] {
+                if smaller < bucket {
+                    assert!(smaller < n, "n={n}: bucket {bucket} not minimal");
+                }
+            }
+        } else {
+            assert_eq!(bucket, 8, "overflow clamps to max bucket");
+        }
+    }
+}
+
+fn random_json(rng: &mut Prng, depth: usize) -> Json {
+    match if depth == 0 { rng.range(0, 2) } else { rng.range(0, 4) } {
+        0 => Json::Num((rng.f64() * 2000.0 - 1000.0 * 0.5).round() / 8.0),
+        1 => Json::Bool(rng.f64() < 0.5),
+        2 => Json::Str(format!("s{}-\"q\"\n", rng.below(1000))),
+        3 => Json::Arr((0..rng.range(0, 4)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => {
+            let mut m = BTreeMap::new();
+            for i in 0..rng.range(0, 4) {
+                m.insert(format!("k{i}"), random_json(rng, depth - 1));
+            }
+            Json::Obj(m)
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    let mut rng = Prng::new(0x5EED);
+    for case in 0..200 {
+        let v = random_json(&mut rng, 3);
+        let text = json::to_string(&v);
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(v, back, "case {case}");
+    }
+}

@@ -1,0 +1,93 @@
+//! Integration: load AOT artifacts via PJRT and verify numerics against
+//! the python-computed digests (the cross-language correctness check).
+//!
+//! Requires `make artifacts` to have run; tests no-op with a notice when
+//! the artifacts directory is absent (e.g. bare `cargo test` in CI).
+
+use std::path::Path;
+
+use parframe::runtime::{gen_input, ModelRuntime, Tensor};
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping runtime tests: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn loads_all_artifacts_and_verifies_digests() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = ModelRuntime::load(dir).expect("load artifacts");
+    assert!(rt.loaded().len() >= 8, "loaded: {:?}", rt.loaded());
+    for name in rt.loaded().into_iter().map(str::to_string).collect::<Vec<_>>() {
+        rt.self_check(&name).unwrap_or_else(|e| panic!("{name}: {e:?}"));
+    }
+}
+
+#[test]
+fn mlp_batch_rows_independent() {
+    // the invariant that makes dynamic batching legal: row i of a batched
+    // execution equals the single-row execution of row i
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = ModelRuntime::load_some(dir, |e| e.kind == "mlp").expect("load");
+    let b4 = rt.manifest().artifact_for("mlp", 4).unwrap().clone();
+    let full_in = b4.inputs[0].generate();
+    let full = rt.execute_x(&b4.name, full_in.clone()).unwrap();
+    let cols = b4.output_shape[1];
+    let in_dim = b4.inputs[0].shape[1];
+
+    let b1 = rt.manifest().artifact_for("mlp", 1).unwrap().clone();
+    for row in 0..2 {
+        let row_in = Tensor {
+            shape: vec![1, in_dim],
+            data: full_in.data[row * in_dim..(row + 1) * in_dim].to_vec(),
+        };
+        let row_out = rt.execute_x(&b1.name, row_in).unwrap();
+        for c in 0..cols {
+            let a = full.data[row * cols + c];
+            let b = row_out.data[c];
+            assert!((a - b).abs() < 1e-4, "row {row} col {c}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn matmul_artifact_matches_host_reference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = ModelRuntime::load_some(dir, |e| e.name == "matmul_128").expect("load");
+    let entry = rt.manifest().get("matmul_128").unwrap().clone();
+    let x = entry.inputs[0].generate();
+    let w = entry.inputs[1].generate();
+    let out = rt.execute("matmul_128", &[x.clone(), w.clone()]).unwrap();
+    // host-side reference for a few entries
+    let n = 128;
+    for (r, c) in [(0usize, 0usize), (3, 7), (127, 127)] {
+        let mut acc = 0f64;
+        for k in 0..n {
+            acc += x.data[r * n + k] as f64 * w.data[k * n + c] as f64;
+        }
+        let got = out.data[r * n + c] as f64;
+        assert!((got - acc).abs() < 1e-3, "({r},{c}): {got} vs {acc}");
+    }
+}
+
+#[test]
+fn gen_input_is_deterministic() {
+    let a = gen_input(3, &[64, 64], 0.125);
+    let b = gen_input(3, &[64, 64], 0.125);
+    assert_eq!(a, b);
+}
+
+#[test]
+fn execute_rejects_bad_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = ModelRuntime::load_some(dir, |e| e.kind == "mlp").expect("load");
+    let bad = Tensor { shape: vec![1, 8], data: vec![0.0; 8] };
+    assert!(rt.execute_x("mlp_b1", bad).is_err());
+    assert!(rt.execute("mlp_b1", &[]).is_err()); // wrong arity
+    assert!(rt.execute("nope", &[]).is_err());
+}

@@ -1,0 +1,112 @@
+//! Integration: the three real thread pools under adversarial load
+//! (beyond the per-pool unit tests) — ordering, stress, nested submits.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use parframe::config::PoolLib;
+use parframe::libs::threadpool::{make_pool, scatter_gather, Task, WaitGroup};
+
+fn tasks(counter: &Arc<AtomicUsize>, n: usize) -> Vec<Task> {
+    (0..n)
+        .map(|_| {
+            let c = Arc::clone(counter);
+            Box::new(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            }) as Task
+        })
+        .collect()
+}
+
+#[test]
+fn stress_50k_tasks_each_pool() {
+    for lib in PoolLib::ALL {
+        let pool = make_pool(lib, 4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        scatter_gather(pool.as_ref(), tasks(&counter, 50_000));
+        assert_eq!(counter.load(Ordering::Relaxed), 50_000, "{lib:?}");
+    }
+}
+
+#[test]
+fn repeated_waves_drain_cleanly() {
+    for lib in PoolLib::ALL {
+        let pool = make_pool(lib, 3);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..20 {
+            scatter_gather(pool.as_ref(), tasks(&counter, 500));
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 10_000, "{lib:?}");
+    }
+}
+
+#[test]
+fn uneven_task_durations_balance() {
+    // mix of long and short tasks: completion requires work distribution
+    for lib in PoolLib::ALL {
+        let pool = make_pool(lib, 4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let wg = WaitGroup::new(100);
+        for i in 0..100usize {
+            let c = Arc::clone(&counter);
+            let h = wg.handle();
+            pool.execute(Box::new(move || {
+                if i % 10 == 0 {
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                }
+                c.fetch_add(1, Ordering::Relaxed);
+                h.done();
+            }));
+        }
+        wg.wait();
+        assert_eq!(counter.load(Ordering::Relaxed), 100, "{lib:?}");
+    }
+}
+
+#[test]
+fn deep_nested_submission() {
+    // each task spawns a child; the pool must not deadlock on recursion
+    for lib in PoolLib::ALL {
+        let pool = make_pool(lib, 2);
+        let wg = WaitGroup::new(64);
+        fn spawn_chain(
+            pool: Arc<dyn parframe::libs::threadpool::TaskPool>,
+            wg: WaitGroup,
+            depth: usize,
+        ) {
+            let p2 = Arc::clone(&pool);
+            pool.execute(Box::new(move || {
+                wg.done();
+                if depth > 0 {
+                    let wg2 = wg.handle();
+                    spawn_chain(p2, wg2, depth - 1);
+                }
+            }));
+        }
+        // 8 chains of depth 8 = 64 completions
+        for _ in 0..8 {
+            spawn_chain(Arc::clone(&pool), wg.handle(), 7);
+        }
+        wg.wait();
+    }
+}
+
+#[test]
+fn drop_with_pending_work_completes_or_discards_safely() {
+    // dropping a pool mid-stream must not hang or crash
+    for lib in PoolLib::ALL {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = make_pool(lib, 2);
+            for _ in 0..1000 {
+                let c = Arc::clone(&counter);
+                pool.execute(Box::new(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                }));
+            }
+            // drop immediately: pools drain on shutdown
+        }
+        let done = counter.load(Ordering::Relaxed);
+        assert!(done <= 1000, "{lib:?}: {done}");
+    }
+}
