@@ -1,97 +1,93 @@
 //! END-TO-END driver (DESIGN.md §Experiment index, row "E2E"): serve a
-//! real workload through the full three-layer stack and report the
-//! latency/throughput table.
+//! workload through the full three-layer stack and report the
+//! latency/throughput table — with **zero external artifacts**, on the
+//! simulation backend.
 //!
-//! Path exercised: Poisson request generator → router → dynamic batcher
-//! (bucketed to the AOT batch sizes) → PJRT worker lanes executing the
-//! JAX/Pallas-compiled artifacts → per-request latency accounting.
+//! Path exercised: seeded load generator (closed- and open-loop) → router
+//! → dynamic batcher (bucketed batching, max-wait) → worker lanes
+//! executing on `SimBackend` (per-batch latency from the discrete-event
+//! simulator under tuner-chosen framework knobs) → per-request latency
+//! accounting.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example serve_workload
+//! cargo run --release --example serve_workload
 //! ```
+//!
+//! With AOT artifacts built (`make artifacts`), swap the config for
+//! `CoordinatorConfig::pjrt("artifacts", &["mlp"])` to drive the same
+//! harness over PJRT.
 
-use std::path::Path;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use parframe::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
-use parframe::runtime::gen_input;
-use parframe::util::prng::Prng;
-use parframe::util::stats;
+use parframe::config::CpuPlatform;
+use parframe::coordinator::{loadgen, BatchPolicy, Coordinator, CoordinatorConfig, LoadgenConfig};
 
-struct RunSummary {
-    kind: &'static str,
-    offered_rps: f64,
-    achieved_rps: f64,
-    p50_ms: f64,
-    p95_ms: f64,
-    p99_ms: f64,
-    mean_batch: f64,
-}
-
-fn drive(kind: &'static str, n_requests: usize, offered_rps: f64) -> anyhow::Result<RunSummary> {
-    let mut cfg = CoordinatorConfig::for_kind("artifacts", kind);
+fn coordinator(kind: &str, lanes: usize) -> anyhow::Result<Coordinator> {
+    let mut cfg = CoordinatorConfig::sim(CpuPlatform::large2(), &[kind]);
+    cfg.lanes = lanes;
     cfg.policy = BatchPolicy { max_wait: Duration::from_millis(2), max_batch: usize::MAX };
-    let coord = Coordinator::start(cfg)?;
-    let shape = coord.router().item_shape(kind).unwrap().clone();
-    let dims: Vec<usize> = std::iter::once(shape.rows_per_item)
-        .chain(shape.feature_dims.iter().copied())
-        .collect();
-
-    // Poisson arrivals at the offered rate
-    let mut rng = Prng::new(7);
-    let t0 = Instant::now();
-    let mut rxs = Vec::with_capacity(n_requests);
-    let mut next_arrival = 0.0f64;
-    for i in 0..n_requests {
-        next_arrival += rng.exp(1.0 / offered_rps);
-        let now = t0.elapsed().as_secs_f64();
-        if next_arrival > now {
-            std::thread::sleep(Duration::from_secs_f64(next_arrival - now));
-        }
-        let input = gen_input(i as u32 % 977, &dims, 1.0);
-        rxs.push(coord.submit(kind, input)?);
-    }
-    let mut latencies = Vec::with_capacity(n_requests);
-    for rx in rxs {
-        let resp = rx.recv()?;
-        anyhow::ensure!(resp.is_ok(), "request failed: {:?}", resp.output.err());
-        latencies.push(resp.queue_s + resp.execute_s);
-    }
-    let wall = t0.elapsed().as_secs_f64();
-    Ok(RunSummary {
-        kind,
-        offered_rps,
-        achieved_rps: n_requests as f64 / wall,
-        p50_ms: stats::median(&latencies) * 1e3,
-        p95_ms: stats::percentile(&latencies, 95.0) * 1e3,
-        p99_ms: stats::percentile(&latencies, 99.0) * 1e3,
-        mean_batch: coord.metrics().mean_batch_size(),
-    })
+    Coordinator::start(cfg)
 }
 
 fn main() -> anyhow::Result<()> {
-    if !Path::new("artifacts/manifest.json").exists() {
-        eprintln!("artifacts/ missing — run `make artifacts` first");
-        std::process::exit(1);
-    }
-    println!("end-to-end serving driver (PJRT CPU, AOT JAX/Pallas artifacts)\n");
+    println!("end-to-end serving driver (sim backend, large.2, tuner-chosen knobs)\n");
     println!(
-        "{:<12} {:>11} {:>11} {:>9} {:>9} {:>9} {:>11}",
-        "model", "offered/s", "achieved/s", "p50 ms", "p95 ms", "p99 ms", "mean batch"
+        "{:<12} {:<14} {:>11} {:>10} {:>10} {:>10} {:>11}",
+        "model", "arrival", "achieved/s", "p50 ms", "p99 ms", "mean ms", "mean batch"
     );
-    // the MLP ranker at three load levels; the transformer at one
-    for (kind, n, rps) in [
-        ("mlp", 200, 200.0),
-        ("mlp", 200, 1000.0),
-        ("mlp", 200, 4000.0),
-        ("transformer", 24, 8.0),
-    ] {
-        let s = drive(kind, n, rps)?;
+
+    // closed loop: rising concurrency fills batches (the paper's §2.2.3
+    // request-level parallelism mapped onto the batch dimension)
+    for concurrency in [1usize, 4, 16] {
+        let coord = coordinator("wide_deep", 1)?;
+        let cfg = LoadgenConfig::closed("wide_deep", 256, concurrency).with_seed(42);
+        let r = loadgen::run(&coord, &cfg)?;
+        anyhow::ensure!(r.errors == 0, "closed-loop errors: {}", r.errors);
         println!(
-            "{:<12} {:>11.0} {:>11.0} {:>9.2} {:>9.2} {:>9.2} {:>11.2}",
-            s.kind, s.offered_rps, s.achieved_rps, s.p50_ms, s.p95_ms, s.p99_ms, s.mean_batch
+            "{:<12} {:<14} {:>11.0} {:>10.3} {:>10.3} {:>10.3} {:>11.2}",
+            "wide_deep",
+            format!("closed x{concurrency}"),
+            r.throughput_rps,
+            r.model_p50_ms,
+            r.model_p99_ms,
+            r.model_mean_ms,
+            r.mean_batch
         );
     }
+
+    // open loop: Poisson arrivals at rising offered rates
+    for rate in [200.0f64, 1000.0, 4000.0] {
+        let coord = coordinator("wide_deep", 1)?;
+        let r =
+            loadgen::run(&coord, &LoadgenConfig::open("wide_deep", 256, rate).with_seed(7))?;
+        anyhow::ensure!(r.errors == 0, "open-loop errors: {}", r.errors);
+        println!(
+            "{:<12} {:<14} {:>11.0} {:>10.3} {:>10.3} {:>10.3} {:>11.2}",
+            "wide_deep",
+            format!("open {rate:.0}/s"),
+            r.throughput_rps,
+            r.model_p50_ms,
+            r.model_p99_ms,
+            r.model_mean_ms,
+            r.mean_batch
+        );
+    }
+
+    // a sequence model rides the same path (32 rows per item)
+    let coord = coordinator("transformer", 2)?;
+    let r = loadgen::run(&coord, &LoadgenConfig::closed("transformer", 48, 8))?;
+    anyhow::ensure!(r.errors == 0, "transformer errors: {}", r.errors);
+    println!(
+        "{:<12} {:<14} {:>11.0} {:>10.3} {:>10.3} {:>10.3} {:>11.2}",
+        "transformer",
+        "closed x8",
+        r.throughput_rps,
+        r.model_p50_ms,
+        r.model_p99_ms,
+        r.model_mean_ms,
+        r.mean_batch
+    );
+
     println!("\n(batching kicks in as offered load rises: mean batch grows, per-request");
     println!(" throughput scales — the paper's §2.2.3 request-level parallelism.)");
     Ok(())

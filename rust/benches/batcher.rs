@@ -44,7 +44,7 @@ fn main() {
     b.run("push+cut/64-requests", || {
         let mut batcher = DynamicBatcher::new(
             "mlp",
-            &manifest,
+            manifest.buckets("mlp"),
             BatchPolicy { max_wait: Duration::ZERO, max_batch: 8 },
         );
         for i in 0..64 {
@@ -55,7 +55,7 @@ fn main() {
         }
     });
 
-    let router = Router::new(&manifest, &["mlp"]).unwrap();
+    let router = Router::new(&manifest.catalog(&["mlp"]).unwrap()).unwrap();
     let r = req(0);
     b.run_with_output("router/validate", || router.route(&r).is_ok());
 

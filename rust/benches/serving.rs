@@ -1,0 +1,52 @@
+//! Bench: the sim-backed serving path — coordinator round-trips and
+//! closed-loop load generation with zero external artifacts. This is the
+//! coordinator-overhead counterpart of `benches/runtime.rs` (which needs
+//! AOT artifacts and measures real PJRT execution).
+
+use std::time::Duration;
+
+use parframe::config::CpuPlatform;
+use parframe::coordinator::{loadgen, BatchPolicy, Coordinator, CoordinatorConfig, LoadgenConfig};
+use parframe::runtime::gen_input;
+use parframe::util::bench::Bench;
+
+fn coordinator(lanes: usize, max_wait: Duration) -> Coordinator {
+    let mut cfg = CoordinatorConfig::sim(CpuPlatform::large(), &["wide_deep"]);
+    cfg.lanes = lanes;
+    cfg.policy = BatchPolicy { max_wait, max_batch: usize::MAX };
+    Coordinator::start(cfg).expect("start sim coordinator")
+}
+
+fn main() {
+    let mut b = Bench::new("serving");
+
+    let coord = coordinator(1, Duration::from_micros(200));
+    let dims = coord.router().item_shape("wide_deep").unwrap().dims();
+
+    b.run_with_output("sim/single-roundtrip", || {
+        coord.infer("wide_deep", gen_input(3, &dims, 1.0)).unwrap().is_ok()
+    });
+
+    b.run_with_output("sim/16-concurrent", || {
+        let rxs: Vec<_> = (0..16)
+            .map(|t| coord.submit("wide_deep", gen_input(t, &dims, 1.0)).unwrap())
+            .collect();
+        rxs.into_iter().filter(|rx| rx.recv().unwrap().is_ok()).count()
+    });
+
+    b.run_with_output("sim/loadgen-closed-64x4", || {
+        let r = loadgen::run(&coord, &LoadgenConfig::closed("wide_deep", 64, 4)).unwrap();
+        assert_eq!(r.errors, 0);
+        r.completed
+    });
+
+    drop(coord);
+    let two_lanes = coordinator(2, Duration::from_micros(200));
+    b.run_with_output("sim/2-lanes/loadgen-closed-64x8", || {
+        let r = loadgen::run(&two_lanes, &LoadgenConfig::closed("wide_deep", 64, 8)).unwrap();
+        assert_eq!(r.errors, 0);
+        r.completed
+    });
+    println!("coordinator metrics: {}", two_lanes.metrics().summary());
+    b.finish();
+}

@@ -9,8 +9,6 @@
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-use crate::runtime::Manifest;
-
 use super::request::Request;
 
 /// Batching policy knobs.
@@ -47,10 +45,14 @@ pub struct DynamicBatcher {
 }
 
 impl DynamicBatcher {
-    /// Create a batcher for one model family from the artifact manifest.
-    pub fn new(kind: &str, manifest: &Manifest, policy: BatchPolicy) -> Self {
-        let buckets = manifest.buckets(kind);
-        assert!(!buckets.is_empty(), "no compiled buckets for kind '{kind}'");
+    /// Create a batcher for one model family over its executable batch
+    /// buckets (normalised to an ascending, deduplicated, non-zero list —
+    /// the backend catalog supplies these).
+    pub fn new(kind: &str, mut buckets: Vec<usize>, policy: BatchPolicy) -> Self {
+        buckets.retain(|&b| b > 0);
+        buckets.sort_unstable();
+        buckets.dedup();
+        assert!(!buckets.is_empty(), "no batch buckets for kind '{kind}'");
         DynamicBatcher { kind: kind.to_string(), queue: VecDeque::new(), policy, buckets }
     }
 
@@ -123,25 +125,10 @@ impl DynamicBatcher {
 mod tests {
     use super::*;
     use crate::runtime::Tensor;
-    use std::path::Path;
     use std::sync::mpsc::channel;
 
-    fn manifest() -> Manifest {
-        Manifest::parse(
-            Path::new("/tmp"),
-            r#"{"version":1,"artifacts":[
-              {"name":"mlp_b1","file":"f","kind":"mlp","batch":1,
-               "inputs":[{"shape":[1,4],"tag":0,"scale":1.0}],"output_shape":[1,2],
-               "expected":{"prefix":[],"sum":0,"abs_sum":0,"count":2}},
-              {"name":"mlp_b2","file":"f","kind":"mlp","batch":2,
-               "inputs":[{"shape":[2,4],"tag":0,"scale":1.0}],"output_shape":[2,2],
-               "expected":{"prefix":[],"sum":0,"abs_sum":0,"count":4}},
-              {"name":"mlp_b4","file":"f","kind":"mlp","batch":4,
-               "inputs":[{"shape":[4,4],"tag":0,"scale":1.0}],"output_shape":[4,2],
-               "expected":{"prefix":[],"sum":0,"abs_sum":0,"count":8}}
-            ]}"#,
-        )
-        .unwrap()
+    fn buckets() -> Vec<usize> {
+        vec![1, 2, 4]
     }
 
     fn req(id: u64) -> Request {
@@ -156,8 +143,8 @@ mod tests {
     }
 
     #[test]
-    fn buckets_from_manifest() {
-        let b = DynamicBatcher::new("mlp", &manifest(), BatchPolicy::default());
+    fn buckets_from_catalog() {
+        let b = DynamicBatcher::new("mlp", buckets(), BatchPolicy::default());
         assert_eq!(b.max_bucket(), 4);
         assert_eq!(b.bucket_for(1), 1);
         assert_eq!(b.bucket_for(3), 4);
@@ -165,8 +152,16 @@ mod tests {
     }
 
     #[test]
+    fn buckets_normalised() {
+        // unsorted, duplicated, zero-containing input is cleaned up
+        let b = DynamicBatcher::new("mlp", vec![4, 0, 1, 4, 2], BatchPolicy::default());
+        assert_eq!(b.max_bucket(), 4);
+        assert_eq!(b.bucket_for(2), 2);
+    }
+
+    #[test]
     fn full_bucket_is_ready_immediately() {
-        let mut b = DynamicBatcher::new("mlp", &manifest(), BatchPolicy::default());
+        let mut b = DynamicBatcher::new("mlp", buckets(), BatchPolicy::default());
         for i in 0..4 {
             b.push(req(i));
         }
@@ -180,7 +175,7 @@ mod tests {
     #[test]
     fn partial_batch_waits_for_deadline() {
         let policy = BatchPolicy { max_wait: Duration::from_millis(50), max_batch: usize::MAX };
-        let mut b = DynamicBatcher::new("mlp", &manifest(), policy);
+        let mut b = DynamicBatcher::new("mlp", buckets(), policy);
         b.push(req(0));
         let now = Instant::now();
         assert!(!b.ready(now));
@@ -192,7 +187,7 @@ mod tests {
 
     #[test]
     fn arrival_order_preserved() {
-        let mut b = DynamicBatcher::new("mlp", &manifest(), BatchPolicy::default());
+        let mut b = DynamicBatcher::new("mlp", buckets(), BatchPolicy::default());
         for i in 0..3 {
             b.push(req(i));
         }
@@ -205,7 +200,7 @@ mod tests {
     #[test]
     fn max_batch_caps_cut() {
         let policy = BatchPolicy { max_wait: Duration::ZERO, max_batch: 2 };
-        let mut b = DynamicBatcher::new("mlp", &manifest(), policy);
+        let mut b = DynamicBatcher::new("mlp", buckets(), policy);
         for i in 0..5 {
             b.push(req(i));
         }
@@ -217,7 +212,7 @@ mod tests {
     #[test]
     fn deadline_shrinks() {
         let policy = BatchPolicy { max_wait: Duration::from_millis(10), max_batch: usize::MAX };
-        let mut b = DynamicBatcher::new("mlp", &manifest(), policy);
+        let mut b = DynamicBatcher::new("mlp", buckets(), policy);
         assert!(b.next_deadline(Instant::now()).is_none());
         b.push(req(0));
         let d = b.next_deadline(Instant::now()).unwrap();

@@ -1,0 +1,254 @@
+//! Deterministic load generator for the serving path.
+//!
+//! Drives closed-loop (fixed concurrency, one request in flight per
+//! worker) and open-loop (Poisson arrivals at an offered rate) request
+//! streams against a running [`Coordinator`], seeded via
+//! [`crate::util::prng::Prng`] so the request mix is reproducible, and
+//! reports p50/p99 latency + throughput through the [`crate::metrics`]
+//! histogram types. The serving bench and the `serve_workload` example
+//! are thin wrappers over this module.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::metrics::LatencyHistogram;
+use crate::runtime::gen_input;
+use crate::util::prng::Prng;
+
+use super::server::Coordinator;
+
+/// Arrival process for generated requests.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrival {
+    /// `concurrency` workers each keep exactly one request in flight.
+    Closed {
+        /// Number of closed-loop workers.
+        concurrency: usize,
+    },
+    /// Poisson arrivals at `rate_rps` requests/second from one submitter.
+    Open {
+        /// Offered load in requests per second.
+        rate_rps: f64,
+    },
+}
+
+/// Workload description.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Model family to drive.
+    pub kind: String,
+    /// Total requests to issue.
+    pub requests: usize,
+    /// Arrival process.
+    pub arrival: Arrival,
+    /// PRNG seed for the request mix.
+    pub seed: u64,
+}
+
+impl LoadgenConfig {
+    /// Closed-loop workload with the default seed.
+    pub fn closed(kind: &str, requests: usize, concurrency: usize) -> Self {
+        LoadgenConfig {
+            kind: kind.to_string(),
+            requests,
+            arrival: Arrival::Closed { concurrency: concurrency.max(1) },
+            seed: 0x5EED,
+        }
+    }
+
+    /// Open-loop workload with the default seed.
+    pub fn open(kind: &str, requests: usize, rate_rps: f64) -> Self {
+        LoadgenConfig {
+            kind: kind.to_string(),
+            requests,
+            arrival: Arrival::Open { rate_rps },
+            seed: 0x5EED,
+        }
+    }
+
+    /// Override the request-mix seed.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+/// Aggregated result of one load-generation run.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// Requests that completed successfully.
+    pub completed: usize,
+    /// Requests that failed (submit rejection or execution error).
+    pub errors: usize,
+    /// Wall-clock duration of the run (seconds).
+    pub elapsed_s: f64,
+    /// Completed requests per wall-clock second.
+    pub throughput_rps: f64,
+    /// Wall-clock submit→response latency, p50 (ms).
+    pub wall_p50_ms: f64,
+    /// Wall-clock submit→response latency, p99 (ms).
+    pub wall_p99_ms: f64,
+    /// Model-view latency (queue + model time; simulated seconds on the
+    /// sim backend), p50 (ms).
+    pub model_p50_ms: f64,
+    /// Model-view latency, p99 (ms).
+    pub model_p99_ms: f64,
+    /// Model-view latency, mean (ms).
+    pub model_mean_ms: f64,
+    /// Mean requests per dispatched batch over the coordinator lifetime.
+    pub mean_batch: f64,
+}
+
+/// Run a workload against a coordinator and aggregate the results.
+pub fn run(coord: &Coordinator, cfg: &LoadgenConfig) -> Result<LoadReport> {
+    let shape = coord
+        .router()
+        .item_shape(&cfg.kind)
+        .ok_or_else(|| anyhow!("kind '{}' not served", cfg.kind))?
+        .clone();
+    let dims = shape.dims();
+    match cfg.arrival {
+        Arrival::Closed { concurrency } => run_closed(coord, cfg, &dims, concurrency),
+        Arrival::Open { rate_rps } => run_open(coord, cfg, &dims, rate_rps),
+    }
+}
+
+fn run_closed(
+    coord: &Coordinator,
+    cfg: &LoadgenConfig,
+    dims: &[usize],
+    concurrency: usize,
+) -> Result<LoadReport> {
+    let remaining = AtomicUsize::new(cfg.requests);
+    let t0 = Instant::now();
+    let mut wall: Vec<f64> = Vec::with_capacity(cfg.requests);
+    let mut model: Vec<f64> = Vec::with_capacity(cfg.requests);
+    let mut errors = 0usize;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..concurrency.max(1))
+            .map(|w| {
+                let submitter = coord.submitter();
+                let kind = cfg.kind.clone();
+                let seed = cfg.seed.wrapping_add((w as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                let remaining = &remaining;
+                s.spawn(move || {
+                    let mut rng = Prng::new(seed);
+                    let mut wall = Vec::new();
+                    let mut model = Vec::new();
+                    let mut errors = 0usize;
+                    while remaining
+                        .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1))
+                        .is_ok()
+                    {
+                        let input = gen_input(rng.below(9973) as u32, dims, 1.0);
+                        let t = Instant::now();
+                        match submitter.infer(&kind, input) {
+                            Ok(resp) if resp.is_ok() => {
+                                wall.push(t.elapsed().as_secs_f64());
+                                model.push(resp.queue_s + resp.execute_s);
+                            }
+                            _ => errors += 1,
+                        }
+                    }
+                    (wall, model, errors)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (w, m, e) = h.join().expect("loadgen worker panicked");
+            wall.extend(w);
+            model.extend(m);
+            errors += e;
+        }
+    });
+    Ok(build_report(coord, wall, model, errors, t0.elapsed().as_secs_f64()))
+}
+
+fn run_open(
+    coord: &Coordinator,
+    cfg: &LoadgenConfig,
+    dims: &[usize],
+    rate_rps: f64,
+) -> Result<LoadReport> {
+    let mut rng = Prng::new(cfg.seed);
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(cfg.requests);
+    let mut errors = 0usize;
+    let mut next_arrival = 0.0f64;
+    for _ in 0..cfg.requests {
+        if rate_rps > 0.0 {
+            next_arrival += rng.exp(1.0 / rate_rps);
+        }
+        let now = t0.elapsed().as_secs_f64();
+        if next_arrival > now {
+            std::thread::sleep(Duration::from_secs_f64(next_arrival - now));
+        }
+        let input = gen_input(rng.below(9973) as u32, dims, 1.0);
+        match coord.submit(&cfg.kind, input) {
+            Ok(rx) => pending.push((rx, Instant::now())),
+            Err(_) => errors += 1,
+        }
+    }
+    let mut wall = Vec::with_capacity(pending.len());
+    let mut model = Vec::with_capacity(pending.len());
+    for (rx, t) in pending {
+        match rx.recv() {
+            Ok(resp) if resp.is_ok() => {
+                wall.push(t.elapsed().as_secs_f64());
+                model.push(resp.queue_s + resp.execute_s);
+            }
+            _ => errors += 1,
+        }
+    }
+    Ok(build_report(coord, wall, model, errors, t0.elapsed().as_secs_f64()))
+}
+
+fn build_report(
+    coord: &Coordinator,
+    wall: Vec<f64>,
+    model: Vec<f64>,
+    errors: usize,
+    elapsed_s: f64,
+) -> LoadReport {
+    let wall_h = LatencyHistogram::new();
+    let model_h = LatencyHistogram::new();
+    for &s in &wall {
+        wall_h.record(s);
+    }
+    for &s in &model {
+        model_h.record(s);
+    }
+    let completed = wall.len();
+    LoadReport {
+        completed,
+        errors,
+        elapsed_s,
+        throughput_rps: if elapsed_s > 0.0 { completed as f64 / elapsed_s } else { 0.0 },
+        wall_p50_ms: wall_h.percentile(50.0) * 1e3,
+        wall_p99_ms: wall_h.percentile(99.0) * 1e3,
+        model_p50_ms: model_h.percentile(50.0) * 1e3,
+        model_p99_ms: model_h.percentile(99.0) * 1e3,
+        model_mean_ms: model_h.mean() * 1e3,
+        mean_batch: coord.metrics().mean_batch_size(),
+    }
+}
+
+impl LoadReport {
+    /// One-line summary for logs and CLI output.
+    pub fn summary(&self) -> String {
+        format!(
+            "completed={} errors={} {:.1} req/s | wall p50={:.3}ms p99={:.3}ms | \
+             model p50={:.3}ms p99={:.3}ms | mean_batch={:.2}",
+            self.completed,
+            self.errors,
+            self.throughput_rps,
+            self.wall_p50_ms,
+            self.wall_p99_ms,
+            self.model_p50_ms,
+            self.model_p99_ms,
+            self.mean_batch,
+        )
+    }
+}

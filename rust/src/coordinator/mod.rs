@@ -1,25 +1,31 @@
 //! Serving coordinator: the deployment layer that exploits the paper's
 //! §2.2.3 *parallelism among requests* — independent inference requests are
-//! batched onto the batch dimension and executed on AOT-compiled artifacts
-//! via PJRT, with framework knobs chosen by the [`crate::tuner`].
+//! batched onto the batch dimension and executed on a pluggable
+//! [`crate::runtime::Backend`] (PJRT artifacts or the discrete-event
+//! simulator), with framework knobs chosen by the [`crate::tuner`].
 //!
 //! Dataflow:
 //!
 //! ```text
 //! submit() ─▶ Router (validate, per-model queue)
 //!                  └─▶ DynamicBatcher (bucketed batching, max-wait)
-//!                           └─▶ Worker lanes (one ModelRuntime each; the
-//!                               PJRT client is !Sync, so each lane owns
-//!                               its runtime and drains a channel)
+//!                           └─▶ Worker lanes (one Backend instance each;
+//!                               real PJRT clients are !Sync, so each lane
+//!                               owns its backend and drains a channel)
 //! ```
+//!
+//! [`loadgen`] drives deterministic closed-/open-loop request streams
+//! through the full path and reports latency percentiles + throughput.
 
 pub mod batcher;
+pub mod loadgen;
 pub mod request;
 pub mod router;
 pub mod server;
 pub mod worker;
 
 pub use batcher::{BatchPolicy, DynamicBatcher, PendingBatch};
+pub use loadgen::{Arrival, LoadReport, LoadgenConfig};
 pub use request::{Request, RequestId, Response};
 pub use router::Router;
-pub use server::{Coordinator, CoordinatorConfig};
+pub use server::{Coordinator, CoordinatorConfig, Submitter};

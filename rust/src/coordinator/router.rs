@@ -1,22 +1,15 @@
-//! Request router: validates incoming requests against the artifact
-//! manifest and routes them to the right per-model batching queue.
+//! Request router: validates incoming requests against the backend's
+//! serving catalog and routes them to the right per-model batching queue.
 
 use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
-use crate::runtime::Manifest;
+use crate::runtime::Catalog;
+
+pub use crate::runtime::ItemShape;
 
 use super::request::Request;
-
-/// Per-item input shape for a model family (first dim = rows per item).
-#[derive(Debug, Clone, PartialEq)]
-pub struct ItemShape {
-    /// Rows one item contributes to the batch dimension.
-    pub rows_per_item: usize,
-    /// Trailing feature dimensions.
-    pub feature_dims: Vec<usize>,
-}
 
 /// Routes requests by model kind.
 pub struct Router {
@@ -24,27 +17,15 @@ pub struct Router {
 }
 
 impl Router {
-    /// Derive routing tables from the manifest: the bucket-1 artifact of
-    /// each family defines the per-item shape.
-    pub fn new(manifest: &Manifest, kinds: &[&str]) -> Result<Self> {
+    /// Derive routing tables from a backend [`Catalog`]; every served
+    /// family must expose at least one batch bucket.
+    pub fn new(catalog: &Catalog) -> Result<Self> {
         let mut shapes = HashMap::new();
-        for kind in kinds {
-            let entry = manifest
-                .artifact_for(kind, 1)
-                .or_else(|| {
-                    let b = manifest.buckets(kind).first().copied()?;
-                    manifest.artifact_for(kind, b)
-                })
-                .ok_or_else(|| anyhow::anyhow!("no artifacts for kind '{kind}'"))?;
-            let batch = entry.batch.max(1);
-            let full = &entry.inputs[0].shape;
-            if full.is_empty() || full[0] % batch != 0 {
-                bail!("kind '{kind}': first dim {:?} not divisible by batch {batch}", full);
+        for spec in &catalog.models {
+            if spec.buckets.is_empty() {
+                bail!("kind '{}': catalog exposes no batch buckets", spec.kind);
             }
-            shapes.insert(
-                kind.to_string(),
-                ItemShape { rows_per_item: full[0] / batch, feature_dims: full[1..].to_vec() },
-            );
+            shapes.insert(spec.kind.clone(), spec.item.clone());
         }
         Ok(Router { shapes })
     }
@@ -66,8 +47,7 @@ impl Router {
         let Some(shape) = self.shapes.get(&req.kind) else {
             bail!("unknown model kind '{}'", req.kind);
         };
-        let want: Vec<usize> =
-            std::iter::once(shape.rows_per_item).chain(shape.feature_dims.iter().copied()).collect();
+        let want = shape.dims();
         if req.input.shape != want {
             bail!(
                 "kind '{}': input shape {:?} != expected {:?}",
@@ -88,12 +68,12 @@ impl Router {
 mod tests {
     use super::*;
     use crate::coordinator::request::RequestId;
-    use crate::runtime::Tensor;
+    use crate::runtime::{Manifest, Tensor};
     use std::path::Path;
     use std::sync::mpsc::channel;
     use std::time::Instant;
 
-    fn manifest() -> Manifest {
+    fn catalog() -> Catalog {
         Manifest::parse(
             Path::new("/tmp"),
             r#"{"version":1,"artifacts":[
@@ -105,6 +85,8 @@ mod tests {
                "expected":{"prefix":[],"sum":0,"abs_sum":0,"count":1024}}
             ]}"#,
         )
+        .unwrap()
+        .catalog(&["mlp", "transformer"])
         .unwrap()
     }
 
@@ -122,22 +104,30 @@ mod tests {
 
     #[test]
     fn derives_item_shapes() {
-        let r = Router::new(&manifest(), &["mlp", "transformer"]).unwrap();
+        let r = Router::new(&catalog()).unwrap();
         assert_eq!(r.item_shape("mlp").unwrap().rows_per_item, 1);
         // transformer bucket-2 artifact has 64 rows ⇒ 32 rows per sequence
         assert_eq!(r.item_shape("transformer").unwrap().rows_per_item, 32);
+        assert_eq!(r.kinds(), vec!["mlp", "transformer"]);
     }
 
     #[test]
     fn routes_valid_rejects_invalid() {
-        let r = Router::new(&manifest(), &["mlp"]).unwrap();
+        let r = Router::new(&catalog()).unwrap();
         assert_eq!(r.route(&req("mlp", vec![1, 8])).unwrap(), "mlp");
         assert!(r.route(&req("mlp", vec![2, 8])).is_err());
         assert!(r.route(&req("bert", vec![1, 8])).is_err());
     }
 
     #[test]
-    fn unknown_kind_at_construction() {
-        assert!(Router::new(&manifest(), &["resnet"]).is_err());
+    fn rejects_bucketless_catalog() {
+        let c = Catalog {
+            models: vec![crate::runtime::ModelSpec {
+                kind: "mlp".into(),
+                item: ItemShape { rows_per_item: 1, feature_dims: vec![8] },
+                buckets: vec![],
+            }],
+        };
+        assert!(Router::new(&c).is_err());
     }
 }

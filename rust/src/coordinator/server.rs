@@ -1,6 +1,8 @@
 //! The coordinator: ties router + batchers + worker lanes together behind
-//! a submit/await API, with the lane count chosen by the paper's tuning
-//! guideline (inter-op pools → independent execution lanes).
+//! a submit/await API, generic over the execution backend. Lanes run any
+//! [`BackendFactory`] product — the PJRT artifact runtime or the
+//! simulation backend — so the full serving path works with zero external
+//! artifacts.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -12,8 +14,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::config::CpuPlatform;
 use crate::metrics::ServingMetrics;
-use crate::runtime::{Manifest, Tensor};
+use crate::runtime::{
+    BackendFactory, PjrtBackendFactory, SimBackendConfig, SimBackendFactory, Tensor,
+};
 
 use super::batcher::{BatchPolicy, DynamicBatcher};
 use super::request::{Request, RequestId, Response};
@@ -21,28 +26,43 @@ use super::router::Router;
 use super::worker::WorkerLane;
 
 /// Coordinator construction options.
-#[derive(Debug, Clone)]
+#[derive(Clone)]
 pub struct CoordinatorConfig {
-    /// Where `manifest.json` + HLO artifacts live.
-    pub artifacts_dir: PathBuf,
-    /// Model families to serve.
-    pub kinds: Vec<String>,
-    /// Worker lanes (each compiles its own runtime). Defaults to 1; the
-    /// `serve` CLI sets it from the tuner's inter-op pool count.
+    /// Backend the worker lanes execute batches on.
+    pub factory: Arc<dyn BackendFactory>,
+    /// Worker lanes (each instantiates its own backend). Defaults to 1;
+    /// the `serve` CLI sets it from the tuner's inter-op pool count.
     pub lanes: usize,
     /// Batching policy.
     pub policy: BatchPolicy,
 }
 
 impl CoordinatorConfig {
-    /// Config serving one family with defaults.
+    /// Config over an explicit backend factory, with defaults.
+    pub fn with_factory(factory: Arc<dyn BackendFactory>) -> Self {
+        CoordinatorConfig { factory, lanes: 1, policy: BatchPolicy::default() }
+    }
+
+    /// Simulation-backed config: serve model-zoo `kinds` on `platform`
+    /// with the default bucket ladder and tuner-chosen framework knobs.
+    /// Needs no external artifacts — this is the tier-1 test path.
+    pub fn sim(platform: CpuPlatform, kinds: &[&str]) -> Self {
+        Self::sim_with(SimBackendConfig::new(platform, kinds))
+    }
+
+    /// Simulation-backed config with full control over the sim backend.
+    pub fn sim_with(cfg: SimBackendConfig) -> Self {
+        Self::with_factory(Arc::new(SimBackendFactory::new(cfg)))
+    }
+
+    /// PJRT-backed config serving artifact families from a directory.
+    pub fn pjrt(artifacts_dir: impl Into<PathBuf>, kinds: &[&str]) -> Self {
+        Self::with_factory(Arc::new(PjrtBackendFactory::new(artifacts_dir, kinds)))
+    }
+
+    /// Back-compat shorthand: PJRT config serving one artifact family.
     pub fn for_kind(artifacts_dir: impl Into<PathBuf>, kind: &str) -> Self {
-        CoordinatorConfig {
-            artifacts_dir: artifacts_dir.into(),
-            kinds: vec![kind.to_string()],
-            lanes: 1,
-            policy: BatchPolicy::default(),
-        }
+        Self::pjrt(artifacts_dir, &[kind])
     }
 }
 
@@ -51,53 +71,22 @@ pub struct Coordinator {
     inbox: Sender<Request>,
     metrics: Arc<ServingMetrics>,
     router: Arc<Router>,
-    next_id: AtomicU64,
+    next_id: Arc<AtomicU64>,
     shutdown: Arc<AtomicBool>,
     loop_handle: Option<JoinHandle<()>>,
 }
 
-impl Coordinator {
-    /// Start lanes + the batching loop. Blocks until all lanes compiled.
-    pub fn start(cfg: CoordinatorConfig) -> Result<Self> {
-        let manifest = Manifest::load(&cfg.artifacts_dir)?;
-        let kinds: Vec<&str> = cfg.kinds.iter().map(String::as_str).collect();
-        let router = Arc::new(Router::new(&manifest, &kinds)?);
-        let metrics = Arc::new(ServingMetrics::new());
+/// Cloneable, `Send` submit handle. `Coordinator` holds an mpsc `Sender`
+/// and is therefore `!Sync`; load-generator threads each take their own
+/// `Submitter` instead of sharing a `&Coordinator`.
+#[derive(Clone)]
+pub struct Submitter {
+    inbox: Sender<Request>,
+    router: Arc<Router>,
+    next_id: Arc<AtomicU64>,
+}
 
-        let lanes: Vec<WorkerLane> = (0..cfg.lanes.max(1))
-            .map(|i| {
-                WorkerLane::spawn(
-                    i,
-                    cfg.artifacts_dir.clone(),
-                    cfg.kinds.clone(),
-                    Arc::clone(&metrics),
-                )
-            })
-            .collect::<Result<_>>()?;
-
-        let mut batchers: HashMap<String, DynamicBatcher> = cfg
-            .kinds
-            .iter()
-            .map(|k| (k.clone(), DynamicBatcher::new(k, &manifest, cfg.policy.clone())))
-            .collect();
-
-        let (inbox, rx) = channel::<Request>();
-        let shutdown = Arc::new(AtomicBool::new(false));
-        let stop = Arc::clone(&shutdown);
-        let loop_handle = std::thread::Builder::new()
-            .name("coordinator-loop".into())
-            .spawn(move || batching_loop(rx, &mut batchers, &lanes, &stop))?;
-
-        Ok(Coordinator {
-            inbox,
-            metrics,
-            router,
-            next_id: AtomicU64::new(0),
-            shutdown,
-            loop_handle: Some(loop_handle),
-        })
-    }
-
+impl Submitter {
     /// Submit one item; returns the receiver for its response.
     pub fn submit(&self, kind: &str, input: Tensor) -> Result<Receiver<Response>> {
         let (tx, rx) = channel();
@@ -113,6 +102,67 @@ impl Coordinator {
             .send(req)
             .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
         Ok(rx)
+    }
+
+    /// Submit and block for the response.
+    pub fn infer(&self, kind: &str, input: Tensor) -> Result<Response> {
+        let rx = self.submit(kind, input)?;
+        Ok(rx.recv()?)
+    }
+}
+
+impl Coordinator {
+    /// Start lanes + the batching loop. Blocks until all lanes are ready
+    /// (compiled for PJRT, pre-simulated for the sim backend).
+    pub fn start(cfg: CoordinatorConfig) -> Result<Self> {
+        let catalog = cfg.factory.catalog()?;
+        let router = Arc::new(Router::new(&catalog)?);
+        let metrics = Arc::new(ServingMetrics::new());
+
+        let lanes: Vec<WorkerLane> = (0..cfg.lanes.max(1))
+            .map(|i| WorkerLane::spawn(i, Arc::clone(&cfg.factory), Arc::clone(&metrics)))
+            .collect::<Result<_>>()?;
+
+        let mut batchers: HashMap<String, DynamicBatcher> = catalog
+            .models
+            .iter()
+            .map(|m| {
+                (
+                    m.kind.clone(),
+                    DynamicBatcher::new(&m.kind, m.buckets.clone(), cfg.policy.clone()),
+                )
+            })
+            .collect();
+
+        let (inbox, rx) = channel::<Request>();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let stop = Arc::clone(&shutdown);
+        let loop_handle = std::thread::Builder::new()
+            .name("coordinator-loop".into())
+            .spawn(move || batching_loop(rx, &mut batchers, &lanes, &stop))?;
+
+        Ok(Coordinator {
+            inbox,
+            metrics,
+            router,
+            next_id: Arc::new(AtomicU64::new(0)),
+            shutdown,
+            loop_handle: Some(loop_handle),
+        })
+    }
+
+    /// A cloneable submit handle for cross-thread load generation.
+    pub fn submitter(&self) -> Submitter {
+        Submitter {
+            inbox: self.inbox.clone(),
+            router: Arc::clone(&self.router),
+            next_id: Arc::clone(&self.next_id),
+        }
+    }
+
+    /// Submit one item; returns the receiver for its response.
+    pub fn submit(&self, kind: &str, input: Tensor) -> Result<Receiver<Response>> {
+        self.submitter().submit(kind, input)
     }
 
     /// Submit and block for the response.

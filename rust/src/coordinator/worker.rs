@@ -1,8 +1,7 @@
-//! Worker lane: one thread owning a `ModelRuntime` (the PJRT client is not
-//! `Sync`), draining batches from a channel, executing, and scattering
-//! per-request responses.
+//! Worker lane: one thread owning a lane-local [`Backend`] instance
+//! (real PJRT clients are not `Sync`), draining batches from a channel,
+//! executing, and scattering per-request responses.
 
-use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -11,7 +10,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::metrics::ServingMetrics;
-use crate::runtime::{ModelRuntime, Tensor};
+use crate::runtime::{Backend, BackendFactory, Tensor};
 
 use super::batcher::PendingBatch;
 use super::request::Response;
@@ -28,13 +27,12 @@ enum LaneMsg {
 }
 
 impl WorkerLane {
-    /// Spawn a lane that loads the artifacts for `kinds` from
-    /// `artifacts_dir`. Returns once the runtime has compiled (so startup
+    /// Spawn a lane that instantiates its own backend from `factory` on
+    /// the lane thread. Returns once the backend is ready (so startup
     /// failures surface synchronously).
     pub fn spawn(
         lane_id: usize,
-        artifacts_dir: PathBuf,
-        kinds: Vec<String>,
+        factory: Arc<dyn BackendFactory>,
         metrics: Arc<ServingMetrics>,
     ) -> Result<Self> {
         let (tx, rx) = channel::<LaneMsg>();
@@ -42,19 +40,17 @@ impl WorkerLane {
         let handle = std::thread::Builder::new()
             .name(format!("worker-lane-{lane_id}"))
             .spawn(move || {
-                let rt = match ModelRuntime::load_some(&artifacts_dir, |e| {
-                    kinds.iter().any(|k| *k == e.kind)
-                }) {
-                    Ok(rt) => {
+                let backend = match factory.create() {
+                    Ok(b) => {
                         let _ = ready_tx.send(Ok(()));
-                        rt
+                        b
                     }
                     Err(e) => {
                         let _ = ready_tx.send(Err(e));
                         return;
                     }
                 };
-                lane_loop(rt, rx, metrics);
+                lane_loop(&*backend, rx, &metrics);
             })?;
         ready_rx.recv()??;
         Ok(WorkerLane { tx, handle: Some(handle) })
@@ -75,18 +71,17 @@ impl Drop for WorkerLane {
     }
 }
 
-fn lane_loop(rt: ModelRuntime, rx: Receiver<LaneMsg>, metrics: Arc<ServingMetrics>) {
+fn lane_loop(backend: &dyn Backend, rx: Receiver<LaneMsg>, metrics: &ServingMetrics) {
     while let Ok(msg) = rx.recv() {
         match msg {
             LaneMsg::Shutdown => return,
-            LaneMsg::Batch(batch) => execute_batch(&rt, batch, &metrics),
+            LaneMsg::Batch(batch) => execute_batch(backend, batch, metrics),
         }
     }
 }
 
-/// Execute one batch: gather rows → run bucketed executable → scatter.
-pub fn execute_batch(rt: &ModelRuntime, batch: PendingBatch, metrics: &ServingMetrics) {
-    let name = format!("{}_b{}", batch.kind, batch.bucket);
+/// Execute one batch: gather rows → run the bucketed backend → scatter.
+pub fn execute_batch(backend: &dyn Backend, batch: PendingBatch, metrics: &ServingMetrics) {
     let dispatch_time = Instant::now();
     let n = batch.requests.len();
 
@@ -102,17 +97,19 @@ pub fn execute_batch(rt: &ModelRuntime, batch: PendingBatch, metrics: &ServingMe
     shape[0] = batch.bucket * rows_per_item;
     let x = Tensor { shape, data };
 
-    let result = rt.execute_x(&name, x);
-    let execute_s = dispatch_time.elapsed().as_secs_f64();
+    let result = backend.execute(&batch.kind, batch.bucket, x);
     metrics.batches.inc();
-    metrics.execute_latency.record(execute_s);
     if batch.bucket > n {
         metrics.padded.add((batch.bucket - n) as u64);
     }
 
     // scatter: slice each item's rows back out
     match result {
-        Ok(out) => {
+        Ok(exec) => {
+            // model time: wall-clock on real backends, simulated on sim
+            let execute_s = exec.model_time_s;
+            metrics.execute_latency.record(execute_s);
+            let out = exec.output;
             let out_rows: usize = out.shape[0];
             let out_feat: usize = out.shape[1..].iter().product();
             let rows_per_out_item = out_rows / batch.bucket;
@@ -124,9 +121,7 @@ pub fn execute_batch(rt: &ModelRuntime, batch: PendingBatch, metrics: &ServingMe
                 let queue_s = dispatch_time.duration_since(req.enqueued).as_secs_f64();
                 metrics.requests.inc();
                 metrics.queue_latency.record(queue_s);
-                metrics
-                    .request_latency
-                    .record(req.enqueued.elapsed().as_secs_f64());
+                metrics.request_latency.record(queue_s + execute_s);
                 let _ = req.reply.send(Response {
                     id: req.id,
                     output: Ok(Tensor { shape: item_shape, data: out.data[lo..hi].to_vec() }),
@@ -137,6 +132,7 @@ pub fn execute_batch(rt: &ModelRuntime, batch: PendingBatch, metrics: &ServingMe
             }
         }
         Err(e) => {
+            let execute_s = dispatch_time.elapsed().as_secs_f64();
             let msg = format!("{e:#}");
             for req in batch.requests {
                 metrics.requests.inc();

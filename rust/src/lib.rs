@@ -14,8 +14,11 @@
 //!   paper's Skylake testbeds (cores, SMT/FMA contention, LLC, memory and
 //!   UPI bandwidth) that produces the same per-core time breakdowns the
 //!   authors measured with `perf`.
-//! * **Deployment** — [`runtime`] (PJRT client running AOT-compiled JAX/
-//!   Pallas artifacts), [`coordinator`] (request router + dynamic batcher),
+//! * **Deployment** — [`runtime`] (pluggable execution backends behind the
+//!   `Backend`/`BackendFactory` traits: the PJRT client running
+//!   AOT-compiled JAX/Pallas artifacts, and `SimBackend`, which serves the
+//!   model zoo through the simulator with zero external artifacts),
+//!   [`coordinator`] (request router + dynamic batcher + load generator),
 //!   and [`tuner`] (the paper's §8 guidelines + Intel/TensorFlow baselines +
 //!   exhaustive search).
 //!

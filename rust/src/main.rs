@@ -5,7 +5,8 @@
 //! parframe tune --model ncf [--platform large.2]
 //! parframe simulate --model resnet50 --pools 2 --mkl 12 --intra 12
 //! parframe figures --fig 18 | --table 2 | --all
-//! parframe serve --artifacts artifacts --kind mlp --requests 64
+//! parframe serve --kind wide_deep --requests 256      (sim backend)
+//! parframe serve --backend pjrt --artifacts artifacts --kind mlp
 //! parframe check --artifacts artifacts     verify artifact digests via PJRT
 //! ```
 
@@ -15,13 +16,12 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use parframe::bench_tables;
 use parframe::config::{CpuPlatform, OperatorImpl, RunConfig};
-use parframe::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use parframe::coordinator::{loadgen, BatchPolicy, Coordinator, CoordinatorConfig, LoadgenConfig};
 use parframe::graph::analyze_width;
 use parframe::models;
-use parframe::runtime::{gen_input, ModelRuntime};
+use parframe::runtime::ModelRuntime;
 use parframe::sim;
 use parframe::tuner;
-use parframe::util::prng::Prng;
 
 fn main() {
     if let Err(e) = run() {
@@ -94,7 +94,9 @@ fn print_help() {
            simulate --model M [--pools/--mkl/--intra N] [--platform P]\n\
            figures  --fig N | --table N | --all\n\
            ablations                      per-feature degradation table
-           serve    --artifacts DIR [--kind mlp] [--requests N] [--lanes N]\n\
+           serve    [--backend sim|pjrt] [--kind wide_deep] [--requests N]\n\
+                    [--lanes N] [--concurrency N] [--platform P]\n\
+                    [--artifacts DIR]      (pjrt backend only)\n\
            check    --artifacts DIR\n\
          platforms: small | large | large.2 (default large.2)"
     );
@@ -214,45 +216,38 @@ fn cmd_figures(flags: &HashMap<String, String>) -> Result<()> {
 }
 
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
-    let dir = flags.get("artifacts").map(String::as_str).unwrap_or("artifacts");
-    let kind = flags.get("kind").map(String::as_str).unwrap_or("mlp");
-    let n_requests: usize = flags.get("requests").map(|r| r.parse()).transpose()?.unwrap_or(64);
+    let backend = flags.get("backend").map(String::as_str).unwrap_or("sim");
+    let n_requests: usize = flags.get("requests").map(|r| r.parse()).transpose()?.unwrap_or(256);
     let lanes: usize = flags.get("lanes").map(|l| l.parse()).transpose()?.unwrap_or(1);
+    let concurrency: usize =
+        flags.get("concurrency").map(|c| c.parse()).transpose()?.unwrap_or(4);
 
-    let mut cfg = CoordinatorConfig::for_kind(dir, kind);
+    let (mut cfg, kind) = match backend {
+        "sim" => {
+            let platform = platform_from(flags)?;
+            let kind = flags.get("kind").map(String::as_str).unwrap_or("wide_deep");
+            println!(
+                "starting coordinator: backend=sim kind={kind} lanes={lanes} platform={}",
+                platform.name
+            );
+            (CoordinatorConfig::sim(platform, &[kind]), kind.to_string())
+        }
+        "pjrt" => {
+            let dir = flags.get("artifacts").map(String::as_str).unwrap_or("artifacts");
+            let kind = flags.get("kind").map(String::as_str).unwrap_or("mlp");
+            println!(
+                "starting coordinator: backend=pjrt kind={kind} lanes={lanes} artifacts={dir}"
+            );
+            (CoordinatorConfig::pjrt(dir, &[kind]), kind.to_string())
+        }
+        other => bail!("unknown backend '{other}' (sim | pjrt)"),
+    };
     cfg.lanes = lanes;
     cfg.policy = BatchPolicy::default();
-    println!("starting coordinator: kind={kind} lanes={lanes} artifacts={dir}");
     let coord = Coordinator::start(cfg)?;
-    let shape = coord
-        .router()
-        .item_shape(kind)
-        .ok_or_else(|| anyhow!("kind not served"))?
-        .clone();
 
-    let mut rng = Prng::new(42);
-    let t0 = std::time::Instant::now();
-    let rxs: Vec<_> = (0..n_requests)
-        .map(|_| {
-            let dims: Vec<usize> = std::iter::once(shape.rows_per_item)
-                .chain(shape.feature_dims.iter().copied())
-                .collect();
-            let input = gen_input(rng.below(1000) as u32, &dims, 1.0);
-            coord.submit(kind, input)
-        })
-        .collect::<Result<_>>()?;
-    let mut ok = 0usize;
-    for rx in rxs {
-        if rx.recv()?.is_ok() {
-            ok += 1;
-        }
-    }
-    let wall = t0.elapsed().as_secs_f64();
-    println!(
-        "served {ok}/{n_requests} requests in {:.1} ms ({:.1} req/s)",
-        wall * 1e3,
-        ok as f64 / wall
-    );
+    let report = loadgen::run(&coord, &LoadgenConfig::closed(&kind, n_requests, concurrency))?;
+    println!("loadgen: {}", report.summary());
     println!("metrics: {}", coord.metrics().summary());
     Ok(())
 }

@@ -76,7 +76,9 @@ impl Counter {
 /// Coordinator-wide metrics bundle.
 #[derive(Debug, Default)]
 pub struct ServingMetrics {
-    /// End-to-end request latency.
+    /// End-to-end request latency: wall-clock queue time plus the
+    /// carrying batch's model time (wall-clock on real backends,
+    /// simulated seconds on the sim backend).
     pub request_latency: LatencyHistogram,
     /// Time spent waiting in the batching queue.
     pub queue_latency: LatencyHistogram,

@@ -12,6 +12,8 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::Json;
 
+use super::backend::{Catalog, ItemShape, ModelSpec};
+
 /// A dense f32 tensor (host side).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
@@ -192,6 +194,34 @@ impl Manifest {
     pub fn artifact_for(&self, kind: &str, bucket: usize) -> Option<&ArtifactEntry> {
         self.artifacts.iter().find(|a| a.kind == kind && a.batch == bucket)
     }
+
+    /// Derive the serving [`Catalog`] for a set of families: the bucket-1
+    /// (or smallest-bucket) artifact of each family defines the per-item
+    /// shape, and the compiled batch sizes become the bucket ladder.
+    pub fn catalog(&self, kinds: &[&str]) -> Result<Catalog> {
+        let mut models = Vec::with_capacity(kinds.len());
+        for kind in kinds {
+            let buckets = self.buckets(kind);
+            let entry = self
+                .artifact_for(kind, 1)
+                .or_else(|| buckets.first().and_then(|&b| self.artifact_for(kind, b)))
+                .ok_or_else(|| anyhow!("no artifacts for kind '{kind}'"))?;
+            let batch = entry.batch.max(1);
+            let full = &entry.inputs[0].shape;
+            if full.is_empty() || full[0] % batch != 0 {
+                bail!("kind '{kind}': first dim {:?} not divisible by batch {batch}", full);
+            }
+            models.push(ModelSpec {
+                kind: kind.to_string(),
+                item: ItemShape {
+                    rows_per_item: full[0] / batch,
+                    feature_dims: full[1..].to_vec(),
+                },
+                buckets,
+            });
+        }
+        Ok(Catalog { models })
+    }
 }
 
 fn parse_entry(a: &Json) -> Result<ArtifactEntry> {
@@ -275,6 +305,17 @@ mod tests {
         let a = m.get("mlp_b2").unwrap();
         assert_eq!(a.inputs[0].shape, vec![2, 256]);
         assert_eq!(a.expected.count, 16);
+    }
+
+    #[test]
+    fn catalog_derives_item_shapes() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        let c = m.catalog(&["mlp"]).unwrap();
+        let spec = c.get("mlp").unwrap();
+        assert_eq!(spec.item.rows_per_item, 1); // [2,256] at batch 2
+        assert_eq!(spec.item.feature_dims, vec![256]);
+        assert_eq!(spec.buckets, vec![2, 4]);
+        assert!(m.catalog(&["resnet"]).is_err());
     }
 
     #[test]

@@ -1,0 +1,143 @@
+//! Pluggable execution backends for the serving path.
+//!
+//! The coordinator (router → dynamic batcher → worker lanes) is generic
+//! over *what executes a batch*: the PJRT artifact runtime
+//! ([`super::client::PjrtBackend`]), the discrete-event simulator
+//! ([`super::sim_backend::SimBackend`]), or anything else that can state a
+//! [`Catalog`] of servable model families and execute bucketed batches.
+//!
+//! Two traits split the lifecycle:
+//!
+//! * [`BackendFactory`] — shared, `Send + Sync`; describes the catalog and
+//!   mints per-lane backend instances. Each worker lane calls
+//!   [`BackendFactory::create`] **on its own thread**, because real PJRT
+//!   clients are `!Sync` and must stay confined to one executor thread.
+//! * [`Backend`] — a lane-owned executor; needs no thread-safety bounds.
+
+use anyhow::Result;
+
+use super::artifact::Tensor;
+
+/// Per-item input contract for one served model family: an item occupies
+/// `rows_per_item` rows of the batch dimension and has `feature_dims`
+/// trailing dimensions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ItemShape {
+    /// Rows one item contributes to the batch dimension (1 for an MLP
+    /// feature row, the sequence length for a transformer).
+    pub rows_per_item: usize,
+    /// Trailing feature dimensions.
+    pub feature_dims: Vec<usize>,
+}
+
+impl ItemShape {
+    /// Full tensor dimensions of one item (`[rows_per_item, features...]`).
+    pub fn dims(&self) -> Vec<usize> {
+        std::iter::once(self.rows_per_item)
+            .chain(self.feature_dims.iter().copied())
+            .collect()
+    }
+
+    /// Element count of one item.
+    pub fn elems(&self) -> usize {
+        self.rows_per_item * self.feature_dims.iter().product::<usize>()
+    }
+}
+
+/// One servable model family, as a backend exposes it to the coordinator.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    /// Family name ("mlp" for artifacts, a zoo name for the simulator).
+    pub kind: String,
+    /// Per-item input contract.
+    pub item: ItemShape,
+    /// Executable batch buckets, ascending.
+    pub buckets: Vec<usize>,
+}
+
+/// Everything a backend can serve; drives router + batcher construction.
+#[derive(Debug, Clone, Default)]
+pub struct Catalog {
+    /// Servable model families.
+    pub models: Vec<ModelSpec>,
+}
+
+impl Catalog {
+    /// Spec for a family, if served.
+    pub fn get(&self, kind: &str) -> Option<&ModelSpec> {
+        self.models.iter().find(|m| m.kind == kind)
+    }
+
+    /// Served family names, sorted.
+    pub fn kinds(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.models.iter().map(|m| m.kind.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// Result of executing one batch.
+#[derive(Debug, Clone)]
+pub struct Execution {
+    /// Batched output; first dimension is `bucket × rows_per_item`.
+    pub output: Tensor,
+    /// Model time for the batch: wall-clock seconds on real backends,
+    /// simulated seconds on [`super::sim_backend::SimBackend`].
+    pub model_time_s: f64,
+}
+
+/// A lane-owned batch executor.
+pub trait Backend {
+    /// Short backend name for diagnostics ("pjrt", "sim").
+    fn name(&self) -> &'static str;
+
+    /// Execute one gathered batch `x` for `kind` at the given bucket; the
+    /// first dimension of `x` is `bucket × rows_per_item`, zero-padded
+    /// past the live requests.
+    fn execute(&self, kind: &str, bucket: usize, x: Tensor) -> Result<Execution>;
+}
+
+/// Shared descriptor + per-lane constructor for a backend.
+pub trait BackendFactory: Send + Sync {
+    /// What this backend can serve.
+    fn catalog(&self) -> Result<Catalog>;
+
+    /// Instantiate a lane-local executor (called on the lane's thread).
+    fn create(&self) -> Result<Box<dyn Backend>>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn item_shape_dims_and_elems() {
+        let s = ItemShape { rows_per_item: 32, feature_dims: vec![64] };
+        assert_eq!(s.dims(), vec![32, 64]);
+        assert_eq!(s.elems(), 2048);
+        let flat = ItemShape { rows_per_item: 1, feature_dims: vec![] };
+        assert_eq!(flat.dims(), vec![1]);
+        assert_eq!(flat.elems(), 1);
+    }
+
+    #[test]
+    fn catalog_lookup() {
+        let c = Catalog {
+            models: vec![
+                ModelSpec {
+                    kind: "b".into(),
+                    item: ItemShape { rows_per_item: 1, feature_dims: vec![4] },
+                    buckets: vec![1, 2],
+                },
+                ModelSpec {
+                    kind: "a".into(),
+                    item: ItemShape { rows_per_item: 2, feature_dims: vec![8] },
+                    buckets: vec![1],
+                },
+            ],
+        };
+        assert_eq!(c.kinds(), vec!["a", "b"]);
+        assert_eq!(c.get("a").unwrap().item.rows_per_item, 2);
+        assert!(c.get("z").is_none());
+    }
+}

@@ -12,11 +12,13 @@
 //!   over channels.
 
 use std::collections::HashMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
 use super::artifact::{ArtifactEntry, Manifest, Tensor};
+use super::backend::{Backend, BackendFactory, Catalog, Execution};
 
 /// A loaded set of model executables on one PJRT client.
 pub struct ModelRuntime {
@@ -145,5 +147,63 @@ impl ModelRuntime {
             .expected
             .verify(&out.data)
             .with_context(|| format!("digest mismatch for '{name}'"))
+    }
+}
+
+/// [`Backend`] over a loaded [`ModelRuntime`]: executes the AOT artifact
+/// named `"{kind}_b{bucket}"` and reports wall-clock model time.
+pub struct PjrtBackend {
+    rt: ModelRuntime,
+}
+
+impl PjrtBackend {
+    /// Wrap a loaded runtime.
+    pub fn new(rt: ModelRuntime) -> Self {
+        PjrtBackend { rt }
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn execute(&self, kind: &str, bucket: usize, x: Tensor) -> Result<Execution> {
+        let t0 = Instant::now();
+        let output = self.rt.execute_x(&format!("{kind}_b{bucket}"), x)?;
+        Ok(Execution { output, model_time_s: t0.elapsed().as_secs_f64() })
+    }
+}
+
+/// Factory for PJRT lanes: each lane compiles its own executables from
+/// the artifact directory (the PJRT client is `!Sync`).
+pub struct PjrtBackendFactory {
+    artifacts_dir: PathBuf,
+    kinds: Vec<String>,
+}
+
+impl PjrtBackendFactory {
+    /// Serve `kinds` from the artifacts in `dir`.
+    pub fn new(dir: impl Into<PathBuf>, kinds: &[&str]) -> Self {
+        PjrtBackendFactory {
+            artifacts_dir: dir.into(),
+            kinds: kinds.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+impl BackendFactory for PjrtBackendFactory {
+    fn catalog(&self) -> Result<Catalog> {
+        let manifest = Manifest::load(&self.artifacts_dir)?;
+        let kinds: Vec<&str> = self.kinds.iter().map(String::as_str).collect();
+        manifest.catalog(&kinds)
+    }
+
+    fn create(&self) -> Result<Box<dyn Backend>> {
+        let kinds = self.kinds.clone();
+        let rt = ModelRuntime::load_some(&self.artifacts_dir, |e| {
+            kinds.iter().any(|k| *k == e.kind)
+        })?;
+        Ok(Box::new(PjrtBackend::new(rt)))
     }
 }

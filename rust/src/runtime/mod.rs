@@ -1,13 +1,24 @@
-//! Runtime: loads the AOT-compiled JAX/Pallas artifacts (HLO text) and
-//! executes them on the PJRT CPU client — the only place real numerics
-//! happen in the Rust layer. Python never runs on this path.
+//! Runtime: pluggable execution backends for the serving path.
 //!
+//! * [`backend`] — the [`Backend`]/[`BackendFactory`] traits and the
+//!   [`Catalog`] contract the coordinator builds its router and batchers
+//!   from.
+//! * [`client`] — the PJRT backend: loads AOT-compiled JAX/Pallas
+//!   artifacts (HLO text) and executes them on the PJRT CPU client. In
+//!   hermetic builds the `xla` dependency is an offline stub and this
+//!   path errors at load time.
+//! * [`sim_backend`] — the simulation backend: deterministic numerics +
+//!   per-batch latency from the discrete-event simulator; serves the
+//!   whole model zoo with zero external artifacts.
 //! * [`artifact`] — `artifacts/manifest.json` schema + deterministic input
 //!   generation (mirrors `python/compile/aot.py`).
-//! * [`client`] — the `xla` crate wrapper: HLO text → compile → execute.
 
 pub mod artifact;
+pub mod backend;
 pub mod client;
+pub mod sim_backend;
 
 pub use artifact::{gen_input, ArtifactEntry, Manifest, Tensor};
-pub use client::ModelRuntime;
+pub use backend::{Backend, BackendFactory, Catalog, Execution, ItemShape, ModelSpec};
+pub use client::{ModelRuntime, PjrtBackend, PjrtBackendFactory};
+pub use sim_backend::{SimBackend, SimBackendConfig, SimBackendFactory, SIM_OUT_FEATURES};

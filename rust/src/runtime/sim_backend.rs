@@ -1,0 +1,327 @@
+//! Simulation-backed serving backend.
+//!
+//! Executes inference batches "on" the discrete-event platform simulator:
+//! per-batch latency comes from [`crate::sim::simulate`] of the model-zoo
+//! graph at the batch bucket, under a [`FrameworkConfig`] chosen by the
+//! paper's tuning guideline (or pinned by the caller); numerics are a
+//! fixed pseudo-random row-local linear projection, so results are
+//! deterministic and batching-invariant (row *i* of a batched execution
+//! equals the single-item execution of row *i* — the invariant that makes
+//! dynamic batching legal, testable with zero AOT artifacts).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{CpuPlatform, FrameworkConfig};
+use crate::models;
+use crate::sim;
+use crate::tuner;
+
+use super::artifact::Tensor;
+use super::backend::{Backend, BackendFactory, Catalog, Execution, ItemShape, ModelSpec};
+
+/// Output features per served item row (the simulator's stand-in "head").
+pub const SIM_OUT_FEATURES: usize = 8;
+
+/// Configuration for a simulation backend.
+#[derive(Debug, Clone)]
+pub struct SimBackendConfig {
+    /// Simulated hardware platform.
+    pub platform: CpuPlatform,
+    /// Model-zoo names to serve (each becomes a servable "kind").
+    pub kinds: Vec<String>,
+    /// Batch buckets to "compile" (ascending after normalisation).
+    pub buckets: Vec<usize>,
+    /// Framework knobs; `None` applies [`tuner::tune`] per model graph.
+    pub framework: Option<FrameworkConfig>,
+}
+
+impl SimBackendConfig {
+    /// Serve `kinds` on `platform` with the default bucket ladder
+    /// {1, 2, 4, 8} and tuner-chosen framework knobs.
+    pub fn new(platform: CpuPlatform, kinds: &[&str]) -> Self {
+        SimBackendConfig {
+            platform,
+            kinds: kinds.iter().map(|s| s.to_string()).collect(),
+            buckets: vec![1, 2, 4, 8],
+            framework: None,
+        }
+    }
+
+    /// The bucket ladder, ascending/deduplicated/non-zero; errors when no
+    /// usable bucket remains. The single normalisation point for the sim
+    /// backend (catalog and tables both go through here).
+    fn normalized_buckets(&self) -> Result<Vec<usize>> {
+        let mut b: Vec<usize> = self.buckets.iter().copied().filter(|&b| b > 0).collect();
+        b.sort_unstable();
+        b.dedup();
+        if b.is_empty() {
+            bail!("sim backend: no batch buckets configured");
+        }
+        Ok(b)
+    }
+}
+
+/// Serving input contract for a zoo model: transformers submit one
+/// sequence (32 rows × 64 features) per request, everything else one
+/// feature row (1 × 64).
+pub fn item_shape_for(kind: &str) -> ItemShape {
+    if kind == "transformer" {
+        ItemShape { rows_per_item: 32, feature_dims: vec![64] }
+    } else {
+        ItemShape { rows_per_item: 1, feature_dims: vec![64] }
+    }
+}
+
+/// The pre-simulated latency table + shape contracts, shared across
+/// lanes (the sim backend is stateless at execute time).
+struct SimTables {
+    latency: HashMap<(String, usize), f64>,
+    shapes: HashMap<String, ItemShape>,
+}
+
+impl SimTables {
+    /// For every (kind, bucket) pair, build the zoo graph at that batch
+    /// size, pick the framework config (tuner guideline unless pinned),
+    /// and pre-simulate the batch latency.
+    fn build(cfg: &SimBackendConfig) -> Result<Self> {
+        let buckets = cfg.normalized_buckets()?;
+        let mut latency = HashMap::new();
+        let mut shapes = HashMap::new();
+        for kind in &cfg.kinds {
+            shapes.insert(kind.clone(), item_shape_for(kind));
+            for &bucket in &buckets {
+                let g = models::build(kind, bucket)
+                    .ok_or_else(|| anyhow!("sim backend: unknown model '{kind}'"))?;
+                let fw = match &cfg.framework {
+                    Some(fw) => fw.clone(),
+                    None => tuner::tune(&g, &cfg.platform).config,
+                };
+                let report = sim::simulate(&g, &cfg.platform, &fw);
+                latency.insert((kind.clone(), bucket), report.latency_s);
+            }
+        }
+        Ok(SimTables { latency, shapes })
+    }
+}
+
+/// Factory minting [`SimBackend`] lane instances. The latency table is
+/// simulated once on first use and shared across lanes.
+pub struct SimBackendFactory {
+    cfg: SimBackendConfig,
+    tables: Mutex<Option<Arc<SimTables>>>,
+}
+
+impl SimBackendFactory {
+    /// Wrap a config (validated lazily at `catalog`/`create` time).
+    pub fn new(cfg: SimBackendConfig) -> Self {
+        SimBackendFactory { cfg, tables: Mutex::new(None) }
+    }
+
+    fn tables(&self) -> Result<Arc<SimTables>> {
+        let mut guard = self.tables.lock().unwrap();
+        if let Some(t) = guard.as_ref() {
+            return Ok(Arc::clone(t));
+        }
+        let t = Arc::new(SimTables::build(&self.cfg)?);
+        *guard = Some(Arc::clone(&t));
+        Ok(t)
+    }
+}
+
+impl BackendFactory for SimBackendFactory {
+    fn catalog(&self) -> Result<Catalog> {
+        let buckets = self.cfg.normalized_buckets()?;
+        let mut models = Vec::with_capacity(self.cfg.kinds.len());
+        for kind in &self.cfg.kinds {
+            if models::build(kind, 1).is_none() {
+                bail!("sim backend: unknown model '{kind}' (not in the zoo)");
+            }
+            models.push(ModelSpec {
+                kind: kind.clone(),
+                item: item_shape_for(kind),
+                buckets: buckets.clone(),
+            });
+        }
+        Ok(Catalog { models })
+    }
+
+    fn create(&self) -> Result<Box<dyn Backend>> {
+        Ok(Box::new(SimBackend { tables: self.tables()? }))
+    }
+}
+
+/// A lane-owned simulation executor: pre-simulated per-(kind, bucket)
+/// latencies plus the deterministic projection "numerics".
+pub struct SimBackend {
+    tables: Arc<SimTables>,
+}
+
+impl SimBackend {
+    /// Build a standalone backend (lanes created through
+    /// [`SimBackendFactory`] share one table instead).
+    pub fn new(cfg: SimBackendConfig) -> Result<Self> {
+        Ok(SimBackend { tables: Arc::new(SimTables::build(&cfg)?) })
+    }
+
+    /// Pre-simulated latency for a (kind, bucket) pair, if configured.
+    pub fn simulated_latency(&self, kind: &str, bucket: usize) -> Option<f64> {
+        self.tables.latency.get(&(kind.to_string(), bucket)).copied()
+    }
+}
+
+/// The fixed projection weight for input feature `i` → output feature `j`.
+/// Row-local and batch-independent by construction.
+fn weight(i: usize, j: usize) -> f32 {
+    ((i as f32) * 0.37 + (j as f32) * 1.13 + 0.5).sin()
+}
+
+impl Backend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn execute(&self, kind: &str, bucket: usize, x: Tensor) -> Result<Execution> {
+        if !self.tables.shapes.contains_key(kind) {
+            bail!("sim backend: kind '{kind}' not served");
+        }
+        let model_time_s = self
+            .simulated_latency(kind, bucket)
+            .ok_or_else(|| anyhow!("sim backend: no bucket {bucket} for '{kind}'"))?;
+        if x.shape.is_empty() {
+            bail!("sim backend: scalar input for '{kind}'");
+        }
+        let rows = x.shape[0];
+        let feat: usize = x.shape[1..].iter().product();
+        if feat == 0 || x.data.len() != rows * feat {
+            bail!(
+                "sim backend: input shape {:?} inconsistent with {} elements",
+                x.shape,
+                x.data.len()
+            );
+        }
+        let scale = 1.0 / (feat as f32).sqrt();
+        let mut out = Vec::with_capacity(rows * SIM_OUT_FEATURES);
+        for r in 0..rows {
+            let row = &x.data[r * feat..(r + 1) * feat];
+            for j in 0..SIM_OUT_FEATURES {
+                let mut acc = 0.0f32;
+                for (i, &v) in row.iter().enumerate() {
+                    acc += v * weight(i, j);
+                }
+                out.push(acc * scale);
+            }
+        }
+        Ok(Execution {
+            output: Tensor { shape: vec![rows, SIM_OUT_FEATURES], data: out },
+            model_time_s,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::gen_input;
+
+    fn backend(kinds: &[&str]) -> SimBackend {
+        SimBackend::new(SimBackendConfig::new(CpuPlatform::large(), kinds)).unwrap()
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let cfg = SimBackendConfig::new(CpuPlatform::large(), &["bert"]);
+        assert!(SimBackend::new(cfg.clone()).is_err());
+        assert!(SimBackendFactory::new(cfg).catalog().is_err());
+    }
+
+    #[test]
+    fn latency_grows_with_bucket() {
+        let b = backend(&["wide_deep"]);
+        let l1 = b.simulated_latency("wide_deep", 1).unwrap();
+        let l8 = b.simulated_latency("wide_deep", 8).unwrap();
+        assert!(l1 > 0.0 && l1.is_finite());
+        assert!(l8 > l1, "l1={l1} l8={l8}");
+    }
+
+    #[test]
+    fn execute_is_deterministic() {
+        let b = backend(&["wide_deep"]);
+        let x = gen_input(3, &[2, 64], 1.0);
+        let a = b.execute("wide_deep", 2, x.clone()).unwrap();
+        let c = b.execute("wide_deep", 2, x).unwrap();
+        assert_eq!(a.output, c.output);
+        assert_eq!(a.model_time_s, c.model_time_s);
+        assert_eq!(a.output.shape, vec![2, SIM_OUT_FEATURES]);
+        assert!(a.output.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn batched_rows_equal_unbatched_rows() {
+        // the invariant that legalises dynamic batching
+        let b = backend(&["wide_deep"]);
+        let full = gen_input(9, &[4, 64], 1.0);
+        let batched = b.execute("wide_deep", 4, full.clone()).unwrap().output;
+        for r in 0..4 {
+            let row = Tensor {
+                shape: vec![1, 64],
+                data: full.data[r * 64..(r + 1) * 64].to_vec(),
+            };
+            let solo = b.execute("wide_deep", 1, row).unwrap().output;
+            for j in 0..SIM_OUT_FEATURES {
+                assert_eq!(batched.data[r * SIM_OUT_FEATURES + j], solo.data[j], "r={r} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn padding_rows_do_not_disturb_live_rows() {
+        let b = backend(&["wide_deep"]);
+        let one = gen_input(5, &[1, 64], 1.0);
+        let mut padded = one.data.clone();
+        padded.resize(4 * 64, 0.0);
+        let solo = b.execute("wide_deep", 1, one).unwrap().output;
+        let batched = b
+            .execute("wide_deep", 4, Tensor { shape: vec![4, 64], data: padded })
+            .unwrap()
+            .output;
+        assert_eq!(&batched.data[..SIM_OUT_FEATURES], &solo.data[..]);
+    }
+
+    #[test]
+    fn execute_rejects_bad_inputs() {
+        let b = backend(&["wide_deep"]);
+        let x = gen_input(1, &[1, 64], 1.0);
+        assert!(b.execute("resnet50", 1, x.clone()).is_err()); // kind not served
+        assert!(b.execute("wide_deep", 3, x).is_err()); // bucket not compiled
+        let bad = Tensor { shape: vec![2, 64], data: vec![0.0; 64] };
+        assert!(b.execute("wide_deep", 2, bad).is_err()); // length mismatch
+    }
+
+    #[test]
+    fn factory_catalog_matches_config() {
+        let f = SimBackendFactory::new(SimBackendConfig::new(
+            CpuPlatform::large(),
+            &["wide_deep", "transformer"],
+        ));
+        let c = f.catalog().unwrap();
+        assert_eq!(c.kinds(), vec!["transformer", "wide_deep"]);
+        assert_eq!(c.get("transformer").unwrap().item.rows_per_item, 32);
+        assert_eq!(c.get("wide_deep").unwrap().item.rows_per_item, 1);
+        assert_eq!(c.get("wide_deep").unwrap().buckets, vec![1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn pinned_framework_config_is_used() {
+        // pinning a deliberately bad config must change simulated latency
+        let mut cfg = SimBackendConfig::new(CpuPlatform::large(), &["resnet50"]);
+        let tuned = SimBackend::new(cfg.clone()).unwrap();
+        cfg.framework = Some(FrameworkConfig::tuned_default()); // 1 pool × 1 thread
+        let slow = SimBackend::new(cfg).unwrap();
+        let a = tuned.simulated_latency("resnet50", 4).unwrap();
+        let b = slow.simulated_latency("resnet50", 4).unwrap();
+        assert!(b > a, "tuned={a} pinned-serial={b}");
+    }
+}

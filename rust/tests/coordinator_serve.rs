@@ -1,62 +1,63 @@
 //! End-to-end coordinator tests: real requests through router → batcher →
-//! PJRT worker lanes, verifying batching invariants on live numerics.
+//! worker lanes, verifying batching invariants on live executions.
 //!
-//! Skipped (with a notice) when `make artifacts` has not run.
+//! The primary suite runs UNCONDITIONALLY on the simulation backend
+//! (deterministic numerics + simulated batch latencies, zero external
+//! artifacts). The PJRT variants at the bottom still probe for
+//! `make artifacts` output and skip with a notice when it is absent.
 
 use std::path::Path;
 use std::time::Duration;
 
-use parframe::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
-use parframe::runtime::{gen_input, ModelRuntime, Tensor};
+use parframe::config::CpuPlatform;
+use parframe::coordinator::{loadgen, BatchPolicy, Coordinator, CoordinatorConfig, LoadgenConfig};
+use parframe::runtime::{
+    gen_input, Backend, ModelRuntime, SimBackend, SimBackendConfig, Tensor, SIM_OUT_FEATURES,
+};
 
-fn artifacts_dir() -> Option<&'static Path> {
-    let p = Path::new("artifacts");
-    if p.join("manifest.json").exists() {
-        Some(p)
-    } else {
-        eprintln!("skipping coordinator tests: artifacts/ not built");
-        None
-    }
-}
+// ---------------------------------------------------------------------------
+// sim-backed suite (tier-1: always runs)
+// ---------------------------------------------------------------------------
 
-fn mlp_coordinator(max_wait_ms: u64) -> Option<Coordinator> {
-    let dir = artifacts_dir()?;
-    let mut cfg = CoordinatorConfig::for_kind(dir, "mlp");
-    cfg.policy = BatchPolicy { max_wait: Duration::from_millis(max_wait_ms), max_batch: usize::MAX };
-    Some(Coordinator::start(cfg).expect("start coordinator"))
+fn sim_coordinator(kinds: &[&str], max_wait_ms: u64) -> Coordinator {
+    let mut cfg = CoordinatorConfig::sim(CpuPlatform::large(), kinds);
+    cfg.policy =
+        BatchPolicy { max_wait: Duration::from_millis(max_wait_ms), max_batch: usize::MAX };
+    Coordinator::start(cfg).expect("start sim coordinator")
 }
 
 fn item(tag: u32) -> Tensor {
-    gen_input(tag, &[1, 256], 1.0)
+    gen_input(tag, &[1, 64], 1.0)
 }
 
 #[test]
 fn single_request_roundtrip() {
-    let Some(c) = mlp_coordinator(1) else { return };
-    let resp = c.infer("mlp", item(7)).unwrap();
+    let c = sim_coordinator(&["wide_deep"], 1);
+    let resp = c.infer("wide_deep", item(7)).unwrap();
     let out = resp.output.expect("inference ok");
-    assert_eq!(out.shape, vec![1, 8]);
+    assert_eq!(out.shape, vec![1, SIM_OUT_FEATURES]);
     assert!(out.data.iter().all(|v| v.is_finite()));
+    assert!(resp.execute_s > 0.0, "simulated batch latency recorded");
     assert_eq!(c.metrics().requests.get(), 1);
+    assert_eq!(c.metrics().execute_latency.count(), 1);
 }
 
 #[test]
 fn batched_equals_unbatched() {
     // The §2.2.3 invariant: riding a batch must not change a request's
-    // numerics (beyond f32 noise).
-    let Some(c) = mlp_coordinator(20) else { return };
-    let Some(dir) = artifacts_dir() else { return };
-    let rt = ModelRuntime::load_some(dir, |e| e.name == "mlp_b1").unwrap();
+    // numerics. On the sim backend the projection is row-local, so the
+    // match is exact.
+    let c = sim_coordinator(&["wide_deep"], 20);
+    let solo = SimBackend::new(SimBackendConfig::new(CpuPlatform::large(), &["wide_deep"]))
+        .expect("sim backend");
 
     // submit 4 distinct requests quickly so they share one batch
-    let rxs: Vec<_> = (0..4).map(|t| c.submit("mlp", item(20 + t)).unwrap()).collect();
+    let rxs: Vec<_> = (0..4).map(|t| c.submit("wide_deep", item(20 + t)).unwrap()).collect();
     for (t, rx) in rxs.into_iter().enumerate() {
         let resp = rx.recv().unwrap();
         let got = resp.output.expect("ok");
-        let solo = rt.execute_x("mlp_b1", item(20 + t as u32)).unwrap();
-        for (a, b) in got.data.iter().zip(solo.data.iter()) {
-            assert!((a - b).abs() < 1e-4, "req {t}: {a} vs {b}");
-        }
+        let want = solo.execute("wide_deep", 1, item(20 + t as u32)).unwrap().output;
+        assert_eq!(got.data, want.data, "req {t}");
         assert!(resp.bucket >= 1);
     }
     // 4 requests in ≤ 2 dispatches proves batching actually happened
@@ -66,8 +67,8 @@ fn batched_equals_unbatched() {
 
 #[test]
 fn burst_of_requests_all_answered() {
-    let Some(c) = mlp_coordinator(2) else { return };
-    let rxs: Vec<_> = (0..25).map(|t| c.submit("mlp", item(t)).unwrap()).collect();
+    let c = sim_coordinator(&["wide_deep"], 2);
+    let rxs: Vec<_> = (0..25).map(|t| c.submit("wide_deep", item(t)).unwrap()).collect();
     let mut ok = 0;
     for rx in rxs {
         let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
@@ -82,18 +83,18 @@ fn burst_of_requests_all_answered() {
 
 #[test]
 fn rejects_malformed_input() {
-    let Some(c) = mlp_coordinator(1) else { return };
+    let c = sim_coordinator(&["wide_deep"], 1);
     let bad = Tensor { shape: vec![1, 3], data: vec![0.0; 3] };
-    assert!(c.submit("mlp", bad).is_err());
-    let unknown = Tensor { shape: vec![1, 256], data: vec![0.0; 256] };
-    assert!(c.submit("resnet", unknown).is_err());
+    assert!(c.submit("wide_deep", bad).is_err());
+    let unknown = Tensor { shape: vec![1, 64], data: vec![0.0; 64] };
+    assert!(c.submit("resnet50", unknown).is_err());
 }
 
 #[test]
 fn padding_tracked_for_partial_batches() {
-    let Some(c) = mlp_coordinator(1) else { return };
+    let c = sim_coordinator(&["wide_deep"], 1);
     // 3 requests into buckets {1,2,4,8} ⇒ bucket 4 with 1 padded row
-    let rxs: Vec<_> = (0..3).map(|t| c.submit("mlp", item(t)).unwrap()).collect();
+    let rxs: Vec<_> = (0..3).map(|t| c.submit("wide_deep", item(t)).unwrap()).collect();
     for rx in rxs {
         assert!(rx.recv().unwrap().is_ok());
     }
@@ -105,12 +106,11 @@ fn padding_tracked_for_partial_batches() {
 
 #[test]
 fn two_lanes_share_load() {
-    let Some(dir) = artifacts_dir() else { return };
-    let mut cfg = CoordinatorConfig::for_kind(dir, "mlp");
+    let mut cfg = CoordinatorConfig::sim(CpuPlatform::large(), &["wide_deep"]);
     cfg.lanes = 2;
     cfg.policy = BatchPolicy { max_wait: Duration::from_millis(1), max_batch: 2 };
     let c = Coordinator::start(cfg).expect("start");
-    let rxs: Vec<_> = (0..12).map(|t| c.submit("mlp", item(t)).unwrap()).collect();
+    let rxs: Vec<_> = (0..12).map(|t| c.submit("wide_deep", item(t)).unwrap()).collect();
     for rx in rxs {
         assert!(rx.recv_timeout(Duration::from_secs(30)).unwrap().is_ok());
     }
@@ -120,11 +120,147 @@ fn two_lanes_share_load() {
 
 #[test]
 fn transformer_family_served_too() {
+    let c = sim_coordinator(&["transformer"], 1);
+    let shape = c.router().item_shape("transformer").unwrap().clone();
+    assert_eq!(shape.rows_per_item, 32);
+    let seq_input = gen_input(11, &shape.dims(), 0.5);
+    let resp = c.infer("transformer", seq_input).unwrap();
+    let out = resp.output.expect("ok");
+    assert_eq!(out.shape[0], shape.rows_per_item);
+    assert!(out.data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn multiple_kinds_one_coordinator() {
+    let c = sim_coordinator(&["wide_deep", "ncf"], 1);
+    assert_eq!(c.router().kinds(), vec!["ncf", "wide_deep"]);
+    let a = c.infer("wide_deep", item(1)).unwrap();
+    let b = c.infer("ncf", item(2)).unwrap();
+    assert!(a.is_ok() && b.is_ok());
+    // same input features, different models ⇒ different simulated latency
+    assert_ne!(a.execute_s, b.execute_s);
+    assert_eq!(c.metrics().requests.get(), 2);
+}
+
+#[test]
+fn metrics_histograms_populated() {
+    let c = sim_coordinator(&["wide_deep"], 1);
+    for t in 0..10 {
+        assert!(c.infer("wide_deep", item(t)).unwrap().is_ok());
+    }
+    let m = c.metrics();
+    assert_eq!(m.request_latency.count(), 10);
+    assert_eq!(m.queue_latency.count(), 10);
+    assert!(m.execute_latency.count() >= 1);
+    assert!(m.request_latency.percentile(99.0) >= m.request_latency.percentile(50.0));
+    // end-to-end latency includes the simulated model time
+    assert!(m.request_latency.percentile(50.0) > 0.0);
+}
+
+#[test]
+fn closed_loop_loadgen_drives_full_path() {
+    let c = sim_coordinator(&["wide_deep"], 1);
+    let report = loadgen::run(&c, &LoadgenConfig::closed("wide_deep", 64, 4)).unwrap();
+    assert_eq!(report.completed, 64);
+    assert_eq!(report.errors, 0);
+    assert!(report.throughput_rps > 0.0);
+    assert!(report.model_p99_ms >= report.model_p50_ms);
+    assert!(report.model_p50_ms > 0.0, "simulated latency flows into the report");
+    assert!(report.mean_batch >= 1.0);
+    assert_eq!(c.metrics().requests.get(), 64);
+}
+
+#[test]
+fn open_loop_loadgen_drives_full_path() {
+    let c = sim_coordinator(&["wide_deep"], 2);
+    let report =
+        loadgen::run(&c, &LoadgenConfig::open("wide_deep", 40, 4000.0).with_seed(11)).unwrap();
+    assert_eq!(report.completed, 40);
+    assert_eq!(report.errors, 0);
+    assert!(report.elapsed_s > 0.0);
+    assert!(report.wall_p99_ms >= report.wall_p50_ms);
+}
+
+#[test]
+fn loadgen_rejects_unserved_kind() {
+    let c = sim_coordinator(&["wide_deep"], 1);
+    assert!(loadgen::run(&c, &LoadgenConfig::closed("resnet50", 4, 1)).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// PJRT variants (need `make artifacts`; skip with a notice otherwise)
+// ---------------------------------------------------------------------------
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping PJRT coordinator tests: artifacts/ not built");
+        None
+    }
+}
+
+fn mlp_coordinator(max_wait_ms: u64) -> Option<Coordinator> {
+    let dir = artifacts_dir()?;
+    let mut cfg = CoordinatorConfig::pjrt(dir, &["mlp"]);
+    cfg.policy =
+        BatchPolicy { max_wait: Duration::from_millis(max_wait_ms), max_batch: usize::MAX };
+    Some(Coordinator::start(cfg).expect("start coordinator"))
+}
+
+fn pjrt_item(tag: u32) -> Tensor {
+    gen_input(tag, &[1, 256], 1.0)
+}
+
+#[test]
+fn pjrt_single_request_roundtrip() {
+    let Some(c) = mlp_coordinator(1) else { return };
+    let resp = c.infer("mlp", pjrt_item(7)).unwrap();
+    let out = resp.output.expect("inference ok");
+    assert_eq!(out.shape, vec![1, 8]);
+    assert!(out.data.iter().all(|v| v.is_finite()));
+    assert_eq!(c.metrics().requests.get(), 1);
+}
+
+#[test]
+fn pjrt_batched_equals_unbatched() {
+    let Some(c) = mlp_coordinator(20) else { return };
     let Some(dir) = artifacts_dir() else { return };
-    let cfg = CoordinatorConfig::for_kind(dir, "transformer");
+    let rt = ModelRuntime::load_some(dir, |e| e.name == "mlp_b1").unwrap();
+
+    let rxs: Vec<_> = (0..4).map(|t| c.submit("mlp", pjrt_item(20 + t)).unwrap()).collect();
+    for (t, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap();
+        let got = resp.output.expect("ok");
+        let solo = rt.execute_x("mlp_b1", pjrt_item(20 + t as u32)).unwrap();
+        for (a, b) in got.data.iter().zip(solo.data.iter()) {
+            assert!((a - b).abs() < 1e-4, "req {t}: {a} vs {b}");
+        }
+        assert!(resp.bucket >= 1);
+    }
+    assert!(c.metrics().batches.get() <= 2, "batches={}", c.metrics().batches.get());
+    assert!(c.metrics().mean_batch_size() >= 2.0);
+}
+
+#[test]
+fn pjrt_burst_of_requests_all_answered() {
+    let Some(c) = mlp_coordinator(2) else { return };
+    let rxs: Vec<_> = (0..25).map(|t| c.submit("mlp", pjrt_item(t)).unwrap()).collect();
+    for rx in rxs {
+        assert!(rx.recv_timeout(Duration::from_secs(30)).unwrap().is_ok());
+    }
+    assert_eq!(c.metrics().requests.get(), 25);
+    assert!(c.metrics().batches.get() >= 4);
+}
+
+#[test]
+fn pjrt_transformer_family_served_too() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = CoordinatorConfig::pjrt(dir, &["transformer"]);
     let c = Coordinator::start(cfg).expect("start");
     let shape = c.router().item_shape("transformer").unwrap().clone();
-    let seq_input = gen_input(11, &[shape.rows_per_item, shape.feature_dims[0]], 0.5);
+    let seq_input = gen_input(11, &shape.dims(), 0.5);
     let resp = c.infer("transformer", seq_input).unwrap();
     let out = resp.output.expect("ok");
     assert_eq!(out.shape[0], shape.rows_per_item);

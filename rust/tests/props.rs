@@ -15,7 +15,7 @@ use parframe::coordinator::batcher::{BatchPolicy, DynamicBatcher};
 use parframe::coordinator::request::{Request, RequestId};
 use parframe::graph::{analyze_width, Graph, GraphBuilder};
 use parframe::ops::OpKind;
-use parframe::runtime::{Manifest, Tensor};
+use parframe::runtime::Tensor;
 use parframe::sim;
 use parframe::util::json::{self, Json};
 use parframe::util::prng::Prng;
@@ -119,26 +119,6 @@ fn prop_tuned_config_always_valid() {
     }
 }
 
-fn mini_manifest(buckets: &[usize]) -> Manifest {
-    let arts: Vec<String> = buckets
-        .iter()
-        .map(|b| {
-            format!(
-                r#"{{"name":"mlp_b{b}","file":"f","kind":"mlp","batch":{b},
-                  "inputs":[{{"shape":[{b},4],"tag":0,"scale":1.0}}],
-                  "output_shape":[{b},2],
-                  "expected":{{"prefix":[],"sum":0,"abs_sum":0,"count":{}}}}}"#,
-                b * 2
-            )
-        })
-        .collect();
-    Manifest::parse(
-        std::path::Path::new("/tmp"),
-        &format!(r#"{{"version":1,"artifacts":[{}]}}"#, arts.join(",")),
-    )
-    .unwrap()
-}
-
 fn mk_req(id: u64) -> Request {
     let (tx, _rx) = std::sync::mpsc::channel();
     Request {
@@ -150,16 +130,32 @@ fn mk_req(id: u64) -> Request {
     }
 }
 
+/// Like [`mk_req`] but with a caller-chosen enqueue timestamp (virtual
+/// arrival times for the dispatch-deadline property).
+fn mk_req_at(id: u64, enqueued: Instant) -> Request {
+    let mut r = mk_req(id);
+    r.enqueued = enqueued;
+    r
+}
+
+/// Random bucket ladder: 1..=4 distinct sizes in [1, 16].
+fn random_buckets(rng: &mut Prng) -> Vec<usize> {
+    let n = rng.range(1, 4);
+    let mut v: Vec<usize> = (0..n).map(|_| rng.range(1, 16)).collect();
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
 #[test]
 fn prop_batcher_no_loss_no_reorder() {
     let mut rng = Prng::new(0xABCD);
     for case in 0..CASES {
-        let m = mini_manifest(&[1, 2, 4, 8]);
         let policy = BatchPolicy {
             max_wait: Duration::ZERO,
             max_batch: rng.range(1, 12),
         };
-        let mut b = DynamicBatcher::new("mlp", &m, policy);
+        let mut b = DynamicBatcher::new("mlp", vec![1, 2, 4, 8], policy);
         let n = rng.range(1, 60);
         for i in 0..n {
             b.push(mk_req(i as u64));
@@ -178,8 +174,8 @@ fn prop_batcher_no_loss_no_reorder() {
 
 #[test]
 fn prop_bucket_is_smallest_sufficient() {
-    let m = mini_manifest(&[1, 2, 4, 8]);
-    let b = DynamicBatcher::new("mlp", &m, BatchPolicy::default());
+    // fixed ladder: exhaustive over queue depths
+    let b = DynamicBatcher::new("mlp", vec![1, 2, 4, 8], BatchPolicy::default());
     for n in 1..=20usize {
         let bucket = b.bucket_for(n);
         if n <= 8 {
@@ -192,6 +188,107 @@ fn prop_bucket_is_smallest_sufficient() {
             }
         } else {
             assert_eq!(bucket, 8, "overflow clamps to max bucket");
+        }
+    }
+    // random ladders: the chosen bucket is the minimum sufficient one
+    let mut rng = Prng::new(0xB0CCE);
+    for case in 0..CASES {
+        let buckets = random_buckets(&mut rng);
+        let b = DynamicBatcher::new("mlp", buckets.clone(), BatchPolicy::default());
+        let max = *buckets.last().unwrap();
+        for n in 1..=(max + 3) {
+            let chosen = b.bucket_for(n);
+            let want = buckets.iter().copied().find(|&x| x >= n).unwrap_or(max);
+            assert_eq!(chosen, want, "case {case}: n={n} buckets={buckets:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_cut_padding_matches_bucket_minus_len() {
+    // the `padded` metric the worker records is `bucket - requests.len()`;
+    // verify the batch geometry that drives it on random queue depths
+    let mut rng = Prng::new(0xFACADE);
+    for case in 0..CASES {
+        let buckets = random_buckets(&mut rng);
+        let max = *buckets.last().unwrap();
+        let cap = rng.range(1, max + 4);
+        let policy = BatchPolicy { max_wait: Duration::ZERO, max_batch: cap };
+        let mut b = DynamicBatcher::new("mlp", buckets.clone(), policy);
+        let n = rng.range(1, 40);
+        for i in 0..n {
+            b.push(mk_req(i as u64));
+        }
+        let mut left = n;
+        while !b.is_empty() {
+            let batch = b.cut();
+            // cut takes min(queue, effective cap) in arrival order
+            assert_eq!(batch.requests.len(), left.min(cap.min(max)), "case {case}");
+            // chosen bucket is the smallest compiled bucket ≥ the cut size,
+            // so worker-side padding is exactly `bucket - requests.len()`
+            let want_bucket =
+                buckets.iter().copied().find(|&x| x >= batch.requests.len()).unwrap_or(max);
+            assert_eq!(batch.bucket, want_bucket, "case {case}");
+            let padding = batch.bucket - batch.requests.len();
+            if buckets.contains(&batch.requests.len()) {
+                assert_eq!(padding, 0, "case {case}: exact-fit cut must not pad");
+            }
+            left -= batch.requests.len();
+        }
+        assert_eq!(left, 0, "case {case}: requests lost");
+    }
+}
+
+#[test]
+fn prop_no_request_waits_past_max_wait_plus_tick() {
+    // replay random arrival schedules against a virtual clock: every
+    // request must be dispatched within max_wait + one dispatch tick of
+    // its enqueue time (the serving loop's latency bound)
+    let mut rng = Prng::new(0x71C4);
+    for case in 0..CASES {
+        let base = Instant::now();
+        let tick = Duration::from_millis(1);
+        let max_wait = Duration::from_millis(rng.range(0, 20) as u64);
+        let cap = rng.range(1, 10);
+        let policy = BatchPolicy { max_wait, max_batch: cap };
+        let mut b = DynamicBatcher::new("mlp", vec![1, 2, 4, 8], policy);
+
+        // arrivals at random millisecond offsets in [0, 50)
+        let n = rng.range(1, 40);
+        let mut arrivals: Vec<(u64, u64)> =
+            (0..n as u64).map(|id| (rng.range(0, 50) as u64, id)).collect();
+        arrivals.sort_unstable();
+
+        let mut dispatched: Vec<(u64, u64)> = Vec::new(); // (id, dispatch_ms)
+        let mut next = 0usize;
+        let mut t_ms = 0u64;
+        while next < arrivals.len() || !b.is_empty() {
+            let now = base + Duration::from_millis(t_ms);
+            while next < arrivals.len() && arrivals[next].0 <= t_ms {
+                let (at, id) = arrivals[next];
+                b.push(mk_req_at(id, base + Duration::from_millis(at)));
+                next += 1;
+            }
+            while b.ready(now) {
+                let batch = b.cut();
+                for r in batch.requests {
+                    dispatched.push((r.id.0, t_ms));
+                }
+            }
+            t_ms += 1;
+            assert!(t_ms < 10_000, "case {case}: virtual clock ran away");
+        }
+
+        assert_eq!(dispatched.len(), n, "case {case}: requests lost");
+        let arrival_of: std::collections::BTreeMap<u64, u64> =
+            arrivals.iter().map(|&(at, id)| (id, at)).collect();
+        let bound_ms = max_wait.as_millis() as u64 + tick.as_millis() as u64;
+        for (id, at_ms) in dispatched {
+            let waited = at_ms - arrival_of[&id];
+            assert!(
+                waited <= bound_ms,
+                "case {case}: request {id} waited {waited}ms > {bound_ms}ms"
+            );
         }
     }
 }

@@ -1,0 +1,144 @@
+//! Offline stub of the `xla` crate (PJRT bindings over `xla_extension`).
+//!
+//! The hermetic build cannot fetch the native XLA library, so this stub
+//! keeps `parframe::runtime::client` compiling with the exact API surface
+//! it uses; every entry point returns an "unavailable" error at runtime.
+//! Serving without AOT artifacts goes through `parframe`'s `SimBackend`
+//! instead. Swapping this path dependency for the real `xla` crate
+//! re-enables the PJRT backend without source changes.
+
+use std::path::Path;
+
+/// Stub error (mirrors the real crate's opaque error type).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable() -> Error {
+    Error(
+        "PJRT unavailable: built with the offline xla stub (vendor the real \
+         `xla` crate + xla_extension to enable artifact execution)"
+            .to_string(),
+    )
+}
+
+/// PJRT client handle (stub).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// The real crate constructs a CPU client; the stub always errors.
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable())
+    }
+
+    /// Platform name for diagnostics.
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    /// Compile a computation (stub: always errors).
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file (stub: always errors).
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<Self> {
+        Err(unavailable())
+    }
+}
+
+/// XLA computation wrapper (stub).
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Host literal (stub).
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    /// Build a rank-1 literal from host data.
+    pub fn vec1(_data: &[f32]) -> Self {
+        Literal { _private: () }
+    }
+
+    /// Reshape to the given dimensions (stub: always errors).
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    /// Unwrap the first tuple element (stub: always errors).
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    /// Copy out as a host vector (stub: always errors).
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable())
+    }
+}
+
+/// Device buffer (stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Fetch the buffer to a host literal (stub: always errors).
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// Loaded executable (stub).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments (stub: always errors).
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn everything_is_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/tmp/x.hlo").is_err());
+        let lit = Literal::vec1(&[1.0, 2.0]);
+        assert!(lit.reshape(&[2]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+}
