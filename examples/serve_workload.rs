@@ -20,7 +20,11 @@
 use std::time::Duration;
 
 use parframe::config::CpuPlatform;
-use parframe::coordinator::{loadgen, BatchPolicy, Coordinator, CoordinatorConfig, LoadgenConfig};
+use parframe::coordinator::{
+    loadgen, BatchPolicy, Coordinator, CoordinatorConfig, LoadgenConfig, MixPhase, MixReport,
+};
+use parframe::sched::LanePlan;
+use parframe::tuner::{OnlineTuner, OnlineTunerConfig};
 
 fn coordinator(kind: &str, lanes: usize) -> anyhow::Result<Coordinator> {
     let mut cfg = CoordinatorConfig::sim(CpuPlatform::large2(), &[kind]);
@@ -90,5 +94,52 @@ fn main() -> anyhow::Result<()> {
 
     println!("\n(batching kicks in as offered load rises: mean batch grows, per-request");
     println!(" throughput scales — the paper's §2.2.3 request-level parallelism.)");
+
+    // core-aware lanes + online re-tuning: resnet50 ramps up while
+    // wide_deep drains; the adaptive run re-splits cores between phases,
+    // the frozen run keeps the startup §8 split
+    println!("\nadaptive vs frozen core-aware lanes under a load shift (large.2):");
+    let frozen = run_shift(false)?;
+    let adaptive = run_shift(true)?;
+    let f = frozen.kind("resnet50").expect("hot kind served");
+    let a = adaptive.kind("resnet50").expect("hot kind served");
+    println!(
+        "  final phase, hot kind resnet50: frozen mean {:.3} ms | adaptive mean {:.3} ms ({:.2}x)",
+        f.model_mean_ms,
+        a.model_mean_ms,
+        f.model_mean_ms / a.model_mean_ms
+    );
     Ok(())
+}
+
+/// Drive the shifting mix through `loadgen::run_shift`; re-tune between
+/// phases when `adaptive`. Returns the final (post-shift, steady) phase
+/// report.
+fn run_shift(adaptive: bool) -> anyhow::Result<MixReport> {
+    let platform = CpuPlatform::large2();
+    let kinds = ["wide_deep", "resnet50"];
+    let plan = LanePlan::guideline(&platform, &kinds)?;
+    let coord =
+        Coordinator::start(CoordinatorConfig::sim(platform.clone(), &kinds).with_plan(plan))?;
+    let mut phases = vec![MixPhase::new(&[("wide_deep", 0.9), ("resnet50", 0.1)], 48)];
+    phases.extend(std::iter::repeat_with(|| {
+        MixPhase::new(&[("wide_deep", 0.1), ("resnet50", 0.9)], 64)
+    })
+    .take(3));
+    let mut tuner = OnlineTuner::with_config(
+        platform,
+        &kinds,
+        OnlineTunerConfig { smoothing: 0.7, ..OnlineTunerConfig::default() },
+    );
+    let reports = loadgen::run_shift(
+        &coord,
+        &phases,
+        8,
+        0x5EED,
+        if adaptive { Some(&mut tuner) } else { None },
+    )?;
+    for r in &reports {
+        anyhow::ensure!(r.overall.errors == 0, "mix errors: {}", r.overall.errors);
+    }
+    Ok(reports.into_iter().last().expect("at least one phase"))
 }

@@ -103,7 +103,8 @@ pub enum ParallelismMode {
 
 /// A complete framework parameter setting — one point in the design space
 /// the paper sweeps (|settings| = logical_cores³ on `large.2`).
-#[derive(Debug, Clone, PartialEq)]
+/// `Eq + Hash` so per-lane backend caches can key on the exact setting.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct FrameworkConfig {
     /// Number of independent asynchronous scheduling pools
     /// ("inter-op parallelism threads" in TensorFlow terms). 1 ⇒ fully

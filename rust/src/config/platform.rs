@@ -100,6 +100,58 @@ impl CpuPlatform {
     pub fn socket_of(&self, phys_core: usize) -> usize {
         phys_core / self.cores_per_socket
     }
+
+    /// A view of this platform restricted to a contiguous slice of
+    /// physical cores (`first_core .. first_core + cores`). Per-socket
+    /// shared resources — LLC capacity and DRAM bandwidth — are scaled by
+    /// the fraction of each covered socket actually allocated, so lanes
+    /// co-located on one box stop double-counting hardware: simulating a
+    /// graph on the restricted view answers "how fast is this model on
+    /// *my slice*", not "on the whole machine".
+    pub fn restrict(&self, first_core: usize, cores: usize) -> CpuPlatform {
+        let phys = self.physical_cores();
+        let first = first_core.min(phys.saturating_sub(1));
+        let cores = cores.clamp(1, phys - first);
+        // per-socket share of the slice; the simulator models sockets
+        // symmetrically, so a slice that only *dips* into a neighbouring
+        // socket (minority share < ¼ of the majority) is modelled as its
+        // majority socket alone — the stray cores bring NUMA traffic,
+        // not symmetric capacity, and pretending 24+1 cores are 2×12
+        // would mis-rank candidate plans
+        let first_socket = self.socket_of(first);
+        let last_socket = self.socket_of(first + cores - 1);
+        let mut span = last_socket - first_socket + 1;
+        let mut eff_cores = cores;
+        if span > 1 {
+            let shares: Vec<usize> = (first_socket..=last_socket)
+                .map(|s| {
+                    let lo = (s * self.cores_per_socket).max(first);
+                    let hi = ((s + 1) * self.cores_per_socket).min(first + cores);
+                    hi - lo
+                })
+                .collect();
+            let max = *shares.iter().max().unwrap();
+            let min = *shares.iter().min().unwrap();
+            if min * 4 < max {
+                span = 1;
+                eff_cores = max;
+            } else {
+                // near-even straddle: symmetric split, floored
+                eff_cores = (cores / span) * span;
+            }
+        }
+        let cps = (eff_cores / span).max(1);
+        let frac = (cps as f64 / self.cores_per_socket as f64).min(1.0);
+        CpuPlatform {
+            name: format!("{}[{first}+{cores}]", self.name),
+            sockets: span,
+            cores_per_socket: cps,
+            llc_mib_per_socket: self.llc_mib_per_socket * frac,
+            mem_bw_gbps: self.mem_bw_gbps * frac,
+            upi_gbps: if span > 1 { self.upi_gbps } else { 0.0 },
+            ..self.clone()
+        }
+    }
 }
 
 #[cfg(test)]
@@ -130,6 +182,65 @@ mod tests {
             assert_eq!(CpuPlatform::by_name(n).unwrap().name, n);
         }
         assert!(CpuPlatform::by_name("gpu").is_none());
+    }
+
+    #[test]
+    fn restrict_single_socket_slice() {
+        let l = CpuPlatform::large();
+        let r = l.restrict(0, 8);
+        assert_eq!(r.physical_cores(), 8);
+        assert_eq!(r.sockets, 1);
+        // a third of the socket's cores ⇒ a third of its LLC + bandwidth
+        assert!((r.mem_bw_gbps - 100.0 / 3.0).abs() < 1e-9);
+        assert!((r.llc_mib_per_socket - 11.0).abs() < 1e-9);
+        assert_eq!(r.upi_gbps, 0.0);
+        // per-core capability is untouched
+        assert_eq!(r.freq_ghz, l.freq_ghz);
+        assert_eq!(r.peak_gflops_per_core, l.peak_gflops_per_core);
+    }
+
+    #[test]
+    fn restrict_spanning_sockets_keeps_upi() {
+        let l2 = CpuPlatform::large2();
+        let r = l2.restrict(12, 24); // cores 12..=35: 12 on each socket
+        assert_eq!(r.sockets, 2);
+        assert_eq!(r.physical_cores(), 24);
+        assert_eq!(r.upi_gbps, 120.0);
+        assert!((r.mem_bw_gbps - 50.0).abs() < 1e-9);
+        // within one socket the UPI link disappears
+        let one = l2.restrict(24, 24);
+        assert_eq!(one.sockets, 1);
+        assert_eq!(one.upi_gbps, 0.0);
+        assert!((one.mem_bw_gbps - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn restrict_uneven_straddle_models_majority_socket() {
+        // 25 cores = 24 on socket 0 + 1 on socket 1: NOT a symmetric
+        // 2×12 machine — modelled as the majority socket alone
+        let l2 = CpuPlatform::large2();
+        let r = l2.restrict(0, 25);
+        assert_eq!(r.sockets, 1);
+        assert_eq!(r.physical_cores(), 24);
+        assert_eq!(r.upi_gbps, 0.0);
+        assert!((r.mem_bw_gbps - 100.0).abs() < 1e-9);
+        // a 16+8 straddle is close enough to even to keep both sockets
+        let s = l2.restrict(8, 24);
+        assert_eq!(s.sockets, 2);
+        assert_eq!(s.physical_cores(), 24);
+        assert_eq!(s.upi_gbps, 120.0);
+    }
+
+    #[test]
+    fn restrict_clamps_out_of_range() {
+        let s = CpuPlatform::small();
+        let r = s.restrict(2, 100);
+        assert_eq!(r.physical_cores(), 2);
+        let whole = s.restrict(0, 4);
+        assert_eq!(whole.physical_cores(), 4);
+        assert!((whole.mem_bw_gbps - s.mem_bw_gbps).abs() < 1e-9);
+        let zero = s.restrict(0, 0);
+        assert_eq!(zero.physical_cores(), 1);
     }
 
     #[test]

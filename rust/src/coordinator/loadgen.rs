@@ -7,17 +7,57 @@
 //! reports p50/p99 latency + throughput through the [`crate::metrics`]
 //! histogram types. The serving bench and the `serve_workload` example
 //! are thin wrappers over this module.
+//!
+//! Determinism is testable without a coordinator: [`open_plan`] is the
+//! exact arrival schedule the open loop follows for a seed, and
+//! [`closed_tags`] is the exact per-worker tag stream of the closed
+//! loop. [`MixPhase`] describes shifting multi-model traffic (one model
+//! ramps up while another drains) for the core-aware scheduler.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
-use crate::metrics::LatencyHistogram;
+use crate::metrics::{LatencyHistogram, WindowTracker};
 use crate::runtime::gen_input;
+use crate::tuner::OnlineTuner;
 use crate::util::prng::Prng;
+use crate::util::stats;
 
 use super::server::Coordinator;
+
+/// Modulus for deterministic request tags (any large prime works; fixed
+/// so schedules are stable across versions).
+const TAG_MODULUS: usize = 9973;
+
+/// Deterministic seed for closed-loop worker `w` of a run seeded `seed`.
+pub fn worker_seed(seed: u64, worker: usize) -> u64 {
+    seed.wrapping_add((worker as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// The first `n` input tags worker `w` draws in a closed-loop run — the
+/// exact request order that worker submits for the same seed.
+pub fn closed_tags(seed: u64, worker: usize, n: usize) -> Vec<u32> {
+    let mut rng = Prng::new(worker_seed(seed, worker));
+    (0..n).map(|_| rng.below(TAG_MODULUS) as u32).collect()
+}
+
+/// The open-loop plan for a seed: cumulative Poisson arrival offset
+/// (seconds) plus input tag per request. [`run`]'s open loop follows
+/// this exact schedule.
+pub fn open_plan(seed: u64, rate_rps: f64, n: usize) -> Vec<(f64, u32)> {
+    let mut rng = Prng::new(seed);
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|_| {
+            if rate_rps > 0.0 {
+                t += rng.exp(1.0 / rate_rps);
+            }
+            (t, rng.below(TAG_MODULUS) as u32)
+        })
+        .collect()
+}
 
 /// Arrival process for generated requests.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -131,7 +171,7 @@ fn run_closed(
             .map(|w| {
                 let submitter = coord.submitter();
                 let kind = cfg.kind.clone();
-                let seed = cfg.seed.wrapping_add((w as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                let seed = worker_seed(cfg.seed, w);
                 let remaining = &remaining;
                 s.spawn(move || {
                     let mut rng = Prng::new(seed);
@@ -142,7 +182,7 @@ fn run_closed(
                         .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1))
                         .is_ok()
                     {
-                        let input = gen_input(rng.below(9973) as u32, dims, 1.0);
+                        let input = gen_input(rng.below(TAG_MODULUS) as u32, dims, 1.0);
                         let t = Instant::now();
                         match submitter.infer(&kind, input) {
                             Ok(resp) if resp.is_ok() => {
@@ -172,20 +212,16 @@ fn run_open(
     dims: &[usize],
     rate_rps: f64,
 ) -> Result<LoadReport> {
-    let mut rng = Prng::new(cfg.seed);
+    let plan = open_plan(cfg.seed, rate_rps, cfg.requests);
     let t0 = Instant::now();
     let mut pending = Vec::with_capacity(cfg.requests);
     let mut errors = 0usize;
-    let mut next_arrival = 0.0f64;
-    for _ in 0..cfg.requests {
-        if rate_rps > 0.0 {
-            next_arrival += rng.exp(1.0 / rate_rps);
-        }
+    for (next_arrival, tag) in plan {
         let now = t0.elapsed().as_secs_f64();
         if next_arrival > now {
             std::thread::sleep(Duration::from_secs_f64(next_arrival - now));
         }
-        let input = gen_input(rng.below(9973) as u32, dims, 1.0);
+        let input = gen_input(tag, dims, 1.0);
         match coord.submit(&cfg.kind, input) {
             Ok(rx) => pending.push((rx, Instant::now())),
             Err(_) => errors += 1,
@@ -251,4 +287,215 @@ impl LoadReport {
             self.mean_batch,
         )
     }
+}
+
+// ---------------------------------------------------------------------------
+// shifting multi-model mix (the core-aware scheduler's scenario)
+// ---------------------------------------------------------------------------
+
+/// One phase of a shifting multi-model mix: `requests` closed-loop
+/// requests whose kinds are drawn (seeded) from `weights`.
+#[derive(Debug, Clone)]
+pub struct MixPhase {
+    /// Per-kind traffic weights (need not sum to 1; zero allowed).
+    pub weights: Vec<(String, f64)>,
+    /// Requests issued in this phase.
+    pub requests: usize,
+}
+
+impl MixPhase {
+    /// Phase from borrowed kind names.
+    pub fn new(weights: &[(&str, f64)], requests: usize) -> Self {
+        MixPhase {
+            weights: weights.iter().map(|(k, w)| (k.to_string(), *w)).collect(),
+            requests,
+        }
+    }
+
+    /// A ramp scenario: over `phases` (≥ 2) phases, traffic shifts
+    /// linearly from all-`a` to all-`b` while volume stays constant —
+    /// one model ramps up while the other drains.
+    pub fn ramp(a: &str, b: &str, phases: usize, requests_per_phase: usize) -> Vec<MixPhase> {
+        let n = phases.max(2);
+        (0..n)
+            .map(|i| {
+                let f = i as f64 / (n - 1) as f64;
+                MixPhase {
+                    weights: vec![(a.to_string(), 1.0 - f), (b.to_string(), f)],
+                    requests: requests_per_phase,
+                }
+            })
+            .collect()
+    }
+}
+
+/// Per-kind slice of a mix phase.
+#[derive(Debug, Clone)]
+pub struct KindReport {
+    /// Model kind.
+    pub kind: String,
+    /// Requests of this kind that completed.
+    pub completed: usize,
+    /// Model-view latency (queue + model time), mean (ms).
+    pub model_mean_ms: f64,
+    /// Model-view latency, p99 (ms).
+    pub model_p99_ms: f64,
+}
+
+/// Result of one mix phase: the aggregate plus per-kind latency.
+#[derive(Debug, Clone)]
+pub struct MixReport {
+    /// Aggregate over the phase.
+    pub overall: LoadReport,
+    /// Per-kind breakdown, in the phase's weight order.
+    pub per_kind: Vec<KindReport>,
+}
+
+impl MixReport {
+    /// The slice for one kind, if it saw traffic.
+    pub fn kind(&self, kind: &str) -> Option<&KindReport> {
+        self.per_kind.iter().find(|k| k.kind == kind)
+    }
+
+    /// One-line summary for logs and CLI output.
+    pub fn summary(&self) -> String {
+        let mut s = self.overall.summary();
+        for k in &self.per_kind {
+            s.push_str(&format!(
+                " | {}: n={} mean={:.3}ms p99={:.3}ms",
+                k.kind, k.completed, k.model_mean_ms, k.model_p99_ms
+            ));
+        }
+        s
+    }
+}
+
+/// Run one phase of a shifting mix: `concurrency` closed-loop workers,
+/// each request's kind drawn from the phase weights by the seeded PRNG
+/// (same seed ⇒ same per-worker kind/tag stream).
+pub fn run_mix_phase(
+    coord: &Coordinator,
+    phase: &MixPhase,
+    concurrency: usize,
+    seed: u64,
+) -> Result<MixReport> {
+    if phase.weights.is_empty() {
+        bail!("mix phase: no kinds");
+    }
+    let total: f64 = phase.weights.iter().map(|(_, w)| w.max(0.0)).sum();
+    if total <= 0.0 {
+        bail!("mix phase: all weights zero");
+    }
+    // kind → (dims, cumulative weight), resolved once
+    let mut cum = 0.0f64;
+    let mut kinds: Vec<(String, Vec<usize>, f64)> = Vec::with_capacity(phase.weights.len());
+    for (kind, w) in &phase.weights {
+        let shape = coord
+            .router()
+            .item_shape(kind)
+            .ok_or_else(|| anyhow!("kind '{kind}' not served"))?
+            .clone();
+        cum += w.max(0.0) / total;
+        kinds.push((kind.clone(), shape.dims(), cum));
+    }
+
+    let remaining = AtomicUsize::new(phase.requests);
+    let t0 = Instant::now();
+    let mut samples: Vec<(usize, f64, f64)> = Vec::with_capacity(phase.requests);
+    let mut errors = 0usize;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..concurrency.max(1))
+            .map(|w| {
+                let submitter = coord.submitter();
+                let kinds = &kinds;
+                let remaining = &remaining;
+                let seed = worker_seed(seed, w);
+                s.spawn(move || {
+                    let mut rng = Prng::new(seed);
+                    let mut samples: Vec<(usize, f64, f64)> = Vec::new();
+                    let mut errors = 0usize;
+                    while remaining
+                        .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1))
+                        .is_ok()
+                    {
+                        let u = rng.f64();
+                        let ki = kinds
+                            .iter()
+                            .position(|(_, _, c)| u < *c)
+                            .unwrap_or(kinds.len() - 1);
+                        let tag = rng.below(TAG_MODULUS) as u32;
+                        let input = gen_input(tag, &kinds[ki].1, 1.0);
+                        let t = Instant::now();
+                        match submitter.infer(&kinds[ki].0, input) {
+                            Ok(resp) if resp.is_ok() => samples.push((
+                                ki,
+                                t.elapsed().as_secs_f64(),
+                                resp.queue_s + resp.execute_s,
+                            )),
+                            _ => errors += 1,
+                        }
+                    }
+                    (samples, errors)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (sm, e) = h.join().expect("mix worker panicked");
+            samples.extend(sm);
+            errors += e;
+        }
+    });
+    let elapsed_s = t0.elapsed().as_secs_f64();
+
+    let wall: Vec<f64> = samples.iter().map(|&(_, w, _)| w).collect();
+    let model: Vec<f64> = samples.iter().map(|&(_, _, m)| m).collect();
+    let overall = build_report(coord, wall, model, errors, elapsed_s);
+    let per_kind = kinds
+        .iter()
+        .enumerate()
+        .map(|(i, (kind, _, _))| {
+            let m: Vec<f64> =
+                samples.iter().filter(|&&(ki, _, _)| ki == i).map(|&(_, _, m)| m).collect();
+            KindReport {
+                kind: kind.clone(),
+                completed: m.len(),
+                model_mean_ms: stats::mean(&m) * 1e3,
+                model_p99_ms: stats::percentile(&m, 99.0) * 1e3,
+            }
+        })
+        .collect();
+    Ok(MixReport { overall, per_kind })
+}
+
+/// Drive a multi-phase shifting mix end-to-end: run each phase (seeded
+/// `seed + i`), close a metrics window, and — when a re-tuner is given —
+/// fold the window in and apply any proposed re-plan before the next
+/// phase. Pass `tuner: None` for the startup-frozen baseline. The single
+/// implementation of the observe → propose → apply loop used by the CLI,
+/// the serving example and the adaptive integration test.
+pub fn run_shift(
+    coord: &Coordinator,
+    phases: &[MixPhase],
+    concurrency: usize,
+    seed: u64,
+    mut tuner: Option<&mut OnlineTuner>,
+) -> Result<Vec<MixReport>> {
+    let mut tracker = WindowTracker::new();
+    let mut current = coord.current_plan();
+    let mut reports = Vec::with_capacity(phases.len());
+    for (i, phase) in phases.iter().enumerate() {
+        let report = run_mix_phase(coord, phase, concurrency, seed.wrapping_add(i as u64))?;
+        let window = tracker.snapshot(coord.metrics());
+        if let Some(t) = tuner.as_deref_mut() {
+            t.observe(&window);
+            if let Some(cur) = current.as_ref() {
+                if let Some(next) = t.propose(cur)? {
+                    coord.apply_plan(next.clone())?;
+                    current = Some(next);
+                }
+            }
+        }
+        reports.push(report);
+    }
+    Ok(reports)
 }

@@ -9,13 +9,19 @@
 //! ```text
 //! submit() ─▶ Router (validate, per-model queue)
 //!                  └─▶ DynamicBatcher (bucketed batching, max-wait)
-//!                           └─▶ Worker lanes (one Backend instance each;
-//!                               real PJRT clients are !Sync, so each lane
-//!                               owns its backend and drains a channel)
+//!                           └─▶ Worker lanes (least-loaded dispatch over
+//!                               the lanes hosting the batch's kind; each
+//!                               lane owns a Backend pinned to its
+//!                               physical-core slice under a LanePlan)
 //! ```
 //!
-//! [`loadgen`] drives deterministic closed-/open-loop request streams
-//! through the full path and reports latency percentiles + throughput.
+//! Core-aware serving: a [`crate::sched::LanePlan`] gives every lane a
+//! non-overlapping core slice with §8-guideline knobs for that slice;
+//! [`Coordinator::apply_plan`] swaps the lane set live, which is what the
+//! online re-tuner ([`crate::tuner::OnlineTuner`]) calls as traffic
+//! shifts. [`loadgen`] drives deterministic closed-/open-loop and
+//! shifting multi-model request streams through the full path and
+//! reports latency percentiles + throughput.
 
 pub mod batcher;
 pub mod loadgen;
@@ -25,7 +31,7 @@ pub mod server;
 pub mod worker;
 
 pub use batcher::{BatchPolicy, DynamicBatcher, PendingBatch};
-pub use loadgen::{Arrival, LoadReport, LoadgenConfig};
+pub use loadgen::{Arrival, KindReport, LoadReport, LoadgenConfig, MixPhase, MixReport};
 pub use request::{Request, RequestId, Response};
 pub use router::Router;
 pub use server::{Coordinator, CoordinatorConfig, Submitter};

@@ -3,22 +3,34 @@
 //! [`BackendFactory`] product — the PJRT artifact runtime or the
 //! simulation backend — so the full serving path works with zero external
 //! artifacts.
+//!
+//! Two lane regimes:
+//!
+//! * **Unassigned** (`CoordinatorConfig::lanes`): N identical lanes over
+//!   the whole machine, every lane hosting every kind.
+//! * **Core-aware** (`CoordinatorConfig::plan`): one lane per
+//!   [`LanePlan`] assignment, each pinned to a physical-core slice and a
+//!   kind set with §8-guideline knobs for that slice. Batches go to the
+//!   least-loaded lane hosting their kind, and [`Coordinator::apply_plan`]
+//!   swaps the lane set live (for the online re-tuner) without dropping
+//!   in-flight requests.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::config::CpuPlatform;
 use crate::metrics::ServingMetrics;
 use crate::runtime::{
     BackendFactory, PjrtBackendFactory, SimBackendConfig, SimBackendFactory, Tensor,
 };
+use crate::sched::{pick_lane, LanePlan};
 
 use super::batcher::{BatchPolicy, DynamicBatcher};
 use super::request::{Request, RequestId, Response};
@@ -30,17 +42,20 @@ use super::worker::WorkerLane;
 pub struct CoordinatorConfig {
     /// Backend the worker lanes execute batches on.
     pub factory: Arc<dyn BackendFactory>,
-    /// Worker lanes (each instantiates its own backend). Defaults to 1;
-    /// the `serve` CLI sets it from the tuner's inter-op pool count.
+    /// Unassigned worker lanes (each instantiates its own backend over
+    /// the whole machine). Ignored when `plan` is set. Defaults to 1.
     pub lanes: usize,
     /// Batching policy.
     pub policy: BatchPolicy,
+    /// Core-aware lane plan: one lane per assignment, pinned to its core
+    /// slice and kinds. `None` keeps the unassigned-lane behaviour.
+    pub plan: Option<LanePlan>,
 }
 
 impl CoordinatorConfig {
     /// Config over an explicit backend factory, with defaults.
     pub fn with_factory(factory: Arc<dyn BackendFactory>) -> Self {
-        CoordinatorConfig { factory, lanes: 1, policy: BatchPolicy::default() }
+        CoordinatorConfig { factory, lanes: 1, policy: BatchPolicy::default(), plan: None }
     }
 
     /// Simulation-backed config: serve model-zoo `kinds` on `platform`
@@ -64,15 +79,32 @@ impl CoordinatorConfig {
     pub fn for_kind(artifacts_dir: impl Into<PathBuf>, kind: &str) -> Self {
         Self::pjrt(artifacts_dir, &[kind])
     }
+
+    /// Attach a core-aware lane plan.
+    pub fn with_plan(mut self, plan: LanePlan) -> Self {
+        self.plan = Some(plan);
+        self
+    }
+}
+
+/// Messages into the batching loop: requests, plus an explicit shutdown
+/// wake-up (the loop blocks on the inbox when idle, so shutdown must be
+/// a message, not just a flag).
+enum LoopMsg {
+    Req(Request),
+    Shutdown,
 }
 
 /// Running serving system.
 pub struct Coordinator {
-    inbox: Sender<Request>,
+    inbox: Sender<LoopMsg>,
     metrics: Arc<ServingMetrics>,
     router: Arc<Router>,
     next_id: Arc<AtomicU64>,
     shutdown: Arc<AtomicBool>,
+    lanes: Arc<RwLock<Vec<WorkerLane>>>,
+    factory: Arc<dyn BackendFactory>,
+    plan: Mutex<Option<LanePlan>>,
     loop_handle: Option<JoinHandle<()>>,
 }
 
@@ -81,9 +113,10 @@ pub struct Coordinator {
 /// `Submitter` instead of sharing a `&Coordinator`.
 #[derive(Clone)]
 pub struct Submitter {
-    inbox: Sender<Request>,
+    inbox: Sender<LoopMsg>,
     router: Arc<Router>,
     next_id: Arc<AtomicU64>,
+    metrics: Arc<ServingMetrics>,
 }
 
 impl Submitter {
@@ -98,8 +131,9 @@ impl Submitter {
             reply: tx,
         };
         self.router.route(&req)?;
+        self.metrics.kind(kind).arrivals.inc();
         self.inbox
-            .send(req)
+            .send(LoopMsg::Req(req))
             .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
         Ok(rx)
     }
@@ -119,9 +153,30 @@ impl Coordinator {
         let router = Arc::new(Router::new(&catalog)?);
         let metrics = Arc::new(ServingMetrics::new());
 
-        let lanes: Vec<WorkerLane> = (0..cfg.lanes.max(1))
-            .map(|i| WorkerLane::spawn(i, Arc::clone(&cfg.factory), Arc::clone(&metrics)))
-            .collect::<Result<_>>()?;
+        let lanes: Vec<WorkerLane> = match &cfg.plan {
+            Some(plan) => {
+                plan.validate()?;
+                for m in &catalog.models {
+                    if !plan.hosts(&m.kind) {
+                        bail!("lane plan hosts no lane for kind '{}'", m.kind);
+                    }
+                }
+                plan.lane_assignments()
+                    .into_iter()
+                    .map(|a| {
+                        WorkerLane::spawn_assigned(
+                            Arc::clone(&cfg.factory),
+                            a,
+                            Arc::clone(&metrics),
+                        )
+                    })
+                    .collect::<Result<_>>()?
+            }
+            None => (0..cfg.lanes.max(1))
+                .map(|i| WorkerLane::spawn(i, Arc::clone(&cfg.factory), Arc::clone(&metrics)))
+                .collect::<Result<_>>()?,
+        };
+        let lanes = Arc::new(RwLock::new(lanes));
 
         let mut batchers: HashMap<String, DynamicBatcher> = catalog
             .models
@@ -134,12 +189,13 @@ impl Coordinator {
             })
             .collect();
 
-        let (inbox, rx) = channel::<Request>();
+        let (inbox, rx) = channel::<LoopMsg>();
         let shutdown = Arc::new(AtomicBool::new(false));
         let stop = Arc::clone(&shutdown);
+        let loop_lanes = Arc::clone(&lanes);
         let loop_handle = std::thread::Builder::new()
             .name("coordinator-loop".into())
-            .spawn(move || batching_loop(rx, &mut batchers, &lanes, &stop))?;
+            .spawn(move || batching_loop(rx, &mut batchers, &loop_lanes, &stop))?;
 
         Ok(Coordinator {
             inbox,
@@ -147,8 +203,62 @@ impl Coordinator {
             router,
             next_id: Arc::new(AtomicU64::new(0)),
             shutdown,
+            lanes,
+            factory: cfg.factory,
+            plan: Mutex::new(cfg.plan),
             loop_handle: Some(loop_handle),
         })
+    }
+
+    /// Swap the lane set to a new core-aware plan without dropping
+    /// in-flight requests: fresh lanes are spawned and readied first,
+    /// then dispatch flips to them, then the old lanes drain the batches
+    /// they already accepted and shut down.
+    pub fn apply_plan(&self, plan: LanePlan) -> Result<()> {
+        plan.validate()?;
+        for kind in self.router.kinds() {
+            if !plan.hosts(kind) {
+                bail!("lane plan hosts no lane for kind '{kind}'");
+            }
+        }
+        // serialise whole re-plans on the plan mutex so the stored plan
+        // can never disagree with the live lane set under concurrent
+        // apply_plan calls (the batching loop only takes the lanes read
+        // lock, so this ordering cannot deadlock)
+        let mut current = self.plan.lock().unwrap();
+        let fresh: Vec<WorkerLane> = plan
+            .lane_assignments()
+            .into_iter()
+            .map(|a| {
+                WorkerLane::spawn_assigned(Arc::clone(&self.factory), a, Arc::clone(&self.metrics))
+            })
+            .collect::<Result<_>>()?;
+        let old = {
+            let mut guard = self.lanes.write().unwrap();
+            std::mem::replace(&mut *guard, fresh)
+        };
+        // dropping the old lanes enqueues their shutdown *behind* any
+        // batches they already accepted, so in-flight work completes
+        // before the join
+        drop(old);
+        *current = Some(plan);
+        Ok(())
+    }
+
+    /// The active lane plan, if core-aware serving is on.
+    pub fn current_plan(&self) -> Option<LanePlan> {
+        self.plan.lock().unwrap().clone()
+    }
+
+    /// Per-lane queue depth (items queued or executing), as
+    /// `(lane_id, depth)` pairs in lane order.
+    pub fn lane_depths(&self) -> Vec<(usize, usize)> {
+        self.lanes
+            .read()
+            .unwrap()
+            .iter()
+            .map(|l| (l.lane_id(), l.queued_items()))
+            .collect()
     }
 
     /// A cloneable submit handle for cross-thread load generation.
@@ -157,6 +267,7 @@ impl Coordinator {
             inbox: self.inbox.clone(),
             router: Arc::clone(&self.router),
             next_id: Arc::clone(&self.next_id),
+            metrics: Arc::clone(&self.metrics),
         }
     }
 
@@ -185,65 +296,73 @@ impl Coordinator {
 impl Drop for Coordinator {
     fn drop(&mut self) {
         self.shutdown.store(true, Ordering::Release);
+        // wake the loop even when it is blocked on an idle recv()
+        let _ = self.inbox.send(LoopMsg::Shutdown);
         if let Some(h) = self.loop_handle.take() {
             let _ = h.join();
         }
+        // join lane threads deterministically (flushed batches included)
+        self.lanes.write().unwrap().clear();
     }
 }
 
 /// The serving loop: drain the inbox into per-kind batchers, cut batches
-/// when full or timed out, round-robin them over lanes.
+/// when full or timed out, dispatch each to the least-loaded lane
+/// hosting its kind. With nothing queued the loop **blocks** on the
+/// inbox — no idle polling; a [`LoopMsg::Shutdown`] (or sender
+/// disconnect) flushes what remains and exits.
 fn batching_loop(
-    rx: Receiver<Request>,
+    rx: Receiver<LoopMsg>,
     batchers: &mut HashMap<String, DynamicBatcher>,
-    lanes: &[WorkerLane],
+    lanes: &RwLock<Vec<WorkerLane>>,
     shutdown: &AtomicBool,
 ) {
-    let mut next_lane = 0usize;
     loop {
-        // sleep until the nearest deadline (or a short poll when idle)
         let now = Instant::now();
-        let wait = batchers
-            .values()
-            .filter_map(|b| b.next_deadline(now))
-            .min()
-            .unwrap_or(Duration::from_millis(1));
-        match rx.recv_timeout(wait) {
-            Ok(req) => {
-                if let Some(b) = batchers.get_mut(&req.kind) {
-                    b.push(req);
-                }
+        let wait = batchers.values().filter_map(|b| b.next_deadline(now)).min();
+        let msg = match wait {
+            // nothing queued anywhere: block until work or shutdown
+            None => match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => Some(LoopMsg::Shutdown),
+            },
+            // sleep exactly until the nearest batch deadline
+            Some(d) => match rx.recv_timeout(d) {
+                Ok(m) => Some(m),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => Some(LoopMsg::Shutdown),
+            },
+        };
+        let mut stop = shutdown.load(Ordering::Acquire);
+        match msg {
+            Some(LoopMsg::Req(req)) => {
+                enqueue(batchers, req);
                 // drain whatever else arrived
-                while let Ok(req) = rx.try_recv() {
-                    if let Some(b) = batchers.get_mut(&req.kind) {
-                        b.push(req);
+                loop {
+                    match rx.try_recv() {
+                        Ok(LoopMsg::Req(r)) => enqueue(batchers, r),
+                        Ok(LoopMsg::Shutdown) => {
+                            stop = true;
+                            break;
+                        }
+                        Err(_) => break,
                     }
                 }
             }
-            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
-            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                // flush remaining queues, then exit
-                for b in batchers.values_mut() {
-                    while !b.is_empty() {
-                        lanes[next_lane % lanes.len()].submit(b.cut());
-                        next_lane += 1;
-                    }
-                }
-                return;
-            }
+            Some(LoopMsg::Shutdown) => stop = true,
+            None => {}
         }
         let now = Instant::now();
+        let lanes = lanes.read().unwrap();
         for b in batchers.values_mut() {
             while b.ready(now) {
-                lanes[next_lane % lanes.len()].submit(b.cut());
-                next_lane += 1;
+                dispatch(&lanes, b.cut());
             }
         }
-        if shutdown.load(Ordering::Acquire) {
+        if stop {
             for b in batchers.values_mut() {
                 while !b.is_empty() {
-                    lanes[next_lane % lanes.len()].submit(b.cut());
-                    next_lane += 1;
+                    dispatch(&lanes, b.cut());
                 }
             }
             return;
@@ -251,5 +370,24 @@ fn batching_loop(
     }
 }
 
-/// A `Mutex`-free alias kept for API clarity in examples.
-pub type SharedCoordinator = Arc<Mutex<Coordinator>>;
+fn enqueue(batchers: &mut HashMap<String, DynamicBatcher>, req: Request) {
+    if let Some(b) = batchers.get_mut(&req.kind) {
+        b.push(req);
+    }
+}
+
+/// Least-loaded dispatch over the lanes hosting the batch's kind
+/// (deterministic: ties go to the lowest lane index).
+fn dispatch(lanes: &[WorkerLane], batch: super::batcher::PendingBatch) {
+    let loads: Vec<usize> = lanes.iter().map(WorkerLane::queued_items).collect();
+    match pick_lane(&loads, |i| lanes[i].hosts(&batch.kind)) {
+        Some(i) => lanes[i].submit(batch),
+        // start()/apply_plan() guarantee every catalog kind is hosted;
+        // if a regression slips through, keep serving rather than drop
+        None => {
+            if let Some(l) = lanes.first() {
+                l.submit(batch);
+            }
+        }
+    }
+}

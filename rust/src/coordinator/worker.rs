@@ -1,6 +1,14 @@
 //! Worker lane: one thread owning a lane-local [`Backend`] instance
 //! (real PJRT clients are not `Sync`), draining batches from a channel,
 //! executing, and scattering per-request responses.
+//!
+//! Lanes are either *unassigned* (legacy: any kind, whole machine) or
+//! *core-aware*: spawned from a [`LaneAssignment`] that pins the lane to
+//! a physical-core slice, a kind set and framework knobs — the backend
+//! is created through `BackendFactory::create_on` so simulated latencies
+//! reflect the lane's slice, not the whole box. Every lane exports a
+//! queue-depth gauge (items queued or executing) that the coordinator's
+//! least-loaded dispatch reads.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -9,8 +17,9 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::metrics::ServingMetrics;
+use crate::metrics::{Gauge, ServingMetrics};
 use crate::runtime::{Backend, BackendFactory, Tensor};
+use crate::sched::LaneAssignment;
 
 use super::batcher::PendingBatch;
 use super::request::Response;
@@ -19,6 +28,9 @@ use super::request::Response;
 pub struct WorkerLane {
     tx: Sender<LaneMsg>,
     handle: Option<JoinHandle<()>>,
+    lane_id: usize,
+    kinds: Option<Vec<String>>,
+    depth: Arc<Gauge>,
 }
 
 enum LaneMsg {
@@ -27,20 +39,50 @@ enum LaneMsg {
 }
 
 impl WorkerLane {
-    /// Spawn a lane that instantiates its own backend from `factory` on
-    /// the lane thread. Returns once the backend is ready (so startup
-    /// failures surface synchronously).
+    /// Spawn an unassigned lane: the backend runs on the whole machine
+    /// and the lane accepts every catalog kind. Returns once the backend
+    /// is ready (so startup failures surface synchronously).
     pub fn spawn(
         lane_id: usize,
         factory: Arc<dyn BackendFactory>,
         metrics: Arc<ServingMetrics>,
     ) -> Result<Self> {
+        Self::spawn_inner(lane_id, factory, None, metrics)
+    }
+
+    /// Spawn a core-aware lane: the backend is created for the lane's
+    /// physical-core allocation (`BackendFactory::create_on`) and the
+    /// lane only accepts its assigned kinds.
+    pub fn spawn_assigned(
+        factory: Arc<dyn BackendFactory>,
+        assignment: LaneAssignment,
+        metrics: Arc<ServingMetrics>,
+    ) -> Result<Self> {
+        let lane_id = assignment.lane_id;
+        Self::spawn_inner(lane_id, factory, Some(assignment), metrics)
+    }
+
+    fn spawn_inner(
+        lane_id: usize,
+        factory: Arc<dyn BackendFactory>,
+        assignment: Option<LaneAssignment>,
+        metrics: Arc<ServingMetrics>,
+    ) -> Result<Self> {
+        let kinds = assignment
+            .as_ref()
+            .and_then(|a| if a.kinds.is_empty() { None } else { Some(a.kinds.clone()) });
+        let depth = Arc::new(Gauge::new());
+        let lane_depth = Arc::clone(&depth);
         let (tx, rx) = channel::<LaneMsg>();
         let (ready_tx, ready_rx) = channel::<Result<()>>();
         let handle = std::thread::Builder::new()
             .name(format!("worker-lane-{lane_id}"))
             .spawn(move || {
-                let backend = match factory.create() {
+                let created = match &assignment {
+                    Some(a) => factory.create_on(a),
+                    None => factory.create(),
+                };
+                let backend = match created {
                     Ok(b) => {
                         let _ = ready_tx.send(Ok(()));
                         b
@@ -50,15 +92,36 @@ impl WorkerLane {
                         return;
                     }
                 };
-                lane_loop(&*backend, rx, &metrics);
+                lane_loop(&*backend, rx, &metrics, &lane_depth);
             })?;
         ready_rx.recv()??;
-        Ok(WorkerLane { tx, handle: Some(handle) })
+        Ok(WorkerLane { tx, handle: Some(handle), lane_id, kinds, depth })
     }
 
     /// Queue a batch for execution.
     pub fn submit(&self, batch: PendingBatch) {
+        self.depth.add(batch.requests.len() as u64);
         let _ = self.tx.send(LaneMsg::Batch(batch));
+    }
+
+    /// Items queued or executing on this lane — the load signal the
+    /// coordinator's least-loaded dispatch reads.
+    pub fn queued_items(&self) -> usize {
+        self.depth.get()
+    }
+
+    /// True when this lane executes batches for `kind` (unassigned lanes
+    /// host everything).
+    pub fn hosts(&self, kind: &str) -> bool {
+        match &self.kinds {
+            None => true,
+            Some(ks) => ks.iter().any(|k| k == kind),
+        }
+    }
+
+    /// Lane index within its plan.
+    pub fn lane_id(&self) -> usize {
+        self.lane_id
     }
 }
 
@@ -71,11 +134,20 @@ impl Drop for WorkerLane {
     }
 }
 
-fn lane_loop(backend: &dyn Backend, rx: Receiver<LaneMsg>, metrics: &ServingMetrics) {
+fn lane_loop(
+    backend: &dyn Backend,
+    rx: Receiver<LaneMsg>,
+    metrics: &ServingMetrics,
+    depth: &Gauge,
+) {
     while let Ok(msg) = rx.recv() {
         match msg {
             LaneMsg::Shutdown => return,
-            LaneMsg::Batch(batch) => execute_batch(backend, batch, metrics),
+            LaneMsg::Batch(batch) => {
+                let items = batch.requests.len() as u64;
+                execute_batch(backend, batch, metrics);
+                depth.sub(items);
+            }
         }
     }
 }
@@ -84,6 +156,7 @@ fn lane_loop(backend: &dyn Backend, rx: Receiver<LaneMsg>, metrics: &ServingMetr
 pub fn execute_batch(backend: &dyn Backend, batch: PendingBatch, metrics: &ServingMetrics) {
     let dispatch_time = Instant::now();
     let n = batch.requests.len();
+    let kind_counters = metrics.kind(&batch.kind);
 
     // gather: rows of each item, zero-padding up to the bucket
     let rows_per_item = batch.requests[0].input.shape[0];
@@ -99,6 +172,8 @@ pub fn execute_batch(backend: &dyn Backend, batch: PendingBatch, metrics: &Servi
 
     let result = backend.execute(&batch.kind, batch.bucket, x);
     metrics.batches.inc();
+    kind_counters.batches.inc();
+    kind_counters.batch_items.add(n as u64);
     if batch.bucket > n {
         metrics.padded.add((batch.bucket - n) as u64);
     }
@@ -120,6 +195,7 @@ pub fn execute_batch(backend: &dyn Backend, batch: PendingBatch, metrics: &Servi
                 item_shape[0] = rows_per_out_item;
                 let queue_s = dispatch_time.duration_since(req.enqueued).as_secs_f64();
                 metrics.requests.inc();
+                kind_counters.completed.inc();
                 metrics.queue_latency.record(queue_s);
                 metrics.request_latency.record(queue_s + execute_s);
                 let _ = req.reply.send(Response {
@@ -136,6 +212,7 @@ pub fn execute_batch(backend: &dyn Backend, batch: PendingBatch, metrics: &Servi
             let msg = format!("{e:#}");
             for req in batch.requests {
                 metrics.requests.inc();
+                kind_counters.completed.inc();
                 let _ = req.reply.send(Response {
                     id: req.id,
                     output: Err(msg.clone()),

@@ -6,6 +6,8 @@
 //! parframe simulate --model resnet50 --pools 2 --mkl 12 --intra 12
 //! parframe figures --fig 18 | --table 2 | --all
 //! parframe serve --kind wide_deep --requests 256      (sim backend)
+//! parframe serve --kinds wide_deep,resnet50           (core-aware lane plan)
+//! parframe serve --kinds wide_deep,resnet50 --adaptive (online re-tuning)
 //! parframe serve --backend pjrt --artifacts artifacts --kind mlp
 //! parframe check --artifacts artifacts     verify artifact digests via PJRT
 //! ```
@@ -16,12 +18,16 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use parframe::bench_tables;
 use parframe::config::{CpuPlatform, OperatorImpl, RunConfig};
-use parframe::coordinator::{loadgen, BatchPolicy, Coordinator, CoordinatorConfig, LoadgenConfig};
+use parframe::coordinator::{
+    loadgen, BatchPolicy, Coordinator, CoordinatorConfig, LoadgenConfig, MixPhase,
+};
 use parframe::graph::analyze_width;
 use parframe::models;
 use parframe::runtime::ModelRuntime;
+use parframe::sched::LanePlan;
 use parframe::sim;
 use parframe::tuner;
+use parframe::tuner::OnlineTuner;
 
 fn main() {
     if let Err(e) = run() {
@@ -37,8 +43,8 @@ fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
     while i < args.len() {
         let a = &args[i];
         if let Some(key) = a.strip_prefix("--") {
-            if key == "all" {
-                flags.insert("all".to_string(), "true".to_string());
+            if key == "all" || key == "adaptive" {
+                flags.insert(key.to_string(), "true".to_string());
                 i += 1;
             } else {
                 let v = args.get(i + 1).ok_or_else(|| anyhow!("missing value for --{key}"))?;
@@ -96,6 +102,8 @@ fn print_help() {
            ablations                      per-feature degradation table
            serve    [--backend sim|pjrt] [--kind wide_deep] [--requests N]\n\
                     [--lanes N] [--concurrency N] [--platform P]\n\
+                    [--kinds A,B]          core-aware lane plan (sim only)\n\
+                    [--adaptive]           online re-tuning over a load shift\n\
                     [--artifacts DIR]      (pjrt backend only)\n\
            check    --artifacts DIR\n\
          platforms: small | large | large.2 (default large.2)"
@@ -222,6 +230,14 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let concurrency: usize =
         flags.get("concurrency").map(|c| c.parse()).transpose()?.unwrap_or(4);
 
+    // multi-kind core-aware serving (with optional online re-tuning)
+    if flags.contains_key("kinds") || flags.contains_key("adaptive") {
+        if backend != "sim" {
+            bail!("--kinds/--adaptive need the sim backend");
+        }
+        return cmd_serve_planned(flags, n_requests, concurrency);
+    }
+
     let (mut cfg, kind) = match backend {
         "sim" => {
             let platform = platform_from(flags)?;
@@ -250,6 +266,76 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     println!("loadgen: {}", report.summary());
     println!("metrics: {}", coord.metrics().summary());
     Ok(())
+}
+
+/// Core-aware serving over ≥ 2 model kinds: a shifting-mix scenario
+/// (kind A drains while kind B ramps) on a lane-planned coordinator.
+/// With `--adaptive` the online re-tuner re-splits cores between phases;
+/// without it the startup §8 plan stays frozen — run both to compare.
+fn cmd_serve_planned(
+    flags: &HashMap<String, String>,
+    n_requests: usize,
+    concurrency: usize,
+) -> Result<()> {
+    let platform = platform_from(flags)?;
+    let adaptive = flags.contains_key("adaptive");
+    let kinds_arg = flags
+        .get("kinds")
+        .cloned()
+        .unwrap_or_else(|| "wide_deep,resnet50".to_string());
+    let kinds: Vec<String> = kinds_arg
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if kinds.len() < 2 {
+        bail!("core-aware serving needs ≥ 2 kinds, e.g. --kinds wide_deep,resnet50");
+    }
+    let kind_refs: Vec<&str> = kinds.iter().map(String::as_str).collect();
+
+    let plan = LanePlan::guideline(&platform, &kind_refs)?;
+    println!(
+        "starting coordinator: backend=sim kinds={} platform={} adaptive={adaptive}",
+        kinds.join(","),
+        platform.name
+    );
+    print_plan(&plan);
+    let cfg = CoordinatorConfig::sim(platform.clone(), &kind_refs).with_plan(plan);
+    let coord = Coordinator::start(cfg)?;
+
+    let phases = MixPhase::ramp(&kinds[0], &kinds[1], 4, (n_requests / 4).max(8));
+    let mut tuner = OnlineTuner::new(platform, &kind_refs);
+    let reports = loadgen::run_shift(
+        &coord,
+        &phases,
+        concurrency,
+        0x5EED,
+        if adaptive { Some(&mut tuner) } else { None },
+    )?;
+    for (i, report) in reports.iter().enumerate() {
+        println!("phase {i}: {}", report.summary());
+    }
+    if adaptive {
+        println!("plan after online re-tuning:");
+        print_plan(&coord.current_plan().expect("planned coordinator"));
+    }
+    println!("metrics: {}", coord.metrics().summary());
+    Ok(())
+}
+
+fn print_plan(plan: &LanePlan) {
+    for g in &plan.groups {
+        println!(
+            "  lane group {:?}: cores {}..={} ({}) pools={} mkl={} intra={}",
+            g.kinds,
+            g.allocation.first_core,
+            g.allocation.last_core(),
+            g.allocation.cores,
+            g.framework.inter_op_pools,
+            g.framework.mkl_threads,
+            g.framework.intra_op_threads
+        );
+    }
 }
 
 fn cmd_check(flags: &HashMap<String, String>) -> Result<()> {

@@ -1,47 +1,99 @@
-//! Serving metrics: latency histograms and throughput counters for the
-//! coordinator (and anything else that wants cheap percentile tracking).
+//! Serving metrics: latency histograms, throughput counters, queue-depth
+//! gauges and per-kind windowed snapshots for the coordinator (and
+//! anything else that wants cheap percentile tracking).
+//!
+//! Histograms are memory-bounded: past [`HISTOGRAM_RESERVOIR`] samples,
+//! recording switches to reservoir sampling (algorithm R), so long soak
+//! runs under the load generator hold a constant footprint while
+//! percentiles stay representative of everything seen.
+//! [`WindowTracker`] turns the cumulative per-kind counters into
+//! per-window deltas — the signal the online re-tuner feeds on.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use crate::util::prng::Prng;
 use crate::util::stats;
 
-/// Thread-safe latency recorder with percentile queries.
-#[derive(Debug, Default)]
+/// Cap on samples a [`LatencyHistogram`] retains; recording beyond this
+/// reservoir-samples uniformly over everything seen.
+pub const HISTOGRAM_RESERVOIR: usize = 4096;
+
+#[derive(Debug)]
+struct Reservoir {
+    samples: Vec<f64>,
+    seen: u64,
+    rng: Prng,
+}
+
+/// Thread-safe latency recorder with percentile queries and bounded
+/// memory (uniform reservoir past [`HISTOGRAM_RESERVOIR`] samples).
+#[derive(Debug)]
 pub struct LatencyHistogram {
-    samples: Mutex<Vec<f64>>,
+    inner: Mutex<Reservoir>,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl LatencyHistogram {
     /// Empty histogram.
     pub fn new() -> Self {
-        Self::default()
+        LatencyHistogram {
+            inner: Mutex::new(Reservoir {
+                samples: Vec::new(),
+                seen: 0,
+                rng: Prng::new(0x4857_6F67),
+            }),
+        }
     }
 
     /// Record one latency sample (seconds).
     pub fn record(&self, secs: f64) {
-        self.samples.lock().unwrap().push(secs);
+        let mut r = self.inner.lock().unwrap();
+        r.seen += 1;
+        if r.samples.len() < HISTOGRAM_RESERVOIR {
+            r.samples.push(secs);
+        } else {
+            // algorithm R: keep each of the `seen` samples with equal
+            // probability RESERVOIR/seen
+            let seen = r.seen as usize;
+            let j = r.rng.below(seen);
+            if j < HISTOGRAM_RESERVOIR {
+                r.samples[j] = secs;
+            }
+        }
     }
 
-    /// Number of samples.
+    /// Total samples recorded (not the retained subsample size).
     pub fn count(&self) -> usize {
-        self.samples.lock().unwrap().len()
+        self.inner.lock().unwrap().seen as usize
     }
 
-    /// Percentile (q in [0, 100]).
+    /// Samples currently retained (≤ [`HISTOGRAM_RESERVOIR`]).
+    pub fn retained(&self) -> usize {
+        self.inner.lock().unwrap().samples.len()
+    }
+
+    /// Percentile (q in [0, 100]) over the retained subsample.
     pub fn percentile(&self, q: f64) -> f64 {
-        stats::percentile(&self.samples.lock().unwrap(), q)
+        stats::percentile(&self.inner.lock().unwrap().samples, q)
     }
 
-    /// Mean latency.
+    /// Mean latency over the retained subsample.
     pub fn mean(&self) -> f64 {
-        stats::mean(&self.samples.lock().unwrap())
+        stats::mean(&self.inner.lock().unwrap().samples)
     }
 
-    /// Snapshot of all samples (for reports).
+    /// Snapshot of the retained samples (for reports; a uniform
+    /// subsample once more than [`HISTOGRAM_RESERVOIR`] were recorded).
     pub fn snapshot(&self) -> Vec<f64> {
-        self.samples.lock().unwrap().clone()
+        self.inner.lock().unwrap().samples.clone()
     }
 }
 
@@ -73,6 +125,49 @@ impl Counter {
     }
 }
 
+/// Instantaneous level (queue depth, in-flight items): add/sub from any
+/// thread, read anywhere. Reads clamp at zero.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicI64,
+}
+
+impl Gauge {
+    /// Zeroed gauge.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Raise the level by `n`.
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n as i64, Ordering::Relaxed);
+    }
+
+    /// Lower the level by `n`.
+    pub fn sub(&self, n: u64) {
+        self.v.fetch_sub(n as i64, Ordering::Relaxed);
+    }
+
+    /// Current level (0 if transiently negative).
+    pub fn get(&self) -> usize {
+        self.v.load(Ordering::Relaxed).max(0) as usize
+    }
+}
+
+/// Per-model-kind serving counters; arrivals vs completions per window
+/// drive the online re-tuner.
+#[derive(Debug, Default)]
+pub struct KindCounters {
+    /// Requests routed for this kind.
+    pub arrivals: Counter,
+    /// Requests answered (success or error) for this kind.
+    pub completed: Counter,
+    /// Batches dispatched for this kind.
+    pub batches: Counter,
+    /// Live (unpadded) items across those batches.
+    pub batch_items: Counter,
+}
+
 /// Coordinator-wide metrics bundle.
 #[derive(Debug, Default)]
 pub struct ServingMetrics {
@@ -90,12 +185,32 @@ pub struct ServingMetrics {
     pub batches: Counter,
     /// Requests that had to be padded (batch bucket > actual).
     pub padded: Counter,
+    per_kind: Mutex<HashMap<String, Arc<KindCounters>>>,
 }
 
 impl ServingMetrics {
     /// Fresh bundle.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Counters for one model kind (created on first touch). Steady
+    /// state is a borrowed lookup — the `String` key is only allocated
+    /// the first time a kind appears.
+    pub fn kind(&self, kind: &str) -> Arc<KindCounters> {
+        let mut g = self.per_kind.lock().unwrap();
+        if let Some(c) = g.get(kind) {
+            return Arc::clone(c);
+        }
+        Arc::clone(g.entry(kind.to_string()).or_default())
+    }
+
+    /// Kinds that have recorded any activity, sorted.
+    pub fn kinds_seen(&self) -> Vec<String> {
+        let g = self.per_kind.lock().unwrap();
+        let mut v: Vec<String> = g.keys().cloned().collect();
+        v.sort_unstable();
+        v
     }
 
     /// Mean requests per dispatched batch.
@@ -119,6 +234,111 @@ impl ServingMetrics {
             self.request_latency.percentile(95.0) * 1e3,
             self.request_latency.percentile(99.0) * 1e3,
         )
+    }
+}
+
+/// One kind's activity over a closed window (counter deltas).
+#[derive(Debug, Clone, PartialEq)]
+pub struct KindWindow {
+    /// Model kind.
+    pub kind: String,
+    /// Requests routed in the window.
+    pub arrivals: u64,
+    /// Requests answered in the window.
+    pub completed: u64,
+    /// Batches dispatched in the window.
+    pub batches: u64,
+    /// Live items across those batches.
+    pub batch_items: u64,
+}
+
+impl KindWindow {
+    /// Offered load over the window (requests/second).
+    pub fn arrival_rate(&self, elapsed_s: f64) -> f64 {
+        if elapsed_s > 0.0 {
+            self.arrivals as f64 / elapsed_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean live items per dispatched batch in the window.
+    pub fn batch_occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batch_items as f64 / self.batches as f64
+        }
+    }
+
+    /// Arrivals not yet answered by window close (backlog growth).
+    pub fn backlog(&self) -> i64 {
+        self.arrivals as i64 - self.completed as i64
+    }
+}
+
+/// One closed window of serving activity across all kinds.
+#[derive(Debug, Clone)]
+pub struct WindowSnapshot {
+    /// Wall-clock length of the window (seconds).
+    pub elapsed_s: f64,
+    /// Per-kind deltas, sorted by kind.
+    pub kinds: Vec<KindWindow>,
+}
+
+impl WindowSnapshot {
+    /// The window for one kind, if it saw any activity ever.
+    pub fn get(&self, kind: &str) -> Option<&KindWindow> {
+        self.kinds.iter().find(|k| k.kind == kind)
+    }
+
+    /// Requests routed in the window, all kinds.
+    pub fn total_arrivals(&self) -> u64 {
+        self.kinds.iter().map(|k| k.arrivals).sum()
+    }
+}
+
+/// Turns cumulative [`ServingMetrics`] counters into per-window deltas:
+/// each [`WindowTracker::snapshot`] closes the window that began at the
+/// previous call.
+#[derive(Debug)]
+pub struct WindowTracker {
+    last: HashMap<String, [u64; 4]>,
+    last_t: Instant,
+}
+
+impl Default for WindowTracker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WindowTracker {
+    /// Open the first window now.
+    pub fn new() -> Self {
+        WindowTracker { last: HashMap::new(), last_t: Instant::now() }
+    }
+
+    /// Close the current window: per-kind deltas since the previous
+    /// snapshot (or since construction).
+    pub fn snapshot(&mut self, m: &ServingMetrics) -> WindowSnapshot {
+        let now = Instant::now();
+        let elapsed_s = now.duration_since(self.last_t).as_secs_f64();
+        self.last_t = now;
+        let mut kinds = Vec::new();
+        for k in m.kinds_seen() {
+            let c = m.kind(&k);
+            let cur = [c.arrivals.get(), c.completed.get(), c.batches.get(), c.batch_items.get()];
+            let prev = self.last.insert(k.clone(), cur).unwrap_or([0; 4]);
+            kinds.push(KindWindow {
+                kind: k,
+                arrivals: cur[0].saturating_sub(prev[0]),
+                completed: cur[1].saturating_sub(prev[1]),
+                batches: cur[2].saturating_sub(prev[2]),
+                batch_items: cur[3].saturating_sub(prev[3]),
+            });
+        }
+        WindowSnapshot { elapsed_s, kinds }
     }
 }
 
@@ -160,6 +380,21 @@ mod tests {
     }
 
     #[test]
+    fn histogram_memory_bounded() {
+        let h = LatencyHistogram::new();
+        for i in 0..(HISTOGRAM_RESERVOIR * 4) {
+            h.record(i as f64);
+        }
+        assert_eq!(h.count(), HISTOGRAM_RESERVOIR * 4);
+        assert_eq!(h.retained(), HISTOGRAM_RESERVOIR);
+        assert_eq!(h.snapshot().len(), HISTOGRAM_RESERVOIR);
+        // the subsample still spans the distribution
+        let p50 = h.percentile(50.0);
+        let n = (HISTOGRAM_RESERVOIR * 4) as f64;
+        assert!(p50 > n * 0.25 && p50 < n * 0.75, "p50={p50}");
+    }
+
+    #[test]
     fn counter_concurrent() {
         let c = std::sync::Arc::new(Counter::new());
         let handles: Vec<_> = (0..4)
@@ -179,6 +414,16 @@ mod tests {
     }
 
     #[test]
+    fn gauge_tracks_level() {
+        let g = Gauge::new();
+        g.add(5);
+        g.sub(2);
+        assert_eq!(g.get(), 3);
+        g.sub(10);
+        assert_eq!(g.get(), 0, "reads clamp at zero");
+    }
+
+    #[test]
     fn serving_summary_formats() {
         let m = ServingMetrics::new();
         m.requests.add(10);
@@ -187,6 +432,41 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("requests=10"));
         assert!(s.contains("mean_batch=2.50"));
+    }
+
+    #[test]
+    fn kind_counters_shared_and_listed() {
+        let m = ServingMetrics::new();
+        m.kind("wide_deep").arrivals.inc();
+        m.kind("wide_deep").arrivals.inc();
+        m.kind("resnet50").completed.inc();
+        assert_eq!(m.kind("wide_deep").arrivals.get(), 2);
+        assert_eq!(m.kinds_seen(), vec!["resnet50".to_string(), "wide_deep".to_string()]);
+    }
+
+    #[test]
+    fn window_tracker_deltas() {
+        let m = ServingMetrics::new();
+        let mut t = WindowTracker::new();
+        m.kind("a").arrivals.add(10);
+        m.kind("a").completed.add(8);
+        m.kind("a").batches.add(4);
+        m.kind("a").batch_items.add(8);
+        let w1 = t.snapshot(&m);
+        let a = w1.get("a").unwrap();
+        assert_eq!(a.arrivals, 10);
+        assert_eq!(a.backlog(), 2);
+        assert_eq!(a.batch_occupancy(), 2.0);
+        assert_eq!(w1.total_arrivals(), 10);
+
+        // second window only sees the delta
+        m.kind("a").arrivals.add(3);
+        m.kind("b").arrivals.add(7);
+        let w2 = t.snapshot(&m);
+        assert_eq!(w2.get("a").unwrap().arrivals, 3);
+        assert_eq!(w2.get("b").unwrap().arrivals, 7);
+        assert_eq!(w2.get("a").unwrap().completed, 0);
+        assert!(w2.elapsed_s >= 0.0);
     }
 
     #[test]

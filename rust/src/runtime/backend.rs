@@ -16,6 +16,8 @@
 
 use anyhow::Result;
 
+use crate::sched::LaneAssignment;
+
 use super::artifact::Tensor;
 
 /// Per-item input contract for one served model family: an item occupies
@@ -104,6 +106,17 @@ pub trait BackendFactory: Send + Sync {
 
     /// Instantiate a lane-local executor (called on the lane's thread).
     fn create(&self) -> Result<Box<dyn Backend>>;
+
+    /// Instantiate a lane-local executor for a core-aware
+    /// [`LaneAssignment`] (called on the lane's thread): the backend
+    /// should execute under the assignment's physical-core slice and
+    /// framework knobs, serving only the assigned kinds. Backends that
+    /// cannot honour core allocations (e.g. PJRT, where the OS schedules
+    /// threads) fall back to [`BackendFactory::create`].
+    fn create_on(&self, assignment: &LaneAssignment) -> Result<Box<dyn Backend>> {
+        let _ = assignment;
+        self.create()
+    }
 }
 
 #[cfg(test)]

@@ -16,6 +16,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::config::{CpuPlatform, FrameworkConfig};
 use crate::models;
+use crate::sched::{CoreAllocation, LaneAssignment};
 use crate::sim;
 use crate::tuner;
 
@@ -107,17 +108,29 @@ impl SimTables {
     }
 }
 
-/// Factory minting [`SimBackend`] lane instances. The latency table is
-/// simulated once on first use and shared across lanes.
+/// Cache key for one core-aware lane table: the core slice, the hosted
+/// kinds, and the (possibly pinned) framework knobs.
+type LaneKey = (CoreAllocation, Vec<String>, Option<FrameworkConfig>);
+
+/// Factory minting [`SimBackend`] lane instances. The whole-machine
+/// latency table is simulated once on first use and shared across
+/// unassigned lanes; core-aware lanes (`create_on`) get tables simulated
+/// under *their allocation's* restricted platform, cached per assignment
+/// so a re-plan back to a previous split is free.
 pub struct SimBackendFactory {
     cfg: SimBackendConfig,
     tables: Mutex<Option<Arc<SimTables>>>,
+    lane_tables: Mutex<HashMap<LaneKey, Arc<SimTables>>>,
 }
 
 impl SimBackendFactory {
     /// Wrap a config (validated lazily at `catalog`/`create` time).
     pub fn new(cfg: SimBackendConfig) -> Self {
-        SimBackendFactory { cfg, tables: Mutex::new(None) }
+        SimBackendFactory {
+            cfg,
+            tables: Mutex::new(None),
+            lane_tables: Mutex::new(HashMap::new()),
+        }
     }
 
     fn tables(&self) -> Result<Arc<SimTables>> {
@@ -127,6 +140,42 @@ impl SimBackendFactory {
         }
         let t = Arc::new(SimTables::build(&self.cfg)?);
         *guard = Some(Arc::clone(&t));
+        Ok(t)
+    }
+
+    fn lane_tables(&self, assignment: &LaneAssignment) -> Result<Arc<SimTables>> {
+        let kinds: Vec<String> = if assignment.kinds.is_empty() {
+            self.cfg.kinds.clone()
+        } else {
+            self.cfg
+                .kinds
+                .iter()
+                .filter(|k| assignment.kinds.contains(*k))
+                .cloned()
+                .collect()
+        };
+        if kinds.is_empty() {
+            bail!(
+                "sim backend: lane {} hosts none of the configured kinds",
+                assignment.lane_id
+            );
+        }
+        let framework = assignment.framework.clone().or_else(|| self.cfg.framework.clone());
+        let key: LaneKey = (assignment.allocation, kinds.clone(), framework.clone());
+        if let Some(t) = self.lane_tables.lock().unwrap().get(&key) {
+            return Ok(Arc::clone(t));
+        }
+        let sub = SimBackendConfig {
+            platform: self
+                .cfg
+                .platform
+                .restrict(assignment.allocation.first_core, assignment.allocation.cores),
+            kinds,
+            buckets: self.cfg.buckets.clone(),
+            framework,
+        };
+        let t = Arc::new(SimTables::build(&sub)?);
+        self.lane_tables.lock().unwrap().insert(key, Arc::clone(&t));
         Ok(t)
     }
 }
@@ -150,6 +199,10 @@ impl BackendFactory for SimBackendFactory {
 
     fn create(&self) -> Result<Box<dyn Backend>> {
         Ok(Box::new(SimBackend { tables: self.tables()? }))
+    }
+
+    fn create_on(&self, assignment: &LaneAssignment) -> Result<Box<dyn Backend>> {
+        Ok(Box::new(SimBackend { tables: self.lane_tables(assignment)? }))
     }
 }
 
@@ -311,6 +364,55 @@ mod tests {
         assert_eq!(c.get("transformer").unwrap().item.rows_per_item, 32);
         assert_eq!(c.get("wide_deep").unwrap().item.rows_per_item, 1);
         assert_eq!(c.get("wide_deep").unwrap().buckets, vec![1, 2, 4, 8]);
+    }
+
+    fn assignment(first_core: usize, cores: usize, kinds: &[&str]) -> LaneAssignment {
+        LaneAssignment {
+            lane_id: 0,
+            allocation: CoreAllocation::new(first_core, cores),
+            kinds: kinds.iter().map(|s| s.to_string()).collect(),
+            framework: None,
+        }
+    }
+
+    #[test]
+    fn lane_allocation_slows_simulated_latency() {
+        // a lane pinned to 4 of the 24 cores must see higher batch
+        // latency than a lane owning the whole box — the double-counting
+        // fix the core-aware scheduler exists for
+        let f = SimBackendFactory::new(SimBackendConfig::new(CpuPlatform::large(), &["resnet50"]));
+        let whole = f.create().unwrap();
+        let slice = f.create_on(&assignment(0, 4, &["resnet50"])).unwrap();
+        let x = gen_input(1, &[4, 64], 1.0);
+        let t_whole = whole.execute("resnet50", 4, x.clone()).unwrap().model_time_s;
+        let t_slice = slice.execute("resnet50", 4, x).unwrap().model_time_s;
+        assert!(t_slice > t_whole, "slice={t_slice} whole={t_whole}");
+    }
+
+    #[test]
+    fn lane_tables_cached_per_assignment() {
+        let f = SimBackendFactory::new(SimBackendConfig::new(
+            CpuPlatform::large(),
+            &["wide_deep", "resnet50"],
+        ));
+        let a = assignment(0, 8, &["wide_deep"]);
+        let b1 = f.create_on(&a).unwrap();
+        let b2 = f.create_on(&a).unwrap();
+        let x = gen_input(2, &[2, 64], 1.0);
+        assert_eq!(
+            b1.execute("wide_deep", 2, x.clone()).unwrap().model_time_s,
+            b2.execute("wide_deep", 2, x.clone()).unwrap().model_time_s,
+        );
+        // the lane only hosts its assigned kinds
+        assert!(b1.execute("resnet50", 2, x).is_err());
+    }
+
+    #[test]
+    fn lane_hosting_no_configured_kind_rejected() {
+        let f = SimBackendFactory::new(SimBackendConfig::new(CpuPlatform::large(), &["wide_deep"]));
+        assert!(f.create_on(&assignment(0, 4, &["resnet50"])).is_err());
+        // empty kinds list means "host everything configured"
+        assert!(f.create_on(&assignment(0, 4, &[])).is_ok());
     }
 
     #[test]

@@ -1,0 +1,292 @@
+//! Core-aware lane planning for the serving coordinator.
+//!
+//! A [`LanePlan`] splits the machine's physical cores into non-overlapping
+//! [`CoreAllocation`]s — one **lane group** per served model kind — and
+//! gives every group a [`FrameworkConfig`] chosen by the paper's §8
+//! guideline *on the group's own slice* (the prior the online re-tuner
+//! starts from). Worker lanes within a group split the group's slice
+//! further, so no two lanes ever share a physical core: co-located lanes
+//! stop double-counting hardware, and "how fast is my model" becomes a
+//! question about the lane's slice, not the whole box.
+//!
+//! [`pick_lane`] is the load-aware dispatch rule the coordinator's
+//! batching loop uses in place of round-robin: least queued items among
+//! the lanes hosting a batch's kind, ties to the lowest lane index.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{CpuPlatform, FrameworkConfig};
+use crate::models;
+use crate::tuner::guidelines;
+
+use super::partition::{split_cores, CoreAllocation};
+
+/// Everything a worker lane needs to know about *where* it runs: its
+/// physical-core slice, the model kinds it hosts, and the framework knobs
+/// tuned for that slice. This is the core-allocation input of the
+/// backend contract (`runtime::BackendFactory::create_on`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LaneAssignment {
+    /// Lane index within the plan (names the worker thread).
+    pub lane_id: usize,
+    /// Physical cores this lane may use.
+    pub allocation: CoreAllocation,
+    /// Model kinds hosted (empty ⇒ every catalog kind).
+    pub kinds: Vec<String>,
+    /// Framework knobs for this lane; `None` lets the backend pick.
+    pub framework: Option<FrameworkConfig>,
+}
+
+/// One group of identical lanes serving one set of model kinds on a
+/// dedicated core slice.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LaneGroup {
+    /// Model kinds this group hosts (usually one).
+    pub kinds: Vec<String>,
+    /// The group's slice of the machine.
+    pub allocation: CoreAllocation,
+    /// Worker lanes splitting the slice (≥ 1).
+    pub lanes: usize,
+    /// Framework knobs for every lane in the group.
+    pub framework: FrameworkConfig,
+}
+
+/// A full serving plan: how the machine is divided between lane groups.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LanePlan {
+    /// The machine being divided.
+    pub platform: CpuPlatform,
+    /// The lane groups, in core order.
+    pub groups: Vec<LaneGroup>,
+}
+
+impl LanePlan {
+    /// The §8-prior plan: one group per kind, equal core shares, each
+    /// group's knobs from the guideline on its own slice.
+    pub fn guideline(platform: &CpuPlatform, kinds: &[&str]) -> Result<Self> {
+        let mix: Vec<(String, f64)> = kinds.iter().map(|k| (k.to_string(), 1.0)).collect();
+        Self::for_mix(platform, &mix)
+    }
+
+    /// Plan for a traffic mix: core shares proportional to each kind's
+    /// weight (zero-weight kinds keep one core so a drained model stays
+    /// servable), framework knobs from the §8 guideline on each slice.
+    pub fn for_mix(platform: &CpuPlatform, mix: &[(String, f64)]) -> Result<Self> {
+        if mix.is_empty() {
+            bail!("lane plan: no model kinds");
+        }
+        let weights: Vec<f64> = mix.iter().map(|(_, w)| *w).collect();
+        let allocs = split_cores(platform, &weights)?;
+        let mut groups = Vec::with_capacity(mix.len());
+        for ((kind, _), alloc) in mix.iter().zip(allocs) {
+            let slice = platform.restrict(alloc.first_core, alloc.cores);
+            let graph = models::build(kind, models::canonical_batch(kind))
+                .ok_or_else(|| anyhow!("lane plan: unknown model '{kind}'"))?;
+            let framework = guidelines::tune(&graph, &slice).config;
+            groups.push(LaneGroup {
+                kinds: vec![kind.clone()],
+                allocation: alloc,
+                lanes: 1,
+                framework,
+            });
+        }
+        let plan = LanePlan { platform: platform.clone(), groups };
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Per-lane assignments: each group's slice split contiguously among
+    /// its lanes (never more lanes than cores).
+    pub fn lane_assignments(&self) -> Vec<LaneAssignment> {
+        let mut out = Vec::new();
+        let mut lane_id = 0;
+        for grp in &self.groups {
+            let lanes = grp.lanes.clamp(1, grp.allocation.cores.max(1));
+            let per = grp.allocation.cores / lanes;
+            let extra = grp.allocation.cores % lanes;
+            let mut first = grp.allocation.first_core;
+            for l in 0..lanes {
+                let cores = per + usize::from(l < extra);
+                out.push(LaneAssignment {
+                    lane_id,
+                    allocation: CoreAllocation::new(first, cores),
+                    kinds: grp.kinds.clone(),
+                    framework: Some(grp.framework.clone()),
+                });
+                first += cores;
+                lane_id += 1;
+            }
+        }
+        out
+    }
+
+    /// All kinds the plan hosts, sorted and deduplicated.
+    pub fn kinds(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self
+            .groups
+            .iter()
+            .flat_map(|g| g.kinds.iter().map(String::as_str))
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// True when some group hosts `kind`.
+    pub fn hosts(&self, kind: &str) -> bool {
+        self.groups.iter().any(|g| g.kinds.iter().any(|k| k == kind))
+    }
+
+    /// The group hosting `kind`, if any.
+    pub fn group_for(&self, kind: &str) -> Option<&LaneGroup> {
+        self.groups.iter().find(|g| g.kinds.iter().any(|k| k == kind))
+    }
+
+    /// Check the invariants the coordinator relies on: at least one
+    /// group, every group hosting ≥ 1 kind on ≥ 1 core, and lane
+    /// allocations pairwise disjoint and inside the machine.
+    pub fn validate(&self) -> Result<()> {
+        if self.groups.is_empty() {
+            bail!("lane plan: no groups");
+        }
+        let phys = self.platform.physical_cores();
+        let lanes = self.lane_assignments();
+        for a in &lanes {
+            if a.allocation.cores == 0 {
+                bail!("lane {}: empty core allocation", a.lane_id);
+            }
+            if a.allocation.end() > phys {
+                bail!(
+                    "lane {}: cores {}..={} exceed the machine's {} physical cores",
+                    a.lane_id,
+                    a.allocation.first_core,
+                    a.allocation.last_core(),
+                    phys
+                );
+            }
+            if a.kinds.is_empty() {
+                bail!("lane {}: hosts no model kind", a.lane_id);
+            }
+        }
+        for (i, a) in lanes.iter().enumerate() {
+            for b in &lanes[i + 1..] {
+                if a.allocation.overlaps(&b.allocation) {
+                    bail!(
+                        "lanes {} and {} overlap on physical cores",
+                        a.lane_id,
+                        b.lane_id
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Least-loaded dispatch: the index with the smallest load among lanes
+/// for which `hosts` is true, ties to the lowest index (so dispatch is
+/// deterministic). `None` when no lane hosts the kind.
+pub fn pick_lane(loads: &[usize], hosts: impl Fn(usize) -> bool) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, &load) in loads.iter().enumerate() {
+        if !hosts(i) {
+            continue;
+        }
+        best = match best {
+            Some(b) if loads[b] <= load => Some(b),
+            _ => Some(i),
+        };
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn guideline_plan_covers_machine_without_overlap() {
+        let p = CpuPlatform::large2();
+        let plan = LanePlan::guideline(&p, &["wide_deep", "resnet50"]).unwrap();
+        assert_eq!(plan.groups.len(), 2);
+        plan.validate().unwrap();
+        let total: usize = plan.groups.iter().map(|g| g.allocation.cores).sum();
+        assert_eq!(total, 48);
+        assert_eq!(plan.groups[0].allocation.cores, 24);
+        assert!(plan.hosts("wide_deep") && plan.hosts("resnet50"));
+        assert!(!plan.hosts("ncf"));
+        assert_eq!(plan.kinds(), vec!["resnet50", "wide_deep"]);
+    }
+
+    #[test]
+    fn group_framework_tuned_for_slice_not_machine() {
+        // wide_deep on its 24-core half: §8 says 3 pools × 8 threads —
+        // not the 16 threads the whole-machine guideline would give
+        let p = CpuPlatform::large2();
+        let plan = LanePlan::guideline(&p, &["wide_deep", "resnet50"]).unwrap();
+        let wd = plan.group_for("wide_deep").unwrap();
+        assert_eq!(wd.framework.inter_op_pools, 3);
+        assert_eq!(wd.framework.mkl_threads, 8);
+        // resnet50 (chain): one pool over its whole slice
+        let rn = plan.group_for("resnet50").unwrap();
+        assert_eq!(rn.framework.inter_op_pools, 1);
+        assert_eq!(rn.framework.mkl_threads, 24);
+    }
+
+    #[test]
+    fn for_mix_shifts_cores_to_the_hot_kind() {
+        let p = CpuPlatform::large2();
+        let mix = vec![("wide_deep".to_string(), 0.1), ("resnet50".to_string(), 0.9)];
+        let plan = LanePlan::for_mix(&p, &mix).unwrap();
+        let wd = plan.group_for("wide_deep").unwrap();
+        let rn = plan.group_for("resnet50").unwrap();
+        assert!(rn.allocation.cores > 3 * wd.allocation.cores);
+        assert!(wd.allocation.cores >= 1);
+    }
+
+    #[test]
+    fn multi_lane_group_splits_slice() {
+        let p = CpuPlatform::large();
+        let mut plan = LanePlan::guideline(&p, &["wide_deep"]).unwrap();
+        plan.groups[0].lanes = 3;
+        plan.validate().unwrap();
+        let lanes = plan.lane_assignments();
+        assert_eq!(lanes.len(), 3);
+        assert_eq!(lanes.iter().map(|a| a.allocation.cores).sum::<usize>(), 24);
+        assert_eq!(lanes[0].allocation.first_core, 0);
+        assert_eq!(lanes[1].allocation.first_core, lanes[0].allocation.end());
+        assert!(lanes.iter().all(|a| a.kinds == vec!["wide_deep".to_string()]));
+        // distinct lane ids
+        assert_eq!(lanes[0].lane_id, 0);
+        assert_eq!(lanes[2].lane_id, 2);
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let p = CpuPlatform::large();
+        assert!(LanePlan::guideline(&p, &["bert"]).is_err());
+        assert!(LanePlan::guideline(&p, &[]).is_err());
+    }
+
+    #[test]
+    fn validate_catches_overlap_and_overflow() {
+        let p = CpuPlatform::large();
+        let mut plan = LanePlan::guideline(&p, &["wide_deep", "resnet50"]).unwrap();
+        plan.groups[1].allocation = plan.groups[0].allocation;
+        assert!(plan.validate().is_err());
+        let mut plan = LanePlan::guideline(&p, &["wide_deep"]).unwrap();
+        plan.groups[0].allocation = CoreAllocation::new(20, 10);
+        assert!(plan.validate().is_err());
+    }
+
+    #[test]
+    fn pick_lane_least_loaded_deterministic() {
+        assert_eq!(pick_lane(&[3, 1, 2], |_| true), Some(1));
+        // ties break to the lowest index
+        assert_eq!(pick_lane(&[2, 2, 2], |_| true), Some(0));
+        // host restriction wins over load
+        assert_eq!(pick_lane(&[5, 0, 0], |i| i == 0), Some(0));
+        assert_eq!(pick_lane(&[1, 1], |_| false), None);
+        assert_eq!(pick_lane(&[], |_| true), None);
+    }
+}

@@ -1,10 +1,14 @@
 //! Operator-scheduling building blocks shared by the simulator's engine
 //! and the serving coordinator: pool partitioning (how physical cores are
-//! split into inter-op pools, paper Fig. 3c) and the topological ready
-//! queue that implements asynchronous scheduling.
+//! split into inter-op pools, paper Fig. 3c), core-aware lane planning
+//! (how the machine is divided between serving lane groups, with §8
+//! knobs per slice), and the topological ready queue that implements
+//! asynchronous scheduling.
 
+pub mod lanes;
 pub mod partition;
 pub mod ready;
 
-pub use partition::{partition_pools, PoolAssignment};
+pub use lanes::{pick_lane, LaneAssignment, LaneGroup, LanePlan};
+pub use partition::{partition_pools, split_cores, CoreAllocation, PoolAssignment};
 pub use ready::ReadyQueue;

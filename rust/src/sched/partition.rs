@@ -1,10 +1,100 @@
-//! Splitting the machine into inter-op pools (paper Fig. 3c).
+//! Splitting the machine into inter-op pools (paper Fig. 3c) and into
+//! per-lane core slices for the serving coordinator.
 //!
 //! Pools receive contiguous, equal ranges of physical cores. In
 //! model-parallel mode pools are aligned to sockets where possible
 //! (paper §7.2: "two inter-op pools, one per CPU socket").
+//! [`split_cores`] does the serving-side equivalent one level up:
+//! dividing the machine between lane groups proportionally to traffic
+//! weights, with no slice ever overlapping another.
+
+use anyhow::{bail, Result};
 
 use crate::config::{CpuPlatform, FrameworkConfig, ParallelismMode};
+
+/// A contiguous slice of physical cores granted to one worker lane (or
+/// one lane group). Slices never overlap within a valid lane plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CoreAllocation {
+    /// First physical core of the slice.
+    pub first_core: usize,
+    /// Number of physical cores in the slice.
+    pub cores: usize,
+}
+
+impl CoreAllocation {
+    /// Slice starting at `first_core` spanning `cores` cores.
+    pub fn new(first_core: usize, cores: usize) -> Self {
+        CoreAllocation { first_core, cores }
+    }
+
+    /// Last physical core of the slice (inclusive).
+    pub fn last_core(&self) -> usize {
+        self.first_core + self.cores.max(1) - 1
+    }
+
+    /// One past the last core (exclusive end).
+    pub fn end(&self) -> usize {
+        self.first_core + self.cores
+    }
+
+    /// True when the two slices share any physical core.
+    pub fn overlaps(&self, other: &CoreAllocation) -> bool {
+        self.first_core < other.end() && other.first_core < self.end()
+    }
+
+    /// True when `core` belongs to this slice.
+    pub fn contains(&self, core: usize) -> bool {
+        (self.first_core..self.end()).contains(&core)
+    }
+}
+
+/// Split the machine's physical cores into contiguous, non-overlapping
+/// slices proportional to `weights` (largest-remainder rounding, every
+/// slice ≥ 1 core so a drained model keeps a lane alive). Deterministic:
+/// remainder ties break to the lowest index. Errors when there are more
+/// weights than physical cores, or no weights at all.
+pub fn split_cores(platform: &CpuPlatform, weights: &[f64]) -> Result<Vec<CoreAllocation>> {
+    let n = weights.len();
+    let phys = platform.physical_cores();
+    if n == 0 {
+        bail!("split_cores: no weights");
+    }
+    if n > phys {
+        bail!("split_cores: {n} groups need at least {n} cores, machine has {phys}");
+    }
+    let total: f64 = weights.iter().map(|w| w.max(0.0)).sum();
+    let norm: Vec<f64> = if total > 0.0 {
+        weights.iter().map(|w| w.max(0.0) / total).collect()
+    } else {
+        vec![1.0 / n as f64; n]
+    };
+    // every group starts at 1 core; the rest go out by largest remainder
+    let spare = phys - n;
+    let ideal: Vec<f64> = norm.iter().map(|f| f * spare as f64).collect();
+    let mut counts: Vec<usize> = ideal.iter().map(|x| x.floor() as usize).collect();
+    let mut used: usize = counts.iter().sum();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        let ra = ideal[a] - ideal[a].floor();
+        let rb = ideal[b] - ideal[b].floor();
+        rb.partial_cmp(&ra).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    let mut i = 0;
+    while used < spare {
+        counts[order[i % n]] += 1;
+        used += 1;
+        i += 1;
+    }
+    let mut out = Vec::with_capacity(n);
+    let mut first = 0;
+    for c in counts {
+        let cores = c + 1;
+        out.push(CoreAllocation { first_core: first, cores });
+        first += cores;
+    }
+    Ok(out)
+}
 
 /// One pool's slice of the machine.
 #[derive(Debug, Clone, PartialEq)]
@@ -93,5 +183,55 @@ mod tests {
         let p = CpuPlatform::small();
         let cfg = FrameworkConfig { inter_op_pools: 100, ..FrameworkConfig::tuned_default() };
         assert_eq!(partition_pools(&p, &cfg).len(), 4);
+    }
+
+    #[test]
+    fn allocation_overlap_and_bounds() {
+        let a = CoreAllocation::new(0, 8);
+        let b = CoreAllocation::new(8, 4);
+        let c = CoreAllocation::new(6, 4);
+        assert!(!a.overlaps(&b));
+        assert!(!b.overlaps(&a));
+        assert!(a.overlaps(&c) && c.overlaps(&a) && b.overlaps(&c));
+        assert_eq!(a.last_core(), 7);
+        assert_eq!(a.end(), 8);
+        assert!(a.contains(0) && a.contains(7) && !a.contains(8));
+    }
+
+    #[test]
+    fn split_cores_proportional_and_exhaustive() {
+        let p = CpuPlatform::large(); // 24 cores
+        let allocs = split_cores(&p, &[3.0, 1.0]).unwrap();
+        assert_eq!(allocs.len(), 2);
+        let total: usize = allocs.iter().map(|a| a.cores).sum();
+        assert_eq!(total, 24);
+        assert_eq!(allocs[0].first_core, 0);
+        assert_eq!(allocs[1].first_core, allocs[0].cores);
+        assert!(allocs[0].cores > allocs[1].cores);
+        assert!(!allocs[0].overlaps(&allocs[1]));
+    }
+
+    #[test]
+    fn split_cores_zero_weight_keeps_a_core() {
+        let p = CpuPlatform::large();
+        let allocs = split_cores(&p, &[1.0, 0.0]).unwrap();
+        assert_eq!(allocs[1].cores, 1, "drained group keeps one core");
+        assert_eq!(allocs[0].cores, 23);
+    }
+
+    #[test]
+    fn split_cores_all_zero_falls_back_to_equal() {
+        let p = CpuPlatform::large();
+        let allocs = split_cores(&p, &[0.0, 0.0, 0.0]).unwrap();
+        assert_eq!(allocs.iter().map(|a| a.cores).sum::<usize>(), 24);
+        assert!(allocs.iter().all(|a| a.cores == 8));
+    }
+
+    #[test]
+    fn split_cores_rejects_impossible() {
+        let p = CpuPlatform::small(); // 4 cores
+        assert!(split_cores(&p, &[]).is_err());
+        assert!(split_cores(&p, &[1.0; 5]).is_err());
+        assert_eq!(split_cores(&p, &[1.0; 4]).unwrap().len(), 4);
     }
 }

@@ -1,4 +1,5 @@
-//! Framework-parameter tuning — the paper's §8 contribution.
+//! Framework-parameter tuning — the paper's §8 contribution, plus the
+//! serving-time closed loop built on it.
 //!
 //! * [`guidelines`] — the width-based rule: `pools = average graph width`,
 //!   `mkl_threads = intra_op_threads = physical_cores / pools`.
@@ -6,11 +7,15 @@
 //!   TensorFlow out-of-the-box settings the paper compares against.
 //! * [`exhaustive`] — the global-optimum search over the design cube
 //!   (96³ points on `large.2`; pruned to the feasible lattice).
+//! * [`online`] — the windowed re-tuner: §8 as the prior, sim-scored
+//!   candidate core splits, applied live by the coordinator.
 
 pub mod baselines;
 pub mod exhaustive;
 pub mod guidelines;
+pub mod online;
 
 pub use baselines::{baseline_config, Baseline};
 pub use exhaustive::{exhaustive_search, SearchResult};
 pub use guidelines::tune;
+pub use online::{OnlineTuner, OnlineTunerConfig};

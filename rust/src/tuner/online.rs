@@ -1,0 +1,310 @@
+//! Online re-tuning: the closed-loop controller that adapts the serving
+//! stack to shifting traffic — dynamic runtime concurrency control (Liu
+//! et al., 2018) applied on top of the paper's §8 guideline.
+//!
+//! Each serving window the coordinator's metrics are folded in through
+//! [`OnlineTuner::observe`] (EWMA-smoothed per-kind arrival rates);
+//! [`OnlineTuner::propose`] then builds candidate [`LanePlan`]s — the
+//! rate-proportional split with §8 knobs per slice as the prior, plus
+//! neighbors that shift a few cores between the hottest and coldest
+//! groups — scores every candidate with `sim::simulate` **under each
+//! group's allocated cores**, and returns a new plan only when the
+//! predicted win clears a hysteresis threshold (so the coordinator is
+//! not thrashed by noise). The coordinator applies accepted plans with
+//! `Coordinator::apply_plan`, which respawns lanes without dropping
+//! in-flight requests.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::config::CpuPlatform;
+use crate::metrics::WindowSnapshot;
+use crate::models;
+use crate::sched::{LaneGroup, LanePlan};
+use crate::sim;
+
+/// Controller knobs.
+#[derive(Debug, Clone)]
+pub struct OnlineTunerConfig {
+    /// EWMA weight on the newest window's arrival rate (1.0 = no memory).
+    pub smoothing: f64,
+    /// Ignore windows with fewer total arrivals than this (noise guard).
+    pub min_window_arrivals: u64,
+    /// Batch bucket candidate plans are scored at.
+    pub score_bucket: usize,
+    /// Predicted improvement required before a re-plan ships
+    /// (0.05 ⇒ candidate must score ≥ 5% below the current plan).
+    pub hysteresis: f64,
+    /// Cores moved between groups when generating neighbor candidates.
+    pub core_step: usize,
+}
+
+impl Default for OnlineTunerConfig {
+    fn default() -> Self {
+        OnlineTunerConfig {
+            smoothing: 0.5,
+            min_window_arrivals: 8,
+            score_bucket: 8,
+            hysteresis: 0.05,
+            core_step: 2,
+        }
+    }
+}
+
+/// The closed-loop re-tuner: smoothed traffic state + candidate search.
+#[derive(Debug)]
+pub struct OnlineTuner {
+    platform: CpuPlatform,
+    kinds: Vec<String>,
+    cfg: OnlineTunerConfig,
+    rates: HashMap<String, f64>,
+}
+
+impl OnlineTuner {
+    /// Controller for `kinds` on `platform` with default knobs.
+    pub fn new(platform: CpuPlatform, kinds: &[&str]) -> Self {
+        Self::with_config(platform, kinds, OnlineTunerConfig::default())
+    }
+
+    /// Controller with explicit knobs.
+    pub fn with_config(platform: CpuPlatform, kinds: &[&str], cfg: OnlineTunerConfig) -> Self {
+        OnlineTuner {
+            platform,
+            kinds: kinds.iter().map(|s| s.to_string()).collect(),
+            cfg,
+            rates: HashMap::new(),
+        }
+    }
+
+    /// Smoothed traffic share per kind (sums to 1; equal shares before
+    /// any traffic is observed).
+    pub fn mix(&self) -> Vec<(String, f64)> {
+        let total: f64 =
+            self.kinds.iter().map(|k| self.rates.get(k).copied().unwrap_or(0.0)).sum();
+        self.kinds
+            .iter()
+            .map(|k| {
+                let r = self.rates.get(k).copied().unwrap_or(0.0);
+                let share = if total > 0.0 { r / total } else { 1.0 / self.kinds.len() as f64 };
+                (k.clone(), share)
+            })
+            .collect()
+    }
+
+    /// Fold one serving window into the smoothed arrival rates. Windows
+    /// below the noise guard (or with no elapsed time) are ignored.
+    pub fn observe(&mut self, window: &WindowSnapshot) {
+        if window.total_arrivals() < self.cfg.min_window_arrivals || window.elapsed_s <= 0.0 {
+            return;
+        }
+        let a = self.cfg.smoothing.clamp(0.0, 1.0);
+        for kind in &self.kinds {
+            let rate = window.get(kind).map(|k| k.arrival_rate(window.elapsed_s)).unwrap_or(0.0);
+            match self.rates.get_mut(kind) {
+                Some(e) => *e = a * rate + (1.0 - a) * *e,
+                None => {
+                    self.rates.insert(kind.clone(), rate);
+                }
+            }
+        }
+    }
+
+    /// Predicted per-item serving cost of a plan under the current mix:
+    /// Σ_kind share × simulated batch latency on the *group's* core
+    /// slice / bucket. Infinite when the plan fails to host a kind that
+    /// has traffic.
+    pub fn score(&self, plan: &LanePlan) -> f64 {
+        let bucket = self.cfg.score_bucket.max(1);
+        let mut total = 0.0;
+        for (kind, share) in self.mix() {
+            if share <= 0.0 {
+                continue;
+            }
+            let Some(group) = plan.group_for(&kind) else {
+                return f64::INFINITY;
+            };
+            let Some(graph) = models::build(&kind, bucket) else {
+                return f64::INFINITY;
+            };
+            let slice = plan
+                .platform
+                .restrict(group.allocation.first_core, group.allocation.cores);
+            let latency = sim::simulate(&graph, &slice, &group.framework).latency_s;
+            total += share * latency / bucket as f64;
+        }
+        total
+    }
+
+    /// Propose a better plan for the observed mix, or `None` when the
+    /// current plan is within the hysteresis band of the best candidate.
+    pub fn propose(&self, current: &LanePlan) -> Result<Option<LanePlan>> {
+        let proportional = LanePlan::for_mix(&self.platform, &self.mix())?;
+        let mut candidates = self.neighbors(&proportional);
+        candidates.push(proportional);
+        let current_score = self.score(current);
+        let mut best: Option<(f64, LanePlan)> = None;
+        for c in candidates {
+            if c.validate().is_err() {
+                continue;
+            }
+            let s = self.score(&c);
+            if best.as_ref().map_or(true, |(bs, _)| s < *bs) {
+                best = Some((s, c));
+            }
+        }
+        Ok(match best {
+            Some((s, plan)) if s < current_score * (1.0 - self.cfg.hysteresis) => Some(plan),
+            _ => None,
+        })
+    }
+
+    /// Candidate plans one `core_step` away from `base`: shift cores
+    /// between the hottest and coldest groups (both directions), with
+    /// every group's knobs re-derived from the §8 guideline on its new
+    /// slice.
+    fn neighbors(&self, base: &LanePlan) -> Vec<LanePlan> {
+        if base.groups.len() < 2 {
+            return Vec::new();
+        }
+        let mix = self.mix();
+        let share = |g: &LaneGroup| -> f64 {
+            g.kinds
+                .iter()
+                .map(|k| mix.iter().find(|(mk, _)| mk == k).map(|(_, s)| *s).unwrap_or(0.0))
+                .sum()
+        };
+        let mut hot = 0usize;
+        let mut cold = 0usize;
+        for (i, g) in base.groups.iter().enumerate() {
+            if share(g) > share(&base.groups[hot]) {
+                hot = i;
+            }
+            if share(g) < share(&base.groups[cold]) {
+                cold = i;
+            }
+        }
+        if hot == cold {
+            return Vec::new();
+        }
+        let step = self.cfg.core_step.max(1);
+        let mut out = Vec::new();
+        for (from, to) in [(cold, hot), (hot, cold)] {
+            if base.groups[from].allocation.cores <= step {
+                continue;
+            }
+            let mut cores: Vec<f64> =
+                base.groups.iter().map(|g| g.allocation.cores as f64).collect();
+            cores[from] -= step as f64;
+            cores[to] += step as f64;
+            let mix: Vec<(String, f64)> = base
+                .groups
+                .iter()
+                .zip(&cores)
+                .map(|(g, c)| (g.kinds[0].clone(), *c))
+                .collect();
+            if let Ok(p) = LanePlan::for_mix(&self.platform, &mix) {
+                out.push(p);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::KindWindow;
+
+    const A: &str = "wide_deep";
+    const B: &str = "resnet50";
+
+    fn window(a_arrivals: u64, b_arrivals: u64) -> WindowSnapshot {
+        WindowSnapshot {
+            elapsed_s: 1.0,
+            kinds: vec![
+                KindWindow {
+                    kind: A.into(),
+                    arrivals: a_arrivals,
+                    completed: a_arrivals,
+                    batches: a_arrivals / 4,
+                    batch_items: a_arrivals,
+                },
+                KindWindow {
+                    kind: B.into(),
+                    arrivals: b_arrivals,
+                    completed: b_arrivals,
+                    batches: b_arrivals / 4,
+                    batch_items: b_arrivals,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn mix_defaults_to_equal_then_follows_traffic() {
+        let mut t = OnlineTuner::new(CpuPlatform::large2(), &[A, B]);
+        let m0 = t.mix();
+        assert!((m0[0].1 - 0.5).abs() < 1e-9);
+        t.observe(&window(90, 10));
+        let m1 = t.mix();
+        assert!((m1[0].1 - 0.9).abs() < 1e-6, "share={}", m1[0].1);
+        // EWMA pulls toward the new window, not all the way
+        t.observe(&window(10, 90));
+        let m2 = t.mix();
+        assert!(m2[0].1 < 0.9 && m2[0].1 > 0.1, "share={}", m2[0].1);
+    }
+
+    #[test]
+    fn noise_guard_ignores_tiny_windows() {
+        let mut t = OnlineTuner::new(CpuPlatform::large2(), &[A, B]);
+        t.observe(&window(3, 1)); // below min_window_arrivals = 8
+        assert!((t.mix()[0].1 - 0.5).abs() < 1e-9, "tiny window must not move the mix");
+    }
+
+    #[test]
+    fn propose_moves_cores_toward_hot_kind() {
+        let platform = CpuPlatform::large2();
+        let mut t = OnlineTuner::new(platform.clone(), &[A, B]);
+        let initial = LanePlan::guideline(&platform, &[A, B]).unwrap();
+        // heavy resnet50 traffic: the even split should lose to a
+        // resnet-heavy split
+        t.observe(&window(8, 72));
+        t.observe(&window(8, 72));
+        let next = t.propose(&initial).unwrap().expect("should re-plan under a strong shift");
+        let rn = next.group_for(B).unwrap();
+        let wd = next.group_for(A).unwrap();
+        assert!(
+            rn.allocation.cores > wd.allocation.cores,
+            "hot kind got {} cores vs {}",
+            rn.allocation.cores,
+            wd.allocation.cores
+        );
+        next.validate().unwrap();
+        // and the score agrees
+        assert!(t.score(&next) < t.score(&initial));
+    }
+
+    #[test]
+    fn proposals_converge_not_thrash() {
+        // once a proposal is adopted, re-proposing under the same traffic
+        // must be a no-op: the candidate set is a pure function of the
+        // mix, so the adopted plan is already the best candidate and
+        // cannot beat itself by the hysteresis margin
+        let platform = CpuPlatform::large2();
+        let mut t = OnlineTuner::new(platform.clone(), &[A, B]);
+        let initial = LanePlan::guideline(&platform, &[A, B]).unwrap();
+        t.observe(&window(8, 72));
+        let adopted = t.propose(&initial).unwrap().expect("strong shift re-plans");
+        assert!(t.propose(&adopted).unwrap().is_none(), "controller thrashed");
+    }
+
+    #[test]
+    fn unhosted_kind_scores_infinite() {
+        let platform = CpuPlatform::large2();
+        let mut t = OnlineTuner::new(platform.clone(), &[A, B]);
+        t.observe(&window(40, 40));
+        let only_a = LanePlan::guideline(&platform, &[A]).unwrap();
+        assert!(t.score(&only_a).is_infinite());
+    }
+}

@@ -1,0 +1,224 @@
+//! End-to-end tests for core-aware lane scheduling + online re-tuning:
+//! a shifting two-model mix on `large.2` where the adaptive plan must
+//! beat the startup-frozen §8 configuration, plus plan/property checks
+//! (allocations never overlap, re-plans never drop in-flight requests).
+//!
+//! Everything runs on `SimBackend` — per-batch latencies are simulated
+//! under each lane's *allocated* cores, so moving cores to the hot model
+//! shows up deterministically in `Response::execute_s`.
+
+use parframe::config::CpuPlatform;
+use parframe::coordinator::{loadgen, Coordinator, CoordinatorConfig, MixPhase, MixReport};
+use parframe::runtime::{gen_input, SimBackend, SimBackendConfig};
+use parframe::sched::LanePlan;
+use parframe::tuner::{OnlineTuner, OnlineTunerConfig};
+use parframe::util::prng::Prng;
+
+/// Light model that drains away.
+const COLD: &str = "wide_deep";
+/// Heavy model that ramps up.
+const HOT: &str = "resnet50";
+
+/// The shift: one cold-heavy phase, then the traffic inverts and stays
+/// inverted (the ramp's steady tail is what the plans are compared on).
+fn shift_phases() -> Vec<MixPhase> {
+    let mut phases = vec![MixPhase::new(&[(COLD, 0.9), (HOT, 0.1)], 48)];
+    for _ in 0..3 {
+        phases.push(MixPhase::new(&[(COLD, 0.1), (HOT, 0.9)], 64));
+    }
+    phases
+}
+
+fn start(platform: &CpuPlatform, plan: LanePlan) -> Coordinator {
+    let cfg = CoordinatorConfig::sim(platform.clone(), &[COLD, HOT]).with_plan(plan);
+    Coordinator::start(cfg).expect("start planned coordinator")
+}
+
+/// Drive the shift via `loadgen::run_shift` (the same code path the CLI
+/// and the serving example use); 8 closed-loop workers keep the hot
+/// kind's batches at the top bucket, where the re-tuned core split pays
+/// off fully. Returns per-phase reports.
+fn drive(coord: &Coordinator, tuner: Option<&mut OnlineTuner>) -> Vec<MixReport> {
+    let reports =
+        loadgen::run_shift(coord, &shift_phases(), 8, 0xACE, tuner).expect("shift runs");
+    for (i, r) in reports.iter().enumerate() {
+        assert_eq!(r.overall.errors, 0, "phase {i} had errors");
+    }
+    reports
+}
+
+#[test]
+fn adaptive_beats_frozen_under_load_shift() {
+    let platform = CpuPlatform::large2();
+    let initial = LanePlan::guideline(&platform, &[COLD, HOT]).unwrap();
+
+    // frozen: the startup §8 plan serves the whole shift
+    let frozen_coord = start(&platform, initial.clone());
+    let frozen = drive(&frozen_coord, None);
+
+    // adaptive: windows feed the online re-tuner between phases
+    let adaptive_coord = start(&platform, initial.clone());
+    let mut tuner = OnlineTuner::with_config(
+        platform.clone(),
+        &[COLD, HOT],
+        OnlineTunerConfig { smoothing: 0.7, ..OnlineTunerConfig::default() },
+    );
+    let adaptive = drive(&adaptive_coord, Some(&mut tuner));
+
+    // the re-tuner must have moved cores toward the hot model
+    let final_plan = adaptive_coord.current_plan().expect("planned");
+    let hot_cores = final_plan.group_for(HOT).unwrap().allocation.cores;
+    let initial_hot_cores = initial.group_for(HOT).unwrap().allocation.cores;
+    assert!(
+        hot_cores > initial_hot_cores,
+        "adaptive plan kept {hot_cores} cores for the hot model (started at {initial_hot_cores})"
+    );
+
+    // post-shift steady phase: the hot model must run ≥ 1.1x faster on
+    // the adaptive plan (simulated latency under the lane's cores), and
+    // its tail must not regress
+    let f = frozen[3].kind(HOT).expect("hot kind served");
+    let a = adaptive[3].kind(HOT).expect("hot kind served");
+    assert!(f.completed > 0 && a.completed > 0);
+    assert!(
+        a.model_mean_ms * 1.1 <= f.model_mean_ms,
+        "adaptive hot-kind mean {:.3}ms not ≥1.1x better than frozen {:.3}ms",
+        a.model_mean_ms,
+        f.model_mean_ms
+    );
+    assert!(
+        a.model_p99_ms <= f.model_p99_ms,
+        "adaptive p99 {:.3}ms worse than frozen {:.3}ms",
+        a.model_p99_ms,
+        f.model_p99_ms
+    );
+    // same request stream on both coordinators
+    assert_eq!(
+        frozen.iter().map(|r| r.overall.completed).sum::<usize>(),
+        adaptive.iter().map(|r| r.overall.completed).sum::<usize>(),
+    );
+}
+
+#[test]
+fn planned_lane_executes_under_allocated_cores() {
+    // a lane's Response::execute_s must equal the simulated latency on
+    // the lane's restricted platform — and differ from the whole-machine
+    // latency the pre-plan coordinator would have reported
+    let platform = CpuPlatform::large2();
+    let plan = LanePlan::guideline(&platform, &[COLD, HOT]).unwrap();
+    let group = plan.group_for(HOT).unwrap();
+    let slice =
+        platform.restrict(group.allocation.first_core, group.allocation.cores);
+    let mut expect_cfg = SimBackendConfig::new(slice, &[HOT]);
+    expect_cfg.framework = Some(group.framework.clone());
+    let expected = SimBackend::new(expect_cfg)
+        .unwrap()
+        .simulated_latency(HOT, 1)
+        .unwrap();
+
+    let coord = start(&platform, plan);
+    let resp = coord.infer(HOT, gen_input(3, &[1, 64], 1.0)).unwrap();
+    assert!(resp.is_ok());
+    assert_eq!(resp.execute_s, expected, "lane simulated on its slice");
+
+    let whole = SimBackend::new(SimBackendConfig::new(platform, &[HOT]))
+        .unwrap()
+        .simulated_latency(HOT, 1)
+        .unwrap();
+    assert_ne!(
+        resp.execute_s, whole,
+        "restricting the lane's cores must change its simulated latency"
+    );
+}
+
+#[test]
+fn apply_plan_keeps_in_flight_requests() {
+    let platform = CpuPlatform::large2();
+    let initial = LanePlan::guideline(&platform, &[COLD, HOT]).unwrap();
+    let coord = start(&platform, initial);
+
+    // queue work, flip the plan mid-flight, then collect every response
+    let mut rxs = Vec::new();
+    for t in 0..16 {
+        rxs.push(coord.submit(COLD, gen_input(t, &[1, 64], 1.0)).unwrap());
+        rxs.push(coord.submit(HOT, gen_input(t + 100, &[1, 64], 1.0)).unwrap());
+    }
+    let flipped = LanePlan::for_mix(
+        &platform,
+        &[(COLD.to_string(), 0.1), (HOT.to_string(), 0.9)],
+    )
+    .unwrap();
+    coord.apply_plan(flipped.clone()).unwrap();
+    assert_eq!(coord.current_plan().unwrap(), flipped);
+
+    for rx in rxs {
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        assert!(resp.is_ok(), "{:?}", resp.output.err());
+    }
+    assert_eq!(coord.metrics().requests.get(), 32);
+
+    // the swapped-in lanes serve new traffic too
+    assert!(coord.infer(HOT, gen_input(7, &[1, 64], 1.0)).unwrap().is_ok());
+}
+
+#[test]
+fn apply_plan_rejects_uncovered_kinds() {
+    let platform = CpuPlatform::large2();
+    let initial = LanePlan::guideline(&platform, &[COLD, HOT]).unwrap();
+    let coord = start(&platform, initial.clone());
+    let partial = LanePlan::guideline(&platform, &[COLD]).unwrap();
+    assert!(coord.apply_plan(partial).is_err(), "plan must host every served kind");
+    // the old plan stays live
+    assert_eq!(coord.current_plan().unwrap(), initial);
+    assert!(coord.infer(HOT, gen_input(1, &[1, 64], 1.0)).unwrap().is_ok());
+}
+
+#[test]
+fn prop_lane_allocations_never_overlap_nor_exceed_machine() {
+    // the acceptance property: random mixes on every platform produce
+    // plans whose lane allocations are pairwise disjoint and in-bounds
+    let zoo = ["wide_deep", "resnet50", "ncf", "transformer", "inception_v3"];
+    let platforms =
+        [CpuPlatform::small(), CpuPlatform::large(), CpuPlatform::large2()];
+    let mut rng = Prng::new(0xA110C);
+    for case in 0..60 {
+        let platform = &platforms[case % platforms.len()];
+        let n = rng.range(1, zoo.len().min(platform.physical_cores()));
+        let mut mix: Vec<(String, f64)> =
+            zoo[..n].iter().map(|k| (k.to_string(), rng.f64())).collect();
+        if rng.f64() < 0.3 {
+            mix[0].1 = 0.0; // a drained model keeps its lane
+        }
+        let mut plan = LanePlan::for_mix(platform, &mix).unwrap_or_else(|e| {
+            panic!("case {case} on {}: {e:#}", platform.name)
+        });
+        // sometimes split a group into several lanes
+        if rng.f64() < 0.5 {
+            let g = rng.below(plan.groups.len());
+            plan.groups[g].lanes = rng.range(1, 4);
+        }
+        plan.validate().unwrap_or_else(|e| panic!("case {case}: {e:#}"));
+
+        let lanes = plan.lane_assignments();
+        let phys = platform.physical_cores();
+        let total: usize = lanes.iter().map(|a| a.allocation.cores).sum();
+        assert!(total <= phys, "case {case}: {total} cores allocated of {phys}");
+        for (i, a) in lanes.iter().enumerate() {
+            assert!(a.allocation.cores >= 1, "case {case}: empty lane");
+            assert!(
+                a.allocation.end() <= phys,
+                "case {case}: lane {} ends at {} of {phys}",
+                a.lane_id,
+                a.allocation.end()
+            );
+            for b in &lanes[i + 1..] {
+                assert!(
+                    !a.allocation.overlaps(&b.allocation),
+                    "case {case}: lanes {} and {} overlap",
+                    a.lane_id,
+                    b.lane_id
+                );
+            }
+        }
+    }
+}
