@@ -23,11 +23,15 @@ fn main() -> anyhow::Result<()> {
     let width = analyze_width(&graph);
     println!("wide_deep: {} ops, {} heavy, avg width {}", graph.len(), width.heavy_ops, width.avg_width);
 
-    // 2. tune (paper §8: pools = avg width, threads = cores / pools)
+    // 2. tune (paper §8: pools = avg width, threads = cores / pools;
+    //    wide graphs also get critical-path-first dispatch)
     let tuned = tuner::tune(&graph, &platform);
     println!(
-        "guideline setting: {} pools × ({} MKL + {} intra-op) threads",
-        tuned.config.inter_op_pools, tuned.config.mkl_threads, tuned.config.intra_op_threads
+        "guideline setting: {} pools × ({} MKL + {} intra-op) threads, {} dispatch",
+        tuned.config.inter_op_pools,
+        tuned.config.mkl_threads,
+        tuned.config.intra_op_threads,
+        tuned.config.sched_policy.name()
     );
 
     // 3. simulate vs the published recommendations

@@ -27,6 +27,9 @@ fn main() -> anyhow::Result<()> {
     let t2 = bench_tables::table(2).unwrap();
     println!("{t2}");
     fs::write(out_dir.join("table02.txt"), &t2)?;
+    let t3 = bench_tables::table(3).unwrap();
+    println!("{t3}");
+    fs::write(out_dir.join("table03.txt"), &t3)?;
 
     // bonus: interactive Chrome trace of the Fig. 8 best case
     let p = CpuPlatform::small();

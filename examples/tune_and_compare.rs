@@ -28,7 +28,7 @@ fn main() {
     let platform = CpuPlatform::large2();
     println!("fleet capacity planning on {} ({} cores)\n", platform.name, platform.physical_cores());
     println!(
-        "{:<14} {:>7} {:<22} {:>12} {:>12} {:>9}",
+        "{:<14} {:>7} {:<30} {:>12} {:>12} {:>9}",
         "model", "share", "tuned setting", "tuned ms", "TF-rec ms", "speedup"
     );
 
@@ -45,11 +45,14 @@ fn main() {
         )
         .latency_s;
         let setting = format!(
-            "{}p x {}mkl x {}intra",
-            tuned.config.inter_op_pools, tuned.config.mkl_threads, tuned.config.intra_op_threads
+            "{}p x {}mkl x {}intra [{}]",
+            tuned.config.inter_op_pools,
+            tuned.config.mkl_threads,
+            tuned.config.intra_op_threads,
+            tuned.config.sched_policy.name()
         );
         println!(
-            "{:<14} {:>6.0}% {:<22} {:>12.3} {:>12.3} {:>8.2}x",
+            "{:<14} {:>6.0}% {:<30} {:>12.3} {:>12.3} {:>8.2}x",
             name,
             share * 100.0,
             setting,

@@ -1,7 +1,7 @@
 //! Bench: DES engine throughput — how fast the simulator schedules and
 //! accounts operator graphs (the L3 hot path for every figure harness).
 
-use parframe::config::{CpuPlatform, FrameworkConfig, OperatorImpl};
+use parframe::config::{CpuPlatform, FrameworkConfig, OperatorImpl, SchedPolicy};
 use parframe::models;
 use parframe::sim::{self, SimOptions};
 use parframe::util::bench::Bench;
@@ -24,6 +24,16 @@ fn main() {
         let g = models::build(name, models::canonical_batch(name)).unwrap();
         b.run_with_output(&format!("simulate/{name}"), || {
             sim::simulate(&g, &p, &cfg(4, 12)).latency_s
+        });
+    }
+
+    // dispatch-policy overhead: rank precomputation + heap ordering on the
+    // widest zoo graph (policy choice must not make the engine itself slow)
+    let gt = models::build("transformer", 16).unwrap();
+    for policy in SchedPolicy::ALL {
+        let c = FrameworkConfig { sched_policy: policy, ..cfg(4, 12) };
+        b.run_with_output(&format!("simulate/transformer/{}", policy.name()), || {
+            sim::simulate(&gt, &p, &c).latency_s
         });
     }
 

@@ -39,10 +39,12 @@ pub fn figure(n: usize) -> Option<String> {
     })
 }
 
-/// Render one table by number.
+/// Render one table by number (2 is the paper's; 3 is the SCHED-POL
+/// dispatch-policy extension).
 pub fn table(n: usize) -> Option<String> {
     match n {
         2 => Some(evaluation::table2_average_widths()),
+        3 => Some(scheduling::table3_policy_comparison()),
         _ => None,
     }
 }

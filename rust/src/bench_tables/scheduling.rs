@@ -1,8 +1,10 @@
-//! Figures 1, 4, 6, 7, 8 — scheduling-mechanism experiments (paper §4).
+//! Figures 1, 4, 6, 7, 8 — scheduling-mechanism experiments (paper §4) —
+//! plus the SCHED-POL extension table comparing ready-op dispatch
+//! policies at the guideline setting.
 
 use std::fmt::Write as _;
 
-use crate::config::{CpuPlatform, OperatorImpl};
+use crate::config::{CpuPlatform, FrameworkConfig, OperatorImpl, SchedPolicy};
 use crate::graph::analyze_width;
 use crate::models;
 use crate::sim::{self, SimOptions};
@@ -154,6 +156,45 @@ pub fn fig7_case_breakdowns() -> String {
     out
 }
 
+/// SCHED-POL ("Table 3", an extension beyond the paper): each model's §8
+/// guideline setting re-simulated under every dispatch policy, speedups
+/// relative to topological order. Wide graphs are where the ready-op
+/// priority lever (Liu et al., arXiv 1810.08955) pays off; chains are the
+/// control group — dispatch order cannot matter there.
+pub fn table3_policy_comparison() -> String {
+    let p = CpuPlatform::large2();
+    let names = ["resnet50", "inception_v1", "inception_v3", "wide_deep", "ncf", "transformer"];
+    let mut out = String::from(
+        "Table 3 — dispatch-policy speedup over topo at the guideline setting (large.2)\n",
+    );
+    let _ = writeln!(
+        out,
+        "{:<14} {:>6} {:>11} {:>15} {:>12}",
+        "model", "pools", "topo", "critical-path", "costly"
+    );
+    for name in names {
+        let g = models::build(name, models::canonical_batch(name)).unwrap();
+        let mut c = tuner::tune(&g, &p).config;
+        let lat = |c: &FrameworkConfig| run(&g, &p, c).latency_s;
+        c.sched_policy = SchedPolicy::Topo;
+        let topo = lat(&c);
+        c.sched_policy = SchedPolicy::CriticalPathFirst;
+        let cp = lat(&c);
+        c.sched_policy = SchedPolicy::CostlyFirst;
+        let costly = lat(&c);
+        let _ = writeln!(
+            out,
+            "{:<14} {:>6} {:>9.3}ms {:>14.2}x {:>11.2}x",
+            name,
+            c.inter_op_pools,
+            topo * 1e3,
+            topo / cp,
+            topo / costly
+        );
+    }
+    out
+}
+
 /// Fig. 8: per-core execution traces of the multi-threaded cases.
 pub fn fig8_traces() -> String {
     let p = CpuPlatform::small();
@@ -227,5 +268,15 @@ mod tests {
         let s = fig8_traces();
         assert!(s.contains("2 pools x 2 threads"));
         assert!(s.contains("legend"));
+    }
+
+    #[test]
+    fn table3_lists_models_and_policies() {
+        let s = table3_policy_comparison();
+        assert!(s.contains("Table 3"));
+        assert!(s.contains("critical-path") && s.contains("costly"));
+        for model in ["resnet50", "transformer", "inception_v3"] {
+            assert!(s.contains(model), "missing {model}");
+        }
     }
 }

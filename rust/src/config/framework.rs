@@ -1,7 +1,10 @@
-//! Framework configuration — the five design features of the paper's Fig. 2.
+//! Framework configuration — the five design features of the paper's Fig. 2,
+//! plus the dispatch-order axis they imply.
 //!
 //! * scheduling mechanism → [`FrameworkConfig::inter_op_pools`] (1 = fully
 //!   synchronous, >1 = asynchronous over that many pools),
+//! * scheduling policy → [`SchedPolicy`] (which ready operator a free pool
+//!   picks up next — topological, critical-path-first, or costliest-first),
 //! * operator design → [`OperatorImpl`] (`MatMul1` serial data-prep vs
 //!   `MatMul2` intra-op-parallel data-prep),
 //! * math library back end → [`MathLib`],
@@ -9,6 +12,51 @@
 //! * beyond-one-socket mechanism → [`ParallelismMode`].
 
 use super::platform::CpuPlatform;
+
+/// How ready operators are prioritised for dispatch to free inter-op
+/// pools. Runtime concurrency-control work (Liu et al., arXiv 1810.08955)
+/// shows ready-op priority is itself a large performance lever on wide
+/// graphs, so it is a first-class tunable dimension here.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SchedPolicy {
+    /// Dispatch in topological id order (lowest node id first) — the
+    /// insertion-order behaviour frameworks default to.
+    Topo,
+    /// HEFT-style upward-rank priority: the ready op with the costliest
+    /// remaining downstream path dispatches first, keeping the critical
+    /// path flowing while off-path ops fill scheduling bubbles.
+    CriticalPathFirst,
+    /// Largest-op-first: greedy by the op's own cost, ignoring graph
+    /// structure (the classic LPT heuristic).
+    CostlyFirst,
+}
+
+impl SchedPolicy {
+    /// All supported policies.
+    pub const ALL: [SchedPolicy; 3] =
+        [SchedPolicy::Topo, SchedPolicy::CriticalPathFirst, SchedPolicy::CostlyFirst];
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "topo" | "topological" => Some(SchedPolicy::Topo),
+            "critical-path" | "criticalpath" | "critical-path-first" | "cp" => {
+                Some(SchedPolicy::CriticalPathFirst)
+            }
+            "costly" | "costly-first" | "costlyfirst" => Some(SchedPolicy::CostlyFirst),
+            _ => None,
+        }
+    }
+
+    /// Display name (also the canonical CLI spelling).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedPolicy::Topo => "topo",
+            SchedPolicy::CriticalPathFirst => "critical-path",
+            SchedPolicy::CostlyFirst => "costly",
+        }
+    }
+}
 
 /// Which math library provides the compute kernels (paper §6.1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -122,6 +170,8 @@ pub struct FrameworkConfig {
     pub pool_lib: PoolLib,
     /// Beyond-one-socket mechanism.
     pub parallelism: ParallelismMode,
+    /// Ready-operator dispatch policy for the inter-op scheduler.
+    pub sched_policy: SchedPolicy,
     /// Bind one software thread per physical core first (Intel guidance).
     pub pin_threads: bool,
 }
@@ -138,6 +188,7 @@ impl FrameworkConfig {
             math_lib: MathLib::MklDnn,
             pool_lib: PoolLib::Folly,
             parallelism: ParallelismMode::DataParallel,
+            sched_policy: SchedPolicy::Topo,
             pin_threads: true,
         }
     }
@@ -252,5 +303,20 @@ mod tests {
         assert_eq!(MathLib::parse("mkl-dnn"), Some(MathLib::MklDnn));
         assert_eq!(PoolLib::parse("folly"), Some(PoolLib::Folly));
         assert_eq!(MathLib::parse("cuda"), None);
+        assert_eq!(SchedPolicy::parse("critical-path"), Some(SchedPolicy::CriticalPathFirst));
+        assert_eq!(SchedPolicy::parse("costly"), Some(SchedPolicy::CostlyFirst));
+        assert_eq!(SchedPolicy::parse("fifo"), None);
+    }
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in SchedPolicy::ALL {
+            assert_eq!(SchedPolicy::parse(p.name()), Some(p));
+        }
+    }
+
+    #[test]
+    fn default_policy_is_topo() {
+        assert_eq!(FrameworkConfig::tuned_default().sched_policy, SchedPolicy::Topo);
     }
 }

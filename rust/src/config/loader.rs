@@ -13,6 +13,7 @@
 //!   "math_lib": "mkl-dnn",
 //!   "pool_lib": "folly",
 //!   "parallelism": "data",
+//!   "sched_policy": "critical-path",
 //!   "pin_threads": true
 //! }
 //! ```
@@ -25,7 +26,9 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::Json;
 
-use super::framework::{FrameworkConfig, MathLib, OperatorImpl, ParallelismMode, PoolLib};
+use super::framework::{
+    FrameworkConfig, MathLib, OperatorImpl, ParallelismMode, PoolLib, SchedPolicy,
+};
 use super::platform::CpuPlatform;
 
 /// A fully-resolved run configuration.
@@ -89,6 +92,11 @@ impl RunConfig {
                 other => bail!("bad parallelism: {other:?}"),
             };
         }
+        if let Some(v) = doc.get("sched_policy") {
+            let s = v.as_str().context("sched_policy must be a string")?;
+            fw.sched_policy =
+                SchedPolicy::parse(s).ok_or_else(|| anyhow!("bad sched_policy '{s}'"))?;
+        }
         if let Some(v) = doc.get("pin_threads") {
             fw.pin_threads = matches!(v, Json::Bool(true));
         }
@@ -127,6 +135,10 @@ impl RunConfig {
                     "intra_op_parallel" | "matmul2" => OperatorImpl::IntraOpParallel,
                     _ => bail!("bad operator_impl '{value}'"),
                 };
+            }
+            "sched_policy" => {
+                self.framework.sched_policy = SchedPolicy::parse(value)
+                    .ok_or_else(|| anyhow!("bad sched_policy '{value}'"))?;
             }
             _ => bail!("unknown config key '{key}'"),
         }
@@ -171,6 +183,16 @@ mod tests {
         assert!(RunConfig::from_json_str(r#"{"platform":"tpu"}"#).is_err());
         assert!(RunConfig::from_json_str(r#"{"math_lib":"blas"}"#).is_err());
         assert!(RunConfig::from_json_str(r#"{"inter_op_pools":0}"#).is_err());
+        assert!(RunConfig::from_json_str(r#"{"sched_policy":"fifo"}"#).is_err());
+    }
+
+    #[test]
+    fn parses_sched_policy() {
+        let cfg = RunConfig::from_json_str(r#"{"sched_policy":"critical-path"}"#).unwrap();
+        assert_eq!(cfg.framework.sched_policy, SchedPolicy::CriticalPathFirst);
+        let mut cfg = RunConfig::default();
+        cfg.apply_override("sched_policy", "costly").unwrap();
+        assert_eq!(cfg.framework.sched_policy, SchedPolicy::CostlyFirst);
     }
 
     #[test]

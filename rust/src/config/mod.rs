@@ -5,6 +5,6 @@ pub mod framework;
 pub mod loader;
 pub mod platform;
 
-pub use framework::{FrameworkConfig, MathLib, OperatorImpl, ParallelismMode, PoolLib};
+pub use framework::{FrameworkConfig, MathLib, OperatorImpl, ParallelismMode, PoolLib, SchedPolicy};
 pub use loader::RunConfig;
 pub use platform::CpuPlatform;

@@ -7,12 +7,17 @@
 //! * **maximum width** — the largest number of heavy operators that can run
 //!   simultaneously (Fig. 4's table),
 //! * **average width** — `floor(heavy_ops / heavy_levels)`, the §8 quantity
-//!   the tuner sets `inter_op_pools` to (Table 2).
+//!   the tuner sets `inter_op_pools` to (Table 2),
+//!
+//! plus the **upward ranks** ([`rank`]) that drive critical-path-first
+//! operator dispatch when the scheduling policy asks for it.
 
 pub mod builder;
+pub mod rank;
 pub mod width;
 
 pub use builder::GraphBuilder;
+pub use rank::{dispatch_weight, upward_ranks};
 pub use width::{WidthAnalysis, analyze_width};
 
 use crate::ops::{OpCost, OpKind};

@@ -1,0 +1,93 @@
+//! Upward-rank priorities for critical-path-aware dispatch.
+//!
+//! HEFT's upward rank of a node is its own cost plus the costliest path
+//! from it to a sink. Dispatching ready operators by descending rank keeps
+//! the graph's critical path moving while off-path operators fill the
+//! remaining pool slots — the ready-op priority lever of Liu et al.
+//! (arXiv 1810.08955). Ranks are pure graph structure: they are computed
+//! once per execution in a single reverse-topological sweep and consumed
+//! by [`crate::sched::ReadyQueue`].
+
+use crate::ops::OpCost;
+
+use super::Graph;
+
+/// Abstract dispatch cost of one operator: compute plus memory plus the
+/// framework/library prep terms. Only the *relative ordering* matters for
+/// scheduling priorities, so mixed units (FLOPs + bytes) are fine — both
+/// translate to time within a small constant factor on the modelled
+/// platforms.
+pub fn dispatch_weight(cost: &OpCost) -> f64 {
+    cost.flops + cost.total_bytes() + cost.prep_bytes + cost.lib_prep_bytes
+}
+
+/// Upward rank per node: `rank(n) = weight(n) + max over consumers c of
+/// rank(c)` (0 for sinks). Nodes are stored in topological order (deps
+/// have smaller ids), so one reverse sweep suffices.
+pub fn upward_ranks(g: &Graph) -> Vec<f64> {
+    let n = g.len();
+    let mut rank = vec![0.0f64; n];
+    // best[i] = max rank over i's consumers seen so far (consumers have
+    // larger ids, so they are final by the time i is processed)
+    let mut best = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let node = &g.nodes[i];
+        let r = dispatch_weight(&node.cost) + best[i];
+        rank[i] = r;
+        for d in &node.deps {
+            if r > best[d.0] {
+                best[d.0] = r;
+            }
+        }
+    }
+    rank
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::ops::OpKind;
+
+    fn mm(n: usize) -> OpKind {
+        OpKind::MatMul { m: n, k: n, n }
+    }
+
+    #[test]
+    fn chain_ranks_strictly_decrease() {
+        let mut b = GraphBuilder::new("chain", 1);
+        let a = b.add("a", mm(128), &[]);
+        let c = b.chain("c", mm(128), &[a], 4);
+        b.add("out", mm(128), &[c]);
+        let g = b.build();
+        let r = upward_ranks(&g);
+        for w in r.windows(2) {
+            assert!(w[0] > w[1], "{r:?}");
+        }
+    }
+
+    #[test]
+    fn longer_branch_outranks_shorter() {
+        // a → {short: one op, long: three ops}; equal per-op cost
+        let mut b = GraphBuilder::new("y", 1);
+        let a = b.add("a", mm(128), &[]);
+        let short = b.add("short", mm(128), &[a]);
+        let l1 = b.add("l1", mm(128), &[a]);
+        let l2 = b.add("l2", mm(128), &[l1]);
+        let l3 = b.add("l3", mm(128), &[l2]);
+        let g = b.build();
+        let r = upward_ranks(&g);
+        assert!(r[l1.0] > r[short.0], "{r:?}");
+        assert!(r[a.0] > r[l1.0] && r[l1.0] > r[l2.0] && r[l2.0] > r[l3.0]);
+        // sinks carry only their own weight
+        assert_eq!(r[short.0], dispatch_weight(&g.nodes[short.0].cost));
+    }
+
+    #[test]
+    fn ranks_finite_and_positive_on_zoo() {
+        let g = crate::models::build("inception_v1", 16).unwrap();
+        let r = upward_ranks(&g);
+        assert_eq!(r.len(), g.len());
+        assert!(r.iter().all(|x| x.is_finite() && *x >= 0.0));
+    }
+}

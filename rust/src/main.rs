@@ -17,13 +17,13 @@ use std::collections::HashMap;
 use anyhow::{anyhow, bail, Context, Result};
 
 use parframe::bench_tables;
-use parframe::config::{CpuPlatform, OperatorImpl, RunConfig};
+use parframe::config::{CpuPlatform, OperatorImpl, RunConfig, SchedPolicy};
 use parframe::coordinator::{
     loadgen, BatchPolicy, Coordinator, CoordinatorConfig, LoadgenConfig, MixPhase,
 };
 use parframe::graph::analyze_width;
 use parframe::models;
-use parframe::runtime::ModelRuntime;
+use parframe::runtime::{ModelRuntime, SimBackendConfig};
 use parframe::sched::LanePlan;
 use parframe::sim;
 use parframe::tuner;
@@ -63,6 +63,17 @@ fn platform_from(flags: &HashMap<String, String>) -> Result<CpuPlatform> {
     CpuPlatform::by_name(name).ok_or_else(|| anyhow!("unknown platform '{name}'"))
 }
 
+/// Optional `--policy` flag.
+fn policy_from(flags: &HashMap<String, String>) -> Result<Option<SchedPolicy>> {
+    flags
+        .get("policy")
+        .map(|p| {
+            SchedPolicy::parse(p)
+                .ok_or_else(|| anyhow!("unknown policy '{p}' (topo | critical-path | costly)"))
+        })
+        .transpose()
+}
+
 fn run() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first().map(String::as_str) else {
@@ -96,17 +107,20 @@ fn print_help() {
          \n\
          commands:\n\
            models                         list the model zoo with width analysis\n\
-           tune     --model M [--platform P] [--batch N]\n\
-           simulate --model M [--pools/--mkl/--intra N] [--platform P]\n\
+           tune     --model M [--platform P] [--batch N] [--policy POL]\n\
+           simulate --model M [--pools/--mkl/--intra N] [--policy POL] [--platform P]\n\
            figures  --fig N | --table N | --all\n\
            ablations                      per-feature degradation table
            serve    [--backend sim|pjrt] [--kind wide_deep] [--requests N]\n\
                     [--lanes N] [--concurrency N] [--platform P]\n\
                     [--kinds A,B]          core-aware lane plan (sim only)\n\
                     [--adaptive]           online re-tuning over a load shift\n\
+                    [--policy POL]         pin the dispatch policy (sim only)\n\
                     [--artifacts DIR]      (pjrt backend only)\n\
            check    --artifacts DIR\n\
-         platforms: small | large | large.2 (default large.2)"
+         platforms: small | large | large.2 (default large.2)\n\
+         policies:  topo | critical-path | costly\n\
+                    (tune/serve default: the tuner's width rule; simulate default: topo)"
     );
 }
 
@@ -133,15 +147,21 @@ fn cmd_tune(flags: &HashMap<String, String>) -> Result<()> {
         .transpose()?
         .unwrap_or_else(|| models::canonical_batch(model));
     let g = models::build(model, batch).ok_or_else(|| anyhow!("unknown model '{model}'"))?;
-    let t = tuner::tune(&g, &platform);
+    let mut t = tuner::tune(&g, &platform);
+    if let Some(p) = policy_from(flags)? {
+        t.config.sched_policy = p;
+    }
     println!("model {model} (batch {batch}) on {}:", platform.name);
     println!(
         "  width: heavy_ops={} levels={} max={} avg={}",
         t.width.heavy_ops, t.width.levels, t.width.max_width, t.width.avg_width
     );
     println!(
-        "  recommended: inter_op_pools={} mkl_threads={} intra_op_threads={}",
-        t.config.inter_op_pools, t.config.mkl_threads, t.config.intra_op_threads
+        "  recommended: inter_op_pools={} mkl_threads={} intra_op_threads={} policy={}",
+        t.config.inter_op_pools,
+        t.config.mkl_threads,
+        t.config.intra_op_threads,
+        t.config.sched_policy.name()
     );
     let guided = sim::simulate(&g, &platform, &t.config);
     println!("  simulated latency: {:.3} ms ({:.0} GFLOP/s)", guided.latency_s * 1e3, guided.gflops);
@@ -182,11 +202,18 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
     } else {
         cfg.intra_op_threads = cfg.mkl_threads;
     }
+    if let Some(p) = policy_from(flags)? {
+        cfg.sched_policy = p;
+    }
     cfg.validate(&platform).map_err(|e| anyhow!(e))?;
     let r = sim::simulate(&g, &platform, &cfg);
     println!(
-        "{model} (batch {batch}) on {} with pools={} mkl={} intra={}:",
-        platform.name, cfg.inter_op_pools, cfg.mkl_threads, cfg.intra_op_threads
+        "{model} (batch {batch}) on {} with pools={} mkl={} intra={} policy={}:",
+        platform.name,
+        cfg.inter_op_pools,
+        cfg.mkl_threads,
+        cfg.intra_op_threads,
+        cfg.sched_policy.name()
     );
     println!(
         "  latency {:.3} ms | {:.0} GFLOP/s | throughput {:.1} items/s",
@@ -206,6 +233,7 @@ fn cmd_figures(flags: &HashMap<String, String>) -> Result<()> {
             println!("{}", bench_tables::figure(n).unwrap());
         }
         println!("{}", bench_tables::table(2).unwrap());
+        println!("{}", bench_tables::table(3).unwrap());
         return Ok(());
     }
     if let Some(f) = flags.get("fig") {
@@ -238,17 +266,26 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         return cmd_serve_planned(flags, n_requests, concurrency);
     }
 
+    let policy = policy_from(flags)?;
     let (mut cfg, kind) = match backend {
         "sim" => {
             let platform = platform_from(flags)?;
             let kind = flags.get("kind").map(String::as_str).unwrap_or("wide_deep");
             println!(
-                "starting coordinator: backend=sim kind={kind} lanes={lanes} platform={}",
-                platform.name
+                "starting coordinator: backend=sim kind={kind} lanes={lanes} platform={} policy={}",
+                platform.name,
+                policy.map(|p| p.name()).unwrap_or("tuner")
             );
-            (CoordinatorConfig::sim(platform, &[kind]), kind.to_string())
+            // pin only the policy dimension: buckets keep their per-batch
+            // tuned thread knobs, so --policy A/Bs isolate dispatch order
+            let mut sc = SimBackendConfig::new(platform, &[kind]);
+            sc.policy = policy;
+            (CoordinatorConfig::sim_with(sc), kind.to_string())
         }
         "pjrt" => {
+            if policy.is_some() {
+                bail!("--policy needs the sim backend (PJRT owns its own scheduling)");
+            }
             let dir = flags.get("artifacts").map(String::as_str).unwrap_or("artifacts");
             let kind = flags.get("kind").map(String::as_str).unwrap_or("mlp");
             println!(
@@ -293,7 +330,10 @@ fn cmd_serve_planned(
     }
     let kind_refs: Vec<&str> = kinds.iter().map(String::as_str).collect();
 
-    let plan = LanePlan::guideline(&platform, &kind_refs)?;
+    let mut plan = LanePlan::guideline(&platform, &kind_refs)?;
+    if let Some(pol) = policy_from(flags)? {
+        plan = plan.with_policy(pol);
+    }
     println!(
         "starting coordinator: backend=sim kinds={} platform={} adaptive={adaptive}",
         kinds.join(","),
@@ -326,14 +366,15 @@ fn cmd_serve_planned(
 fn print_plan(plan: &LanePlan) {
     for g in &plan.groups {
         println!(
-            "  lane group {:?}: cores {}..={} ({}) pools={} mkl={} intra={}",
+            "  lane group {:?}: cores {}..={} ({}) pools={} mkl={} intra={} policy={}",
             g.kinds,
             g.allocation.first_core,
             g.allocation.last_core(),
             g.allocation.cores,
             g.framework.inter_op_pools,
             g.framework.mkl_threads,
-            g.framework.intra_op_threads
+            g.framework.intra_op_threads,
+            g.framework.sched_policy.name()
         );
     }
 }

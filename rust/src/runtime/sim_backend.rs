@@ -14,7 +14,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::config::{CpuPlatform, FrameworkConfig};
+use crate::config::{CpuPlatform, FrameworkConfig, SchedPolicy};
 use crate::models;
 use crate::sched::{CoreAllocation, LaneAssignment};
 use crate::sim;
@@ -37,6 +37,10 @@ pub struct SimBackendConfig {
     pub buckets: Vec<usize>,
     /// Framework knobs; `None` applies [`tuner::tune`] per model graph.
     pub framework: Option<FrameworkConfig>,
+    /// Dispatch-policy override applied on top of the chosen knobs
+    /// (pinned or per-bucket tuned) — pins *only* the policy dimension,
+    /// so `serve --policy` A/Bs don't conflate it with thread knobs.
+    pub policy: Option<SchedPolicy>,
 }
 
 impl SimBackendConfig {
@@ -48,6 +52,7 @@ impl SimBackendConfig {
             kinds: kinds.iter().map(|s| s.to_string()).collect(),
             buckets: vec![1, 2, 4, 8],
             framework: None,
+            policy: None,
         }
     }
 
@@ -96,10 +101,13 @@ impl SimTables {
             for &bucket in &buckets {
                 let g = models::build(kind, bucket)
                     .ok_or_else(|| anyhow!("sim backend: unknown model '{kind}'"))?;
-                let fw = match &cfg.framework {
+                let mut fw = match &cfg.framework {
                     Some(fw) => fw.clone(),
                     None => tuner::tune(&g, &cfg.platform).config,
                 };
+                if let Some(p) = cfg.policy {
+                    fw.sched_policy = p;
+                }
                 let report = sim::simulate(&g, &cfg.platform, &fw);
                 latency.insert((kind.clone(), bucket), report.latency_s);
             }
@@ -173,6 +181,7 @@ impl SimBackendFactory {
             kinds,
             buckets: self.cfg.buckets.clone(),
             framework,
+            policy: self.cfg.policy,
         };
         let t = Arc::new(SimTables::build(&sub)?);
         self.lane_tables.lock().unwrap().insert(key, Arc::clone(&t));
@@ -413,6 +422,30 @@ mod tests {
         assert!(f.create_on(&assignment(0, 4, &["resnet50"])).is_err());
         // empty kinds list means "host everything configured"
         assert!(f.create_on(&assignment(0, 4, &[])).is_ok());
+    }
+
+    #[test]
+    fn policy_override_keeps_per_bucket_tuning() {
+        // the override pins only the dispatch policy: thread knobs are
+        // still tuned per bucket, so a topo-pinned transformer backend
+        // differs from the width-rule default (critical-path) on some
+        // bucket while a redundant critical-path pin changes nothing
+        let base = SimBackend::new(SimBackendConfig::new(CpuPlatform::large2(), &["transformer"]))
+            .unwrap();
+        let mut cfg = SimBackendConfig::new(CpuPlatform::large2(), &["transformer"]);
+        cfg.policy = Some(SchedPolicy::CriticalPathFirst);
+        let pinned_cp = SimBackend::new(cfg.clone()).unwrap();
+        cfg.policy = Some(SchedPolicy::Topo);
+        let pinned_topo = SimBackend::new(cfg).unwrap();
+        let mut topo_differs = false;
+        for bucket in [1usize, 2, 4, 8] {
+            let d = base.simulated_latency("transformer", bucket).unwrap();
+            // transformer is wide at every bucket: the width rule already
+            // picks critical-path, so that pin must be a no-op
+            assert_eq!(d, pinned_cp.simulated_latency("transformer", bucket).unwrap());
+            topo_differs |= d != pinned_topo.simulated_latency("transformer", bucket).unwrap();
+        }
+        assert!(topo_differs, "topo pin changed no bucket");
     }
 
     #[test]

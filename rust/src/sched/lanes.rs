@@ -15,7 +15,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::config::{CpuPlatform, FrameworkConfig};
+use crate::config::{CpuPlatform, FrameworkConfig, SchedPolicy};
 use crate::models;
 use crate::tuner::guidelines;
 
@@ -93,6 +93,16 @@ impl LanePlan {
         let plan = LanePlan { platform: platform.clone(), groups };
         plan.validate()?;
         Ok(plan)
+    }
+
+    /// Same plan with every group's dispatch policy overridden (the CLI's
+    /// `serve --policy` pin; the online re-tuner may still propose flips
+    /// back on a later re-plan).
+    pub fn with_policy(mut self, policy: SchedPolicy) -> Self {
+        for g in &mut self.groups {
+            g.framework.sched_policy = policy;
+        }
+        self
     }
 
     /// Per-lane assignments: each group's slice split contiguously among
@@ -259,6 +269,40 @@ mod tests {
         // distinct lane ids
         assert_eq!(lanes[0].lane_id, 0);
         assert_eq!(lanes[2].lane_id, 2);
+    }
+
+    #[test]
+    fn group_policy_follows_slice_guideline_and_flows_to_lanes() {
+        // transformer (wide) gets critical-path dispatch on its slice,
+        // resnet50 (chain) keeps topo — and the knob reaches the lane
+        // assignments the backend contract consumes
+        let p = CpuPlatform::large2();
+        let plan = LanePlan::guideline(&p, &["transformer", "resnet50"]).unwrap();
+        let tr = plan.group_for("transformer").unwrap();
+        let rn = plan.group_for("resnet50").unwrap();
+        assert_eq!(tr.framework.sched_policy, SchedPolicy::CriticalPathFirst);
+        assert_eq!(rn.framework.sched_policy, SchedPolicy::Topo);
+        for a in plan.lane_assignments() {
+            let want = if a.kinds == vec!["transformer".to_string()] {
+                SchedPolicy::CriticalPathFirst
+            } else {
+                SchedPolicy::Topo
+            };
+            assert_eq!(a.framework.as_ref().unwrap().sched_policy, want);
+        }
+    }
+
+    #[test]
+    fn with_policy_overrides_every_group() {
+        let p = CpuPlatform::large2();
+        let plan = LanePlan::guideline(&p, &["transformer", "resnet50"])
+            .unwrap()
+            .with_policy(SchedPolicy::CostlyFirst);
+        plan.validate().unwrap();
+        assert!(plan
+            .groups
+            .iter()
+            .all(|g| g.framework.sched_policy == SchedPolicy::CostlyFirst));
     }
 
     #[test]

@@ -2,8 +2,10 @@
 //! and the serving coordinator: pool partitioning (how physical cores are
 //! split into inter-op pools, paper Fig. 3c), core-aware lane planning
 //! (how the machine is divided between serving lane groups, with §8
-//! knobs per slice), and the topological ready queue that implements
-//! asynchronous scheduling.
+//! knobs per slice), and the policy-driven priority ready set that
+//! implements asynchronous scheduling under a pluggable
+//! [`crate::config::SchedPolicy`] (topological, critical-path-first, or
+//! costliest-first dispatch).
 
 pub mod lanes;
 pub mod partition;

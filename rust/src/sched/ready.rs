@@ -1,29 +1,81 @@
-//! Topological ready queue: tracks dependency counts and yields runnable
-//! operators in topological priority order (lowest node id first), which
-//! keeps critical-path operators flowing ahead of stragglers.
+//! Policy-driven ready set: tracks dependency counts and yields runnable
+//! operators in the order the configured [`SchedPolicy`] asks for —
+//! topological id order (the classic behaviour), HEFT-style
+//! critical-path-first, or largest-op-first.
 
-use crate::graph::Graph;
+use std::collections::BinaryHeap;
 
-/// Dependency-tracking ready queue over a graph.
+use crate::config::SchedPolicy;
+use crate::graph::{self, Graph};
+
+/// One ready node with its dispatch priority. Max-heap order: highest
+/// priority pops first; equal priorities tie-break to the **lowest node
+/// id**, so pop order is fully deterministic for every policy.
+#[derive(Debug, PartialEq)]
+struct ReadyEntry {
+    priority: f64,
+    node: usize,
+}
+
+impl Eq for ReadyEntry {}
+
+impl Ord for ReadyEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // priorities are asserted finite at construction, so partial_cmp
+        // cannot actually fail; Equal keeps the order total regardless
+        self.priority
+            .partial_cmp(&other.priority)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| other.node.cmp(&self.node))
+    }
+}
+
+impl PartialOrd for ReadyEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Dependency-tracking ready set over a graph.
 ///
 /// The consumer adjacency is stored as a flat CSR layout (offsets + one
 /// index array) rather than `Vec<Vec<_>>`: a `ReadyQueue` is built once
 /// per simulated execution, and the exhaustive tuner runs hundreds of
 /// simulations per graph, so the n-small-allocations pattern showed up in
-/// the §Perf profile.
+/// the §Perf profile. The ready set itself is a binary heap — O(log n)
+/// insert/pop instead of the old sorted-`Vec`'s O(n) insertion.
 pub struct ReadyQueue {
     remaining: Vec<usize>,
     cons_offsets: Vec<u32>,
     cons_flat: Vec<u32>,
-    /// ready node ids, kept sorted descending so `pop` takes the smallest
-    ready: Vec<usize>,
+    /// max-heap of ready nodes: highest priority first, ties to lowest id
+    ready: BinaryHeap<ReadyEntry>,
+    /// per-node dispatch priority; `None` ⇒ uniform, i.e. pure
+    /// topological id order (saves the rank sweep on the hot Topo path)
+    priority: Option<Vec<f64>>,
     outstanding: usize,
 }
 
 impl ReadyQueue {
-    /// Build from a graph; sources start ready.
+    /// Build from a graph with topological dispatch order; sources start
+    /// ready.
     pub fn new(graph: &Graph) -> Self {
+        Self::with_policy(graph, SchedPolicy::Topo)
+    }
+
+    /// Build from a graph with the given dispatch policy.
+    pub fn with_policy(graph: &Graph, policy: SchedPolicy) -> Self {
         let n = graph.len();
+        let priority = match policy {
+            SchedPolicy::Topo => None,
+            SchedPolicy::CriticalPathFirst => Some(graph::upward_ranks(graph)),
+            SchedPolicy::CostlyFirst => Some(
+                graph.nodes.iter().map(|nd| graph::dispatch_weight(&nd.cost)).collect(),
+            ),
+        };
+        if let Some(p) = &priority {
+            debug_assert!(p.iter().all(|x| x.is_finite()), "non-finite dispatch priority");
+        }
         let remaining: Vec<usize> = graph.nodes.iter().map(|nd| nd.deps.len()).collect();
         // CSR consumer lists: count, prefix-sum, fill
         let mut cons_offsets = vec![0u32; n + 1];
@@ -43,14 +95,30 @@ impl ReadyQueue {
                 cursor[d.0] += 1;
             }
         }
-        let mut ready: Vec<usize> = (0..n).filter(|&i| remaining[i] == 0).collect();
-        ready.reverse();
-        ReadyQueue { remaining, cons_offsets, cons_flat, ready, outstanding: n }
+        let mut q = ReadyQueue {
+            remaining,
+            cons_offsets,
+            cons_flat,
+            ready: BinaryHeap::with_capacity(16),
+            priority,
+            outstanding: n,
+        };
+        for i in 0..n {
+            if q.remaining[i] == 0 {
+                q.push_ready(i);
+            }
+        }
+        q
     }
 
-    /// Next runnable node (topological order), if any.
+    fn push_ready(&mut self, node: usize) {
+        let priority = self.priority.as_ref().map_or(0.0, |p| p[node]);
+        self.ready.push(ReadyEntry { priority, node });
+    }
+
+    /// Next runnable node (highest dispatch priority), if any.
     pub fn pop(&mut self) -> Option<usize> {
-        self.ready.pop()
+        self.ready.pop().map(|e| e.node)
     }
 
     /// Mark a node complete, unlocking its consumers.
@@ -62,8 +130,7 @@ impl ReadyQueue {
             let c = self.cons_flat[i] as usize;
             self.remaining[c] -= 1;
             if self.remaining[c] == 0 {
-                let pos = self.ready.partition_point(|&r| r > c);
-                self.ready.insert(pos, c);
+                self.push_ready(c);
             }
         }
     }
@@ -126,5 +193,74 @@ mod tests {
         let n = q.pop().unwrap();
         q.complete(n);
         assert_eq!(q.outstanding(), 3);
+    }
+
+    #[test]
+    fn critical_path_prefers_longer_branch() {
+        // a → {short (id 1), long chain (ids 2→3→4)}: topo pops 1 first,
+        // critical-path pops the head of the long chain first
+        let mm = OpKind::MatMul { m: 128, k: 128, n: 128 };
+        let mut b = GraphBuilder::new("y", 1);
+        let a = b.add("a", mm.clone(), &[]);
+        b.add("short", mm.clone(), &[a]);
+        let l1 = b.add("l1", mm.clone(), &[a]);
+        let l2 = b.add("l2", mm.clone(), &[l1]);
+        b.add("l3", mm, &[l2]);
+        let g = b.build();
+
+        let mut topo = ReadyQueue::new(&g);
+        topo.complete(topo.pop().unwrap());
+        assert_eq!(topo.pop(), Some(1));
+
+        let mut cp = ReadyQueue::with_policy(&g, SchedPolicy::CriticalPathFirst);
+        cp.complete(cp.pop().unwrap());
+        assert_eq!(cp.pop(), Some(2), "critical-path must dispatch the chain head first");
+    }
+
+    #[test]
+    fn costly_first_prefers_bigger_op() {
+        let mut b = GraphBuilder::new("c", 1);
+        let a = b.add("a", OpKind::Pool { elems: 1 }, &[]);
+        b.add("small", OpKind::MatMul { m: 64, k: 64, n: 64 }, &[a]);
+        b.add("big", OpKind::MatMul { m: 512, k: 512, n: 512 }, &[a]);
+        let g = b.build();
+        let mut q = ReadyQueue::with_policy(&g, SchedPolicy::CostlyFirst);
+        q.complete(q.pop().unwrap());
+        assert_eq!(q.pop(), Some(2), "costly-first must dispatch the big matmul first");
+    }
+
+    #[test]
+    fn equal_priorities_tie_break_on_node_id() {
+        // a star of identical children: every policy must pop them in
+        // ascending id order (the determinism micro-assert of the heap
+        // refactor — equal priorities cannot reorder)
+        let k = OpKind::Pool { elems: 64 };
+        let mut b = GraphBuilder::new("star", 1);
+        let a = b.add("a", k.clone(), &[]);
+        for i in 0..6 {
+            b.add(&format!("c{i}"), k.clone(), &[a]);
+        }
+        let g = b.build();
+        for policy in SchedPolicy::ALL {
+            let mut q = ReadyQueue::with_policy(&g, policy);
+            q.complete(q.pop().unwrap());
+            let order: Vec<usize> = std::iter::from_fn(|| q.pop()).collect();
+            assert_eq!(order, vec![1, 2, 3, 4, 5, 6], "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn all_policies_drain_every_node() {
+        let g = crate::models::build("inception_v2", 4).unwrap();
+        for policy in SchedPolicy::ALL {
+            let mut q = ReadyQueue::with_policy(&g, policy);
+            let mut seen = 0usize;
+            while let Some(n) = q.pop() {
+                seen += 1;
+                q.complete(n);
+            }
+            assert_eq!(seen, g.len(), "{policy:?}");
+            assert!(q.finished(), "{policy:?}");
+        }
     }
 }

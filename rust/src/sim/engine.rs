@@ -2,10 +2,11 @@
 //!
 //! The scheduler model matches the paper's Fig. 3: the machine's physical
 //! cores are split evenly into `inter_op_pools` pools; ready operators are
-//! dispatched to free pools in topological order; a pool runs one operator
-//! at a time through its phase list ([`super::opexec`]). One pool ⇒
-//! synchronous scheduling; N pools ⇒ asynchronous scheduling over N
-//! operators in flight.
+//! dispatched to free pools in the order the configured
+//! [`crate::config::SchedPolicy`] dictates (topological, critical-path-
+//! first, or costliest-first); a pool runs one operator at a time through
+//! its phase list ([`super::opexec`]). One pool ⇒ synchronous scheduling;
+//! N pools ⇒ asynchronous scheduling over N operators in flight.
 //!
 //! Per-logical-core timelines are recorded so the harness can reproduce the
 //! paper's `perf`-style stack bars and traces.
@@ -98,7 +99,6 @@ pub fn simulate_opts(
 ) -> SimReport {
     let assignments = partition_pools(platform, cfg);
     let pools = assignments.len();
-    let cpp = assignments[0].cores;
 
     // pool contexts for the op-execution model; data-parallel spanning only
     // counts when the mode asks for it
@@ -112,7 +112,7 @@ pub fn simulate_opts(
         .collect();
 
     let n = graph.len();
-    let mut queue = ReadyQueue::new(graph);
+    let mut queue = ReadyQueue::with_policy(graph, cfg.sched_policy);
     let mut free_pools: Vec<usize> = (0..pools).rev().collect();
     let mut heap: BinaryHeap<Completion> = BinaryHeap::new();
     let mut pool_free_at = vec![0.0f64; pools];
@@ -126,7 +126,7 @@ pub fn simulate_opts(
     let mut upi_peak: f64 = 0.0;
 
     while done < n {
-        // dispatch ready ops to free pools (topological priority)
+        // dispatch ready ops to free pools (policy-chosen priority)
         loop {
             if free_pools.is_empty() {
                 break;
@@ -145,8 +145,8 @@ pub fn simulate_opts(
                 opts.record_timelines,
                 platform,
                 cfg,
-                pool,
-                cpp,
+                assignments[pool].first_core,
+                assignments[pool].cores,
                 start,
                 &phases,
                 node,
@@ -186,8 +186,8 @@ pub fn simulate_opts(
     let latency = now;
     for p in 0..pools {
         let idle = (latency - busy_time(&pool_free_at, p, latency)).max(0.0);
-        // idle applies to all logical cores of the pool
-        breakdown.add(Category::Idle, idle * (cpp * platform.smt) as f64);
+        // idle applies to all logical cores of the pool's own slice
+        breakdown.add(Category::Idle, idle * (assignments[p].cores * platform.smt) as f64);
     }
 
     let gflops = graph.total_flops() / latency.max(1e-12) / 1e9;
@@ -200,6 +200,9 @@ fn busy_time(pool_free_at: &[f64], pool: usize, latency: f64) -> f64 {
 }
 
 /// Record one op's phases into the breakdown (and timelines if requested).
+/// `base`/`cpp` are the executing pool's *own* first physical core and
+/// core count (pool slices need not be identical — Fig. 3c's even split
+/// is just the common case).
 #[allow(clippy::too_many_arguments)]
 fn record(
     breakdown: &mut Breakdown,
@@ -207,14 +210,13 @@ fn record(
     record_tl: bool,
     platform: &CpuPlatform,
     cfg: &FrameworkConfig,
-    pool: usize,
+    base: usize,
     cpp: usize,
     start: f64,
     phases: &[Phase],
     node: usize,
 ) {
     let phys = platform.physical_cores();
-    let base = pool * cpp; // first physical core of the pool
     let mut t = start;
     for ph in phases {
         // how many logical cores this phase occupies (no allocation on the
@@ -316,6 +318,20 @@ mod tests {
         let sync = simulate(&g, &p, &cfg(1, 24, 1)).latency_s;
         let async4 = simulate(&g, &p, &cfg(4, 6, 1)).latency_s;
         assert!(async4 > sync, "sync={sync} async4={async4}");
+    }
+
+    #[test]
+    fn all_policies_complete_deterministically() {
+        let g = models::build("inception_v1", 16).unwrap();
+        let p = CpuPlatform::large();
+        for policy in crate::config::SchedPolicy::ALL {
+            let mut c = cfg(3, 8, 1);
+            c.sched_policy = policy;
+            let a = simulate(&g, &p, &c).latency_s;
+            let b = simulate(&g, &p, &c).latency_s;
+            assert_eq!(a, b, "{policy:?}");
+            assert!(a.is_finite() && a > 0.0, "{policy:?}");
+        }
     }
 
     #[test]

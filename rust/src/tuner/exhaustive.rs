@@ -3,10 +3,13 @@
 //! The raw space on `large.2` is `logical³ = 96³ = 884,736` points; like
 //! the authors we sweep the feasible lattice (pool counts that divide the
 //! machine sensibly, thread counts up to the logical core count) and
-//! simulate each point. This is what the guideline is supposed to match
-//! with *one* prediction.
+//! simulate each point. The dispatch-policy dimension
+//! ([`crate::config::SchedPolicy`]) is swept alongside the thread lattice
+//! wherever it can matter — with a single pool every policy yields the
+//! same serial schedule, so only `Topo` is evaluated there. This is what
+//! the guideline is supposed to match with *one* prediction.
 
-use crate::config::{CpuPlatform, FrameworkConfig, OperatorImpl};
+use crate::config::{CpuPlatform, FrameworkConfig, OperatorImpl, SchedPolicy};
 use crate::graph::Graph;
 use crate::sim;
 
@@ -49,22 +52,29 @@ pub fn exhaustive_search(graph: &Graph, platform: &CpuPlatform) -> SearchResult 
     let mut best: Option<(FrameworkConfig, f64)> = None;
     let mut evaluated = 0usize;
     for pools in pool_candidates(platform) {
+        // one pool serialises everything: dispatch order cannot change the
+        // makespan, so sweeping policies there would just re-measure Topo
+        let policies: &[SchedPolicy] =
+            if pools == 1 { &[SchedPolicy::Topo] } else { &SchedPolicy::ALL };
         for mkl in thread_candidates(platform, pools) {
             for intra in thread_candidates(platform, pools) {
-                let cfg = FrameworkConfig {
-                    inter_op_pools: pools,
-                    mkl_threads: mkl,
-                    intra_op_threads: intra,
-                    operator_impl: OperatorImpl::IntraOpParallel,
-                    ..FrameworkConfig::tuned_default()
-                };
-                if cfg.validate(platform).is_err() {
-                    continue;
-                }
-                let lat = sim::simulate(graph, platform, &cfg).latency_s;
-                evaluated += 1;
-                if best.as_ref().map_or(true, |(_, b)| lat < *b) {
-                    best = Some((cfg, lat));
+                for &policy in policies {
+                    let cfg = FrameworkConfig {
+                        inter_op_pools: pools,
+                        mkl_threads: mkl,
+                        intra_op_threads: intra,
+                        operator_impl: OperatorImpl::IntraOpParallel,
+                        sched_policy: policy,
+                        ..FrameworkConfig::tuned_default()
+                    };
+                    if cfg.validate(platform).is_err() {
+                        continue;
+                    }
+                    let lat = sim::simulate(graph, platform, &cfg).latency_s;
+                    evaluated += 1;
+                    if best.as_ref().map_or(true, |(_, b)| lat < *b) {
+                        best = Some((cfg, lat));
+                    }
                 }
             }
         }
@@ -85,6 +95,17 @@ mod tests {
         let r = exhaustive_search(&g, &CpuPlatform::small());
         assert!(r.evaluated > 50, "evaluated={}", r.evaluated);
         assert!(r.best_latency_s > 0.0);
+    }
+
+    #[test]
+    fn policy_dimension_is_swept() {
+        // multi-pool lattice points are evaluated once per policy: on
+        // `small` the lattice is 4 pools × 4×4 threads, so the policy
+        // sweep must push the count well past the 64 thread-only points
+        let g = models::build("inception_v2", 16).unwrap();
+        let r = exhaustive_search(&g, &CpuPlatform::small());
+        assert!(r.evaluated > 100, "evaluated={}", r.evaluated);
+        assert!(SchedPolicy::ALL.contains(&r.best.sched_policy));
     }
 
     #[test]

@@ -8,8 +8,13 @@
 //! This collapses the 96³-point design space of `large.2` to a single
 //! setting derived from graph structure — architecture-independent, since
 //! it only reads the model's computational graph.
+//!
+//! The dispatch policy follows the same width rule: a wide graph
+//! (average width ≥ 2) has real ordering freedom among ready operators,
+//! so it gets critical-path-first dispatch; a chain graph has none, so
+//! it keeps plain topological order.
 
-use crate::config::{CpuPlatform, FrameworkConfig, OperatorImpl, ParallelismMode};
+use crate::config::{CpuPlatform, FrameworkConfig, OperatorImpl, ParallelismMode, SchedPolicy};
 use crate::graph::{analyze_width, Graph, WidthAnalysis};
 
 /// A tuned setting plus the analysis that produced it.
@@ -39,6 +44,12 @@ pub fn tune(graph: &Graph, platform: &CpuPlatform) -> Tuning {
             ParallelismMode::ModelParallel
         } else {
             ParallelismMode::DataParallel
+        },
+        // wide graphs have ordering freedom worth exploiting; chains don't
+        sched_policy: if width.avg_width >= 2 {
+            SchedPolicy::CriticalPathFirst
+        } else {
+            SchedPolicy::Topo
         },
         ..FrameworkConfig::tuned_default()
     };
@@ -95,6 +106,21 @@ mod tests {
                 );
                 assert!(t.config.validate(&p).is_ok());
             }
+        }
+    }
+
+    #[test]
+    fn policy_follows_width_rule() {
+        let p = CpuPlatform::large2();
+        // wide graphs (avg width ≥ 2) get critical-path dispatch
+        for name in ["inception_v3", "wide_deep", "ncf", "transformer"] {
+            let t = tune_named(name, &p);
+            assert_eq!(t.config.sched_policy, SchedPolicy::CriticalPathFirst, "{name}");
+        }
+        // chains have no ordering freedom — keep topological dispatch
+        for name in ["resnet50", "caffenet", "squeezenet"] {
+            let t = tune_named(name, &p);
+            assert_eq!(t.config.sched_policy, SchedPolicy::Topo, "{name}");
         }
     }
 

@@ -2,13 +2,16 @@
 //! serving-time closed loop built on it.
 //!
 //! * [`guidelines`] — the width-based rule: `pools = average graph width`,
-//!   `mkl_threads = intra_op_threads = physical_cores / pools`.
+//!   `mkl_threads = intra_op_threads = physical_cores / pools`, and
+//!   critical-path-first dispatch for wide graphs (avg width ≥ 2).
 //! * [`baselines`] — the Intel blog, TensorFlow performance-guide and
 //!   TensorFlow out-of-the-box settings the paper compares against.
 //! * [`exhaustive`] — the global-optimum search over the design cube
-//!   (96³ points on `large.2`; pruned to the feasible lattice).
+//!   (96³ points on `large.2`; pruned to the feasible lattice, with the
+//!   dispatch-policy dimension swept wherever > 1 pool makes it matter).
 //! * [`online`] — the windowed re-tuner: §8 as the prior, sim-scored
-//!   candidate core splits, applied live by the coordinator.
+//!   candidate core splits and per-group policy flips, applied live by
+//!   the coordinator.
 
 pub mod baselines;
 pub mod exhaustive;

@@ -7,7 +7,9 @@
 //! [`OnlineTuner::propose`] then builds candidate [`LanePlan`]s — the
 //! rate-proportional split with §8 knobs per slice as the prior, plus
 //! neighbors that shift a few cores between the hottest and coldest
-//! groups — scores every candidate with `sim::simulate` **under each
+//! groups or flip one group's dispatch policy
+//! ([`crate::config::SchedPolicy`]) — scores every candidate with
+//! `sim::simulate` **under each
 //! group's allocated cores**, and returns a new plan only when the
 //! predicted win clears a hysteresis threshold (so the coordinator is
 //! not thrashed by noise). The coordinator applies accepted plans with
@@ -18,7 +20,7 @@ use std::collections::HashMap;
 
 use anyhow::Result;
 
-use crate::config::CpuPlatform;
+use crate::config::{CpuPlatform, SchedPolicy};
 use crate::metrics::WindowSnapshot;
 use crate::models;
 use crate::sched::{LaneGroup, LanePlan};
@@ -159,13 +161,26 @@ impl OnlineTuner {
         })
     }
 
-    /// Candidate plans one `core_step` away from `base`: shift cores
-    /// between the hottest and coldest groups (both directions), with
-    /// every group's knobs re-derived from the §8 guideline on its new
-    /// slice.
+    /// Candidate plans one step away from `base`: every group's dispatch
+    /// policy flipped to each alternative (same core split — lets a
+    /// re-plan adopt e.g. critical-path dispatch when a wide model heats
+    /// up), plus core shifts between the hottest and coldest groups (both
+    /// directions) with every group's knobs re-derived from the §8
+    /// guideline on its new slice.
     fn neighbors(&self, base: &LanePlan) -> Vec<LanePlan> {
+        let mut out = Vec::new();
+        for (i, g) in base.groups.iter().enumerate() {
+            for pol in SchedPolicy::ALL {
+                if pol == g.framework.sched_policy {
+                    continue;
+                }
+                let mut p = base.clone();
+                p.groups[i].framework.sched_policy = pol;
+                out.push(p);
+            }
+        }
         if base.groups.len() < 2 {
-            return Vec::new();
+            return out;
         }
         let mix = self.mix();
         let share = |g: &LaneGroup| -> f64 {
@@ -185,10 +200,9 @@ impl OnlineTuner {
             }
         }
         if hot == cold {
-            return Vec::new();
+            return out;
         }
         let step = self.cfg.core_step.max(1);
-        let mut out = Vec::new();
         for (from, to) in [(cold, hot), (hot, cold)] {
             if base.groups[from].allocation.cores <= step {
                 continue;
@@ -297,6 +311,29 @@ mod tests {
         t.observe(&window(8, 72));
         let adopted = t.propose(&initial).unwrap().expect("strong shift re-plans");
         assert!(t.propose(&adopted).unwrap().is_none(), "controller thrashed");
+    }
+
+    #[test]
+    fn neighbors_include_policy_flips_for_every_group() {
+        let platform = CpuPlatform::large2();
+        let mut t = OnlineTuner::new(platform.clone(), &[A, B]);
+        t.observe(&window(40, 40));
+        let base = LanePlan::guideline(&platform, &[A, B]).unwrap();
+        let n = t.neighbors(&base);
+        for (i, g) in base.groups.iter().enumerate() {
+            for pol in SchedPolicy::ALL {
+                if pol == g.framework.sched_policy {
+                    continue;
+                }
+                assert!(
+                    n.iter().any(|p| {
+                        p.groups[i].framework.sched_policy == pol
+                            && p.groups[i].allocation == base.groups[i].allocation
+                    }),
+                    "missing flip of group {i} to {pol:?}"
+                );
+            }
+        }
     }
 
     #[test]

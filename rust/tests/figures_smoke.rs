@@ -27,6 +27,14 @@ fn unknown_numbers_are_none() {
 }
 
 #[test]
+fn table3_policy_comparison_renders() {
+    let s = bench_tables::table(3).unwrap();
+    assert!(s.contains("Table 3"));
+    assert!(s.contains("critical-path"));
+    assert!(s.contains("transformer") && s.contains("resnet50"));
+}
+
+#[test]
 fn fig9_rows_cover_sweep() {
     let s = bench_tables::figure(9).unwrap();
     for size in ["256", "512", "4096", "16384"] {

@@ -3,6 +3,8 @@
 //!
 //! Invariants covered:
 //! * simulator: monotonicity, determinism, conservation of work;
+//! * scheduling policies: every policy runs each node exactly once and
+//!   never before its deps; all policies agree on pure chain graphs;
 //! * batcher: order preservation, bucket sufficiency, no request loss;
 //! * width analysis: bounds and invariance;
 //! * JSON codec: roundtrip on random documents;
@@ -12,14 +14,14 @@
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
-use parframe::config::{CpuPlatform, FrameworkConfig, OperatorImpl};
+use parframe::config::{CpuPlatform, FrameworkConfig, OperatorImpl, SchedPolicy};
 use parframe::coordinator::batcher::{BatchPolicy, DynamicBatcher};
 use parframe::coordinator::loadgen;
 use parframe::coordinator::request::{Request, RequestId};
 use parframe::graph::{analyze_width, Graph, GraphBuilder};
 use parframe::ops::OpKind;
 use parframe::runtime::Tensor;
-use parframe::sched::pick_lane;
+use parframe::sched::{pick_lane, ReadyQueue};
 use parframe::sim;
 use parframe::util::json::{self, Json};
 use parframe::util::prng::Prng;
@@ -60,6 +62,7 @@ fn random_cfg(rng: &mut Prng, p: &CpuPlatform) -> FrameworkConfig {
         mkl_threads: rng.range(1, p.physical_cores()),
         intra_op_threads: rng.range(1, p.physical_cores()),
         operator_impl: if rng.f64() < 0.5 { OperatorImpl::Serial } else { OperatorImpl::IntraOpParallel },
+        sched_policy: *rng.choose(&SchedPolicy::ALL),
         ..FrameworkConfig::tuned_default()
     }
 }
@@ -92,6 +95,88 @@ fn prop_tuned_big_platform_never_loses_to_tuned_small() {
         let small = sim::simulate(&g, &small_p, &parframe::tuner::tune(&g, &small_p).config).latency_s;
         let large = sim::simulate(&g, &large_p, &parframe::tuner::tune(&g, &large_p).config).latency_s;
         assert!(large <= small * 1.05, "case {case}: small={small} large={large}");
+    }
+}
+
+#[test]
+fn prop_every_policy_runs_each_node_once_after_its_deps() {
+    // drive the ReadyQueue like an async pool set: pop a few ready nodes
+    // into flight, complete them in random order, repeat — under every
+    // policy each node must run exactly once and only after its deps
+    let mut rng = Prng::new(0x5C11ED);
+    for case in 0..CASES {
+        let g = random_graph(&mut rng);
+        for policy in SchedPolicy::ALL {
+            let mut q = ReadyQueue::with_policy(&g, policy);
+            let mut done = vec![false; g.len()];
+            let mut in_flight: Vec<usize> = Vec::new();
+            let mut executed = 0usize;
+            while !q.finished() {
+                let slots = rng.range(1, 4);
+                while in_flight.len() < slots {
+                    match q.pop() {
+                        Some(n) => {
+                            assert!(!done[n], "case {case} {policy:?}: node {n} ran twice");
+                            for d in &g.nodes[n].deps {
+                                assert!(
+                                    done[d.0],
+                                    "case {case} {policy:?}: node {n} before dep {}",
+                                    d.0
+                                );
+                            }
+                            in_flight.push(n);
+                        }
+                        None => break,
+                    }
+                }
+                assert!(!in_flight.is_empty(), "case {case} {policy:?}: deadlock");
+                let n = in_flight.swap_remove(rng.below(in_flight.len()));
+                done[n] = true;
+                executed += 1;
+                q.complete(n);
+            }
+            assert_eq!(executed, g.len(), "case {case} {policy:?}: node count");
+            assert_eq!(q.pop(), None, "case {case} {policy:?}: queue not drained");
+        }
+    }
+}
+
+#[test]
+fn prop_all_policies_agree_on_pure_chains() {
+    // a chain has no reordering freedom: every policy must produce the
+    // bit-identical schedule, hence bit-identical latency
+    let mut rng = Prng::new(0xC4A19);
+    let p = CpuPlatform::large();
+    for case in 0..CASES {
+        let mut b = GraphBuilder::new("chain", 8);
+        let mut prev = b.add("n0", OpKind::MatMul { m: rng.range(64, 512), k: 256, n: 256 }, &[]);
+        let len = rng.range(3, 12);
+        for i in 1..len {
+            let kind = if rng.f64() < 0.6 {
+                OpKind::MatMul { m: rng.range(64, 512), k: 256, n: 256 }
+            } else {
+                OpKind::Elementwise { elems: rng.range(1_000, 100_000), name: "ReLU" }
+            };
+            prev = b.add(&format!("n{i}"), kind, &[prev]);
+        }
+        b.add("out", OpKind::Pool { elems: 256 }, &[prev]);
+        let g = b.build();
+        let cfg = random_cfg(&mut rng, &p);
+        let topo = sim::simulate(
+            &g,
+            &p,
+            &FrameworkConfig { sched_policy: SchedPolicy::Topo, ..cfg.clone() },
+        )
+        .latency_s;
+        for policy in [SchedPolicy::CriticalPathFirst, SchedPolicy::CostlyFirst] {
+            let lat = sim::simulate(
+                &g,
+                &p,
+                &FrameworkConfig { sched_policy: policy, ..cfg.clone() },
+            )
+            .latency_s;
+            assert_eq!(lat, topo, "case {case} {policy:?}: chains must not reorder");
+        }
     }
 }
 
