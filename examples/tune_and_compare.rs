@@ -9,10 +9,13 @@
 //! cargo run --release --example tune_and_compare
 //! ```
 
+use std::sync::Arc;
+use std::time::Instant;
+
 use parframe::config::CpuPlatform;
 use parframe::models;
-use parframe::sim;
-use parframe::tuner::{self, Baseline};
+use parframe::sim::{self, SimCache};
+use parframe::tuner::{self, Baseline, SweepOptions};
 use parframe::util::stats;
 
 /// A production fleet slice: (model, share of traffic).
@@ -74,4 +77,35 @@ fn main() {
         (1.0 - 1.0 / fleet_gain) * 100.0
     );
     let _ = stats::mean(&weights); // touch stats to show the util API
+
+    // how close is the one-shot guideline to the swept global optimum?
+    // (the parallel, memoized sweep makes this affordable fleet-wide: one
+    // shared cache, every model's lattice fanned over the worker pool)
+    let jobs = tuner::default_jobs();
+    let cache = Arc::new(SimCache::new());
+    println!("\nguideline vs exhaustive optimum (jobs={jobs}, shared sim cache):");
+    let t0 = Instant::now();
+    for (name, _) in FLEET {
+        let g = models::build(name, models::canonical_batch(name)).unwrap();
+        let tuned = tuner::tune(&g, &platform);
+        let guided = sim::simulate(&g, &platform, &tuned.config).latency_s;
+        let opt = tuner::exhaustive_search_with(
+            &g,
+            &platform,
+            &SweepOptions::shared(jobs, Arc::clone(&cache)),
+        );
+        println!(
+            "  {:<14} optimum {:>9.3} ms over {:>4} points — guideline at {:.3}x",
+            name,
+            opt.best_latency_s * 1e3,
+            opt.evaluated,
+            guided / opt.best_latency_s
+        );
+    }
+    println!(
+        "  swept {} simulations ({} deduped as cache hits) in {:.2}s",
+        cache.misses(),
+        cache.hits(),
+        t0.elapsed().as_secs_f64()
+    );
 }

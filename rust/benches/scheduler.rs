@@ -37,6 +37,16 @@ fn main() {
         });
     }
 
+    // prepared-graph fast path: ranks/weights/CSR precomputed once — the
+    // per-simulation delta the tuning-throughput subsystem banks on
+    let prep = parframe::sim::PreparedGraph::new(&gt);
+    for policy in SchedPolicy::ALL {
+        let c = FrameworkConfig { sched_policy: policy, ..cfg(4, 12) };
+        b.run_with_output(&format!("simulate-prepared/transformer/{}", policy.name()), || {
+            sim::simulate_prepared(&prep, &p, &c, &SimOptions::default()).latency_s
+        });
+    }
+
     // graph construction itself
     b.run_with_output("build/transformer", || models::build("transformer", 16).unwrap().len());
     b.run_with_output("build/inception_v3", || models::build("inception_v3", 16).unwrap().len());

@@ -1,0 +1,97 @@
+//! Bench: tuning throughput — the parallel, memoized sweep vs the
+//! serial path, reported as evaluated design points per second (the
+//! acceptance metric of the tuning-throughput subsystem), plus the
+//! serving cold-start cut from parallel latency-table pre-simulation.
+//!
+//! Each sweep runs once (a full exhaustive lattice is the workload, not
+//! a microsecond-scale case), so this target prints its own rows
+//! instead of using the repeated-timing harness.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use parframe::config::CpuPlatform;
+use parframe::models;
+use parframe::runtime::{BackendFactory, SimBackendConfig, SimBackendFactory};
+use parframe::sim::SimCache;
+use parframe::tuner::{default_jobs, exhaustive_search_with, SearchResult, SweepOptions};
+use parframe::util::bench::fmt_t;
+
+fn sweep(
+    name: &str,
+    graph: &parframe::graph::Graph,
+    platform: &CpuPlatform,
+    opts: &SweepOptions,
+    label: &str,
+) -> SearchResult {
+    let t0 = Instant::now();
+    let r = exhaustive_search_with(graph, platform, opts);
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "tuner/sweep/{name:<14} {label:<18} evaluated={:<5} wall={:<10} points/s={:.0}",
+        r.evaluated,
+        fmt_t(wall),
+        r.evaluated as f64 / wall.max(1e-12)
+    );
+    r
+}
+
+fn main() {
+    let platform = CpuPlatform::large2();
+    let jobs = default_jobs();
+    println!("tuner bench on {} (jobs={jobs})", platform.name);
+
+    for name in ["wide_deep", "inception_v3"] {
+        let g = models::build(name, models::canonical_batch(name)).unwrap();
+        // serial baseline (fresh cache ⇒ every point simulates)
+        let serial = sweep(name, &g, &platform, &SweepOptions::with_jobs(1), "jobs=1 cold");
+        // parallel, cold cache: the wall-clock win to report
+        let par = sweep(
+            name,
+            &g,
+            &platform,
+            &SweepOptions::with_jobs(jobs),
+            &format!("jobs={jobs} cold"),
+        );
+        // memoized re-sweep: a warm cache answers without simulating
+        let cache = Arc::new(SimCache::new());
+        sweep(name, &g, &platform, &SweepOptions::shared(jobs, Arc::clone(&cache)), "warming");
+        let warm = sweep(
+            name,
+            &g,
+            &platform,
+            &SweepOptions::shared(jobs, Arc::clone(&cache)),
+            "warm re-sweep",
+        );
+        println!(
+            "tuner/sweep/{name:<14} cache hits={} misses={}",
+            cache.hits(),
+            cache.misses()
+        );
+        assert_eq!(serial.best, par.best, "parallel sweep diverged from serial");
+        assert_eq!(
+            serial.best_latency_s.to_bits(),
+            warm.best_latency_s.to_bits(),
+            "memoized sweep diverged from serial"
+        );
+    }
+
+    // serving cold-start: lane-table pre-simulation for a three-model
+    // catalog, serial vs parallel factory
+    let kinds = ["wide_deep", "resnet50", "transformer"];
+    for jobs in [1, jobs] {
+        let mut cfg = SimBackendConfig::new(CpuPlatform::large2(), &kinds);
+        cfg.jobs = jobs;
+        let factory = SimBackendFactory::new(cfg);
+        let t0 = Instant::now();
+        factory.create().unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "tuner/coldstart/3-kinds jobs={jobs:<2} tables wall={:<10} sims={}",
+            fmt_t(wall),
+            factory.cache().misses()
+        );
+    }
+
+    println!("bench suite 'tuner' done");
+}

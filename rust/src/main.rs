@@ -3,6 +3,7 @@
 //! ```text
 //! parframe models                          list the model zoo + widths
 //! parframe tune --model ncf [--platform large.2]
+//! parframe tune --model ncf --exhaustive --jobs 8   (parallel global-optimum sweep)
 //! parframe simulate --model resnet50 --pools 2 --mkl 12 --intra 12
 //! parframe figures --fig 18 | --table 2 | --all
 //! parframe serve --kind wide_deep --requests 256      (sim backend)
@@ -13,6 +14,7 @@
 //! ```
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -23,11 +25,11 @@ use parframe::coordinator::{
 };
 use parframe::graph::analyze_width;
 use parframe::models;
-use parframe::runtime::{ModelRuntime, SimBackendConfig};
+use parframe::runtime::{ModelRuntime, SimBackendConfig, SimBackendFactory};
 use parframe::sched::LanePlan;
-use parframe::sim;
+use parframe::sim::{self, SimCache};
 use parframe::tuner;
-use parframe::tuner::OnlineTuner;
+use parframe::tuner::{OnlineTuner, OnlineTunerConfig, SweepOptions};
 
 fn main() {
     if let Err(e) = run() {
@@ -43,7 +45,7 @@ fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
     while i < args.len() {
         let a = &args[i];
         if let Some(key) = a.strip_prefix("--") {
-            if key == "all" || key == "adaptive" {
+            if key == "all" || key == "adaptive" || key == "exhaustive" {
                 flags.insert(key.to_string(), "true".to_string());
                 i += 1;
             } else {
@@ -72,6 +74,18 @@ fn policy_from(flags: &HashMap<String, String>) -> Result<Option<SchedPolicy>> {
                 .ok_or_else(|| anyhow!("unknown policy '{p}' (topo | critical-path | costly)"))
         })
         .transpose()
+}
+
+/// `--jobs` flag: sweep worker threads for the tuner and the sim
+/// backend's table pre-simulation (defaults to the host parallelism,
+/// capped; results are bit-identical at any value).
+fn jobs_from(flags: &HashMap<String, String>) -> Result<usize> {
+    Ok(flags
+        .get("jobs")
+        .map(|j| j.parse::<usize>())
+        .transpose()?
+        .unwrap_or_else(tuner::default_jobs)
+        .max(1))
 }
 
 fn run() -> Result<()> {
@@ -108,6 +122,8 @@ fn print_help() {
          commands:\n\
            models                         list the model zoo with width analysis\n\
            tune     --model M [--platform P] [--batch N] [--policy POL]\n\
+                    [--exhaustive]         also run the global-optimum sweep\n\
+                    [--jobs N]             sweep worker threads (default: host cores, ≤8)\n\
            simulate --model M [--pools/--mkl/--intra N] [--policy POL] [--platform P]\n\
            figures  --fig N | --table N | --all\n\
            ablations                      per-feature degradation table
@@ -116,11 +132,13 @@ fn print_help() {
                     [--kinds A,B]          core-aware lane plan (sim only)\n\
                     [--adaptive]           online re-tuning over a load shift\n\
                     [--policy POL]         pin the dispatch policy (sim only)\n\
+                    [--jobs N]             parallel latency-table pre-simulation\n\
                     [--artifacts DIR]      (pjrt backend only)\n\
            check    --artifacts DIR\n\
          platforms: small | large | large.2 (default large.2)\n\
          policies:  topo | critical-path | costly\n\
-                    (tune/serve default: the tuner's width rule; simulate default: topo)"
+                    (tune/serve default: the tuner's width rule; simulate default: topo)\n\
+         sweeps are deterministic: any --jobs value returns bit-identical results"
     );
 }
 
@@ -173,6 +191,27 @@ fn cmd_tune(flags: &HashMap<String, String>) -> Result<()> {
             b.name(),
             r.latency_s * 1e3,
             r.latency_s / guided.latency_s
+        );
+    }
+    if flags.contains_key("exhaustive") {
+        let jobs = jobs_from(flags)?;
+        let t0 = std::time::Instant::now();
+        let opt = tuner::exhaustive_search_with(&g, &platform, &SweepOptions::with_jobs(jobs));
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "  global optimum (exhaustive, {} unique points, jobs={jobs}, {:.2}s, {:.0} points/s):",
+            opt.evaluated,
+            wall,
+            opt.evaluated as f64 / wall.max(1e-9)
+        );
+        println!(
+            "    pools={} mkl={} intra={} policy={} → {:.3} ms (guideline {:.3}x of optimum)",
+            opt.best.inter_op_pools,
+            opt.best.mkl_threads,
+            opt.best.intra_op_threads,
+            opt.best.sched_policy.name(),
+            opt.best_latency_s * 1e3,
+            guided.latency_s / opt.best_latency_s
         );
     }
     Ok(())
@@ -280,6 +319,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             // tuned thread knobs, so --policy A/Bs isolate dispatch order
             let mut sc = SimBackendConfig::new(platform, &[kind]);
             sc.policy = policy;
+            sc.jobs = jobs_from(flags)?;
             (CoordinatorConfig::sim_with(sc), kind.to_string())
         }
         "pjrt" => {
@@ -330,21 +370,34 @@ fn cmd_serve_planned(
     }
     let kind_refs: Vec<&str> = kinds.iter().map(String::as_str).collect();
 
+    let jobs = jobs_from(flags)?;
     let mut plan = LanePlan::guideline(&platform, &kind_refs)?;
     if let Some(pol) = policy_from(flags)? {
         plan = plan.with_policy(pol);
     }
     println!(
-        "starting coordinator: backend=sim kinds={} platform={} adaptive={adaptive}",
+        "starting coordinator: backend=sim kinds={} platform={} adaptive={adaptive} jobs={jobs}",
         kinds.join(","),
         platform.name
     );
     print_plan(&plan);
-    let cfg = CoordinatorConfig::sim(platform.clone(), &kind_refs).with_plan(plan);
+    // one memo-cache shared by the backend's lane tables and the online
+    // tuner's candidate scoring: a re-plan only simulates design points
+    // neither tier has seen
+    let cache = Arc::new(SimCache::new());
+    let mut sc = SimBackendConfig::new(platform.clone(), &kind_refs);
+    sc.jobs = jobs;
+    let factory = SimBackendFactory::with_cache(sc, Arc::clone(&cache));
+    let cfg = CoordinatorConfig::with_factory(Arc::new(factory)).with_plan(plan);
     let coord = Coordinator::start(cfg)?;
 
     let phases = MixPhase::ramp(&kinds[0], &kinds[1], 4, (n_requests / 4).max(8));
-    let mut tuner = OnlineTuner::new(platform, &kind_refs);
+    let mut tuner = OnlineTuner::with_config(
+        platform,
+        &kind_refs,
+        OnlineTunerConfig { jobs, ..OnlineTunerConfig::default() },
+    )
+    .with_cache(cache);
     let reports = loadgen::run_shift(
         &coord,
         &phases,

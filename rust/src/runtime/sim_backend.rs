@@ -16,9 +16,10 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::config::{CpuPlatform, FrameworkConfig, SchedPolicy};
 use crate::models;
-use crate::sched::{CoreAllocation, LaneAssignment};
-use crate::sim;
+use crate::sched::LaneAssignment;
+use crate::sim::{platform_fingerprint, SimCache};
 use crate::tuner;
+use crate::tuner::parallel::{default_jobs, par_map};
 
 use super::artifact::Tensor;
 use super::backend::{Backend, BackendFactory, Catalog, Execution, ItemShape, ModelSpec};
@@ -41,6 +42,11 @@ pub struct SimBackendConfig {
     /// (pinned or per-bucket tuned) — pins *only* the policy dimension,
     /// so `serve --policy` A/Bs don't conflate it with thread knobs.
     pub policy: Option<SchedPolicy>,
+    /// Sweep workers for latency-table pre-simulation (`--jobs`): the
+    /// (kind, bucket) grid fans out over this many threads, cutting the
+    /// serving cold-start (and `apply_plan` re-plan) latency. Results
+    /// are bit-identical at any value.
+    pub jobs: usize,
 }
 
 impl SimBackendConfig {
@@ -53,6 +59,7 @@ impl SimBackendConfig {
             buckets: vec![1, 2, 4, 8],
             framework: None,
             policy: None,
+            jobs: default_jobs(),
         }
     }
 
@@ -91,42 +98,66 @@ struct SimTables {
 impl SimTables {
     /// For every (kind, bucket) pair, build the zoo graph at that batch
     /// size, pick the framework config (tuner guideline unless pinned),
-    /// and pre-simulate the batch latency.
-    fn build(cfg: &SimBackendConfig) -> Result<Self> {
+    /// and pre-simulate the batch latency — fanned over `cfg.jobs` sweep
+    /// workers through the factory's memo-cache, so identical design
+    /// points across lanes/re-plans simulate once. The table contents
+    /// are a pure function of the config (any `jobs`, warm or cold
+    /// cache: same bits).
+    fn build(cfg: &SimBackendConfig, cache: &Arc<SimCache>) -> Result<Self> {
         let buckets = cfg.normalized_buckets()?;
-        let mut latency = HashMap::new();
         let mut shapes = HashMap::new();
+        let mut grid: Vec<(String, usize)> = Vec::new();
         for kind in &cfg.kinds {
             shapes.insert(kind.clone(), item_shape_for(kind));
             for &bucket in &buckets {
-                let g = models::build(kind, bucket)
+                grid.push((kind.clone(), bucket));
+            }
+        }
+        let platform = Arc::new(cfg.platform.clone());
+        let framework = cfg.framework.clone();
+        let policy = cfg.policy;
+        let cache = Arc::clone(cache);
+        let rows: Vec<Result<((String, usize), f64)>> =
+            par_map(cfg.jobs, grid, move |_, (kind, bucket)| {
+                let prep = cache
+                    .prepared(&kind, bucket)
                     .ok_or_else(|| anyhow!("sim backend: unknown model '{kind}'"))?;
-                let mut fw = match &cfg.framework {
+                let mut fw = match &framework {
                     Some(fw) => fw.clone(),
-                    None => tuner::tune(&g, &cfg.platform).config,
+                    None => tuner::tune(prep.graph(), &platform).config,
                 };
-                if let Some(p) = cfg.policy {
+                if let Some(p) = policy {
                     fw.sched_policy = p;
                 }
-                let report = sim::simulate(&g, &cfg.platform, &fw);
-                latency.insert((kind.clone(), bucket), report.latency_s);
-            }
+                let latency = cache.latency(&prep, &platform, &fw);
+                Ok(((kind, bucket), latency))
+            });
+        let mut latency = HashMap::new();
+        for row in rows {
+            let (key, lat) = row?;
+            latency.insert(key, lat);
         }
         Ok(SimTables { latency, shapes })
     }
 }
 
-/// Cache key for one core-aware lane table: the core slice, the hosted
-/// kinds, and the (possibly pinned) framework knobs.
-type LaneKey = (CoreAllocation, Vec<String>, Option<FrameworkConfig>);
+/// Cache key for one core-aware lane table: the *structural fingerprint*
+/// of the lane's restricted platform (its core-slice shape — two lanes
+/// at different first cores but the same shape share one table), the
+/// hosted kinds, and the (possibly pinned) framework knobs.
+type LaneKey = (u64, Vec<String>, Option<FrameworkConfig>);
 
 /// Factory minting [`SimBackend`] lane instances. The whole-machine
 /// latency table is simulated once on first use and shared across
 /// unassigned lanes; core-aware lanes (`create_on`) get tables simulated
-/// under *their allocation's* restricted platform, cached per assignment
-/// so a re-plan back to a previous split is free.
+/// under *their allocation's* restricted platform, cached per (shape,
+/// kinds, knobs) so same-shape siblings and re-plans back to a previous
+/// split are free. All table construction goes through one factory-wide
+/// [`SimCache`], so even distinct lane tables dedupe their overlapping
+/// design points — the `Coordinator::apply_plan` cold-start cut.
 pub struct SimBackendFactory {
     cfg: SimBackendConfig,
+    cache: Arc<SimCache>,
     tables: Mutex<Option<Arc<SimTables>>>,
     lane_tables: Mutex<HashMap<LaneKey, Arc<SimTables>>>,
 }
@@ -134,11 +165,26 @@ pub struct SimBackendFactory {
 impl SimBackendFactory {
     /// Wrap a config (validated lazily at `catalog`/`create` time).
     pub fn new(cfg: SimBackendConfig) -> Self {
+        Self::with_cache(cfg, Arc::new(SimCache::new()))
+    }
+
+    /// Wrap a config over an *injected* memo-cache, so table
+    /// construction dedupes against other tiers holding the same cache
+    /// (the CLI's `serve --adaptive` shares one cache between this
+    /// factory and the online tuner).
+    pub fn with_cache(cfg: SimBackendConfig, cache: Arc<SimCache>) -> Self {
         SimBackendFactory {
             cfg,
+            cache,
             tables: Mutex::new(None),
             lane_tables: Mutex::new(HashMap::new()),
         }
+    }
+
+    /// The factory-wide simulation memo-cache (hit/miss stats feed the
+    /// tuner bench and the lane-sharing tests).
+    pub fn cache(&self) -> &Arc<SimCache> {
+        &self.cache
     }
 
     fn tables(&self) -> Result<Arc<SimTables>> {
@@ -146,7 +192,7 @@ impl SimBackendFactory {
         if let Some(t) = guard.as_ref() {
             return Ok(Arc::clone(t));
         }
-        let t = Arc::new(SimTables::build(&self.cfg)?);
+        let t = Arc::new(SimTables::build(&self.cfg, &self.cache)?);
         *guard = Some(Arc::clone(&t));
         Ok(t)
     }
@@ -169,22 +215,32 @@ impl SimBackendFactory {
             );
         }
         let framework = assignment.framework.clone().or_else(|| self.cfg.framework.clone());
-        let key: LaneKey = (assignment.allocation, kinds.clone(), framework.clone());
-        if let Some(t) = self.lane_tables.lock().unwrap().get(&key) {
+        let slice = self
+            .cfg
+            .platform
+            .restrict(assignment.allocation.first_core, assignment.allocation.cores);
+        let key: LaneKey = (platform_fingerprint(&slice), kinds.clone(), framework.clone());
+        // hold the map lock across the build (like `tables()`): lanes
+        // spawn concurrently, and without this two same-shape siblings
+        // would both miss and re-simulate the whole table. The trade:
+        // different-shape lanes also serialize here — accepted, since
+        // each build fans out over `jobs` workers internally and plans
+        // rarely exceed a handful of shapes (a per-key in-flight map
+        // would restore cross-shape overlap if that changes)
+        let mut guard = self.lane_tables.lock().unwrap();
+        if let Some(t) = guard.get(&key) {
             return Ok(Arc::clone(t));
         }
         let sub = SimBackendConfig {
-            platform: self
-                .cfg
-                .platform
-                .restrict(assignment.allocation.first_core, assignment.allocation.cores),
+            platform: slice,
             kinds,
             buckets: self.cfg.buckets.clone(),
             framework,
             policy: self.cfg.policy,
+            jobs: self.cfg.jobs,
         };
-        let t = Arc::new(SimTables::build(&sub)?);
-        self.lane_tables.lock().unwrap().insert(key, Arc::clone(&t));
+        let t = Arc::new(SimTables::build(&sub, &self.cache)?);
+        guard.insert(key, Arc::clone(&t));
         Ok(t)
     }
 }
@@ -225,7 +281,8 @@ impl SimBackend {
     /// Build a standalone backend (lanes created through
     /// [`SimBackendFactory`] share one table instead).
     pub fn new(cfg: SimBackendConfig) -> Result<Self> {
-        Ok(SimBackend { tables: Arc::new(SimTables::build(&cfg)?) })
+        let cache = Arc::new(SimCache::new());
+        Ok(SimBackend { tables: Arc::new(SimTables::build(&cfg, &cache)?) })
     }
 
     /// Pre-simulated latency for a (kind, bucket) pair, if configured.
@@ -287,6 +344,7 @@ impl Backend for SimBackend {
 mod tests {
     use super::*;
     use crate::runtime::gen_input;
+    use crate::sched::CoreAllocation;
 
     fn backend(kinds: &[&str]) -> SimBackend {
         SimBackend::new(SimBackendConfig::new(CpuPlatform::large(), kinds)).unwrap()
@@ -414,6 +472,48 @@ mod tests {
         );
         // the lane only hosts its assigned kinds
         assert!(b1.execute("resnet50", 2, x).is_err());
+    }
+
+    #[test]
+    fn same_shape_lanes_share_tables_and_simulations() {
+        let f = SimBackendFactory::new(SimBackendConfig::new(CpuPlatform::large(), &["wide_deep"]));
+        let a = f.create_on(&assignment(0, 8, &["wide_deep"])).unwrap();
+        let misses = f.cache().misses();
+        assert!(misses > 0);
+        // a second lane with the same slice *shape* at a different first
+        // core reuses the whole table: zero new simulations
+        let b = f.create_on(&assignment(8, 8, &["wide_deep"])).unwrap();
+        assert_eq!(f.cache().misses(), misses);
+        let x = gen_input(2, &[2, 64], 1.0);
+        assert_eq!(
+            a.execute("wide_deep", 2, x.clone()).unwrap().model_time_s,
+            b.execute("wide_deep", 2, x).unwrap().model_time_s,
+        );
+        // a different shape must rebuild (and re-simulate what it needs)
+        let _ = f.create_on(&assignment(16, 4, &["wide_deep"])).unwrap();
+        assert!(f.cache().misses() > misses);
+    }
+
+    #[test]
+    fn tables_bit_identical_at_any_job_count() {
+        let mut latencies: Vec<Vec<u64>> = Vec::new();
+        for jobs in [1usize, 4] {
+            let mut cfg = SimBackendConfig::new(CpuPlatform::large(), &["wide_deep", "resnet50"]);
+            cfg.jobs = jobs;
+            let b = SimBackend::new(cfg).unwrap();
+            latencies.push(
+                ["wide_deep", "resnet50"]
+                    .iter()
+                    .flat_map(|k| {
+                        [1usize, 2, 4, 8]
+                            .iter()
+                            .map(|&bk| b.simulated_latency(k, bk).unwrap().to_bits())
+                            .collect::<Vec<_>>()
+                    })
+                    .collect(),
+            );
+        }
+        assert_eq!(latencies[0], latencies[1]);
     }
 
     #[test]

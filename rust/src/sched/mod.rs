@@ -13,4 +13,4 @@ pub mod ready;
 
 pub use lanes::{pick_lane, LaneAssignment, LaneGroup, LanePlan};
 pub use partition::{partition_pools, split_cores, CoreAllocation, PoolAssignment};
-pub use ready::ReadyQueue;
+pub use ready::{ConsumerCsr, ReadyQueue};

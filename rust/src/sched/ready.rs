@@ -4,6 +4,7 @@
 //! critical-path-first, or largest-op-first.
 
 use std::collections::BinaryHeap;
+use std::sync::Arc;
 
 use crate::config::SchedPolicy;
 use crate::graph::{self, Graph};
@@ -36,6 +37,41 @@ impl PartialOrd for ReadyEntry {
     }
 }
 
+/// Flat CSR consumer adjacency (offsets + one index array). Built once
+/// per graph and shared behind an `Arc` by every [`ReadyQueue`] derived
+/// from the same [`crate::sim::PreparedGraph`], so repeated simulations
+/// of one graph stop re-deriving the adjacency.
+#[derive(Debug)]
+pub struct ConsumerCsr {
+    offsets: Vec<u32>,
+    flat: Vec<u32>,
+}
+
+impl ConsumerCsr {
+    /// Derive the consumer lists of `graph`: count, prefix-sum, fill.
+    pub fn build(graph: &Graph) -> Self {
+        let n = graph.len();
+        let mut offsets = vec![0u32; n + 1];
+        for node in &graph.nodes {
+            for d in &node.deps {
+                offsets[d.0 + 1] += 1;
+            }
+        }
+        for i in 0..n {
+            offsets[i + 1] += offsets[i];
+        }
+        let mut cursor = offsets.clone();
+        let mut flat = vec![0u32; offsets[n] as usize];
+        for node in &graph.nodes {
+            for d in &node.deps {
+                flat[cursor[d.0] as usize] = node.id.0 as u32;
+                cursor[d.0] += 1;
+            }
+        }
+        ConsumerCsr { offsets, flat }
+    }
+}
+
 /// Dependency-tracking ready set over a graph.
 ///
 /// The consumer adjacency is stored as a flat CSR layout (offsets + one
@@ -43,16 +79,17 @@ impl PartialOrd for ReadyEntry {
 /// per simulated execution, and the exhaustive tuner runs hundreds of
 /// simulations per graph, so the n-small-allocations pattern showed up in
 /// the §Perf profile. The ready set itself is a binary heap — O(log n)
-/// insert/pop instead of the old sorted-`Vec`'s O(n) insertion.
+/// insert/pop instead of the old sorted-`Vec`'s O(n) insertion. The CSR
+/// and the priority table sit behind `Arc`s so a prepared graph can hand
+/// them out without recomputation.
 pub struct ReadyQueue {
     remaining: Vec<usize>,
-    cons_offsets: Vec<u32>,
-    cons_flat: Vec<u32>,
+    cons: Arc<ConsumerCsr>,
     /// max-heap of ready nodes: highest priority first, ties to lowest id
     ready: BinaryHeap<ReadyEntry>,
     /// per-node dispatch priority; `None` ⇒ uniform, i.e. pure
     /// topological id order (saves the rank sweep on the hot Topo path)
-    priority: Option<Vec<f64>>,
+    priority: Option<Arc<Vec<f64>>>,
     outstanding: usize,
 }
 
@@ -65,40 +102,33 @@ impl ReadyQueue {
 
     /// Build from a graph with the given dispatch policy.
     pub fn with_policy(graph: &Graph, policy: SchedPolicy) -> Self {
-        let n = graph.len();
         let priority = match policy {
             SchedPolicy::Topo => None,
-            SchedPolicy::CriticalPathFirst => Some(graph::upward_ranks(graph)),
-            SchedPolicy::CostlyFirst => Some(
+            SchedPolicy::CriticalPathFirst => Some(Arc::new(graph::upward_ranks(graph))),
+            SchedPolicy::CostlyFirst => Some(Arc::new(
                 graph.nodes.iter().map(|nd| graph::dispatch_weight(&nd.cost)).collect(),
-            ),
+            )),
         };
+        let remaining: Vec<usize> = graph.nodes.iter().map(|nd| nd.deps.len()).collect();
+        Self::from_parts(remaining, Arc::new(ConsumerCsr::build(graph)), priority)
+    }
+
+    /// Assemble from precomputed parts (the `PreparedGraph` fast path).
+    /// `remaining` carries each node's dependency count; `priority` must
+    /// be the same table [`Self::with_policy`] would derive for the
+    /// intended policy, so both constructors dispatch bit-identically.
+    pub fn from_parts(
+        remaining: Vec<usize>,
+        cons: Arc<ConsumerCsr>,
+        priority: Option<Arc<Vec<f64>>>,
+    ) -> Self {
         if let Some(p) = &priority {
             debug_assert!(p.iter().all(|x| x.is_finite()), "non-finite dispatch priority");
         }
-        let remaining: Vec<usize> = graph.nodes.iter().map(|nd| nd.deps.len()).collect();
-        // CSR consumer lists: count, prefix-sum, fill
-        let mut cons_offsets = vec![0u32; n + 1];
-        for node in &graph.nodes {
-            for d in &node.deps {
-                cons_offsets[d.0 + 1] += 1;
-            }
-        }
-        for i in 0..n {
-            cons_offsets[i + 1] += cons_offsets[i];
-        }
-        let mut cursor = cons_offsets.clone();
-        let mut cons_flat = vec![0u32; cons_offsets[n] as usize];
-        for node in &graph.nodes {
-            for d in &node.deps {
-                cons_flat[cursor[d.0] as usize] = node.id.0 as u32;
-                cursor[d.0] += 1;
-            }
-        }
+        let n = remaining.len();
         let mut q = ReadyQueue {
             remaining,
-            cons_offsets,
-            cons_flat,
+            cons,
             ready: BinaryHeap::with_capacity(16),
             priority,
             outstanding: n,
@@ -124,10 +154,10 @@ impl ReadyQueue {
     /// Mark a node complete, unlocking its consumers.
     pub fn complete(&mut self, node: usize) {
         self.outstanding -= 1;
-        let lo = self.cons_offsets[node] as usize;
-        let hi = self.cons_offsets[node + 1] as usize;
+        let lo = self.cons.offsets[node] as usize;
+        let hi = self.cons.offsets[node + 1] as usize;
         for i in lo..hi {
-            let c = self.cons_flat[i] as usize;
+            let c = self.cons.flat[i] as usize;
             self.remaining[c] -= 1;
             if self.remaining[c] == 0 {
                 self.push_ready(c);

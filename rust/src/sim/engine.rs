@@ -19,6 +19,7 @@ use crate::sched::{partition_pools, ReadyQueue};
 
 use super::breakdown::{Breakdown, Category, Segment};
 use super::opexec::{op_phases, Phase, PoolCtx, Span};
+use super::prepared::PreparedGraph;
 
 /// Result of simulating one graph execution.
 #[derive(Debug, Clone)]
@@ -75,12 +76,11 @@ impl Eq for Completion {}
 
 impl Ord for Completion {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        // min-heap on time (BinaryHeap is a max-heap)
-        other
-            .time
-            .partial_cmp(&self.time)
-            .unwrap()
-            .then_with(|| other.node.cmp(&self.node))
+        // min-heap on time (BinaryHeap is a max-heap); `total_cmp` keeps
+        // the order total even if a cost model ever produces a NaN
+        // latency, so a poisoned design point cannot panic the engine
+        // mid-sweep (NaNs sort after every real completion time)
+        other.time.total_cmp(&self.time).then_with(|| other.node.cmp(&self.node))
     }
 }
 
@@ -93,6 +93,36 @@ impl PartialOrd for Completion {
 /// Simulate with options.
 pub fn simulate_opts(
     graph: &Graph,
+    platform: &CpuPlatform,
+    cfg: &FrameworkConfig,
+    opts: &SimOptions,
+) -> SimReport {
+    let queue = ReadyQueue::with_policy(graph, cfg.sched_policy);
+    run_engine(graph, None, queue, platform, cfg, opts)
+}
+
+/// Simulate using a [`PreparedGraph`] — same engine, but the upward
+/// ranks, dispatch weights, consumer CSR and kernel-use flags come
+/// precomputed instead of being re-derived per call. Bit-identical to
+/// [`simulate_opts`] on the same inputs (the prepared tables are built by
+/// the same functions `ReadyQueue::with_policy` runs).
+pub fn simulate_prepared(
+    prep: &PreparedGraph,
+    platform: &CpuPlatform,
+    cfg: &FrameworkConfig,
+    opts: &SimOptions,
+) -> SimReport {
+    let queue = prep.ready_queue(cfg.sched_policy);
+    run_engine(prep.graph(), Some(prep.kernel_use()), queue, platform, cfg, opts)
+}
+
+/// The discrete-event loop shared by the direct and prepared entry
+/// points. `kernel_use` optionally carries precomputed per-node
+/// library-kernel flags (`None` falls back to the `OpKind` method).
+fn run_engine(
+    graph: &Graph,
+    kernel_use: Option<&[bool]>,
+    mut queue: ReadyQueue,
     platform: &CpuPlatform,
     cfg: &FrameworkConfig,
     opts: &SimOptions,
@@ -112,7 +142,6 @@ pub fn simulate_opts(
         .collect();
 
     let n = graph.len();
-    let mut queue = ReadyQueue::with_policy(graph, cfg.sched_policy);
     let mut free_pools: Vec<usize> = (0..pools).rev().collect();
     let mut heap: BinaryHeap<Completion> = BinaryHeap::new();
     let mut pool_free_at = vec![0.0f64; pools];
@@ -124,6 +153,8 @@ pub fn simulate_opts(
         vec![Vec::new(); if opts.record_timelines { platform.logical_cores() } else { 0 }];
     let mut upi_bytes = 0.0f64;
     let mut upi_peak: f64 = 0.0;
+    // per-slice scratch for the timeline slow path (reused across ops)
+    let mut tl_scratch: Vec<bool> = Vec::new();
 
     while done < n {
         // dispatch ready ops to free pools (policy-chosen priority)
@@ -142,6 +173,7 @@ pub fn simulate_opts(
             record(
                 &mut breakdown,
                 &mut timelines,
+                &mut tl_scratch,
                 opts.record_timelines,
                 platform,
                 cfg,
@@ -156,7 +188,10 @@ pub fn simulate_opts(
             // so the achieved rate is bytes over the op's whole duration,
             // capped at the link's effective ceiling — what the authors'
             // UPI counters reported)
-            if pool_ctxs[pool].spans_sockets && graph.nodes[node].kind.uses_library_kernel() {
+            let node_uses_kernel = kernel_use
+                .map(|k| k[node])
+                .unwrap_or_else(|| graph.nodes[node].kind.uses_library_kernel());
+            if pool_ctxs[pool].spans_sockets && node_uses_kernel {
                 let cost = &graph.nodes[node].cost;
                 upi_bytes += super::memory::upi_traffic_bytes(cost, platform);
                 // peak sampled link rate: panel re-streaming keeps the link
@@ -202,11 +237,15 @@ fn busy_time(pool_free_at: &[f64], pool: usize, latency: f64) -> f64 {
 /// Record one op's phases into the breakdown (and timelines if requested).
 /// `base`/`cpp` are the executing pool's *own* first physical core and
 /// core count (pool slices need not be identical — Fig. 3c's even split
-/// is just the common case).
+/// is just the common case). `scratch` is a reusable per-slice flag
+/// buffer for the timeline slow path: marking the active kernel-thread
+/// indices and scanning the flags is O(cores) per phase, where the old
+/// `active.contains(&c)` scan was O(cores²).
 #[allow(clippy::too_many_arguments)]
 fn record(
     breakdown: &mut Breakdown,
     timelines: &mut [Vec<Segment>],
+    scratch: &mut Vec<bool>,
     record_tl: bool,
     platform: &CpuPlatform,
     cfg: &FrameworkConfig,
@@ -217,6 +256,10 @@ fn record(
     node: usize,
 ) {
     let phys = platform.physical_cores();
+    if record_tl {
+        scratch.clear();
+        scratch.resize(cpp, false);
+    }
     let mut t = start;
     for ph in phases {
         // how many logical cores this phase occupies (no allocation on the
@@ -237,28 +280,41 @@ fn record(
             breakdown.add(Category::Barrier, ph.dur * kernel_waiters as f64);
         }
         if record_tl {
-            // slow path: materialise the active logical-core ids
-            let active: Vec<usize> = match ph.span {
-                Span::Main => vec![base],
-                Span::Kernel(k) => (0..k.min(cpp)).map(|i| base + i).collect(),
-                // intra threads are SMT partners: logical id = phys + core
-                Span::Intra(k) => (0..k.min(cpp)).map(|i| phys + base + i).collect(),
-            };
-            for &c in &active {
+            // slow path: mark active slots in the scratch flags (indices
+            // are kernel-thread offsets within the pool's slice) while
+            // pushing the active logical-core segments
+            for s in scratch.iter_mut() {
+                *s = false;
+            }
+            let push = |timelines: &mut [Vec<Segment>], c: usize, cat: Category| {
                 if c < timelines.len() {
-                    timelines[c].push(Segment { t0: t, t1: t + ph.dur, cat: ph.cat, op: node });
+                    timelines[c].push(Segment { t0: t, t1: t + ph.dur, cat, op: node });
+                }
+            };
+            match ph.span {
+                Span::Main => {
+                    scratch[0] = true;
+                    push(timelines, base, ph.cat);
+                }
+                Span::Kernel(k) => {
+                    for i in 0..k.min(cpp) {
+                        scratch[i] = true;
+                        push(timelines, base + i, ph.cat);
+                    }
+                }
+                // intra threads are SMT partners: logical id = phys + core
+                // (no kernel-side slot is active — every kernel thread of
+                // the slice waits at the barrier below)
+                Span::Intra(k) => {
+                    for i in 0..k.min(cpp) {
+                        push(timelines, phys + base + i, ph.cat);
+                    }
                 }
             }
             if cfg.mkl_threads > 1 {
-                for i in 0..cpp {
-                    let c = base + i;
-                    if !active.contains(&c) && c < timelines.len() {
-                        timelines[c].push(Segment {
-                            t0: t,
-                            t1: t + ph.dur,
-                            cat: Category::Barrier,
-                            op: node,
-                        });
+                for (i, &active) in scratch.iter().enumerate() {
+                    if !active {
+                        push(timelines, base + i, Category::Barrier);
                     }
                 }
             }
@@ -367,6 +423,38 @@ mod tests {
                 assert!(w[1].t0 >= w[0].t1 - 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn completion_order_survives_nan_times() {
+        // a NaN completion time must not panic the event heap
+        // (`total_cmp` keeps the order total); NaNs sort after every
+        // real time, so finite completions still drain first
+        let mut heap = BinaryHeap::new();
+        heap.push(Completion { time: f64::NAN, pool: 0, node: 0 });
+        heap.push(Completion { time: 1.0, pool: 1, node: 1 });
+        heap.push(Completion { time: 0.5, pool: 2, node: 2 });
+        assert_eq!(heap.pop().unwrap().node, 2);
+        assert_eq!(heap.pop().unwrap().node, 1);
+        assert!(heap.pop().unwrap().time.is_nan());
+    }
+
+    #[test]
+    fn barrier_timeline_marks_waiting_cores() {
+        // mkl=2 of the pool's 4 cores: waiting kernel threads must show
+        // Barrier segments (the scratch-flag slow path has to mirror the
+        // active span exactly)
+        let g = models::build("matmul_512", 0).unwrap();
+        let p = CpuPlatform::small();
+        let r = simulate_opts(&g, &p, &cfg(1, 2, 1), &SimOptions { record_timelines: true });
+        let barriers = r
+            .timelines
+            .iter()
+            .flatten()
+            .filter(|s| s.cat == Category::Barrier)
+            .count();
+        assert!(barriers > 0, "no Barrier segments recorded");
+        assert!(r.breakdown.get(Category::Barrier) > 0.0);
     }
 
     #[test]

@@ -6,12 +6,21 @@
 //! framework/library prep terms, thread-pool dispatch overheads, DRAM
 //! rooflines and the UPI link. It emits end-to-end latency plus the same
 //! per-core breakdowns/traces the authors collected with `perf`.
+//!
+//! [`prepared`] is the tuning-throughput layer on top: [`PreparedGraph`]
+//! precomputes the per-node invariants every simulation re-derives
+//! (upward ranks, dispatch weights, consumer CSR, kernel-use flags), and
+//! [`SimCache`] memoizes whole reports under a canonical fingerprint of
+//! (graph, platform, effective config) so repeated sweeps across the
+//! exhaustive/guideline/online/backend tiers dedupe to a single run.
 
 pub mod breakdown;
 pub mod constants;
 pub mod engine;
 pub mod memory;
 pub mod opexec;
+pub mod prepared;
 
 pub use breakdown::{Breakdown, Category, Segment};
-pub use engine::{simulate, simulate_opts, SimOptions, SimReport};
+pub use engine::{simulate, simulate_opts, simulate_prepared, SimOptions, SimReport};
+pub use prepared::{canonical_config, platform_fingerprint, PreparedGraph, SimCache};

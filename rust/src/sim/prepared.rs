@@ -1,0 +1,485 @@
+//! Prepared graphs + memoized simulation — the tuning-throughput layer.
+//!
+//! Every sweep in the stack (the exhaustive "global optimum" search of
+//! Fig. 18, the §8-guideline robustness tests, the online re-tuner's
+//! candidate scoring, and the sim backend's per-(kind, bucket) latency
+//! tables) bottoms out in `sim::simulate`, and until this module each
+//! call re-derived the same per-graph invariants and re-simulated
+//! design points other tiers had already scored. Two pieces fix that:
+//!
+//! * [`PreparedGraph`] precomputes what every simulation of one graph
+//!   shares — HEFT upward ranks, dispatch weights, the consumer CSR,
+//!   per-node kernel-use flags — plus a structural fingerprint, so the
+//!   engine's prepared entry point skips the per-call sweeps.
+//! * [`SimCache`] memoizes whole [`SimReport`]s under a canonical
+//!   fingerprint of (graph, platform, *effective* config).
+//!   [`canonical_config`] maps can't-differ settings to one
+//!   representative — any `sched_policy` collapses to `Topo` when only
+//!   one pool exists (a single pool serialises every dispatch order),
+//!   `parallelism` collapses on single-socket platforms (no socket to
+//!   span), and `pin_threads` never reaches the cost model — so
+//!   repeated `simulate` calls across tiers dedupe to a single run.
+//!
+//! Determinism: the engine is a pure function of (graph, platform,
+//! config), the cache always simulates the canonical representative,
+//! and every entry is immutable once stored — so cached, uncached and
+//! parallel sweeps return bit-identical reports (enforced by
+//! `rust/tests/tuner_parallel.rs`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::{CpuPlatform, FrameworkConfig, ParallelismMode, SchedPolicy};
+use crate::graph::{self, Graph};
+use crate::models;
+use crate::ops::{OpCost, OpKind};
+use crate::sched::{ConsumerCsr, ReadyQueue};
+
+use super::engine;
+use super::{SimOptions, SimReport};
+
+/// A graph with its per-simulation invariants precomputed: the tables
+/// [`crate::sched::ReadyQueue::with_policy`] would otherwise re-derive on
+/// every `simulate` call, shared behind `Arc`s instead.
+#[derive(Debug)]
+pub struct PreparedGraph {
+    graph: Graph,
+    /// Per-node dependency counts (the ready queue's initial state).
+    remaining0: Vec<usize>,
+    cons: Arc<ConsumerCsr>,
+    /// HEFT upward ranks (critical-path-first dispatch priorities).
+    ranks: Arc<Vec<f64>>,
+    /// Per-op dispatch weights (costliest-first priorities).
+    weights: Arc<Vec<f64>>,
+    /// Per-node `OpKind::uses_library_kernel` flags.
+    kernel_use: Vec<bool>,
+    fingerprint: u64,
+}
+
+impl PreparedGraph {
+    /// Prepare a borrowed graph (clones it; use [`Self::from_owned`] when
+    /// the caller can hand over ownership).
+    pub fn new(graph: &Graph) -> Self {
+        Self::from_owned(graph.clone())
+    }
+
+    /// Prepare an owned graph.
+    pub fn from_owned(graph: Graph) -> Self {
+        let ranks = Arc::new(graph::upward_ranks(&graph));
+        let weights =
+            Arc::new(graph.nodes.iter().map(|n| graph::dispatch_weight(&n.cost)).collect());
+        let kernel_use = graph.nodes.iter().map(|n| n.kind.uses_library_kernel()).collect();
+        let remaining0 = graph.nodes.iter().map(|n| n.deps.len()).collect();
+        let cons = Arc::new(ConsumerCsr::build(&graph));
+        let fingerprint = graph_fingerprint(&graph);
+        PreparedGraph { graph, remaining0, cons, ranks, weights, kernel_use, fingerprint }
+    }
+
+    /// The underlying graph.
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// Structural fingerprint (node kinds, costs and edges; names are
+    /// ignored — they never reach the cost model).
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// Precomputed per-node library-kernel flags.
+    pub fn kernel_use(&self) -> &[bool] {
+        &self.kernel_use
+    }
+
+    /// A ready queue for one simulated execution under `policy`, built
+    /// from the precomputed tables (bit-identical dispatch order to
+    /// `ReadyQueue::with_policy` on the same graph).
+    pub fn ready_queue(&self, policy: SchedPolicy) -> ReadyQueue {
+        let priority = match policy {
+            SchedPolicy::Topo => None,
+            SchedPolicy::CriticalPathFirst => Some(Arc::clone(&self.ranks)),
+            SchedPolicy::CostlyFirst => Some(Arc::clone(&self.weights)),
+        };
+        ReadyQueue::from_parts(self.remaining0.clone(), Arc::clone(&self.cons), priority)
+    }
+}
+
+/// The canonical representative of a config's simulate-equivalence
+/// class. Two configs mapping to the same canonical form produce the
+/// same simulation outcome (for the 1-pool policy collapse: the same
+/// multiset of serial op times, so equal up to floating-point
+/// summation order — a ≤1-ulp effect; the other collapses are exactly
+/// bit-identical), so the cache keys on it. Consequence: compare
+/// cached scores with cached scores — mixing a cached score of a
+/// *non-canonical* 1-pool config with a direct `simulate` of it may
+/// differ in the last ulp. Every subsystem tier routes consistently
+/// through the cache, and the exhaustive lattice and §8 guideline only
+/// emit canonical configs, where hit, miss and direct simulation agree
+/// bit-for-bit:
+///
+/// * one *effective* pool (`inter_op_pools == 1`, or a 1-core machine)
+///   serialises all dispatch, so every `sched_policy` collapses to
+///   `Topo` — the same pruning the exhaustive lattice applies;
+/// * a single-socket platform has no socket boundary to span, so
+///   `parallelism` collapses to `DataParallel`;
+/// * `pin_threads` is config-file metadata the cost model never reads.
+pub fn canonical_config(platform: &CpuPlatform, cfg: &FrameworkConfig) -> FrameworkConfig {
+    let mut c = cfg.clone();
+    if c.inter_op_pools == 1 || platform.physical_cores() == 1 {
+        c.sched_policy = SchedPolicy::Topo;
+    }
+    if platform.sockets == 1 {
+        c.parallelism = ParallelismMode::DataParallel;
+    }
+    c.pin_threads = true;
+    c
+}
+
+/// Structural fingerprint of a platform: every field the simulator's
+/// cost model reads, and *not* the display name — so two core slices
+/// with the same shape (e.g. `large[0+8]` and `large[8+8]`) share cache
+/// entries and serving lane tables.
+pub fn platform_fingerprint(p: &CpuPlatform) -> u64 {
+    let mut h = Fnv::new();
+    h.u64(p.sockets as u64);
+    h.u64(p.cores_per_socket as u64);
+    h.u64(p.smt as u64);
+    h.f64(p.freq_ghz);
+    h.f64(p.peak_gflops_per_core);
+    h.f64(p.llc_mib_per_socket);
+    h.f64(p.mem_bw_gbps);
+    h.f64(p.upi_gbps);
+    h.finish()
+}
+
+/// Memoized simulation reports + prepared zoo graphs, shared across
+/// threads (a sweep executor's workers all consult one cache) and across
+/// tiers (exhaustive search, guideline scoring, online re-tuning and
+/// backend table construction dedupe against each other).
+#[derive(Debug)]
+pub struct SimCache {
+    reports: Mutex<HashMap<(u64, u64, FrameworkConfig), Arc<SimReport>>>,
+    prepared: Mutex<HashMap<(String, usize), Arc<PreparedGraph>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    capacity: usize,
+}
+
+/// Default report capacity: a full `large.2` exhaustive lattice is
+/// ~1.5k points, so this holds dozens of model sweeps before recycling.
+const DEFAULT_CAPACITY: usize = 1 << 15;
+
+impl Default for SimCache {
+    fn default() -> Self {
+        Self::with_capacity(DEFAULT_CAPACITY)
+    }
+}
+
+impl SimCache {
+    /// Cache with the default capacity.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Cache holding at most `capacity` reports; reaching the bound
+    /// recycles the whole generation (simple, deterministic for any
+    /// insertion order, and sweeps re-warm in one pass).
+    pub fn with_capacity(capacity: usize) -> Self {
+        SimCache {
+            reports: Mutex::new(HashMap::new()),
+            prepared: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// The simulation report for (graph, platform, config), memoized
+    /// under the canonical fingerprint. On a miss the *canonical*
+    /// representative is simulated via the prepared fast path, so hit
+    /// and miss return bit-identical reports.
+    ///
+    /// The lock is not held while simulating, so concurrent workers
+    /// missing on the *same* key may each simulate it — a benign,
+    /// jobs-bounded duplication (entries are immutable and identical;
+    /// the last insert wins with the same bits) accepted over an
+    /// in-flight-wait protocol.
+    pub fn report(
+        &self,
+        prep: &PreparedGraph,
+        platform: &CpuPlatform,
+        cfg: &FrameworkConfig,
+    ) -> Arc<SimReport> {
+        let canonical = canonical_config(platform, cfg);
+        let key = (prep.fingerprint(), platform_fingerprint(platform), canonical);
+        if let Some(r) = self.reports.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(r);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let report =
+            Arc::new(engine::simulate_prepared(prep, platform, &key.2, &SimOptions::default()));
+        let mut guard = self.reports.lock().unwrap();
+        if guard.len() >= self.capacity {
+            guard.clear();
+        }
+        guard.insert(key, Arc::clone(&report));
+        report
+    }
+
+    /// Memoized batch latency (the quantity every sweep ranks on).
+    pub fn latency(
+        &self,
+        prep: &PreparedGraph,
+        platform: &CpuPlatform,
+        cfg: &FrameworkConfig,
+    ) -> f64 {
+        self.report(prep, platform, cfg).latency_s
+    }
+
+    /// The prepared graph for a model-zoo (kind, batch) pair, built once
+    /// and shared (`None` for unknown models).
+    pub fn prepared(&self, kind: &str, batch: usize) -> Option<Arc<PreparedGraph>> {
+        let key = (kind.to_string(), batch);
+        if let Some(p) = self.prepared.lock().unwrap().get(&key) {
+            return Some(Arc::clone(p));
+        }
+        let prep = Arc::new(PreparedGraph::from_owned(models::build(kind, batch)?));
+        let mut guard = self.prepared.lock().unwrap();
+        if guard.len() >= self.capacity {
+            guard.clear();
+        }
+        guard.insert(key, Arc::clone(&prep));
+        Some(prep)
+    }
+
+    /// Cache hits so far (report lookups answered without simulating).
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Cache misses so far (simulations actually run).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Number of distinct reports currently held.
+    pub fn entries(&self) -> usize {
+        self.reports.lock().unwrap().len()
+    }
+
+    /// Drop every memoized report and prepared graph (stats are kept).
+    pub fn clear(&self) {
+        self.reports.lock().unwrap().clear();
+        self.prepared.lock().unwrap().clear();
+    }
+}
+
+/// FNV-1a 64-bit — tiny, deterministic, dependency-free. Collisions are
+/// astronomically unlikely across the handful of graphs/platforms one
+/// process sweeps, and a collision only costs a wrong memo hit in a
+/// simulation (never unsafety).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn byte(&mut self, b: u8) {
+        self.0 ^= b as u64;
+        self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+    }
+
+    fn u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.byte(b);
+        }
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+fn hash_kind(h: &mut Fnv, kind: &OpKind) {
+    match *kind {
+        OpKind::MatMul { m, k, n } => {
+            h.byte(1);
+            h.u64(m as u64);
+            h.u64(k as u64);
+            h.u64(n as u64);
+        }
+        OpKind::Conv { batch, out_h, out_w, in_c, out_c, k_h, k_w } => {
+            h.byte(2);
+            for v in [batch, out_h, out_w, in_c, out_c, k_h, k_w] {
+                h.u64(v as u64);
+            }
+        }
+        OpKind::Embedding { vocab, dim, rows } => {
+            h.byte(3);
+            h.u64(vocab as u64);
+            h.u64(dim as u64);
+            h.u64(rows as u64);
+        }
+        OpKind::Elementwise { elems, .. } => {
+            h.byte(4);
+            h.u64(elems as u64);
+        }
+        OpKind::DataMovement { bytes, .. } => {
+            h.byte(5);
+            h.u64(bytes as u64);
+        }
+        OpKind::Pool { elems } => {
+            h.byte(6);
+            h.u64(elems as u64);
+        }
+        OpKind::Softmax { rows, cols } => {
+            h.byte(7);
+            h.u64(rows as u64);
+            h.u64(cols as u64);
+        }
+        OpKind::Gradient { fwd_flops, fwd_bytes } => {
+            h.byte(8);
+            h.f64(fwd_flops);
+            h.f64(fwd_bytes);
+        }
+        OpKind::WeightSum { params } => {
+            h.byte(9);
+            h.u64(params as u64);
+        }
+    }
+}
+
+fn hash_cost(h: &mut Fnv, c: &OpCost) {
+    h.f64(c.flops);
+    h.f64(c.input_bytes);
+    h.f64(c.output_bytes);
+    h.f64(c.prep_bytes);
+    h.f64(c.lib_prep_bytes);
+}
+
+/// Hash everything about a graph the simulator can observe: node count,
+/// per-node kind parameters, cost descriptors and dependency edges.
+fn graph_fingerprint(g: &Graph) -> u64 {
+    let mut h = Fnv::new();
+    h.u64(g.batch as u64);
+    h.u64(g.nodes.len() as u64);
+    for node in &g.nodes {
+        hash_kind(&mut h, &node.kind);
+        hash_cost(&mut h, &node.cost);
+        h.u64(node.deps.len() as u64);
+        for d in &node.deps {
+            h.u64(d.0 as u64);
+        }
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim;
+
+    #[test]
+    fn canonical_collapses_policy_at_one_pool() {
+        let p = CpuPlatform::large();
+        let mut cfg = FrameworkConfig::tuned_default();
+        cfg.sched_policy = SchedPolicy::CostlyFirst; // pools = 1
+        assert_eq!(canonical_config(&p, &cfg).sched_policy, SchedPolicy::Topo);
+        cfg.inter_op_pools = 2;
+        assert_eq!(canonical_config(&p, &cfg).sched_policy, SchedPolicy::CostlyFirst);
+    }
+
+    #[test]
+    fn canonical_collapses_parallelism_on_one_socket() {
+        let mut cfg = FrameworkConfig::tuned_default();
+        cfg.inter_op_pools = 4;
+        cfg.parallelism = ParallelismMode::ModelParallel;
+        let one = canonical_config(&CpuPlatform::large(), &cfg);
+        assert_eq!(one.parallelism, ParallelismMode::DataParallel);
+        let two = canonical_config(&CpuPlatform::large2(), &cfg);
+        assert_eq!(two.parallelism, ParallelismMode::ModelParallel);
+    }
+
+    #[test]
+    fn platform_fingerprint_ignores_name_only() {
+        let l = CpuPlatform::large();
+        let fp = platform_fingerprint;
+        // same shape, different first core ⇒ same fingerprint
+        assert_eq!(fp(&l.restrict(0, 8)), fp(&l.restrict(8, 8)));
+        // different shape ⇒ different fingerprint
+        assert_ne!(fp(&l.restrict(0, 8)), fp(&l.restrict(0, 12)));
+        assert_ne!(fp(&l), fp(&CpuPlatform::large2()));
+    }
+
+    #[test]
+    fn graph_fingerprints_distinguish_models() {
+        let a = PreparedGraph::new(&models::build("wide_deep", 8).unwrap());
+        let b = PreparedGraph::new(&models::build("wide_deep", 16).unwrap());
+        let c = PreparedGraph::new(&models::build("ncf", 8).unwrap());
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        let a2 = PreparedGraph::new(&models::build("wide_deep", 8).unwrap());
+        assert_eq!(a.fingerprint(), a2.fingerprint());
+    }
+
+    #[test]
+    fn cache_dedupes_equivalent_configs() {
+        // two policies at one pool are the same design point: one miss,
+        // then hits — and the same report bits either way
+        let cache = SimCache::new();
+        let prep = cache.prepared("wide_deep", 8).unwrap();
+        let p = CpuPlatform::large();
+        let mut cfg = FrameworkConfig::tuned_default();
+        cfg.mkl_threads = 8;
+        cfg.sched_policy = SchedPolicy::CostlyFirst;
+        let a = cache.latency(&prep, &p, &cfg);
+        cfg.sched_policy = SchedPolicy::CriticalPathFirst;
+        let b = cache.latency(&prep, &p, &cfg);
+        assert_eq!(a.to_bits(), b.to_bits());
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 1);
+    }
+
+    #[test]
+    fn cached_report_matches_direct_simulation() {
+        let cache = SimCache::new();
+        let prep = cache.prepared("ncf", 16).unwrap();
+        let p = CpuPlatform::large2();
+        let mut cfg = FrameworkConfig::tuned_default();
+        cfg.inter_op_pools = 4;
+        cfg.mkl_threads = 12;
+        cfg.intra_op_threads = 12;
+        cfg.sched_policy = SchedPolicy::CriticalPathFirst;
+        let direct = sim::simulate(prep.graph(), &p, &cfg);
+        let cached = cache.report(&prep, &p, &cfg);
+        assert_eq!(direct.latency_s.to_bits(), cached.latency_s.to_bits());
+        assert_eq!(direct.upi_bytes.to_bits(), cached.upi_bytes.to_bits());
+        assert_eq!(direct.gflops.to_bits(), cached.gflops.to_bits());
+    }
+
+    #[test]
+    fn capacity_bound_recycles() {
+        let cache = SimCache::with_capacity(2);
+        let prep = cache.prepared("wide_deep", 8).unwrap();
+        let p = CpuPlatform::small();
+        for pools in 1..=3usize {
+            let mut cfg = FrameworkConfig::tuned_default();
+            cfg.inter_op_pools = pools;
+            cache.latency(&prep, &p, &cfg);
+        }
+        assert!(cache.entries() <= 2, "entries={}", cache.entries());
+        assert_eq!(cache.misses(), 3);
+    }
+
+    #[test]
+    fn unknown_zoo_model_is_none() {
+        assert!(SimCache::new().prepared("bert", 8).is_none());
+    }
+}

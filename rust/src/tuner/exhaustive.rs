@@ -8,10 +8,23 @@
 //! wherever it can matter — with a single pool every policy yields the
 //! same serial schedule, so only `Topo` is evaluated there. This is what
 //! the guideline is supposed to match with *one* prediction.
+//!
+//! The sweep itself runs through the tuning-throughput subsystem:
+//! [`lattice`] enumerates the deduplicated canonical design points,
+//! [`exhaustive_search_with`] fans them over a
+//! [`crate::tuner::parallel::par_map`] worker pool and scores each via
+//! the shared [`crate::sim::SimCache`]. Reduction is index-ordered with
+//! a strict `<`, so ties keep the lowest lattice point and the result is
+//! bit-identical to the serial uncached loop at any `--jobs` value.
+
+use std::collections::HashSet;
+use std::sync::Arc;
 
 use crate::config::{CpuPlatform, FrameworkConfig, OperatorImpl, SchedPolicy};
 use crate::graph::Graph;
-use crate::sim;
+use crate::sim::{self, PreparedGraph};
+
+use super::parallel::{par_map, SweepOptions};
 
 /// Search outcome.
 #[derive(Debug, Clone)]
@@ -20,7 +33,9 @@ pub struct SearchResult {
     pub best: FrameworkConfig,
     /// Its simulated latency.
     pub best_latency_s: f64,
-    /// Number of design points simulated.
+    /// Number of *unique* design points in the swept lattice (identical
+    /// canonical configs are deduplicated before evaluation, so this
+    /// counts distinct simulations regardless of caching or `--jobs`).
     pub evaluated: usize,
 }
 
@@ -47,10 +62,14 @@ fn thread_candidates(platform: &CpuPlatform, pools: usize) -> Vec<usize> {
     v
 }
 
-/// Sweep the lattice and return the latency-optimal setting.
-pub fn exhaustive_search(graph: &Graph, platform: &CpuPlatform) -> SearchResult {
-    let mut best: Option<(FrameworkConfig, f64)> = None;
-    let mut evaluated = 0usize;
+/// The feasible design lattice for a platform, in sweep order (pools,
+/// then MKL threads, then intra-op threads, then policy), deduplicated:
+/// every point is its own [`sim::canonical_config`] representative and
+/// appears exactly once, so candidate collisions (e.g. `2*fair == phys`)
+/// and can't-differ configs are never simulated twice.
+pub fn lattice(platform: &CpuPlatform) -> Vec<FrameworkConfig> {
+    let mut seen: HashSet<FrameworkConfig> = HashSet::new();
+    let mut out = Vec::new();
     for pools in pool_candidates(platform) {
         // one pool serialises everything: dispatch order cannot change the
         // makespan, so sweeping policies there would just re-measure Topo
@@ -70,13 +89,46 @@ pub fn exhaustive_search(graph: &Graph, platform: &CpuPlatform) -> SearchResult 
                     if cfg.validate(platform).is_err() {
                         continue;
                     }
-                    let lat = sim::simulate(graph, platform, &cfg).latency_s;
-                    evaluated += 1;
-                    if best.as_ref().map_or(true, |(_, b)| lat < *b) {
-                        best = Some((cfg, lat));
+                    let canonical = sim::canonical_config(platform, &cfg);
+                    if seen.insert(canonical.clone()) {
+                        out.push(canonical);
                     }
                 }
             }
+        }
+    }
+    out
+}
+
+/// Sweep the lattice and return the latency-optimal setting, with the
+/// default sweep options (parallel workers, fresh memo-cache).
+pub fn exhaustive_search(graph: &Graph, platform: &CpuPlatform) -> SearchResult {
+    exhaustive_search_with(graph, platform, &SweepOptions::default())
+}
+
+/// Sweep the lattice under explicit [`SweepOptions`]. Scoring fans out
+/// over `opts.jobs` workers through `opts.cache`; the reduction is a
+/// serial index-ordered scan with strict `<`, so the chosen point, its
+/// latency bits and the unique-point count are identical to the serial
+/// uncached sweep.
+pub fn exhaustive_search_with(
+    graph: &Graph,
+    platform: &CpuPlatform,
+    opts: &SweepOptions,
+) -> SearchResult {
+    let points = lattice(platform);
+    let evaluated = points.len();
+    let prep = Arc::new(PreparedGraph::new(graph));
+    let plat = Arc::new(platform.clone());
+    let cache = Arc::clone(&opts.cache);
+    let scored: Vec<(FrameworkConfig, f64)> = par_map(opts.jobs, points, move |_, cfg| {
+        let lat = cache.latency(&prep, &plat, &cfg);
+        (cfg, lat)
+    });
+    let mut best: Option<(FrameworkConfig, f64)> = None;
+    for (cfg, lat) in scored {
+        if best.as_ref().map_or(true, |(_, b)| lat < *b) {
+            best = Some((cfg, lat));
         }
     }
     let (best, best_latency_s) = best.expect("non-empty lattice");
@@ -88,6 +140,24 @@ mod tests {
     use super::*;
     use crate::models;
     use crate::tuner::guidelines::tune;
+
+    #[test]
+    fn lattice_is_unique_and_canonical() {
+        // the dedup satellite: no design point may appear twice, and
+        // every point is its own canonical representative (pools == 1 ⇒
+        // Topo only)
+        for p in [CpuPlatform::small(), CpuPlatform::large(), CpuPlatform::large2()] {
+            let points = lattice(&p);
+            let set: std::collections::HashSet<_> = points.iter().cloned().collect();
+            assert_eq!(set.len(), points.len(), "{}", p.name);
+            for c in &points {
+                assert_eq!(*c, crate::sim::canonical_config(&p, c), "{}", p.name);
+                if c.inter_op_pools == 1 {
+                    assert_eq!(c.sched_policy, SchedPolicy::Topo, "{}", p.name);
+                }
+            }
+        }
+    }
 
     #[test]
     fn sweeps_a_substantial_lattice() {

@@ -12,13 +12,20 @@
 //! * [`online`] — the windowed re-tuner: §8 as the prior, sim-scored
 //!   candidate core splits and per-group policy flips, applied live by
 //!   the coordinator.
+//! * [`parallel`] — the sweep executor every tier above runs on: a
+//!   `par_map` over the repo's own Eigen-style thread pool plus the
+//!   shared [`crate::sim::SimCache`] memo, with deterministic
+//!   index-ordered reduction (results are bit-identical to the serial
+//!   uncached path at any `--jobs` value).
 
 pub mod baselines;
 pub mod exhaustive;
 pub mod guidelines;
 pub mod online;
+pub mod parallel;
 
 pub use baselines::{baseline_config, Baseline};
-pub use exhaustive::{exhaustive_search, SearchResult};
+pub use exhaustive::{exhaustive_search, exhaustive_search_with, lattice, SearchResult};
 pub use guidelines::tune;
 pub use online::{OnlineTuner, OnlineTunerConfig};
+pub use parallel::{default_jobs, par_map, SweepOptions};

@@ -8,23 +8,26 @@
 //! rate-proportional split with §8 knobs per slice as the prior, plus
 //! neighbors that shift a few cores between the hottest and coldest
 //! groups or flip one group's dispatch policy
-//! ([`crate::config::SchedPolicy`]) — scores every candidate with
-//! `sim::simulate` **under each
-//! group's allocated cores**, and returns a new plan only when the
-//! predicted win clears a hysteresis threshold (so the coordinator is
-//! not thrashed by noise). The coordinator applies accepted plans with
+//! ([`crate::config::SchedPolicy`]) — scores every candidate **under
+//! each group's allocated cores** (in parallel, through a memoizing
+//! [`crate::sim::SimCache`], so steady mixes and same-shape slices stop
+//! re-simulating), and returns a new plan only when the predicted win
+//! clears a hysteresis threshold (so the coordinator is not thrashed by
+//! noise). The coordinator applies accepted plans with
 //! `Coordinator::apply_plan`, which respawns lanes without dropping
 //! in-flight requests.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::config::{CpuPlatform, SchedPolicy};
 use crate::metrics::WindowSnapshot;
-use crate::models;
 use crate::sched::{LaneGroup, LanePlan};
-use crate::sim;
+use crate::sim::SimCache;
+
+use super::parallel::{default_jobs, par_map};
 
 /// Controller knobs.
 #[derive(Debug, Clone)]
@@ -40,6 +43,10 @@ pub struct OnlineTunerConfig {
     pub hysteresis: f64,
     /// Cores moved between groups when generating neighbor candidates.
     pub core_step: usize,
+    /// Sweep workers for candidate scoring (`--jobs`): each re-plan
+    /// scores its candidate plans in parallel, cutting the observe→apply
+    /// latency of the control loop.
+    pub jobs: usize,
 }
 
 impl Default for OnlineTunerConfig {
@@ -50,17 +57,22 @@ impl Default for OnlineTunerConfig {
             score_bucket: 8,
             hysteresis: 0.05,
             core_step: 2,
+            jobs: default_jobs(),
         }
     }
 }
 
 /// The closed-loop re-tuner: smoothed traffic state + candidate search.
+/// Scoring goes through a private [`SimCache`], so re-plans under a
+/// steady mix (and candidates sharing a slice shape) reuse earlier
+/// simulations instead of re-running them each window.
 #[derive(Debug)]
 pub struct OnlineTuner {
     platform: CpuPlatform,
     kinds: Vec<String>,
     cfg: OnlineTunerConfig,
     rates: HashMap<String, f64>,
+    cache: Arc<SimCache>,
 }
 
 impl OnlineTuner {
@@ -76,7 +88,17 @@ impl OnlineTuner {
             kinds: kinds.iter().map(|s| s.to_string()).collect(),
             cfg,
             rates: HashMap::new(),
+            cache: Arc::new(SimCache::new()),
         }
+    }
+
+    /// Score through a shared memo-cache instead of the private one —
+    /// hand the serving backend's factory cache here and candidate
+    /// scoring dedupes against the lane tables it already simulated
+    /// (and vice versa after an accepted re-plan).
+    pub fn with_cache(mut self, cache: Arc<SimCache>) -> Self {
+        self.cache = cache;
+        self
     }
 
     /// Smoothed traffic share per kind (sums to 1; equal shares before
@@ -115,42 +137,34 @@ impl OnlineTuner {
     /// Predicted per-item serving cost of a plan under the current mix:
     /// Σ_kind share × simulated batch latency on the *group's* core
     /// slice / bucket. Infinite when the plan fails to host a kind that
-    /// has traffic.
+    /// has traffic. Memoized through the tuner's [`SimCache`].
     pub fn score(&self, plan: &LanePlan) -> f64 {
-        let bucket = self.cfg.score_bucket.max(1);
-        let mut total = 0.0;
-        for (kind, share) in self.mix() {
-            if share <= 0.0 {
-                continue;
-            }
-            let Some(group) = plan.group_for(&kind) else {
-                return f64::INFINITY;
-            };
-            let Some(graph) = models::build(&kind, bucket) else {
-                return f64::INFINITY;
-            };
-            let slice = plan
-                .platform
-                .restrict(group.allocation.first_core, group.allocation.cores);
-            let latency = sim::simulate(&graph, &slice, &group.framework).latency_s;
-            total += share * latency / bucket as f64;
-        }
-        total
+        score_plan(&self.cache, &self.mix(), self.cfg.score_bucket.max(1), plan)
     }
 
     /// Propose a better plan for the observed mix, or `None` when the
     /// current plan is within the hysteresis band of the best candidate.
+    /// Candidates are scored in parallel (`cfg.jobs` workers); the
+    /// reduction scans them in candidate order with a strict `<`, so the
+    /// proposal is identical to the serial path at any worker count.
     pub fn propose(&self, current: &LanePlan) -> Result<Option<LanePlan>> {
         let proportional = LanePlan::for_mix(&self.platform, &self.mix())?;
         let mut candidates = self.neighbors(&proportional);
         candidates.push(proportional);
         let current_score = self.score(current);
+        let mix = Arc::new(self.mix());
+        let bucket = self.cfg.score_bucket.max(1);
+        let cache = Arc::clone(&self.cache);
+        let scored: Vec<Option<(f64, LanePlan)>> =
+            par_map(self.cfg.jobs, candidates, move |_, c| {
+                if c.validate().is_err() {
+                    return None;
+                }
+                let s = score_plan(&cache, &mix, bucket, &c);
+                Some((s, c))
+            });
         let mut best: Option<(f64, LanePlan)> = None;
-        for c in candidates {
-            if c.validate().is_err() {
-                continue;
-            }
-            let s = self.score(&c);
+        for (s, c) in scored.into_iter().flatten() {
             if best.as_ref().map_or(true, |(bs, _)| s < *bs) {
                 best = Some((s, c));
             }
@@ -223,6 +237,31 @@ impl OnlineTuner {
         }
         out
     }
+}
+
+/// The scoring kernel shared by [`OnlineTuner::score`] and the parallel
+/// candidate sweep: Σ share × memoized batch latency on the group's
+/// slice / bucket. Slices with the same shape hit the same cache entry
+/// ([`crate::sim::platform_fingerprint`] ignores core positions).
+fn score_plan(cache: &SimCache, mix: &[(String, f64)], bucket: usize, plan: &LanePlan) -> f64 {
+    let mut total = 0.0;
+    for (kind, share) in mix {
+        if *share <= 0.0 {
+            continue;
+        }
+        let Some(group) = plan.group_for(kind) else {
+            return f64::INFINITY;
+        };
+        let Some(prep) = cache.prepared(kind, bucket) else {
+            return f64::INFINITY;
+        };
+        let slice = plan
+            .platform
+            .restrict(group.allocation.first_core, group.allocation.cores);
+        let latency = cache.latency(&prep, &slice, &group.framework);
+        total += share * latency / bucket as f64;
+    }
+    total
 }
 
 #[cfg(test)]
@@ -334,6 +373,26 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn propose_identical_at_any_job_count() {
+        // the deterministic-reduction contract: candidate scoring over 1
+        // or 4 workers (and a warm vs cold cache) proposes the same plan
+        let platform = CpuPlatform::large2();
+        let initial = LanePlan::guideline(&platform, &[A, B]).unwrap();
+        let mut plans = Vec::new();
+        for jobs in [1usize, 4] {
+            let cfg = OnlineTunerConfig { jobs, ..OnlineTunerConfig::default() };
+            let mut t = OnlineTuner::with_config(platform.clone(), &[A, B], cfg);
+            t.observe(&window(8, 72));
+            let p = t.propose(&initial).unwrap().expect("strong shift re-plans");
+            // a second propose on the same tuner re-scores through a warm
+            // cache and must agree with itself
+            assert_eq!(t.propose(&initial).unwrap().as_ref(), Some(&p));
+            plans.push(p);
+        }
+        assert_eq!(plans[0], plans[1]);
     }
 
     #[test]

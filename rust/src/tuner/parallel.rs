@@ -1,0 +1,149 @@
+//! Parallel sweep executor — design-space sweeps over the repo's own
+//! thread pools.
+//!
+//! The paper's §6.2 pool designs (`libs::threadpool`) existed only as
+//! benchmark subjects until this module; the tuner — the system's
+//! hottest loop — now dogfoods the Eigen-style work-stealing pool to
+//! fan simulation sweeps across cores. [`par_map`] is the single
+//! primitive: run a closure over every item, return results in item
+//! order. Because reduction happens index-ordered on the caller's
+//! thread (lowest-lattice-point tie-break preserved), a parallel sweep
+//! is bit-identical to the serial loop it replaces at any `--jobs`
+//! value.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::libs::threadpool::{EigenPool, TaskPool};
+use crate::sim::SimCache;
+
+/// Default sweep worker count: the host's available parallelism, capped
+/// at 8 (sweep items are coarse simulations; beyond that the memo-cache
+/// lock and memory traffic eat the gain).
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(1, 8)
+}
+
+/// Knobs shared by every sweep entry point: worker count (`--jobs`) and
+/// the simulation memo-cache the workers consult. Cloning shares the
+/// cache.
+#[derive(Debug, Clone)]
+pub struct SweepOptions {
+    /// Sweep worker threads (1 = serial, no pool spawned).
+    pub jobs: usize,
+    /// Memoized-simulation cache; share one across sweeps to dedupe
+    /// design points between tuner tiers.
+    pub cache: Arc<SimCache>,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        SweepOptions { jobs: default_jobs(), cache: Arc::new(SimCache::new()) }
+    }
+}
+
+impl SweepOptions {
+    /// Explicit worker count, fresh cache.
+    pub fn with_jobs(jobs: usize) -> Self {
+        SweepOptions { jobs, ..Self::default() }
+    }
+
+    /// Explicit worker count over a shared cache.
+    pub fn shared(jobs: usize, cache: Arc<SimCache>) -> Self {
+        SweepOptions { jobs, cache }
+    }
+}
+
+/// Map `f` over `items` on up to `jobs` Eigen-pool workers, returning
+/// results in item order (`f` also receives the item index). With one
+/// job (or ≤ 1 item) this runs inline — no pool, no channel. Worker
+/// panics are re-raised on the calling thread.
+///
+/// The pool is spawned per call and joined on return: sweep items are
+/// simulations (micro- to milliseconds each), so the one-off thread
+/// spawn is noise next to the work it parallelises — and per-window
+/// callers like the online tuner amortise it over a whole serving
+/// window.
+pub fn par_map<T, R, F>(jobs: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send + 'static,
+    R: Send + 'static,
+    F: Fn(usize, T) -> R + Send + Sync + 'static,
+{
+    let n = items.len();
+    let jobs = jobs.clamp(1, n.max(1));
+    if jobs == 1 {
+        return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let pool = EigenPool::new(jobs);
+    let f = Arc::new(f);
+    // each worker reports (index, caught result); panics re-raise below
+    let (tx, rx) = mpsc::channel::<(usize, std::thread::Result<R>)>();
+    for (i, item) in items.into_iter().enumerate() {
+        let f = Arc::clone(&f);
+        let tx = tx.clone();
+        pool.execute(Box::new(move || {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i, item)));
+            let _ = tx.send((i, r));
+        }));
+    }
+    drop(tx);
+    let mut out: Vec<Option<R>> = std::iter::repeat_with(|| None).take(n).collect();
+    for (i, r) in rx {
+        match r {
+            Ok(v) => out[i] = Some(v),
+            Err(panic) => std::panic::resume_unwind(panic),
+        }
+    }
+    out.into_iter()
+        .map(|o| o.expect("par_map worker dropped a result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_item_order() {
+        for jobs in [1, 2, 4, 16] {
+            let items: Vec<usize> = (0..100).collect();
+            let out = par_map(jobs, items, |i, x| {
+                assert_eq!(i, x);
+                x * 2
+            });
+            assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn jobs_capped_by_items() {
+        // 8 jobs over 2 items must not spawn an 8-thread pool that never
+        // drains; just check completion + order
+        let out = par_map(8, vec![10usize, 20], |_, x| x + 1);
+        assert_eq!(out, vec![11, 21]);
+    }
+
+    #[test]
+    fn empty_input_is_fine() {
+        let out: Vec<usize> = par_map(4, Vec::<usize>::new(), |_, x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn worker_panic_propagates() {
+        let caught = std::panic::catch_unwind(|| {
+            par_map(4, (0..32).collect::<Vec<usize>>(), |_, x| {
+                assert!(x != 13, "boom");
+                x
+            })
+        });
+        assert!(caught.is_err());
+    }
+
+    #[test]
+    fn default_jobs_sane() {
+        let j = default_jobs();
+        assert!((1..=8).contains(&j));
+    }
+}

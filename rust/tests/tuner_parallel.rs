@@ -1,0 +1,167 @@
+//! Equivalence properties for the tuning-throughput subsystem: the
+//! parallel, memoized sweep executor must be **bit-identical** to the
+//! serial uncached path it replaced — same best config, same latency
+//! bits, same unique-point count — at any `--jobs` value, with a cold
+//! or warm cache, for the exhaustive tuner and the sim backend's
+//! latency tables alike.
+
+use std::sync::Arc;
+
+use parframe::config::{CpuPlatform, FrameworkConfig, SchedPolicy};
+use parframe::models;
+use parframe::runtime::{BackendFactory, SimBackendConfig, SimBackendFactory};
+use parframe::sched::LanePlan;
+use parframe::sim::{self, PreparedGraph, SimCache, SimOptions};
+use parframe::tuner::{exhaustive_search_with, lattice, OnlineTuner, SweepOptions};
+
+const ZOO: [&str; 3] = ["wide_deep", "ncf", "squeezenet"];
+
+fn platforms() -> [CpuPlatform; 2] {
+    [CpuPlatform::small(), CpuPlatform::large2()]
+}
+
+/// The reference implementation: the seed's serial, uncached sweep —
+/// plain `sim::simulate` over the lattice in order, strict `<` keeps
+/// the earliest point on ties.
+fn serial_uncached_sweep(
+    graph: &parframe::graph::Graph,
+    platform: &CpuPlatform,
+) -> (FrameworkConfig, f64, usize) {
+    let points = lattice(platform);
+    let mut best: Option<(FrameworkConfig, f64)> = None;
+    for cfg in &points {
+        let lat = sim::simulate(graph, platform, cfg).latency_s;
+        if best.as_ref().map_or(true, |(_, b)| lat < *b) {
+            best = Some((cfg.clone(), lat));
+        }
+    }
+    let (cfg, lat) = best.expect("non-empty lattice");
+    (cfg, lat, points.len())
+}
+
+#[test]
+fn parallel_cached_sweep_bit_identical_to_serial_uncached() {
+    for platform in platforms() {
+        for name in ZOO {
+            let g = models::build(name, models::canonical_batch(name)).unwrap();
+            let (ref_cfg, ref_lat, ref_points) = serial_uncached_sweep(&g, &platform);
+            let shared = Arc::new(SimCache::new());
+            for jobs in [1usize, 4] {
+                // cold private cache, then the shared (warming) cache:
+                // first pass simulates, later passes mostly hit — the
+                // result bits must never move
+                for cache in [Arc::new(SimCache::new()), Arc::clone(&shared)] {
+                    let r = exhaustive_search_with(
+                        &g,
+                        &platform,
+                        &SweepOptions::shared(jobs, cache),
+                    );
+                    let tag = format!("{name}/{}/jobs={jobs}", platform.name);
+                    assert_eq!(r.best, ref_cfg, "{tag}: best config diverged");
+                    assert_eq!(
+                        r.best_latency_s.to_bits(),
+                        ref_lat.to_bits(),
+                        "{tag}: latency bits diverged"
+                    );
+                    assert_eq!(r.evaluated, ref_points, "{tag}: unique-point count diverged");
+                }
+            }
+            // by the final sweep the shared cache has seen every point
+            assert!(shared.hits() > 0, "{name}: warm cache never hit");
+        }
+    }
+}
+
+#[test]
+fn prepared_simulation_matches_direct() {
+    // the prepared fast path reuses precomputed ranks/weights/CSR/flags;
+    // it must reproduce the direct engine bit-for-bit for every policy
+    let p = CpuPlatform::large2();
+    for name in ["inception_v2", "transformer", "resnet50"] {
+        let g = models::build(name, 8).unwrap();
+        let prep = PreparedGraph::new(&g);
+        for policy in SchedPolicy::ALL {
+            let mut cfg = FrameworkConfig::tuned_default();
+            cfg.inter_op_pools = 3;
+            cfg.mkl_threads = 16;
+            cfg.intra_op_threads = 16;
+            cfg.sched_policy = policy;
+            let direct = sim::simulate(&g, &p, &cfg);
+            let via = sim::simulate_prepared(&prep, &p, &cfg, &SimOptions::default());
+            let tag = format!("{name}/{policy:?}");
+            assert_eq!(direct.latency_s.to_bits(), via.latency_s.to_bits(), "{tag}");
+            assert_eq!(direct.upi_bytes.to_bits(), via.upi_bytes.to_bits(), "{tag}");
+            assert_eq!(direct.upi_peak_bps.to_bits(), via.upi_peak_bps.to_bits(), "{tag}");
+            assert_eq!(direct.gflops.to_bits(), via.gflops.to_bits(), "{tag}");
+        }
+    }
+}
+
+#[test]
+fn backend_tables_bit_identical_across_jobs_and_cache() {
+    // SimBackend latency-table construction: per-bucket tuned and
+    // policy-pinned variants, jobs=1 vs jobs=4, fresh backend each time
+    // (i.e. cold caches) — every (kind, bucket) latency must match bits
+    let kinds = ["wide_deep", "transformer"];
+    for policy in [None, Some(SchedPolicy::Topo)] {
+        let table = |jobs: usize| -> Vec<u64> {
+            let mut cfg = SimBackendConfig::new(CpuPlatform::large2(), &kinds);
+            cfg.jobs = jobs;
+            cfg.policy = policy;
+            let b = parframe::runtime::SimBackend::new(cfg).unwrap();
+            kinds
+                .iter()
+                .flat_map(|k| {
+                    [1usize, 2, 4, 8]
+                        .iter()
+                        .map(|&bk| b.simulated_latency(k, bk).unwrap().to_bits())
+                        .collect::<Vec<_>>()
+                })
+                .collect()
+        };
+        let serial = table(1);
+        let parallel = table(4);
+        assert_eq!(serial, parallel, "policy={policy:?}");
+    }
+}
+
+#[test]
+fn online_and_backend_tiers_share_an_injected_cache() {
+    // the `serve --adaptive` wiring: the backend factory and the online
+    // tuner hold ONE cache, so scoring the live plan at a bucket the
+    // lane tables already simulated is pure cache hits — no re-plan
+    // cold-start re-simulation
+    let platform = CpuPlatform::large2();
+    let kinds = ["wide_deep", "resnet50"];
+    let plan = LanePlan::guideline(&platform, &kinds).unwrap();
+    let cache = Arc::new(SimCache::new());
+    let factory = SimBackendFactory::with_cache(
+        SimBackendConfig::new(platform.clone(), &kinds),
+        Arc::clone(&cache),
+    );
+    for a in plan.lane_assignments() {
+        factory.create_on(&a).unwrap();
+    }
+    let misses = cache.misses();
+    assert!(misses > 0);
+    let tuner = OnlineTuner::new(platform, &kinds).with_cache(Arc::clone(&cache));
+    let score = tuner.score(&plan);
+    assert!(score.is_finite() && score > 0.0);
+    assert_eq!(cache.misses(), misses, "cross-tier score re-simulated cached points");
+}
+
+#[test]
+fn cross_tier_dedupe_through_a_shared_cache() {
+    // the same design points scored by two tiers through one cache run
+    // once: a second identical sweep is pure hits
+    let g = models::build("ncf", models::canonical_batch("ncf")).unwrap();
+    let p = CpuPlatform::small();
+    let cache = Arc::new(SimCache::new());
+    let first = exhaustive_search_with(&g, &p, &SweepOptions::shared(2, Arc::clone(&cache)));
+    let misses_after_first = cache.misses();
+    assert_eq!(misses_after_first as usize, first.evaluated);
+    let second = exhaustive_search_with(&g, &p, &SweepOptions::shared(4, Arc::clone(&cache)));
+    assert_eq!(cache.misses(), misses_after_first, "re-sweep must be pure cache hits");
+    assert_eq!(first.best, second.best);
+    assert_eq!(first.best_latency_s.to_bits(), second.best_latency_s.to_bits());
+}
