@@ -1,48 +1,62 @@
-//! Quickstart: the 60-second tour of parframe's public API.
+//! Quickstart: the 60-second tour of the `parframe::api` facade.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! 1. Build a model graph from the zoo and analyse its width.
-//! 2. Tune framework knobs with the paper's guideline.
-//! 3. Simulate it against the recommended baselines.
-//! 4. If AOT artifacts exist, run real numerics through PJRT.
+//! 1. Open a [`Session`] on a platform and describe a [`Workload`].
+//! 2. Tune it with the paper's §8 guideline → a serializable [`Plan`].
+//! 3. Compare against the published baseline recommendations.
+//! 4. Round-trip the plan through JSON — the tune-once/serve-many artifact.
+//! 5. If AOT artifacts exist, run real numerics through PJRT.
 
-use parframe::config::CpuPlatform;
-use parframe::graph::analyze_width;
-use parframe::models;
+use parframe::api::{Plan, Session, Workload};
 use parframe::runtime::ModelRuntime;
-use parframe::sim;
-use parframe::tuner;
+use parframe::tuner::Baseline;
+use parframe::PallasResult;
 
-fn main() -> anyhow::Result<()> {
-    // 1. a model graph
-    let platform = CpuPlatform::large2();
-    let graph = models::build("wide_deep", 16).expect("model in zoo");
-    let width = analyze_width(&graph);
-    println!("wide_deep: {} ops, {} heavy, avg width {}", graph.len(), width.heavy_ops, width.avg_width);
+fn main() -> PallasResult<()> {
+    // 1. a session (owns the platform + simulation cache) and a workload
+    let session = Session::builder().platform_named("large.2")?.build();
+    let workload = Workload::single("wide_deep")?;
 
     // 2. tune (paper §8: pools = avg width, threads = cores / pools;
     //    wide graphs also get critical-path-first dispatch)
-    let tuned = tuner::tune(&graph, &platform);
+    let plan = session.tune(&workload)?;
+    let e = &plan.entries[0];
     println!(
-        "guideline setting: {} pools × ({} MKL + {} intra-op) threads, {} dispatch",
-        tuned.config.inter_op_pools,
-        tuned.config.mkl_threads,
-        tuned.config.intra_op_threads,
-        tuned.config.sched_policy.name()
+        "guideline setting for {}: {} pools × ({} MKL + {} intra-op) threads, {} dispatch",
+        e.kind,
+        e.config.inter_op_pools,
+        e.config.mkl_threads,
+        e.config.intra_op_threads,
+        e.config.sched_policy.name()
     );
+    println!("simulated latency: {:.3} ms", e.predicted_latency_s * 1e3);
 
-    // 3. simulate vs the published recommendations
-    let ours = sim::simulate(&graph, &platform, &tuned.config);
-    println!("simulated latency: {:.3} ms", ours.latency_s * 1e3);
-    for b in tuner::Baseline::ALL {
-        let r = sim::simulate(&graph, &platform, &tuner::baseline_config(b, &platform));
-        println!("  {:<26} {:>8.3} ms ({:.2}x ours)", b.name(), r.latency_s * 1e3, r.latency_s / ours.latency_s);
+    // 3. versus the published recommendations
+    for b in Baseline::ALL {
+        let r = session.tune_baseline(&workload, b)?;
+        let lat = r.entries[0].predicted_latency_s;
+        println!(
+            "  {:<26} {:>8.3} ms ({:.2}x ours)",
+            b.name(),
+            lat * 1e3,
+            lat / e.predicted_latency_s
+        );
     }
 
-    // 4. real numerics (build-time artifacts, PJRT CPU)
+    // 4. the plan is an artifact: JSON round-trip is bit-identical, so
+    //    `tune --emit-plan` in one process serves unchanged in another
+    let restored = Plan::from_json(&plan.to_json())?;
+    assert_eq!(restored, plan);
+    println!(
+        "plan round-trips through JSON ({} bytes, tier {})",
+        plan.to_json().len(),
+        plan.tier.name()
+    );
+
+    // 5. real numerics (build-time artifacts, PJRT CPU)
     let dir = std::path::Path::new("artifacts");
     if dir.join("manifest.json").exists() {
         let rt = ModelRuntime::load_some(dir, |e| e.name == "mlp_b1")?;

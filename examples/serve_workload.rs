@@ -1,7 +1,8 @@
 //! END-TO-END driver (DESIGN.md §Experiment index, row "E2E"): serve a
 //! workload through the full three-layer stack and report the
 //! latency/throughput table — with **zero external artifacts**, on the
-//! simulation backend.
+//! simulation backend, driven entirely through the `parframe::api`
+//! facade.
 //!
 //! Path exercised: seeded load generator (closed- and open-loop) → router
 //! → dynamic batcher (bucketed batching, max-wait) → worker lanes
@@ -17,23 +18,15 @@
 //! `CoordinatorConfig::pjrt("artifacts", &["mlp"])` to drive the same
 //! harness over PJRT.
 
-use std::time::Duration;
+use parframe::api::{ServeHandle, Session, Workload};
+use parframe::coordinator::{loadgen, LoadgenConfig, MixPhase, MixReport};
+use parframe::tuner::OnlineTunerConfig;
+use parframe::{PallasError, PallasResult};
 
-use parframe::config::CpuPlatform;
-use parframe::coordinator::{
-    loadgen, BatchPolicy, Coordinator, CoordinatorConfig, LoadgenConfig, MixPhase, MixReport,
-};
-use parframe::sched::LanePlan;
-use parframe::tuner::{OnlineTuner, OnlineTunerConfig};
-
-fn coordinator(kind: &str, lanes: usize) -> anyhow::Result<Coordinator> {
-    let mut cfg = CoordinatorConfig::sim(CpuPlatform::large2(), &[kind]);
-    cfg.lanes = lanes;
-    cfg.policy = BatchPolicy { max_wait: Duration::from_millis(2), max_batch: usize::MAX };
-    Coordinator::start(cfg)
-}
-
-fn main() -> anyhow::Result<()> {
+fn main() -> PallasResult<()> {
+    // ONE session for the whole driver: every deployment below shares
+    // its simulation cache, so repeated wide_deep table builds dedupe
+    let session = Session::builder().platform_named("large.2")?.build();
     println!("end-to-end serving driver (sim backend, large.2, tuner-chosen knobs)\n");
     println!(
         "{:<12} {:<14} {:>11} {:>10} {:>10} {:>10} {:>11}",
@@ -43,54 +36,29 @@ fn main() -> anyhow::Result<()> {
     // closed loop: rising concurrency fills batches (the paper's §2.2.3
     // request-level parallelism mapped onto the batch dimension)
     for concurrency in [1usize, 4, 16] {
-        let coord = coordinator("wide_deep", 1)?;
-        let cfg = LoadgenConfig::closed("wide_deep", 256, concurrency).with_seed(42);
-        let r = loadgen::run(&coord, &cfg)?;
-        anyhow::ensure!(r.errors == 0, "closed-loop errors: {}", r.errors);
-        println!(
-            "{:<12} {:<14} {:>11.0} {:>10.3} {:>10.3} {:>10.3} {:>11.2}",
-            "wide_deep",
-            format!("closed x{concurrency}"),
-            r.throughput_rps,
-            r.model_p50_ms,
-            r.model_p99_ms,
-            r.model_mean_ms,
-            r.mean_batch
-        );
+        let handle = session.serve_unplanned(&["wide_deep"], 1)?;
+        let r = handle.run_closed("wide_deep", 256, concurrency)?;
+        ensure_no_errors(r.errors, "closed-loop")?;
+        print_row("wide_deep", &format!("closed x{concurrency}"), &r);
     }
 
-    // open loop: Poisson arrivals at rising offered rates
+    // open loop: Poisson arrivals at rising offered rates (loadgen's
+    // open loop drives the facade's coordinator directly)
     for rate in [200.0f64, 1000.0, 4000.0] {
-        let coord = coordinator("wide_deep", 1)?;
-        let r =
-            loadgen::run(&coord, &LoadgenConfig::open("wide_deep", 256, rate).with_seed(7))?;
-        anyhow::ensure!(r.errors == 0, "open-loop errors: {}", r.errors);
-        println!(
-            "{:<12} {:<14} {:>11.0} {:>10.3} {:>10.3} {:>10.3} {:>11.2}",
-            "wide_deep",
-            format!("open {rate:.0}/s"),
-            r.throughput_rps,
-            r.model_p50_ms,
-            r.model_p99_ms,
-            r.model_mean_ms,
-            r.mean_batch
-        );
+        let handle = session.serve_unplanned(&["wide_deep"], 1)?;
+        let r = loadgen::run(
+            handle.coordinator(),
+            &LoadgenConfig::open("wide_deep", 256, rate).with_seed(7),
+        )?;
+        ensure_no_errors(r.errors, "open-loop")?;
+        print_row("wide_deep", &format!("open {rate:.0}/s"), &r);
     }
 
     // a sequence model rides the same path (32 rows per item)
-    let coord = coordinator("transformer", 2)?;
-    let r = loadgen::run(&coord, &LoadgenConfig::closed("transformer", 48, 8))?;
-    anyhow::ensure!(r.errors == 0, "transformer errors: {}", r.errors);
-    println!(
-        "{:<12} {:<14} {:>11.0} {:>10.3} {:>10.3} {:>10.3} {:>11.2}",
-        "transformer",
-        "closed x8",
-        r.throughput_rps,
-        r.model_p50_ms,
-        r.model_p99_ms,
-        r.model_mean_ms,
-        r.mean_batch
-    );
+    let handle = session.serve_unplanned(&["transformer"], 2)?;
+    let r = handle.run_closed("transformer", 48, 8)?;
+    ensure_no_errors(r.errors, "transformer")?;
+    print_row("transformer", "closed x8", &r);
 
     println!("\n(batching kicks in as offered load rises: mean batch grows, per-request");
     println!(" throughput scales — the paper's §2.2.3 request-level parallelism.)");
@@ -99,8 +67,8 @@ fn main() -> anyhow::Result<()> {
     // wide_deep drains; the adaptive run re-splits cores between phases,
     // the frozen run keeps the startup §8 split
     println!("\nadaptive vs frozen core-aware lanes under a load shift (large.2):");
-    let frozen = run_shift(false)?;
-    let adaptive = run_shift(true)?;
+    let frozen = run_shift(&session, false)?;
+    let adaptive = run_shift(&session, true)?;
     let f = frozen.kind("resnet50").expect("hot kind served");
     let a = adaptive.kind("resnet50").expect("hot kind served");
     println!(
@@ -112,34 +80,43 @@ fn main() -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Drive the shifting mix through `loadgen::run_shift`; re-tune between
-/// phases when `adaptive`. Returns the final (post-shift, steady) phase
-/// report.
-fn run_shift(adaptive: bool) -> anyhow::Result<MixReport> {
-    let platform = CpuPlatform::large2();
-    let kinds = ["wide_deep", "resnet50"];
-    let plan = LanePlan::guideline(&platform, &kinds)?;
-    let coord =
-        Coordinator::start(CoordinatorConfig::sim(platform.clone(), &kinds).with_plan(plan))?;
+fn print_row(model: &str, arrival: &str, r: &parframe::coordinator::LoadReport) {
+    println!(
+        "{:<12} {:<14} {:>11.0} {:>10.3} {:>10.3} {:>10.3} {:>11.2}",
+        model,
+        arrival,
+        r.throughput_rps,
+        r.model_p50_ms,
+        r.model_p99_ms,
+        r.model_mean_ms,
+        r.mean_batch
+    );
+}
+
+fn ensure_no_errors(errors: usize, what: &str) -> PallasResult<()> {
+    if errors > 0 {
+        return Err(PallasError::Backend(format!("{what} errors: {errors}")));
+    }
+    Ok(())
+}
+
+/// Tune-once/serve the shifting mix through the facade; re-tune between
+/// phases when `adaptive` (with a heavier EWMA weight so the controller
+/// chases the ramp quickly). Returns the final (post-shift, steady)
+/// phase report.
+fn run_shift(session: &Session, adaptive: bool) -> PallasResult<MixReport> {
+    let plan = session.tune(&Workload::kinds(&["wide_deep", "resnet50"])?)?;
+    let handle: ServeHandle = session.serve(&plan)?;
     let mut phases = vec![MixPhase::new(&[("wide_deep", 0.9), ("resnet50", 0.1)], 48)];
     phases.extend(std::iter::repeat_with(|| {
         MixPhase::new(&[("wide_deep", 0.1), ("resnet50", 0.9)], 64)
     })
     .take(3));
-    let mut tuner = OnlineTuner::with_config(
-        platform,
-        &kinds,
-        OnlineTunerConfig { smoothing: 0.7, ..OnlineTunerConfig::default() },
-    );
-    let reports = loadgen::run_shift(
-        &coord,
-        &phases,
-        8,
-        0x5EED,
-        if adaptive { Some(&mut tuner) } else { None },
-    )?;
+    let tuner_cfg =
+        adaptive.then(|| OnlineTunerConfig { smoothing: 0.7, ..OnlineTunerConfig::default() });
+    let reports = handle.run_shift_with(&phases, 8, 0x5EED, tuner_cfg)?;
     for r in &reports {
-        anyhow::ensure!(r.overall.errors == 0, "mix errors: {}", r.overall.errors);
+        ensure_no_errors(r.overall.errors, "mix")?;
     }
     Ok(reports.into_iter().last().expect("at least one phase"))
 }

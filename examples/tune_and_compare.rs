@@ -1,22 +1,23 @@
-//! Domain example: capacity planning for a datacenter serving fleet.
+//! Domain example: capacity planning for a datacenter serving fleet —
+//! driven through the `parframe::api` facade.
 //!
 //! Given a mixed fleet of models (the paper's motivation: CPUs serve "a
 //! large, diverse collection of DL use cases in production datacenter
-//! fleets"), compute per-model tuned settings and the fleet-wide capacity
-//! win over the one-size-fits-all recommended settings.
+//! fleets"), compute per-model tuned plans and the fleet-wide capacity
+//! win over the one-size-fits-all recommended settings. One [`Session`]
+//! holds the shared simulation cache, so every tier of every model's
+//! tuning dedupes against the others.
 //!
 //! ```sh
 //! cargo run --release --example tune_and_compare
 //! ```
 
-use std::sync::Arc;
 use std::time::Instant;
 
-use parframe::config::CpuPlatform;
-use parframe::models;
-use parframe::sim::{self, SimCache};
-use parframe::tuner::{self, Baseline, SweepOptions};
+use parframe::api::{Session, Workload};
+use parframe::tuner::Baseline;
 use parframe::util::stats;
+use parframe::PallasResult;
 
 /// A production fleet slice: (model, share of traffic).
 const FLEET: [(&str, f64); 5] = [
@@ -27,9 +28,14 @@ const FLEET: [(&str, f64); 5] = [
     ("transformer", 0.10),  // translation
 ];
 
-fn main() {
-    let platform = CpuPlatform::large2();
-    println!("fleet capacity planning on {} ({} cores)\n", platform.name, platform.physical_cores());
+fn main() -> PallasResult<()> {
+    let session = Session::builder().platform_named("large.2")?.build();
+    let platform = session.platform().clone();
+    println!(
+        "fleet capacity planning on {} ({} cores)\n",
+        platform.name,
+        platform.physical_cores()
+    );
     println!(
         "{:<14} {:>7} {:<30} {:>12} {:>12} {:>9}",
         "model", "share", "tuned setting", "tuned ms", "TF-rec ms", "speedup"
@@ -38,21 +44,18 @@ fn main() {
     let mut weighted_speedup = Vec::new();
     let mut weights = Vec::new();
     for (name, share) in FLEET {
-        let g = models::build(name, models::canonical_batch(name)).unwrap();
-        let tuned = tuner::tune(&g, &platform);
-        let ours = sim::simulate(&g, &platform, &tuned.config).latency_s;
-        let rec = sim::simulate(
-            &g,
-            &platform,
-            &tuner::baseline_config(Baseline::TensorFlowRecommended, &platform),
-        )
-        .latency_s;
+        let w = Workload::single(name)?;
+        let tuned = session.tune(&w)?;
+        let e = &tuned.entries[0];
+        let ours = e.predicted_latency_s;
+        let rec = session.tune_baseline(&w, Baseline::TensorFlowRecommended)?.entries[0]
+            .predicted_latency_s;
         let setting = format!(
             "{}p x {}mkl x {}intra [{}]",
-            tuned.config.inter_op_pools,
-            tuned.config.mkl_threads,
-            tuned.config.intra_op_threads,
-            tuned.config.sched_policy.name()
+            e.config.inter_op_pools,
+            e.config.mkl_threads,
+            e.config.intra_op_threads,
+            e.config.sched_policy.name()
         );
         println!(
             "{:<14} {:>6.0}% {:<30} {:>12.3} {:>12.3} {:>8.2}x",
@@ -79,33 +82,31 @@ fn main() {
     let _ = stats::mean(&weights); // touch stats to show the util API
 
     // how close is the one-shot guideline to the swept global optimum?
-    // (the parallel, memoized sweep makes this affordable fleet-wide: one
-    // shared cache, every model's lattice fanned over the worker pool)
-    let jobs = tuner::default_jobs();
-    let cache = Arc::new(SimCache::new());
-    println!("\nguideline vs exhaustive optimum (jobs={jobs}, shared sim cache):");
+    // (the session's shared cache makes this affordable fleet-wide: every
+    // model's lattice fans over the worker pool and dedupes design points
+    // the guideline/baseline tiers already simulated)
+    println!(
+        "\nguideline vs exhaustive optimum (jobs={}, shared session cache):",
+        session.jobs()
+    );
     let t0 = Instant::now();
     for (name, _) in FLEET {
-        let g = models::build(name, models::canonical_batch(name)).unwrap();
-        let tuned = tuner::tune(&g, &platform);
-        let guided = sim::simulate(&g, &platform, &tuned.config).latency_s;
-        let opt = tuner::exhaustive_search_with(
-            &g,
-            &platform,
-            &SweepOptions::shared(jobs, Arc::clone(&cache)),
-        );
+        let w = Workload::single(name)?;
+        let guided = session.tune(&w)?.entries[0].predicted_latency_s;
+        let opt = session.tune_exhaustive(&w)?;
         println!(
             "  {:<14} optimum {:>9.3} ms over {:>4} points — guideline at {:.3}x",
             name,
-            opt.best_latency_s * 1e3,
+            opt.entries[0].predicted_latency_s * 1e3,
             opt.evaluated,
-            guided / opt.best_latency_s
+            guided / opt.entries[0].predicted_latency_s
         );
     }
     println!(
         "  swept {} simulations ({} deduped as cache hits) in {:.2}s",
-        cache.misses(),
-        cache.hits(),
+        session.cache().misses(),
+        session.cache().hits(),
         t0.elapsed().as_secs_f64()
     );
+    Ok(())
 }

@@ -1,0 +1,39 @@
+//! The `pallas` API layer — the one supported entry point to the crate.
+//!
+//! The paper's end product is a *workflow*: profile a model's design
+//! features, pick a configuration by the §8 guidelines (or a deeper
+//! tier), then run with it. This module makes that workflow first-class
+//! instead of ad-hoc CLI plumbing:
+//!
+//! * [`Session`] — owns the shared pieces (platform, [`crate::sim::SimCache`],
+//!   sweep jobs, policy pin) and exposes the tune / simulate / serve verbs;
+//! * [`Workload`] — what to tune: model kinds + batches + traffic mix;
+//! * [`Plan`] — the serializable output of any tuning tier: per-kind
+//!   configs, lane layout, and provenance (tier, evaluated points, sim
+//!   fingerprint), with bit-identical JSON round-trip so
+//!   `tune --emit-plan plan.json` → `serve --plan plan.json` crosses
+//!   processes losslessly;
+//! * [`crate::PallasError`] — the facade's single typed error.
+//!
+//! ```no_run
+//! use parframe::api::{Session, Workload};
+//!
+//! let session = Session::builder().platform_named("large.2")?.build();
+//! let plan = session.tune(&Workload::kinds(&["wide_deep", "resnet50"])?)?;
+//! plan.save("plan.json")?;                   // tune once...
+//! let handle = session.serve(&Plan::load("plan.json")?)?; // ...serve many
+//! # use parframe::api::Plan;
+//! # let _ = handle;
+//! # Ok::<(), parframe::PallasError>(())
+//! ```
+//!
+//! The CLI (`rust/src/main.rs`) is a thin shell over this module; the
+//! examples and integration tests go through it too.
+
+pub mod plan;
+pub mod session;
+pub mod workload;
+
+pub use plan::{group_line, sim_fingerprint, Plan, PlanEntry, PlanTier, PLAN_VERSION};
+pub use session::{model_catalog, ModelInfo, ServeHandle, Session, SessionBuilder};
+pub use workload::{Workload, WorkloadEntry};

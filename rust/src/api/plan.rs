@@ -1,0 +1,576 @@
+//! The serializable tuning-plan artifact — "pick a config offline,
+//! deploy it as an artifact".
+//!
+//! A [`Plan`] is the output of any tuning tier ([`PlanTier`]): per-kind
+//! [`FrameworkConfig`]s with their lane layout (core slice + lane count
+//! per kind), plus provenance — which tier produced it, how many design
+//! points it evaluated, and a simulator fingerprint binding the plan to
+//! the exact graphs/platform shape it was tuned against. Plans round-trip
+//! through JSON **bit-identically**: every knob is written explicitly in
+//! the canonical spelling [`crate::config::framework_from_json`] parses
+//! back, `f64` latencies use Rust's shortest round-trip formatting, and
+//! the `u64` fingerprint travels as a hex string (JSON numbers are `f64`
+//! and would truncate it). `tune --emit-plan plan.json` in one process
+//! followed by `serve --plan plan.json` in another therefore serves the
+//! *same* configuration bits in-process tuning would.
+//!
+//! Schema (version 1; unknown keys are rejected at every level):
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "platform": "large.2",
+//!   "tier": "guidelines",
+//!   "evaluated": 2,
+//!   "sim_fingerprint": "9f86d081884c7d65",
+//!   "entries": [
+//!     {"kind": "wide_deep", "batch": 64, "first_core": 0, "cores": 24,
+//!      "lanes": 1, "predicted_latency_s": 0.00123,
+//!      "config": { ...framework knobs, all explicit... }}
+//!   ]
+//! }
+//! ```
+
+use std::collections::BTreeMap;
+
+use crate::config::{framework_from_json, framework_to_json, CpuPlatform, FrameworkConfig};
+use crate::error::{PallasError, PallasResult};
+use crate::models;
+use crate::sched::{CoreAllocation, LaneGroup, LanePlan};
+use crate::sim::{fingerprint_fold, graph_structure_fingerprint, platform_fingerprint};
+use crate::tuner::Baseline;
+use crate::util::json::{self, Json};
+
+/// Which tuning tier produced a plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanTier {
+    /// The paper's §8 closed-form guideline.
+    Guidelines,
+    /// Exhaustive sweep of the feasible design lattice (global optimum).
+    Exhaustive,
+    /// A published baseline recommendation.
+    Baseline(Baseline),
+    /// A snapshot of the online re-tuner's live plan.
+    OnlineSnapshot,
+}
+
+impl PlanTier {
+    /// Canonical artifact spelling.
+    pub fn name(&self) -> String {
+        match self {
+            PlanTier::Guidelines => "guidelines".into(),
+            PlanTier::Exhaustive => "exhaustive".into(),
+            PlanTier::Baseline(b) => format!("baseline:{}", b.name()),
+            PlanTier::OnlineSnapshot => "online-snapshot".into(),
+        }
+    }
+
+    /// Parse the canonical spelling back.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "guidelines" => Some(PlanTier::Guidelines),
+            "exhaustive" => Some(PlanTier::Exhaustive),
+            "online-snapshot" => Some(PlanTier::OnlineSnapshot),
+            other => other
+                .strip_prefix("baseline:")
+                .and_then(Baseline::parse)
+                .map(PlanTier::Baseline),
+        }
+    }
+}
+
+/// One kind's slice of a plan: its lane layout and tuned knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanEntry {
+    /// Model-zoo kind this entry serves.
+    pub kind: String,
+    /// Batch size the config was tuned for.
+    pub batch: usize,
+    /// First physical core of the kind's slice.
+    pub first_core: usize,
+    /// Physical cores in the slice.
+    pub cores: usize,
+    /// Worker lanes splitting the slice.
+    pub lanes: usize,
+    /// The tuned framework knobs for this slice.
+    pub config: FrameworkConfig,
+    /// Simulated batch latency under `config` on the slice, seconds
+    /// (provenance; serving re-derives its own tables from `config`).
+    pub predicted_latency_s: f64,
+}
+
+/// A serializable tuning decision: per-kind configs + lane layout +
+/// provenance. See the module docs for the JSON schema.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Plan {
+    /// Platform preset name the plan was tuned for.
+    pub platform: String,
+    /// Producing tier.
+    pub tier: PlanTier,
+    /// Design points evaluated while producing the plan.
+    pub evaluated: usize,
+    /// Fingerprint of (platform shape, per-entry graph structure) — see
+    /// [`sim_fingerprint`]. Serving refuses a plan whose fingerprint no
+    /// longer matches the local zoo/simulator.
+    pub sim_fingerprint: u64,
+    /// Per-kind entries, in core order.
+    pub entries: Vec<PlanEntry>,
+}
+
+/// Artifact schema version this build writes and reads.
+pub const PLAN_VERSION: usize = 1;
+
+const PLAN_KEYS: [&str; 6] =
+    ["version", "platform", "tier", "evaluated", "sim_fingerprint", "entries"];
+const ENTRY_KEYS: [&str; 7] =
+    ["kind", "batch", "first_core", "cores", "lanes", "config", "predicted_latency_s"];
+
+/// Fingerprint binding a plan to what it was tuned against: the platform
+/// *shape* (FNV over every field the cost model reads, names excluded)
+/// folded with each entry's graph-structure fingerprint in entry order.
+/// Changing a model's graph, a platform constant, or the entry set
+/// changes the fingerprint; renaming a platform or reordering JSON keys
+/// does not.
+pub fn sim_fingerprint(
+    platform: &CpuPlatform,
+    entries: &[(String, usize)],
+) -> PallasResult<u64> {
+    let mut h = platform_fingerprint(platform);
+    for (kind, batch) in entries {
+        let graph = models::build(kind, *batch)
+            .ok_or_else(|| PallasError::UnknownModel(kind.clone()))?;
+        // structure-only hash: no need to precompute ranks/CSR just to
+        // fingerprint the provenance path
+        h = fingerprint_fold(h, graph_structure_fingerprint(&graph));
+    }
+    Ok(h)
+}
+
+impl Plan {
+    /// Serialize to compact JSON (the `tune --emit-plan` artifact).
+    pub fn to_json(&self) -> String {
+        let mut m = BTreeMap::new();
+        m.insert("version".into(), Json::Num(PLAN_VERSION as f64));
+        m.insert("platform".into(), Json::Str(self.platform.clone()));
+        m.insert("tier".into(), Json::Str(self.tier.name()));
+        m.insert("evaluated".into(), Json::Num(self.evaluated as f64));
+        m.insert(
+            "sim_fingerprint".into(),
+            Json::Str(format!("{:016x}", self.sim_fingerprint)),
+        );
+        let entries = self
+            .entries
+            .iter()
+            .map(|e| {
+                let mut em = BTreeMap::new();
+                em.insert("kind".into(), Json::Str(e.kind.clone()));
+                em.insert("batch".into(), Json::Num(e.batch as f64));
+                em.insert("first_core".into(), Json::Num(e.first_core as f64));
+                em.insert("cores".into(), Json::Num(e.cores as f64));
+                em.insert("lanes".into(), Json::Num(e.lanes as f64));
+                em.insert("config".into(), framework_to_json(&e.config));
+                em.insert("predicted_latency_s".into(), Json::Num(e.predicted_latency_s));
+                Json::Obj(em)
+            })
+            .collect();
+        m.insert("entries".into(), Json::Arr(entries));
+        json::to_string(&Json::Obj(m))
+    }
+
+    /// Parse a plan artifact. Rejects unknown keys (at the top level, in
+    /// entries, and inside each config object), wrong versions, and
+    /// malformed fingerprints.
+    pub fn from_json(text: &str) -> PallasResult<Self> {
+        let doc = Json::parse(text).map_err(|e| PallasError::parse("plan", e))?;
+        let obj = doc
+            .as_obj()
+            .ok_or_else(|| PallasError::parse("plan", "plan must be a JSON object"))?;
+        for key in obj.keys() {
+            if !PLAN_KEYS.contains(&key.as_str()) {
+                return Err(PallasError::InvalidPlan(format!(
+                    "unknown plan key '{key}' (accepted: {})",
+                    PLAN_KEYS.join(", ")
+                )));
+            }
+        }
+        let version = obj.get("version").and_then(strict_usize).unwrap_or(0);
+        if version != PLAN_VERSION {
+            return Err(PallasError::InvalidPlan(format!(
+                "unsupported plan version {version} (this build reads {PLAN_VERSION})"
+            )));
+        }
+        let platform = obj
+            .get("platform")
+            .and_then(Json::as_str)
+            .ok_or_else(|| PallasError::parse("plan", "missing platform"))?
+            .to_string();
+        let tier_name = obj
+            .get("tier")
+            .and_then(Json::as_str)
+            .ok_or_else(|| PallasError::parse("plan", "missing tier"))?;
+        let tier = PlanTier::parse(tier_name)
+            .ok_or_else(|| PallasError::InvalidPlan(format!("unknown tier '{tier_name}'")))?;
+        let evaluated = obj
+            .get("evaluated")
+            .and_then(strict_usize)
+            .ok_or_else(|| PallasError::parse("plan", "missing or non-integer evaluated"))?;
+        let fp_text = obj
+            .get("sim_fingerprint")
+            .and_then(Json::as_str)
+            .ok_or_else(|| PallasError::parse("plan", "missing sim_fingerprint"))?;
+        let sim_fingerprint = u64::from_str_radix(fp_text, 16)
+            .map_err(|_| PallasError::parse("plan", format!("bad fingerprint '{fp_text}'")))?;
+        let entries = obj
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| PallasError::parse("plan", "missing entries"))?
+            .iter()
+            .map(parse_entry)
+            .collect::<PallasResult<Vec<_>>>()?;
+        if entries.is_empty() {
+            return Err(PallasError::InvalidPlan("plan has no entries".into()));
+        }
+        Ok(Plan { platform, tier, evaluated, sim_fingerprint, entries })
+    }
+
+    /// Write the artifact to a file.
+    pub fn save(&self, path: &str) -> PallasResult<()> {
+        std::fs::write(path, self.to_json()).map_err(|e| PallasError::io(path, e))
+    }
+
+    /// Read an artifact from a file.
+    pub fn load(path: &str) -> PallasResult<Self> {
+        let text = std::fs::read_to_string(path).map_err(|e| PallasError::io(path, e))?;
+        Self::from_json(&text)
+    }
+
+    /// Capture a live [`LanePlan`] (each group must host exactly one
+    /// kind) with per-entry batches and predicted latencies supplied by
+    /// the caller, in group order.
+    pub fn from_lane_plan(
+        lane_plan: &LanePlan,
+        tier: PlanTier,
+        evaluated: usize,
+        batches: &[usize],
+        predicted: &[f64],
+    ) -> PallasResult<Self> {
+        if batches.len() != lane_plan.groups.len() || predicted.len() != lane_plan.groups.len() {
+            return Err(PallasError::InvalidPlan(
+                "from_lane_plan: batches/predicted length != group count".into(),
+            ));
+        }
+        let mut entries = Vec::with_capacity(lane_plan.groups.len());
+        for (i, g) in lane_plan.groups.iter().enumerate() {
+            if g.kinds.len() != 1 {
+                return Err(PallasError::InvalidPlan(
+                    "plan artifact requires single-kind lane groups".into(),
+                ));
+            }
+            entries.push(PlanEntry {
+                kind: g.kinds[0].clone(),
+                batch: batches[i],
+                first_core: g.allocation.first_core,
+                cores: g.allocation.cores,
+                // lane_assignments treats 0 as 1; normalise here so every
+                // captured plan re-parses (the artifact rejects lanes=0)
+                lanes: g.lanes.max(1),
+                config: g.framework.clone(),
+                predicted_latency_s: predicted[i],
+            });
+        }
+        let fp_entries: Vec<(String, usize)> =
+            entries.iter().map(|e| (e.kind.clone(), e.batch)).collect();
+        let sim_fingerprint = sim_fingerprint(&lane_plan.platform, &fp_entries)?;
+        Ok(Plan {
+            platform: lane_plan.platform.name.clone(),
+            tier,
+            evaluated,
+            sim_fingerprint,
+            entries,
+        })
+    }
+
+    /// Reconstruct the runnable [`LanePlan`] on a concrete platform.
+    /// Fails with [`PallasError::PlanMismatch`] when the platform differs
+    /// from the one the plan was tuned for, and validates the lane
+    /// invariants (disjoint slices inside the machine).
+    pub fn lane_plan(&self, platform: &CpuPlatform) -> PallasResult<LanePlan> {
+        if platform.name != self.platform {
+            return Err(PallasError::PlanMismatch {
+                expected_platform: self.platform.clone(),
+                got: platform.name.clone(),
+            });
+        }
+        let groups = self
+            .entries
+            .iter()
+            .map(|e| LaneGroup {
+                kinds: vec![e.kind.clone()],
+                allocation: CoreAllocation::new(e.first_core, e.cores),
+                lanes: e.lanes,
+                framework: e.config.clone(),
+            })
+            .collect();
+        let plan = LanePlan { platform: platform.clone(), groups };
+        plan.validate()?;
+        for e in &self.entries {
+            e.config.validate(platform)?;
+        }
+        Ok(plan)
+    }
+
+    /// Recompute the fingerprint against the local zoo/platform and
+    /// compare with the stored one — the staleness check serving runs
+    /// before trusting a plan.
+    pub fn verify_fingerprint(&self, platform: &CpuPlatform) -> PallasResult<()> {
+        let fp_entries: Vec<(String, usize)> =
+            self.entries.iter().map(|e| (e.kind.clone(), e.batch)).collect();
+        let fresh = sim_fingerprint(platform, &fp_entries)?;
+        if fresh != self.sim_fingerprint {
+            return Err(PallasError::InvalidPlan(format!(
+                "sim fingerprint mismatch: plan has {:016x}, local zoo/platform give \
+                 {fresh:016x} (the plan was tuned against a different model or simulator \
+                 version — re-run tune)",
+                self.sim_fingerprint
+            )));
+        }
+        Ok(())
+    }
+
+    /// The kinds this plan serves, in entry order.
+    pub fn kinds(&self) -> Vec<&str> {
+        self.entries.iter().map(|e| e.kind.as_str()).collect()
+    }
+
+    /// One human-readable line per entry (shared by `plan --show` and
+    /// `serve --plan`, so CI can diff the *served* config against the
+    /// artifact).
+    pub fn group_lines(&self) -> Vec<String> {
+        self.entries
+            .iter()
+            .map(|e| group_line(&e.kind, e.first_core, e.cores, e.lanes, &e.config))
+            .collect()
+    }
+}
+
+/// The canonical one-line rendering of one lane group's placement +
+/// knobs. `Plan::group_lines` and the CLI's live-coordinator printout
+/// both use this, so a `diff` between `plan --show` and `serve --plan`
+/// output compares artifact bits against the live lane set.
+pub fn group_line(
+    kind: &str,
+    first_core: usize,
+    cores: usize,
+    lanes: usize,
+    config: &FrameworkConfig,
+) -> String {
+    format!(
+        "  group {}: cores {}..={} ({}) lanes={} pools={} mkl={} intra={} policy={}",
+        kind,
+        first_core,
+        first_core + cores.max(1) - 1,
+        cores,
+        lanes,
+        config.inter_op_pools,
+        config.mkl_threads,
+        config.intra_op_threads,
+        config.sched_policy.name()
+    )
+}
+
+/// Strict non-negative integer: `Json` numbers are `f64`, and the lax
+/// `Json::as_usize` would silently truncate `64.9` or saturate `-1` —
+/// a plan artifact must deploy exactly what the file says or fail.
+/// Bounded at 2^53, past which `f64` can't hold an exact integer (so
+/// the cast below is always value-preserving).
+fn strict_usize(v: &Json) -> Option<usize> {
+    const MAX_EXACT: f64 = 9_007_199_254_740_992.0; // 2^53
+    let n = v.as_f64()?;
+    if n.fract() != 0.0 || !(0.0..MAX_EXACT).contains(&n) {
+        return None;
+    }
+    Some(n as usize)
+}
+
+fn parse_entry(v: &Json) -> PallasResult<PlanEntry> {
+    let obj = v
+        .as_obj()
+        .ok_or_else(|| PallasError::parse("plan", "entry must be an object"))?;
+    for key in obj.keys() {
+        if !ENTRY_KEYS.contains(&key.as_str()) {
+            return Err(PallasError::InvalidPlan(format!(
+                "unknown plan entry key '{key}' (accepted: {})",
+                ENTRY_KEYS.join(", ")
+            )));
+        }
+    }
+    let usize_field = |name: &str| -> PallasResult<usize> {
+        obj.get(name).and_then(strict_usize).ok_or_else(|| {
+            PallasError::parse("plan", format!("entry missing or non-integer {name}"))
+        })
+    };
+    let kind = obj
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or_else(|| PallasError::parse("plan", "entry missing kind"))?
+        .to_string();
+    let config = framework_from_json(
+        obj.get("config")
+            .ok_or_else(|| PallasError::parse("plan", "entry missing config"))?,
+    )?;
+    let predicted_latency_s = obj
+        .get("predicted_latency_s")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| PallasError::parse("plan", "entry missing predicted_latency_s"))?;
+    let lanes = usize_field("lanes")?;
+    if lanes == 0 {
+        return Err(PallasError::InvalidPlan(format!("entry '{kind}': lanes must be >= 1")));
+    }
+    Ok(PlanEntry {
+        kind,
+        batch: usize_field("batch")?,
+        first_core: usize_field("first_core")?,
+        cores: usize_field("cores")?,
+        lanes,
+        config,
+        predicted_latency_s,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SchedPolicy;
+
+    fn sample_plan() -> Plan {
+        let platform = CpuPlatform::large2();
+        let lane_plan = LanePlan::guideline(&platform, &["wide_deep", "resnet50"]).unwrap();
+        Plan::from_lane_plan(
+            &lane_plan,
+            PlanTier::Guidelines,
+            2,
+            &[64, 16],
+            &[0.001234567890123, 0.08765],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn json_roundtrip_is_identity() {
+        let p = sample_plan();
+        let text = p.to_json();
+        let back = Plan::from_json(&text).unwrap();
+        assert_eq!(back, p);
+        // serialization is a fixed point
+        assert_eq!(back.to_json(), text);
+    }
+
+    #[test]
+    fn tier_names_roundtrip() {
+        for tier in [
+            PlanTier::Guidelines,
+            PlanTier::Exhaustive,
+            PlanTier::Baseline(Baseline::IntelRecommended),
+            PlanTier::OnlineSnapshot,
+        ] {
+            assert_eq!(PlanTier::parse(&tier.name()), Some(tier));
+        }
+        assert_eq!(PlanTier::parse("vibes"), None);
+    }
+
+    #[test]
+    fn fingerprint_survives_roundtrip_and_detects_drift() {
+        let p = sample_plan();
+        let platform = CpuPlatform::large2();
+        p.verify_fingerprint(&platform).unwrap();
+        let back = Plan::from_json(&p.to_json()).unwrap();
+        assert_eq!(back.sim_fingerprint, p.sim_fingerprint);
+        back.verify_fingerprint(&platform).unwrap();
+        // a different batch means a different graph: must be detected
+        let mut drifted = p.clone();
+        drifted.entries[0].batch += 1;
+        assert!(matches!(
+            drifted.verify_fingerprint(&platform),
+            Err(PallasError::InvalidPlan(_))
+        ));
+    }
+
+    #[test]
+    fn lane_plan_reconstruction_checks_platform() {
+        let p = sample_plan();
+        let lp = p.lane_plan(&CpuPlatform::large2()).unwrap();
+        lp.validate().unwrap();
+        assert_eq!(lp.groups.len(), 2);
+        assert_eq!(lp.groups[0].framework, p.entries[0].config);
+        match p.lane_plan(&CpuPlatform::small()) {
+            Err(PallasError::PlanMismatch { expected_platform, got }) => {
+                assert_eq!(expected_platform, "large.2");
+                assert_eq!(got, "small");
+            }
+            other => panic!("expected PlanMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_versions() {
+        let p = sample_plan();
+        let text = p.to_json();
+        let poisoned = text.replacen("\"platform\"", "\"platfrom\"", 1);
+        assert!(matches!(
+            Plan::from_json(&poisoned),
+            Err(PallasError::InvalidPlan(m)) if m.contains("platfrom")
+        ));
+        let wrong_version = text.replacen("\"version\":1", "\"version\":9", 1);
+        assert!(Plan::from_json(&wrong_version).is_err());
+        // a typo'd config knob inside an entry is also fatal
+        let bad_knob = text.replacen("\"mkl_threads\"", "\"mkl_treads\"", 1);
+        assert!(Plan::from_json(&bad_knob).is_err());
+        // provenance fields are strict: a mistyped evaluated is rejected,
+        // not defaulted to 0, and lanes=0 cannot deploy
+        let bad_eval = text.replacen("\"evaluated\":2", "\"evaluated\":\"2\"", 1);
+        assert!(Plan::from_json(&bad_eval).is_err());
+        // integer fields are strict: fractional numbers don't truncate
+        let frac_batch = text.replacen("\"batch\":64", "\"batch\":64.9", 1);
+        assert!(Plan::from_json(&frac_batch).is_err());
+        let frac_version = text.replacen("\"version\":1", "\"version\":1.9", 1);
+        assert!(Plan::from_json(&frac_version).is_err());
+        let zero_lanes = text.replacen("\"lanes\":1", "\"lanes\":0", 1);
+        assert!(matches!(
+            Plan::from_json(&zero_lanes),
+            Err(PallasError::InvalidPlan(m)) if m.contains("lanes")
+        ));
+    }
+
+    #[test]
+    fn latency_bits_roundtrip_exactly() {
+        let mut p = sample_plan();
+        // an awkward f64 with no short decimal representation
+        p.entries[0].predicted_latency_s = 1.0 / 3.0 * 1e-3;
+        p.entries[1].predicted_latency_s = f64::from_bits(0x3F0F_0F0F_0F0F_0F0F);
+        let back = Plan::from_json(&p.to_json()).unwrap();
+        for (a, b) in p.entries.iter().zip(&back.entries) {
+            assert_eq!(
+                a.predicted_latency_s.to_bits(),
+                b.predicted_latency_s.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn policy_and_layout_fields_preserved() {
+        let platform = CpuPlatform::large2();
+        let lane_plan = LanePlan::guideline(&platform, &["transformer", "resnet50"])
+            .unwrap()
+            .with_policy(SchedPolicy::CostlyFirst);
+        let p =
+            Plan::from_lane_plan(&lane_plan, PlanTier::OnlineSnapshot, 0, &[8, 16], &[0.0, 0.0])
+                .unwrap();
+        let back = Plan::from_json(&p.to_json()).unwrap();
+        assert!(back
+            .entries
+            .iter()
+            .all(|e| e.config.sched_policy == SchedPolicy::CostlyFirst));
+        let lp = back.lane_plan(&platform).unwrap();
+        assert_eq!(lp.groups[1].allocation, lane_plan.groups[1].allocation);
+    }
+}

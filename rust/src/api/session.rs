@@ -1,0 +1,607 @@
+//! The [`Session`] — the one supported entry point to tuning, simulation
+//! and serving.
+//!
+//! A session owns the pieces every workflow shares: the target
+//! [`CpuPlatform`], the process-wide [`SimCache`] (so tuning tiers,
+//! backend tables and the online re-tuner dedupe simulations against
+//! each other), the sweep worker count (`--jobs`), and an optional
+//! dispatch-policy pin. On top it exposes the paper's workflow as three
+//! verbs:
+//!
+//! * **tune** — any tier ([`Session::tune`], [`Session::tune_exhaustive`],
+//!   [`Session::tune_baseline`]) turns a [`Workload`] into a serializable
+//!   [`Plan`];
+//! * **simulate** — score one config on the session platform;
+//! * **serve** — [`Session::serve`] deploys a `Plan` (from this process
+//!   or a `plan.json` written by another) onto a core-aware coordinator,
+//!   bit-identical to in-process tuning.
+
+use std::sync::Arc;
+
+use crate::config::{CpuPlatform, FrameworkConfig, OperatorImpl, SchedPolicy};
+use crate::coordinator::{
+    loadgen, Coordinator, CoordinatorConfig, LoadReport, LoadgenConfig, MixPhase, MixReport,
+};
+use crate::error::{PallasError, PallasResult};
+use crate::graph::{analyze_width, WidthAnalysis};
+use crate::models;
+use crate::runtime::{BackendFactory, SimBackendConfig, SimBackendFactory};
+use crate::sched::{split_cores, LaneGroup, LanePlan};
+use crate::sim::{SimCache, SimReport};
+use crate::tuner::{
+    self, baseline_config, Baseline, OnlineTuner, OnlineTunerConfig, SweepOptions,
+};
+
+use super::plan::{Plan, PlanTier};
+use super::workload::Workload;
+
+/// One zoo model with its width analysis (the `models` listing).
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    /// Zoo name.
+    pub name: String,
+    /// Canonical serving batch.
+    pub batch: usize,
+    /// Operator count at that batch.
+    pub ops: usize,
+    /// Width analysis at that batch.
+    pub width: WidthAnalysis,
+}
+
+/// The zoo catalog with width analyses — what `parframe models` prints.
+pub fn model_catalog() -> Vec<ModelInfo> {
+    models::model_names()
+        .iter()
+        .map(|name| {
+            let batch = models::canonical_batch(name);
+            let g = models::build(name, batch).expect("zoo name builds");
+            ModelInfo { name: name.to_string(), batch, ops: g.len(), width: analyze_width(&g) }
+        })
+        .collect()
+}
+
+/// Builder for a [`Session`].
+#[derive(Debug, Clone)]
+pub struct SessionBuilder {
+    platform: CpuPlatform,
+    jobs: usize,
+    policy: Option<SchedPolicy>,
+    cache: Option<Arc<SimCache>>,
+}
+
+impl SessionBuilder {
+    /// Target platform (default: `large.2`).
+    pub fn platform(mut self, platform: CpuPlatform) -> Self {
+        self.platform = platform;
+        self
+    }
+
+    /// Target platform by preset name.
+    pub fn platform_named(mut self, name: &str) -> PallasResult<Self> {
+        self.platform = CpuPlatform::by_name(name)
+            .ok_or_else(|| PallasError::UnknownPlatform(name.to_string()))?;
+        Ok(self)
+    }
+
+    /// Sweep worker threads (default: host parallelism, capped — results
+    /// are bit-identical at any value).
+    pub fn jobs(mut self, jobs: usize) -> Self {
+        self.jobs = jobs.max(1);
+        self
+    }
+
+    /// Pin the dispatch-policy dimension (tuned thread knobs keep their
+    /// per-slice values, so A/Bs isolate dispatch order).
+    pub fn policy(mut self, policy: SchedPolicy) -> Self {
+        self.policy = Some(policy);
+        self
+    }
+
+    /// Pin the dispatch policy by CLI name.
+    pub fn policy_named(mut self, name: &str) -> PallasResult<Self> {
+        self.policy = Some(
+            SchedPolicy::parse(name).ok_or_else(|| PallasError::UnknownPolicy(name.to_string()))?,
+        );
+        Ok(self)
+    }
+
+    /// Share an existing simulation memo-cache (sessions otherwise own a
+    /// fresh one).
+    pub fn cache(mut self, cache: Arc<SimCache>) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Finish the builder.
+    pub fn build(self) -> Session {
+        Session {
+            platform: self.platform,
+            jobs: self.jobs,
+            policy: self.policy,
+            cache: self.cache.unwrap_or_else(|| Arc::new(SimCache::new())),
+        }
+    }
+}
+
+/// The facade session: shared platform + sim cache + sweep options. See
+/// the module docs for the tune → plan → serve workflow.
+#[derive(Debug, Clone)]
+pub struct Session {
+    platform: CpuPlatform,
+    jobs: usize,
+    policy: Option<SchedPolicy>,
+    cache: Arc<SimCache>,
+}
+
+impl Session {
+    /// Start building a session (platform `large.2`, default jobs, no
+    /// policy pin, fresh cache).
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder {
+            platform: CpuPlatform::large2(),
+            jobs: tuner::default_jobs(),
+            policy: None,
+            cache: None,
+        }
+    }
+
+    /// Session on a platform with every other knob at its default.
+    pub fn on(platform: CpuPlatform) -> Self {
+        Self::builder().platform(platform).build()
+    }
+
+    /// The session's platform.
+    pub fn platform(&self) -> &CpuPlatform {
+        &self.platform
+    }
+
+    /// The session's sweep worker count.
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// The session's dispatch-policy pin, if any.
+    pub fn policy(&self) -> Option<SchedPolicy> {
+        self.policy
+    }
+
+    /// The session-wide simulation memo-cache.
+    pub fn cache(&self) -> &Arc<SimCache> {
+        &self.cache
+    }
+
+    // -- tuning tiers -----------------------------------------------------
+
+    /// Tune a workload with the paper's §8 guideline (closed-form; one
+    /// simulation per kind for the predicted latency). The session's
+    /// policy pin overrides the dispatch dimension only.
+    pub fn tune(&self, workload: &Workload) -> PallasResult<Plan> {
+        let pin = self.policy;
+        let (groups, batches) = self.grouped_configs(workload, |graph, slice| {
+            let mut config = tuner::tune(graph, slice).config;
+            if let Some(p) = pin {
+                config.sched_policy = p;
+            }
+            Ok((config, 1))
+        })?;
+        self.make_plan(PlanTier::Guidelines, groups, &batches)
+    }
+
+    /// Tune a workload by exhaustively sweeping the feasible design
+    /// lattice on each kind's core slice (the global-optimum tier;
+    /// `evaluated` counts unique simulated points across kinds). A
+    /// session policy pin *constrains the sweep* to that policy's
+    /// sub-lattice, so the result is the true optimum under the pin.
+    pub fn tune_exhaustive(&self, workload: &Workload) -> PallasResult<Plan> {
+        let opts = SweepOptions::shared(self.jobs, Arc::clone(&self.cache)).pinned(self.policy);
+        let (groups, batches) = self.grouped_configs(workload, |graph, slice| {
+            let r = tuner::exhaustive_search_with(graph, slice, &opts);
+            Ok((r.best, r.evaluated))
+        })?;
+        self.make_plan(PlanTier::Exhaustive, groups, &batches)
+    }
+
+    /// Materialise a published baseline recommendation as a plan (the
+    /// comparison bar of Fig. 18). The session's policy pin overrides
+    /// the dispatch dimension only.
+    pub fn tune_baseline(&self, workload: &Workload, baseline: Baseline) -> PallasResult<Plan> {
+        let pin = self.policy;
+        let (groups, batches) = self.grouped_configs(workload, |_, slice| {
+            let mut config = baseline_config(baseline, slice);
+            if let Some(p) = pin {
+                config.sched_policy = p;
+            }
+            Ok((config, 1))
+        })?;
+        self.make_plan(PlanTier::Baseline(baseline), groups, &batches)
+    }
+
+    /// Snapshot a running core-aware serving handle's live plan as a
+    /// deployable artifact (the online re-tuner's decisions survive the
+    /// process). Batches come from the plan the handle was deployed
+    /// with, so a batch-overridden tuning keeps its provenance; kinds
+    /// the original plan never named fall back to their canonical batch.
+    pub fn snapshot(&self, handle: &ServeHandle) -> PallasResult<Plan> {
+        let lane_plan = handle.coordinator().current_plan().ok_or_else(|| {
+            PallasError::InvalidPlan("snapshot: no core-aware plan is active".into())
+        })?;
+        let batches: Vec<usize> = lane_plan
+            .groups
+            .iter()
+            .map(|g| {
+                let kind = &g.kinds[0];
+                handle
+                    .tuned_batches
+                    .get(kind)
+                    .copied()
+                    .unwrap_or_else(|| models::canonical_batch(kind))
+            })
+            .collect();
+        self.plan_from_lane_plan(&lane_plan, PlanTier::OnlineSnapshot, 0, &batches)
+    }
+
+    // -- simulation -------------------------------------------------------
+
+    /// Simulate one model/batch under a config on the session platform
+    /// (memoized through the session cache).
+    pub fn simulate(
+        &self,
+        model: &str,
+        batch: usize,
+        config: &FrameworkConfig,
+    ) -> PallasResult<Arc<SimReport>> {
+        config.validate(&self.platform)?;
+        let prep = self
+            .cache
+            .prepared(model, batch)
+            .ok_or_else(|| PallasError::UnknownModel(model.to_string()))?;
+        Ok(self.cache.report(&prep, &self.platform, config))
+    }
+
+    /// A manually-knobbed config the way `simulate --pools/--mkl/--intra`
+    /// builds one: unspecified MKL threads default to a fair share of the
+    /// physical cores, intra-op follows MKL, and the session's policy pin
+    /// (default topo) sets dispatch order.
+    pub fn manual_config(
+        &self,
+        pools: Option<usize>,
+        mkl: Option<usize>,
+        intra: Option<usize>,
+    ) -> PallasResult<FrameworkConfig> {
+        let mut cfg = FrameworkConfig::tuned_default();
+        cfg.operator_impl = OperatorImpl::IntraOpParallel;
+        if let Some(p) = pools {
+            cfg.inter_op_pools = p;
+        }
+        cfg.mkl_threads = mkl.unwrap_or_else(|| {
+            (self.platform.physical_cores() / cfg.inter_op_pools.max(1)).max(1)
+        });
+        cfg.intra_op_threads = intra.unwrap_or(cfg.mkl_threads);
+        if let Some(p) = self.policy {
+            cfg.sched_policy = p;
+        }
+        cfg.validate(&self.platform)?;
+        Ok(cfg)
+    }
+
+    // -- serving ----------------------------------------------------------
+
+    /// Deploy a plan: verify its platform + sim fingerprint, reconstruct
+    /// the lane plan, and start a core-aware coordinator whose backend
+    /// tables are built from the plan's exact configs (through the
+    /// session cache). Works identically for a plan tuned in-process and
+    /// one loaded from `plan.json`.
+    pub fn serve(&self, plan: &Plan) -> PallasResult<ServeHandle> {
+        // platform-name check first (PlanMismatch beats a confusing
+        // fingerprint error when the whole machine is wrong)
+        let lane_plan = plan.lane_plan(&self.platform)?;
+        plan.verify_fingerprint(&self.platform)?;
+        let kinds = plan.kinds();
+        let mut sc = SimBackendConfig::new(self.platform.clone(), &kinds);
+        sc.jobs = self.jobs;
+        let factory = Arc::new(SimBackendFactory::with_cache(sc, Arc::clone(&self.cache)));
+        let dyn_factory: Arc<dyn BackendFactory> = Arc::clone(&factory);
+        let cfg = CoordinatorConfig::with_factory(dyn_factory).with_plan(lane_plan);
+        let coord = Coordinator::start(cfg)?;
+        Ok(ServeHandle {
+            coord,
+            factory,
+            session: self.clone(),
+            tuned_batches: plan.entries.iter().map(|e| (e.kind.clone(), e.batch)).collect(),
+        })
+    }
+
+    /// Serve a workload on the §8-guideline plan directly (tune + serve
+    /// in one step — the `serve --kinds a,b` path).
+    pub fn serve_guideline(&self, workload: &Workload) -> PallasResult<ServeHandle> {
+        let plan = self.tune(workload)?;
+        self.serve(&plan)
+    }
+
+    /// Serve kinds on `lanes` identical whole-machine lanes with
+    /// per-bucket tuned tables (the single-kind `serve --kind` path; no
+    /// core-aware plan).
+    pub fn serve_unplanned(&self, kinds: &[&str], lanes: usize) -> PallasResult<ServeHandle> {
+        let mut sc = SimBackendConfig::new(self.platform.clone(), kinds);
+        sc.jobs = self.jobs;
+        sc.policy = self.policy;
+        let factory = Arc::new(SimBackendFactory::with_cache(sc, Arc::clone(&self.cache)));
+        let dyn_factory: Arc<dyn BackendFactory> = Arc::clone(&factory);
+        let mut cfg = CoordinatorConfig::with_factory(dyn_factory);
+        cfg.lanes = lanes.max(1);
+        let coord = Coordinator::start(cfg)?;
+        Ok(ServeHandle {
+            coord,
+            factory,
+            session: self.clone(),
+            tuned_batches: std::collections::HashMap::new(),
+        })
+    }
+
+    // -- internals --------------------------------------------------------
+
+    /// Split cores by workload weights and pick each group's config via
+    /// `pick(graph_at_entry_batch, slice) -> (config, evaluated_points)`.
+    /// Policy pinning is the tier's (closure's) responsibility: the
+    /// exhaustive tier constrains its sweep, the closed-form tiers
+    /// override the dispatch knob.
+    fn grouped_configs<F>(
+        &self,
+        workload: &Workload,
+        mut pick: F,
+    ) -> PallasResult<(Vec<(LaneGroup, usize)>, Vec<usize>)>
+    where
+        F: FnMut(&crate::graph::Graph, &CpuPlatform) -> PallasResult<(FrameworkConfig, usize)>,
+    {
+        let weights: Vec<f64> = workload.entries.iter().map(|e| e.weight).collect();
+        let allocs = split_cores(&self.platform, &weights)?;
+        let mut groups = Vec::with_capacity(workload.entries.len());
+        let mut batches = Vec::with_capacity(workload.entries.len());
+        for (entry, alloc) in workload.entries.iter().zip(allocs) {
+            let slice = self.platform.restrict(alloc.first_core, alloc.cores);
+            // the session's prepared-graph memo: repeated tune calls (and
+            // the predicted-latency pass) share one graph build per kind
+            let prep = self
+                .cache
+                .prepared(&entry.kind, entry.batch)
+                .ok_or_else(|| PallasError::UnknownModel(entry.kind.clone()))?;
+            let (config, evaluated) = pick(prep.graph(), &slice)?;
+            groups.push((
+                LaneGroup {
+                    kinds: vec![entry.kind.clone()],
+                    allocation: alloc,
+                    lanes: 1,
+                    framework: config,
+                },
+                evaluated,
+            ));
+            batches.push(entry.batch);
+        }
+        Ok((groups, batches))
+    }
+
+    fn make_plan(
+        &self,
+        tier: PlanTier,
+        groups: Vec<(LaneGroup, usize)>,
+        batches: &[usize],
+    ) -> PallasResult<Plan> {
+        let evaluated: usize = groups.iter().map(|(_, e)| *e).sum();
+        let lane_plan = LanePlan {
+            platform: self.platform.clone(),
+            groups: groups.into_iter().map(|(g, _)| g).collect(),
+        };
+        lane_plan.validate()?;
+        self.plan_from_lane_plan(&lane_plan, tier, evaluated, batches)
+    }
+
+    /// Predicted latencies + artifact assembly for a validated lane plan.
+    fn plan_from_lane_plan(
+        &self,
+        lane_plan: &LanePlan,
+        tier: PlanTier,
+        evaluated: usize,
+        batches: &[usize],
+    ) -> PallasResult<Plan> {
+        let mut predicted = Vec::with_capacity(lane_plan.groups.len());
+        for (g, &batch) in lane_plan.groups.iter().zip(batches) {
+            let kind = &g.kinds[0];
+            let prep = self
+                .cache
+                .prepared(kind, batch)
+                .ok_or_else(|| PallasError::UnknownModel(kind.clone()))?;
+            let slice =
+                self.platform.restrict(g.allocation.first_core, g.allocation.cores);
+            predicted.push(self.cache.latency(&prep, &slice, &g.framework));
+        }
+        Plan::from_lane_plan(lane_plan, tier, evaluated, batches, &predicted)
+    }
+}
+
+/// A running serving deployment minted by [`Session::serve`] (or the
+/// unplanned variant): the coordinator plus the concrete sim-backend
+/// factory, so callers can read the *served* latency tables and drive
+/// load through the facade.
+pub struct ServeHandle {
+    coord: Coordinator,
+    factory: Arc<SimBackendFactory>,
+    /// The session that minted this handle (shares its cache/jobs/
+    /// platform with every other deployment it mints).
+    session: Session,
+    /// kind → tuned batch of the deployed plan (empty for unplanned
+    /// handles); keeps snapshot provenance honest under batch overrides.
+    tuned_batches: std::collections::HashMap<String, usize>,
+}
+
+impl ServeHandle {
+    /// The underlying coordinator (submit/await, metrics, live plan).
+    pub fn coordinator(&self) -> &Coordinator {
+        &self.coord
+    }
+
+    /// Closed-loop load: `requests` total over `concurrency` workers.
+    pub fn run_closed(
+        &self,
+        kind: &str,
+        requests: usize,
+        concurrency: usize,
+    ) -> PallasResult<LoadReport> {
+        Ok(loadgen::run(&self.coord, &LoadgenConfig::closed(kind, requests, concurrency))?)
+    }
+
+    /// Drive a multi-phase shifting mix; with `adaptive` the online
+    /// re-tuner (sharing the session cache and jobs) re-plans between
+    /// phases with default controller knobs.
+    pub fn run_shift(
+        &self,
+        phases: &[MixPhase],
+        concurrency: usize,
+        seed: u64,
+        adaptive: bool,
+    ) -> PallasResult<Vec<MixReport>> {
+        let cfg =
+            adaptive.then(|| OnlineTunerConfig { jobs: self.session.jobs, ..Default::default() });
+        self.run_shift_with(phases, concurrency, seed, cfg)
+    }
+
+    /// [`ServeHandle::run_shift`] with explicit online-tuner knobs:
+    /// `Some(cfg)` re-tunes between phases with that controller config
+    /// (smoothing, hysteresis, ...); `None` keeps the deployed plan
+    /// frozen. The tuner always shares the session cache.
+    pub fn run_shift_with(
+        &self,
+        phases: &[MixPhase],
+        concurrency: usize,
+        seed: u64,
+        tuner_cfg: Option<OnlineTunerConfig>,
+    ) -> PallasResult<Vec<MixReport>> {
+        let kinds: Vec<String> =
+            self.coord.router().kinds().iter().map(|k| k.to_string()).collect();
+        let kind_refs: Vec<&str> = kinds.iter().map(String::as_str).collect();
+        let mut tuner = tuner_cfg.map(|cfg| {
+            OnlineTuner::with_config(self.session.platform.clone(), &kind_refs, cfg)
+                .with_cache(Arc::clone(&self.session.cache))
+        });
+        Ok(loadgen::run_shift(&self.coord, phases, concurrency, seed, tuner.as_mut())?)
+    }
+
+    /// The latency tables this deployment serves from, as
+    /// `((kind, bucket), seconds)` rows sorted by kind then bucket —
+    /// read from the same `Arc`'d tables the worker lanes execute
+    /// against, so two deployments are behaviourally identical iff these
+    /// rows are bit-identical.
+    pub fn latency_table(&self) -> PallasResult<Vec<((String, usize), f64)>> {
+        match self.coord.current_plan() {
+            Some(plan) => {
+                let mut rows = std::collections::BTreeMap::new();
+                for a in plan.lane_assignments() {
+                    for (key, lat) in self.factory.latency_table(Some(&a))? {
+                        rows.entry(key).or_insert(lat);
+                    }
+                }
+                Ok(rows.into_iter().collect())
+            }
+            None => self.factory.latency_table(None),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_catalog_covers_zoo() {
+        let cat = model_catalog();
+        assert_eq!(cat.len(), models::model_names().len());
+        let wd = cat.iter().find(|m| m.name == "wide_deep").unwrap();
+        assert!(wd.ops > 0 && wd.width.avg_width >= 3);
+    }
+
+    #[test]
+    fn guideline_plan_matches_tuner_on_whole_machine() {
+        // single-kind workload: the facade's guideline tier must agree
+        // with calling the tuner directly
+        let session = Session::on(CpuPlatform::large2());
+        let w = Workload::single("wide_deep").unwrap();
+        let plan = session.tune(&w).unwrap();
+        assert_eq!(plan.tier, PlanTier::Guidelines);
+        assert_eq!(plan.entries.len(), 1);
+        let e = &plan.entries[0];
+        assert_eq!((e.first_core, e.cores), (0, 48));
+        let g = models::build("wide_deep", e.batch).unwrap();
+        let direct = tuner::tune(&g, &CpuPlatform::large2()).config;
+        assert_eq!(e.config.inter_op_pools, direct.inter_op_pools);
+        assert_eq!(e.config.mkl_threads, direct.mkl_threads);
+        assert!(e.predicted_latency_s > 0.0);
+    }
+
+    #[test]
+    fn policy_pin_only_touches_dispatch_dimension() {
+        let pinned = Session::builder()
+            .platform(CpuPlatform::large2())
+            .policy(SchedPolicy::CostlyFirst)
+            .build();
+        let free = Session::on(CpuPlatform::large2());
+        let w = Workload::single("transformer").unwrap();
+        let a = pinned.tune(&w).unwrap();
+        let b = free.tune(&w).unwrap();
+        assert_eq!(a.entries[0].config.sched_policy, SchedPolicy::CostlyFirst);
+        assert_eq!(a.entries[0].config.inter_op_pools, b.entries[0].config.inter_op_pools);
+        assert_eq!(a.entries[0].config.mkl_threads, b.entries[0].config.mkl_threads);
+    }
+
+    #[test]
+    fn baseline_and_exhaustive_tiers_carry_provenance() {
+        let session = Session::on(CpuPlatform::small());
+        let w = Workload::single("wide_deep").unwrap();
+        let base = session.tune_baseline(&w, Baseline::IntelRecommended).unwrap();
+        assert_eq!(base.tier, PlanTier::Baseline(Baseline::IntelRecommended));
+        let opt = session.tune_exhaustive(&w).unwrap();
+        assert_eq!(opt.tier, PlanTier::Exhaustive);
+        assert!(opt.evaluated > 10, "evaluated={}", opt.evaluated);
+        // the optimum cannot lose to the baseline it subsumes
+        assert!(opt.entries[0].predicted_latency_s <= base.entries[0].predicted_latency_s);
+    }
+
+    #[test]
+    fn exhaustive_tier_honours_policy_pin_as_a_constraint() {
+        // the pin restricts the sweep itself: the winner is a real
+        // lattice point of the pinned sub-lattice, and the pinned sweep
+        // evaluates strictly fewer points than the free one
+        let w = Workload::single("inception_v2").unwrap();
+        let free = Session::on(CpuPlatform::small()).tune_exhaustive(&w).unwrap();
+        let pinned = Session::builder()
+            .platform(CpuPlatform::small())
+            .policy(SchedPolicy::Topo)
+            .build()
+            .tune_exhaustive(&w)
+            .unwrap();
+        assert!(pinned.evaluated < free.evaluated);
+        let c = &pinned.entries[0].config;
+        assert!(c.inter_op_pools == 1 || c.sched_policy == SchedPolicy::Topo);
+        assert!(
+            pinned.entries[0].predicted_latency_s >= free.entries[0].predicted_latency_s
+        );
+    }
+
+    #[test]
+    fn manual_config_defaults_mirror_simulate_cmd() {
+        let session = Session::on(CpuPlatform::large());
+        let cfg = session.manual_config(Some(2), None, None).unwrap();
+        assert_eq!(cfg.mkl_threads, 12); // 24 physical / 2 pools
+        assert_eq!(cfg.intra_op_threads, 12);
+        assert!(session.manual_config(Some(0), None, None).is_err());
+    }
+
+    #[test]
+    fn serve_rejects_mismatched_platform() {
+        let tuned = Session::on(CpuPlatform::large2());
+        let plan = tuned.tune(&Workload::single("wide_deep").unwrap()).unwrap();
+        let other = Session::on(CpuPlatform::small());
+        assert!(matches!(
+            other.serve(&plan),
+            Err(PallasError::PlanMismatch { .. })
+        ));
+    }
+}

@@ -1,0 +1,140 @@
+//! Workload descriptors — *what* a session tunes and serves.
+//!
+//! A [`Workload`] names one or more model-zoo kinds with a batch size and
+//! a traffic weight each. Single-model tuning (`tune --model ncf`) is a
+//! one-entry workload; core-aware serving (`serve --kinds a,b`) is a
+//! multi-entry workload whose weights drive the proportional core split.
+//! Model names are validated against the zoo at construction, so a typo
+//! fails with [`PallasError::UnknownModel`] before any tuning work runs.
+
+use crate::error::{PallasError, PallasResult};
+use crate::models;
+
+/// One model in a workload: the zoo kind, the batch size tuning targets,
+/// and the kind's share of traffic (relative; need not sum to 1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadEntry {
+    /// Model-zoo name.
+    pub kind: String,
+    /// Batch size the tuner optimises for.
+    pub batch: usize,
+    /// Relative traffic weight (drives the core split in multi-kind
+    /// workloads; ignored for a single kind).
+    pub weight: f64,
+}
+
+/// A tuning/serving workload: model kinds + batches + traffic mix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Workload {
+    /// The described kinds, in declaration order.
+    pub entries: Vec<WorkloadEntry>,
+}
+
+impl Workload {
+    /// Single-model workload at the model's canonical batch size.
+    pub fn single(model: &str) -> PallasResult<Self> {
+        Self::mix(&[(model, 1.0)])
+    }
+
+    /// Multi-model workload with equal traffic weights.
+    pub fn kinds(kinds: &[&str]) -> PallasResult<Self> {
+        let mix: Vec<(&str, f64)> = kinds.iter().map(|k| (*k, 1.0)).collect();
+        Self::mix(&mix)
+    }
+
+    /// Multi-model workload with explicit traffic weights. Every kind
+    /// must exist in the zoo and appear at most once (one lane group per
+    /// kind — duplicate entries would silently collapse in the serving
+    /// tables); batches default to each model's canonical serving batch.
+    pub fn mix(mix: &[(&str, f64)]) -> PallasResult<Self> {
+        if mix.is_empty() {
+            return Err(PallasError::InvalidConfig("workload: no model kinds".into()));
+        }
+        for (i, (kind, _)) in mix.iter().enumerate() {
+            if mix[..i].iter().any(|(k, _)| k == kind) {
+                return Err(PallasError::InvalidConfig(format!(
+                    "workload: duplicate kind '{kind}'"
+                )));
+            }
+        }
+        let entries = mix
+            .iter()
+            .map(|(kind, weight)| {
+                if models::build(kind, 1).is_none() {
+                    return Err(PallasError::UnknownModel(kind.to_string()));
+                }
+                Ok(WorkloadEntry {
+                    kind: kind.to_string(),
+                    batch: models::canonical_batch(kind),
+                    weight: *weight,
+                })
+            })
+            .collect::<PallasResult<Vec<_>>>()?;
+        Ok(Workload { entries })
+    }
+
+    /// Override the batch size of every entry (the `tune --batch` knob;
+    /// meaningful for single-model workloads).
+    pub fn with_batch(mut self, batch: usize) -> PallasResult<Self> {
+        if batch == 0 {
+            return Err(PallasError::InvalidConfig("workload: batch must be >= 1".into()));
+        }
+        for e in &mut self.entries {
+            e.batch = batch;
+        }
+        Ok(self)
+    }
+
+    /// The described kind names, in declaration order.
+    pub fn kind_names(&self) -> Vec<&str> {
+        self.entries.iter().map(|e| e.kind.as_str()).collect()
+    }
+
+    /// The traffic mix as `(kind, weight)` pairs.
+    pub fn weights(&self) -> Vec<(String, f64)> {
+        self.entries.iter().map(|e| (e.kind.clone(), e.weight)).collect()
+    }
+
+    /// The first entry (the model of a single-model workload).
+    pub fn primary(&self) -> &WorkloadEntry {
+        &self.entries[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_uses_canonical_batch() {
+        let w = Workload::single("wide_deep").unwrap();
+        assert_eq!(w.entries.len(), 1);
+        assert_eq!(w.primary().batch, models::canonical_batch("wide_deep"));
+        assert_eq!(w.kind_names(), vec!["wide_deep"]);
+    }
+
+    #[test]
+    fn unknown_model_rejected_at_construction() {
+        assert_eq!(
+            Workload::single("bert").unwrap_err(),
+            PallasError::UnknownModel("bert".into())
+        );
+        assert!(Workload::mix(&[]).is_err());
+        assert!(Workload::kinds(&["wide_deep", "gpt"]).is_err());
+        assert!(matches!(
+            Workload::mix(&[("wide_deep", 0.9), ("wide_deep", 0.1)]),
+            Err(PallasError::InvalidConfig(m)) if m.contains("duplicate")
+        ));
+    }
+
+    #[test]
+    fn batch_override_and_weights() {
+        let w = Workload::mix(&[("wide_deep", 0.9), ("resnet50", 0.1)])
+            .unwrap()
+            .with_batch(4)
+            .unwrap();
+        assert!(w.entries.iter().all(|e| e.batch == 4));
+        assert_eq!(w.weights()[0], ("wide_deep".to_string(), 0.9));
+        assert!(Workload::single("ncf").unwrap().with_batch(0).is_err());
+    }
+}

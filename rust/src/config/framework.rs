@@ -11,6 +11,8 @@
 //! * thread-pool library → [`PoolLib`],
 //! * beyond-one-socket mechanism → [`ParallelismMode`].
 
+use crate::error::PallasError;
+
 use super::platform::CpuPlatform;
 
 /// How ready operators are prioritised for dispatch to free inter-op
@@ -237,22 +239,22 @@ impl FrameworkConfig {
     }
 
     /// Sanity-check the setting against a platform.
-    pub fn validate(&self, p: &CpuPlatform) -> Result<(), String> {
+    pub fn validate(&self, p: &CpuPlatform) -> Result<(), PallasError> {
         if self.inter_op_pools == 0 {
-            return Err("inter_op_pools must be >= 1".into());
+            return Err(PallasError::InvalidConfig("inter_op_pools must be >= 1".into()));
         }
         if self.mkl_threads == 0 {
-            return Err("mkl_threads must be >= 1".into());
+            return Err(PallasError::InvalidConfig("mkl_threads must be >= 1".into()));
         }
         if self.intra_op_threads == 0 {
-            return Err("intra_op_threads must be >= 1".into());
+            return Err(PallasError::InvalidConfig("intra_op_threads must be >= 1".into()));
         }
         if self.inter_op_pools > p.logical_cores() {
-            return Err(format!(
+            return Err(PallasError::InvalidConfig(format!(
                 "inter_op_pools={} exceeds logical cores={}",
                 self.inter_op_pools,
                 p.logical_cores()
-            ));
+            )));
         }
         Ok(())
     }

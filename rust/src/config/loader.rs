@@ -20,16 +20,37 @@
 //!
 //! Every field is optional; omitted knobs keep their
 //! [`FrameworkConfig::tuned_default`] value, and omitted `platform` means
-//! `large`.
+//! `large`. **Unknown keys are rejected** — a typo'd `sched_polcy` fails
+//! loudly with [`PallasError::InvalidConfig`] instead of silently falling
+//! back to defaults.
+//!
+//! The per-knob JSON mapping lives in [`apply_framework_keys`] /
+//! [`framework_to_json`], shared with the serializable tuning-plan
+//! artifact ([`crate::api::Plan`]) so the two documents can never drift.
 
-use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
 
+use crate::error::{PallasError, PallasResult};
 use crate::util::json::Json;
 
 use super::framework::{
     FrameworkConfig, MathLib, OperatorImpl, ParallelismMode, PoolLib, SchedPolicy,
 };
 use super::platform::CpuPlatform;
+
+/// The framework-knob keys [`apply_framework_keys`] understands, in
+/// document order (also the accepted-key list quoted in errors).
+pub const FRAMEWORK_KEYS: [&str; 9] = [
+    "inter_op_pools",
+    "mkl_threads",
+    "intra_op_threads",
+    "operator_impl",
+    "math_lib",
+    "pool_lib",
+    "parallelism",
+    "sched_policy",
+    "pin_threads",
+];
 
 /// A fully-resolved run configuration.
 #[derive(Debug, Clone, PartialEq)]
@@ -50,104 +71,219 @@ impl Default for RunConfig {
 }
 
 impl RunConfig {
-    /// Parse a JSON config document.
-    pub fn from_json_str(text: &str) -> Result<Self> {
-        let doc = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+    /// Parse a JSON config document. Unknown keys are rejected.
+    pub fn from_json_str(text: &str) -> PallasResult<Self> {
+        let doc = Json::parse(text)?;
+        let obj = doc
+            .as_obj()
+            .ok_or_else(|| PallasError::InvalidConfig("config must be a JSON object".into()))?;
         let mut cfg = RunConfig::default();
 
-        if let Some(p) = doc.get("platform") {
-            let name = p.as_str().context("platform must be a string")?;
+        for key in obj.keys() {
+            if key != "platform" && !FRAMEWORK_KEYS.contains(&key.as_str()) {
+                return Err(unknown_key_error(key));
+            }
+        }
+        if let Some(p) = obj.get("platform") {
+            let name = p
+                .as_str()
+                .ok_or_else(|| PallasError::InvalidConfig("platform must be a string".into()))?;
             cfg.platform = CpuPlatform::by_name(name)
-                .ok_or_else(|| anyhow!("unknown platform '{name}'"))?;
+                .ok_or_else(|| PallasError::UnknownPlatform(name.to_string()))?;
         }
-        let fw = &mut cfg.framework;
-        if let Some(v) = doc.get("inter_op_pools") {
-            fw.inter_op_pools = usize_field(v, "inter_op_pools")?;
-        }
-        if let Some(v) = doc.get("mkl_threads") {
-            fw.mkl_threads = usize_field(v, "mkl_threads")?;
-        }
-        if let Some(v) = doc.get("intra_op_threads") {
-            fw.intra_op_threads = usize_field(v, "intra_op_threads")?;
-        }
-        if let Some(v) = doc.get("operator_impl") {
-            fw.operator_impl = match v.as_str() {
-                Some("serial") | Some("matmul1") => OperatorImpl::Serial,
-                Some("intra_op_parallel") | Some("matmul2") => OperatorImpl::IntraOpParallel,
-                other => bail!("bad operator_impl: {other:?}"),
-            };
-        }
-        if let Some(v) = doc.get("math_lib") {
-            let s = v.as_str().context("math_lib must be a string")?;
-            fw.math_lib = MathLib::parse(s).ok_or_else(|| anyhow!("bad math_lib '{s}'"))?;
-        }
-        if let Some(v) = doc.get("pool_lib") {
-            let s = v.as_str().context("pool_lib must be a string")?;
-            fw.pool_lib = PoolLib::parse(s).ok_or_else(|| anyhow!("bad pool_lib '{s}'"))?;
-        }
-        if let Some(v) = doc.get("parallelism") {
-            fw.parallelism = match v.as_str() {
-                Some("data") => ParallelismMode::DataParallel,
-                Some("model") => ParallelismMode::ModelParallel,
-                other => bail!("bad parallelism: {other:?}"),
-            };
-        }
-        if let Some(v) = doc.get("sched_policy") {
-            let s = v.as_str().context("sched_policy must be a string")?;
-            fw.sched_policy =
-                SchedPolicy::parse(s).ok_or_else(|| anyhow!("bad sched_policy '{s}'"))?;
-        }
-        if let Some(v) = doc.get("pin_threads") {
-            fw.pin_threads = matches!(v, Json::Bool(true));
-        }
-        fw.validate(&cfg.platform).map_err(|e| anyhow!(e))?;
+        apply_framework_keys(&mut cfg.framework, obj)?;
+        cfg.framework.validate(&cfg.platform)?;
         Ok(cfg)
     }
 
     /// Load from a file path.
-    pub fn from_file(path: &str) -> Result<Self> {
-        let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading config {path}"))?;
+    pub fn from_file(path: &str) -> PallasResult<Self> {
+        let text = std::fs::read_to_string(path).map_err(|e| PallasError::io(path, e))?;
         Self::from_json_str(&text)
     }
 
     /// Apply `key=value` CLI overrides on top of this config.
-    pub fn apply_override(&mut self, key: &str, value: &str) -> Result<()> {
+    pub fn apply_override(&mut self, key: &str, value: &str) -> PallasResult<()> {
         match key {
             "platform" => {
                 self.platform = CpuPlatform::by_name(value)
-                    .ok_or_else(|| anyhow!("unknown platform '{value}'"))?;
+                    .ok_or_else(|| PallasError::UnknownPlatform(value.to_string()))?;
             }
-            "inter_op_pools" => self.framework.inter_op_pools = value.parse()?,
-            "mkl_threads" => self.framework.mkl_threads = value.parse()?,
-            "intra_op_threads" => self.framework.intra_op_threads = value.parse()?,
+            "inter_op_pools" => self.framework.inter_op_pools = parse_usize(key, value)?,
+            "mkl_threads" => self.framework.mkl_threads = parse_usize(key, value)?,
+            "intra_op_threads" => self.framework.intra_op_threads = parse_usize(key, value)?,
             "math_lib" => {
-                self.framework.math_lib =
-                    MathLib::parse(value).ok_or_else(|| anyhow!("bad math_lib '{value}'"))?;
+                self.framework.math_lib = MathLib::parse(value)
+                    .ok_or_else(|| PallasError::InvalidConfig(format!("bad math_lib '{value}'")))?;
             }
             "pool_lib" => {
-                self.framework.pool_lib =
-                    PoolLib::parse(value).ok_or_else(|| anyhow!("bad pool_lib '{value}'"))?;
+                self.framework.pool_lib = PoolLib::parse(value)
+                    .ok_or_else(|| PallasError::InvalidConfig(format!("bad pool_lib '{value}'")))?;
             }
             "operator_impl" => {
-                self.framework.operator_impl = match value {
-                    "serial" | "matmul1" => OperatorImpl::Serial,
-                    "intra_op_parallel" | "matmul2" => OperatorImpl::IntraOpParallel,
-                    _ => bail!("bad operator_impl '{value}'"),
-                };
+                self.framework.operator_impl = parse_operator_impl(value)?;
             }
             "sched_policy" => {
                 self.framework.sched_policy = SchedPolicy::parse(value)
-                    .ok_or_else(|| anyhow!("bad sched_policy '{value}'"))?;
+                    .ok_or_else(|| PallasError::UnknownPolicy(value.to_string()))?;
             }
-            _ => bail!("unknown config key '{key}'"),
+            _ => return Err(unknown_key_error(key)),
         }
         Ok(())
     }
 }
 
-fn usize_field(v: &Json, name: &str) -> Result<usize> {
-    v.as_usize().with_context(|| format!("{name} must be a number"))
+fn unknown_key_error(key: &str) -> PallasError {
+    PallasError::InvalidConfig(format!(
+        "unknown config key '{key}' (accepted: platform, {})",
+        FRAMEWORK_KEYS.join(", ")
+    ))
+}
+
+fn parse_usize(name: &str, value: &str) -> PallasResult<usize> {
+    value
+        .parse::<usize>()
+        .map_err(|_| PallasError::InvalidConfig(format!("{name} must be a number, got '{value}'")))
+}
+
+fn parse_operator_impl(value: &str) -> PallasResult<OperatorImpl> {
+    match value {
+        "serial" | "matmul1" => Ok(OperatorImpl::Serial),
+        "intra_op_parallel" | "matmul2" => Ok(OperatorImpl::IntraOpParallel),
+        _ => Err(PallasError::InvalidConfig(format!("bad operator_impl '{value}'"))),
+    }
+}
+
+/// Canonical JSON spelling of each enum knob (the inverse of what
+/// [`apply_framework_keys`] parses — round-trips exactly).
+fn operator_impl_name(v: OperatorImpl) -> &'static str {
+    match v {
+        OperatorImpl::Serial => "serial",
+        OperatorImpl::IntraOpParallel => "intra_op_parallel",
+    }
+}
+
+fn math_lib_name(v: MathLib) -> &'static str {
+    match v {
+        MathLib::Mkl => "mkl",
+        MathLib::MklDnn => "mkl-dnn",
+        MathLib::Eigen => "eigen",
+    }
+}
+
+fn pool_lib_name(v: PoolLib) -> &'static str {
+    match v {
+        PoolLib::StdThread => "std",
+        PoolLib::Eigen => "eigen",
+        PoolLib::Folly => "folly",
+    }
+}
+
+fn parallelism_name(v: ParallelismMode) -> &'static str {
+    match v {
+        ParallelismMode::DataParallel => "data",
+        ParallelismMode::ModelParallel => "model",
+    }
+}
+
+/// Fold the framework-knob keys of a JSON object into `fw`. Keys outside
+/// [`FRAMEWORK_KEYS`] are the **caller's** responsibility to reject (so
+/// documents embedding a config object alongside other keys — like the
+/// plan artifact — can reuse this); values of the wrong shape fail with
+/// [`PallasError::InvalidConfig`].
+pub fn apply_framework_keys(
+    fw: &mut FrameworkConfig,
+    obj: &BTreeMap<String, Json>,
+) -> PallasResult<()> {
+    let usize_field = |v: &Json, name: &str| -> PallasResult<usize> {
+        v.as_usize()
+            .ok_or_else(|| PallasError::InvalidConfig(format!("{name} must be a number")))
+    };
+    let str_field = |v: &Json, name: &str| -> PallasResult<String> {
+        Ok(v.as_str()
+            .ok_or_else(|| PallasError::InvalidConfig(format!("{name} must be a string")))?
+            .to_string())
+    };
+    if let Some(v) = obj.get("inter_op_pools") {
+        fw.inter_op_pools = usize_field(v, "inter_op_pools")?;
+    }
+    if let Some(v) = obj.get("mkl_threads") {
+        fw.mkl_threads = usize_field(v, "mkl_threads")?;
+    }
+    if let Some(v) = obj.get("intra_op_threads") {
+        fw.intra_op_threads = usize_field(v, "intra_op_threads")?;
+    }
+    if let Some(v) = obj.get("operator_impl") {
+        fw.operator_impl = parse_operator_impl(&str_field(v, "operator_impl")?)?;
+    }
+    if let Some(v) = obj.get("math_lib") {
+        let s = str_field(v, "math_lib")?;
+        fw.math_lib = MathLib::parse(&s)
+            .ok_or_else(|| PallasError::InvalidConfig(format!("bad math_lib '{s}'")))?;
+    }
+    if let Some(v) = obj.get("pool_lib") {
+        let s = str_field(v, "pool_lib")?;
+        fw.pool_lib = PoolLib::parse(&s)
+            .ok_or_else(|| PallasError::InvalidConfig(format!("bad pool_lib '{s}'")))?;
+    }
+    if let Some(v) = obj.get("parallelism") {
+        fw.parallelism = match str_field(v, "parallelism")?.as_str() {
+            "data" => ParallelismMode::DataParallel,
+            "model" => ParallelismMode::ModelParallel,
+            other => {
+                return Err(PallasError::InvalidConfig(format!("bad parallelism '{other}'")))
+            }
+        };
+    }
+    if let Some(v) = obj.get("sched_policy") {
+        let s = str_field(v, "sched_policy")?;
+        fw.sched_policy =
+            SchedPolicy::parse(&s).ok_or_else(|| PallasError::UnknownPolicy(s.clone()))?;
+    }
+    if let Some(v) = obj.get("pin_threads") {
+        fw.pin_threads = match v {
+            Json::Bool(b) => *b,
+            _ => {
+                return Err(PallasError::InvalidConfig(
+                    "pin_threads must be a boolean".into(),
+                ))
+            }
+        };
+    }
+    Ok(())
+}
+
+/// Serialize a framework setting as the JSON object
+/// [`apply_framework_keys`] parses back exactly (every knob explicit, so
+/// a deserialized plan never depends on future default changes).
+pub fn framework_to_json(fw: &FrameworkConfig) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("inter_op_pools".into(), Json::Num(fw.inter_op_pools as f64));
+    m.insert("mkl_threads".into(), Json::Num(fw.mkl_threads as f64));
+    m.insert("intra_op_threads".into(), Json::Num(fw.intra_op_threads as f64));
+    m.insert("operator_impl".into(), Json::Str(operator_impl_name(fw.operator_impl).into()));
+    m.insert("math_lib".into(), Json::Str(math_lib_name(fw.math_lib).into()));
+    m.insert("pool_lib".into(), Json::Str(pool_lib_name(fw.pool_lib).into()));
+    m.insert("parallelism".into(), Json::Str(parallelism_name(fw.parallelism).into()));
+    m.insert("sched_policy".into(), Json::Str(fw.sched_policy.name().into()));
+    m.insert("pin_threads".into(), Json::Bool(fw.pin_threads));
+    Json::Obj(m)
+}
+
+/// Parse a framework setting from a full JSON object produced by
+/// [`framework_to_json`], rejecting unknown keys.
+pub fn framework_from_json(v: &Json) -> PallasResult<FrameworkConfig> {
+    let obj = v
+        .as_obj()
+        .ok_or_else(|| PallasError::InvalidConfig("framework config must be an object".into()))?;
+    for key in obj.keys() {
+        if !FRAMEWORK_KEYS.contains(&key.as_str()) {
+            return Err(unknown_key_error(key));
+        }
+    }
+    let mut fw = FrameworkConfig::tuned_default();
+    apply_framework_keys(&mut fw, obj)?;
+    Ok(fw)
 }
 
 #[cfg(test)]
@@ -180,10 +316,39 @@ mod tests {
 
     #[test]
     fn rejects_bad_values() {
-        assert!(RunConfig::from_json_str(r#"{"platform":"tpu"}"#).is_err());
-        assert!(RunConfig::from_json_str(r#"{"math_lib":"blas"}"#).is_err());
-        assert!(RunConfig::from_json_str(r#"{"inter_op_pools":0}"#).is_err());
-        assert!(RunConfig::from_json_str(r#"{"sched_policy":"fifo"}"#).is_err());
+        assert!(matches!(
+            RunConfig::from_json_str(r#"{"platform":"tpu"}"#),
+            Err(PallasError::UnknownPlatform(p)) if p == "tpu"
+        ));
+        assert!(matches!(
+            RunConfig::from_json_str(r#"{"math_lib":"blas"}"#),
+            Err(PallasError::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            RunConfig::from_json_str(r#"{"inter_op_pools":0}"#),
+            Err(PallasError::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            RunConfig::from_json_str(r#"{"sched_policy":"fifo"}"#),
+            Err(PallasError::UnknownPolicy(p)) if p == "fifo"
+        ));
+    }
+
+    #[test]
+    fn rejects_unknown_keys_naming_the_key() {
+        // the silent-typo bug: 'sched_polcy' used to fall back to defaults
+        let err = RunConfig::from_json_str(r#"{"sched_polcy":"critical-path"}"#).unwrap_err();
+        match err {
+            PallasError::InvalidConfig(m) => {
+                assert!(m.contains("sched_polcy"), "{m}");
+                assert!(m.contains("sched_policy"), "error should list accepted keys: {m}");
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+        assert!(RunConfig::from_json_str(r#"{"platfrom":"large"}"#).is_err());
+        // wrong-shape values are as fatal as wrong keys
+        assert!(RunConfig::from_json_str(r#"{"pin_threads":"true"}"#).is_err());
+        assert!(RunConfig::from_json_str(r#"{"pin_threads":false}"#).is_ok());
     }
 
     #[test]
@@ -203,5 +368,35 @@ mod tests {
         assert_eq!(cfg.platform.name, "small");
         assert_eq!(cfg.framework.mkl_threads, 4);
         assert!(cfg.apply_override("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn framework_json_roundtrip_every_knob() {
+        // exercise non-default values on every enum dimension
+        let mut fw = FrameworkConfig::tuned_default();
+        fw.inter_op_pools = 3;
+        fw.mkl_threads = 16;
+        fw.intra_op_threads = 12;
+        fw.operator_impl = OperatorImpl::Serial;
+        fw.math_lib = MathLib::Eigen;
+        fw.pool_lib = PoolLib::StdThread;
+        fw.parallelism = ParallelismMode::ModelParallel;
+        fw.sched_policy = SchedPolicy::CostlyFirst;
+        fw.pin_threads = false;
+        let v = framework_to_json(&fw);
+        assert_eq!(framework_from_json(&v).unwrap(), fw);
+        // and through a text round-trip
+        let text = crate::util::json::to_string(&v);
+        let fw2 = framework_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(fw2, fw);
+    }
+
+    #[test]
+    fn framework_from_json_rejects_unknown_keys() {
+        let mut v = framework_to_json(&FrameworkConfig::tuned_default());
+        if let Json::Obj(m) = &mut v {
+            m.insert("mkl_treads".into(), Json::Num(4.0));
+        }
+        assert!(framework_from_json(&v).is_err());
     }
 }

@@ -6,5 +6,5 @@ pub mod loader;
 pub mod platform;
 
 pub use framework::{FrameworkConfig, MathLib, OperatorImpl, ParallelismMode, PoolLib, SchedPolicy};
-pub use loader::RunConfig;
+pub use loader::{apply_framework_keys, framework_from_json, framework_to_json, RunConfig};
 pub use platform::CpuPlatform;

@@ -17,6 +17,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::error::PallasError;
 use crate::metrics::{Gauge, ServingMetrics};
 use crate::runtime::{Backend, BackendFactory, Tensor};
 use crate::sched::LaneAssignment;
@@ -74,7 +75,7 @@ impl WorkerLane {
         let depth = Arc::new(Gauge::new());
         let lane_depth = Arc::clone(&depth);
         let (tx, rx) = channel::<LaneMsg>();
-        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let (ready_tx, ready_rx) = channel::<Result<(), PallasError>>();
         let handle = std::thread::Builder::new()
             .name(format!("worker-lane-{lane_id}"))
             .spawn(move || {
@@ -209,7 +210,7 @@ pub fn execute_batch(backend: &dyn Backend, batch: PendingBatch, metrics: &Servi
         }
         Err(e) => {
             let execute_s = dispatch_time.elapsed().as_secs_f64();
-            let msg = format!("{e:#}");
+            let msg = e.to_string();
             for req in batch.requests {
                 metrics.requests.inc();
                 kind_counters.completed.inc();

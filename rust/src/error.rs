@@ -1,0 +1,175 @@
+//! The crate's typed error — the single error type of the [`crate::api`]
+//! facade.
+//!
+//! Before this module, failures crossed layer boundaries as bare
+//! `String`s (`config::validate`) or opaque `anyhow` messages (loader,
+//! tuner, runtime), so callers could neither match on what went wrong nor
+//! trust the message shape. [`PallasError`] names every failure class the
+//! public surface can produce; internal serving plumbing may still use
+//! `anyhow` for thread-channel glue, and a `PallasError` flows into it
+//! transparently (it implements [`std::error::Error`], which the vendored
+//! `anyhow` shim blanket-converts).
+//!
+//! Taxonomy (documented in `DESIGN.md` §API layer):
+//!
+//! | variant          | meaning                                              |
+//! |------------------|------------------------------------------------------|
+//! | `InvalidConfig`  | framework knobs / config document rejected           |
+//! | `UnknownModel`   | model name not in the zoo (or artifact set)          |
+//! | `UnknownPlatform`| platform name not a Table-1 preset                   |
+//! | `UnknownPolicy`  | dispatch-policy name not recognised                  |
+//! | `InvalidGraph`   | computational-graph invariant violated               |
+//! | `InvalidPlan`    | lane-plan/plan-artifact invariant violated           |
+//! | `PlanMismatch`   | plan artifact targets a different platform           |
+//! | `Parse`          | JSON / artifact-document parse failure               |
+//! | `Io`             | file read/write failure (with the path)              |
+//! | `Backend`        | execution-backend / serving-runtime failure          |
+//! | `Cli`            | command-line usage error (unknown flag, bad value)   |
+
+use std::fmt;
+
+/// Every failure class the `parframe` public API can produce.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PallasError {
+    /// A framework setting or config document failed validation.
+    InvalidConfig(String),
+    /// A model name is not in the zoo (or served catalog).
+    UnknownModel(String),
+    /// A platform name is not one of the Table-1 presets.
+    UnknownPlatform(String),
+    /// A dispatch-policy name is not recognised.
+    UnknownPolicy(String),
+    /// A computational graph violated its DAG invariants.
+    InvalidGraph(String),
+    /// A lane plan or plan artifact violated its invariants.
+    InvalidPlan(String),
+    /// A serialized plan targets a different platform than the session.
+    PlanMismatch {
+        /// Platform the plan was tuned for.
+        expected_platform: String,
+        /// Platform it was applied to.
+        got: String,
+    },
+    /// A document failed to parse (`what` names the document kind).
+    Parse {
+        /// Document kind ("json", "plan", "manifest", ...).
+        what: String,
+        /// Parser message.
+        message: String,
+    },
+    /// A file operation failed.
+    Io {
+        /// Path involved.
+        path: String,
+        /// OS error message.
+        message: String,
+    },
+    /// An execution backend or the serving runtime failed.
+    Backend(String),
+    /// Command-line usage error.
+    Cli(String),
+}
+
+impl PallasError {
+    /// Convenience constructor for file failures.
+    pub fn io(path: impl fmt::Display, err: impl fmt::Display) -> Self {
+        PallasError::Io { path: path.to_string(), message: err.to_string() }
+    }
+
+    /// Convenience constructor for parse failures.
+    pub fn parse(what: impl Into<String>, err: impl fmt::Display) -> Self {
+        PallasError::Parse { what: what.into(), message: err.to_string() }
+    }
+}
+
+impl fmt::Display for PallasError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PallasError::InvalidConfig(m) => write!(f, "invalid config: {m}"),
+            PallasError::UnknownModel(m) => write!(f, "unknown model '{m}'"),
+            PallasError::UnknownPlatform(p) => {
+                write!(f, "unknown platform '{p}' (small | large | large.2)")
+            }
+            PallasError::UnknownPolicy(p) => {
+                write!(f, "unknown policy '{p}' (topo | critical-path | costly)")
+            }
+            PallasError::InvalidGraph(m) => write!(f, "invalid graph: {m}"),
+            PallasError::InvalidPlan(m) => write!(f, "invalid plan: {m}"),
+            PallasError::PlanMismatch { expected_platform, got } => write!(
+                f,
+                "plan mismatch: plan was tuned for platform '{expected_platform}', \
+                 applied to '{got}'"
+            ),
+            PallasError::Parse { what, message } => write!(f, "{what} parse error: {message}"),
+            PallasError::Io { path, message } => write!(f, "{path}: {message}"),
+            PallasError::Backend(m) => write!(f, "backend error: {m}"),
+            PallasError::Cli(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for PallasError {}
+
+/// Result alias over [`PallasError`] — the facade's return type.
+pub type PallasResult<T> = Result<T, PallasError>;
+
+impl From<crate::util::json::JsonError> for PallasError {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        PallasError::parse("json", e)
+    }
+}
+
+// Internal serving plumbing (coordinator channels, loadgen) still speaks
+// `anyhow`; the facade folds those failures into `Backend`. The reverse
+// direction needs no impl: `PallasError: std::error::Error`, which the
+// vendored shim's blanket `From` already converts.
+impl From<anyhow::Error> for PallasError {
+    fn from(e: anyhow::Error) -> Self {
+        PallasError::Backend(format!("{e:#}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_failure_class() {
+        assert_eq!(
+            PallasError::UnknownModel("bert".into()).to_string(),
+            "unknown model 'bert'"
+        );
+        assert!(PallasError::InvalidConfig("x".into()).to_string().contains("invalid config"));
+        let pm = PallasError::PlanMismatch {
+            expected_platform: "large.2".into(),
+            got: "small".into(),
+        };
+        let s = pm.to_string();
+        assert!(s.contains("large.2") && s.contains("small"), "{s}");
+    }
+
+    #[test]
+    fn converts_into_anyhow_via_question_mark() {
+        fn inner() -> PallasResult<()> {
+            Err(PallasError::UnknownPlatform("tpu".into()))
+        }
+        fn outer() -> anyhow::Result<()> {
+            inner()?;
+            Ok(())
+        }
+        let e = outer().unwrap_err();
+        assert!(e.to_string().contains("tpu"));
+    }
+
+    #[test]
+    fn converts_from_anyhow() {
+        let e: PallasError = anyhow::anyhow!("lane died").into();
+        assert_eq!(e, PallasError::Backend("lane died".into()));
+    }
+
+    #[test]
+    fn json_errors_become_parse() {
+        let e: PallasError = crate::util::json::Json::parse("{").unwrap_err().into();
+        assert!(matches!(e, PallasError::Parse { ref what, .. } if what == "json"));
+    }
+}

@@ -20,6 +20,7 @@ pub use builder::GraphBuilder;
 pub use rank::{dispatch_weight, upward_ranks};
 pub use width::{WidthAnalysis, analyze_width};
 
+use crate::error::PallasError;
 use crate::ops::{OpCost, OpKind};
 
 /// Node identifier (index into [`Graph::nodes`]).
@@ -103,17 +104,17 @@ impl Graph {
     }
 
     /// Validate the DAG invariants (deps precede nodes, no dangling ids).
-    pub fn validate(&self) -> Result<(), String> {
+    pub fn validate(&self) -> Result<(), PallasError> {
         for (i, n) in self.nodes.iter().enumerate() {
             if n.id.0 != i {
-                return Err(format!("node {} id mismatch", i));
+                return Err(PallasError::InvalidGraph(format!("node {} id mismatch", i)));
             }
             for d in &n.deps {
                 if d.0 >= i {
-                    return Err(format!(
+                    return Err(PallasError::InvalidGraph(format!(
                         "node '{}' depends on later/self node {}",
                         n.name, d.0
-                    ));
+                    )));
                 }
             }
         }

@@ -4,12 +4,28 @@
 //! production-shaped reproduction of *"Exploiting Parallelism Opportunities
 //! with Deep Learning Frameworks"* (Wang et al., 2019).
 //!
-//! The crate is organised in three layers (see `DESIGN.md`):
+//! ## The supported surface: [`api`]
+//!
+//! Application code should go through the **[`api`] facade** — a
+//! [`api::Session`] owning the shared platform/cache/sweep state, a
+//! [`api::Workload`] describing what to tune, and a serializable
+//! [`api::Plan`] carrying the tuning decision across processes
+//! (`tune --emit-plan` → `serve --plan`). Every facade call returns the
+//! typed [`PallasError`]. The CLI, the examples and the integration tests
+//! are all thin shells over it; the blessed types are re-exported at the
+//! crate root.
+//!
+//! ## Internals
+//!
+//! The remaining modules are the machinery the facade orchestrates
+//! (public for benches, tests and power users; their APIs move more
+//! freely than the facade's):
 //!
 //! * **Framework core** — [`graph`] (computational-graph IR + width
 //!   analysis), [`ops`] (operator cost descriptors), [`models`] (the paper's
 //!   model zoo), [`sched`] (sync/async operator scheduling over inter-op
-//!   pools), [`libs`] (math-library models + three real thread pools).
+//!   pools + core-aware lane planning), [`libs`] (math-library models +
+//!   three real thread pools).
 //! * **Platform substrate** — [`sim`], a discrete-event simulator of the
 //!   paper's Skylake testbeds (cores, SMT/FMA contention, LLC, memory and
 //!   UPI bandwidth) that produces the same per-core time breakdowns the
@@ -20,14 +36,16 @@
 //!   model zoo through the simulator with zero external artifacts),
 //!   [`coordinator`] (request router + dynamic batcher + load generator),
 //!   and [`tuner`] (the paper's §8 guidelines + Intel/TensorFlow baselines +
-//!   exhaustive search).
+//!   exhaustive search + the online re-tuner).
 //!
 //! [`bench_tables`] regenerates every figure and table of the paper's
 //! evaluation.
 
+pub mod api;
 pub mod bench_tables;
 pub mod config;
 pub mod coordinator;
+pub mod error;
 pub mod graph;
 pub mod libs;
 pub mod metrics;
@@ -39,3 +57,9 @@ pub mod sim;
 pub mod trace;
 pub mod tuner;
 pub mod util;
+
+pub use api::{
+    model_catalog, ModelInfo, Plan, PlanEntry, PlanTier, ServeHandle, Session, SessionBuilder,
+    Workload, WorkloadEntry,
+};
+pub use error::{PallasError, PallasResult};

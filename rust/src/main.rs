@@ -1,117 +1,199 @@
-//! `parframe` CLI — leader entrypoint.
+//! `parframe` CLI — a thin declarative shell over [`parframe::api`].
 //!
 //! ```text
 //! parframe models                          list the model zoo + widths
-//! parframe tune --model ncf [--platform large.2]
-//! parframe tune --model ncf --exhaustive --jobs 8   (parallel global-optimum sweep)
+//! parframe tune --model ncf [--platform large.2] [--exhaustive] [--jobs 8]
+//! parframe tune --model ncf --emit-plan plan.json   (serializable tuning plan)
+//! parframe plan --show plan.json           inspect a plan artifact
 //! parframe simulate --model resnet50 --pools 2 --mkl 12 --intra 12
 //! parframe figures --fig 18 | --table 2 | --all
 //! parframe serve --kind wide_deep --requests 256      (sim backend)
+//! parframe serve --plan plan.json                     (deploy a tuned plan)
 //! parframe serve --kinds wide_deep,resnet50           (core-aware lane plan)
 //! parframe serve --kinds wide_deep,resnet50 --adaptive (online re-tuning)
 //! parframe serve --backend pjrt --artifacts artifacts --kind mlp
 //! parframe check --artifacts artifacts     verify artifact digests via PJRT
 //! ```
+//!
+//! Every subcommand is a ~10-line adapter: parse flags against the
+//! subcommand's declared spec (unknown flags error out listing what is
+//! accepted), build a [`Session`]/[`Workload`]/[`Plan`], call the facade,
+//! print.
 
 use std::collections::HashMap;
-use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Context, Result};
-
+use parframe::api::{model_catalog, Plan, Session, Workload};
 use parframe::bench_tables;
-use parframe::config::{CpuPlatform, OperatorImpl, RunConfig, SchedPolicy};
-use parframe::coordinator::{
-    loadgen, BatchPolicy, Coordinator, CoordinatorConfig, LoadgenConfig, MixPhase,
-};
-use parframe::graph::analyze_width;
-use parframe::models;
-use parframe::runtime::{ModelRuntime, SimBackendConfig, SimBackendFactory};
-use parframe::sched::LanePlan;
-use parframe::sim::{self, SimCache};
-use parframe::tuner;
-use parframe::tuner::{OnlineTuner, OnlineTunerConfig, SweepOptions};
+use parframe::coordinator::loadgen;
+use parframe::coordinator::{Coordinator, CoordinatorConfig, LoadgenConfig, MixPhase};
+use parframe::runtime::ModelRuntime;
+use parframe::tuner::Baseline;
+use parframe::{PallasError, PallasResult};
 
 fn main() {
     if let Err(e) = run() {
-        eprintln!("error: {e:#}");
+        eprintln!("error: {e}");
         std::process::exit(1);
     }
 }
 
-/// Minimal flag parser: `--key value` pairs after the subcommand.
-fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
+/// One accepted flag of a subcommand: name (without `--`) and whether a
+/// value follows it.
+struct FlagSpec {
+    name: &'static str,
+    takes_value: bool,
+}
+
+const fn flag(name: &'static str) -> FlagSpec {
+    FlagSpec { name, takes_value: true }
+}
+
+const fn switch(name: &'static str) -> FlagSpec {
+    FlagSpec { name, takes_value: false }
+}
+
+const TUNE_FLAGS: &[FlagSpec] = &[
+    flag("model"),
+    flag("platform"),
+    flag("batch"),
+    flag("policy"),
+    flag("jobs"),
+    flag("emit-plan"),
+    switch("exhaustive"),
+];
+const SIMULATE_FLAGS: &[FlagSpec] = &[
+    flag("model"),
+    flag("platform"),
+    flag("batch"),
+    flag("pools"),
+    flag("mkl"),
+    flag("intra"),
+    flag("policy"),
+];
+const FIGURES_FLAGS: &[FlagSpec] = &[flag("fig"), flag("table"), switch("all")];
+const SERVE_FLAGS: &[FlagSpec] = &[
+    flag("backend"),
+    flag("kind"),
+    flag("kinds"),
+    flag("plan"),
+    flag("emit-plan"),
+    flag("requests"),
+    flag("lanes"),
+    flag("concurrency"),
+    flag("platform"),
+    flag("policy"),
+    flag("jobs"),
+    flag("artifacts"),
+    switch("adaptive"),
+];
+const PLAN_FLAGS: &[FlagSpec] = &[flag("show")];
+const CHECK_FLAGS: &[FlagSpec] = &[flag("artifacts")];
+const NO_FLAGS: &[FlagSpec] = &[];
+
+/// Parse `--key [value]` pairs against a subcommand's spec. Unknown or
+/// misspelled flags are fatal and the error lists every accepted flag —
+/// a dropped `--job 8` must never silently fall back to defaults.
+fn parse_flags(
+    cmd: &str,
+    args: &[String],
+    spec: &[FlagSpec],
+) -> PallasResult<HashMap<String, String>> {
+    let accepted = || -> String {
+        if spec.is_empty() {
+            return "none".into();
+        }
+        spec.iter()
+            .map(|f| {
+                if f.takes_value {
+                    format!("--{} VALUE", f.name)
+                } else {
+                    format!("--{}", f.name)
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(", ")
+    };
     let mut flags = HashMap::new();
     let mut i = 0;
     while i < args.len() {
         let a = &args[i];
-        if let Some(key) = a.strip_prefix("--") {
-            if key == "all" || key == "adaptive" || key == "exhaustive" {
-                flags.insert(key.to_string(), "true".to_string());
-                i += 1;
-            } else {
-                let v = args.get(i + 1).ok_or_else(|| anyhow!("missing value for --{key}"))?;
-                flags.insert(key.to_string(), v.clone());
-                i += 2;
-            }
+        let Some(key) = a.strip_prefix("--") else {
+            return Err(PallasError::Cli(format!(
+                "unexpected argument '{a}' for '{cmd}' (accepted flags: {})",
+                accepted()
+            )));
+        };
+        let Some(f) = spec.iter().find(|f| f.name == key) else {
+            return Err(PallasError::Cli(format!(
+                "unknown flag --{key} for '{cmd}' (accepted flags: {})",
+                accepted()
+            )));
+        };
+        if f.takes_value {
+            let v = args.get(i + 1).ok_or_else(|| {
+                PallasError::Cli(format!("missing value for --{key} (usage: --{key} VALUE)"))
+            })?;
+            flags.insert(key.to_string(), v.clone());
+            i += 2;
         } else {
-            bail!("unexpected argument '{a}'");
+            flags.insert(key.to_string(), "true".to_string());
+            i += 1;
         }
     }
     Ok(flags)
 }
 
-fn platform_from(flags: &HashMap<String, String>) -> Result<CpuPlatform> {
-    let name = flags.get("platform").map(String::as_str).unwrap_or("large.2");
-    CpuPlatform::by_name(name).ok_or_else(|| anyhow!("unknown platform '{name}'"))
+/// Build the session every subcommand shares from the common flags
+/// (`--platform`, `--jobs`, `--policy`).
+fn session_from(flags: &HashMap<String, String>) -> PallasResult<Session> {
+    let mut b = Session::builder();
+    if let Some(p) = flags.get("platform") {
+        b = b.platform_named(p)?;
+    }
+    if let Some(p) = flags.get("policy") {
+        b = b.policy_named(p)?;
+    }
+    if let Some(j) = flags.get("jobs") {
+        b = b.jobs(parse_num(j, "jobs")?);
+    }
+    Ok(b.build())
 }
 
-/// Optional `--policy` flag.
-fn policy_from(flags: &HashMap<String, String>) -> Result<Option<SchedPolicy>> {
-    flags
-        .get("policy")
-        .map(|p| {
-            SchedPolicy::parse(p)
-                .ok_or_else(|| anyhow!("unknown policy '{p}' (topo | critical-path | costly)"))
-        })
-        .transpose()
+fn parse_num(v: &str, what: &str) -> PallasResult<usize> {
+    v.parse::<usize>()
+        .map_err(|_| PallasError::Cli(format!("--{what} needs a number, got '{v}'")))
 }
 
-/// `--jobs` flag: sweep worker threads for the tuner and the sim
-/// backend's table pre-simulation (defaults to the host parallelism,
-/// capped; results are bit-identical at any value).
-fn jobs_from(flags: &HashMap<String, String>) -> Result<usize> {
-    Ok(flags
-        .get("jobs")
-        .map(|j| j.parse::<usize>())
-        .transpose()?
-        .unwrap_or_else(tuner::default_jobs)
-        .max(1))
-}
-
-fn run() -> Result<()> {
+fn run() -> PallasResult<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first().map(String::as_str) else {
         print_help();
         return Ok(());
     };
-    let flags = parse_flags(&args[1..])?;
-
+    let rest = &args[1..];
     match cmd {
-        "models" => cmd_models(),
-        "tune" => cmd_tune(&flags),
-        "simulate" => cmd_simulate(&flags),
-        "figures" => cmd_figures(&flags),
+        "models" => {
+            parse_flags(cmd, rest, NO_FLAGS)?;
+            cmd_models()
+        }
+        "tune" => cmd_tune(&parse_flags(cmd, rest, TUNE_FLAGS)?),
+        "simulate" => cmd_simulate(&parse_flags(cmd, rest, SIMULATE_FLAGS)?),
+        "figures" => cmd_figures(&parse_flags(cmd, rest, FIGURES_FLAGS)?),
         "ablations" => {
+            parse_flags(cmd, rest, NO_FLAGS)?;
             println!("{}", bench_tables::ablations::ablation_table());
             Ok(())
         }
-        "serve" => cmd_serve(&flags),
-        "check" => cmd_check(&flags),
+        "serve" => cmd_serve(&parse_flags(cmd, rest, SERVE_FLAGS)?),
+        "plan" => cmd_plan(&parse_flags(cmd, rest, PLAN_FLAGS)?),
+        "check" => cmd_check(&parse_flags(cmd, rest, CHECK_FLAGS)?),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
         }
-        other => bail!("unknown command '{other}' (try 'parframe help')"),
+        other => Err(PallasError::Cli(format!(
+            "unknown command '{other}' (try 'parframe help')"
+        ))),
     }
 }
 
@@ -124,13 +206,17 @@ fn print_help() {
            tune     --model M [--platform P] [--batch N] [--policy POL]\n\
                     [--exhaustive]         also run the global-optimum sweep\n\
                     [--jobs N]             sweep worker threads (default: host cores, ≤8)\n\
+                    [--emit-plan FILE]     write the tuning decision as plan.json\n\
+           plan     --show FILE           inspect a plan artifact\n\
            simulate --model M [--pools/--mkl/--intra N] [--policy POL] [--platform P]\n\
            figures  --fig N | --table N | --all\n\
-           ablations                      per-feature degradation table
+           ablations                      per-feature degradation table\n\
            serve    [--backend sim|pjrt] [--kind wide_deep] [--requests N]\n\
+                    [--plan FILE]          deploy a tuned plan artifact (sim only)\n\
                     [--lanes N] [--concurrency N] [--platform P]\n\
                     [--kinds A,B]          core-aware lane plan (sim only)\n\
                     [--adaptive]           online re-tuning over a load shift\n\
+                    [--emit-plan FILE]     snapshot the live plan after serving\n\
                     [--policy POL]         pin the dispatch policy (sim only)\n\
                     [--jobs N]             parallel latency-table pre-simulation\n\
                     [--artifacts DIR]      (pjrt backend only)\n\
@@ -142,113 +228,98 @@ fn print_help() {
     );
 }
 
-fn cmd_models() -> Result<()> {
-    println!("{:<14} {:>6} {:>7} {:>7} {:>9} {:>12}", "model", "batch", "ops", "heavy", "max-width", "avg-width");
-    for name in models::model_names() {
-        let batch = models::canonical_batch(name);
-        let g = models::build(name, batch).unwrap();
-        let w = analyze_width(&g);
+fn cmd_models() -> PallasResult<()> {
+    println!(
+        "{:<14} {:>6} {:>7} {:>7} {:>9} {:>12}",
+        "model", "batch", "ops", "heavy", "max-width", "avg-width"
+    );
+    for m in model_catalog() {
         println!(
             "{:<14} {:>6} {:>7} {:>7} {:>9} {:>12}",
-            name, batch, g.len(), w.heavy_ops, w.max_width, w.avg_width
+            m.name, m.batch, m.ops, m.width.heavy_ops, m.width.max_width, m.width.avg_width
         );
     }
     Ok(())
 }
 
-fn cmd_tune(flags: &HashMap<String, String>) -> Result<()> {
-    let model = flags.get("model").context("--model required")?;
-    let platform = platform_from(flags)?;
-    let batch = flags
-        .get("batch")
-        .map(|b| b.parse::<usize>())
-        .transpose()?
-        .unwrap_or_else(|| models::canonical_batch(model));
-    let g = models::build(model, batch).ok_or_else(|| anyhow!("unknown model '{model}'"))?;
-    let mut t = tuner::tune(&g, &platform);
-    if let Some(p) = policy_from(flags)? {
-        t.config.sched_policy = p;
+fn workload_from(flags: &HashMap<String, String>) -> PallasResult<Workload> {
+    let model = flags
+        .get("model")
+        .ok_or_else(|| PallasError::Cli("--model required".into()))?;
+    let w = Workload::single(model)?;
+    match flags.get("batch") {
+        Some(b) => w.with_batch(parse_num(b, "batch")?),
+        None => Ok(w),
     }
-    println!("model {model} (batch {batch}) on {}:", platform.name);
-    println!(
-        "  width: heavy_ops={} levels={} max={} avg={}",
-        t.width.heavy_ops, t.width.levels, t.width.max_width, t.width.avg_width
-    );
+}
+
+fn cmd_tune(flags: &HashMap<String, String>) -> PallasResult<()> {
+    let session = session_from(flags)?;
+    let w = workload_from(flags)?;
+    let guided = session.tune(&w)?;
+    let e = &guided.entries[0];
+    println!("model {} (batch {}) on {}:", e.kind, e.batch, session.platform().name);
     println!(
         "  recommended: inter_op_pools={} mkl_threads={} intra_op_threads={} policy={}",
-        t.config.inter_op_pools,
-        t.config.mkl_threads,
-        t.config.intra_op_threads,
-        t.config.sched_policy.name()
+        e.config.inter_op_pools,
+        e.config.mkl_threads,
+        e.config.intra_op_threads,
+        e.config.sched_policy.name()
     );
-    let guided = sim::simulate(&g, &platform, &t.config);
-    println!("  simulated latency: {:.3} ms ({:.0} GFLOP/s)", guided.latency_s * 1e3, guided.gflops);
-    for b in tuner::Baseline::ALL {
-        let cfg = tuner::baseline_config(b, &platform);
-        let r = sim::simulate(&g, &platform, &cfg);
+    println!("  simulated latency: {:.3} ms", e.predicted_latency_s * 1e3);
+    for b in Baseline::ALL {
+        let r = session.tune_baseline(&w, b)?;
+        let lat = r.entries[0].predicted_latency_s;
         println!(
             "  vs {:<24} {:.3} ms  (ours {:.2}x)",
             b.name(),
-            r.latency_s * 1e3,
-            r.latency_s / guided.latency_s
+            lat * 1e3,
+            lat / e.predicted_latency_s
         );
     }
-    if flags.contains_key("exhaustive") {
-        let jobs = jobs_from(flags)?;
-        let t0 = std::time::Instant::now();
-        let opt = tuner::exhaustive_search_with(&g, &platform, &SweepOptions::with_jobs(jobs));
-        let wall = t0.elapsed().as_secs_f64();
+    let emitted = if flags.contains_key("exhaustive") {
+        let opt = session.tune_exhaustive(&w)?;
+        let oe = &opt.entries[0];
         println!(
-            "  global optimum (exhaustive, {} unique points, jobs={jobs}, {:.2}s, {:.0} points/s):",
+            "  global optimum (exhaustive, {} unique points, jobs={}):",
             opt.evaluated,
-            wall,
-            opt.evaluated as f64 / wall.max(1e-9)
+            session.jobs()
         );
         println!(
             "    pools={} mkl={} intra={} policy={} → {:.3} ms (guideline {:.3}x of optimum)",
-            opt.best.inter_op_pools,
-            opt.best.mkl_threads,
-            opt.best.intra_op_threads,
-            opt.best.sched_policy.name(),
-            opt.best_latency_s * 1e3,
-            guided.latency_s / opt.best_latency_s
+            oe.config.inter_op_pools,
+            oe.config.mkl_threads,
+            oe.config.intra_op_threads,
+            oe.config.sched_policy.name(),
+            oe.predicted_latency_s * 1e3,
+            e.predicted_latency_s / oe.predicted_latency_s
         );
+        opt
+    } else {
+        guided
+    };
+    if let Some(path) = flags.get("emit-plan") {
+        emitted.save(path)?;
+        println!("plan written to {path} (tier {})", emitted.tier.name());
     }
     Ok(())
 }
 
-fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
-    let model = flags.get("model").context("--model required")?;
-    let platform = platform_from(flags)?;
-    let batch = flags
-        .get("batch")
-        .map(|b| b.parse::<usize>())
-        .transpose()?
-        .unwrap_or_else(|| models::canonical_batch(model));
-    let g = models::build(model, batch).ok_or_else(|| anyhow!("unknown model '{model}'"))?;
-    let mut cfg = RunConfig { platform: platform.clone(), ..RunConfig::default() }.framework;
-    cfg.operator_impl = OperatorImpl::IntraOpParallel;
-    if let Some(p) = flags.get("pools") {
-        cfg.inter_op_pools = p.parse()?;
-    }
-    if let Some(m) = flags.get("mkl") {
-        cfg.mkl_threads = m.parse()?;
-    } else {
-        cfg.mkl_threads = (platform.physical_cores() / cfg.inter_op_pools.max(1)).max(1);
-    }
-    if let Some(i) = flags.get("intra") {
-        cfg.intra_op_threads = i.parse()?;
-    } else {
-        cfg.intra_op_threads = cfg.mkl_threads;
-    }
-    if let Some(p) = policy_from(flags)? {
-        cfg.sched_policy = p;
-    }
-    cfg.validate(&platform).map_err(|e| anyhow!(e))?;
-    let r = sim::simulate(&g, &platform, &cfg);
+fn cmd_simulate(flags: &HashMap<String, String>) -> PallasResult<()> {
+    let session = session_from(flags)?;
+    let model = flags
+        .get("model")
+        .ok_or_else(|| PallasError::Cli("--model required".into()))?;
+    let batch = match flags.get("batch") {
+        Some(b) => parse_num(b, "batch")?,
+        None => parframe::models::canonical_batch(model),
+    };
+    let num = |k: &str| flags.get(k).map(|v| parse_num(v, k)).transpose();
+    let cfg = session.manual_config(num("pools")?, num("mkl")?, num("intra")?)?;
+    let r = session.simulate(model, batch, &cfg)?;
     println!(
         "{model} (batch {batch}) on {} with pools={} mkl={} intra={} policy={}:",
-        platform.name,
+        session.platform().name,
         cfg.inter_op_pools,
         cfg.mkl_threads,
         cfg.intra_op_threads,
@@ -260,13 +331,13 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
         r.gflops,
         r.throughput(batch)
     );
-    for cat in sim::Category::ALL {
+    for cat in parframe::sim::Category::ALL {
         println!("  {:<14} {:>6.1}%", cat.label(), r.breakdown.frac(cat) * 100.0);
     }
     Ok(())
 }
 
-fn cmd_figures(flags: &HashMap<String, String>) -> Result<()> {
+fn cmd_figures(flags: &HashMap<String, String>) -> PallasResult<()> {
     if flags.contains_key("all") {
         for n in bench_tables::FIGURES {
             println!("{}", bench_tables::figure(n).unwrap());
@@ -276,163 +347,247 @@ fn cmd_figures(flags: &HashMap<String, String>) -> Result<()> {
         return Ok(());
     }
     if let Some(f) = flags.get("fig") {
-        let n: usize = f.parse()?;
-        let s = bench_tables::figure(n).ok_or_else(|| anyhow!("no generator for figure {n}"))?;
+        let n = parse_num(f, "fig")?;
+        let s = bench_tables::figure(n)
+            .ok_or_else(|| PallasError::Cli(format!("no generator for figure {n}")))?;
         println!("{s}");
         return Ok(());
     }
     if let Some(t) = flags.get("table") {
-        let n: usize = t.parse()?;
-        let s = bench_tables::table(n).ok_or_else(|| anyhow!("no generator for table {n}"))?;
+        let n = parse_num(t, "table")?;
+        let s = bench_tables::table(n)
+            .ok_or_else(|| PallasError::Cli(format!("no generator for table {n}")))?;
         println!("{s}");
         return Ok(());
     }
-    bail!("figures needs --fig N, --table N or --all")
+    Err(PallasError::Cli("figures needs --fig N, --table N or --all".into()))
 }
 
-fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
-    let backend = flags.get("backend").map(String::as_str).unwrap_or("sim");
-    let n_requests: usize = flags.get("requests").map(|r| r.parse()).transpose()?.unwrap_or(256);
-    let lanes: usize = flags.get("lanes").map(|l| l.parse()).transpose()?.unwrap_or(1);
-    let concurrency: usize =
-        flags.get("concurrency").map(|c| c.parse()).transpose()?.unwrap_or(4);
-
-    // multi-kind core-aware serving (with optional online re-tuning)
-    if flags.contains_key("kinds") || flags.contains_key("adaptive") {
-        if backend != "sim" {
-            bail!("--kinds/--adaptive need the sim backend");
-        }
-        return cmd_serve_planned(flags, n_requests, concurrency);
+fn cmd_plan(flags: &HashMap<String, String>) -> PallasResult<()> {
+    let path = flags
+        .get("show")
+        .ok_or_else(|| PallasError::Cli("plan needs --show FILE".into()))?;
+    let plan = Plan::load(path)?;
+    for line in plan.group_lines() {
+        println!("{line}");
     }
+    Ok(())
+}
 
-    let policy = policy_from(flags)?;
-    let (mut cfg, kind) = match backend {
-        "sim" => {
-            let platform = platform_from(flags)?;
-            let kind = flags.get("kind").map(String::as_str).unwrap_or("wide_deep");
-            println!(
-                "starting coordinator: backend=sim kind={kind} lanes={lanes} platform={} policy={}",
-                platform.name,
-                policy.map(|p| p.name()).unwrap_or("tuner")
-            );
-            // pin only the policy dimension: buckets keep their per-batch
-            // tuned thread knobs, so --policy A/Bs isolate dispatch order
-            let mut sc = SimBackendConfig::new(platform, &[kind]);
-            sc.policy = policy;
-            sc.jobs = jobs_from(flags)?;
-            (CoordinatorConfig::sim_with(sc), kind.to_string())
+fn cmd_serve(flags: &HashMap<String, String>) -> PallasResult<()> {
+    let backend = flags.get("backend").map(String::as_str).unwrap_or("sim");
+    if backend == "pjrt" {
+        return cmd_serve_pjrt(flags);
+    }
+    if backend != "sim" {
+        return Err(PallasError::Cli(format!("unknown backend '{backend}' (sim | pjrt)")));
+    }
+    if flags.contains_key("plan") {
+        cmd_serve_plan(flags)
+    } else if flags.contains_key("kinds") || flags.contains_key("adaptive") {
+        cmd_serve_planned(flags)
+    } else {
+        cmd_serve_single(flags)
+    }
+}
+
+/// Reject flags that parse under `serve`'s spec but have no effect in
+/// the dispatched serving mode — a no-op flag must fail, not silently
+/// drop (same contract as unknown flags).
+fn reject_flags(
+    flags: &HashMap<String, String>,
+    unusable: &[&str],
+    mode: &str,
+) -> PallasResult<()> {
+    for f in unusable {
+        if flags.contains_key(*f) {
+            return Err(PallasError::Cli(format!("--{f} has no effect with {mode}")));
         }
-        "pjrt" => {
-            if policy.is_some() {
-                bail!("--policy needs the sim backend (PJRT owns its own scheduling)");
-            }
-            let dir = flags.get("artifacts").map(String::as_str).unwrap_or("artifacts");
-            let kind = flags.get("kind").map(String::as_str).unwrap_or("mlp");
-            println!(
-                "starting coordinator: backend=pjrt kind={kind} lanes={lanes} artifacts={dir}"
-            );
-            (CoordinatorConfig::pjrt(dir, &[kind]), kind.to_string())
+    }
+    Ok(())
+}
+
+fn requests_from(flags: &HashMap<String, String>) -> PallasResult<usize> {
+    flags.get("requests").map(|r| parse_num(r, "requests")).transpose().map(|r| r.unwrap_or(256))
+}
+
+fn concurrency_from(flags: &HashMap<String, String>) -> PallasResult<usize> {
+    flags
+        .get("concurrency")
+        .map(|c| parse_num(c, "concurrency"))
+        .transpose()
+        .map(|c| c.unwrap_or(4))
+}
+
+/// Deploy a `plan.json` artifact: the serving configuration is exactly
+/// the plan's bits (group lines + latency table printed so CI can diff
+/// them against `plan --show`).
+fn cmd_serve_plan(flags: &HashMap<String, String>) -> PallasResult<()> {
+    reject_flags(
+        flags,
+        &["adaptive", "policy", "lanes", "kind", "kinds", "emit-plan", "artifacts"],
+        "serve --plan (the plan artifact fixes layout and knobs)",
+    )?;
+    let path = flags.get("plan").expect("dispatched on --plan");
+    let plan = Plan::load(path)?;
+    // the plan names its platform; an explicit --platform must match
+    let mut session = Session::builder().platform_named(&plan.platform)?;
+    if let Some(p) = flags.get("platform") {
+        session = session.platform_named(p)?;
+    }
+    if let Some(j) = flags.get("jobs") {
+        session = session.jobs(parse_num(j, "jobs")?);
+    }
+    let session = session.build();
+    let handle = session.serve(&plan)?;
+    println!(
+        "serving plan {path}: tier={} evaluated={} platform={} fingerprint={:016x}",
+        plan.tier.name(),
+        plan.evaluated,
+        plan.platform,
+        plan.sim_fingerprint
+    );
+    // print the *live* lane set (not the artifact) so CI's diff against
+    // `plan --show` proves serving deployed exactly the plan's bits
+    let live = handle
+        .coordinator()
+        .current_plan()
+        .ok_or_else(|| PallasError::InvalidPlan("plan deployment left no live plan".into()))?;
+    for g in &live.groups {
+        println!(
+            "{}",
+            parframe::api::group_line(
+                &g.kinds[0],
+                g.allocation.first_core,
+                g.allocation.cores,
+                g.lanes,
+                &g.framework
+            )
+        );
+    }
+    println!("latency table (simulated seconds per batch):");
+    for ((kind, bucket), lat) in handle.latency_table()? {
+        println!("  {kind} b{bucket} {lat:e}");
+    }
+    let n_requests = requests_from(flags)?;
+    let concurrency = concurrency_from(flags)?;
+    let per_kind = (n_requests / plan.entries.len()).max(1);
+    for e in &plan.entries {
+        let r = handle.run_closed(&e.kind, per_kind, concurrency)?;
+        println!("loadgen {}: {}", e.kind, r.summary());
+    }
+    println!("metrics: {}", handle.coordinator().metrics().summary());
+    Ok(())
+}
+
+/// Single-kind serving on unassigned whole-machine lanes.
+fn cmd_serve_single(flags: &HashMap<String, String>) -> PallasResult<()> {
+    reject_flags(
+        flags,
+        &["emit-plan", "artifacts"],
+        "the sim backend's single-kind serve (snapshots need --adaptive; artifacts need \
+         --backend pjrt)",
+    )?;
+    let session = session_from(flags)?;
+    let kind = flags.get("kind").map(String::as_str).unwrap_or("wide_deep");
+    let lanes = flags.get("lanes").map(|l| parse_num(l, "lanes")).transpose()?.unwrap_or(1);
+    println!(
+        "starting coordinator: backend=sim kind={kind} lanes={lanes} platform={} policy={}",
+        session.platform().name,
+        session.policy().map(|p| p.name()).unwrap_or("tuner")
+    );
+    let handle = session.serve_unplanned(&[kind], lanes)?;
+    let report = handle.run_closed(kind, requests_from(flags)?, concurrency_from(flags)?)?;
+    println!("loadgen: {}", report.summary());
+    println!("metrics: {}", handle.coordinator().metrics().summary());
+    Ok(())
+}
+
+/// Core-aware serving over ≥ 2 kinds: a shifting-mix scenario on a
+/// guideline lane plan, optionally re-tuned online between phases.
+fn cmd_serve_planned(flags: &HashMap<String, String>) -> PallasResult<()> {
+    reject_flags(
+        flags,
+        &["kind", "lanes", "artifacts"],
+        "core-aware serving (use --kinds A,B on the sim backend)",
+    )?;
+    let session = session_from(flags)?;
+    let adaptive = flags.contains_key("adaptive");
+    if !adaptive && flags.contains_key("emit-plan") {
+        return Err(PallasError::Cli(
+            "--emit-plan on serve snapshots the re-tuned plan; add --adaptive \
+             (or emit from `tune`)"
+                .into(),
+        ));
+    }
+    let kinds_arg = flags
+        .get("kinds")
+        .cloned()
+        .unwrap_or_else(|| "wide_deep,resnet50".to_string());
+    let kinds: Vec<&str> =
+        kinds_arg.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+    if kinds.len() < 2 {
+        return Err(PallasError::Cli(
+            "core-aware serving needs ≥ 2 kinds, e.g. --kinds wide_deep,resnet50".into(),
+        ));
+    }
+    let workload = Workload::kinds(&kinds)?;
+    let plan = session.tune(&workload)?;
+    println!(
+        "starting coordinator: backend=sim kinds={} platform={} adaptive={adaptive} jobs={}",
+        kinds.join(","),
+        session.platform().name,
+        session.jobs()
+    );
+    for line in plan.group_lines() {
+        println!("{line}");
+    }
+    let handle = session.serve(&plan)?;
+    let n_requests = requests_from(flags)?;
+    let phases = MixPhase::ramp(kinds[0], kinds[1], 4, (n_requests / 4).max(8));
+    let reports = handle.run_shift(&phases, concurrency_from(flags)?, 0x5EED, adaptive)?;
+    for (i, report) in reports.iter().enumerate() {
+        println!("phase {i}: {}", report.summary());
+    }
+    if adaptive {
+        let snap = session.snapshot(&handle)?;
+        println!("plan after online re-tuning:");
+        for line in snap.group_lines() {
+            println!("{line}");
         }
-        other => bail!("unknown backend '{other}' (sim | pjrt)"),
-    };
+        if let Some(path) = flags.get("emit-plan") {
+            snap.save(path)?;
+            println!("plan written to {path} (tier {})", snap.tier.name());
+        }
+    }
+    println!("metrics: {}", handle.coordinator().metrics().summary());
+    Ok(())
+}
+
+/// PJRT serving (artifact-gated; the facade's sim tiers don't apply).
+fn cmd_serve_pjrt(flags: &HashMap<String, String>) -> PallasResult<()> {
+    reject_flags(
+        flags,
+        &["policy", "kinds", "adaptive", "plan", "jobs", "emit-plan", "platform"],
+        "the pjrt backend (it owns scheduling and runs on the host machine)",
+    )?;
+    let dir = flags.get("artifacts").map(String::as_str).unwrap_or("artifacts");
+    let kind = flags.get("kind").map(String::as_str).unwrap_or("mlp");
+    let lanes = flags.get("lanes").map(|l| parse_num(l, "lanes")).transpose()?.unwrap_or(1);
+    println!("starting coordinator: backend=pjrt kind={kind} lanes={lanes} artifacts={dir}");
+    let mut cfg = CoordinatorConfig::pjrt(dir, &[kind]);
     cfg.lanes = lanes;
-    cfg.policy = BatchPolicy::default();
     let coord = Coordinator::start(cfg)?;
-
-    let report = loadgen::run(&coord, &LoadgenConfig::closed(&kind, n_requests, concurrency))?;
+    let report = loadgen::run(
+        &coord,
+        &LoadgenConfig::closed(kind, requests_from(flags)?, concurrency_from(flags)?),
+    )?;
     println!("loadgen: {}", report.summary());
     println!("metrics: {}", coord.metrics().summary());
     Ok(())
 }
 
-/// Core-aware serving over ≥ 2 model kinds: a shifting-mix scenario
-/// (kind A drains while kind B ramps) on a lane-planned coordinator.
-/// With `--adaptive` the online re-tuner re-splits cores between phases;
-/// without it the startup §8 plan stays frozen — run both to compare.
-fn cmd_serve_planned(
-    flags: &HashMap<String, String>,
-    n_requests: usize,
-    concurrency: usize,
-) -> Result<()> {
-    let platform = platform_from(flags)?;
-    let adaptive = flags.contains_key("adaptive");
-    let kinds_arg = flags
-        .get("kinds")
-        .cloned()
-        .unwrap_or_else(|| "wide_deep,resnet50".to_string());
-    let kinds: Vec<String> = kinds_arg
-        .split(',')
-        .map(|s| s.trim().to_string())
-        .filter(|s| !s.is_empty())
-        .collect();
-    if kinds.len() < 2 {
-        bail!("core-aware serving needs ≥ 2 kinds, e.g. --kinds wide_deep,resnet50");
-    }
-    let kind_refs: Vec<&str> = kinds.iter().map(String::as_str).collect();
-
-    let jobs = jobs_from(flags)?;
-    let mut plan = LanePlan::guideline(&platform, &kind_refs)?;
-    if let Some(pol) = policy_from(flags)? {
-        plan = plan.with_policy(pol);
-    }
-    println!(
-        "starting coordinator: backend=sim kinds={} platform={} adaptive={adaptive} jobs={jobs}",
-        kinds.join(","),
-        platform.name
-    );
-    print_plan(&plan);
-    // one memo-cache shared by the backend's lane tables and the online
-    // tuner's candidate scoring: a re-plan only simulates design points
-    // neither tier has seen
-    let cache = Arc::new(SimCache::new());
-    let mut sc = SimBackendConfig::new(platform.clone(), &kind_refs);
-    sc.jobs = jobs;
-    let factory = SimBackendFactory::with_cache(sc, Arc::clone(&cache));
-    let cfg = CoordinatorConfig::with_factory(Arc::new(factory)).with_plan(plan);
-    let coord = Coordinator::start(cfg)?;
-
-    let phases = MixPhase::ramp(&kinds[0], &kinds[1], 4, (n_requests / 4).max(8));
-    let mut tuner = OnlineTuner::with_config(
-        platform,
-        &kind_refs,
-        OnlineTunerConfig { jobs, ..OnlineTunerConfig::default() },
-    )
-    .with_cache(cache);
-    let reports = loadgen::run_shift(
-        &coord,
-        &phases,
-        concurrency,
-        0x5EED,
-        if adaptive { Some(&mut tuner) } else { None },
-    )?;
-    for (i, report) in reports.iter().enumerate() {
-        println!("phase {i}: {}", report.summary());
-    }
-    if adaptive {
-        println!("plan after online re-tuning:");
-        print_plan(&coord.current_plan().expect("planned coordinator"));
-    }
-    println!("metrics: {}", coord.metrics().summary());
-    Ok(())
-}
-
-fn print_plan(plan: &LanePlan) {
-    for g in &plan.groups {
-        println!(
-            "  lane group {:?}: cores {}..={} ({}) pools={} mkl={} intra={} policy={}",
-            g.kinds,
-            g.allocation.first_core,
-            g.allocation.last_core(),
-            g.allocation.cores,
-            g.framework.inter_op_pools,
-            g.framework.mkl_threads,
-            g.framework.intra_op_threads,
-            g.framework.sched_policy.name()
-        );
-    }
-}
-
-fn cmd_check(flags: &HashMap<String, String>) -> Result<()> {
+fn cmd_check(flags: &HashMap<String, String>) -> PallasResult<()> {
     let dir = flags.get("artifacts").map(String::as_str).unwrap_or("artifacts");
     let rt = ModelRuntime::load(std::path::Path::new(dir))?;
     println!("platform: {}", rt.platform());

@@ -8,8 +8,7 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
-
+use crate::error::{PallasError, PallasResult};
 use crate::util::json::Json;
 
 use super::backend::{Catalog, ItemShape, ModelSpec};
@@ -91,21 +90,22 @@ pub struct Digest {
 
 impl Digest {
     /// Verify a flattened output against this digest (f32-tolerant).
-    pub fn verify(&self, out: &[f32]) -> Result<()> {
+    pub fn verify(&self, out: &[f32]) -> PallasResult<()> {
+        let fail = |m: String| Err(PallasError::Backend(m));
         if out.len() != self.count {
-            bail!("output count {} != expected {}", out.len(), self.count);
+            return fail(format!("output count {} != expected {}", out.len(), self.count));
         }
         let tol = |expected: f64| 1e-3 * expected.abs().max(1.0);
         for (i, (&got, want)) in out.iter().zip(self.prefix.iter()).enumerate() {
             if (got as f64 - want).abs() > tol(*want).max(2e-3) {
-                bail!("prefix[{i}]: got {got} want {want}");
+                return fail(format!("prefix[{i}]: got {got} want {want}"));
             }
         }
         let sum: f64 = out.iter().map(|&v| v as f64).sum();
         // sums accumulate rounding over `count` elements
         let sum_tol = self.abs_sum * 1e-5 + 1e-3;
         if (sum - self.sum).abs() > sum_tol {
-            bail!("sum: got {sum} want {} (tol {sum_tol})", self.sum);
+            return fail(format!("sum: got {sum} want {} (tol {sum_tol})", self.sum));
         }
         Ok(())
     }
@@ -142,24 +142,27 @@ pub struct Manifest {
 
 impl Manifest {
     /// Load `<dir>/manifest.json`.
-    pub fn load(dir: &Path) -> Result<Self> {
+    pub fn load(dir: &Path) -> PallasResult<Self> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {}", path.display()))?;
+            .map_err(|e| PallasError::io(path.display(), e))?;
         Self::parse(dir, &text)
     }
 
     /// Parse manifest text.
-    pub fn parse(dir: &Path, text: &str) -> Result<Self> {
-        let doc = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+    pub fn parse(dir: &Path, text: &str) -> PallasResult<Self> {
+        let doc = Json::parse(text).map_err(|e| PallasError::parse("manifest", e))?;
         let version = doc.get("version").and_then(Json::as_usize).unwrap_or(0);
         if version != 1 {
-            bail!("unsupported manifest version {version}");
+            return Err(PallasError::parse(
+                "manifest",
+                format!("unsupported manifest version {version}"),
+            ));
         }
         let arts = doc
             .get("artifacts")
             .and_then(Json::as_arr)
-            .context("manifest missing artifacts")?;
+            .ok_or_else(|| PallasError::parse("manifest", "missing artifacts"))?;
         let mut artifacts = Vec::with_capacity(arts.len());
         for a in arts {
             artifacts.push(parse_entry(a)?);
@@ -198,18 +201,21 @@ impl Manifest {
     /// Derive the serving [`Catalog`] for a set of families: the bucket-1
     /// (or smallest-bucket) artifact of each family defines the per-item
     /// shape, and the compiled batch sizes become the bucket ladder.
-    pub fn catalog(&self, kinds: &[&str]) -> Result<Catalog> {
+    pub fn catalog(&self, kinds: &[&str]) -> PallasResult<Catalog> {
         let mut models = Vec::with_capacity(kinds.len());
         for kind in kinds {
             let buckets = self.buckets(kind);
             let entry = self
                 .artifact_for(kind, 1)
                 .or_else(|| buckets.first().and_then(|&b| self.artifact_for(kind, b)))
-                .ok_or_else(|| anyhow!("no artifacts for kind '{kind}'"))?;
+                .ok_or_else(|| PallasError::UnknownModel(kind.to_string()))?;
             let batch = entry.batch.max(1);
             let full = &entry.inputs[0].shape;
             if full.is_empty() || full[0] % batch != 0 {
-                bail!("kind '{kind}': first dim {:?} not divisible by batch {batch}", full);
+                return Err(PallasError::parse(
+                    "manifest",
+                    format!("kind '{kind}': first dim {full:?} not divisible by batch {batch}"),
+                ));
             }
             models.push(ModelSpec {
                 kind: kind.to_string(),
@@ -224,11 +230,11 @@ impl Manifest {
     }
 }
 
-fn parse_entry(a: &Json) -> Result<ArtifactEntry> {
-    let str_field = |k: &str| -> Result<String> {
+fn parse_entry(a: &Json) -> PallasResult<ArtifactEntry> {
+    let str_field = |k: &str| -> PallasResult<String> {
         Ok(a.get(k)
             .and_then(Json::as_str)
-            .with_context(|| format!("artifact missing {k}"))?
+            .ok_or_else(|| PallasError::parse("manifest", format!("artifact missing {k}")))?
             .to_string())
     };
     let shape_of = |v: &Json| -> Vec<usize> {
@@ -239,9 +245,9 @@ fn parse_entry(a: &Json) -> Result<ArtifactEntry> {
     let inputs = a
         .get("inputs")
         .and_then(Json::as_arr)
-        .context("artifact missing inputs")?
+        .ok_or_else(|| PallasError::parse("manifest", "artifact missing inputs"))?
         .iter()
-        .map(|i| -> Result<InputSpec> {
+        .map(|i| -> PallasResult<InputSpec> {
             let rule = if let Some(fill) = i.get("fill").and_then(Json::as_f64) {
                 GenRule::Fill(fill as f32)
             } else {
@@ -251,12 +257,17 @@ fn parse_entry(a: &Json) -> Result<ArtifactEntry> {
                 }
             };
             Ok(InputSpec {
-                shape: shape_of(i.get("shape").context("input missing shape")?),
+                shape: shape_of(
+                    i.get("shape")
+                        .ok_or_else(|| PallasError::parse("manifest", "input missing shape"))?,
+                ),
                 rule,
             })
         })
-        .collect::<Result<Vec<_>>>()?;
-    let exp = a.get("expected").context("artifact missing expected")?;
+        .collect::<PallasResult<Vec<_>>>()?;
+    let exp = a
+        .get("expected")
+        .ok_or_else(|| PallasError::parse("manifest", "artifact missing expected"))?;
     let expected = Digest {
         prefix: exp
             .get("prefix")

@@ -14,8 +14,7 @@
 //!   clients are `!Sync` and must stay confined to one executor thread.
 //! * [`Backend`] — a lane-owned executor; needs no thread-safety bounds.
 
-use anyhow::Result;
-
+use crate::error::PallasResult;
 use crate::sched::LaneAssignment;
 
 use super::artifact::Tensor;
@@ -96,16 +95,16 @@ pub trait Backend {
     /// Execute one gathered batch `x` for `kind` at the given bucket; the
     /// first dimension of `x` is `bucket × rows_per_item`, zero-padded
     /// past the live requests.
-    fn execute(&self, kind: &str, bucket: usize, x: Tensor) -> Result<Execution>;
+    fn execute(&self, kind: &str, bucket: usize, x: Tensor) -> PallasResult<Execution>;
 }
 
 /// Shared descriptor + per-lane constructor for a backend.
 pub trait BackendFactory: Send + Sync {
     /// What this backend can serve.
-    fn catalog(&self) -> Result<Catalog>;
+    fn catalog(&self) -> PallasResult<Catalog>;
 
     /// Instantiate a lane-local executor (called on the lane's thread).
-    fn create(&self) -> Result<Box<dyn Backend>>;
+    fn create(&self) -> PallasResult<Box<dyn Backend>>;
 
     /// Instantiate a lane-local executor for a core-aware
     /// [`LaneAssignment`] (called on the lane's thread): the backend
@@ -113,7 +112,7 @@ pub trait BackendFactory: Send + Sync {
     /// framework knobs, serving only the assigned kinds. Backends that
     /// cannot honour core allocations (e.g. PJRT, where the OS schedules
     /// threads) fall back to [`BackendFactory::create`].
-    fn create_on(&self, assignment: &LaneAssignment) -> Result<Box<dyn Backend>> {
+    fn create_on(&self, assignment: &LaneAssignment) -> PallasResult<Box<dyn Backend>> {
         let _ = assignment;
         self.create()
     }

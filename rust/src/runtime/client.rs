@@ -15,7 +15,7 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
-use anyhow::{anyhow, Context, Result};
+use crate::error::{PallasError, PallasResult};
 
 use super::artifact::{ArtifactEntry, Manifest, Tensor};
 use super::backend::{Backend, BackendFactory, Catalog, Execution};
@@ -29,7 +29,7 @@ pub struct ModelRuntime {
 
 impl ModelRuntime {
     /// Load every artifact in `dir` (compiling each HLO module).
-    pub fn load(dir: &Path) -> Result<Self> {
+    pub fn load(dir: &Path) -> PallasResult<Self> {
         let manifest = Manifest::load(dir)?;
         Self::load_filtered(manifest, |_| true)
     }
@@ -37,7 +37,7 @@ impl ModelRuntime {
     /// Load only artifacts matching a predicate (e.g. one model family) —
     /// compilation is the slow part, so the coordinator loads what it
     /// serves.
-    pub fn load_some(dir: &Path, pred: impl Fn(&ArtifactEntry) -> bool) -> Result<Self> {
+    pub fn load_some(dir: &Path, pred: impl Fn(&ArtifactEntry) -> bool) -> PallasResult<Self> {
         let manifest = Manifest::load(dir)?;
         Self::load_filtered(manifest, pred)
     }
@@ -45,17 +45,18 @@ impl ModelRuntime {
     fn load_filtered(
         manifest: Manifest,
         pred: impl Fn(&ArtifactEntry) -> bool,
-    ) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+    ) -> PallasResult<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| PallasError::Backend(format!("pjrt cpu client: {e:?}")))?;
         let mut executables = HashMap::new();
         for entry in manifest.artifacts.iter().filter(|e| pred(e)) {
             let path = manifest.dir.join(&entry.file);
             let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+                .map_err(|e| PallasError::parse("hlo", format!("{}: {e:?}", path.display())))?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = client
                 .compile(&comp)
-                .map_err(|e| anyhow!("compiling {}: {e:?}", entry.name))?;
+                .map_err(|e| PallasError::Backend(format!("compiling {}: {e:?}", entry.name)))?;
             executables.insert(entry.name.clone(), exe);
         }
         Ok(ModelRuntime { client, manifest, executables })
@@ -80,40 +81,47 @@ impl ModelRuntime {
 
     /// Execute a loaded artifact with the given inputs; returns the
     /// flattened f32 output of the first tuple element.
-    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Tensor> {
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> PallasResult<Tensor> {
         let entry = self
             .manifest
             .get(name)
-            .with_context(|| format!("unknown artifact '{name}'"))?;
+            .ok_or_else(|| PallasError::UnknownModel(name.to_string()))?;
         let exe = self
             .executables
             .get(name)
-            .with_context(|| format!("artifact '{name}' not loaded"))?;
+            .ok_or_else(|| PallasError::Backend(format!("artifact '{name}' not loaded")))?;
         if inputs.len() != entry.inputs.len() {
-            anyhow::bail!(
+            return Err(PallasError::Backend(format!(
                 "'{name}' expects {} inputs, got {}",
                 entry.inputs.len(),
                 inputs.len()
-            );
+            )));
         }
         let mut literals = Vec::with_capacity(inputs.len());
         for (t, spec) in inputs.iter().zip(entry.inputs.iter()) {
             if t.shape != spec.shape {
-                anyhow::bail!("'{name}' input shape {:?} != expected {:?}", t.shape, spec.shape);
+                return Err(PallasError::Backend(format!(
+                    "'{name}' input shape {:?} != expected {:?}",
+                    t.shape, spec.shape
+                )));
             }
             let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
             let lit = xla::Literal::vec1(&t.data)
                 .reshape(&dims)
-                .map_err(|e| anyhow!("reshape: {e:?}"))?;
+                .map_err(|e| PallasError::Backend(format!("reshape: {e:?}")))?;
             literals.push(lit);
         }
         let result = exe
             .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute '{name}': {e:?}"))?[0][0]
+            .map_err(|e| PallasError::Backend(format!("execute '{name}': {e:?}")))?[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        let data = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+            .map_err(|e| PallasError::Backend(format!("fetch result: {e:?}")))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| PallasError::Backend(format!("untuple: {e:?}")))?;
+        let data = out
+            .to_vec::<f32>()
+            .map_err(|e| PallasError::Backend(format!("to_vec: {e:?}")))?;
         Ok(Tensor { shape: entry.output_shape.clone(), data })
     }
 
@@ -121,11 +129,11 @@ impl ModelRuntime {
     /// (the model weights) are regenerated from the manifest's
     /// deterministic rules. This is the serving entry point: the request
     /// supplies only the data, the weights are fixed.
-    pub fn execute_x(&self, name: &str, x: Tensor) -> Result<Tensor> {
+    pub fn execute_x(&self, name: &str, x: Tensor) -> PallasResult<Tensor> {
         let entry = self
             .manifest
             .get(name)
-            .with_context(|| format!("unknown artifact '{name}'"))?;
+            .ok_or_else(|| PallasError::UnknownModel(name.to_string()))?;
         let mut inputs = Vec::with_capacity(entry.inputs.len());
         inputs.push(x);
         for spec in entry.inputs.iter().skip(1) {
@@ -136,17 +144,17 @@ impl ModelRuntime {
 
     /// Run an artifact on its manifest-declared deterministic inputs and
     /// verify the output digest — the cross-language numerics check.
-    pub fn self_check(&self, name: &str) -> Result<()> {
+    pub fn self_check(&self, name: &str) -> PallasResult<()> {
         let entry = self
             .manifest
             .get(name)
-            .with_context(|| format!("unknown artifact '{name}'"))?;
+            .ok_or_else(|| PallasError::UnknownModel(name.to_string()))?;
         let inputs: Vec<Tensor> = entry.inputs.iter().map(|s| s.generate()).collect();
         let out = self.execute(name, &inputs)?;
         entry
             .expected
             .verify(&out.data)
-            .with_context(|| format!("digest mismatch for '{name}'"))
+            .map_err(|e| PallasError::Backend(format!("digest mismatch for '{name}': {e}")))
     }
 }
 
@@ -168,7 +176,7 @@ impl Backend for PjrtBackend {
         "pjrt"
     }
 
-    fn execute(&self, kind: &str, bucket: usize, x: Tensor) -> Result<Execution> {
+    fn execute(&self, kind: &str, bucket: usize, x: Tensor) -> PallasResult<Execution> {
         let t0 = Instant::now();
         let output = self.rt.execute_x(&format!("{kind}_b{bucket}"), x)?;
         Ok(Execution { output, model_time_s: t0.elapsed().as_secs_f64() })
@@ -193,13 +201,13 @@ impl PjrtBackendFactory {
 }
 
 impl BackendFactory for PjrtBackendFactory {
-    fn catalog(&self) -> Result<Catalog> {
+    fn catalog(&self) -> PallasResult<Catalog> {
         let manifest = Manifest::load(&self.artifacts_dir)?;
         let kinds: Vec<&str> = self.kinds.iter().map(String::as_str).collect();
         manifest.catalog(&kinds)
     }
 
-    fn create(&self) -> Result<Box<dyn Backend>> {
+    fn create(&self) -> PallasResult<Box<dyn Backend>> {
         let kinds = self.kinds.clone();
         let rt = ModelRuntime::load_some(&self.artifacts_dir, |e| {
             kinds.iter().any(|k| *k == e.kind)

@@ -12,9 +12,8 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use anyhow::{anyhow, bail, Result};
-
 use crate::config::{CpuPlatform, FrameworkConfig, SchedPolicy};
+use crate::error::{PallasError, PallasResult};
 use crate::models;
 use crate::sched::LaneAssignment;
 use crate::sim::{platform_fingerprint, SimCache};
@@ -66,12 +65,14 @@ impl SimBackendConfig {
     /// The bucket ladder, ascending/deduplicated/non-zero; errors when no
     /// usable bucket remains. The single normalisation point for the sim
     /// backend (catalog and tables both go through here).
-    fn normalized_buckets(&self) -> Result<Vec<usize>> {
+    fn normalized_buckets(&self) -> PallasResult<Vec<usize>> {
         let mut b: Vec<usize> = self.buckets.iter().copied().filter(|&b| b > 0).collect();
         b.sort_unstable();
         b.dedup();
         if b.is_empty() {
-            bail!("sim backend: no batch buckets configured");
+            return Err(PallasError::InvalidConfig(
+                "sim backend: no batch buckets configured".into(),
+            ));
         }
         Ok(b)
     }
@@ -103,7 +104,7 @@ impl SimTables {
     /// points across lanes/re-plans simulate once. The table contents
     /// are a pure function of the config (any `jobs`, warm or cold
     /// cache: same bits).
-    fn build(cfg: &SimBackendConfig, cache: &Arc<SimCache>) -> Result<Self> {
+    fn build(cfg: &SimBackendConfig, cache: &Arc<SimCache>) -> PallasResult<Self> {
         let buckets = cfg.normalized_buckets()?;
         let mut shapes = HashMap::new();
         let mut grid: Vec<(String, usize)> = Vec::new();
@@ -117,11 +118,11 @@ impl SimTables {
         let framework = cfg.framework.clone();
         let policy = cfg.policy;
         let cache = Arc::clone(cache);
-        let rows: Vec<Result<((String, usize), f64)>> =
+        let rows: Vec<PallasResult<((String, usize), f64)>> =
             par_map(cfg.jobs, grid, move |_, (kind, bucket)| {
                 let prep = cache
                     .prepared(&kind, bucket)
-                    .ok_or_else(|| anyhow!("sim backend: unknown model '{kind}'"))?;
+                    .ok_or_else(|| PallasError::UnknownModel(kind.clone()))?;
                 let mut fw = match &framework {
                     Some(fw) => fw.clone(),
                     None => tuner::tune(prep.graph(), &platform).config,
@@ -187,7 +188,27 @@ impl SimBackendFactory {
         &self.cache
     }
 
-    fn tables(&self) -> Result<Arc<SimTables>> {
+    /// The pre-simulated latency table a lane would serve from, as
+    /// `((kind, bucket), seconds)` rows sorted by kind then bucket. With
+    /// an assignment this is the *same* `Arc`'d table the lane backend
+    /// executes against (built on first use, cached per shape/kinds/
+    /// knobs), so the facade's `tune --emit-plan` → `serve --plan`
+    /// bit-identity check reads exactly what serving reads.
+    pub fn latency_table(
+        &self,
+        assignment: Option<&LaneAssignment>,
+    ) -> PallasResult<Vec<((String, usize), f64)>> {
+        let tables = match assignment {
+            Some(a) => self.lane_tables(a)?,
+            None => self.tables()?,
+        };
+        let mut rows: Vec<((String, usize), f64)> =
+            tables.latency.iter().map(|(k, v)| (k.clone(), *v)).collect();
+        rows.sort_by(|a, b| a.0.cmp(&b.0));
+        Ok(rows)
+    }
+
+    fn tables(&self) -> PallasResult<Arc<SimTables>> {
         let mut guard = self.tables.lock().unwrap();
         if let Some(t) = guard.as_ref() {
             return Ok(Arc::clone(t));
@@ -197,7 +218,7 @@ impl SimBackendFactory {
         Ok(t)
     }
 
-    fn lane_tables(&self, assignment: &LaneAssignment) -> Result<Arc<SimTables>> {
+    fn lane_tables(&self, assignment: &LaneAssignment) -> PallasResult<Arc<SimTables>> {
         let kinds: Vec<String> = if assignment.kinds.is_empty() {
             self.cfg.kinds.clone()
         } else {
@@ -209,10 +230,10 @@ impl SimBackendFactory {
                 .collect()
         };
         if kinds.is_empty() {
-            bail!(
+            return Err(PallasError::InvalidPlan(format!(
                 "sim backend: lane {} hosts none of the configured kinds",
                 assignment.lane_id
-            );
+            )));
         }
         let framework = assignment.framework.clone().or_else(|| self.cfg.framework.clone());
         let slice = self
@@ -246,12 +267,12 @@ impl SimBackendFactory {
 }
 
 impl BackendFactory for SimBackendFactory {
-    fn catalog(&self) -> Result<Catalog> {
+    fn catalog(&self) -> PallasResult<Catalog> {
         let buckets = self.cfg.normalized_buckets()?;
         let mut models = Vec::with_capacity(self.cfg.kinds.len());
         for kind in &self.cfg.kinds {
             if models::build(kind, 1).is_none() {
-                bail!("sim backend: unknown model '{kind}' (not in the zoo)");
+                return Err(PallasError::UnknownModel(kind.clone()));
             }
             models.push(ModelSpec {
                 kind: kind.clone(),
@@ -262,11 +283,11 @@ impl BackendFactory for SimBackendFactory {
         Ok(Catalog { models })
     }
 
-    fn create(&self) -> Result<Box<dyn Backend>> {
+    fn create(&self) -> PallasResult<Box<dyn Backend>> {
         Ok(Box::new(SimBackend { tables: self.tables()? }))
     }
 
-    fn create_on(&self, assignment: &LaneAssignment) -> Result<Box<dyn Backend>> {
+    fn create_on(&self, assignment: &LaneAssignment) -> PallasResult<Box<dyn Backend>> {
         Ok(Box::new(SimBackend { tables: self.lane_tables(assignment)? }))
     }
 }
@@ -280,7 +301,7 @@ pub struct SimBackend {
 impl SimBackend {
     /// Build a standalone backend (lanes created through
     /// [`SimBackendFactory`] share one table instead).
-    pub fn new(cfg: SimBackendConfig) -> Result<Self> {
+    pub fn new(cfg: SimBackendConfig) -> PallasResult<Self> {
         let cache = Arc::new(SimCache::new());
         Ok(SimBackend { tables: Arc::new(SimTables::build(&cfg, &cache)?) })
     }
@@ -302,24 +323,24 @@ impl Backend for SimBackend {
         "sim"
     }
 
-    fn execute(&self, kind: &str, bucket: usize, x: Tensor) -> Result<Execution> {
+    fn execute(&self, kind: &str, bucket: usize, x: Tensor) -> PallasResult<Execution> {
         if !self.tables.shapes.contains_key(kind) {
-            bail!("sim backend: kind '{kind}' not served");
+            return Err(PallasError::Backend(format!("sim backend: kind '{kind}' not served")));
         }
-        let model_time_s = self
-            .simulated_latency(kind, bucket)
-            .ok_or_else(|| anyhow!("sim backend: no bucket {bucket} for '{kind}'"))?;
+        let model_time_s = self.simulated_latency(kind, bucket).ok_or_else(|| {
+            PallasError::Backend(format!("sim backend: no bucket {bucket} for '{kind}'"))
+        })?;
         if x.shape.is_empty() {
-            bail!("sim backend: scalar input for '{kind}'");
+            return Err(PallasError::Backend(format!("sim backend: scalar input for '{kind}'")));
         }
         let rows = x.shape[0];
         let feat: usize = x.shape[1..].iter().product();
         if feat == 0 || x.data.len() != rows * feat {
-            bail!(
+            return Err(PallasError::Backend(format!(
                 "sim backend: input shape {:?} inconsistent with {} elements",
                 x.shape,
                 x.data.len()
-            );
+            )));
         }
         let scale = 1.0 / (feat as f32).sqrt();
         let mut out = Vec::with_capacity(rows * SIM_OUT_FEATURES);

@@ -13,9 +13,8 @@
 //! batching loop uses in place of round-robin: least queued items among
 //! the lanes hosting a batch's kind, ties to the lowest lane index.
 
-use anyhow::{anyhow, bail, Result};
-
 use crate::config::{CpuPlatform, FrameworkConfig, SchedPolicy};
+use crate::error::{PallasError, PallasResult};
 use crate::models;
 use crate::tuner::guidelines;
 
@@ -63,7 +62,7 @@ pub struct LanePlan {
 impl LanePlan {
     /// The §8-prior plan: one group per kind, equal core shares, each
     /// group's knobs from the guideline on its own slice.
-    pub fn guideline(platform: &CpuPlatform, kinds: &[&str]) -> Result<Self> {
+    pub fn guideline(platform: &CpuPlatform, kinds: &[&str]) -> PallasResult<Self> {
         let mix: Vec<(String, f64)> = kinds.iter().map(|k| (k.to_string(), 1.0)).collect();
         Self::for_mix(platform, &mix)
     }
@@ -71,9 +70,9 @@ impl LanePlan {
     /// Plan for a traffic mix: core shares proportional to each kind's
     /// weight (zero-weight kinds keep one core so a drained model stays
     /// servable), framework knobs from the §8 guideline on each slice.
-    pub fn for_mix(platform: &CpuPlatform, mix: &[(String, f64)]) -> Result<Self> {
+    pub fn for_mix(platform: &CpuPlatform, mix: &[(String, f64)]) -> PallasResult<Self> {
         if mix.is_empty() {
-            bail!("lane plan: no model kinds");
+            return Err(PallasError::InvalidPlan("lane plan: no model kinds".into()));
         }
         let weights: Vec<f64> = mix.iter().map(|(_, w)| *w).collect();
         let allocs = split_cores(platform, &weights)?;
@@ -81,7 +80,7 @@ impl LanePlan {
         for ((kind, _), alloc) in mix.iter().zip(allocs) {
             let slice = platform.restrict(alloc.first_core, alloc.cores);
             let graph = models::build(kind, models::canonical_batch(kind))
-                .ok_or_else(|| anyhow!("lane plan: unknown model '{kind}'"))?;
+                .ok_or_else(|| PallasError::UnknownModel(kind.clone()))?;
             let framework = guidelines::tune(&graph, &slice).config;
             groups.push(LaneGroup {
                 kinds: vec![kind.clone()],
@@ -155,37 +154,37 @@ impl LanePlan {
     /// Check the invariants the coordinator relies on: at least one
     /// group, every group hosting ≥ 1 kind on ≥ 1 core, and lane
     /// allocations pairwise disjoint and inside the machine.
-    pub fn validate(&self) -> Result<()> {
+    pub fn validate(&self) -> PallasResult<()> {
+        let invalid = |m: String| Err(PallasError::InvalidPlan(m));
         if self.groups.is_empty() {
-            bail!("lane plan: no groups");
+            return invalid("lane plan: no groups".into());
         }
         let phys = self.platform.physical_cores();
         let lanes = self.lane_assignments();
         for a in &lanes {
             if a.allocation.cores == 0 {
-                bail!("lane {}: empty core allocation", a.lane_id);
+                return invalid(format!("lane {}: empty core allocation", a.lane_id));
             }
             if a.allocation.end() > phys {
-                bail!(
+                return invalid(format!(
                     "lane {}: cores {}..={} exceed the machine's {} physical cores",
                     a.lane_id,
                     a.allocation.first_core,
                     a.allocation.last_core(),
                     phys
-                );
+                ));
             }
             if a.kinds.is_empty() {
-                bail!("lane {}: hosts no model kind", a.lane_id);
+                return invalid(format!("lane {}: hosts no model kind", a.lane_id));
             }
         }
         for (i, a) in lanes.iter().enumerate() {
             for b in &lanes[i + 1..] {
                 if a.allocation.overlaps(&b.allocation) {
-                    bail!(
+                    return invalid(format!(
                         "lanes {} and {} overlap on physical cores",
-                        a.lane_id,
-                        b.lane_id
-                    );
+                        a.lane_id, b.lane_id
+                    ));
                 }
             }
         }

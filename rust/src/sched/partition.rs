@@ -8,9 +8,8 @@
 //! dividing the machine between lane groups proportionally to traffic
 //! weights, with no slice ever overlapping another.
 
-use anyhow::{bail, Result};
-
 use crate::config::{CpuPlatform, FrameworkConfig, ParallelismMode};
+use crate::error::{PallasError, PallasResult};
 
 /// A contiguous slice of physical cores granted to one worker lane (or
 /// one lane group). Slices never overlap within a valid lane plan.
@@ -54,14 +53,16 @@ impl CoreAllocation {
 /// slice ≥ 1 core so a drained model keeps a lane alive). Deterministic:
 /// remainder ties break to the lowest index. Errors when there are more
 /// weights than physical cores, or no weights at all.
-pub fn split_cores(platform: &CpuPlatform, weights: &[f64]) -> Result<Vec<CoreAllocation>> {
+pub fn split_cores(platform: &CpuPlatform, weights: &[f64]) -> PallasResult<Vec<CoreAllocation>> {
     let n = weights.len();
     let phys = platform.physical_cores();
     if n == 0 {
-        bail!("split_cores: no weights");
+        return Err(PallasError::InvalidPlan("split_cores: no weights".into()));
     }
     if n > phys {
-        bail!("split_cores: {n} groups need at least {n} cores, machine has {phys}");
+        return Err(PallasError::InvalidPlan(format!(
+            "split_cores: {n} groups need at least {n} cores, machine has {phys}"
+        )));
     }
     let total: f64 = weights.iter().map(|w| w.max(0.0)).sum();
     let norm: Vec<f64> = if total > 0.0 {

@@ -23,4 +23,7 @@ pub mod prepared;
 
 pub use breakdown::{Breakdown, Category, Segment};
 pub use engine::{simulate, simulate_opts, simulate_prepared, SimOptions, SimReport};
-pub use prepared::{canonical_config, platform_fingerprint, PreparedGraph, SimCache};
+pub use prepared::{
+    canonical_config, fingerprint_fold, graph_structure_fingerprint, platform_fingerprint,
+    PreparedGraph, SimCache,
+};

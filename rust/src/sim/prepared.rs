@@ -364,6 +364,22 @@ fn hash_cost(h: &mut Fnv, c: &OpCost) {
     h.f64(c.lib_prep_bytes);
 }
 
+/// Structural fingerprint of a graph without preparing it — what
+/// [`PreparedGraph::fingerprint`] returns, minus the rank/CSR/weight
+/// precomputation. Plan artifacts use this on their provenance path.
+pub fn graph_structure_fingerprint(g: &Graph) -> u64 {
+    graph_fingerprint(g)
+}
+
+/// Fold one `u64` into a running FNV-1a fingerprint. Shared with the
+/// plan artifact's provenance hash so the hashing constants live in
+/// exactly one place (drift would silently invalidate stored plans).
+pub fn fingerprint_fold(h: u64, v: u64) -> u64 {
+    let mut f = Fnv(h);
+    f.u64(v);
+    f.finish()
+}
+
 /// Hash everything about a graph the simulator can observe: node count,
 /// per-node kind parameters, cost descriptors and dependency edges.
 fn graph_fingerprint(g: &Graph) -> u64 {

@@ -23,12 +23,25 @@ impl Baseline {
         Baseline::TensorFlowDefault,
     ];
 
-    /// Display name.
+    /// Display name (also the canonical spelling in plan artifacts).
     pub fn name(&self) -> &'static str {
         match self {
             Baseline::TensorFlowRecommended => "TensorFlow-recommended",
             Baseline::IntelRecommended => "Intel-recommended",
             Baseline::TensorFlowDefault => "TensorFlow-default",
+        }
+    }
+
+    /// Parse a baseline name (case-insensitive; accepts the canonical
+    /// display spelling and short CLI aliases).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "tensorflow-recommended" | "tf-recommended" | "tf-rec" => {
+                Some(Baseline::TensorFlowRecommended)
+            }
+            "intel-recommended" | "intel" => Some(Baseline::IntelRecommended),
+            "tensorflow-default" | "tf-default" => Some(Baseline::TensorFlowDefault),
+            _ => None,
         }
     }
 }
@@ -64,6 +77,15 @@ mod tests {
         let p = CpuPlatform::large2();
         let cfg = baseline_config(Baseline::IntelRecommended, &p);
         assert!(!cfg.over_threaded(&p)); // 2 × (24+24) = 96 = logical cores
+    }
+
+    #[test]
+    fn names_roundtrip_through_parse() {
+        for b in Baseline::ALL {
+            assert_eq!(Baseline::parse(b.name()), Some(b));
+        }
+        assert_eq!(Baseline::parse("intel"), Some(Baseline::IntelRecommended));
+        assert_eq!(Baseline::parse("pytorch"), None);
     }
 
     #[test]

@@ -110,13 +110,19 @@ pub fn exhaustive_search(graph: &Graph, platform: &CpuPlatform) -> SearchResult 
 /// over `opts.jobs` workers through `opts.cache`; the reduction is a
 /// serial index-ordered scan with strict `<`, so the chosen point, its
 /// latency bits and the unique-point count are identical to the serial
-/// uncached sweep.
+/// uncached sweep. With `opts.policy` set, only that policy's
+/// sub-lattice is swept (1-pool points included — dispatch order cannot
+/// matter there), so a policy pin constrains the search instead of
+/// rewriting its result.
 pub fn exhaustive_search_with(
     graph: &Graph,
     platform: &CpuPlatform,
     opts: &SweepOptions,
 ) -> SearchResult {
-    let points = lattice(platform);
+    let mut points = lattice(platform);
+    if let Some(pin) = opts.policy {
+        points.retain(|c| c.inter_op_pools == 1 || c.sched_policy == pin);
+    }
     let evaluated = points.len();
     let prep = Arc::new(PreparedGraph::new(graph));
     let plat = Arc::new(platform.clone());
@@ -176,6 +182,25 @@ mod tests {
         let r = exhaustive_search(&g, &CpuPlatform::small());
         assert!(r.evaluated > 100, "evaluated={}", r.evaluated);
         assert!(SchedPolicy::ALL.contains(&r.best.sched_policy));
+    }
+
+    #[test]
+    fn policy_pin_constrains_the_sweep() {
+        let g = models::build("inception_v2", 16).unwrap();
+        let p = CpuPlatform::small();
+        let free = exhaustive_search(&g, &p);
+        let pinned = exhaustive_search_with(
+            &g,
+            &p,
+            &SweepOptions::default().pinned(Some(SchedPolicy::Topo)),
+        );
+        // the pinned sub-lattice is strictly smaller and every multi-pool
+        // winner honours the pin; the pinned optimum can't beat the free one
+        assert!(pinned.evaluated < free.evaluated);
+        assert!(
+            pinned.best.inter_op_pools == 1 || pinned.best.sched_policy == SchedPolicy::Topo
+        );
+        assert!(pinned.best_latency_s >= free.best_latency_s);
     }
 
     #[test]

@@ -20,9 +20,8 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use anyhow::Result;
-
 use crate::config::{CpuPlatform, SchedPolicy};
+use crate::error::PallasResult;
 use crate::metrics::WindowSnapshot;
 use crate::sched::{LaneGroup, LanePlan};
 use crate::sim::SimCache;
@@ -147,7 +146,7 @@ impl OnlineTuner {
     /// Candidates are scored in parallel (`cfg.jobs` workers); the
     /// reduction scans them in candidate order with a strict `<`, so the
     /// proposal is identical to the serial path at any worker count.
-    pub fn propose(&self, current: &LanePlan) -> Result<Option<LanePlan>> {
+    pub fn propose(&self, current: &LanePlan) -> PallasResult<Option<LanePlan>> {
         let proportional = LanePlan::for_mix(&self.platform, &self.mix())?;
         let mut candidates = self.neighbors(&proportional);
         candidates.push(proportional);

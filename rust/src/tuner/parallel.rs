@@ -14,6 +14,7 @@
 use std::sync::mpsc;
 use std::sync::Arc;
 
+use crate::config::SchedPolicy;
 use crate::libs::threadpool::{EigenPool, TaskPool};
 use crate::sim::SimCache;
 
@@ -24,9 +25,9 @@ pub fn default_jobs() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(1, 8)
 }
 
-/// Knobs shared by every sweep entry point: worker count (`--jobs`) and
-/// the simulation memo-cache the workers consult. Cloning shares the
-/// cache.
+/// Knobs shared by every sweep entry point: worker count (`--jobs`), the
+/// simulation memo-cache the workers consult, and an optional pin on the
+/// dispatch-policy dimension. Cloning shares the cache.
 #[derive(Debug, Clone)]
 pub struct SweepOptions {
     /// Sweep worker threads (1 = serial, no pool spawned).
@@ -34,11 +35,15 @@ pub struct SweepOptions {
     /// Memoized-simulation cache; share one across sweeps to dedupe
     /// design points between tuner tiers.
     pub cache: Arc<SimCache>,
+    /// Restrict the swept lattice to this dispatch policy (1-pool points
+    /// are kept — a single pool serialises every order, so they belong
+    /// to every policy's sub-lattice). `None` sweeps all policies.
+    pub policy: Option<SchedPolicy>,
 }
 
 impl Default for SweepOptions {
     fn default() -> Self {
-        SweepOptions { jobs: default_jobs(), cache: Arc::new(SimCache::new()) }
+        SweepOptions { jobs: default_jobs(), cache: Arc::new(SimCache::new()), policy: None }
     }
 }
 
@@ -50,7 +55,13 @@ impl SweepOptions {
 
     /// Explicit worker count over a shared cache.
     pub fn shared(jobs: usize, cache: Arc<SimCache>) -> Self {
-        SweepOptions { jobs, cache }
+        SweepOptions { jobs, cache, policy: None }
+    }
+
+    /// Pin (or unpin) the swept policy dimension.
+    pub fn pinned(mut self, policy: Option<SchedPolicy>) -> Self {
+        self.policy = policy;
+        self
     }
 }
 

@@ -1,0 +1,209 @@
+//! The `pallas::api` facade contract: `Plan` JSON round-trips are the
+//! identity for every tuning tier, and a plan deployed from a file in a
+//! *different process* serves bit-identical latency tables to in-process
+//! tuning — the tune-once/serve-many artifact story.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use parframe::api::{Plan, PlanTier, Session, Workload};
+use parframe::config::CpuPlatform;
+use parframe::sched::LanePlan;
+use parframe::tuner::Baseline;
+use parframe::PallasError;
+
+fn tmp_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("parframe_{}_{name}", std::process::id()))
+}
+
+/// serialize → parse must be the identity, and serialization a fixed
+/// point, for a plan from any tier.
+fn assert_roundtrip_identity(plan: &Plan) {
+    let text = plan.to_json();
+    let back = Plan::from_json(&text).unwrap_or_else(|e| panic!("{}: {e}", plan.tier.name()));
+    assert_eq!(&back, plan, "round-trip changed the plan ({})", plan.tier.name());
+    assert_eq!(back.to_json(), text, "serialization not a fixed point");
+    // latency bits survive exactly (f64 → shortest decimal → f64)
+    for (a, b) in plan.entries.iter().zip(&back.entries) {
+        assert_eq!(a.predicted_latency_s.to_bits(), b.predicted_latency_s.to_bits());
+    }
+}
+
+#[test]
+fn roundtrip_identity_for_every_tier() {
+    let session = Session::on(CpuPlatform::small());
+    let single = Workload::single("wide_deep").unwrap();
+    let mix = Workload::mix(&[("wide_deep", 0.7), ("resnet50", 0.3)]).unwrap();
+
+    assert_roundtrip_identity(&session.tune(&single).unwrap());
+    assert_roundtrip_identity(&session.tune(&mix).unwrap());
+    assert_roundtrip_identity(&session.tune_exhaustive(&single).unwrap());
+    for b in Baseline::ALL {
+        assert_roundtrip_identity(&session.tune_baseline(&mix, b).unwrap());
+    }
+    // online-snapshot tier via a live core-aware deployment
+    let handle = session.serve_guideline(&mix).unwrap();
+    let snap = session.snapshot(&handle).unwrap();
+    assert_eq!(snap.tier, PlanTier::OnlineSnapshot);
+    assert_roundtrip_identity(&snap);
+}
+
+#[test]
+fn roundtrip_identity_across_the_zoo() {
+    // property-style sweep: the guideline plan of every zoo model
+    // round-trips exactly (covers every policy/parallelism combination
+    // the width rule can produce)
+    let session = Session::on(CpuPlatform::large2());
+    for name in parframe::models::model_names() {
+        let w = Workload::single(name).unwrap();
+        let plan = session.tune(&w).unwrap();
+        assert_roundtrip_identity(&plan);
+        plan.verify_fingerprint(session.platform()).unwrap();
+    }
+}
+
+#[test]
+fn file_roundtrip_preserves_plan() {
+    let session = Session::on(CpuPlatform::large2());
+    let plan = session
+        .tune(&Workload::mix(&[("transformer", 0.5), ("resnet50", 0.5)]).unwrap())
+        .unwrap();
+    let path = tmp_path("file_roundtrip.json");
+    plan.save(path.to_str().unwrap()).unwrap();
+    let loaded = Plan::load(path.to_str().unwrap()).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(loaded, plan);
+}
+
+#[test]
+fn serve_from_loaded_plan_is_bit_identical_to_in_process() {
+    // the acceptance bar: tune → emit → load → serve must produce the
+    // same latency tables, bit for bit, as serving the in-process plan
+    let workload = Workload::mix(&[("wide_deep", 0.6), ("resnet50", 0.4)]).unwrap();
+    let tuned = Session::on(CpuPlatform::large2());
+    let plan = tuned.tune(&workload).unwrap();
+
+    let path = tmp_path("serve_bitident.json");
+    plan.save(path.to_str().unwrap()).unwrap();
+    let loaded = Plan::load(path.to_str().unwrap()).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(loaded, plan);
+
+    // fresh sessions (fresh caches) on both sides: nothing shared but
+    // the artifact bits
+    let table_a = Session::on(CpuPlatform::large2())
+        .serve(&plan)
+        .unwrap()
+        .latency_table()
+        .unwrap();
+    let table_b = Session::on(CpuPlatform::large2())
+        .serve(&loaded)
+        .unwrap()
+        .latency_table()
+        .unwrap();
+    assert_eq!(table_a.len(), table_b.len());
+    assert!(!table_a.is_empty());
+    for ((ka, la), (kb, lb)) in table_a.iter().zip(&table_b) {
+        assert_eq!(ka, kb);
+        assert_eq!(la.to_bits(), lb.to_bits(), "{ka:?}: {la} != {lb}");
+    }
+}
+
+#[test]
+fn cross_process_emit_plan_matches_in_process_tuning() {
+    // run the real binary: `tune --emit-plan` in a child process, then
+    // load the artifact here and compare against in-process tuning —
+    // equality is bitwise (configs, layout, predicted-latency f64s)
+    let path = tmp_path("cross_process.json");
+    let out = Command::new(env!("CARGO_BIN_EXE_parframe"))
+        .args([
+            "tune",
+            "--model",
+            "wide_deep",
+            "--platform",
+            "large.2",
+            "--emit-plan",
+            path.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn parframe tune");
+    assert!(
+        out.status.success(),
+        "tune failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let emitted = Plan::load(path.to_str().unwrap()).unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    let in_process =
+        Session::on(CpuPlatform::large2()).tune(&Workload::single("wide_deep").unwrap()).unwrap();
+    assert_eq!(emitted, in_process, "cross-process plan differs from in-process tuning");
+
+    // and the loaded artifact deploys: same tables as the in-process plan
+    let served = Session::on(CpuPlatform::large2()).serve(&emitted).unwrap();
+    let t_emitted = served.latency_table().unwrap();
+    let t_inproc = Session::on(CpuPlatform::large2())
+        .serve(&in_process)
+        .unwrap()
+        .latency_table()
+        .unwrap();
+    for ((ka, la), (kb, lb)) in t_emitted.iter().zip(&t_inproc) {
+        assert_eq!(ka, kb);
+        assert_eq!(la.to_bits(), lb.to_bits());
+    }
+}
+
+#[test]
+fn cli_rejects_unknown_flags_listing_accepted() {
+    // the flag-parser satellite: a misspelled flag must fail loudly and
+    // name the accepted flags, not silently drop
+    let out = Command::new(env!("CARGO_BIN_EXE_parframe"))
+        .args(["tune", "--model", "wide_deep", "--job", "8"])
+        .output()
+        .expect("spawn parframe");
+    assert!(!out.status.success(), "misspelled --job must fail");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--job"), "error must name the bad flag: {err}");
+    assert!(err.contains("--jobs"), "error must list accepted flags: {err}");
+}
+
+#[test]
+fn serve_checks_platform_and_fingerprint() {
+    let tuned = Session::on(CpuPlatform::large2());
+    let plan = tuned.tune(&Workload::single("ncf").unwrap()).unwrap();
+
+    // wrong platform → PlanMismatch naming both sides
+    match Session::on(CpuPlatform::large()).serve(&plan) {
+        Err(PallasError::PlanMismatch { expected_platform, got }) => {
+            assert_eq!(expected_platform, "large.2");
+            assert_eq!(got, "large");
+        }
+        other => panic!("expected PlanMismatch, got {:?}", other.err()),
+    }
+
+    // tampered fingerprint → InvalidPlan
+    let mut stale = plan.clone();
+    stale.sim_fingerprint ^= 1;
+    assert!(matches!(
+        Session::on(CpuPlatform::large2()).serve(&stale),
+        Err(PallasError::InvalidPlan(_))
+    ));
+}
+
+#[test]
+fn snapshot_plan_redeploys() {
+    // an online-snapshot artifact is itself deployable: snapshot a live
+    // deployment, round-trip it, serve it again
+    let session = Session::on(CpuPlatform::large());
+    let w = Workload::kinds(&["wide_deep", "ncf"]).unwrap();
+    let handle = session.serve_guideline(&w).unwrap();
+    let snap = session.snapshot(&handle).unwrap();
+    drop(handle);
+    let restored = Plan::from_json(&snap.to_json()).unwrap();
+    let lane_plan: LanePlan = restored.lane_plan(session.platform()).unwrap();
+    lane_plan.validate().unwrap();
+    let handle2 = Session::on(CpuPlatform::large()).serve(&restored).unwrap();
+    let report = handle2.run_closed("wide_deep", 32, 4).unwrap();
+    assert_eq!(report.errors, 0);
+    assert!(report.completed >= 32);
+}

@@ -1,11 +1,53 @@
-//! Cross-module integration: tuner → coordinator lane-count wiring, config
-//! loader → simulator, trace output on simulated runs.
+//! Cross-module integration: the `api` facade over tuner + simulator,
+//! config loader → simulator, trace output on simulated runs.
 
+use parframe::api::{Session, Workload};
 use parframe::config::{CpuPlatform, RunConfig};
 use parframe::models;
 use parframe::sim::{self, SimOptions};
 use parframe::trace;
 use parframe::tuner;
+use parframe::PallasError;
+
+#[test]
+fn facade_tune_agrees_with_direct_tuner() {
+    // the facade is a veneer, not a fork: Session::tune must recommend
+    // exactly what tuner::tune recommends, for every zoo model
+    let session = Session::on(CpuPlatform::large2());
+    for name in models::model_names() {
+        let w = Workload::single(name).unwrap();
+        let plan = session.tune(&w).unwrap();
+        let g = models::build(name, models::canonical_batch(name)).unwrap();
+        let direct = tuner::tune(&g, &CpuPlatform::large2()).config;
+        assert_eq!(plan.entries[0].config, direct, "{name}");
+        // and the predicted latency is the direct simulation, bit for bit
+        let direct_lat = sim::simulate(&g, &CpuPlatform::large2(), &direct).latency_s;
+        assert_eq!(
+            plan.entries[0].predicted_latency_s.to_bits(),
+            direct_lat.to_bits(),
+            "{name}"
+        );
+    }
+}
+
+#[test]
+fn facade_errors_are_typed_end_to_end() {
+    let session = Session::on(CpuPlatform::large2());
+    assert!(matches!(
+        Workload::single("bert"),
+        Err(PallasError::UnknownModel(m)) if m == "bert"
+    ));
+    assert!(matches!(
+        Session::builder().platform_named("tpu"),
+        Err(PallasError::UnknownPlatform(_))
+    ));
+    assert!(matches!(
+        Session::builder().policy_named("fifo"),
+        Err(PallasError::UnknownPolicy(_))
+    ));
+    let bad = session.manual_config(Some(0), None, None);
+    assert!(matches!(bad, Err(PallasError::InvalidConfig(_))));
+}
 
 #[test]
 fn config_file_roundtrip_drives_simulation() {
