@@ -41,7 +41,7 @@ fn main() -> anyhow::Result<()> {
         operator_impl: OperatorImpl::Serial,
         ..FrameworkConfig::tuned_default()
     };
-    let r = sim::simulate_opts(&g, &p, &cfg, &SimOptions { record_timelines: true });
+    let r = sim::simulate_opts(&g, &p, &cfg, &SimOptions { record_timelines: true })?;
     let mut f = fs::File::create(out_dir.join("fig08_2x2.trace.json"))?;
     f.write_all(trace::chrome_trace(&r.timelines).as_bytes())?;
     println!("wrote figures_out/*.txt and fig08_2x2.trace.json (chrome://tracing)");

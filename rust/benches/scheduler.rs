@@ -23,7 +23,7 @@ fn main() {
     for name in ["resnet50", "inception_v3", "transformer", "densenet121"] {
         let g = models::build(name, models::canonical_batch(name)).unwrap();
         b.run_with_output(&format!("simulate/{name}"), || {
-            sim::simulate(&g, &p, &cfg(4, 12)).latency_s
+            sim::simulate(&g, &p, &cfg(4, 12)).unwrap().latency_s
         });
     }
 
@@ -33,7 +33,7 @@ fn main() {
     for policy in SchedPolicy::ALL {
         let c = FrameworkConfig { sched_policy: policy, ..cfg(4, 12) };
         b.run_with_output(&format!("simulate/transformer/{}", policy.name()), || {
-            sim::simulate(&gt, &p, &c).latency_s
+            sim::simulate(&gt, &p, &c).unwrap().latency_s
         });
     }
 
@@ -43,7 +43,7 @@ fn main() {
     for policy in SchedPolicy::ALL {
         let c = FrameworkConfig { sched_policy: policy, ..cfg(4, 12) };
         b.run_with_output(&format!("simulate-prepared/transformer/{}", policy.name()), || {
-            sim::simulate_prepared(&prep, &p, &c, &SimOptions::default()).latency_s
+            sim::simulate_prepared(&prep, &p, &c, &SimOptions::default()).unwrap().latency_s
         });
     }
 
@@ -59,6 +59,7 @@ fn main() {
     let g2 = models::build("inception_v2", 16).unwrap();
     b.run_with_output("simulate+timelines/inception_v2", || {
         sim::simulate_opts(&g2, &p, &cfg(2, 24), &SimOptions { record_timelines: true })
+            .unwrap()
             .timelines
             .len()
     });

@@ -1,0 +1,92 @@
+//! Bench: the sim-engine fast path — calendar-queue event loop, scratch
+//! arenas, and delta-simulation (policy-sibling phase-table sharing) —
+//! against the seed BinaryHeap engine it replaced.
+//!
+//! The headline case is `fastpath-vs-seed`: evaluated design points per
+//! second over the full exhaustive tuning lattice, SimCache fast path
+//! vs `simulate_reference`. The ratio is the acceptance metric for the
+//! engine-fast-path work (target ≥ 2x) and is asserted bit-identical
+//! along the way — speed that changes the answer doesn't count.
+//!
+//! Case names are fixed across fast/full modes so the emitted
+//! `BENCH_sim.json` stays diffable; `PARFRAME_BENCH_FAST=1` only swaps
+//! in a smaller model/platform and budget.
+
+use std::time::Instant;
+
+use parframe::config::{CpuPlatform, FrameworkConfig, OperatorImpl};
+use parframe::models;
+use parframe::sim::{self, PreparedGraph, SimCache, SimOptions};
+use parframe::tuner::lattice;
+use parframe::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("sim");
+    let (p, model) = if b.is_fast() {
+        (CpuPlatform::small(), "squeezenet")
+    } else {
+        (CpuPlatform::large2(), "inception_v2")
+    };
+    let g = models::build(model, models::canonical_batch(model)).unwrap();
+    println!("sim bench on {} / {model} ({} ops)", p.name, g.len());
+    let cfg = FrameworkConfig {
+        inter_op_pools: 3,
+        mkl_threads: p.physical_cores() / 3,
+        intra_op_threads: p.physical_cores() / 3,
+        operator_impl: OperatorImpl::IntraOpParallel,
+        ..FrameworkConfig::tuned_default()
+    };
+
+    // single-simulation hot path: seed engine vs calendar-queue engine
+    // vs the prepared (ranks/CSR/scratch reused) entry point
+    b.run_with_output("simulate/seed-engine", || {
+        sim::simulate_reference(&g, &p, &cfg, &SimOptions::default()).unwrap().latency_s
+    });
+    b.run_with_output("simulate/fast-engine", || sim::simulate(&g, &p, &cfg).unwrap().latency_s);
+    let prep = PreparedGraph::new(&g);
+    b.run_with_output("simulate/prepared", || {
+        sim::simulate_prepared(&prep, &p, &cfg, &SimOptions::default()).unwrap().latency_s
+    });
+
+    // exhaustive-lattice sweep: every unique design point once, serial,
+    // seed path (fresh graph state per point is already amortised by
+    // the reference engine itself) vs the SimCache fast path (prepared
+    // graph + scratch pool + delta-sim across policy siblings)
+    let points = lattice(&p);
+    let t0 = Instant::now();
+    let mut seed_sum = 0.0;
+    for c in &points {
+        seed_sum += sim::simulate_reference(&g, &p, c, &SimOptions::default()).unwrap().latency_s;
+    }
+    let seed_wall = t0.elapsed().as_secs_f64();
+    let seed_pps = points.len() as f64 / seed_wall.max(1e-12);
+    b.record("lattice-sweep/seed", seed_pps, "points/s");
+
+    let cache = SimCache::new();
+    let t0 = Instant::now();
+    let mut fast_sum = 0.0;
+    for c in &points {
+        fast_sum += cache.latency(&prep, &p, c).unwrap();
+    }
+    let fast_wall = t0.elapsed().as_secs_f64();
+    let fast_pps = points.len() as f64 / fast_wall.max(1e-12);
+    b.record("lattice-sweep/fastpath", fast_pps, "points/s");
+    b.record("fastpath-vs-seed", fast_pps / seed_pps, "x");
+    println!(
+        "sim/lattice {} points, delta-hits={} delta-fallbacks={}",
+        points.len(),
+        cache.delta_hits(),
+        cache.delta_fallbacks()
+    );
+
+    // speed that changes the answer doesn't count: identical terms in
+    // identical order must sum to identical bits
+    assert_eq!(
+        seed_sum.to_bits(),
+        fast_sum.to_bits(),
+        "fast path diverged from the seed engine over the lattice"
+    );
+    assert_eq!(cache.delta_fallbacks(), 0, "phase-table guard rejected a policy sibling");
+
+    b.finish();
+}

@@ -4,8 +4,10 @@
 //! serving cold-start cut from parallel latency-table pre-simulation.
 //!
 //! Each sweep runs once (a full exhaustive lattice is the workload, not
-//! a microsecond-scale case), so this target prints its own rows
-//! instead of using the repeated-timing harness.
+//! a microsecond-scale case), so this target records whole-sweep
+//! metrics with `Bench::record` instead of the repeated-timing loop.
+//! Case names are fixed — they never embed the jobs count — so the
+//! emitted `BENCH_tuner.json` is diffable across machines.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -15,28 +17,24 @@ use parframe::models;
 use parframe::runtime::{BackendFactory, SimBackendConfig, SimBackendFactory};
 use parframe::sim::SimCache;
 use parframe::tuner::{default_jobs, exhaustive_search_with, SearchResult, SweepOptions};
-use parframe::util::bench::fmt_t;
+use parframe::util::bench::Bench;
 
 fn sweep(
-    name: &str,
+    b: &mut Bench,
+    case: &str,
     graph: &parframe::graph::Graph,
     platform: &CpuPlatform,
     opts: &SweepOptions,
-    label: &str,
 ) -> SearchResult {
     let t0 = Instant::now();
-    let r = exhaustive_search_with(graph, platform, opts);
+    let r = exhaustive_search_with(graph, platform, opts).unwrap();
     let wall = t0.elapsed().as_secs_f64();
-    println!(
-        "tuner/sweep/{name:<14} {label:<18} evaluated={:<5} wall={:<10} points/s={:.0}",
-        r.evaluated,
-        fmt_t(wall),
-        r.evaluated as f64 / wall.max(1e-12)
-    );
+    b.record(case, r.evaluated as f64 / wall.max(1e-12), "points/s");
     r
 }
 
 fn main() {
+    let mut b = Bench::new("tuner");
     let platform = CpuPlatform::large2();
     let jobs = default_jobs();
     println!("tuner bench on {} (jobs={jobs})", platform.name);
@@ -44,29 +42,42 @@ fn main() {
     for name in ["wide_deep", "inception_v3"] {
         let g = models::build(name, models::canonical_batch(name)).unwrap();
         // serial baseline (fresh cache ⇒ every point simulates)
-        let serial = sweep(name, &g, &platform, &SweepOptions::with_jobs(1), "jobs=1 cold");
+        let serial = sweep(
+            &mut b,
+            &format!("sweep/{name}/serial-cold"),
+            &g,
+            &platform,
+            &SweepOptions::with_jobs(1),
+        );
         // parallel, cold cache: the wall-clock win to report
         let par = sweep(
-            name,
+            &mut b,
+            &format!("sweep/{name}/parallel-cold"),
             &g,
             &platform,
             &SweepOptions::with_jobs(jobs),
-            &format!("jobs={jobs} cold"),
         );
         // memoized re-sweep: a warm cache answers without simulating
         let cache = Arc::new(SimCache::new());
-        sweep(name, &g, &platform, &SweepOptions::shared(jobs, Arc::clone(&cache)), "warming");
-        let warm = sweep(
-            name,
+        sweep(
+            &mut b,
+            &format!("sweep/{name}/warming"),
             &g,
             &platform,
             &SweepOptions::shared(jobs, Arc::clone(&cache)),
-            "warm re-sweep",
+        );
+        let warm = sweep(
+            &mut b,
+            &format!("sweep/{name}/warm-resweep"),
+            &g,
+            &platform,
+            &SweepOptions::shared(jobs, Arc::clone(&cache)),
         );
         println!(
-            "tuner/sweep/{name:<14} cache hits={} misses={}",
+            "tuner/sweep/{name:<14} cache hits={} misses={} delta-hits={}",
             cache.hits(),
-            cache.misses()
+            cache.misses(),
+            cache.delta_hits()
         );
         assert_eq!(serial.best, par.best, "parallel sweep diverged from serial");
         assert_eq!(
@@ -79,19 +90,19 @@ fn main() {
     // serving cold-start: lane-table pre-simulation for a three-model
     // catalog, serial vs parallel factory
     let kinds = ["wide_deep", "resnet50", "transformer"];
-    for jobs in [1, jobs] {
+    for (label, jobs) in [("serial", 1), ("parallel", jobs)] {
         let mut cfg = SimBackendConfig::new(CpuPlatform::large2(), &kinds);
         cfg.jobs = jobs;
         let factory = SimBackendFactory::new(cfg);
         let t0 = Instant::now();
         factory.create().unwrap();
         let wall = t0.elapsed().as_secs_f64();
+        b.record(&format!("coldstart/3-kinds/{label}"), wall, "s");
         println!(
-            "tuner/coldstart/3-kinds jobs={jobs:<2} tables wall={:<10} sims={}",
-            fmt_t(wall),
+            "tuner/coldstart/3-kinds {label:<8} sims={}",
             factory.cache().misses()
         );
     }
 
-    println!("bench suite 'tuner' done");
+    b.finish();
 }

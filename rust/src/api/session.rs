@@ -195,7 +195,7 @@ impl Session {
     pub fn tune_exhaustive(&self, workload: &Workload) -> PallasResult<Plan> {
         let opts = SweepOptions::shared(self.jobs, Arc::clone(&self.cache)).pinned(self.policy);
         let (groups, batches) = self.grouped_configs(workload, |graph, slice| {
-            let r = tuner::exhaustive_search_with(graph, slice, &opts);
+            let r = tuner::exhaustive_search_with(graph, slice, &opts)?;
             Ok((r.best, r.evaluated))
         })?;
         self.make_plan(PlanTier::Exhaustive, groups, &batches)
@@ -255,7 +255,7 @@ impl Session {
             .cache
             .prepared(model, batch)
             .ok_or_else(|| PallasError::UnknownModel(model.to_string()))?;
-        Ok(self.cache.report(&prep, &self.platform, config))
+        self.cache.report(&prep, &self.platform, config)
     }
 
     /// A manually-knobbed config the way `simulate --pools/--mkl/--intra`
@@ -412,7 +412,7 @@ impl Session {
                 .ok_or_else(|| PallasError::UnknownModel(kind.clone()))?;
             let slice =
                 self.platform.restrict(g.allocation.first_core, g.allocation.cores);
-            predicted.push(self.cache.latency(&prep, &slice, &g.framework));
+            predicted.push(self.cache.latency(&prep, &slice, &g.framework)?);
         }
         Plan::from_lane_plan(lane_plan, tier, evaluated, batches, &predicted)
     }

@@ -66,7 +66,7 @@ pub fn eval_model(name: &str, p: &CpuPlatform) -> EvalRow {
         intel: lat(&baseline_config(Baseline::IntelRecommended, p)),
         tf_default: lat(&baseline_config(Baseline::TensorFlowDefault, p)),
         ours: lat(&tune(&g, p).config),
-        global_opt: exhaustive_search(&g, p).best_latency_s,
+        global_opt: exhaustive_search(&g, p).expect("zoo graphs simulate").best_latency_s,
     }
 }
 

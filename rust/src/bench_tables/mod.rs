@@ -63,9 +63,10 @@ pub(crate) fn cfg(pools: usize, mkl: usize, intra: usize, op: OperatorImpl) -> F
     }
 }
 
-/// Shared helper: simulate and return the report.
+/// Shared helper: simulate and return the report (bench tables only run
+/// zoo graphs, which are valid DAGs by construction).
 pub(crate) fn run(g: &Graph, p: &CpuPlatform, c: &FrameworkConfig) -> SimReport {
-    sim::simulate(g, p, c)
+    sim::simulate(g, p, c).expect("zoo graphs simulate")
 }
 
 /// Shared helper: format a breakdown as percentage columns.

@@ -123,7 +123,8 @@ pub fn fig12_hyperthread_breakdown() -> String {
             &p,
             &cfg(1, 24, 24, OperatorImpl::IntraOpParallel),
             &SimOptions { record_timelines: true },
-        );
+        )
+        .expect("zoo graphs simulate");
         let busy = |core: usize, cat: Category| -> f64 {
             (r.timelines[core]
                 .iter()

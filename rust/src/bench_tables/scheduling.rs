@@ -206,7 +206,8 @@ pub fn fig8_traces() -> String {
             &p,
             &cfg(pools, threads, 1, OperatorImpl::Serial),
             &SimOptions { record_timelines: true },
-        );
+        )
+        .expect("zoo graphs simulate");
         let _ = writeln!(out, "--- {label} (latency {:.1}ms)", r.latency_s * 1e3);
         out.push_str(&trace::ascii_trace(&r.timelines, r.latency_s, 72));
     }

@@ -88,6 +88,7 @@ const SERVE_FLAGS: &[FlagSpec] = &[
 ];
 const PLAN_FLAGS: &[FlagSpec] = &[flag("show")];
 const CHECK_FLAGS: &[FlagSpec] = &[flag("artifacts")];
+const BENCH_CHECK_FLAGS: &[FlagSpec] = &[flag("file"), flag("suite")];
 const NO_FLAGS: &[FlagSpec] = &[];
 
 /// Parse `--key [value]` pairs against a subcommand's spec. Unknown or
@@ -187,6 +188,7 @@ fn run() -> PallasResult<()> {
         "serve" => cmd_serve(&parse_flags(cmd, rest, SERVE_FLAGS)?),
         "plan" => cmd_plan(&parse_flags(cmd, rest, PLAN_FLAGS)?),
         "check" => cmd_check(&parse_flags(cmd, rest, CHECK_FLAGS)?),
+        "bench-check" => cmd_bench_check(&parse_flags(cmd, rest, BENCH_CHECK_FLAGS)?),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -221,6 +223,8 @@ fn print_help() {
                     [--jobs N]             parallel latency-table pre-simulation\n\
                     [--artifacts DIR]      (pjrt backend only)\n\
            check    --artifacts DIR\n\
+           bench-check --file BENCH_sim.json --suite sim\n\
+                    validate an emitted/committed benchmark JSON (schema + case keys)\n\
          platforms: small | large | large.2 (default large.2)\n\
          policies:  topo | critical-path | costly\n\
                     (tune/serve default: the tuner's width rule; simulate default: topo)\n\
@@ -584,6 +588,115 @@ fn cmd_serve_pjrt(flags: &HashMap<String, String>) -> PallasResult<()> {
     )?;
     println!("loadgen: {}", report.summary());
     println!("metrics: {}", coord.metrics().summary());
+    Ok(())
+}
+
+/// Every case name a suite's bench target is contractually required to
+/// emit — `bench-check` fails if any is missing, so a bench refactor
+/// that drops or renames a case (or a stale committed `BENCH_*.json`)
+/// breaks CI instead of silently thinning the perf trajectory.
+fn expected_bench_cases(suite: &str) -> Vec<String> {
+    match suite {
+        "sim" => [
+            "simulate/seed-engine",
+            "simulate/fast-engine",
+            "simulate/prepared",
+            "lattice-sweep/seed",
+            "lattice-sweep/fastpath",
+            "fastpath-vs-seed",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect(),
+        "tuner" => {
+            let mut v = Vec::new();
+            for model in ["wide_deep", "inception_v3"] {
+                for stage in ["serial-cold", "parallel-cold", "warming", "warm-resweep"] {
+                    v.push(format!("sweep/{model}/{stage}"));
+                }
+            }
+            v.push("coldstart/3-kinds/serial".to_string());
+            v.push("coldstart/3-kinds/parallel".to_string());
+            v
+        }
+        _ => Vec::new(),
+    }
+}
+
+/// Validate a `BENCH_<suite>.json` emitted by `util::bench` (or the
+/// committed copy at the repo root): it must parse, carry the current
+/// schema version and the named suite, have well-typed fields, and
+/// contain every expected case for suites with a declared case set.
+fn cmd_bench_check(flags: &HashMap<String, String>) -> PallasResult<()> {
+    use parframe::util::{bench::BENCH_SCHEMA_VERSION, json::Json};
+    let path = flags.get("file").ok_or_else(|| PallasError::Cli("--file required".into()))?;
+    let suite = flags.get("suite").ok_or_else(|| PallasError::Cli("--suite required".into()))?;
+    let fail = |m: String| PallasError::Cli(format!("{path}: {m}"));
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| PallasError::Cli(format!("cannot read {path}: {e}")))?;
+    let doc = Json::parse(&text).map_err(|e| fail(format!("not valid JSON: {e}")))?;
+    let version = doc
+        .get("schema_version")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| fail("missing numeric 'schema_version'".into()))?;
+    if version != BENCH_SCHEMA_VERSION as f64 {
+        return Err(fail(format!(
+            "stale schema version {version} (current is {BENCH_SCHEMA_VERSION}; \
+             re-run `cargo bench` and commit the refreshed file)"
+        )));
+    }
+    let got_suite = doc
+        .get("suite")
+        .and_then(Json::as_str)
+        .ok_or_else(|| fail("missing string 'suite'".into()))?;
+    if got_suite != suite {
+        return Err(fail(format!("suite is '{got_suite}', expected '{suite}'")));
+    }
+    doc.get("git_rev")
+        .and_then(Json::as_str)
+        .ok_or_else(|| fail("missing string 'git_rev'".into()))?;
+    doc.get("timestamp")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| fail("missing numeric 'timestamp'".into()))?;
+    if !matches!(doc.get("fast"), Some(Json::Bool(_))) {
+        return Err(fail("missing boolean 'fast'".into()));
+    }
+    let cases = doc
+        .get("cases")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| fail("missing array 'cases'".into()))?;
+    if cases.is_empty() {
+        return Err(fail("'cases' is empty".into()));
+    }
+    let mut names = Vec::with_capacity(cases.len());
+    for (i, c) in cases.iter().enumerate() {
+        let name = c
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| fail(format!("case {i}: missing string 'name'")))?;
+        for field in ["iters", "mean_s", "p50_s", "p95_s", "sd_s"] {
+            c.get(field)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| fail(format!("case '{name}': missing numeric '{field}'")))?;
+        }
+        c.get("unit")
+            .and_then(Json::as_str)
+            .ok_or_else(|| fail(format!("case '{name}': missing string 'unit'")))?;
+        names.push(name.to_string());
+    }
+    let expected = expected_bench_cases(suite);
+    for want in &expected {
+        if !names.iter().any(|n| n == want) {
+            return Err(fail(format!(
+                "missing expected case '{want}' (bench target and committed file out of sync?)"
+            )));
+        }
+    }
+    println!(
+        "{path}: OK — suite '{suite}', schema v{BENCH_SCHEMA_VERSION}, {} cases ({} required)",
+        names.len(),
+        expected.len()
+    );
     Ok(())
 }
 

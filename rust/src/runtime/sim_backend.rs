@@ -130,7 +130,7 @@ impl SimTables {
                 if let Some(p) = policy {
                     fw.sched_policy = p;
                 }
-                let latency = cache.latency(&prep, &platform, &fw);
+                let latency = cache.latency(&prep, &platform, &fw)?;
                 Ok(((kind, bucket), latency))
             });
         let mut latency = HashMap::new();

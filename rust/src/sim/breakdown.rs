@@ -57,7 +57,7 @@ impl Category {
 }
 
 /// One contiguous activity on one logical core.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Segment {
     /// Start time (seconds).
     pub t0: f64,

@@ -13,16 +13,25 @@
 //! [`SimCache`] memoizes whole reports under a canonical fingerprint of
 //! (graph, platform, effective config) so repeated sweeps across the
 //! exhaustive/guideline/online/backend tiers dedupe to a single run.
+//!
+//! The engine itself runs a fast path — bucketed calendar event queue
+//! ([`events`]), free-pool bitmask, scratch-owned buffers, and
+//! delta-simulation through cached per-family phase tables — held
+//! bit-identical to the seed heap engine ([`engine::simulate_reference`])
+//! by `rust/tests/engine_fastpath.rs` (DESIGN.md §Engine fast path).
 
 pub mod breakdown;
 pub mod constants;
 pub mod engine;
+pub mod events;
 pub mod memory;
 pub mod opexec;
 pub mod prepared;
 
 pub use breakdown::{Breakdown, Category, Segment};
-pub use engine::{simulate, simulate_opts, simulate_prepared, SimOptions, SimReport};
+pub use engine::{
+    simulate, simulate_opts, simulate_prepared, simulate_reference, SimOptions, SimReport,
+};
 pub use prepared::{
     canonical_config, fingerprint_fold, graph_structure_fingerprint, platform_fingerprint,
     PreparedGraph, SimCache,

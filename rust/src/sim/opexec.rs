@@ -92,10 +92,27 @@ pub fn op_phases(
     platform: &CpuPlatform,
     pool: &PoolCtx,
 ) -> Vec<Phase> {
-    // NOTE(§Perf): a fixed-capacity inline list was tried here and measured
-    // SLOWER than the Vec (the 200-byte by-value copies cost more than one
-    // small allocation) — reverted; see EXPERIMENTS.md §Perf.
     let mut phases = Vec::with_capacity(4);
+    op_phases_into(node, cfg, platform, pool, &mut phases);
+    phases
+}
+
+/// Compute the phase list for `node` on a pool into a caller-owned
+/// buffer (cleared first). The engine's steady-state loop reuses one
+/// buffer per run, so dispatch allocates nothing.
+///
+/// NOTE(§Perf): a fixed-capacity inline list was tried here and measured
+/// SLOWER than the Vec (the 200-byte by-value copies cost more than one
+/// small allocation) — reverted in favour of buffer reuse; see
+/// EXPERIMENTS.md §Perf.
+pub fn op_phases_into(
+    node: &Node,
+    cfg: &FrameworkConfig,
+    platform: &CpuPlatform,
+    pool: &PoolCtx,
+    phases: &mut Vec<Phase>,
+) {
+    phases.clear();
     let overthread = overthread_mult(cfg, platform);
     let peak_core = platform.peak_gflops_per_core * 1e9;
     let pool_threads = cfg.mkl_threads + cfg.intra_op_threads;
@@ -123,7 +140,7 @@ pub fn op_phases(
             }
         };
         phases.push(Phase { cat: Category::FwNative, dur: dur * overthread, span });
-        return phases;
+        return;
     }
 
     // 2. framework data prep
@@ -188,7 +205,6 @@ pub fn op_phases(
     if upi_exposed > 0.0 {
         phases.push(Phase { cat: Category::UpiTransfer, dur: upi_exposed, span: Span::Main });
     }
-    phases
 }
 
 /// Cost-aware intra-op fan-out (what Eigen's ParallelFor / TF's shard cost

@@ -19,6 +19,15 @@
 //!   `parallelism` collapses on single-socket platforms (no socket to
 //!   span), and `pin_threads` never reaches the cost model — so
 //!   repeated `simulate` calls across tiers dedupe to a single run.
+//! * **Delta-simulation**: a report miss whose *policy-erased* sibling
+//!   was already simulated (the exhaustive lattice and online neighbor
+//!   sets enumerate near-duplicate configs by construction) reuses the
+//!   sibling family's [`PhaseTable`] — per-(pool shape, node) phase
+//!   lists, which `sched_policy` provably never influences — and
+//!   replays only the event loop. A sampled bit-identity guard
+//!   revalidates the invariant on every reuse and rebuilds the table on
+//!   any mismatch, so a cost-model change that breaks the invariant
+//!   degrades to correct-but-slower instead of silently wrong.
 //!
 //! Determinism: the engine is a pure function of (graph, platform,
 //! config), the cache always simulates the canonical representative,
@@ -31,12 +40,14 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::config::{CpuPlatform, FrameworkConfig, ParallelismMode, SchedPolicy};
+use crate::error::PallasResult;
 use crate::graph::{self, Graph};
 use crate::models;
 use crate::ops::{OpCost, OpKind};
-use crate::sched::{ConsumerCsr, ReadyQueue};
+use crate::sched::{partition_pools, ConsumerCsr, ReadyQueue};
 
-use super::engine;
+use super::engine::{self, EngineScratch};
+use super::opexec::{op_phases_into, Phase};
 use super::{SimOptions, SimReport};
 
 /// A graph with its per-simulation invariants precomputed: the tables
@@ -55,7 +66,15 @@ pub struct PreparedGraph {
     /// Per-node `OpKind::uses_library_kernel` flags.
     kernel_use: Vec<bool>,
     fingerprint: u64,
+    /// Reusable engine buffers, checked out per simulation so sweep
+    /// workers' steady-state loops are allocation-free.
+    scratch: Mutex<Vec<EngineScratch>>,
 }
+
+/// Upper bound on pooled [`EngineScratch`] instances per graph — enough
+/// for any sweep executor's worker count; beyond it, returned scratch is
+/// simply dropped.
+const SCRATCH_POOL_CAP: usize = 16;
 
 impl PreparedGraph {
     /// Prepare a borrowed graph (clones it; use [`Self::from_owned`] when
@@ -73,7 +92,29 @@ impl PreparedGraph {
         let remaining0 = graph.nodes.iter().map(|n| n.deps.len()).collect();
         let cons = Arc::new(ConsumerCsr::build(&graph));
         let fingerprint = graph_fingerprint(&graph);
-        PreparedGraph { graph, remaining0, cons, ranks, weights, kernel_use, fingerprint }
+        PreparedGraph {
+            graph,
+            remaining0,
+            cons,
+            ranks,
+            weights,
+            kernel_use,
+            fingerprint,
+            scratch: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Check an engine scratch out of the pool (fresh if empty).
+    pub(crate) fn take_scratch(&self) -> EngineScratch {
+        self.scratch.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    /// Return an engine scratch to the pool for reuse.
+    pub(crate) fn put_scratch(&self, s: EngineScratch) {
+        let mut pool = self.scratch.lock().unwrap();
+        if pool.len() < SCRATCH_POOL_CAP {
+            pool.push(s);
+        }
     }
 
     /// The underlying graph.
@@ -153,6 +194,151 @@ pub fn platform_fingerprint(p: &CpuPlatform) -> u64 {
     h.finish()
 }
 
+/// Precomputed per-(pool shape, node) phase lists for one *config
+/// family* — the set of configs differing only in `sched_policy`.
+///
+/// The delta-simulation invariant: `op_phases` reads every knob a pool's
+/// execution depends on (pool count and shape, kernel/intra thread
+/// counts, operator implementation, math/pool libraries, parallelism
+/// mode) but **never** `sched_policy` — the policy only permutes
+/// dispatch order. So all policy siblings of one config share phase
+/// lists exactly, and only the first op whose phases change between two
+/// lattice neighbors needs recomputing — for a policy step, that is no
+/// op at all: the whole cost model is skipped and just the event loop
+/// replays. Pool *shapes* are family-invariant too (`partition_pools`
+/// never reads the policy), so the table is keyed by distinct pool
+/// shape class rather than pool index.
+///
+/// Entries are produced by the same [`op_phases_into`] the engine would
+/// call, so table-driven simulation is bit-identical to direct
+/// simulation; [`Self::verify_sample`] re-checks that on every reuse.
+#[derive(Debug)]
+pub(crate) struct PhaseTable {
+    /// Pool index → shape class index.
+    classes: Vec<usize>,
+    /// One representative pool context per shape class (guard rebuilds).
+    class_ctxs: Vec<super::opexec::PoolCtx>,
+    /// Flat phase arena; `spans[class * nodes + node]` addresses into it.
+    arena: Vec<Phase>,
+    /// Per-(class, node) `(start, len)` into `arena`.
+    spans: Vec<(u32, u32)>,
+    /// Per-(class, node) total duration (`opexec::total` of the list).
+    totals: Vec<f64>,
+    nodes: usize,
+}
+
+impl PhaseTable {
+    /// Build the family's phase table under any member config (phases
+    /// are family-invariant, so the member choice cannot matter).
+    pub(crate) fn build(
+        prep: &PreparedGraph,
+        platform: &CpuPlatform,
+        cfg: &FrameworkConfig,
+    ) -> PhaseTable {
+        let assignments = partition_pools(platform, cfg);
+        let ctxs = engine::pool_contexts(&assignments, cfg);
+        // dedupe pools into shape classes (uneven splits give ≤2 shapes)
+        let mut classes = Vec::with_capacity(ctxs.len());
+        let mut class_keys: Vec<(usize, bool, usize)> = Vec::new();
+        let mut class_ctxs = Vec::new();
+        for ctx in &ctxs {
+            let key = (ctx.phys_cores, ctx.spans_sockets, ctx.sockets_used);
+            let class = match class_keys.iter().position(|k| *k == key) {
+                Some(i) => i,
+                None => {
+                    class_keys.push(key);
+                    class_ctxs.push(ctx.clone());
+                    class_keys.len() - 1
+                }
+            };
+            classes.push(class);
+        }
+        let nodes = prep.graph.len();
+        let mut arena = Vec::with_capacity(class_ctxs.len() * nodes * 4);
+        let mut spans = Vec::with_capacity(class_ctxs.len() * nodes);
+        let mut totals = Vec::with_capacity(class_ctxs.len() * nodes);
+        let mut buf: Vec<Phase> = Vec::new();
+        for ctx in &class_ctxs {
+            for node in &prep.graph.nodes {
+                op_phases_into(node, cfg, platform, ctx, &mut buf);
+                let start = arena.len() as u32;
+                arena.extend_from_slice(&buf);
+                spans.push((start, buf.len() as u32));
+                totals.push(super::opexec::total(&buf));
+            }
+        }
+        PhaseTable { classes, class_ctxs, arena, spans, totals, nodes }
+    }
+
+    /// Shape class of a pool index.
+    pub(crate) fn class_of(&self, pool: usize) -> usize {
+        self.classes[pool]
+    }
+
+    /// The phase list for (shape class, node).
+    pub(crate) fn phases(&self, class: usize, node: usize) -> &[Phase] {
+        let (start, len) = self.spans[class * self.nodes + node];
+        &self.arena[start as usize..(start + len) as usize]
+    }
+
+    /// Total duration for (shape class, node).
+    pub(crate) fn total(&self, class: usize, node: usize) -> f64 {
+        self.totals[class * self.nodes + node]
+    }
+
+    /// The bit-identity fallback guard: recompute a deterministic sample
+    /// of nodes (≤ 8, spread across the graph) under `cfg` and compare
+    /// against the stored lists bit-for-bit (category, span, and
+    /// `dur.to_bits()`). A `false` means the policy-invariance
+    /// assumption no longer holds for this family and the caller must
+    /// rebuild instead of reusing.
+    pub(crate) fn verify_sample(
+        &self,
+        prep: &PreparedGraph,
+        platform: &CpuPlatform,
+        cfg: &FrameworkConfig,
+    ) -> bool {
+        // the pool layout itself must be unchanged
+        let assignments = partition_pools(platform, cfg);
+        let ctxs = engine::pool_contexts(&assignments, cfg);
+        if ctxs.len() != self.classes.len() {
+            return false;
+        }
+        for (ctx, &class) in ctxs.iter().zip(&self.classes) {
+            let want = &self.class_ctxs[class];
+            if ctx.phys_cores != want.phys_cores
+                || ctx.spans_sockets != want.spans_sockets
+                || ctx.sockets_used != want.sockets_used
+            {
+                return false;
+            }
+        }
+        let n = self.nodes;
+        if n == 0 {
+            return true;
+        }
+        let samples = n.min(8);
+        let mut buf: Vec<Phase> = Vec::new();
+        for s in 0..samples {
+            let node = s * n / samples;
+            for (class, ctx) in self.class_ctxs.iter().enumerate() {
+                op_phases_into(&prep.graph.nodes[node], cfg, platform, ctx, &mut buf);
+                let stored = self.phases(class, node);
+                if buf.len() != stored.len() {
+                    return false;
+                }
+                let same = buf.iter().zip(stored).all(|(a, b)| {
+                    a.cat == b.cat && a.span == b.span && a.dur.to_bits() == b.dur.to_bits()
+                });
+                if !same {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
 /// Memoized simulation reports + prepared zoo graphs, shared across
 /// threads (a sweep executor's workers all consult one cache) and across
 /// tiers (exhaustive search, guideline scoring, online re-tuning and
@@ -161,8 +347,12 @@ pub fn platform_fingerprint(p: &CpuPlatform) -> u64 {
 pub struct SimCache {
     reports: Mutex<HashMap<(u64, u64, FrameworkConfig), Arc<SimReport>>>,
     prepared: Mutex<HashMap<(String, usize), Arc<PreparedGraph>>>,
+    /// Policy-erased config family → shared phase table (delta-sim).
+    families: Mutex<HashMap<(u64, u64, FrameworkConfig), Arc<PhaseTable>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    delta_hits: AtomicU64,
+    delta_fallbacks: AtomicU64,
     capacity: usize,
 }
 
@@ -189,8 +379,11 @@ impl SimCache {
         SimCache {
             reports: Mutex::new(HashMap::new()),
             prepared: Mutex::new(HashMap::new()),
+            families: Mutex::new(HashMap::new()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            delta_hits: AtomicU64::new(0),
+            delta_fallbacks: AtomicU64::new(0),
             capacity: capacity.max(1),
         }
     }
@@ -199,6 +392,14 @@ impl SimCache {
     /// under the canonical fingerprint. On a miss the *canonical*
     /// representative is simulated via the prepared fast path, so hit
     /// and miss return bit-identical reports.
+    ///
+    /// Misses run through delta-simulation: the policy-erased family's
+    /// [`PhaseTable`] is built on first contact and reused (after the
+    /// sampled bit-identity guard) by every policy sibling, so only the
+    /// event loop replays. Because full misses simulate through the
+    /// very same table, hit / delta-hit / full-miss all return
+    /// bit-identical reports regardless of arrival order or cache
+    /// state.
     ///
     /// The lock is not held while simulating, so concurrent workers
     /// missing on the *same* key may each simulate it — a benign,
@@ -210,22 +411,62 @@ impl SimCache {
         prep: &PreparedGraph,
         platform: &CpuPlatform,
         cfg: &FrameworkConfig,
-    ) -> Arc<SimReport> {
+    ) -> PallasResult<Arc<SimReport>> {
         let canonical = canonical_config(platform, cfg);
         let key = (prep.fingerprint(), platform_fingerprint(platform), canonical);
         if let Some(r) = self.reports.lock().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return Arc::clone(r);
+            return Ok(Arc::clone(r));
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let report =
-            Arc::new(engine::simulate_prepared(prep, platform, &key.2, &SimOptions::default()));
+        let report = Arc::new(self.simulate_canonical(prep, platform, &key.2)?);
         let mut guard = self.reports.lock().unwrap();
         if guard.len() >= self.capacity {
             guard.clear();
         }
         guard.insert(key, Arc::clone(&report));
-        report
+        Ok(report)
+    }
+
+    /// Simulate a canonical config through its family's phase table
+    /// (building or rebuilding the table as needed — see [`PhaseTable`]).
+    fn simulate_canonical(
+        &self,
+        prep: &PreparedGraph,
+        platform: &CpuPlatform,
+        canonical: &FrameworkConfig,
+    ) -> PallasResult<SimReport> {
+        let mut family = canonical.clone();
+        family.sched_policy = SchedPolicy::Topo;
+        let fkey = (prep.fingerprint(), platform_fingerprint(platform), family);
+        let existing = self.families.lock().unwrap().get(&fkey).map(Arc::clone);
+        let table = match existing {
+            Some(t) if t.verify_sample(prep, platform, canonical) => {
+                self.delta_hits.fetch_add(1, Ordering::Relaxed);
+                t
+            }
+            stale => {
+                if stale.is_some() {
+                    // guard tripped: the invariance assumption failed, so
+                    // pay the full rebuild rather than reuse wrong phases
+                    self.delta_fallbacks.fetch_add(1, Ordering::Relaxed);
+                }
+                let t = Arc::new(PhaseTable::build(prep, platform, canonical));
+                let mut guard = self.families.lock().unwrap();
+                if guard.len() >= self.capacity {
+                    guard.clear();
+                }
+                guard.insert(fkey, Arc::clone(&t));
+                t
+            }
+        };
+        engine::simulate_prepared_with_table(
+            prep,
+            platform,
+            canonical,
+            &SimOptions::default(),
+            &table,
+        )
     }
 
     /// Memoized batch latency (the quantity every sweep ranks on).
@@ -234,8 +475,8 @@ impl SimCache {
         prep: &PreparedGraph,
         platform: &CpuPlatform,
         cfg: &FrameworkConfig,
-    ) -> f64 {
-        self.report(prep, platform, cfg).latency_s
+    ) -> PallasResult<f64> {
+        Ok(self.report(prep, platform, cfg)?.latency_s)
     }
 
     /// The prepared graph for a model-zoo (kind, batch) pair, built once
@@ -264,15 +505,30 @@ impl SimCache {
         self.misses.load(Ordering::Relaxed)
     }
 
+    /// Misses that reused a policy-sibling's phase table (delta-sim) —
+    /// the cost model was skipped and only the event loop replayed.
+    pub fn delta_hits(&self) -> u64 {
+        self.delta_hits.load(Ordering::Relaxed)
+    }
+
+    /// Times the bit-identity guard rejected a cached phase table and
+    /// forced a full rebuild (0 unless the policy-invariance assumption
+    /// is violated by a cost-model change).
+    pub fn delta_fallbacks(&self) -> u64 {
+        self.delta_fallbacks.load(Ordering::Relaxed)
+    }
+
     /// Number of distinct reports currently held.
     pub fn entries(&self) -> usize {
         self.reports.lock().unwrap().len()
     }
 
-    /// Drop every memoized report and prepared graph (stats are kept).
+    /// Drop every memoized report, phase table and prepared graph
+    /// (stats are kept).
     pub fn clear(&self) {
         self.reports.lock().unwrap().clear();
         self.prepared.lock().unwrap().clear();
+        self.families.lock().unwrap().clear();
     }
 }
 
@@ -455,12 +711,53 @@ mod tests {
         let mut cfg = FrameworkConfig::tuned_default();
         cfg.mkl_threads = 8;
         cfg.sched_policy = SchedPolicy::CostlyFirst;
-        let a = cache.latency(&prep, &p, &cfg);
+        let a = cache.latency(&prep, &p, &cfg).unwrap();
         cfg.sched_policy = SchedPolicy::CriticalPathFirst;
-        let b = cache.latency(&prep, &p, &cfg);
+        let b = cache.latency(&prep, &p, &cfg).unwrap();
         assert_eq!(a.to_bits(), b.to_bits());
         assert_eq!(cache.misses(), 1);
         assert_eq!(cache.hits(), 1);
+    }
+
+    #[test]
+    fn policy_siblings_share_phase_tables() {
+        // three policies at >1 pool are three distinct design points but
+        // one config family: one table build, then two delta hits — and
+        // every sibling's report is bit-identical to direct simulation
+        let cache = SimCache::new();
+        let prep = cache.prepared("inception_v1", 16).unwrap();
+        let p = CpuPlatform::large();
+        let mut cfg = FrameworkConfig::tuned_default();
+        cfg.inter_op_pools = 3;
+        cfg.mkl_threads = 8;
+        for policy in SchedPolicy::ALL {
+            cfg.sched_policy = policy;
+            let cached = cache.report(&prep, &p, &cfg).unwrap();
+            let direct = sim::simulate(prep.graph(), &p, &cfg).unwrap();
+            assert_eq!(cached.latency_s.to_bits(), direct.latency_s.to_bits(), "{policy:?}");
+        }
+        assert_eq!(cache.misses(), 3);
+        assert_eq!(cache.delta_hits(), 2);
+        assert_eq!(cache.delta_fallbacks(), 0);
+    }
+
+    #[test]
+    fn phase_table_guard_accepts_family_members() {
+        let cache = SimCache::new();
+        let prep = cache.prepared("resnet50", 16).unwrap();
+        let p = CpuPlatform::large2();
+        let mut cfg = FrameworkConfig::tuned_default();
+        cfg.inter_op_pools = 4;
+        cfg.mkl_threads = 12;
+        let table = PhaseTable::build(&prep, &p, &canonical_config(&p, &cfg));
+        for policy in SchedPolicy::ALL {
+            cfg.sched_policy = policy;
+            assert!(table.verify_sample(&prep, &p, &canonical_config(&p, &cfg)), "{policy:?}");
+        }
+        // a knob that changes phases must be rejected (it is a different
+        // family; the guard is the last line of defence if keying breaks)
+        cfg.mkl_threads = 6;
+        assert!(!table.verify_sample(&prep, &p, &canonical_config(&p, &cfg)));
     }
 
     #[test]
@@ -473,8 +770,8 @@ mod tests {
         cfg.mkl_threads = 12;
         cfg.intra_op_threads = 12;
         cfg.sched_policy = SchedPolicy::CriticalPathFirst;
-        let direct = sim::simulate(prep.graph(), &p, &cfg);
-        let cached = cache.report(&prep, &p, &cfg);
+        let direct = sim::simulate(prep.graph(), &p, &cfg).unwrap();
+        let cached = cache.report(&prep, &p, &cfg).unwrap();
         assert_eq!(direct.latency_s.to_bits(), cached.latency_s.to_bits());
         assert_eq!(direct.upi_bytes.to_bits(), cached.upi_bytes.to_bits());
         assert_eq!(direct.gflops.to_bits(), cached.gflops.to_bits());
@@ -488,7 +785,7 @@ mod tests {
         for pools in 1..=3usize {
             let mut cfg = FrameworkConfig::tuned_default();
             cfg.inter_op_pools = pools;
-            cache.latency(&prep, &p, &cfg);
+            cache.latency(&prep, &p, &cfg).unwrap();
         }
         assert!(cache.entries() <= 2, "entries={}", cache.entries());
         assert_eq!(cache.misses(), 3);

@@ -21,6 +21,7 @@ use std::collections::HashSet;
 use std::sync::Arc;
 
 use crate::config::{CpuPlatform, FrameworkConfig, OperatorImpl, SchedPolicy};
+use crate::error::PallasResult;
 use crate::graph::Graph;
 use crate::sim::{self, PreparedGraph};
 
@@ -101,8 +102,9 @@ pub fn lattice(platform: &CpuPlatform) -> Vec<FrameworkConfig> {
 }
 
 /// Sweep the lattice and return the latency-optimal setting, with the
-/// default sweep options (parallel workers, fresh memo-cache).
-pub fn exhaustive_search(graph: &Graph, platform: &CpuPlatform) -> SearchResult {
+/// default sweep options (parallel workers, fresh memo-cache). Errors
+/// only if the graph itself cannot be simulated (e.g. a stalled DAG).
+pub fn exhaustive_search(graph: &Graph, platform: &CpuPlatform) -> PallasResult<SearchResult> {
     exhaustive_search_with(graph, platform, &SweepOptions::default())
 }
 
@@ -118,7 +120,7 @@ pub fn exhaustive_search_with(
     graph: &Graph,
     platform: &CpuPlatform,
     opts: &SweepOptions,
-) -> SearchResult {
+) -> PallasResult<SearchResult> {
     let mut points = lattice(platform);
     if let Some(pin) = opts.policy {
         points.retain(|c| c.inter_op_pools == 1 || c.sched_policy == pin);
@@ -127,18 +129,20 @@ pub fn exhaustive_search_with(
     let prep = Arc::new(PreparedGraph::new(graph));
     let plat = Arc::new(platform.clone());
     let cache = Arc::clone(&opts.cache);
-    let scored: Vec<(FrameworkConfig, f64)> = par_map(opts.jobs, points, move |_, cfg| {
-        let lat = cache.latency(&prep, &plat, &cfg);
-        (cfg, lat)
-    });
+    let scored: Vec<PallasResult<(FrameworkConfig, f64)>> =
+        par_map(opts.jobs, points, move |_, cfg| {
+            let lat = cache.latency(&prep, &plat, &cfg)?;
+            Ok((cfg, lat))
+        });
     let mut best: Option<(FrameworkConfig, f64)> = None;
-    for (cfg, lat) in scored {
+    for scored_point in scored {
+        let (cfg, lat) = scored_point?;
         if best.as_ref().map_or(true, |(_, b)| lat < *b) {
             best = Some((cfg, lat));
         }
     }
     let (best, best_latency_s) = best.expect("non-empty lattice");
-    SearchResult { best, best_latency_s, evaluated }
+    Ok(SearchResult { best, best_latency_s, evaluated })
 }
 
 #[cfg(test)]
@@ -168,7 +172,7 @@ mod tests {
     #[test]
     fn sweeps_a_substantial_lattice() {
         let g = models::build("matmul_512", 0).unwrap();
-        let r = exhaustive_search(&g, &CpuPlatform::small());
+        let r = exhaustive_search(&g, &CpuPlatform::small()).unwrap();
         assert!(r.evaluated > 50, "evaluated={}", r.evaluated);
         assert!(r.best_latency_s > 0.0);
     }
@@ -179,7 +183,7 @@ mod tests {
         // `small` the lattice is 4 pools × 4×4 threads, so the policy
         // sweep must push the count well past the 64 thread-only points
         let g = models::build("inception_v2", 16).unwrap();
-        let r = exhaustive_search(&g, &CpuPlatform::small());
+        let r = exhaustive_search(&g, &CpuPlatform::small()).unwrap();
         assert!(r.evaluated > 100, "evaluated={}", r.evaluated);
         assert!(SchedPolicy::ALL.contains(&r.best.sched_policy));
     }
@@ -188,12 +192,13 @@ mod tests {
     fn policy_pin_constrains_the_sweep() {
         let g = models::build("inception_v2", 16).unwrap();
         let p = CpuPlatform::small();
-        let free = exhaustive_search(&g, &p);
+        let free = exhaustive_search(&g, &p).unwrap();
         let pinned = exhaustive_search_with(
             &g,
             &p,
             &SweepOptions::default().pinned(Some(SchedPolicy::Topo)),
-        );
+        )
+        .unwrap();
         // the pinned sub-lattice is strictly smaller and every multi-pool
         // winner honours the pin; the pinned optimum can't beat the free one
         assert!(pinned.evaluated < free.evaluated);
@@ -208,9 +213,9 @@ mod tests {
         for name in ["squeezenet", "ncf", "wide_deep"] {
             let g = models::build(name, models::canonical_batch(name)).unwrap();
             let p = CpuPlatform::large2();
-            let opt = exhaustive_search(&g, &p);
+            let opt = exhaustive_search(&g, &p).unwrap();
             let guided = tune(&g, &p);
-            let guided_lat = crate::sim::simulate(&g, &p, &guided.config).latency_s;
+            let guided_lat = crate::sim::simulate(&g, &p, &guided.config).unwrap().latency_s;
             assert!(
                 opt.best_latency_s <= guided_lat * 1.0001,
                 "{name}: opt={} guided={guided_lat}",
@@ -225,9 +230,9 @@ mod tests {
         for name in ["resnet50", "inception_v3", "ncf", "wide_deep", "transformer"] {
             let g = models::build(name, models::canonical_batch(name)).unwrap();
             let p = CpuPlatform::large2();
-            let opt = exhaustive_search(&g, &p);
+            let opt = exhaustive_search(&g, &p).unwrap();
             let guided = tune(&g, &p);
-            let guided_lat = crate::sim::simulate(&g, &p, &guided.config).latency_s;
+            let guided_lat = crate::sim::simulate(&g, &p, &guided.config).unwrap().latency_s;
             let ratio = guided_lat / opt.best_latency_s;
             assert!(ratio <= 1.053, "{name}: guided/opt = {ratio:.3}");
         }

@@ -257,7 +257,11 @@ fn score_plan(cache: &SimCache, mix: &[(String, f64)], bucket: usize, plan: &Lan
         let slice = plan
             .platform
             .restrict(group.allocation.first_core, group.allocation.cores);
-        let latency = cache.latency(&prep, &slice, &group.framework);
+        // an unsimulatable graph scores like an unhosted kind: worst
+        // possible, so re-planning never selects it
+        let Ok(latency) = cache.latency(&prep, &slice, &group.framework) else {
+            return f64::INFINITY;
+        };
         total += share * latency / bucket as f64;
     }
     total

@@ -11,34 +11,68 @@
 //!
 //! Each case is warmed up, then timed for a fixed wall-time budget; the
 //! report prints mean / p50 / p95 / stddev per iteration, matching the
-//! summary criterion would give.
+//! summary criterion would give. Besides the stdout rows, `finish`
+//! emits a machine-readable `BENCH_<suite>.json` (see the README's
+//! "Benchmark trajectory" section for the schema) so perf runs can be
+//! committed and diffed across revisions.
 
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
-use super::stats;
+use super::{json::Json, stats};
+
+/// Version stamped into every emitted `BENCH_<suite>.json`; bump when
+/// the shape of the document changes so stale committed files fail the
+/// CI schema check instead of silently drifting.
+pub const BENCH_SCHEMA_VERSION: u64 = 1;
+
+/// Interpret the value of `PARFRAME_BENCH_FAST`.
+///
+/// Presence alone is NOT enough: `PARFRAME_BENCH_FAST=0` must run the
+/// full budget (the seed checked `is_ok()`, so `=0` still enabled fast
+/// mode). Empty, `0`, `false`, `no`, and `off` (any case) disable;
+/// every other set value enables.
+pub fn fast_flag(value: Option<&str>) -> bool {
+    match value {
+        None => false,
+        Some(v) => {
+            !matches!(v.trim().to_ascii_lowercase().as_str(), "" | "0" | "false" | "no" | "off")
+        }
+    }
+}
 
 /// One benchmark suite (a named group of cases).
 pub struct Bench {
     name: String,
     /// (case name, per-iteration seconds)
     pub results: Vec<(String, Vec<f64>)>,
+    /// (case name, value, unit) — custom metrics recorded with [`Bench::record`].
+    pub records: Vec<(String, f64, String)>,
     /// Wall-clock budget per case.
     pub budget: Duration,
     /// Minimum measured iterations per case.
     pub min_iters: usize,
+    fast: bool,
 }
 
 impl Bench {
     /// New suite with default budget (0.5 s per case, ≥10 iterations).
+    /// `PARFRAME_BENCH_FAST=1` shrinks the budget for CI smoke runs.
     pub fn new(name: &str) -> Self {
-        // honor PARFRAME_BENCH_FAST=1 for CI smoke runs
-        let fast = std::env::var("PARFRAME_BENCH_FAST").is_ok();
+        let fast = fast_flag(std::env::var("PARFRAME_BENCH_FAST").ok().as_deref());
         Bench {
             name: name.to_string(),
             results: Vec::new(),
+            records: Vec::new(),
             budget: if fast { Duration::from_millis(50) } else { Duration::from_millis(500) },
             min_iters: if fast { 3 } else { 10 },
+            fast,
         }
+    }
+
+    /// Whether this suite is running under a truthy `PARFRAME_BENCH_FAST`.
+    pub fn is_fast(&self) -> bool {
+        self.fast
     }
 
     /// Time one case; `f` is the workload for a single iteration.
@@ -67,6 +101,15 @@ impl Bench {
         });
     }
 
+    /// Record a custom single-shot metric (a whole-sweep wall time, a
+    /// throughput in points/s, a speedup ratio, …) under `case`. It is
+    /// printed alongside the timed rows and lands in the JSON with
+    /// `iters = 1` and the given `unit`.
+    pub fn record(&mut self, case: &str, value: f64, unit: &str) {
+        println!("{}/{:<40} {value} {unit}", self.name, case);
+        self.records.push((case.to_string(), value, unit.to_string()));
+    }
+
     fn report_case(&self, case: &str, samples: &[f64]) {
         println!(
             "{}/{:<40} iters={:<7} mean={} p50={} p95={} sd={}",
@@ -80,10 +123,96 @@ impl Bench {
         );
     }
 
-    /// Print the suite footer.
+    /// Print the suite footer and emit `BENCH_<suite>.json` into the
+    /// directory named by `PARFRAME_BENCH_OUT` (default: the current
+    /// directory, i.e. the workspace root under `cargo bench`).
     pub fn finish(&self) {
-        println!("bench suite '{}' done: {} cases", self.name, self.results.len());
+        println!(
+            "bench suite '{}' done: {} cases",
+            self.name,
+            self.results.len() + self.records.len()
+        );
+        let dir = std::env::var("PARFRAME_BENCH_OUT").unwrap_or_else(|_| ".".to_string());
+        match self.emit_to(Path::new(&dir)) {
+            Ok(path) => println!("wrote {}", path.display()),
+            Err(e) => eprintln!("bench: could not write BENCH_{}.json: {e}", self.name),
+        }
     }
+
+    /// Write the suite's JSON document into `dir`; returns the path.
+    pub fn emit_to(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, super::json::to_string(&self.to_json()))?;
+        Ok(path)
+    }
+
+    /// The suite as a [`Json`] document (schema v1).
+    pub fn to_json(&self) -> Json {
+        let case = |name: &str, iters: usize, samples: Option<&[f64]>, unit: &str| {
+            let (mean, p50, p95, sd) = match samples {
+                Some(s) => (
+                    stats::mean(s),
+                    stats::median(s),
+                    stats::percentile(s, 95.0),
+                    stats::stddev(s),
+                ),
+                None => (0.0, 0.0, 0.0, 0.0),
+            };
+            Json::Obj(
+                [
+                    ("name".to_string(), Json::Str(name.to_string())),
+                    ("iters".to_string(), Json::Num(iters as f64)),
+                    ("mean_s".to_string(), Json::Num(mean)),
+                    ("p50_s".to_string(), Json::Num(p50)),
+                    ("p95_s".to_string(), Json::Num(p95)),
+                    ("sd_s".to_string(), Json::Num(sd)),
+                    ("unit".to_string(), Json::Str(unit.to_string())),
+                ]
+                .into_iter()
+                .collect(),
+            )
+        };
+        let mut cases: Vec<Json> = self
+            .results
+            .iter()
+            .map(|(name, samples)| case(name, samples.len(), Some(samples), "s"))
+            .collect();
+        for (name, value, unit) in &self.records {
+            let one = [*value];
+            cases.push(case(name, 1, Some(&one), unit));
+        }
+        Json::Obj(
+            [
+                ("schema_version".to_string(), Json::Num(BENCH_SCHEMA_VERSION as f64)),
+                ("suite".to_string(), Json::Str(self.name.clone())),
+                ("git_rev".to_string(), Json::Str(git_rev())),
+                ("timestamp".to_string(), Json::Num(unix_now())),
+                ("fast".to_string(), Json::Bool(self.fast)),
+                ("cases".to_string(), Json::Arr(cases)),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
+}
+
+fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+fn unix_now() -> f64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs() as f64)
+        .unwrap_or(0.0)
 }
 
 /// Human-format a duration in seconds.
@@ -103,16 +232,81 @@ pub fn fmt_t(secs: f64) -> String {
 mod tests {
     use super::*;
 
+    /// Serializes the tests that mutate `PARFRAME_BENCH_FAST` — the
+    /// test harness runs threads in one process sharing the env.
+    static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
     #[test]
     fn runs_and_records() {
+        let _env = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        // fast mode on: presence with a truthy value
         std::env::set_var("PARFRAME_BENCH_FAST", "1");
         let mut b = Bench::new("t");
+        assert!(b.is_fast(), "PARFRAME_BENCH_FAST=1 must enable fast mode");
         let mut counter = 0u64;
         b.run("noop", || {
             counter = counter.wrapping_add(1);
         });
         assert_eq!(b.results.len(), 1);
         assert!(b.results[0].1.len() >= 3);
+
+        // the seed's `is_ok()` bug: `=0` still enabled fast mode. The
+        // value must be parsed — "0" means a full run.
+        std::env::set_var("PARFRAME_BENCH_FAST", "0");
+        let full = Bench::new("t");
+        assert!(!full.is_fast(), "PARFRAME_BENCH_FAST=0 must NOT enable fast mode");
+        assert_eq!(full.budget, Duration::from_millis(500));
+        assert_eq!(full.min_iters, 10);
+        std::env::set_var("PARFRAME_BENCH_FAST", "1");
+    }
+
+    #[test]
+    fn fast_flag_parses_values_not_presence() {
+        assert!(!fast_flag(None));
+        for off in ["", "0", "false", "FALSE", "no", "off", " 0 "] {
+            assert!(!fast_flag(Some(off)), "{off:?} should disable fast mode");
+        }
+        for on in ["1", "true", "yes", "2", "fast"] {
+            assert!(fast_flag(Some(on)), "{on:?} should enable fast mode");
+        }
+    }
+
+    #[test]
+    fn emits_schema_v1_json() {
+        let _env = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        std::env::set_var("PARFRAME_BENCH_FAST", "1");
+        let mut b = Bench::new("selftest");
+        b.run("spin", || {
+            std::hint::black_box(1 + 1);
+        });
+        b.record("ratio", 2.5, "x");
+        let doc = Json::parse(&super::super::json::to_string(&b.to_json())).unwrap();
+        assert_eq!(doc.get("schema_version").unwrap().as_f64(), Some(1.0));
+        assert_eq!(doc.get("suite").unwrap().as_str(), Some("selftest"));
+        assert!(doc.get("git_rev").unwrap().as_str().is_some());
+        assert!(doc.get("timestamp").unwrap().as_f64().is_some());
+        let cases = doc.get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), 2);
+        let spin = &cases[0];
+        assert_eq!(spin.get("name").unwrap().as_str(), Some("spin"));
+        assert!(spin.get("iters").unwrap().as_usize().unwrap() >= 3);
+        assert!(spin.get("mean_s").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(spin.get("unit").unwrap().as_str(), Some("s"));
+        let ratio = &cases[1];
+        assert_eq!(ratio.get("name").unwrap().as_str(), Some("ratio"));
+        assert_eq!(ratio.get("iters").unwrap().as_usize(), Some(1));
+        assert_eq!(ratio.get("mean_s").unwrap().as_f64(), Some(2.5));
+        assert_eq!(ratio.get("sd_s").unwrap().as_f64(), Some(0.0));
+        assert_eq!(ratio.get("unit").unwrap().as_str(), Some("x"));
+
+        // emit_to writes a parseable file
+        let dir = std::env::temp_dir().join(format!("parframe-bench-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = b.emit_to(&dir).unwrap();
+        assert_eq!(path.file_name().unwrap(), "BENCH_selftest.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(Json::parse(&text).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1,0 +1,133 @@
+//! Property: every fast-path entry point — the calendar-queue engine
+//! (`sim::simulate`), the prepared entry point, and the delta-simulation
+//! cache — produces **bit-identical** reports to the seed BinaryHeap
+//! engine (`sim::simulate_reference`), across the whole model zoo, on
+//! both endpoint platforms, under every scheduling policy, timelines
+//! included. Speed that changes the answer doesn't count.
+
+use parframe::config::{CpuPlatform, FrameworkConfig, OperatorImpl, SchedPolicy};
+use parframe::models;
+use parframe::sim::{self, Category, PreparedGraph, SimCache, SimOptions, SimReport};
+
+fn cfg(platform: &CpuPlatform, pools: usize, policy: SchedPolicy) -> FrameworkConfig {
+    let threads = (platform.physical_cores() / pools).max(1);
+    FrameworkConfig {
+        inter_op_pools: pools,
+        mkl_threads: threads,
+        intra_op_threads: threads,
+        operator_impl: OperatorImpl::IntraOpParallel,
+        sched_policy: policy,
+        ..FrameworkConfig::tuned_default()
+    }
+}
+
+/// Bitwise report equality: scalar fields, every breakdown category,
+/// and (when `timelines`) every segment of every logical core.
+fn assert_bit_identical(tag: &str, got: &SimReport, want: &SimReport, timelines: bool) {
+    assert_eq!(got.latency_s.to_bits(), want.latency_s.to_bits(), "{tag}: latency");
+    assert_eq!(got.gflops.to_bits(), want.gflops.to_bits(), "{tag}: gflops");
+    assert_eq!(got.upi_bytes.to_bits(), want.upi_bytes.to_bits(), "{tag}: upi_bytes");
+    assert_eq!(got.upi_peak_bps.to_bits(), want.upi_peak_bps.to_bits(), "{tag}: upi_peak");
+    for cat in Category::ALL {
+        assert_eq!(
+            got.breakdown.get(cat).to_bits(),
+            want.breakdown.get(cat).to_bits(),
+            "{tag}: breakdown {cat:?}"
+        );
+    }
+    if timelines {
+        assert_eq!(got.timelines.len(), want.timelines.len(), "{tag}: core count");
+        for (core, (a, b)) in got.timelines.iter().zip(&want.timelines).enumerate() {
+            assert_eq!(a.len(), b.len(), "{tag}: core {core} segment count");
+            for (sa, sb) in a.iter().zip(b) {
+                let same = sa.t0.to_bits() == sb.t0.to_bits()
+                    && sa.t1.to_bits() == sb.t1.to_bits()
+                    && sa.cat == sb.cat
+                    && sa.op == sb.op;
+                assert!(same, "{tag}: core {core} segment diverged: {sa:?} vs {sb:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn fast_paths_bit_identical_to_seed_engine_across_zoo() {
+    let opts = SimOptions { record_timelines: true };
+    for p in [CpuPlatform::small(), CpuPlatform::large2()] {
+        for name in models::model_names() {
+            let g = models::build(name, models::canonical_batch(name)).unwrap();
+            let prep = PreparedGraph::new(&g);
+            let cache = SimCache::new();
+            for policy in SchedPolicy::ALL {
+                let c = cfg(&p, 3, policy);
+                let tag = format!("{name}/{}/{policy:?}", p.name);
+                let reference = sim::simulate_reference(&g, &p, &c, &opts).unwrap();
+
+                // calendar-queue engine, cold scratch
+                let fast = sim::simulate_opts(&g, &p, &c, &opts).unwrap();
+                assert_bit_identical(&format!("{tag}/fast"), &fast, &reference, true);
+
+                // prepared entry point, pooled scratch (warm after the
+                // first policy — any scratch state must be invisible)
+                let prepared = sim::simulate_prepared(&prep, &p, &c, &opts).unwrap();
+                assert_bit_identical(&format!("{tag}/prepared"), &prepared, &reference, true);
+
+                // delta-sim cache: first policy builds the family phase
+                // table, later siblings replay only the event loop
+                let cached = cache.report(&prep, &p, &c).unwrap();
+                assert_bit_identical(&format!("{tag}/cached"), &cached, &reference, false);
+            }
+            assert_eq!(
+                cache.delta_fallbacks(),
+                0,
+                "{name}/{}: phase-table guard rejected a policy sibling",
+                p.name
+            );
+        }
+    }
+}
+
+#[test]
+fn delta_cache_is_arrival_order_independent() {
+    // whichever policy sibling arrives first builds the shared phase
+    // table; the bits of every sibling's report must not depend on it
+    let p = CpuPlatform::large2();
+    for name in ["inception_v2", "transformer"] {
+        let g = models::build(name, models::canonical_batch(name)).unwrap();
+        let forward = SimCache::new();
+        let reverse = SimCache::new();
+        let prep_f = PreparedGraph::new(&g);
+        let prep_r = PreparedGraph::new(&g);
+        let mut fwd = Vec::new();
+        for policy in SchedPolicy::ALL {
+            fwd.push(forward.report(&prep_f, &p, &cfg(&p, 4, policy)).unwrap());
+        }
+        let mut rev = Vec::new();
+        for policy in SchedPolicy::ALL.into_iter().rev() {
+            rev.push(reverse.report(&prep_r, &p, &cfg(&p, 4, policy)).unwrap());
+        }
+        rev.reverse();
+        for (a, b) in fwd.iter().zip(&rev) {
+            assert_bit_identical(name, a, b, false);
+        }
+        for cache in [&forward, &reverse] {
+            assert_eq!(cache.misses(), 3, "{name}");
+            assert_eq!(cache.delta_hits(), 2, "{name}");
+            assert_eq!(cache.delta_fallbacks(), 0, "{name}");
+        }
+    }
+}
+
+#[test]
+fn warm_cache_returns_the_same_bits() {
+    // any cache state: a hit must return exactly what the miss stored
+    let p = CpuPlatform::small();
+    let g = models::build("squeezenet", 16).unwrap();
+    let cache = SimCache::new();
+    let prep = PreparedGraph::new(&g);
+    let c = cfg(&p, 2, SchedPolicy::CriticalPathFirst);
+    let miss = cache.report(&prep, &p, &c).unwrap();
+    let hit = cache.report(&prep, &p, &c).unwrap();
+    assert_bit_identical("squeezenet/warm", &hit, &miss, false);
+    assert_eq!(cache.hits(), 1);
+}

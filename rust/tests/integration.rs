@@ -21,7 +21,7 @@ fn facade_tune_agrees_with_direct_tuner() {
         let direct = tuner::tune(&g, &CpuPlatform::large2()).config;
         assert_eq!(plan.entries[0].config, direct, "{name}");
         // and the predicted latency is the direct simulation, bit for bit
-        let direct_lat = sim::simulate(&g, &CpuPlatform::large2(), &direct).latency_s;
+        let direct_lat = sim::simulate(&g, &CpuPlatform::large2(), &direct).unwrap().latency_s;
         assert_eq!(
             plan.entries[0].predicted_latency_s.to_bits(),
             direct_lat.to_bits(),
@@ -62,7 +62,7 @@ fn config_file_roundtrip_drives_simulation() {
     }"#;
     let cfg = RunConfig::from_json_str(text).unwrap();
     let g = models::build("inception_v3", 16).unwrap();
-    let r = sim::simulate(&g, &cfg.platform, &cfg.framework);
+    let r = sim::simulate(&g, &cfg.platform, &cfg.framework).unwrap();
     assert!(r.latency_s > 0.0);
 }
 
@@ -72,7 +72,7 @@ fn tuner_output_feeds_simulator_everywhere() {
         let g = models::build(name, models::canonical_batch(name)).unwrap();
         for p in [CpuPlatform::small(), CpuPlatform::large2()] {
             let t = tuner::tune(&g, &p);
-            let r = sim::simulate(&g, &p, &t.config);
+            let r = sim::simulate(&g, &p, &t.config).unwrap();
             assert!(r.latency_s.is_finite() && r.latency_s > 0.0, "{name} on {}", p.name);
         }
     }
@@ -83,7 +83,7 @@ fn ascii_and_chrome_traces_from_simulation() {
     let p = CpuPlatform::small();
     let g = models::build("squeezenet", 16).unwrap();
     let t = tuner::tune(&g, &p);
-    let r = sim::simulate_opts(&g, &p, &t.config, &SimOptions { record_timelines: true });
+    let r = sim::simulate_opts(&g, &p, &t.config, &SimOptions { record_timelines: true }).unwrap();
     let ascii = trace::ascii_trace(&r.timelines, r.latency_s, 60);
     assert!(ascii.lines().count() >= 2);
     let chrome = trace::chrome_trace(&r.timelines);
@@ -98,7 +98,7 @@ fn simulated_throughput_scales_with_batch() {
     let lat = |b: usize| {
         let g = models::build("resnet50", b).unwrap();
         let t = tuner::tune(&g, &p);
-        sim::simulate(&g, &p, &t.config).throughput(b)
+        sim::simulate(&g, &p, &t.config).unwrap().throughput(b)
     };
     let t1 = lat(1);
     let t16 = lat(16);
@@ -125,10 +125,10 @@ fn end_to_end_sim_story_inception() {
         ..step2.clone()
     };
     let guided = tuner::tune(&g, &p).config;
-    let l0 = sim::simulate(&g, &p, &base).latency_s;
-    let l1 = sim::simulate(&g, &p, &step2).latency_s;
-    let l2 = sim::simulate(&g, &p, &step3).latency_s;
-    let l3 = sim::simulate(&g, &p, &guided).latency_s;
+    let l0 = sim::simulate(&g, &p, &base).unwrap().latency_s;
+    let l1 = sim::simulate(&g, &p, &step2).unwrap().latency_s;
+    let l2 = sim::simulate(&g, &p, &step3).unwrap().latency_s;
+    let l3 = sim::simulate(&g, &p, &guided).unwrap().latency_s;
     assert!(l1 < l0, "inter-op step should help: {l0} -> {l1}");
     assert!(l2 < l1, "intra-op step should help: {l1} -> {l2}");
     assert!(l3 <= l2 * 1.001, "guideline should be at least as good: {l2} -> {l3}");

@@ -74,8 +74,8 @@ fn prop_simulation_deterministic_and_finite() {
     for case in 0..CASES {
         let g = random_graph(&mut rng);
         let cfg = random_cfg(&mut rng, &p);
-        let a = sim::simulate(&g, &p, &cfg);
-        let b = sim::simulate(&g, &p, &cfg);
+        let a = sim::simulate(&g, &p, &cfg).unwrap();
+        let b = sim::simulate(&g, &p, &cfg).unwrap();
         assert_eq!(a.latency_s, b.latency_s, "case {case}");
         assert!(a.latency_s.is_finite() && a.latency_s > 0.0, "case {case}");
         assert!(a.breakdown.total().is_finite(), "case {case}");
@@ -92,8 +92,12 @@ fn prop_tuned_big_platform_never_loses_to_tuned_small() {
         let g = random_graph(&mut rng);
         let small_p = CpuPlatform::small();
         let large_p = CpuPlatform::large();
-        let small = sim::simulate(&g, &small_p, &parframe::tuner::tune(&g, &small_p).config).latency_s;
-        let large = sim::simulate(&g, &large_p, &parframe::tuner::tune(&g, &large_p).config).latency_s;
+        let small = sim::simulate(&g, &small_p, &parframe::tuner::tune(&g, &small_p).config)
+            .unwrap()
+            .latency_s;
+        let large = sim::simulate(&g, &large_p, &parframe::tuner::tune(&g, &large_p).config)
+            .unwrap()
+            .latency_s;
         assert!(large <= small * 1.05, "case {case}: small={small} large={large}");
     }
 }
@@ -167,6 +171,7 @@ fn prop_all_policies_agree_on_pure_chains() {
             &p,
             &FrameworkConfig { sched_policy: SchedPolicy::Topo, ..cfg.clone() },
         )
+        .unwrap()
         .latency_s;
         for policy in [SchedPolicy::CriticalPathFirst, SchedPolicy::CostlyFirst] {
             let lat = sim::simulate(
@@ -174,6 +179,7 @@ fn prop_all_policies_agree_on_pure_chains() {
                 &p,
                 &FrameworkConfig { sched_policy: policy, ..cfg.clone() },
             )
+            .unwrap()
             .latency_s;
             assert_eq!(lat, topo, "case {case} {policy:?}: chains must not reorder");
         }

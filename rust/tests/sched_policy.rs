@@ -39,8 +39,11 @@ fn critical_path_strictly_beats_topo_on_a_wide_zoo_model() {
         let g = models::build(name, models::canonical_batch(name)).unwrap();
         for pools in [2usize, 3, 4, 6] {
             let threads = p.physical_cores() / pools;
-            let topo = sim::simulate(&g, &p, &cfg(pools, threads, SchedPolicy::Topo)).latency_s;
+            let topo = sim::simulate(&g, &p, &cfg(pools, threads, SchedPolicy::Topo))
+                .unwrap()
+                .latency_s;
             let cp = sim::simulate(&g, &p, &cfg(pools, threads, SchedPolicy::CriticalPathFirst))
+                .unwrap()
                 .latency_s;
             assert!(cp.is_finite() && cp > 0.0, "{name}/{pools} pools");
             if cp < topo * 0.999 {
@@ -65,9 +68,11 @@ fn critical_path_never_collapses_on_wide_models() {
         let g = models::build(name, models::canonical_batch(name)).unwrap();
         let pools = tuner::tune(&g, &p).config.inter_op_pools.max(2);
         let threads = p.physical_cores() / pools;
-        let topo = sim::simulate(&g, &p, &cfg(pools, threads, SchedPolicy::Topo)).latency_s;
-        let cp =
-            sim::simulate(&g, &p, &cfg(pools, threads, SchedPolicy::CriticalPathFirst)).latency_s;
+        let topo =
+            sim::simulate(&g, &p, &cfg(pools, threads, SchedPolicy::Topo)).unwrap().latency_s;
+        let cp = sim::simulate(&g, &p, &cfg(pools, threads, SchedPolicy::CriticalPathFirst))
+            .unwrap()
+            .latency_s;
         assert!(cp <= topo * 1.10, "{name}: cp={cp} topo={topo}");
     }
 }
@@ -78,10 +83,11 @@ fn exhaustive_optimum_never_worse_than_best_single_policy() {
     // optimum must be ≤ the best latency of each policy at the §8 point
     let p = CpuPlatform::large();
     let g = models::build("inception_v2", 16).unwrap();
-    let opt = exhaustive_search(&g, &p).best_latency_s;
+    let opt = exhaustive_search(&g, &p).unwrap().best_latency_s;
     for policy in SchedPolicy::ALL {
         let guided = tuner::tune(&g, &p).config;
         let lat = sim::simulate(&g, &p, &FrameworkConfig { sched_policy: policy, ..guided })
+            .unwrap()
             .latency_s;
         assert!(opt <= lat * 1.0001, "{policy:?}: opt={opt} point={lat}");
     }

@@ -24,7 +24,7 @@ fn best_pools_never_exceed_max_width() {
         let w = parframe::graph::analyze_width(&g);
         let mut best = (1usize, f64::INFINITY);
         for pools in 1..=6usize {
-            let lat = sim::simulate(&g, &p, &cfg(pools, 24 / pools.min(24), 1)).latency_s;
+            let lat = sim::simulate(&g, &p, &cfg(pools, 24 / pools.min(24), 1)).unwrap().latency_s;
             if lat < best.1 {
                 best = (pools, lat);
             }
@@ -38,7 +38,8 @@ fn sync_scheduling_is_one_pool() {
     // pools=1 must serialise everything: latency ≈ Σ op times
     let p = CpuPlatform::large();
     let g = models::build("caffenet", 16).unwrap();
-    let r = sim::simulate_opts(&g, &p, &cfg(1, 24, 1), &SimOptions { record_timelines: true });
+    let r = sim::simulate_opts(&g, &p, &cfg(1, 24, 1), &SimOptions { record_timelines: true })
+        .unwrap();
     // no two segments on different cores may overlap unless same op
     let mut spans: Vec<(f64, f64, usize)> = Vec::new();
     for tl in &r.timelines {
@@ -60,7 +61,8 @@ fn sync_scheduling_is_one_pool() {
 fn async_uses_multiple_pools_simultaneously() {
     let p = CpuPlatform::large();
     let g = models::build("ncf", 256).unwrap();
-    let r = sim::simulate_opts(&g, &p, &cfg(4, 6, 1), &SimOptions { record_timelines: true });
+    let r = sim::simulate_opts(&g, &p, &cfg(4, 6, 1), &SimOptions { record_timelines: true })
+        .unwrap();
     // embeddings land on different pools concurrently: find overlapping
     // busy segments with different ops
     let mut overlap = false;
@@ -86,9 +88,9 @@ fn async_uses_multiple_pools_simultaneously() {
 fn over_threading_monotonically_penalised() {
     let p = CpuPlatform::small();
     let g = models::build("inception_v2", 16).unwrap();
-    let ok = sim::simulate(&g, &p, &cfg(2, 2, 2)).latency_s;
-    let over = sim::simulate(&g, &p, &cfg(8, 8, 8)).latency_s;
-    let way_over = sim::simulate(&g, &p, &cfg(4, 16, 16)).latency_s;
+    let ok = sim::simulate(&g, &p, &cfg(2, 2, 2)).unwrap().latency_s;
+    let over = sim::simulate(&g, &p, &cfg(8, 8, 8)).unwrap().latency_s;
+    let way_over = sim::simulate(&g, &p, &cfg(4, 16, 16)).unwrap().latency_s;
     assert!(over > ok);
     assert!(way_over > ok);
 }
@@ -101,15 +103,15 @@ fn training_prefers_two_pools_small_batch() {
     let p = CpuPlatform::large();
     let fwd = models::build("fc512", 64).unwrap();
     let g = models::to_training_graph(&fwd);
-    let one = sim::simulate(&g, &p, &cfg(1, 24, 1)).latency_s;
-    let two = sim::simulate(&g, &p, &cfg(2, 12, 1)).latency_s;
+    let one = sim::simulate(&g, &p, &cfg(1, 24, 1)).unwrap().latency_s;
+    let two = sim::simulate(&g, &p, &cfg(2, 12, 1)).unwrap().latency_s;
     assert!(two < one, "one={one} two={two}");
 
     // at large batch the 2-pool advantage shrinks or inverts
     let fwd_big = models::build("fc4k", 2048).unwrap();
     let g_big = models::to_training_graph(&fwd_big);
-    let one_b = sim::simulate(&g_big, &p, &cfg(1, 24, 1)).latency_s;
-    let two_b = sim::simulate(&g_big, &p, &cfg(2, 12, 1)).latency_s;
+    let one_b = sim::simulate(&g_big, &p, &cfg(1, 24, 1)).unwrap().latency_s;
+    let two_b = sim::simulate(&g_big, &p, &cfg(2, 12, 1)).unwrap().latency_s;
     let small_gain = one / two;
     let big_gain = one_b / two_b;
     assert!(big_gain < small_gain, "small={small_gain} big={big_gain}");
@@ -121,7 +123,7 @@ fn platforms_ordered_by_capability() {
     let c = |p: &CpuPlatform| {
         let mut c = cfg(1, p.physical_cores(), p.physical_cores());
         c.operator_impl = OperatorImpl::IntraOpParallel;
-        sim::simulate(&g, p, &c).latency_s
+        sim::simulate(&g, p, &c).unwrap().latency_s
     };
     let small = c(&CpuPlatform::small());
     let large = c(&CpuPlatform::large());
@@ -137,7 +139,7 @@ fn gflops_never_exceed_platform_peak() {
         for p in [CpuPlatform::small(), CpuPlatform::large(), CpuPlatform::large2()] {
             let mut c = cfg(1, p.physical_cores(), 1);
             c.operator_impl = OperatorImpl::IntraOpParallel;
-            let r = sim::simulate(&g, &p, &c);
+            let r = sim::simulate(&g, &p, &c).unwrap();
             assert!(
                 r.gflops <= p.peak_gflops() * 1.001,
                 "{name} on {}: {} > {}",

@@ -15,8 +15,8 @@ fn guideline_matches_search_on_single_socket_too() {
     let p = CpuPlatform::large();
     for name in ["resnet50", "ncf", "wide_deep"] {
         let g = models::build(name, models::canonical_batch(name)).unwrap();
-        let guided = sim::simulate(&g, &p, &tune(&g, &p).config).latency_s;
-        let opt = exhaustive_search(&g, &p).best_latency_s;
+        let guided = sim::simulate(&g, &p, &tune(&g, &p).config).unwrap().latency_s;
+        let opt = exhaustive_search(&g, &p).unwrap().best_latency_s;
         assert!(guided / opt < 1.08, "{name}: {:.3}", guided / opt);
     }
 }
@@ -39,7 +39,7 @@ fn design_space_is_collapsed_to_one_point() {
     let raw_space = p.logical_cores() * p.logical_cores() * p.logical_cores();
     assert_eq!(raw_space, 884_736);
     let g = models::build("ncf", 256).unwrap();
-    let searched = exhaustive_search(&g, &p).evaluated;
+    let searched = exhaustive_search(&g, &p).unwrap().evaluated;
     // the pruned lattice is large but the guideline evaluates 0 of it
     assert!(searched > 100, "searched={searched}");
     let t1 = tune(&g, &p).config;
@@ -52,9 +52,13 @@ fn tf_default_worst_across_models() {
     let p = CpuPlatform::large2();
     for name in ["resnet50", "transformer", "ncf"] {
         let g = models::build(name, models::canonical_batch(name)).unwrap();
-        let dflt = sim::simulate(&g, &p, &baseline_config(Baseline::TensorFlowDefault, &p)).latency_s;
-        let rec = sim::simulate(&g, &p, &baseline_config(Baseline::TensorFlowRecommended, &p)).latency_s;
-        let guided = sim::simulate(&g, &p, &tune(&g, &p).config).latency_s;
+        let dflt = sim::simulate(&g, &p, &baseline_config(Baseline::TensorFlowDefault, &p))
+            .unwrap()
+            .latency_s;
+        let rec = sim::simulate(&g, &p, &baseline_config(Baseline::TensorFlowRecommended, &p))
+            .unwrap()
+            .latency_s;
+        let guided = sim::simulate(&g, &p, &tune(&g, &p).config).unwrap().latency_s;
         assert!(dflt > rec, "{name}: default should lose to recommended");
         assert!(dflt > guided * 2.0, "{name}: default should lose badly");
     }
@@ -73,9 +77,12 @@ fn guideline_beats_intel_and_tensorflow_across_zoo() {
     let mut tf = Vec::new();
     for name in models::model_names() {
         let g = models::build(name, models::canonical_batch(name)).unwrap();
-        let guided = sim::simulate(&g, &p, &tune(&g, &p).config).latency_s;
-        let i = sim::simulate(&g, &p, &baseline_config(Baseline::IntelRecommended, &p)).latency_s;
+        let guided = sim::simulate(&g, &p, &tune(&g, &p).config).unwrap().latency_s;
+        let i = sim::simulate(&g, &p, &baseline_config(Baseline::IntelRecommended, &p))
+            .unwrap()
+            .latency_s;
         let t = sim::simulate(&g, &p, &baseline_config(Baseline::TensorFlowRecommended, &p))
+            .unwrap()
             .latency_s;
         assert!(guided.is_finite() && guided > 0.0, "{name}");
         ours.push(guided);
@@ -130,12 +137,13 @@ fn guideline_on_training_graphs_is_sane() {
         let t = tune(&train, &p);
         assert!(t.config.validate(&p).is_ok(), "{name}");
         assert!(!t.config.over_threaded(&p), "{name}");
-        let guided = sim::simulate(&train, &p, &t.config).latency_s;
+        let guided = sim::simulate(&train, &p, &t.config).unwrap().latency_s;
         let rec = sim::simulate(
             &train,
             &p,
             &baseline_config(Baseline::TensorFlowRecommended, &p),
         )
+        .unwrap()
         .latency_s;
         assert!(guided <= rec * 1.05, "{name}: guided={guided} rec={rec}");
     }

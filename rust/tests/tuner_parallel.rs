@@ -30,7 +30,7 @@ fn serial_uncached_sweep(
     let points = lattice(platform);
     let mut best: Option<(FrameworkConfig, f64)> = None;
     for cfg in &points {
-        let lat = sim::simulate(graph, platform, cfg).latency_s;
+        let lat = sim::simulate(graph, platform, cfg).unwrap().latency_s;
         if best.as_ref().map_or(true, |(_, b)| lat < *b) {
             best = Some((cfg.clone(), lat));
         }
@@ -55,7 +55,8 @@ fn parallel_cached_sweep_bit_identical_to_serial_uncached() {
                         &g,
                         &platform,
                         &SweepOptions::shared(jobs, cache),
-                    );
+                    )
+                    .unwrap();
                     let tag = format!("{name}/{}/jobs={jobs}", platform.name);
                     assert_eq!(r.best, ref_cfg, "{tag}: best config diverged");
                     assert_eq!(
@@ -86,8 +87,8 @@ fn prepared_simulation_matches_direct() {
             cfg.mkl_threads = 16;
             cfg.intra_op_threads = 16;
             cfg.sched_policy = policy;
-            let direct = sim::simulate(&g, &p, &cfg);
-            let via = sim::simulate_prepared(&prep, &p, &cfg, &SimOptions::default());
+            let direct = sim::simulate(&g, &p, &cfg).unwrap();
+            let via = sim::simulate_prepared(&prep, &p, &cfg, &SimOptions::default()).unwrap();
             let tag = format!("{name}/{policy:?}");
             assert_eq!(direct.latency_s.to_bits(), via.latency_s.to_bits(), "{tag}");
             assert_eq!(direct.upi_bytes.to_bits(), via.upi_bytes.to_bits(), "{tag}");
@@ -157,10 +158,12 @@ fn cross_tier_dedupe_through_a_shared_cache() {
     let g = models::build("ncf", models::canonical_batch("ncf")).unwrap();
     let p = CpuPlatform::small();
     let cache = Arc::new(SimCache::new());
-    let first = exhaustive_search_with(&g, &p, &SweepOptions::shared(2, Arc::clone(&cache)));
+    let first =
+        exhaustive_search_with(&g, &p, &SweepOptions::shared(2, Arc::clone(&cache))).unwrap();
     let misses_after_first = cache.misses();
     assert_eq!(misses_after_first as usize, first.evaluated);
-    let second = exhaustive_search_with(&g, &p, &SweepOptions::shared(4, Arc::clone(&cache)));
+    let second =
+        exhaustive_search_with(&g, &p, &SweepOptions::shared(4, Arc::clone(&cache))).unwrap();
     assert_eq!(cache.misses(), misses_after_first, "re-sweep must be pure cache hits");
     assert_eq!(first.best, second.best);
     assert_eq!(first.best_latency_s.to_bits(), second.best_latency_s.to_bits());
