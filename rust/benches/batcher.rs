@@ -6,9 +6,10 @@ use std::sync::mpsc::channel;
 use std::time::{Duration, Instant};
 
 use parframe::coordinator::batcher::{BatchPolicy, DynamicBatcher};
+use parframe::coordinator::pool::BatchBuf;
 use parframe::coordinator::request::{Request, RequestId};
 use parframe::coordinator::router::Router;
-use parframe::runtime::{Manifest, Tensor};
+use parframe::runtime::{KindId, Manifest, Tensor};
 use parframe::util::bench::Bench;
 
 const MANIFEST: &str = r#"{"version":1,"artifacts":[
@@ -30,7 +31,7 @@ fn req(id: u64) -> Request {
     let (tx, _rx) = channel();
     Request {
         id: RequestId(id),
-        kind: "mlp".into(),
+        kind: KindId(0),
         input: Tensor { shape: vec![1, 256], data: vec![0.0; 256] },
         enqueued: Instant::now(),
         reply: tx,
@@ -43,7 +44,7 @@ fn main() {
 
     b.run("push+cut/64-requests", || {
         let mut batcher = DynamicBatcher::new(
-            "mlp",
+            KindId(0),
             manifest.buckets("mlp"),
             BatchPolicy { max_wait: Duration::ZERO, max_batch: 8 },
         );
@@ -55,9 +56,25 @@ fn main() {
         }
     });
 
+    b.run("push+cut_into/64-requests-recycled", || {
+        let mut batcher = DynamicBatcher::new(
+            KindId(0),
+            manifest.buckets("mlp"),
+            BatchPolicy { max_wait: Duration::ZERO, max_batch: 8 },
+        );
+        for i in 0..64 {
+            batcher.push(req(i));
+        }
+        let mut buf = BatchBuf::new();
+        while !batcher.is_empty() {
+            let batch = std::hint::black_box(batcher.cut_into(buf));
+            buf = batch.recycle();
+        }
+    });
+
     let router = Router::new(&manifest.catalog(&["mlp"]).unwrap()).unwrap();
     let r = req(0);
-    b.run_with_output("router/validate", || router.route(&r).is_ok());
+    b.run_with_output("router/validate", || router.route("mlp", &r.input).is_ok());
 
     b.run_with_output("manifest/parse", || {
         Manifest::parse(Path::new("/tmp"), MANIFEST).unwrap().artifacts.len()

@@ -1,52 +1,85 @@
-//! Bench: the sim-backed serving path — coordinator round-trips and
-//! closed-loop load generation with zero external artifacts. This is the
-//! coordinator-overhead counterpart of `benches/runtime.rs` (which needs
-//! AOT artifacts and measures real PJRT execution).
+//! Bench: the sim-backed serving data plane. Measures saturation
+//! throughput and fixed-load tail latency for both planes — the seed
+//! reference loop (string-keyed batchers, one-at-a-time ingress,
+//! allocating cuts) vs the fast path (interned kinds, batched drain,
+//! recycled batch buffers) — under both lane regimes (unassigned lanes
+//! and a core-aware §8 plan), plus the coordinator round-trip micro-case.
+//!
+//! `fastpath-vs-seed` is the committed regression gate: the unassigned
+//! saturation ratio, required ≥ 1.5x by `parframe bench-check`.
 
+use std::collections::HashMap;
 use std::time::Duration;
 
 use parframe::config::CpuPlatform;
 use parframe::coordinator::{loadgen, BatchPolicy, Coordinator, CoordinatorConfig, LoadgenConfig};
 use parframe::runtime::gen_input;
+use parframe::sched::LanePlan;
 use parframe::util::bench::Bench;
 
-fn coordinator(lanes: usize, max_wait: Duration) -> Coordinator {
-    let mut cfg = CoordinatorConfig::sim(CpuPlatform::large(), &["wide_deep"]);
-    cfg.lanes = lanes;
-    cfg.policy = BatchPolicy { max_wait, max_batch: usize::MAX };
-    Coordinator::start(cfg).expect("start sim coordinator")
+const KIND: &str = "wide_deep";
+
+/// `core_aware` picks the lane regime; `reference` picks the data plane.
+fn coordinator(core_aware: bool, reference: bool) -> Coordinator {
+    let platform = CpuPlatform::large();
+    let mut cfg = CoordinatorConfig::sim(platform.clone(), &[KIND]);
+    cfg.lanes = 2;
+    cfg.policy = BatchPolicy { max_wait: Duration::from_micros(200), max_batch: usize::MAX };
+    if core_aware {
+        cfg = cfg.with_plan(LanePlan::guideline(&platform, &[KIND]).expect("guideline plan"));
+    }
+    Coordinator::start(cfg.with_reference_loop(reference)).expect("start sim coordinator")
+}
+
+/// Closed-loop saturation: 8 workers re-submit as fast as responses come
+/// back, so throughput is bounded by coordinator overhead, not arrivals.
+fn saturation(coord: &Coordinator, requests: usize) -> f64 {
+    // warm-up primes lanes, sim tables, and the batch pool
+    loadgen::run(coord, &LoadgenConfig::closed(KIND, requests / 4, 8)).expect("warm-up");
+    let r = loadgen::run(coord, &LoadgenConfig::closed(KIND, requests, 8)).expect("saturation");
+    assert_eq!(r.errors, 0, "saturation run had errors");
+    r.throughput_rps
+}
+
+/// Open-loop fixed load well below saturation: tail latency reflects
+/// batch-cut waits and dispatch overhead rather than queueing collapse.
+fn fixed_load(coord: &Coordinator, requests: usize, rate_rps: f64) -> (f64, f64) {
+    loadgen::run(coord, &LoadgenConfig::open(KIND, requests / 4, rate_rps)).expect("warm-up");
+    let r = loadgen::run(coord, &LoadgenConfig::open(KIND, requests, rate_rps)).expect("open run");
+    assert_eq!(r.errors, 0, "fixed-load run had errors");
+    (r.wall_p50_ms, r.wall_p99_ms)
 }
 
 fn main() {
     let mut b = Bench::new("serving");
+    let (sat_n, fixed_n, rate_rps) =
+        if b.is_fast() { (512, 256, 2_000.0) } else { (4096, 1024, 4_000.0) };
 
-    let coord = coordinator(1, Duration::from_micros(200));
-    let dims = coord.router().item_shape("wide_deep").unwrap().dims();
+    {
+        let coord = coordinator(false, false);
+        let dims = coord.router().item_shape(KIND).unwrap().dims();
+        b.run_with_output("sim/single-roundtrip", || {
+            coord.infer(KIND, gen_input(3, &dims, 1.0)).unwrap().is_ok()
+        });
+    }
 
-    b.run_with_output("sim/single-roundtrip", || {
-        coord.infer("wide_deep", gen_input(3, &dims, 1.0)).unwrap().is_ok()
-    });
+    let mut sat: HashMap<(&str, &str), f64> = HashMap::new();
+    for (regime, core_aware) in [("unassigned", false), ("core-aware", true)] {
+        for (plane, reference) in [("seed", true), ("fastpath", false)] {
+            let coord = coordinator(core_aware, reference);
+            let rps = saturation(&coord, sat_n);
+            b.record(&format!("saturation/{regime}/{plane}"), rps, "req/s");
+            sat.insert((regime, plane), rps);
+        }
+        let coord = coordinator(core_aware, false);
+        let (p50, p99) = fixed_load(&coord, fixed_n, rate_rps);
+        b.record(&format!("fixed-load/{regime}/p50"), p50, "ms");
+        b.record(&format!("fixed-load/{regime}/p99"), p99, "ms");
+        let stats = coord.pool_stats();
+        println!("serving/{regime} pool: {stats:?}");
+    }
 
-    b.run_with_output("sim/16-concurrent", || {
-        let rxs: Vec<_> = (0..16)
-            .map(|t| coord.submit("wide_deep", gen_input(t, &dims, 1.0)).unwrap())
-            .collect();
-        rxs.into_iter().filter(|rx| rx.recv().unwrap().is_ok()).count()
-    });
-
-    b.run_with_output("sim/loadgen-closed-64x4", || {
-        let r = loadgen::run(&coord, &LoadgenConfig::closed("wide_deep", 64, 4)).unwrap();
-        assert_eq!(r.errors, 0);
-        r.completed
-    });
-
-    drop(coord);
-    let two_lanes = coordinator(2, Duration::from_micros(200));
-    b.run_with_output("sim/2-lanes/loadgen-closed-64x8", || {
-        let r = loadgen::run(&two_lanes, &LoadgenConfig::closed("wide_deep", 64, 8)).unwrap();
-        assert_eq!(r.errors, 0);
-        r.completed
-    });
-    println!("coordinator metrics: {}", two_lanes.metrics().summary());
+    let ratio = sat[&("unassigned", "fastpath")] / sat[&("unassigned", "seed")];
+    b.record("fastpath-vs-seed", ratio, "x");
     b.finish();
 }

@@ -449,6 +449,12 @@ impl ServeHandle {
         Ok(loadgen::run(&self.coord, &LoadgenConfig::closed(kind, requests, concurrency))?)
     }
 
+    /// Open-loop load: `requests` Poisson arrivals at `rate_rps` from a
+    /// single submitter (offered load is fixed, latency is measured).
+    pub fn run_open(&self, kind: &str, requests: usize, rate_rps: f64) -> PallasResult<LoadReport> {
+        Ok(loadgen::run(&self.coord, &LoadgenConfig::open(kind, requests, rate_rps))?)
+    }
+
     /// Drive a multi-phase shifting mix; with `adaptive` the online
     /// re-tuner (sharing the session cache and jobs) re-plans between
     /// phases with default controller knobs.

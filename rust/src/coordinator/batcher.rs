@@ -5,10 +5,17 @@
 //! queued request has waited `max_wait` (latency bound). The chosen bucket
 //! is the smallest compiled batch ≥ the queue depth; short batches are
 //! zero-padded (tracked in metrics as `padded`).
+//!
+//! Batchers are keyed by interned [`KindId`] — the batching loop indexes
+//! a dense `Vec` of them, and [`DynamicBatcher::cut_into`] fills a
+//! recycled [`BatchBuf`] so steady-state cuts allocate nothing.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
+use crate::runtime::KindId;
+
+use super::pool::BatchBuf;
 use super::request::Request;
 
 /// Batching policy knobs.
@@ -28,17 +35,31 @@ impl Default for BatchPolicy {
 
 /// A batch ready for a worker lane.
 pub struct PendingBatch {
-    /// Model family.
-    pub kind: String,
+    /// Model family (interned).
+    pub kind: KindId,
     /// Compiled bucket (≥ requests.len()).
     pub bucket: usize,
     /// The member requests, in arrival order.
     pub requests: Vec<Request>,
+    /// Gather scratch carried from the pool; the executing lane fills it
+    /// and returns it with the rest of the buffer after scatter.
+    pub(crate) input: Vec<f32>,
+}
+
+impl PendingBatch {
+    /// Reclaim the batch's storage as a cleared [`BatchBuf`] (drops the
+    /// member requests). Lanes go through [`super::pool::BatchPool::put`]
+    /// instead; this is for callers that recycle buffers by hand.
+    pub fn recycle(mut self) -> BatchBuf {
+        self.requests.clear();
+        self.input.clear();
+        BatchBuf { requests: self.requests, input: self.input }
+    }
 }
 
 /// Per-model-family batching queue.
 pub struct DynamicBatcher {
-    kind: String,
+    kind: KindId,
     queue: VecDeque<Request>,
     policy: BatchPolicy,
     buckets: Vec<usize>,
@@ -48,12 +69,12 @@ impl DynamicBatcher {
     /// Create a batcher for one model family over its executable batch
     /// buckets (normalised to an ascending, deduplicated, non-zero list —
     /// the backend catalog supplies these).
-    pub fn new(kind: &str, mut buckets: Vec<usize>, policy: BatchPolicy) -> Self {
+    pub fn new(kind: KindId, mut buckets: Vec<usize>, policy: BatchPolicy) -> Self {
         buckets.retain(|&b| b > 0);
         buckets.sort_unstable();
         buckets.dedup();
-        assert!(!buckets.is_empty(), "no batch buckets for kind '{kind}'");
-        DynamicBatcher { kind: kind.to_string(), queue: VecDeque::new(), policy, buckets }
+        assert!(!buckets.is_empty(), "no batch buckets for kind {kind:?}");
+        DynamicBatcher { kind, queue: VecDeque::new(), policy, buckets }
     }
 
     /// Largest compiled bucket.
@@ -104,11 +125,21 @@ impl DynamicBatcher {
     }
 
     /// Cut the next batch (assumes `ready()`); requests keep arrival order.
+    /// Allocates fresh storage — the recycled path is [`Self::cut_into`].
     pub fn cut(&mut self) -> PendingBatch {
+        self.cut_into(BatchBuf::new())
+    }
+
+    /// Cut the next batch into a pooled buffer: members drain into
+    /// `buf.requests` and `buf.input` rides along as gather scratch.
+    /// Bucket choice and membership are identical to [`Self::cut`].
+    pub fn cut_into(&mut self, buf: BatchBuf) -> PendingBatch {
+        let BatchBuf { mut requests, input } = buf;
+        debug_assert!(requests.is_empty() && input.is_empty());
         let take = self.queue.len().min(self.cap());
-        let requests: Vec<Request> = self.queue.drain(..take).collect();
+        requests.extend(self.queue.drain(..take));
         let bucket = self.bucket_for(requests.len());
-        PendingBatch { kind: self.kind.clone(), bucket, requests }
+        PendingBatch { kind: self.kind, bucket, requests, input }
     }
 
     /// Time until the oldest request hits `max_wait` (None if empty) —
@@ -135,7 +166,7 @@ mod tests {
         let (tx, _rx) = channel();
         Request {
             id: super::super::request::RequestId(id),
-            kind: "mlp".into(),
+            kind: KindId(0),
             input: Tensor { shape: vec![1, 4], data: vec![0.0; 4] },
             enqueued: Instant::now(),
             reply: tx,
@@ -144,7 +175,7 @@ mod tests {
 
     #[test]
     fn buckets_from_catalog() {
-        let b = DynamicBatcher::new("mlp", buckets(), BatchPolicy::default());
+        let b = DynamicBatcher::new(KindId(0), buckets(), BatchPolicy::default());
         assert_eq!(b.max_bucket(), 4);
         assert_eq!(b.bucket_for(1), 1);
         assert_eq!(b.bucket_for(3), 4);
@@ -154,14 +185,14 @@ mod tests {
     #[test]
     fn buckets_normalised() {
         // unsorted, duplicated, zero-containing input is cleaned up
-        let b = DynamicBatcher::new("mlp", vec![4, 0, 1, 4, 2], BatchPolicy::default());
+        let b = DynamicBatcher::new(KindId(0), vec![4, 0, 1, 4, 2], BatchPolicy::default());
         assert_eq!(b.max_bucket(), 4);
         assert_eq!(b.bucket_for(2), 2);
     }
 
     #[test]
     fn full_bucket_is_ready_immediately() {
-        let mut b = DynamicBatcher::new("mlp", buckets(), BatchPolicy::default());
+        let mut b = DynamicBatcher::new(KindId(0), buckets(), BatchPolicy::default());
         for i in 0..4 {
             b.push(req(i));
         }
@@ -175,7 +206,7 @@ mod tests {
     #[test]
     fn partial_batch_waits_for_deadline() {
         let policy = BatchPolicy { max_wait: Duration::from_millis(50), max_batch: usize::MAX };
-        let mut b = DynamicBatcher::new("mlp", buckets(), policy);
+        let mut b = DynamicBatcher::new(KindId(0), buckets(), policy);
         b.push(req(0));
         let now = Instant::now();
         assert!(!b.ready(now));
@@ -187,7 +218,7 @@ mod tests {
 
     #[test]
     fn arrival_order_preserved() {
-        let mut b = DynamicBatcher::new("mlp", buckets(), BatchPolicy::default());
+        let mut b = DynamicBatcher::new(KindId(0), buckets(), BatchPolicy::default());
         for i in 0..3 {
             b.push(req(i));
         }
@@ -200,7 +231,7 @@ mod tests {
     #[test]
     fn max_batch_caps_cut() {
         let policy = BatchPolicy { max_wait: Duration::ZERO, max_batch: 2 };
-        let mut b = DynamicBatcher::new("mlp", buckets(), policy);
+        let mut b = DynamicBatcher::new(KindId(0), buckets(), policy);
         for i in 0..5 {
             b.push(req(i));
         }
@@ -210,9 +241,28 @@ mod tests {
     }
 
     #[test]
+    fn cut_into_matches_cut_and_recycles() {
+        let mut a = DynamicBatcher::new(KindId(0), buckets(), BatchPolicy::default());
+        let mut b = DynamicBatcher::new(KindId(0), buckets(), BatchPolicy::default());
+        for i in 0..3 {
+            a.push(req(i));
+            b.push(req(i));
+        }
+        let plain = a.cut();
+        let mut buf = BatchBuf::new();
+        buf.requests.reserve(8);
+        let pooled = b.cut_into(buf);
+        assert_eq!(pooled.bucket, plain.bucket);
+        let ids = |p: &PendingBatch| p.requests.iter().map(|r| r.id.0).collect::<Vec<_>>();
+        assert_eq!(ids(&pooled), ids(&plain));
+        // the pooled cut reused the buffer's storage, not a fresh alloc
+        assert!(pooled.requests.capacity() >= 8);
+    }
+
+    #[test]
     fn deadline_shrinks() {
         let policy = BatchPolicy { max_wait: Duration::from_millis(10), max_batch: usize::MAX };
-        let mut b = DynamicBatcher::new("mlp", buckets(), policy);
+        let mut b = DynamicBatcher::new(KindId(0), buckets(), policy);
         assert!(b.next_deadline(Instant::now()).is_none());
         b.push(req(0));
         let d = b.next_deadline(Instant::now()).unwrap();

@@ -20,7 +20,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use crate::metrics::{LatencyHistogram, WindowTracker};
-use crate::runtime::gen_input;
+use crate::runtime::{gen_input, KindId};
 use crate::tuner::OnlineTuner;
 use crate::util::prng::Prng;
 use crate::util::stats;
@@ -141,23 +141,25 @@ pub struct LoadReport {
     pub mean_batch: f64,
 }
 
-/// Run a workload against a coordinator and aggregate the results.
+/// Run a workload against a coordinator and aggregate the results. The
+/// kind is interned once here; every generated request submits by
+/// [`crate::runtime::KindId`].
 pub fn run(coord: &Coordinator, cfg: &LoadgenConfig) -> Result<LoadReport> {
-    let shape = coord
+    let id = coord
         .router()
-        .item_shape(&cfg.kind)
-        .ok_or_else(|| anyhow!("kind '{}' not served", cfg.kind))?
-        .clone();
-    let dims = shape.dims();
+        .resolve(&cfg.kind)
+        .ok_or_else(|| anyhow!("kind '{}' not served", cfg.kind))?;
+    let dims = coord.router().item_shape_id(id).dims();
     match cfg.arrival {
-        Arrival::Closed { concurrency } => run_closed(coord, cfg, &dims, concurrency),
-        Arrival::Open { rate_rps } => run_open(coord, cfg, &dims, rate_rps),
+        Arrival::Closed { concurrency } => run_closed(coord, cfg, id, &dims, concurrency),
+        Arrival::Open { rate_rps } => run_open(coord, cfg, id, &dims, rate_rps),
     }
 }
 
 fn run_closed(
     coord: &Coordinator,
     cfg: &LoadgenConfig,
+    id: KindId,
     dims: &[usize],
     concurrency: usize,
 ) -> Result<LoadReport> {
@@ -170,7 +172,6 @@ fn run_closed(
         let handles: Vec<_> = (0..concurrency.max(1))
             .map(|w| {
                 let submitter = coord.submitter();
-                let kind = cfg.kind.clone();
                 let seed = worker_seed(cfg.seed, w);
                 let remaining = &remaining;
                 s.spawn(move || {
@@ -184,7 +185,7 @@ fn run_closed(
                     {
                         let input = gen_input(rng.below(TAG_MODULUS) as u32, dims, 1.0);
                         let t = Instant::now();
-                        match submitter.infer(&kind, input) {
+                        match submitter.infer_id(id, input) {
                             Ok(resp) if resp.is_ok() => {
                                 wall.push(t.elapsed().as_secs_f64());
                                 model.push(resp.queue_s + resp.execute_s);
@@ -209,10 +210,12 @@ fn run_closed(
 fn run_open(
     coord: &Coordinator,
     cfg: &LoadgenConfig,
+    id: KindId,
     dims: &[usize],
     rate_rps: f64,
 ) -> Result<LoadReport> {
     let plan = open_plan(cfg.seed, rate_rps, cfg.requests);
+    let submitter = coord.submitter();
     let t0 = Instant::now();
     let mut pending = Vec::with_capacity(cfg.requests);
     let mut errors = 0usize;
@@ -222,7 +225,7 @@ fn run_open(
             std::thread::sleep(Duration::from_secs_f64(next_arrival - now));
         }
         let input = gen_input(tag, dims, 1.0);
-        match coord.submit(&cfg.kind, input) {
+        match submitter.submit_id(id, input) {
             Ok(rx) => pending.push((rx, Instant::now())),
             Err(_) => errors += 1,
         }
@@ -386,17 +389,16 @@ pub fn run_mix_phase(
     if total <= 0.0 {
         bail!("mix phase: all weights zero");
     }
-    // kind → (dims, cumulative weight), resolved once
+    // kind → (interned id, dims, cumulative weight), resolved once
     let mut cum = 0.0f64;
-    let mut kinds: Vec<(String, Vec<usize>, f64)> = Vec::with_capacity(phase.weights.len());
+    let mut kinds: Vec<(String, KindId, Vec<usize>, f64)> = Vec::with_capacity(phase.weights.len());
     for (kind, w) in &phase.weights {
-        let shape = coord
+        let id = coord
             .router()
-            .item_shape(kind)
-            .ok_or_else(|| anyhow!("kind '{kind}' not served"))?
-            .clone();
+            .resolve(kind)
+            .ok_or_else(|| anyhow!("kind '{kind}' not served"))?;
         cum += w.max(0.0) / total;
-        kinds.push((kind.clone(), shape.dims(), cum));
+        kinds.push((kind.clone(), id, coord.router().item_shape_id(id).dims(), cum));
     }
 
     let remaining = AtomicUsize::new(phase.requests);
@@ -421,12 +423,12 @@ pub fn run_mix_phase(
                         let u = rng.f64();
                         let ki = kinds
                             .iter()
-                            .position(|(_, _, c)| u < *c)
+                            .position(|(_, _, _, c)| u < *c)
                             .unwrap_or(kinds.len() - 1);
                         let tag = rng.below(TAG_MODULUS) as u32;
-                        let input = gen_input(tag, &kinds[ki].1, 1.0);
+                        let input = gen_input(tag, &kinds[ki].2, 1.0);
                         let t = Instant::now();
-                        match submitter.infer(&kinds[ki].0, input) {
+                        match submitter.infer_id(kinds[ki].1, input) {
                             Ok(resp) if resp.is_ok() => samples.push((
                                 ki,
                                 t.elapsed().as_secs_f64(),
@@ -453,7 +455,7 @@ pub fn run_mix_phase(
     let per_kind = kinds
         .iter()
         .enumerate()
-        .map(|(i, (kind, _, _))| {
+        .map(|(i, (kind, _, _, _))| {
             let m: Vec<f64> =
                 samples.iter().filter(|&&(ki, _, _)| ki == i).map(|&(_, _, m)| m).collect();
             KindReport {

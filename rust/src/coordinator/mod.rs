@@ -25,6 +25,7 @@
 
 pub mod batcher;
 pub mod loadgen;
+pub mod pool;
 pub mod request;
 pub mod router;
 pub mod server;
@@ -32,6 +33,7 @@ pub mod worker;
 
 pub use batcher::{BatchPolicy, DynamicBatcher, PendingBatch};
 pub use loadgen::{Arrival, KindReport, LoadReport, LoadgenConfig, MixPhase, MixReport};
+pub use pool::{BatchBuf, BatchPool, PoolStats, BATCH_POOL_CAP};
 pub use request::{Request, RequestId, Response};
 pub use router::Router;
 pub use server::{Coordinator, CoordinatorConfig, Submitter};

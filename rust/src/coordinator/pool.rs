@@ -1,0 +1,173 @@
+//! Capacity-capped recycling pool for batch scratch buffers — the
+//! serving-layer mirror of the engine's scratch arenas: steady-state
+//! dispatch allocates nothing on the coordinator side.
+//!
+//! A [`BatchBuf`] carries the two growable allocations a
+//! [`super::batcher::PendingBatch`] needs: the member-request `Vec` and
+//! the gathered input scratch. The batching loop takes a buffer per cut,
+//! the executing lane returns it after scatter, and the pool keeps at
+//! most `cap` idle buffers (excess ones are dropped, so a burst can't
+//! pin its high-water memory forever). Buffers move by value, which
+//! makes a double-return unrepresentable; the counters make leaks
+//! observable ([`PoolStats::outstanding`] must return to zero once all
+//! lanes drain).
+
+use std::sync::Mutex;
+
+use crate::metrics::Counter;
+
+use super::request::Request;
+
+/// Idle buffers retained per coordinator (beyond this, returns drop).
+pub const BATCH_POOL_CAP: usize = 64;
+
+/// Recyclable scratch for one pending batch.
+#[derive(Default)]
+pub struct BatchBuf {
+    /// Member-request storage (cleared between uses).
+    pub requests: Vec<Request>,
+    /// Gathered model-input scratch (cleared between uses).
+    pub input: Vec<f32>,
+}
+
+impl BatchBuf {
+    /// A fresh, empty buffer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn clear(&mut self) {
+        self.requests.clear();
+        self.input.clear();
+    }
+}
+
+/// Point-in-time pool accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Buffers handed out ([`BatchPool::take`] calls).
+    pub taken: u64,
+    /// Takes served from an idle buffer instead of a fresh allocation.
+    pub reused: u64,
+    /// Buffers handed back ([`BatchPool::put`] calls).
+    pub returned: u64,
+    /// Returns dropped because the pool was at capacity.
+    pub dropped: u64,
+    /// Idle buffers currently pooled.
+    pub pooled: usize,
+}
+
+impl PoolStats {
+    /// Buffers taken but not yet returned (in-flight batches). Zero once
+    /// the coordinator and its lanes have drained — anything else is a
+    /// leak.
+    pub fn outstanding(&self) -> i64 {
+        self.taken as i64 - self.returned as i64
+    }
+}
+
+/// Thread-safe buffer pool shared by the batching loop and every lane.
+pub struct BatchPool {
+    slots: Mutex<Vec<BatchBuf>>,
+    cap: usize,
+    taken: Counter,
+    reused: Counter,
+    returned: Counter,
+    dropped: Counter,
+}
+
+impl BatchPool {
+    /// Pool retaining at most `cap` idle buffers. `cap = 0` recycles
+    /// nothing — every take allocates and every return drops, which is
+    /// exactly the seed loop's allocation behaviour (the reference data
+    /// plane runs on a zero-cap pool).
+    pub fn new(cap: usize) -> Self {
+        BatchPool {
+            slots: Mutex::new(Vec::new()),
+            cap,
+            taken: Counter::new(),
+            reused: Counter::new(),
+            returned: Counter::new(),
+            dropped: Counter::new(),
+        }
+    }
+
+    /// Take a buffer: a pooled one when available, else freshly
+    /// allocated (empty either way).
+    pub fn take(&self) -> BatchBuf {
+        self.taken.inc();
+        if let Some(buf) = self.slots.lock().unwrap().pop() {
+            self.reused.inc();
+            return buf;
+        }
+        BatchBuf::new()
+    }
+
+    /// Return a buffer after scatter; it is cleared (requests dropped,
+    /// capacity kept) and pooled, or dropped when the pool is full.
+    pub fn put(&self, mut buf: BatchBuf) {
+        buf.clear();
+        self.returned.inc();
+        let mut slots = self.slots.lock().unwrap();
+        if slots.len() < self.cap {
+            slots.push(buf);
+        } else {
+            self.dropped.inc();
+        }
+    }
+
+    /// Current accounting snapshot.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            taken: self.taken.get(),
+            reused: self.reused.get(),
+            returned: self.returned.get(),
+            dropped: self.dropped.get(),
+            pooled: self.slots.lock().unwrap().len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reuses_returned_buffers() {
+        let pool = BatchPool::new(4);
+        let mut a = pool.take();
+        a.input.resize(1024, 0.0);
+        pool.put(a);
+        let b = pool.take();
+        // cleared but capacity retained: the steady-state no-alloc path
+        assert!(b.input.is_empty() && b.requests.is_empty());
+        assert!(b.input.capacity() >= 1024);
+        let s = pool.stats();
+        assert_eq!((s.taken, s.reused, s.returned, s.dropped), (2, 1, 1, 0));
+        assert_eq!(s.outstanding(), 1);
+        pool.put(b);
+        assert_eq!(pool.stats().outstanding(), 0);
+    }
+
+    #[test]
+    fn capacity_cap_drops_excess() {
+        let pool = BatchPool::new(1);
+        let (a, b) = (pool.take(), pool.take());
+        pool.put(a);
+        pool.put(b);
+        let s = pool.stats();
+        assert_eq!(s.pooled, 1);
+        assert_eq!(s.dropped, 1);
+        assert_eq!(s.outstanding(), 0);
+    }
+
+    #[test]
+    fn zero_cap_pool_never_retains() {
+        let pool = BatchPool::new(0);
+        pool.put(pool.take());
+        let s = pool.stats();
+        assert_eq!(s.pooled, 0);
+        assert_eq!(s.reused, 0);
+        assert_eq!(s.dropped, 1);
+    }
+}

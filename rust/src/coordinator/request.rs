@@ -3,7 +3,8 @@
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
-use crate::runtime::Tensor;
+use crate::error::PallasError;
+use crate::runtime::{KindId, Tensor};
 
 /// Monotonically-assigned request identifier.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -14,8 +15,9 @@ pub struct RequestId(pub u64);
 pub struct Request {
     /// Assigned id.
     pub id: RequestId,
-    /// Model family ("mlp", "transformer").
-    pub kind: String,
+    /// Interned model family (resolved once at admission — no string
+    /// keys downstream of the router).
+    pub kind: KindId,
     /// Input tensor for ONE item; first dimension is the per-item row
     /// count (1 for mlp, `seq` for transformer).
     pub input: Tensor,
@@ -30,8 +32,9 @@ pub struct Request {
 pub struct Response {
     /// Request this answers.
     pub id: RequestId,
-    /// Output rows for this item only (padding stripped).
-    pub output: Result<Tensor, String>,
+    /// Output rows for this item only (padding stripped), or the typed
+    /// execution error.
+    pub output: Result<Tensor, PallasError>,
     /// Seconds spent queued before dispatch.
     pub queue_s: f64,
     /// Seconds of model execution for the carrying batch.
@@ -61,7 +64,10 @@ mod tests {
             bucket: 1,
         };
         assert!(ok.is_ok());
-        let err = Response { output: Err("boom".into()), ..ok };
+        let err = Response { output: Err(PallasError::Backend("boom".into())), ..ok };
         assert!(!err.is_ok());
+        // the typed error survives the response intact (the PR 5 error
+        // taxonomy, not a stringly round-trip)
+        assert_eq!(err.output.err(), Some(PallasError::Backend("boom".into())));
     }
 }

@@ -1,11 +1,12 @@
 //! Request router: validates incoming requests against the backend's
-//! serving catalog and routes them to the right per-model batching queue.
+//! serving catalog and interns their kind — the single point where a
+//! request's `String` kind becomes a dense [`KindId`]. Everything
+//! downstream (batchers, dispatch, lanes, backends) indexes by id.
 
-use std::collections::HashMap;
+use std::sync::Arc;
 
-use anyhow::{bail, Result};
-
-use crate::runtime::Catalog;
+use crate::error::{PallasError, PallasResult};
+use crate::runtime::{Catalog, KindId, KindTable};
 
 pub use crate::runtime::ItemShape;
 
@@ -13,65 +14,101 @@ use super::request::Request;
 
 /// Routes requests by model kind.
 pub struct Router {
-    shapes: HashMap<String, ItemShape>,
+    table: Arc<KindTable>,
+    /// Item-shape contracts, dense by [`KindId`].
+    shapes: Vec<ItemShape>,
 }
 
 impl Router {
     /// Derive routing tables from a backend [`Catalog`]; every served
     /// family must expose at least one batch bucket.
-    pub fn new(catalog: &Catalog) -> Result<Self> {
-        let mut shapes = HashMap::new();
+    pub fn new(catalog: &Catalog) -> PallasResult<Self> {
+        let mut shapes = Vec::with_capacity(catalog.models.len());
         for spec in &catalog.models {
             if spec.buckets.is_empty() {
-                bail!("kind '{}': catalog exposes no batch buckets", spec.kind);
+                return Err(PallasError::InvalidConfig(format!(
+                    "kind '{}': catalog exposes no batch buckets",
+                    spec.kind
+                )));
             }
-            shapes.insert(spec.kind.clone(), spec.item.clone());
+            shapes.push(spec.item.clone());
         }
-        Ok(Router { shapes })
+        Ok(Router { table: Arc::new(catalog.kind_table()), shapes })
     }
 
-    /// Families this router serves.
+    /// The interned kind table (shared with the batching loop and lanes).
+    pub fn table(&self) -> &Arc<KindTable> {
+        &self.table
+    }
+
+    /// Interned id for a family name, if served.
+    pub fn resolve(&self, kind: &str) -> Option<KindId> {
+        self.table.resolve(kind)
+    }
+
+    /// Families this router serves, sorted (precomputed at construction
+    /// — no per-call sort).
     pub fn kinds(&self) -> Vec<&str> {
-        let mut v: Vec<&str> = self.shapes.keys().map(String::as_str).collect();
-        v.sort_unstable();
-        v
+        self.table.sorted_names()
     }
 
     /// Shape contract for a family.
     pub fn item_shape(&self, kind: &str) -> Option<&ItemShape> {
-        self.shapes.get(kind)
+        self.table.resolve(kind).map(|id| &self.shapes[id.index()])
     }
 
-    /// Validate a request; returns the queue key (the kind) on success.
-    pub fn route(&self, req: &Request) -> Result<String> {
-        let Some(shape) = self.shapes.get(&req.kind) else {
-            bail!("unknown model kind '{}'", req.kind);
+    /// Shape contract for an interned family.
+    pub fn item_shape_id(&self, id: KindId) -> &ItemShape {
+        &self.shapes[id.index()]
+    }
+
+    /// Validate an input for a named family; returns the interned kind
+    /// (the admission step of [`super::Submitter::submit`]).
+    pub fn route(&self, kind: &str, input: &crate::runtime::Tensor) -> PallasResult<KindId> {
+        let Some(id) = self.table.resolve(kind) else {
+            return Err(PallasError::UnknownModel(kind.to_string()));
+        };
+        self.validate_id(id, input)?;
+        Ok(id)
+    }
+
+    /// Validate an input against an already-interned kind's contract.
+    pub fn validate_id(&self, id: KindId, input: &crate::runtime::Tensor) -> PallasResult<()> {
+        let Some(shape) = self.shapes.get(id.index()) else {
+            return Err(PallasError::UnknownModel(format!("kind id {}", id.0)));
         };
         let want = shape.dims();
-        if req.input.shape != want {
-            bail!(
+        if input.shape != want {
+            return Err(PallasError::Backend(format!(
                 "kind '{}': input shape {:?} != expected {:?}",
-                req.kind,
-                req.input.shape,
+                self.table.name(id),
+                input.shape,
                 want
-            );
+            )));
         }
         let n: usize = want.iter().product();
-        if req.input.data.len() != n {
-            bail!("kind '{}': data length {} != {}", req.kind, req.input.data.len(), n);
+        if input.data.len() != n {
+            return Err(PallasError::Backend(format!(
+                "kind '{}': data length {} != {}",
+                self.table.name(id),
+                input.data.len(),
+                n
+            )));
         }
-        Ok(req.kind.clone())
+        Ok(())
+    }
+
+    /// Validate a fully-formed request (id + input already interned).
+    pub fn validate(&self, req: &Request) -> PallasResult<()> {
+        self.validate_id(req.kind, &req.input)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::RequestId;
     use crate::runtime::{Manifest, Tensor};
     use std::path::Path;
-    use std::sync::mpsc::channel;
-    use std::time::Instant;
 
     fn catalog() -> Catalog {
         Manifest::parse(
@@ -90,16 +127,9 @@ mod tests {
         .unwrap()
     }
 
-    fn req(kind: &str, shape: Vec<usize>) -> Request {
+    fn input(shape: Vec<usize>) -> Tensor {
         let n: usize = shape.iter().product();
-        let (tx, _rx) = channel();
-        Request {
-            id: RequestId(0),
-            kind: kind.into(),
-            input: Tensor { shape, data: vec![0.0; n] },
-            enqueued: Instant::now(),
-            reply: tx,
-        }
+        Tensor { shape, data: vec![0.0; n] }
     }
 
     #[test]
@@ -114,9 +144,17 @@ mod tests {
     #[test]
     fn routes_valid_rejects_invalid() {
         let r = Router::new(&catalog()).unwrap();
-        assert_eq!(r.route(&req("mlp", vec![1, 8])).unwrap(), "mlp");
-        assert!(r.route(&req("mlp", vec![2, 8])).is_err());
-        assert!(r.route(&req("bert", vec![1, 8])).is_err());
+        let id = r.route("mlp", &input(vec![1, 8])).unwrap();
+        assert_eq!(Some(id), r.resolve("mlp"));
+        assert_eq!(r.item_shape_id(id).rows_per_item, 1);
+        assert!(r.route("mlp", &input(vec![2, 8])).is_err());
+        assert!(matches!(
+            r.route("bert", &input(vec![1, 8])),
+            Err(PallasError::UnknownModel(_))
+        ));
+        // id-level validation matches the name-level one
+        assert!(r.validate_id(id, &input(vec![1, 8])).is_ok());
+        assert!(r.validate_id(id, &input(vec![64, 16])).is_err());
     }
 
     #[test]

@@ -14,6 +14,19 @@
 //!   least-loaded lane hosting their kind, and [`Coordinator::apply_plan`]
 //!   swaps the lane set live (for the online re-tuner) without dropping
 //!   in-flight requests.
+//!
+//! Two data planes:
+//!
+//! * **Fast path** (default): kinds are interned to dense [`KindId`]s at
+//!   admission, the batching loop indexes a `Vec` of batchers and drains
+//!   the whole inbox backlog per wake-up, and batch buffers recycle
+//!   through a capacity-capped [`BatchPool`] — steady state does no
+//!   string hashing and no coordinator-side allocation.
+//! * **Reference** (`CoordinatorConfig::reference_loop`): the seed data
+//!   plane — string-keyed batcher map, one-message-at-a-time drain,
+//!   allocating cuts, zero-cap pool. Kept for bit-identity pins and the
+//!   `fastpath-vs-seed` bench ratio; batch-cut semantics (bucket ladder,
+//!   max-wait bound, FIFO per kind) are identical by construction.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -26,16 +39,18 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use crate::config::CpuPlatform;
-use crate::metrics::ServingMetrics;
+use crate::metrics::{KindCounters, ServingMetrics};
 use crate::runtime::{
-    BackendFactory, PjrtBackendFactory, SimBackendConfig, SimBackendFactory, Tensor,
+    BackendFactory, KindId, KindTable, PjrtBackendFactory, SimBackendConfig, SimBackendFactory,
+    Tensor,
 };
 use crate::sched::{pick_lane, LanePlan};
 
 use super::batcher::{BatchPolicy, DynamicBatcher};
+use super::pool::{BatchPool, PoolStats, BATCH_POOL_CAP};
 use super::request::{Request, RequestId, Response};
 use super::router::Router;
-use super::worker::WorkerLane;
+use super::worker::{LaneEnv, WorkerLane};
 
 /// Coordinator construction options.
 #[derive(Clone)]
@@ -50,12 +65,23 @@ pub struct CoordinatorConfig {
     /// Core-aware lane plan: one lane per assignment, pinned to its core
     /// slice and kinds. `None` keeps the unassigned-lane behaviour.
     pub plan: Option<LanePlan>,
+    /// Run the seed (reference) data plane: string-keyed batchers,
+    /// one-at-a-time ingress, allocating cuts, no buffer recycling.
+    /// Response semantics are identical to the fast path; only the
+    /// constant factors differ. Defaults to false.
+    pub reference_loop: bool,
 }
 
 impl CoordinatorConfig {
     /// Config over an explicit backend factory, with defaults.
     pub fn with_factory(factory: Arc<dyn BackendFactory>) -> Self {
-        CoordinatorConfig { factory, lanes: 1, policy: BatchPolicy::default(), plan: None }
+        CoordinatorConfig {
+            factory,
+            lanes: 1,
+            policy: BatchPolicy::default(),
+            plan: None,
+            reference_loop: false,
+        }
     }
 
     /// Simulation-backed config: serve model-zoo `kinds` on `platform`
@@ -85,6 +111,12 @@ impl CoordinatorConfig {
         self.plan = Some(plan);
         self
     }
+
+    /// Select the seed (reference) data plane.
+    pub fn with_reference_loop(mut self, on: bool) -> Self {
+        self.reference_loop = on;
+        self
+    }
 }
 
 /// Messages into the batching loop: requests, plus an explicit shutdown
@@ -101,9 +133,11 @@ pub struct Coordinator {
     metrics: Arc<ServingMetrics>,
     router: Arc<Router>,
     next_id: Arc<AtomicU64>,
+    kind_counters: Arc<[Arc<KindCounters>]>,
     shutdown: Arc<AtomicBool>,
     lanes: Arc<RwLock<Vec<WorkerLane>>>,
     factory: Arc<dyn BackendFactory>,
+    lane_env: LaneEnv,
     plan: Mutex<Option<LanePlan>>,
     loop_handle: Option<JoinHandle<()>>,
 }
@@ -116,22 +150,41 @@ pub struct Submitter {
     inbox: Sender<LoopMsg>,
     router: Arc<Router>,
     next_id: Arc<AtomicU64>,
-    metrics: Arc<ServingMetrics>,
+    /// Arrival counters dense by [`KindId`], interned at startup.
+    kind_counters: Arc<[Arc<KindCounters>]>,
 }
 
 impl Submitter {
-    /// Submit one item; returns the receiver for its response.
+    /// Intern a kind name once; hot submit loops resolve up front and
+    /// call [`Self::submit_id`] ever after.
+    pub fn resolve(&self, kind: &str) -> Option<KindId> {
+        self.router.resolve(kind)
+    }
+
+    /// Submit one item by name; returns the receiver for its response.
+    /// This is the admission point where the kind string is interned —
+    /// nothing downstream hashes or clones it.
     pub fn submit(&self, kind: &str, input: Tensor) -> Result<Receiver<Response>> {
+        let id = self.router.route(kind, &input)?;
+        self.submit_routed(id, input)
+    }
+
+    /// Submit one item by interned kind (the hot-loop entry point).
+    pub fn submit_id(&self, id: KindId, input: Tensor) -> Result<Receiver<Response>> {
+        self.router.validate_id(id, &input)?;
+        self.submit_routed(id, input)
+    }
+
+    fn submit_routed(&self, id: KindId, input: Tensor) -> Result<Receiver<Response>> {
         let (tx, rx) = channel();
         let req = Request {
             id: RequestId(self.next_id.fetch_add(1, Ordering::Relaxed)),
-            kind: kind.to_string(),
+            kind: id,
             input,
             enqueued: Instant::now(),
             reply: tx,
         };
-        self.router.route(&req)?;
-        self.metrics.kind(kind).arrivals.inc();
+        self.kind_counters[id.index()].arrivals.inc();
         self.inbox
             .send(LoopMsg::Req(req))
             .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
@@ -143,6 +196,12 @@ impl Submitter {
         let rx = self.submit(kind, input)?;
         Ok(rx.recv()?)
     }
+
+    /// Submit by interned kind and block for the response.
+    pub fn infer_id(&self, id: KindId, input: Tensor) -> Result<Response> {
+        let rx = self.submit_id(id, input)?;
+        Ok(rx.recv()?)
+    }
 }
 
 impl Coordinator {
@@ -151,7 +210,20 @@ impl Coordinator {
     pub fn start(cfg: CoordinatorConfig) -> Result<Self> {
         let catalog = cfg.factory.catalog()?;
         let router = Arc::new(Router::new(&catalog)?);
+        let table = Arc::clone(router.table());
         let metrics = Arc::new(ServingMetrics::new());
+        // dense per-kind counters, resolved once for every submitter
+        let kind_counters: Arc<[Arc<KindCounters>]> =
+            metrics.intern_kinds(table.names()).into();
+        // the reference plane gets a zero-cap pool: every cut allocates
+        // and every return drops, exactly the seed's behaviour
+        let pool_cap = if cfg.reference_loop { 0 } else { BATCH_POOL_CAP };
+        let lane_env = LaneEnv {
+            metrics: Arc::clone(&metrics),
+            table: Arc::clone(&table),
+            pool: Arc::new(BatchPool::new(pool_cap)),
+            reference: cfg.reference_loop,
+        };
 
         let lanes: Vec<WorkerLane> = match &cfg.plan {
             Some(plan) => {
@@ -164,47 +236,61 @@ impl Coordinator {
                 plan.lane_assignments()
                     .into_iter()
                     .map(|a| {
-                        WorkerLane::spawn_assigned(
-                            Arc::clone(&cfg.factory),
-                            a,
-                            Arc::clone(&metrics),
-                        )
+                        WorkerLane::spawn_assigned(Arc::clone(&cfg.factory), a, lane_env.clone())
                     })
                     .collect::<Result<_>>()?
             }
             None => (0..cfg.lanes.max(1))
-                .map(|i| WorkerLane::spawn(i, Arc::clone(&cfg.factory), Arc::clone(&metrics)))
+                .map(|i| WorkerLane::spawn(i, Arc::clone(&cfg.factory), lane_env.clone()))
                 .collect::<Result<_>>()?,
         };
         let lanes = Arc::new(RwLock::new(lanes));
-
-        let mut batchers: HashMap<String, DynamicBatcher> = catalog
-            .models
-            .iter()
-            .map(|m| {
-                (
-                    m.kind.clone(),
-                    DynamicBatcher::new(&m.kind, m.buckets.clone(), cfg.policy.clone()),
-                )
-            })
-            .collect();
 
         let (inbox, rx) = channel::<LoopMsg>();
         let shutdown = Arc::new(AtomicBool::new(false));
         let stop = Arc::clone(&shutdown);
         let loop_lanes = Arc::clone(&lanes);
-        let loop_handle = std::thread::Builder::new()
-            .name("coordinator-loop".into())
-            .spawn(move || batching_loop(rx, &mut batchers, &loop_lanes, &stop))?;
+        let builder = std::thread::Builder::new().name("coordinator-loop".into());
+        let loop_handle = if cfg.reference_loop {
+            let mut batchers: HashMap<String, DynamicBatcher> = catalog
+                .models
+                .iter()
+                .map(|m| {
+                    let id = table.resolve(&m.kind).expect("catalog kind interned");
+                    (m.kind.clone(), DynamicBatcher::new(id, m.buckets.clone(), cfg.policy.clone()))
+                })
+                .collect();
+            let loop_table = Arc::clone(&table);
+            builder.spawn(move || {
+                batching_loop_reference(rx, &mut batchers, &loop_lanes, &loop_table, &stop)
+            })?
+        } else {
+            // dense by KindId — the table interns catalog order, so slot
+            // i serves KindId(i)
+            let mut batchers: Vec<DynamicBatcher> = catalog
+                .models
+                .iter()
+                .enumerate()
+                .map(|(i, m)| {
+                    debug_assert_eq!(table.resolve(&m.kind), Some(KindId(i as u16)));
+                    DynamicBatcher::new(KindId(i as u16), m.buckets.clone(), cfg.policy.clone())
+                })
+                .collect();
+            let loop_pool = Arc::clone(&lane_env.pool);
+            builder
+                .spawn(move || batching_loop(rx, &mut batchers, &loop_lanes, &loop_pool, &stop))?
+        };
 
         Ok(Coordinator {
             inbox,
             metrics,
             router,
             next_id: Arc::new(AtomicU64::new(0)),
+            kind_counters,
             shutdown,
             lanes,
             factory: cfg.factory,
+            lane_env,
             plan: Mutex::new(cfg.plan),
             loop_handle: Some(loop_handle),
         })
@@ -230,7 +316,7 @@ impl Coordinator {
             .lane_assignments()
             .into_iter()
             .map(|a| {
-                WorkerLane::spawn_assigned(Arc::clone(&self.factory), a, Arc::clone(&self.metrics))
+                WorkerLane::spawn_assigned(Arc::clone(&self.factory), a, self.lane_env.clone())
             })
             .collect::<Result<_>>()?;
         let old = {
@@ -239,7 +325,7 @@ impl Coordinator {
         };
         // dropping the old lanes enqueues their shutdown *behind* any
         // batches they already accepted, so in-flight work completes
-        // before the join
+        // (and every pooled buffer returns) before the join
         drop(old);
         *current = Some(plan);
         Ok(())
@@ -267,7 +353,7 @@ impl Coordinator {
             inbox: self.inbox.clone(),
             router: Arc::clone(&self.router),
             next_id: Arc::clone(&self.next_id),
-            metrics: Arc::clone(&self.metrics),
+            kind_counters: Arc::clone(&self.kind_counters),
         }
     }
 
@@ -276,9 +362,20 @@ impl Coordinator {
         self.submitter().submit(kind, input)
     }
 
+    /// Submit one item by interned kind.
+    pub fn submit_id(&self, id: KindId, input: Tensor) -> Result<Receiver<Response>> {
+        self.submitter().submit_id(id, input)
+    }
+
     /// Submit and block for the response.
     pub fn infer(&self, kind: &str, input: Tensor) -> Result<Response> {
         let rx = self.submit(kind, input)?;
+        Ok(rx.recv()?)
+    }
+
+    /// Submit by interned kind and block for the response.
+    pub fn infer_id(&self, id: KindId, input: Tensor) -> Result<Response> {
+        let rx = self.submit_id(id, input)?;
         Ok(rx.recv()?)
     }
 
@@ -290,6 +387,23 @@ impl Coordinator {
     /// Router (shape contracts).
     pub fn router(&self) -> &Router {
         &self.router
+    }
+
+    /// The interned kind table.
+    pub fn kind_table(&self) -> &Arc<KindTable> {
+        self.router.table()
+    }
+
+    /// Batch-buffer pool accounting (leak diagnostics: `outstanding()`
+    /// returns to zero once the coordinator drains).
+    pub fn pool_stats(&self) -> PoolStats {
+        self.lane_env.pool.stats()
+    }
+
+    /// The shared batch-buffer pool (handle survives the coordinator —
+    /// tests use it to assert no buffer leaked across a full drain).
+    pub fn batch_pool(&self) -> Arc<BatchPool> {
+        Arc::clone(&self.lane_env.pool)
     }
 }
 
@@ -306,20 +420,23 @@ impl Drop for Coordinator {
     }
 }
 
-/// The serving loop: drain the inbox into per-kind batchers, cut batches
-/// when full or timed out, dispatch each to the least-loaded lane
-/// hosting its kind. With nothing queued the loop **blocks** on the
-/// inbox — no idle polling; a [`LoopMsg::Shutdown`] (or sender
-/// disconnect) flushes what remains and exits.
+/// The fast serving loop: block once on the inbox (or until the nearest
+/// batch deadline), drain the **whole backlog** into the dense per-kind
+/// batchers, then cut and dispatch. Cuts fill recycled pool buffers and
+/// go to the least-loaded lane hosting the kind. A
+/// [`LoopMsg::Shutdown`] (or sender disconnect) flushes what remains and
+/// exits — a shutdown seen mid-drain still flushes every request
+/// received before it.
 fn batching_loop(
     rx: Receiver<LoopMsg>,
-    batchers: &mut HashMap<String, DynamicBatcher>,
+    batchers: &mut [DynamicBatcher],
     lanes: &RwLock<Vec<WorkerLane>>,
+    pool: &BatchPool,
     shutdown: &AtomicBool,
 ) {
     loop {
         let now = Instant::now();
-        let wait = batchers.values().filter_map(|b| b.next_deadline(now)).min();
+        let wait = batchers.iter().filter_map(|b| b.next_deadline(now)).min();
         let msg = match wait {
             // nothing queued anywhere: block until work or shutdown
             None => match rx.recv() {
@@ -336,8 +453,75 @@ fn batching_loop(
         let mut stop = shutdown.load(Ordering::Acquire);
         match msg {
             Some(LoopMsg::Req(req)) => {
+                // router-validated: the id indexes the dense batcher slab
+                batchers[req.kind.index()].push(req);
+                for m in rx.try_iter() {
+                    match m {
+                        LoopMsg::Req(r) => batchers[r.kind.index()].push(r),
+                        LoopMsg::Shutdown => {
+                            stop = true;
+                            break;
+                        }
+                    }
+                }
+            }
+            Some(LoopMsg::Shutdown) => stop = true,
+            None => {}
+        }
+        let now = Instant::now();
+        let lanes = lanes.read().unwrap();
+        for b in batchers.iter_mut() {
+            while b.ready(now) {
+                dispatch(&lanes, b.cut_into(pool.take()));
+            }
+        }
+        if stop {
+            for b in batchers.iter_mut() {
+                while !b.is_empty() {
+                    dispatch(&lanes, b.cut_into(pool.take()));
+                }
+            }
+            return;
+        }
+    }
+}
+
+/// The seed serving loop, preserved as the reference data plane: same
+/// recv / drain / cut schedule, but every batcher touch goes through an
+/// owned `String` key (the seed's per-request clone + hash), ingress
+/// drains one `try_recv` at a time, and cuts allocate fresh storage.
+fn batching_loop_reference(
+    rx: Receiver<LoopMsg>,
+    batchers: &mut HashMap<String, DynamicBatcher>,
+    lanes: &RwLock<Vec<WorkerLane>>,
+    table: &KindTable,
+    shutdown: &AtomicBool,
+) {
+    let enqueue = |batchers: &mut HashMap<String, DynamicBatcher>, req: Request| {
+        // materialise the name, as the seed's Request.kind: String did
+        let key = table.name(req.kind).to_string();
+        if let Some(b) = batchers.get_mut(&key) {
+            b.push(req);
+        }
+    };
+    loop {
+        let now = Instant::now();
+        let wait = batchers.values().filter_map(|b| b.next_deadline(now)).min();
+        let msg = match wait {
+            None => match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => Some(LoopMsg::Shutdown),
+            },
+            Some(d) => match rx.recv_timeout(d) {
+                Ok(m) => Some(m),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => Some(LoopMsg::Shutdown),
+            },
+        };
+        let mut stop = shutdown.load(Ordering::Acquire);
+        match msg {
+            Some(LoopMsg::Req(req)) => {
                 enqueue(batchers, req);
-                // drain whatever else arrived
                 loop {
                     match rx.try_recv() {
                         Ok(LoopMsg::Req(r)) => enqueue(batchers, r),
@@ -370,17 +554,11 @@ fn batching_loop(
     }
 }
 
-fn enqueue(batchers: &mut HashMap<String, DynamicBatcher>, req: Request) {
-    if let Some(b) = batchers.get_mut(&req.kind) {
-        b.push(req);
-    }
-}
-
 /// Least-loaded dispatch over the lanes hosting the batch's kind
 /// (deterministic: ties go to the lowest lane index).
 fn dispatch(lanes: &[WorkerLane], batch: super::batcher::PendingBatch) {
     let loads: Vec<usize> = lanes.iter().map(WorkerLane::queued_items).collect();
-    match pick_lane(&loads, |i| lanes[i].hosts(&batch.kind)) {
+    match pick_lane(&loads, |i| lanes[i].hosts(batch.kind)) {
         Some(i) => lanes[i].submit(batch),
         // start()/apply_plan() guarantee every catalog kind is hosted;
         // if a regression slips through, keep serving rather than drop

@@ -9,6 +9,14 @@
 //! reflect the lane's slice, not the whole box. Every lane exports a
 //! queue-depth gauge (items queued or executing) that the coordinator's
 //! least-loaded dispatch reads.
+//!
+//! Fast-path contract: batches carry interned [`KindId`]s and pooled
+//! gather scratch. A lane gathers into the batch's recycled buffer, runs
+//! the backend by id (`execute_id`), scatters, and returns the buffer to
+//! the shared [`BatchPool`] — steady state allocates nothing on the
+//! coordinator side. `LaneEnv::reference` flips the lane to the seed
+//! data plane (string-keyed `execute`, no recycling) for bit-identity
+//! pins and bench baselines.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -18,19 +26,35 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::error::PallasError;
-use crate::metrics::{Gauge, ServingMetrics};
-use crate::runtime::{Backend, BackendFactory, Tensor};
+use crate::metrics::{Gauge, KindCounters, ServingMetrics};
+use crate::runtime::{Backend, BackendFactory, KindId, KindTable, Tensor};
 use crate::sched::LaneAssignment;
 
 use super::batcher::PendingBatch;
+use super::pool::{BatchBuf, BatchPool};
 use super::request::Response;
+
+/// Everything a lane shares with the coordinator: metrics, the interned
+/// kind table, the batch-buffer pool, and which data plane to run.
+#[derive(Clone)]
+pub struct LaneEnv {
+    /// Coordinator-wide metrics bundle.
+    pub metrics: Arc<ServingMetrics>,
+    /// Interned kind table (dense `KindId` space).
+    pub table: Arc<KindTable>,
+    /// Shared recycling pool batches return their buffers to.
+    pub pool: Arc<BatchPool>,
+    /// Run the seed (reference) data plane instead of the fast path.
+    pub reference: bool,
+}
 
 /// Handle to a running worker lane.
 pub struct WorkerLane {
     tx: Sender<LaneMsg>,
     handle: Option<JoinHandle<()>>,
     lane_id: usize,
-    kinds: Option<Vec<String>>,
+    /// Dense hosted-kind mask (`None` ⇒ hosts every kind).
+    hosts: Option<Box<[bool]>>,
     depth: Arc<Gauge>,
 }
 
@@ -43,35 +67,33 @@ impl WorkerLane {
     /// Spawn an unassigned lane: the backend runs on the whole machine
     /// and the lane accepts every catalog kind. Returns once the backend
     /// is ready (so startup failures surface synchronously).
-    pub fn spawn(
+    pub(crate) fn spawn(
         lane_id: usize,
         factory: Arc<dyn BackendFactory>,
-        metrics: Arc<ServingMetrics>,
+        env: LaneEnv,
     ) -> Result<Self> {
-        Self::spawn_inner(lane_id, factory, None, metrics)
+        Self::spawn_inner(lane_id, factory, None, env)
     }
 
     /// Spawn a core-aware lane: the backend is created for the lane's
     /// physical-core allocation (`BackendFactory::create_on`) and the
     /// lane only accepts its assigned kinds.
-    pub fn spawn_assigned(
+    pub(crate) fn spawn_assigned(
         factory: Arc<dyn BackendFactory>,
         assignment: LaneAssignment,
-        metrics: Arc<ServingMetrics>,
+        env: LaneEnv,
     ) -> Result<Self> {
         let lane_id = assignment.lane_id;
-        Self::spawn_inner(lane_id, factory, Some(assignment), metrics)
+        Self::spawn_inner(lane_id, factory, Some(assignment), env)
     }
 
     fn spawn_inner(
         lane_id: usize,
         factory: Arc<dyn BackendFactory>,
         assignment: Option<LaneAssignment>,
-        metrics: Arc<ServingMetrics>,
+        env: LaneEnv,
     ) -> Result<Self> {
-        let kinds = assignment
-            .as_ref()
-            .and_then(|a| if a.kinds.is_empty() { None } else { Some(a.kinds.clone()) });
+        let hosts = assignment.as_ref().and_then(|a| a.host_mask(&env.table));
         let depth = Arc::new(Gauge::new());
         let lane_depth = Arc::clone(&depth);
         let (tx, rx) = channel::<LaneMsg>();
@@ -93,10 +115,10 @@ impl WorkerLane {
                         return;
                     }
                 };
-                lane_loop(&*backend, rx, &metrics, &lane_depth);
+                lane_loop(&*backend, rx, &env, &lane_depth);
             })?;
         ready_rx.recv()??;
-        Ok(WorkerLane { tx, handle: Some(handle), lane_id, kinds, depth })
+        Ok(WorkerLane { tx, handle: Some(handle), lane_id, hosts, depth })
     }
 
     /// Queue a batch for execution.
@@ -112,11 +134,11 @@ impl WorkerLane {
     }
 
     /// True when this lane executes batches for `kind` (unassigned lanes
-    /// host everything).
-    pub fn hosts(&self, kind: &str) -> bool {
-        match &self.kinds {
+    /// host everything). O(1): a dense mask indexed by [`KindId`].
+    pub fn hosts(&self, kind: KindId) -> bool {
+        match &self.hosts {
             None => true,
-            Some(ks) => ks.iter().any(|k| k == kind),
+            Some(mask) => mask.get(kind.index()).copied().unwrap_or(false),
         }
     }
 
@@ -128,6 +150,8 @@ impl WorkerLane {
 
 impl Drop for WorkerLane {
     fn drop(&mut self) {
+        // Shutdown queues *behind* any in-flight batches (FIFO channel),
+        // so dropping a lane never strands a pooled buffer.
         let _ = self.tx.send(LaneMsg::Shutdown);
         if let Some(h) = self.handle.take() {
             let _ = h.join();
@@ -135,48 +159,60 @@ impl Drop for WorkerLane {
     }
 }
 
-fn lane_loop(
-    backend: &dyn Backend,
-    rx: Receiver<LaneMsg>,
-    metrics: &ServingMetrics,
-    depth: &Gauge,
-) {
+fn lane_loop(backend: &dyn Backend, rx: Receiver<LaneMsg>, env: &LaneEnv, depth: &Gauge) {
+    // resolve per-kind counters once — no string hashing per batch
+    let kind_counters = env.metrics.intern_kinds(env.table.names());
     while let Ok(msg) = rx.recv() {
         match msg {
             LaneMsg::Shutdown => return,
             LaneMsg::Batch(batch) => {
                 let items = batch.requests.len() as u64;
-                execute_batch(backend, batch, metrics);
+                execute_batch(backend, batch, env, &kind_counters);
                 depth.sub(items);
             }
         }
     }
 }
 
-/// Execute one batch: gather rows → run the bucketed backend → scatter.
-pub fn execute_batch(backend: &dyn Backend, batch: PendingBatch, metrics: &ServingMetrics) {
+/// Execute one batch: gather rows into the pooled scratch → run the
+/// bucketed backend → scatter → return the buffer to the pool.
+fn execute_batch(
+    backend: &dyn Backend,
+    batch: PendingBatch,
+    env: &LaneEnv,
+    kind_counters: &[Arc<KindCounters>],
+) {
     let dispatch_time = Instant::now();
-    let n = batch.requests.len();
-    let kind_counters = metrics.kind(&batch.kind);
+    let PendingBatch { kind, bucket, mut requests, input: mut data } = batch;
+    let n = requests.len();
+    let counters = &kind_counters[kind.index()];
+    let name = env.table.name(kind);
 
-    // gather: rows of each item, zero-padding up to the bucket
-    let rows_per_item = batch.requests[0].input.shape[0];
-    let feat: usize = batch.requests[0].input.shape[1..].iter().product();
-    let mut data = Vec::with_capacity(batch.bucket * rows_per_item * feat);
-    for r in &batch.requests {
+    // gather: rows of each item into the recycled buffer, zero-padding
+    // up to the bucket (capacity survives from previous batches)
+    let rows_per_item = requests[0].input.shape[0];
+    let feat: usize = requests[0].input.shape[1..].iter().product();
+    data.clear();
+    data.reserve(bucket * rows_per_item * feat);
+    for r in &requests {
         data.extend_from_slice(&r.input.data);
     }
-    data.resize(batch.bucket * rows_per_item * feat, 0.0);
-    let mut shape = batch.requests[0].input.shape.clone();
-    shape[0] = batch.bucket * rows_per_item;
+    data.resize(bucket * rows_per_item * feat, 0.0);
+    let mut shape = requests[0].input.shape.clone();
+    shape[0] = bucket * rows_per_item;
     let x = Tensor { shape, data };
 
-    let result = backend.execute(&batch.kind, batch.bucket, x);
-    metrics.batches.inc();
-    kind_counters.batches.inc();
-    kind_counters.batch_items.add(n as u64);
-    if batch.bucket > n {
-        metrics.padded.add((batch.bucket - n) as u64);
+    let result = if env.reference {
+        // seed data plane: per-batch string-keyed table lookup
+        backend.execute(name, bucket, &x)
+    } else {
+        backend.execute_id(kind, name, bucket, &x)
+    };
+    env.metrics.batches.inc();
+    counters.batches.inc();
+    counters.batch_items.add(n as u64);
+    if bucket > n {
+        env.metrics.padded.add((bucket - n) as u64);
     }
 
     // scatter: slice each item's rows back out
@@ -184,44 +220,47 @@ pub fn execute_batch(backend: &dyn Backend, batch: PendingBatch, metrics: &Servi
         Ok(exec) => {
             // model time: wall-clock on real backends, simulated on sim
             let execute_s = exec.model_time_s;
-            metrics.execute_latency.record(execute_s);
+            env.metrics.execute_latency.record(execute_s);
             let out = exec.output;
             let out_rows: usize = out.shape[0];
             let out_feat: usize = out.shape[1..].iter().product();
-            let rows_per_out_item = out_rows / batch.bucket;
-            for (i, req) in batch.requests.into_iter().enumerate() {
+            let rows_per_out_item = out_rows / bucket;
+            let mut item_shape = out.shape.clone();
+            item_shape[0] = rows_per_out_item;
+            for (i, req) in requests.drain(..).enumerate() {
                 let lo = i * rows_per_out_item * out_feat;
                 let hi = lo + rows_per_out_item * out_feat;
-                let mut item_shape = out.shape.clone();
-                item_shape[0] = rows_per_out_item;
                 let queue_s = dispatch_time.duration_since(req.enqueued).as_secs_f64();
-                metrics.requests.inc();
-                kind_counters.completed.inc();
-                metrics.queue_latency.record(queue_s);
-                metrics.request_latency.record(queue_s + execute_s);
+                env.metrics.requests.inc();
+                counters.completed.inc();
+                env.metrics.queue_latency.record(queue_s);
+                env.metrics.request_latency.record(queue_s + execute_s);
+                let item = out.data[lo..hi].to_vec();
                 let _ = req.reply.send(Response {
                     id: req.id,
-                    output: Ok(Tensor { shape: item_shape, data: out.data[lo..hi].to_vec() }),
+                    output: Ok(Tensor { shape: item_shape.clone(), data: item }),
                     queue_s,
                     execute_s,
-                    bucket: batch.bucket,
+                    bucket,
                 });
             }
         }
         Err(e) => {
             let execute_s = dispatch_time.elapsed().as_secs_f64();
-            let msg = e.to_string();
-            for req in batch.requests {
-                metrics.requests.inc();
-                kind_counters.completed.inc();
+            for req in requests.drain(..) {
+                env.metrics.requests.inc();
+                counters.completed.inc();
                 let _ = req.reply.send(Response {
                     id: req.id,
-                    output: Err(msg.clone()),
+                    output: Err(e.clone()),
                     queue_s: 0.0,
                     execute_s,
-                    bucket: batch.bucket,
+                    bucket,
                 });
             }
         }
     }
+
+    // hand the (drained) request Vec and gather scratch back to the pool
+    env.pool.put(BatchBuf { requests, input: x.data });
 }

@@ -619,6 +619,18 @@ fn expected_bench_cases(suite: &str) -> Vec<String> {
             v.push("coldstart/3-kinds/parallel".to_string());
             v
         }
+        "serving" => {
+            let mut v = Vec::new();
+            for regime in ["unassigned", "core-aware"] {
+                for plane in ["seed", "fastpath"] {
+                    v.push(format!("saturation/{regime}/{plane}"));
+                }
+                v.push(format!("fixed-load/{regime}/p50"));
+                v.push(format!("fixed-load/{regime}/p99"));
+            }
+            v.push("fastpath-vs-seed".to_string());
+            v
+        }
         _ => Vec::new(),
     }
 }

@@ -205,6 +205,14 @@ impl ServingMetrics {
         Arc::clone(g.entry(kind.to_string()).or_default())
     }
 
+    /// Pre-intern counters for a dense kind list: `out[i]` is the
+    /// counter set for kind `names[i]` (the serving path resolves the
+    /// whole [`crate::runtime::KindTable`] once at startup and indexes
+    /// by `KindId` ever after — no string hashing per request).
+    pub fn intern_kinds(&self, names: &[String]) -> Vec<Arc<KindCounters>> {
+        names.iter().map(|n| self.kind(n)).collect()
+    }
+
     /// Kinds that have recorded any activity, sorted.
     pub fn kinds_seen(&self) -> Vec<String> {
         let g = self.per_kind.lock().unwrap();
@@ -442,6 +450,16 @@ mod tests {
         m.kind("resnet50").completed.inc();
         assert_eq!(m.kind("wide_deep").arrivals.get(), 2);
         assert_eq!(m.kinds_seen(), vec!["resnet50".to_string(), "wide_deep".to_string()]);
+    }
+
+    #[test]
+    fn intern_kinds_shares_counters() {
+        let m = ServingMetrics::new();
+        let dense = m.intern_kinds(&["wide_deep".to_string(), "ncf".to_string()]);
+        dense[1].arrivals.inc();
+        // the dense slot and the string-keyed lookup are the same counters
+        assert_eq!(m.kind("ncf").arrivals.get(), 1);
+        assert_eq!(m.kind("wide_deep").arrivals.get(), 0);
     }
 
     #[test]

@@ -19,6 +19,83 @@ use crate::sched::LaneAssignment;
 
 use super::artifact::Tensor;
 
+/// Interned model-family identifier: the position of the kind in its
+/// [`Catalog`]'s model list. Dense and stable for the catalog's
+/// lifetime, so the serving data plane indexes `Vec`s by it instead of
+/// hashing (and cloning) `String` keys on every hop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct KindId(pub u16);
+
+impl KindId {
+    /// The id as a dense `Vec` index.
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Dense kind-name table derived from a [`Catalog`]: names in catalog
+/// order (index = [`KindId`]) plus a name-sorted permutation, so
+/// [`KindTable::resolve`] is an allocation-free binary search and the
+/// sorted listing needs no per-call sort.
+#[derive(Debug, Clone)]
+pub struct KindTable {
+    names: Vec<String>,
+    /// Indices into `names`, sorted by the name they point at.
+    by_name: Vec<u16>,
+}
+
+impl KindTable {
+    /// Intern `names` in the given (catalog) order.
+    pub fn new(names: Vec<String>) -> Self {
+        assert!(
+            names.len() <= u16::MAX as usize,
+            "kind table overflows u16 ({} kinds)",
+            names.len()
+        );
+        let mut by_name: Vec<u16> = (0..names.len() as u16).collect();
+        by_name.sort_unstable_by(|&a, &b| names[a as usize].cmp(&names[b as usize]));
+        KindTable { names, by_name }
+    }
+
+    /// Interned id for `name`, if present (binary search, no allocation).
+    pub fn resolve(&self, name: &str) -> Option<KindId> {
+        self.by_name
+            .binary_search_by(|&i| self.names[i as usize].as_str().cmp(name))
+            .ok()
+            .map(|pos| KindId(self.by_name[pos]))
+    }
+
+    /// The name behind an id.
+    pub fn name(&self, id: KindId) -> &str {
+        &self.names[id.index()]
+    }
+
+    /// All names, in id (catalog) order.
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// All names, sorted — precomputed at construction, no per-call sort.
+    pub fn sorted_names(&self) -> Vec<&str> {
+        self.by_name.iter().map(|&i| self.names[i as usize].as_str()).collect()
+    }
+
+    /// Number of interned kinds.
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    /// True when no kind is interned.
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// All ids, in order.
+    pub fn ids(&self) -> impl Iterator<Item = KindId> {
+        (0..self.names.len() as u16).map(KindId)
+    }
+}
+
 /// Per-item input contract for one served model family: an item occupies
 /// `rows_per_item` rows of the batch dimension and has `feature_dims`
 /// trailing dimensions.
@@ -75,6 +152,12 @@ impl Catalog {
         v.sort_unstable();
         v
     }
+
+    /// Intern the served kinds: index = position in `models`, the id
+    /// space the whole serving data plane shares.
+    pub fn kind_table(&self) -> KindTable {
+        KindTable::new(self.models.iter().map(|m| m.kind.clone()).collect())
+    }
 }
 
 /// Result of executing one batch.
@@ -94,8 +177,25 @@ pub trait Backend {
 
     /// Execute one gathered batch `x` for `kind` at the given bucket; the
     /// first dimension of `x` is `bucket × rows_per_item`, zero-padded
-    /// past the live requests.
-    fn execute(&self, kind: &str, bucket: usize, x: Tensor) -> PallasResult<Execution>;
+    /// past the live requests. `x` is borrowed so callers can recycle
+    /// the gather buffer after the call.
+    fn execute(&self, kind: &str, bucket: usize, x: &Tensor) -> PallasResult<Execution>;
+
+    /// Interned-id fast path: like [`Backend::execute`], but keyed by the
+    /// [`KindId`] of `kind` in the backend's own catalog, so backends with
+    /// dense per-id tables skip the name lookup entirely. The default
+    /// forwards to the name path (correct for any backend; `kind` must be
+    /// the name behind `id`).
+    fn execute_id(
+        &self,
+        id: KindId,
+        kind: &str,
+        bucket: usize,
+        x: &Tensor,
+    ) -> PallasResult<Execution> {
+        let _ = id;
+        self.execute(kind, bucket, x)
+    }
 }
 
 /// Shared descriptor + per-lane constructor for a backend.
@@ -151,5 +251,41 @@ mod tests {
         assert_eq!(c.kinds(), vec!["a", "b"]);
         assert_eq!(c.get("a").unwrap().item.rows_per_item, 2);
         assert!(c.get("z").is_none());
+    }
+
+    #[test]
+    fn kind_table_interns_catalog_order() {
+        let t = KindTable::new(vec!["wide_deep".into(), "ncf".into(), "transformer".into()]);
+        assert_eq!(t.len(), 3);
+        // ids follow catalog order, not sort order
+        assert_eq!(t.resolve("wide_deep"), Some(KindId(0)));
+        assert_eq!(t.resolve("ncf"), Some(KindId(1)));
+        assert_eq!(t.resolve("transformer"), Some(KindId(2)));
+        assert_eq!(t.resolve("bert"), None);
+        assert_eq!(t.name(KindId(1)), "ncf");
+        assert_eq!(t.sorted_names(), vec!["ncf", "transformer", "wide_deep"]);
+        assert_eq!(t.ids().collect::<Vec<_>>(), vec![KindId(0), KindId(1), KindId(2)]);
+    }
+
+    #[test]
+    fn kind_table_from_catalog() {
+        let c = Catalog {
+            models: vec![
+                ModelSpec {
+                    kind: "b".into(),
+                    item: ItemShape { rows_per_item: 1, feature_dims: vec![4] },
+                    buckets: vec![1],
+                },
+                ModelSpec {
+                    kind: "a".into(),
+                    item: ItemShape { rows_per_item: 1, feature_dims: vec![4] },
+                    buckets: vec![1],
+                },
+            ],
+        };
+        let t = c.kind_table();
+        assert_eq!(t.names(), &["b".to_string(), "a".to_string()]);
+        assert_eq!(t.resolve("a"), Some(KindId(1)));
+        assert_eq!(t.sorted_names(), vec!["a", "b"]);
     }
 }

@@ -176,9 +176,11 @@ impl Backend for PjrtBackend {
         "pjrt"
     }
 
-    fn execute(&self, kind: &str, bucket: usize, x: Tensor) -> PallasResult<Execution> {
+    fn execute(&self, kind: &str, bucket: usize, x: &Tensor) -> PallasResult<Execution> {
         let t0 = Instant::now();
-        let output = self.rt.execute_x(&format!("{kind}_b{bucket}"), x)?;
+        // the PJRT entry point consumes its input; one copy here keeps
+        // the coordinator's gather buffer recyclable on every backend
+        let output = self.rt.execute_x(&format!("{kind}_b{bucket}"), x.clone())?;
         Ok(Execution { output, model_time_s: t0.elapsed().as_secs_f64() })
     }
 }

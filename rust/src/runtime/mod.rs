@@ -19,6 +19,8 @@ pub mod client;
 pub mod sim_backend;
 
 pub use artifact::{gen_input, ArtifactEntry, Manifest, Tensor};
-pub use backend::{Backend, BackendFactory, Catalog, Execution, ItemShape, ModelSpec};
+pub use backend::{
+    Backend, BackendFactory, Catalog, Execution, ItemShape, KindId, KindTable, ModelSpec,
+};
 pub use client::{ModelRuntime, PjrtBackend, PjrtBackendFactory};
 pub use sim_backend::{SimBackend, SimBackendConfig, SimBackendFactory, SIM_OUT_FEATURES};

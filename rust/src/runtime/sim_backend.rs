@@ -21,7 +21,7 @@ use crate::tuner;
 use crate::tuner::parallel::{default_jobs, par_map};
 
 use super::artifact::Tensor;
-use super::backend::{Backend, BackendFactory, Catalog, Execution, ItemShape, ModelSpec};
+use super::backend::{Backend, BackendFactory, Catalog, Execution, ItemShape, KindId, ModelSpec};
 
 /// Output features per served item row (the simulator's stand-in "head").
 pub const SIM_OUT_FEATURES: usize = 8;
@@ -91,9 +91,19 @@ pub fn item_shape_for(kind: &str) -> ItemShape {
 
 /// The pre-simulated latency table + shape contracts, shared across
 /// lanes (the sim backend is stateless at execute time).
+///
+/// Latencies are held twice: a `(name, bucket)`-keyed map for the
+/// name-based APIs, and a dense `[KindId][bucket-index]` grid over the
+/// factory's full kind list (the coordinator's id space) for the
+/// serving fast path — `None` rows are kinds this table does not host
+/// (a core-aware lane serving a subset).
 struct SimTables {
     latency: HashMap<(String, usize), f64>,
     shapes: HashMap<String, ItemShape>,
+    /// The normalised bucket ladder the dense grid is indexed by.
+    buckets: Vec<usize>,
+    /// Per-id latency rows, aligned with `buckets`.
+    dense: Vec<Option<Vec<f64>>>,
 }
 
 impl SimTables {
@@ -103,8 +113,14 @@ impl SimTables {
     /// workers through the factory's memo-cache, so identical design
     /// points across lanes/re-plans simulate once. The table contents
     /// are a pure function of the config (any `jobs`, warm or cold
-    /// cache: same bits).
-    fn build(cfg: &SimBackendConfig, cache: &Arc<SimCache>) -> PallasResult<Self> {
+    /// cache: same bits). `id_space` is the factory's full kind list —
+    /// the dense grid is indexed by the coordinator's [`KindId`]s even
+    /// when `cfg.kinds` is a lane's subset.
+    fn build(
+        cfg: &SimBackendConfig,
+        cache: &Arc<SimCache>,
+        id_space: &[String],
+    ) -> PallasResult<Self> {
         let buckets = cfg.normalized_buckets()?;
         let mut shapes = HashMap::new();
         let mut grid: Vec<(String, usize)> = Vec::new();
@@ -138,7 +154,28 @@ impl SimTables {
             let (key, lat) = row?;
             latency.insert(key, lat);
         }
-        Ok(SimTables { latency, shapes })
+        let dense = id_space
+            .iter()
+            .map(|name| {
+                if !shapes.contains_key(name) {
+                    return None; // kind not hosted by this table
+                }
+                buckets
+                    .iter()
+                    .map(|&b| latency.get(&(name.clone(), b)).copied())
+                    .collect::<Option<Vec<f64>>>()
+            })
+            .collect();
+        Ok(SimTables { latency, shapes, buckets, dense })
+    }
+
+    /// Dense-grid lookup for the serving fast path; `None` when the id
+    /// is outside this table's id space, unhosted, or the bucket is not
+    /// on the ladder.
+    fn dense_latency(&self, id: KindId, bucket: usize) -> Option<f64> {
+        let row = self.dense.get(id.index())?.as_ref()?;
+        let i = self.buckets.binary_search(&bucket).ok()?;
+        Some(row[i])
     }
 }
 
@@ -213,7 +250,7 @@ impl SimBackendFactory {
         if let Some(t) = guard.as_ref() {
             return Ok(Arc::clone(t));
         }
-        let t = Arc::new(SimTables::build(&self.cfg, &self.cache)?);
+        let t = Arc::new(SimTables::build(&self.cfg, &self.cache, &self.cfg.kinds)?);
         *guard = Some(Arc::clone(&t));
         Ok(t)
     }
@@ -260,7 +297,9 @@ impl SimBackendFactory {
             policy: self.cfg.policy,
             jobs: self.cfg.jobs,
         };
-        let t = Arc::new(SimTables::build(&sub, &self.cache)?);
+        // dense rows stay aligned with the factory's full kind list (the
+        // coordinator id space), even though the lane hosts a subset
+        let t = Arc::new(SimTables::build(&sub, &self.cache, &self.cfg.kinds)?);
         guard.insert(key, Arc::clone(&t));
         Ok(t)
     }
@@ -303,33 +342,18 @@ impl SimBackend {
     /// [`SimBackendFactory`] share one table instead).
     pub fn new(cfg: SimBackendConfig) -> PallasResult<Self> {
         let cache = Arc::new(SimCache::new());
-        Ok(SimBackend { tables: Arc::new(SimTables::build(&cfg, &cache)?) })
+        let id_space = cfg.kinds.clone();
+        Ok(SimBackend { tables: Arc::new(SimTables::build(&cfg, &cache, &id_space)?) })
     }
 
     /// Pre-simulated latency for a (kind, bucket) pair, if configured.
     pub fn simulated_latency(&self, kind: &str, bucket: usize) -> Option<f64> {
         self.tables.latency.get(&(kind.to_string(), bucket)).copied()
     }
-}
 
-/// The fixed projection weight for input feature `i` → output feature `j`.
-/// Row-local and batch-independent by construction.
-fn weight(i: usize, j: usize) -> f32 {
-    ((i as f32) * 0.37 + (j as f32) * 1.13 + 0.5).sin()
-}
-
-impl Backend for SimBackend {
-    fn name(&self) -> &'static str {
-        "sim"
-    }
-
-    fn execute(&self, kind: &str, bucket: usize, x: Tensor) -> PallasResult<Execution> {
-        if !self.tables.shapes.contains_key(kind) {
-            return Err(PallasError::Backend(format!("sim backend: kind '{kind}' not served")));
-        }
-        let model_time_s = self.simulated_latency(kind, bucket).ok_or_else(|| {
-            PallasError::Backend(format!("sim backend: no bucket {bucket} for '{kind}'"))
-        })?;
+    /// The deterministic projection "numerics" shared by the name and
+    /// interned-id execute paths.
+    fn project(&self, kind: &str, model_time_s: f64, x: &Tensor) -> PallasResult<Execution> {
         if x.shape.is_empty() {
             return Err(PallasError::Backend(format!("sim backend: scalar input for '{kind}'")));
         }
@@ -358,6 +382,44 @@ impl Backend for SimBackend {
             output: Tensor { shape: vec![rows, SIM_OUT_FEATURES], data: out },
             model_time_s,
         })
+    }
+}
+
+/// The fixed projection weight for input feature `i` → output feature `j`.
+/// Row-local and batch-independent by construction.
+fn weight(i: usize, j: usize) -> f32 {
+    ((i as f32) * 0.37 + (j as f32) * 1.13 + 0.5).sin()
+}
+
+impl Backend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn execute(&self, kind: &str, bucket: usize, x: &Tensor) -> PallasResult<Execution> {
+        if !self.tables.shapes.contains_key(kind) {
+            return Err(PallasError::Backend(format!("sim backend: kind '{kind}' not served")));
+        }
+        let model_time_s = self.simulated_latency(kind, bucket).ok_or_else(|| {
+            PallasError::Backend(format!("sim backend: no bucket {bucket} for '{kind}'"))
+        })?;
+        self.project(kind, model_time_s, x)
+    }
+
+    fn execute_id(
+        &self,
+        id: KindId,
+        kind: &str,
+        bucket: usize,
+        x: &Tensor,
+    ) -> PallasResult<Execution> {
+        // dense hit: no name hashing, no key allocation. Misses (foreign
+        // id space, unhosted kind, off-ladder bucket) fall back to the
+        // name path, which owns the error wording.
+        match self.tables.dense_latency(id, bucket) {
+            Some(model_time_s) => self.project(kind, model_time_s, x),
+            None => self.execute(kind, bucket, x),
+        }
     }
 }
 
@@ -391,8 +453,8 @@ mod tests {
     fn execute_is_deterministic() {
         let b = backend(&["wide_deep"]);
         let x = gen_input(3, &[2, 64], 1.0);
-        let a = b.execute("wide_deep", 2, x.clone()).unwrap();
-        let c = b.execute("wide_deep", 2, x).unwrap();
+        let a = b.execute("wide_deep", 2, &x).unwrap();
+        let c = b.execute("wide_deep", 2, &x).unwrap();
         assert_eq!(a.output, c.output);
         assert_eq!(a.model_time_s, c.model_time_s);
         assert_eq!(a.output.shape, vec![2, SIM_OUT_FEATURES]);
@@ -404,13 +466,13 @@ mod tests {
         // the invariant that legalises dynamic batching
         let b = backend(&["wide_deep"]);
         let full = gen_input(9, &[4, 64], 1.0);
-        let batched = b.execute("wide_deep", 4, full.clone()).unwrap().output;
+        let batched = b.execute("wide_deep", 4, &full).unwrap().output;
         for r in 0..4 {
             let row = Tensor {
                 shape: vec![1, 64],
                 data: full.data[r * 64..(r + 1) * 64].to_vec(),
             };
-            let solo = b.execute("wide_deep", 1, row).unwrap().output;
+            let solo = b.execute("wide_deep", 1, &row).unwrap().output;
             for j in 0..SIM_OUT_FEATURES {
                 assert_eq!(batched.data[r * SIM_OUT_FEATURES + j], solo.data[j], "r={r} j={j}");
             }
@@ -423,9 +485,9 @@ mod tests {
         let one = gen_input(5, &[1, 64], 1.0);
         let mut padded = one.data.clone();
         padded.resize(4 * 64, 0.0);
-        let solo = b.execute("wide_deep", 1, one).unwrap().output;
+        let solo = b.execute("wide_deep", 1, &one).unwrap().output;
         let batched = b
-            .execute("wide_deep", 4, Tensor { shape: vec![4, 64], data: padded })
+            .execute("wide_deep", 4, &Tensor { shape: vec![4, 64], data: padded })
             .unwrap()
             .output;
         assert_eq!(&batched.data[..SIM_OUT_FEATURES], &solo.data[..]);
@@ -435,10 +497,10 @@ mod tests {
     fn execute_rejects_bad_inputs() {
         let b = backend(&["wide_deep"]);
         let x = gen_input(1, &[1, 64], 1.0);
-        assert!(b.execute("resnet50", 1, x.clone()).is_err()); // kind not served
-        assert!(b.execute("wide_deep", 3, x).is_err()); // bucket not compiled
+        assert!(b.execute("resnet50", 1, &x).is_err()); // kind not served
+        assert!(b.execute("wide_deep", 3, &x).is_err()); // bucket not compiled
         let bad = Tensor { shape: vec![2, 64], data: vec![0.0; 64] };
-        assert!(b.execute("wide_deep", 2, bad).is_err()); // length mismatch
+        assert!(b.execute("wide_deep", 2, &bad).is_err()); // length mismatch
     }
 
     #[test]
@@ -472,8 +534,8 @@ mod tests {
         let whole = f.create().unwrap();
         let slice = f.create_on(&assignment(0, 4, &["resnet50"])).unwrap();
         let x = gen_input(1, &[4, 64], 1.0);
-        let t_whole = whole.execute("resnet50", 4, x.clone()).unwrap().model_time_s;
-        let t_slice = slice.execute("resnet50", 4, x).unwrap().model_time_s;
+        let t_whole = whole.execute("resnet50", 4, &x).unwrap().model_time_s;
+        let t_slice = slice.execute("resnet50", 4, &x).unwrap().model_time_s;
         assert!(t_slice > t_whole, "slice={t_slice} whole={t_whole}");
     }
 
@@ -488,11 +550,11 @@ mod tests {
         let b2 = f.create_on(&a).unwrap();
         let x = gen_input(2, &[2, 64], 1.0);
         assert_eq!(
-            b1.execute("wide_deep", 2, x.clone()).unwrap().model_time_s,
-            b2.execute("wide_deep", 2, x.clone()).unwrap().model_time_s,
+            b1.execute("wide_deep", 2, &x).unwrap().model_time_s,
+            b2.execute("wide_deep", 2, &x).unwrap().model_time_s,
         );
         // the lane only hosts its assigned kinds
-        assert!(b1.execute("resnet50", 2, x).is_err());
+        assert!(b1.execute("resnet50", 2, &x).is_err());
     }
 
     #[test]
@@ -507,8 +569,8 @@ mod tests {
         assert_eq!(f.cache().misses(), misses);
         let x = gen_input(2, &[2, 64], 1.0);
         assert_eq!(
-            a.execute("wide_deep", 2, x.clone()).unwrap().model_time_s,
-            b.execute("wide_deep", 2, x).unwrap().model_time_s,
+            a.execute("wide_deep", 2, &x).unwrap().model_time_s,
+            b.execute("wide_deep", 2, &x).unwrap().model_time_s,
         );
         // a different shape must rebuild (and re-simulate what it needs)
         let _ = f.create_on(&assignment(16, 4, &["wide_deep"])).unwrap();

@@ -16,6 +16,7 @@
 use crate::config::{CpuPlatform, FrameworkConfig, SchedPolicy};
 use crate::error::{PallasError, PallasResult};
 use crate::models;
+use crate::runtime::KindTable;
 use crate::tuner::guidelines;
 
 use super::partition::{split_cores, CoreAllocation};
@@ -34,6 +35,27 @@ pub struct LaneAssignment {
     pub kinds: Vec<String>,
     /// Framework knobs for this lane; `None` lets the backend pick.
     pub framework: Option<FrameworkConfig>,
+}
+
+impl LaneAssignment {
+    /// Dense hosted-kind mask over a [`KindTable`]: `mask[id] == true`
+    /// iff this lane hosts the kind — dispatch tests membership by
+    /// [`crate::runtime::KindId`] index instead of scanning a string
+    /// list. `None` when the assignment hosts every kind (empty list);
+    /// names outside the table are ignored (the plan may mention kinds
+    /// the catalog doesn't serve).
+    pub fn host_mask(&self, table: &KindTable) -> Option<Box<[bool]>> {
+        if self.kinds.is_empty() {
+            return None;
+        }
+        let mut mask = vec![false; table.len()].into_boxed_slice();
+        for name in &self.kinds {
+            if let Some(id) = table.resolve(name) {
+                mask[id.index()] = true;
+            }
+        }
+        Some(mask)
+    }
 }
 
 /// One group of identical lanes serving one set of model kinds on a
@@ -320,6 +342,22 @@ mod tests {
         let mut plan = LanePlan::guideline(&p, &["wide_deep"]).unwrap();
         plan.groups[0].allocation = CoreAllocation::new(20, 10);
         assert!(plan.validate().is_err());
+    }
+
+    #[test]
+    fn host_mask_is_dense_by_kind_id() {
+        let table = KindTable::new(vec!["wide_deep".into(), "ncf".into(), "transformer".into()]);
+        let a = LaneAssignment {
+            lane_id: 0,
+            allocation: CoreAllocation::new(0, 4),
+            kinds: vec!["transformer".into(), "bert".into()],
+            framework: None,
+        };
+        let mask = a.host_mask(&table).unwrap();
+        // unknown names ("bert") are ignored; hosted kinds flip their slot
+        assert_eq!(&mask[..], &[false, false, true]);
+        let all = LaneAssignment { kinds: vec![], ..a };
+        assert!(all.host_mask(&table).is_none());
     }
 
     #[test]

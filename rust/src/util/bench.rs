@@ -196,9 +196,20 @@ impl Bench {
     }
 }
 
+/// The revision stamped into emitted documents: the `GIT_REV` env var
+/// when set and non-empty (CI exports the build sha there — bench runs
+/// in CI may execute outside the checkout, where `git` fails and the
+/// seed emitted `"unknown"`), else `git rev-parse --short HEAD`, else
+/// `"unknown"`.
 fn git_rev() -> String {
+    if let Ok(v) = std::env::var("GIT_REV") {
+        let v = v.trim();
+        if !v.is_empty() {
+            return v.to_string();
+        }
+    }
     std::process::Command::new("git")
-        .args(["rev-parse", "HEAD"])
+        .args(["rev-parse", "--short", "HEAD"])
         .output()
         .ok()
         .filter(|o| o.status.success())
@@ -307,6 +318,25 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(Json::parse(&text).is_ok());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn git_rev_env_override() {
+        // GIT_REV (exported by CI) wins over shelling out to git, so
+        // emitted documents carry a real revision even when the bench
+        // runs outside a checkout
+        let _env = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        std::env::set_var("GIT_REV", "cafef00d");
+        let b = Bench::new("revtest");
+        let doc = Json::parse(&super::super::json::to_string(&b.to_json())).unwrap();
+        assert_eq!(doc.get("git_rev").unwrap().as_str(), Some("cafef00d"));
+        // empty values fall through to the git / "unknown" chain
+        std::env::set_var("GIT_REV", "  ");
+        let doc = Json::parse(&super::super::json::to_string(&b.to_json())).unwrap();
+        assert_ne!(doc.get("git_rev").unwrap().as_str(), Some("  "));
+        std::env::remove_var("GIT_REV");
+        let rev = git_rev();
+        assert!(!rev.is_empty());
     }
 
     #[test]

@@ -56,7 +56,7 @@ fn batched_equals_unbatched() {
     for (t, rx) in rxs.into_iter().enumerate() {
         let resp = rx.recv().unwrap();
         let got = resp.output.expect("ok");
-        let want = solo.execute("wide_deep", 1, item(20 + t as u32)).unwrap().output;
+        let want = solo.execute("wide_deep", 1, &item(20 + t as u32)).unwrap().output;
         assert_eq!(got.data, want.data, "req {t}");
         assert!(resp.bucket >= 1);
     }

@@ -20,7 +20,7 @@ use parframe::coordinator::loadgen;
 use parframe::coordinator::request::{Request, RequestId};
 use parframe::graph::{analyze_width, Graph, GraphBuilder};
 use parframe::ops::OpKind;
-use parframe::runtime::Tensor;
+use parframe::runtime::{KindId, Tensor};
 use parframe::sched::{pick_lane, ReadyQueue};
 use parframe::sim;
 use parframe::util::json::{self, Json};
@@ -218,7 +218,7 @@ fn mk_req(id: u64) -> Request {
     let (tx, _rx) = std::sync::mpsc::channel();
     Request {
         id: RequestId(id),
-        kind: "mlp".into(),
+        kind: KindId(0),
         input: Tensor { shape: vec![1, 4], data: vec![0.0; 4] },
         enqueued: Instant::now(),
         reply: tx,
@@ -250,7 +250,7 @@ fn prop_batcher_no_loss_no_reorder() {
             max_wait: Duration::ZERO,
             max_batch: rng.range(1, 12),
         };
-        let mut b = DynamicBatcher::new("mlp", vec![1, 2, 4, 8], policy);
+        let mut b = DynamicBatcher::new(KindId(0), vec![1, 2, 4, 8], policy);
         let n = rng.range(1, 60);
         for i in 0..n {
             b.push(mk_req(i as u64));
@@ -270,7 +270,7 @@ fn prop_batcher_no_loss_no_reorder() {
 #[test]
 fn prop_bucket_is_smallest_sufficient() {
     // fixed ladder: exhaustive over queue depths
-    let b = DynamicBatcher::new("mlp", vec![1, 2, 4, 8], BatchPolicy::default());
+    let b = DynamicBatcher::new(KindId(0), vec![1, 2, 4, 8], BatchPolicy::default());
     for n in 1..=20usize {
         let bucket = b.bucket_for(n);
         if n <= 8 {
@@ -289,7 +289,7 @@ fn prop_bucket_is_smallest_sufficient() {
     let mut rng = Prng::new(0xB0CCE);
     for case in 0..CASES {
         let buckets = random_buckets(&mut rng);
-        let b = DynamicBatcher::new("mlp", buckets.clone(), BatchPolicy::default());
+        let b = DynamicBatcher::new(KindId(0), buckets.clone(), BatchPolicy::default());
         let max = *buckets.last().unwrap();
         for n in 1..=(max + 3) {
             let chosen = b.bucket_for(n);
@@ -309,7 +309,7 @@ fn prop_cut_padding_matches_bucket_minus_len() {
         let max = *buckets.last().unwrap();
         let cap = rng.range(1, max + 4);
         let policy = BatchPolicy { max_wait: Duration::ZERO, max_batch: cap };
-        let mut b = DynamicBatcher::new("mlp", buckets.clone(), policy);
+        let mut b = DynamicBatcher::new(KindId(0), buckets.clone(), policy);
         let n = rng.range(1, 40);
         for i in 0..n {
             b.push(mk_req(i as u64));
@@ -346,7 +346,7 @@ fn prop_no_request_waits_past_max_wait_plus_tick() {
         let max_wait = Duration::from_millis(rng.range(0, 20) as u64);
         let cap = rng.range(1, 10);
         let policy = BatchPolicy { max_wait, max_batch: cap };
-        let mut b = DynamicBatcher::new("mlp", vec![1, 2, 4, 8], policy);
+        let mut b = DynamicBatcher::new(KindId(0), vec![1, 2, 4, 8], policy);
 
         // arrivals at random millisecond offsets in [0, 50)
         let n = rng.range(1, 40);

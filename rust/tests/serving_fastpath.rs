@@ -1,0 +1,228 @@
+//! Fast-plane equivalence suite: the rebuilt serving data path (interned
+//! kinds, batched ingress drain, recycled batch buffers) must be
+//! response-bit-identical to the seed loop, which is preserved behind
+//! `CoordinatorConfig::with_reference_loop(true)` as the reference plane.
+//!
+//! Everything runs on `SimBackend` (batching-invariant numerics), so the
+//! comparisons are exact regardless of how arrivals happen to batch.
+
+use std::time::{Duration, Instant};
+
+use parframe::config::CpuPlatform;
+use parframe::coordinator::batcher::{BatchPolicy, DynamicBatcher};
+use parframe::coordinator::request::{Request, RequestId};
+use parframe::coordinator::{
+    loadgen, BatchPool, Coordinator, CoordinatorConfig, LoadgenConfig, BATCH_POOL_CAP,
+};
+use parframe::runtime::{gen_input, KindId, Tensor};
+use parframe::sched::LanePlan;
+use parframe::util::prng::Prng;
+
+const KINDS: [&str; 3] = ["wide_deep", "ncf", "transformer"];
+
+fn config(core_aware: bool, reference: bool) -> CoordinatorConfig {
+    let platform = CpuPlatform::large2();
+    let mut cfg = CoordinatorConfig::sim(platform.clone(), &KINDS);
+    cfg.lanes = 2;
+    cfg.policy = BatchPolicy { max_wait: Duration::from_millis(2), max_batch: usize::MAX };
+    if core_aware {
+        cfg = cfg.with_plan(LanePlan::guideline(&platform, &KINDS).expect("guideline plan"));
+    }
+    cfg.with_reference_loop(reference)
+}
+
+/// Drive the same tagged request schedule through a coordinator and
+/// return `(kind, tag, output rows)` per request, in submit order.
+fn drive(coord: &Coordinator) -> Vec<(String, u32, Vec<f32>)> {
+    let mut pending = Vec::new();
+    for round in 0..6u32 {
+        for kind in KINDS {
+            let dims = coord.router().item_shape(kind).unwrap().dims();
+            for t in 0..4u32 {
+                let tag = round * 100 + t;
+                let rx = coord.submit(kind, gen_input(tag, &dims, 1.0)).unwrap();
+                pending.push((kind.to_string(), tag, rx));
+            }
+        }
+    }
+    pending
+        .into_iter()
+        .map(|(kind, tag, rx)| {
+            let resp = rx.recv().expect("response");
+            let out = resp.output.unwrap_or_else(|e| panic!("{kind}/{tag}: {e}"));
+            (kind, tag, out.data)
+        })
+        .collect()
+}
+
+/// The pinned acceptance test: fast plane responses are bit-identical to
+/// the seed loop for every zoo kind, under both lane regimes.
+#[test]
+fn fastpath_matches_reference_plane_bit_exact() {
+    for core_aware in [false, true] {
+        let fast = Coordinator::start(config(core_aware, false)).unwrap();
+        let seed = Coordinator::start(config(core_aware, true)).unwrap();
+        let got = drive(&fast);
+        let want = drive(&seed);
+        assert_eq!(got.len(), want.len());
+        for ((k_f, t_f, out_f), (k_s, t_s, out_s)) in got.iter().zip(&want) {
+            assert_eq!((k_f, t_f), (k_s, t_s), "schedule skew (core_aware={core_aware})");
+            assert_eq!(out_f, out_s, "{k_f}/{t_f} diverged (core_aware={core_aware})");
+        }
+        assert_eq!(fast.metrics().requests.get(), seed.metrics().requests.get());
+    }
+}
+
+fn mk_req(id: u64, kind: KindId, enqueued: Instant) -> Request {
+    let (tx, _rx) = std::sync::mpsc::channel();
+    Request {
+        id: RequestId(id),
+        kind,
+        input: Tensor { shape: vec![1, 4], data: vec![0.0; 4] },
+        enqueued,
+        reply: tx,
+    }
+}
+
+/// Replay random multi-kind arrival schedules against a virtual clock
+/// through both ingress disciplines — the seed's one-at-a-time enqueue
+/// with allocating `cut()` vs the fast drain with pooled `cut_into()` —
+/// and require identical per-kind batch membership and bucket choices.
+#[test]
+fn prop_fast_drain_matches_seed_loop_batches() {
+    let n_kinds = 3usize;
+    let mut rng = Prng::new(0xFA57);
+    for case in 0..40 {
+        let base = Instant::now();
+        let policy = BatchPolicy {
+            max_wait: Duration::from_millis(rng.range(0, 8) as u64),
+            max_batch: rng.range(1, 12),
+        };
+        let mk = |kind: usize| {
+            DynamicBatcher::new(KindId(kind as u16), vec![1, 2, 4, 8], policy.clone())
+        };
+        let mut seed_batchers: Vec<DynamicBatcher> = (0..n_kinds).map(&mk).collect();
+        let mut fast_batchers: Vec<DynamicBatcher> = (0..n_kinds).map(&mk).collect();
+        let pool = BatchPool::new(BATCH_POOL_CAP);
+
+        // arrivals: (ms offset, kind, id), sorted by time
+        let n = rng.range(1, 60);
+        let mut arrivals: Vec<(u64, usize, u64)> = (0..n as u64)
+            .map(|id| (rng.range(0, 40) as u64, rng.below(n_kinds), id))
+            .collect();
+        arrivals.sort_unstable();
+
+        // per-kind (member ids, bucket) sequences from each discipline
+        let mut seed_cuts: Vec<Vec<(Vec<u64>, usize)>> = vec![Vec::new(); n_kinds];
+        let mut fast_cuts: Vec<Vec<(Vec<u64>, usize)>> = vec![Vec::new(); n_kinds];
+        let mut next = 0usize;
+        let mut t_ms = 0u64;
+        loop {
+            // the fast loop drains the whole backlog before cutting; the
+            // seed loop enqueued one message per try_recv — both see the
+            // same set once the tick's arrivals are in
+            while next < arrivals.len() && arrivals[next].0 <= t_ms {
+                let (at, kind, id) = arrivals[next];
+                let when = base + Duration::from_millis(at);
+                seed_batchers[kind].push(mk_req(id, KindId(kind as u16), when));
+                fast_batchers[kind].push(mk_req(id, KindId(kind as u16), when));
+                next += 1;
+            }
+            let now = base + Duration::from_millis(t_ms);
+            for kind in 0..n_kinds {
+                while seed_batchers[kind].ready(now) {
+                    let b = seed_batchers[kind].cut();
+                    seed_cuts[kind].push((b.requests.iter().map(|r| r.id.0).collect(), b.bucket));
+                }
+                while fast_batchers[kind].ready(now) {
+                    let b = fast_batchers[kind].cut_into(pool.take());
+                    fast_cuts[kind].push((b.requests.iter().map(|r| r.id.0).collect(), b.bucket));
+                    pool.put(b.recycle());
+                }
+            }
+            if next >= arrivals.len() && fast_batchers.iter().all(|b| b.is_empty()) {
+                break;
+            }
+            t_ms += 1;
+            assert!(t_ms < 10_000, "case {case}: virtual clock ran away");
+        }
+        assert_eq!(seed_cuts, fast_cuts, "case {case}: cut schedule diverged");
+        let total: usize = fast_cuts.iter().flatten().map(|(ids, _)| ids.len()).sum();
+        assert_eq!(total, n, "case {case}: requests lost");
+        assert_eq!(pool.stats().outstanding(), 0, "case {case}: pooled buffer leaked");
+    }
+}
+
+/// A lone request under a quiet coordinator must ship once `max_wait`
+/// expires, in the smallest bucket — the drain rebuild must not have
+/// broken the latency bound for stalled arrivals.
+#[test]
+fn stalled_arrival_ships_at_max_wait() {
+    let platform = CpuPlatform::large();
+    let mut cfg = CoordinatorConfig::sim(platform, &["wide_deep"]);
+    cfg.policy = BatchPolicy { max_wait: Duration::from_millis(25), max_batch: usize::MAX };
+    let coord = Coordinator::start(cfg).unwrap();
+    let dims = coord.router().item_shape("wide_deep").unwrap().dims();
+    let resp = coord.infer("wide_deep", gen_input(1, &dims, 1.0)).unwrap();
+    assert!(resp.output.is_ok());
+    assert_eq!(resp.bucket, 1, "lone request must ride the smallest bucket");
+    assert!(
+        resp.queue_s >= 0.015,
+        "lone request dispatched after {}s — before the max-wait bound",
+        resp.queue_s
+    );
+}
+
+/// Live re-planning must neither leak nor double-return pooled buffers:
+/// after load + `apply_plan` + load + full drain, every taken buffer has
+/// come back and the idle pool respects its cap.
+#[test]
+fn apply_plan_leaks_no_pooled_buffers() {
+    let platform = CpuPlatform::large2();
+    let plan_a = LanePlan::guideline(&platform, &["wide_deep", "ncf"]).unwrap();
+    let mix = [("wide_deep".to_string(), 0.2), ("ncf".to_string(), 0.8)];
+    let plan_b = LanePlan::for_mix(&platform, &mix).unwrap();
+
+    let cfg = CoordinatorConfig::sim(platform, &["wide_deep", "ncf"]).with_plan(plan_a);
+    let coord = Coordinator::start(cfg).unwrap();
+    let pool = coord.batch_pool();
+
+    let r = loadgen::run(&coord, &LoadgenConfig::closed("wide_deep", 64, 4)).unwrap();
+    assert_eq!(r.errors, 0);
+    coord.apply_plan(plan_b).expect("re-plan under a warm pool");
+    let r = loadgen::run(&coord, &LoadgenConfig::closed("ncf", 64, 4)).unwrap();
+    assert_eq!(r.errors, 0);
+
+    drop(coord); // joins the loop and every lane: all buffers must be home
+    let s = pool.stats();
+    assert_eq!(s.outstanding(), 0, "leaked batch buffers: {s:?}");
+    assert!(s.pooled <= BATCH_POOL_CAP, "pool over cap: {s:?}");
+}
+
+/// Steady-state dispatch runs on recycled buffers (fast plane), while the
+/// reference plane's zero-cap pool never retains one — and the interned
+/// submit path answers identically to the string path.
+#[test]
+fn pool_recycles_on_fast_plane_only() {
+    let fast = Coordinator::start(config(false, false)).unwrap();
+    let r = loadgen::run(&fast, &LoadgenConfig::closed("wide_deep", 128, 8)).unwrap();
+    assert_eq!(r.errors, 0);
+    let s = fast.pool_stats();
+    assert!(s.reused > 0, "steady-state cuts should reuse pooled buffers: {s:?}");
+
+    let id = fast.kind_table().resolve("ncf").expect("interned");
+    let dims = fast.router().item_shape("ncf").unwrap().dims();
+    let by_id = fast.infer_id(id, gen_input(9, &dims, 1.0)).unwrap().output.unwrap();
+    let by_name = fast.infer("ncf", gen_input(9, &dims, 1.0)).unwrap().output.unwrap();
+    assert_eq!(by_id.data, by_name.data, "interned submit diverged from string submit");
+
+    let seed = Coordinator::start(config(false, true)).unwrap();
+    let r = loadgen::run(&seed, &LoadgenConfig::closed("wide_deep", 64, 8)).unwrap();
+    assert_eq!(r.errors, 0);
+    let pool = seed.batch_pool();
+    drop(seed);
+    let s = pool.stats();
+    assert_eq!(s.reused, 0, "reference plane must not recycle: {s:?}");
+    assert_eq!(s.pooled, 0, "reference plane must not retain buffers: {s:?}");
+    assert_eq!(s.outstanding(), 0, "reference plane leaked buffers: {s:?}");
+}
