@@ -55,7 +55,7 @@ fn main() {
     let points = lattice(&p);
     let t0 = Instant::now();
     let mut seed_sum = 0.0;
-    for c in &points {
+    for c in points.iter() {
         seed_sum += sim::simulate_reference(&g, &p, c, &SimOptions::default()).unwrap().latency_s;
     }
     let seed_wall = t0.elapsed().as_secs_f64();
@@ -65,7 +65,7 @@ fn main() {
     let cache = SimCache::new();
     let t0 = Instant::now();
     let mut fast_sum = 0.0;
-    for c in &points {
+    for c in points.iter() {
         fast_sum += cache.latency(&prep, &p, c).unwrap();
     }
     let fast_wall = t0.elapsed().as_secs_f64();

@@ -1,13 +1,19 @@
 //! Bench: tuning throughput — the parallel, memoized sweep vs the
 //! serial path, reported as evaluated design points per second (the
 //! acceptance metric of the tuning-throughput subsystem), plus the
-//! serving cold-start cut from parallel latency-table pre-simulation.
+//! branch-and-bound cut (`pruned-cold`, `pruned-vs-flat`,
+//! `simulated-fraction`) and the serving cold-start cut from parallel
+//! latency-table pre-simulation.
 //!
-//! Each sweep runs once (a full exhaustive lattice is the workload, not
-//! a microsecond-scale case), so this target records whole-sweep
-//! metrics with `Bench::record` instead of the repeated-timing loop.
-//! Case names are fixed — they never embed the jobs count — so the
-//! emitted `BENCH_tuner.json` is diffable across machines.
+//! Sweep cases re-run the whole sweep several times in full mode
+//! (`record_samples`, so `iters`/`p95`/`sd` in the emitted JSON are
+//! real statistics, not single shots); fast mode runs each once. Case
+//! names are fixed — they never embed the jobs count — so the emitted
+//! `BENCH_tuner.json` is diffable across machines.
+//!
+//! Correctness gates (run in CI fast mode): the pruned sweep must match
+//! the flat sweep bit-for-bit, and `bound_unsound()` must stay zero —
+//! no simulated point may ever undercut its analytic lower bound.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -16,76 +22,106 @@ use parframe::config::CpuPlatform;
 use parframe::models;
 use parframe::runtime::{BackendFactory, SimBackendConfig, SimBackendFactory};
 use parframe::sim::SimCache;
-use parframe::tuner::{default_jobs, exhaustive_search_with, SearchResult, SweepOptions};
+use parframe::tuner::{
+    bound_unsound, default_jobs, exhaustive_search_with, SearchResult, SweepOptions, SweepPool,
+};
 use parframe::util::bench::Bench;
 
-fn sweep(
-    b: &mut Bench,
-    case: &str,
+fn timed_sweep(
     graph: &parframe::graph::Graph,
     platform: &CpuPlatform,
     opts: &SweepOptions,
-) -> SearchResult {
+) -> (SearchResult, f64) {
     let t0 = Instant::now();
     let r = exhaustive_search_with(graph, platform, opts).unwrap();
-    let wall = t0.elapsed().as_secs_f64();
-    b.record(case, r.evaluated as f64 / wall.max(1e-12), "points/s");
-    r
+    (r, t0.elapsed().as_secs_f64().max(1e-12))
 }
 
 fn main() {
     let mut b = Bench::new("tuner");
     let platform = CpuPlatform::large2();
     let jobs = default_jobs();
-    println!("tuner bench on {} (jobs={jobs})", platform.name);
+    let iters = if b.is_fast() { 1 } else { 3 };
+    println!("tuner bench on {} (jobs={jobs}, iters={iters})", platform.name);
 
     for name in ["wide_deep", "inception_v3"] {
         let g = models::build(name, models::canonical_batch(name)).unwrap();
-        // serial baseline (fresh cache ⇒ every point simulates)
-        let serial = sweep(
-            &mut b,
-            &format!("sweep/{name}/serial-cold"),
-            &g,
-            &platform,
-            &SweepOptions::with_jobs(1),
-        );
-        // parallel, cold cache: the wall-clock win to report
-        let par = sweep(
-            &mut b,
-            &format!("sweep/{name}/parallel-cold"),
-            &g,
-            &platform,
-            &SweepOptions::with_jobs(jobs),
-        );
-        // memoized re-sweep: a warm cache answers without simulating
-        let cache = Arc::new(SimCache::new());
-        sweep(
-            &mut b,
-            &format!("sweep/{name}/warming"),
-            &g,
-            &platform,
-            &SweepOptions::shared(jobs, Arc::clone(&cache)),
-        );
-        let warm = sweep(
-            &mut b,
-            &format!("sweep/{name}/warm-resweep"),
-            &g,
-            &platform,
-            &SweepOptions::shared(jobs, Arc::clone(&cache)),
-        );
-        println!(
-            "tuner/sweep/{name:<14} cache hits={} misses={} delta-hits={}",
-            cache.hits(),
-            cache.misses(),
-            cache.delta_hits()
-        );
-        assert_eq!(serial.best, par.best, "parallel sweep diverged from serial");
-        assert_eq!(
-            serial.best_latency_s.to_bits(),
-            warm.best_latency_s.to_bits(),
-            "memoized sweep diverged from serial"
-        );
+        // one persistent executor shared by every parallel case for this
+        // model — steady-state sweeps must not pay a pool spawn each
+        let pool = Arc::new(SweepPool::new(jobs));
+        let mut serial_s = Vec::new();
+        let mut par_s = Vec::new();
+        let mut pruned_s = Vec::new();
+        let mut warming_s = Vec::new();
+        let mut warm_s = Vec::new();
+        let (mut flat_wall, mut pruned_wall) = (0.0f64, 0.0f64);
+        let mut fraction = 1.0f64;
+        for _ in 0..iters {
+            // serial flat baseline (fresh cache ⇒ every point simulates)
+            let (serial, ws) =
+                timed_sweep(&g, &platform, &SweepOptions::with_jobs(1).prune(false));
+            serial_s.push(serial.evaluated as f64 / ws);
+            // parallel flat, cold cache: the wall-clock win to report
+            let (par, wp) = timed_sweep(
+                &g,
+                &platform,
+                &SweepOptions::with_jobs(jobs).prune(false).on_pool(Arc::clone(&pool)),
+            );
+            par_s.push(par.evaluated as f64 / wp);
+            flat_wall += wp;
+            // branch-and-bound, cold cache: same lattice credit (the
+            // numerator stays `evaluated`), far fewer simulations
+            let (pruned, wb) = timed_sweep(
+                &g,
+                &platform,
+                &SweepOptions::with_jobs(jobs).on_pool(Arc::clone(&pool)),
+            );
+            pruned_s.push(pruned.evaluated as f64 / wb);
+            pruned_wall += wb;
+            fraction = pruned.simulated as f64 / pruned.evaluated.max(1) as f64;
+            // memoized re-sweep: a warm cache answers without simulating
+            let cache = Arc::new(SimCache::new());
+            let warm_opts = SweepOptions::shared(jobs, Arc::clone(&cache))
+                .prune(false)
+                .on_pool(Arc::clone(&pool));
+            let (warming, ww) = timed_sweep(&g, &platform, &warm_opts);
+            warming_s.push(warming.evaluated as f64 / ww);
+            let (warm, wr) = timed_sweep(&g, &platform, &warm_opts);
+            warm_s.push(warm.evaluated as f64 / wr);
+
+            assert_eq!(serial.best, par.best, "parallel sweep diverged from serial");
+            assert_eq!(serial.best, pruned.best, "pruned sweep diverged from flat");
+            assert_eq!(
+                serial.best_latency_s.to_bits(),
+                pruned.best_latency_s.to_bits(),
+                "pruned latency diverged from flat"
+            );
+            assert_eq!(serial.evaluated, pruned.evaluated, "pruning must not shrink the lattice");
+            assert!(pruned.simulated <= pruned.evaluated);
+            assert_eq!(
+                serial.best_latency_s.to_bits(),
+                warm.best_latency_s.to_bits(),
+                "memoized sweep diverged from serial"
+            );
+        }
+        b.record_samples(&format!("sweep/{name}/serial-cold"), serial_s, "points/s");
+        b.record_samples(&format!("sweep/{name}/parallel-cold"), par_s, "points/s");
+        b.record_samples(&format!("sweep/{name}/pruned-cold"), pruned_s, "points/s");
+        b.record_samples(&format!("sweep/{name}/warming"), warming_s, "points/s");
+        b.record_samples(&format!("sweep/{name}/warm-resweep"), warm_s, "points/s");
+        assert!(pool.spawn_count() <= 1, "parallel cases must share one spawned pool");
+        if name == "wide_deep" {
+            // headline branch-and-bound cut on the largest platform:
+            // flat vs pruned wall clock, and the fraction of lattice
+            // points that actually simulated under pruning
+            b.record("pruned-vs-flat", flat_wall / pruned_wall.max(1e-12), "x");
+            b.record("simulated-fraction", fraction, "fraction");
+        }
     }
+
+    // the CI gate: no simulated point anywhere above may have come in
+    // below its admissible lower bound
+    assert_eq!(bound_unsound(), 0, "admissible bound violated during sweeps");
 
     // serving cold-start: lane-table pre-simulation for a three-model
     // catalog, serial vs parallel factory

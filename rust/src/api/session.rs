@@ -29,7 +29,7 @@ use crate::runtime::{BackendFactory, SimBackendConfig, SimBackendFactory};
 use crate::sched::{split_cores, LaneGroup, LanePlan};
 use crate::sim::{SimCache, SimReport};
 use crate::tuner::{
-    self, baseline_config, Baseline, OnlineTuner, OnlineTunerConfig, SweepOptions,
+    self, baseline_config, Baseline, OnlineTuner, OnlineTunerConfig, SweepOptions, SweepPool,
 };
 
 use super::plan::{Plan, PlanTier};
@@ -67,6 +67,7 @@ pub struct SessionBuilder {
     jobs: usize,
     policy: Option<SchedPolicy>,
     cache: Option<Arc<SimCache>>,
+    prune: bool,
 }
 
 impl SessionBuilder {
@@ -112,6 +113,14 @@ impl SessionBuilder {
         self
     }
 
+    /// Enable/disable branch-and-bound pruning in the exhaustive tier
+    /// (the `tune --no-prune` escape hatch — results are bit-identical
+    /// either way; off only to measure the flat sweep).
+    pub fn prune(mut self, prune: bool) -> Self {
+        self.prune = prune;
+        self
+    }
+
     /// Finish the builder.
     pub fn build(self) -> Session {
         Session {
@@ -119,6 +128,8 @@ impl SessionBuilder {
             jobs: self.jobs,
             policy: self.policy,
             cache: self.cache.unwrap_or_else(|| Arc::new(SimCache::new())),
+            sweep: Arc::new(SweepPool::new(self.jobs)),
+            prune: self.prune,
         }
     }
 }
@@ -131,6 +142,11 @@ pub struct Session {
     jobs: usize,
     policy: Option<SchedPolicy>,
     cache: Arc<SimCache>,
+    /// Persistent sweep executor shared by every tier this session
+    /// drives (exhaustive searches, online re-plans): worker threads
+    /// spawn lazily on the first parallel sweep and are reused after.
+    sweep: Arc<SweepPool>,
+    prune: bool,
 }
 
 impl Session {
@@ -142,6 +158,7 @@ impl Session {
             jobs: tuner::default_jobs(),
             policy: None,
             cache: None,
+            prune: true,
         }
     }
 
@@ -170,6 +187,21 @@ impl Session {
         &self.cache
     }
 
+    /// The session's persistent sweep executor (shared by clones —
+    /// `ServeHandle`s hand it to the online re-tuner, so re-plans reuse
+    /// the tuning sweep's worker threads).
+    pub fn sweep_pool(&self) -> &Arc<SweepPool> {
+        &self.sweep
+    }
+
+    /// The exhaustive tier's design lattice for the session platform —
+    /// memoized per platform *shape* for the life of the process, so
+    /// repeated searches (and every online re-plan) share one `Arc`'d
+    /// Vec instead of re-enumerating and re-deduplicating it.
+    pub fn lattice(&self) -> Arc<Vec<FrameworkConfig>> {
+        tuner::lattice(&self.platform)
+    }
+
     // -- tuning tiers -----------------------------------------------------
 
     /// Tune a workload with the paper's §8 guideline (closed-form; one
@@ -193,7 +225,10 @@ impl Session {
     /// session policy pin *constrains the sweep* to that policy's
     /// sub-lattice, so the result is the true optimum under the pin.
     pub fn tune_exhaustive(&self, workload: &Workload) -> PallasResult<Plan> {
-        let opts = SweepOptions::shared(self.jobs, Arc::clone(&self.cache)).pinned(self.policy);
+        let opts = SweepOptions::shared(self.jobs, Arc::clone(&self.cache))
+            .pinned(self.policy)
+            .on_pool(Arc::clone(&self.sweep))
+            .prune(self.prune);
         let (groups, batches) = self.grouped_configs(workload, |graph, slice| {
             let r = tuner::exhaustive_search_with(graph, slice, &opts)?;
             Ok((r.best, r.evaluated))
@@ -487,6 +522,7 @@ impl ServeHandle {
         let mut tuner = tuner_cfg.map(|cfg| {
             OnlineTuner::with_config(self.session.platform.clone(), &kind_refs, cfg)
                 .with_cache(Arc::clone(&self.session.cache))
+                .with_pool(Arc::clone(&self.session.sweep))
         });
         Ok(loadgen::run_shift(&self.coord, phases, concurrency, seed, tuner.as_mut())?)
     }
@@ -589,6 +625,36 @@ mod tests {
         assert!(
             pinned.entries[0].predicted_latency_s >= free.entries[0].predicted_latency_s
         );
+    }
+
+    #[test]
+    fn session_lattice_is_memoized_and_sweeps_share_one_pool() {
+        let session = Session::on(CpuPlatform::small());
+        // two calls return the same Vec allocation — no recomputation
+        assert!(Arc::ptr_eq(&session.lattice(), &session.lattice()));
+        let w = Workload::single("wide_deep").unwrap();
+        let a = session.tune_exhaustive(&w).unwrap();
+        let b = session.tune_exhaustive(&w).unwrap();
+        assert_eq!(a.entries[0].config, b.entries[0].config);
+        assert!(session.sweep_pool().spawn_count() <= 1, "a pool was spawned per sweep");
+    }
+
+    #[test]
+    fn no_prune_session_matches_pruned() {
+        let w = Workload::single("inception_v2").unwrap();
+        let pruned = Session::on(CpuPlatform::small()).tune_exhaustive(&w).unwrap();
+        let flat = Session::builder()
+            .platform(CpuPlatform::small())
+            .prune(false)
+            .build()
+            .tune_exhaustive(&w)
+            .unwrap();
+        assert_eq!(pruned.entries[0].config, flat.entries[0].config);
+        assert_eq!(
+            pruned.entries[0].predicted_latency_s.to_bits(),
+            flat.entries[0].predicted_latency_s.to_bits()
+        );
+        assert_eq!(pruned.evaluated, flat.evaluated);
     }
 
     #[test]

@@ -112,9 +112,16 @@ fn worker(shared: Arc<Shared>, me: usize) {
             continue; // re-check without sleeping
         }
         *idle += 1;
+        // The timeout is a belt-and-braces re-check, not the wakeup
+        // path: submitters bump `pending` before taking the `idle` lock
+        // and notifying, so a sleeping worker cannot miss work. 100 ms
+        // keeps a *persistent* pool (tuner::parallel::SweepPool holds
+        // one across sweeps/serving windows) close to 0% CPU while
+        // idle; the old 2 ms poll was tuned for pools that died with
+        // their one sweep.
         let (guard, _timeout) = shared
             .cv
-            .wait_timeout(idle, std::time::Duration::from_millis(2))
+            .wait_timeout(idle, std::time::Duration::from_millis(100))
             .unwrap();
         idle = guard;
         *idle -= 1;

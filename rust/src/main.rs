@@ -60,6 +60,7 @@ const TUNE_FLAGS: &[FlagSpec] = &[
     flag("jobs"),
     flag("emit-plan"),
     switch("exhaustive"),
+    switch("no-prune"),
 ];
 const SIMULATE_FLAGS: &[FlagSpec] = &[
     flag("model"),
@@ -145,7 +146,7 @@ fn parse_flags(
 }
 
 /// Build the session every subcommand shares from the common flags
-/// (`--platform`, `--jobs`, `--policy`).
+/// (`--platform`, `--jobs`, `--policy`, and `tune`'s `--no-prune`).
 fn session_from(flags: &HashMap<String, String>) -> PallasResult<Session> {
     let mut b = Session::builder();
     if let Some(p) = flags.get("platform") {
@@ -156,6 +157,9 @@ fn session_from(flags: &HashMap<String, String>) -> PallasResult<Session> {
     }
     if let Some(j) = flags.get("jobs") {
         b = b.jobs(parse_num(j, "jobs")?);
+    }
+    if flags.contains_key("no-prune") {
+        b = b.prune(false);
     }
     Ok(b.build())
 }
@@ -206,8 +210,11 @@ fn print_help() {
          commands:\n\
            models                         list the model zoo with width analysis\n\
            tune     --model M [--platform P] [--batch N] [--policy POL]\n\
-                    [--exhaustive]         also run the global-optimum sweep\n\
-                    [--jobs N]             sweep worker threads (default: host cores, ≤8)\n\
+                    [--exhaustive]         also run the global-optimum search\n\
+                    [--no-prune]           flat sweep instead of branch-and-bound\n\
+                                           (bit-identical result; for measurement)\n\
+                    [--jobs N]             sweep worker threads (default: host cores, ≤8,\n\
+                                           or the PALLAS_JOBS env override)\n\
                     [--emit-plan FILE]     write the tuning decision as plan.json\n\
            plan     --show FILE           inspect a plan artifact\n\
            simulate --model M [--pools/--mkl/--intra N] [--policy POL] [--platform P]\n\
@@ -611,10 +618,14 @@ fn expected_bench_cases(suite: &str) -> Vec<String> {
         "tuner" => {
             let mut v = Vec::new();
             for model in ["wide_deep", "inception_v3"] {
-                for stage in ["serial-cold", "parallel-cold", "warming", "warm-resweep"] {
+                for stage in
+                    ["serial-cold", "parallel-cold", "pruned-cold", "warming", "warm-resweep"]
+                {
                     v.push(format!("sweep/{model}/{stage}"));
                 }
             }
+            v.push("pruned-vs-flat".to_string());
+            v.push("simulated-fraction".to_string());
             v.push("coldstart/3-kinds/serial".to_string());
             v.push("coldstart/3-kinds/parallel".to_string());
             v

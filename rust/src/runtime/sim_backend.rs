@@ -18,7 +18,7 @@ use crate::models;
 use crate::sched::LaneAssignment;
 use crate::sim::{platform_fingerprint, SimCache};
 use crate::tuner;
-use crate::tuner::parallel::{default_jobs, par_map};
+use crate::tuner::parallel::{default_jobs, SweepPool};
 
 use super::artifact::Tensor;
 use super::backend::{Backend, BackendFactory, Catalog, Execution, ItemShape, KindId, ModelSpec};
@@ -120,6 +120,7 @@ impl SimTables {
         cfg: &SimBackendConfig,
         cache: &Arc<SimCache>,
         id_space: &[String],
+        sweep: &SweepPool,
     ) -> PallasResult<Self> {
         let buckets = cfg.normalized_buckets()?;
         let mut shapes = HashMap::new();
@@ -135,7 +136,7 @@ impl SimTables {
         let policy = cfg.policy;
         let cache = Arc::clone(cache);
         let rows: Vec<PallasResult<((String, usize), f64)>> =
-            par_map(cfg.jobs, grid, move |_, (kind, bucket)| {
+            sweep.par_map(grid, move |_, (kind, bucket)| {
                 let prep = cache
                     .prepared(&kind, bucket)
                     .ok_or_else(|| PallasError::UnknownModel(kind.clone()))?;
@@ -196,6 +197,10 @@ type LaneKey = (u64, Vec<String>, Option<FrameworkConfig>);
 pub struct SimBackendFactory {
     cfg: SimBackendConfig,
     cache: Arc<SimCache>,
+    /// Persistent table-build executor: every whole-machine and lane
+    /// table this factory ever builds (including each `apply_plan`
+    /// re-plan) fans out over one lazily-spawned worker pool.
+    sweep: Arc<SweepPool>,
     tables: Mutex<Option<Arc<SimTables>>>,
     lane_tables: Mutex<HashMap<LaneKey, Arc<SimTables>>>,
 }
@@ -211,9 +216,11 @@ impl SimBackendFactory {
     /// (the CLI's `serve --adaptive` shares one cache between this
     /// factory and the online tuner).
     pub fn with_cache(cfg: SimBackendConfig, cache: Arc<SimCache>) -> Self {
+        let sweep = Arc::new(SweepPool::new(cfg.jobs));
         SimBackendFactory {
             cfg,
             cache,
+            sweep,
             tables: Mutex::new(None),
             lane_tables: Mutex::new(HashMap::new()),
         }
@@ -250,7 +257,7 @@ impl SimBackendFactory {
         if let Some(t) = guard.as_ref() {
             return Ok(Arc::clone(t));
         }
-        let t = Arc::new(SimTables::build(&self.cfg, &self.cache, &self.cfg.kinds)?);
+        let t = Arc::new(SimTables::build(&self.cfg, &self.cache, &self.cfg.kinds, &self.sweep)?);
         *guard = Some(Arc::clone(&t));
         Ok(t)
     }
@@ -299,7 +306,7 @@ impl SimBackendFactory {
         };
         // dense rows stay aligned with the factory's full kind list (the
         // coordinator id space), even though the lane hosts a subset
-        let t = Arc::new(SimTables::build(&sub, &self.cache, &self.cfg.kinds)?);
+        let t = Arc::new(SimTables::build(&sub, &self.cache, &self.cfg.kinds, &self.sweep)?);
         guard.insert(key, Arc::clone(&t));
         Ok(t)
     }
@@ -343,7 +350,8 @@ impl SimBackend {
     pub fn new(cfg: SimBackendConfig) -> PallasResult<Self> {
         let cache = Arc::new(SimCache::new());
         let id_space = cfg.kinds.clone();
-        Ok(SimBackend { tables: Arc::new(SimTables::build(&cfg, &cache, &id_space)?) })
+        let sweep = SweepPool::new(cfg.jobs);
+        Ok(SimBackend { tables: Arc::new(SimTables::build(&cfg, &cache, &id_space, &sweep)?) })
     }
 
     /// Pre-simulated latency for a (kind, bucket) pair, if configured.

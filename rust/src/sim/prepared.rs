@@ -225,6 +225,10 @@ pub(crate) struct PhaseTable {
     /// Per-(class, node) total duration (`opexec::total` of the list).
     totals: Vec<f64>,
     nodes: usize,
+    /// Admissible analytic latency lower bound for every member of this
+    /// config family (policy cannot change per-op durations, so one
+    /// bound covers all siblings) — see [`Self::bound_s`].
+    bound_s: f64,
 }
 
 impl PhaseTable {
@@ -267,7 +271,39 @@ impl PhaseTable {
                 totals.push(super::opexec::total(&buf));
             }
         }
-        PhaseTable { classes, class_ctxs, arena, spans, totals, nodes }
+        let bound_s = compute_bound(prep, &classes, &totals, nodes);
+        PhaseTable { classes, class_ctxs, arena, spans, totals, nodes, bound_s }
+    }
+
+    /// Admissible analytic lower bound on the simulated latency of any
+    /// config in this family: `max(critical-path time, total work /
+    /// pool count)`, both built from per-node *minimum-over-classes*
+    /// durations so no pool assignment the engine could pick beats it.
+    ///
+    /// Admissibility argument (`bound ≤ exact`, bit-level):
+    ///
+    /// * Critical path. The engine dispatches node `n` at
+    ///   `start = now.max(pool_free_at)` with `now` at least the
+    ///   completion time of every dependency (events pop in time
+    ///   order), and completes it at the f64 sum `start + dur`. The
+    ///   sweep here computes `cp[n] = max_dep cp + min_class dur` with
+    ///   the *same* f64 addition; since `fl(a + b)` is monotone in both
+    ///   arguments, `cp[n] ≤ completion[n]` inductively, so
+    ///   `max cp ≤ latency` holds in the engine's own arithmetic.
+    /// * Work / capacity. Every pool's busy time accumulates the same
+    ///   per-node durations the totals arena holds, and the engine's
+    ///   latency is at least the busiest pool's total, which is at
+    ///   least (sum of all durations) / pools in exact arithmetic. The
+    ///   f64 sum taken here may drift *above* the exact value by a few
+    ///   ulps (summation order), so the quotient is deflated by 1e-9 —
+    ///   about six orders of magnitude more than the worst-case
+    ///   accumulated rounding at lattice-relevant graph sizes.
+    ///
+    /// `tuner::bound` asserts `bound ≤ exact` on every simulated point
+    /// (the `bound_unsound` counter) so a cost-model change that breaks
+    /// either argument is caught, not silently mis-pruned.
+    pub(crate) fn bound_s(&self) -> f64 {
+        self.bound_s
     }
 
     /// Shape class of a pool index.
@@ -337,6 +373,45 @@ impl PhaseTable {
         }
         true
     }
+}
+
+/// The `max(critical path, work / pools)` lower bound stored on every
+/// [`PhaseTable`] — see [`PhaseTable::bound_s`] for the admissibility
+/// argument. `classes` maps pool index → shape class, so its length is
+/// the effective parallel capacity (pool count); `totals` is the
+/// per-(class, node) duration arena.
+fn compute_bound(prep: &PreparedGraph, classes: &[usize], totals: &[f64], nodes: usize) -> f64 {
+    if nodes == 0 || classes.is_empty() {
+        return 0.0;
+    }
+    let n_classes = totals.len() / nodes;
+    // per-node duration no pool-shape assignment can beat
+    let mut min_dur = totals[..nodes].to_vec();
+    for class in 1..n_classes {
+        for (node, slot) in min_dur.iter_mut().enumerate() {
+            let d = totals[class * nodes + node];
+            if d < *slot {
+                *slot = d;
+            }
+        }
+    }
+    // forward critical-path sweep — node ids are topologically ordered
+    // (every dependency has a smaller id), same invariant
+    // `graph::upward_ranks` relies on in reverse
+    let mut cp = vec![0.0f64; nodes];
+    let mut cp_max = 0.0f64;
+    let mut work = 0.0f64;
+    for (node, g) in prep.graph.nodes.iter().enumerate() {
+        let mut ready = 0.0f64;
+        for d in &g.deps {
+            ready = ready.max(cp[d.0]);
+        }
+        cp[node] = ready + min_dur[node];
+        cp_max = cp_max.max(cp[node]);
+        work += min_dur[node];
+    }
+    let pools = classes.len() as f64;
+    cp_max.max(work / pools * (1.0 - 1e-9))
 }
 
 /// Memoized simulation reports + prepared zoo graphs, shared across
@@ -428,19 +503,24 @@ impl SimCache {
         Ok(report)
     }
 
-    /// Simulate a canonical config through its family's phase table
-    /// (building or rebuilding the table as needed — see [`PhaseTable`]).
-    fn simulate_canonical(
+    /// The policy-erased family's [`PhaseTable`] for a *canonical*
+    /// config, built on first contact and revalidated by the sampled
+    /// bit-identity guard on every reuse. Shared by the simulation path
+    /// below and by `tuner::bound`, which reads the table's analytic
+    /// lower bound without running the engine — so a pruned sweep's
+    /// bound pass pre-warms exactly the tables its simulated survivors
+    /// replay through.
+    pub(crate) fn family_table(
         &self,
         prep: &PreparedGraph,
         platform: &CpuPlatform,
         canonical: &FrameworkConfig,
-    ) -> PallasResult<SimReport> {
+    ) -> Arc<PhaseTable> {
         let mut family = canonical.clone();
         family.sched_policy = SchedPolicy::Topo;
         let fkey = (prep.fingerprint(), platform_fingerprint(platform), family);
         let existing = self.families.lock().unwrap().get(&fkey).map(Arc::clone);
-        let table = match existing {
+        match existing {
             Some(t) if t.verify_sample(prep, platform, canonical) => {
                 self.delta_hits.fetch_add(1, Ordering::Relaxed);
                 t
@@ -459,7 +539,18 @@ impl SimCache {
                 guard.insert(fkey, Arc::clone(&t));
                 t
             }
-        };
+        }
+    }
+
+    /// Simulate a canonical config through its family's phase table
+    /// (building or rebuilding the table as needed — see [`PhaseTable`]).
+    fn simulate_canonical(
+        &self,
+        prep: &PreparedGraph,
+        platform: &CpuPlatform,
+        canonical: &FrameworkConfig,
+    ) -> PallasResult<SimReport> {
+        let table = self.family_table(prep, platform, canonical);
         engine::simulate_prepared_with_table(
             prep,
             platform,
@@ -758,6 +849,31 @@ mod tests {
         // family; the guard is the last line of defence if keying breaks)
         cfg.mkl_threads = 6;
         assert!(!table.verify_sample(&prep, &p, &canonical_config(&p, &cfg)));
+    }
+
+    #[test]
+    fn phase_table_bound_is_admissible_and_positive() {
+        let cache = SimCache::new();
+        for p in [CpuPlatform::small(), CpuPlatform::large2()] {
+            for kind in ["wide_deep", "inception_v1", "transformer"] {
+                let prep = cache.prepared(kind, 16).unwrap();
+                for pools in [1usize, 3] {
+                    let mut cfg = FrameworkConfig::tuned_default();
+                    cfg.inter_op_pools = pools;
+                    cfg.mkl_threads = 4;
+                    let canonical = canonical_config(&p, &cfg);
+                    let table = PhaseTable::build(&prep, &p, &canonical);
+                    let exact = cache.latency(&prep, &p, &cfg).unwrap();
+                    assert!(table.bound_s() > 0.0, "{kind} pools={pools}");
+                    assert!(
+                        table.bound_s() <= exact,
+                        "{kind} pools={pools}: bound {} > exact {}",
+                        table.bound_s(),
+                        exact
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,120 @@
+//! Admissible analytic latency lower bounds — the branch-and-bound
+//! half of the exhaustive tier.
+//!
+//! A lattice point's bound is `max(critical-path time, total work /
+//! pool count)` computed from the point's policy-erased family
+//! [`PhaseTable`](crate::sim::SimCache) — per-op phase cost sums the
+//! delta-simulation layer already materializes — without ever running
+//! the event loop. The bound is *admissible* (`bound ≤ exact` in the
+//! engine's own f64 arithmetic; the derivation lives on
+//! `PhaseTable::bound_s`), which is what lets `exhaustive_search_with`
+//! skip any point whose bound exceeds the incumbent's exact latency
+//! while still returning the bit-identical flat-sweep optimum.
+//!
+//! Admissibility is not just argued, it is *watched*: every simulated
+//! point in a pruned sweep calls `record_if_unsound`, which
+//! increments the process-wide [`bound_unsound`] counter (and fires a
+//! `debug_assert!`) whenever `exact < bound`. The counter is pinned to
+//! zero by `rust/tests/tuner_prune.rs` and by `benches/tuner.rs`, which
+//! CI runs — so a cost-model change that breaks the bound derivation
+//! fails the build instead of silently returning a pruned-away optimum.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::config::{CpuPlatform, FrameworkConfig};
+use crate::sim::{canonical_config, PreparedGraph, SimCache};
+
+/// Process-wide count of admissibility violations (`exact < bound`)
+/// observed on simulated points. Stays 0 unless the bound derivation
+/// is broken by a cost-model or engine change.
+static BOUND_UNSOUND: AtomicU64 = AtomicU64::new(0);
+
+/// Admissibility violations observed so far (see module docs). Tests
+/// and the tuner bench pin this at zero.
+pub fn bound_unsound() -> u64 {
+    BOUND_UNSOUND.load(Ordering::Relaxed)
+}
+
+/// Check one simulated point against its bound; an `exact < bound`
+/// observation means the bound was inadmissible and pruning could have
+/// discarded the optimum. Counts always; asserts in debug builds.
+pub(crate) fn record_if_unsound(bound: f64, exact: f64) {
+    if exact < bound {
+        BOUND_UNSOUND.fetch_add(1, Ordering::Relaxed);
+        debug_assert!(
+            false,
+            "inadmissible bound: exact {exact} < bound {bound} — pruning is unsound"
+        );
+    }
+}
+
+/// The admissible analytic latency lower bound for one design point,
+/// computed without running the engine. Fetches (building on first
+/// contact) the point's policy-erased family `PhaseTable` from
+/// `cache`, so a sweep's bound pass costs one cost-model sweep per
+/// config *family* — amortized across all policy siblings — and
+/// pre-warms exactly the tables the surviving points replay through.
+pub fn lower_bound(
+    cache: &SimCache,
+    prep: &PreparedGraph,
+    platform: &CpuPlatform,
+    cfg: &FrameworkConfig,
+) -> f64 {
+    let canonical = canonical_config(platform, cfg);
+    cache.family_table(prep, platform, &canonical).bound_s()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SchedPolicy;
+
+    #[test]
+    fn bound_is_admissible_across_configs() {
+        let cache = SimCache::new();
+        let p = CpuPlatform::large2();
+        let prep = cache.prepared("inception_v3", 16).unwrap();
+        for pools in [1usize, 2, 4, 8] {
+            for threads in [1usize, 4, 12] {
+                let mut cfg = FrameworkConfig::tuned_default();
+                cfg.inter_op_pools = pools;
+                cfg.mkl_threads = threads;
+                cfg.intra_op_threads = threads;
+                let b = lower_bound(&cache, &prep, &p, &cfg);
+                let exact = cache.latency(&prep, &p, &cfg).unwrap();
+                assert!(b > 0.0, "pools={pools} threads={threads}");
+                assert!(
+                    b <= exact,
+                    "pools={pools} threads={threads}: bound {b} > exact {exact}"
+                );
+            }
+        }
+        assert_eq!(bound_unsound(), 0);
+    }
+
+    #[test]
+    fn bound_is_policy_invariant() {
+        // the bound comes from the policy-erased family table, so all
+        // policy siblings must report the exact same bits
+        let cache = SimCache::new();
+        let p = CpuPlatform::large();
+        let prep = cache.prepared("transformer", 8).unwrap();
+        let mut cfg = FrameworkConfig::tuned_default();
+        cfg.inter_op_pools = 3;
+        cfg.mkl_threads = 4;
+        let mut bounds = Vec::new();
+        for policy in SchedPolicy::ALL {
+            cfg.sched_policy = policy;
+            bounds.push(lower_bound(&cache, &prep, &p, &cfg).to_bits());
+        }
+        assert!(bounds.windows(2).all(|w| w[0] == w[1]), "{bounds:?}");
+    }
+
+    #[test]
+    fn record_if_unsound_counts_only_violations() {
+        let before = bound_unsound();
+        record_if_unsound(1.0, 1.0); // bound == exact is sound
+        record_if_unsound(0.5, 2.0); // bound < exact is sound
+        assert_eq!(bound_unsound(), before);
+    }
+}

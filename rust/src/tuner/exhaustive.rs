@@ -3,29 +3,42 @@
 //! The raw space on `large.2` is `logical³ = 96³ = 884,736` points; like
 //! the authors we sweep the feasible lattice (pool counts that divide the
 //! machine sensibly, thread counts up to the logical core count) and
-//! simulate each point. The dispatch-policy dimension
+//! score each point. The dispatch-policy dimension
 //! ([`crate::config::SchedPolicy`]) is swept alongside the thread lattice
 //! wherever it can matter — with a single pool every policy yields the
 //! same serial schedule, so only `Topo` is evaluated there. This is what
 //! the guideline is supposed to match with *one* prediction.
 //!
-//! The sweep itself runs through the tuning-throughput subsystem:
-//! [`lattice`] enumerates the deduplicated canonical design points,
-//! [`exhaustive_search_with`] fans them over a
-//! [`crate::tuner::parallel::par_map`] worker pool and scores each via
-//! the shared [`crate::sim::SimCache`]. Reduction is index-ordered with
-//! a strict `<`, so ties keep the lowest lattice point and the result is
-//! bit-identical to the serial uncached loop at any `--jobs` value.
+//! The sweep is a **branch-and-bound search**, not a flat loop:
+//! [`lattice`] enumerates the deduplicated canonical design points
+//! (memoized per platform shape — rebuilding the Vec + dedup set per
+//! search, including every online re-plan, was measurable), a bound
+//! pass prices every point with the admissible analytic lower bound of
+//! [`crate::tuner::bound`], and [`exhaustive_search_with`] then scores
+//! points in **ascending-bound order** over the persistent
+//! [`SweepPool`](crate::tuner::parallel::SweepPool) so the incumbent
+//! tightens early. A point whose bound exceeds the incumbent's *exact*
+//! latency is skipped without simulating; workers share the incumbent
+//! through an atomic f64-bits cell, so pruning happens *during* the
+//! parallel sweep. The final reduction re-sorts the simulated survivors
+//! by original lattice index and scans with a strict `<` — and because
+//! the bound is admissible, every latency-optimal point survives to
+//! that scan, so the chosen config, its latency bits, and the
+//! `evaluated` count are **bit-identical** to the flat sweep at any
+//! `--jobs` value (enforced by `rust/tests/tuner_prune.rs`). Only
+//! [`SearchResult::simulated`] tells the two apart.
 
-use std::collections::HashSet;
-use std::sync::Arc;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::config::{CpuPlatform, FrameworkConfig, OperatorImpl, SchedPolicy};
 use crate::error::PallasResult;
 use crate::graph::Graph;
-use crate::sim::{self, PreparedGraph};
+use crate::sim::{self, platform_fingerprint, PreparedGraph};
 
-use super::parallel::{par_map, SweepOptions};
+use super::bound;
+use super::parallel::SweepOptions;
 
 /// Search outcome.
 #[derive(Debug, Clone)]
@@ -36,8 +49,13 @@ pub struct SearchResult {
     pub best_latency_s: f64,
     /// Number of *unique* design points in the swept lattice (identical
     /// canonical configs are deduplicated before evaluation, so this
-    /// counts distinct simulations regardless of caching or `--jobs`).
+    /// counts distinct design points regardless of caching, pruning or
+    /// `--jobs`).
     pub evaluated: usize,
+    /// Points actually simulated: `evaluated` minus the points
+    /// branch-and-bound discarded on their analytic lower bound alone.
+    /// Equals `evaluated` when pruning is off.
+    pub simulated: usize,
 }
 
 /// Candidate pool counts for a platform.
@@ -68,7 +86,24 @@ fn thread_candidates(platform: &CpuPlatform, pools: usize) -> Vec<usize> {
 /// every point is its own [`sim::canonical_config`] representative and
 /// appears exactly once, so candidate collisions (e.g. `2*fair == phys`)
 /// and can't-differ configs are never simulated twice.
-pub fn lattice(platform: &CpuPlatform) -> Vec<FrameworkConfig> {
+///
+/// Memoized per platform *shape* (the same shape-not-name fingerprint
+/// the sim cache keys on) for the life of the process: every search —
+/// and every online re-plan — shares one immutable `Arc`'d Vec instead
+/// of re-running the enumeration + dedup. Two calls on same-shape
+/// platforms return the identical allocation (`Arc::ptr_eq`).
+pub fn lattice(platform: &CpuPlatform) -> Arc<Vec<FrameworkConfig>> {
+    static MEMO: OnceLock<Mutex<HashMap<u64, Arc<Vec<FrameworkConfig>>>>> = OnceLock::new();
+    let memo = MEMO.get_or_init(|| Mutex::new(HashMap::new()));
+    let key = platform_fingerprint(platform);
+    if let Some(l) = memo.lock().unwrap().get(&key) {
+        return Arc::clone(l);
+    }
+    let built = Arc::new(build_lattice(platform));
+    memo.lock().unwrap().entry(key).or_insert(built).clone()
+}
+
+fn build_lattice(platform: &CpuPlatform) -> Vec<FrameworkConfig> {
     let mut seen: HashSet<FrameworkConfig> = HashSet::new();
     let mut out = Vec::new();
     for pools in pool_candidates(platform) {
@@ -102,47 +137,126 @@ pub fn lattice(platform: &CpuPlatform) -> Vec<FrameworkConfig> {
 }
 
 /// Sweep the lattice and return the latency-optimal setting, with the
-/// default sweep options (parallel workers, fresh memo-cache). Errors
-/// only if the graph itself cannot be simulated (e.g. a stalled DAG).
+/// default sweep options (parallel workers, fresh memo-cache, pruning
+/// on). Errors only if the graph itself cannot be simulated (e.g. a
+/// stalled DAG).
 pub fn exhaustive_search(graph: &Graph, platform: &CpuPlatform) -> PallasResult<SearchResult> {
     exhaustive_search_with(graph, platform, &SweepOptions::default())
 }
 
-/// Sweep the lattice under explicit [`SweepOptions`]. Scoring fans out
-/// over `opts.jobs` workers through `opts.cache`; the reduction is a
-/// serial index-ordered scan with strict `<`, so the chosen point, its
-/// latency bits and the unique-point count are identical to the serial
-/// uncached sweep. With `opts.policy` set, only that policy's
-/// sub-lattice is swept (1-pool points included — dispatch order cannot
-/// matter there), so a policy pin constrains the search instead of
-/// rewriting its result.
+/// Lower the shared incumbent to `lat` if it improves it (CAS-min over
+/// f64 bits — non-negative finite floats and `+inf` order identically
+/// as sign-cleared `u64` bit patterns, so no float CAS is needed).
+fn tighten_incumbent(cell: &AtomicU64, lat: f64) {
+    let mut prev = cell.load(Ordering::Relaxed);
+    while lat < f64::from_bits(prev) {
+        match cell.compare_exchange_weak(prev, lat.to_bits(), Ordering::Relaxed, Ordering::Relaxed)
+        {
+            Ok(_) => break,
+            Err(p) => prev = p,
+        }
+    }
+}
+
+/// Search the lattice under explicit [`SweepOptions`]. Scoring fans out
+/// over the options' [`SweepPool`](crate::tuner::parallel::SweepPool)
+/// through `opts.cache`; the reduction is a serial index-ordered scan
+/// with strict `<`, so the chosen point, its latency bits and the
+/// unique-point count are identical to the serial uncached flat sweep.
+/// With `opts.policy` set, only that policy's sub-lattice is swept
+/// (1-pool points included — dispatch order cannot matter there), so a
+/// policy pin constrains the search instead of rewriting its result.
+///
+/// With `opts.prune` (the default) the sweep is best-first
+/// branch-and-bound — see the module docs for why the optimum cannot be
+/// pruned: a latency-optimal point's admissible bound never exceeds the
+/// incumbent (which always holds an exact latency ≥ the optimum), and
+/// the pruning test is strictly `bound > incumbent`, so every optimal
+/// point reaches the index-ordered tie-break scan.
 pub fn exhaustive_search_with(
     graph: &Graph,
     platform: &CpuPlatform,
     opts: &SweepOptions,
 ) -> PallasResult<SearchResult> {
-    let mut points = lattice(platform);
-    if let Some(pin) = opts.policy {
-        points.retain(|c| c.inter_op_pools == 1 || c.sched_policy == pin);
-    }
+    let all = lattice(platform);
+    let points: Vec<(usize, FrameworkConfig)> = all
+        .iter()
+        .cloned()
+        .enumerate()
+        .filter(|(_, c)| {
+            opts.policy.map_or(true, |pin| c.inter_op_pools == 1 || c.sched_policy == pin)
+        })
+        .collect();
     let evaluated = points.len();
     let prep = Arc::new(PreparedGraph::new(graph));
     let plat = Arc::new(platform.clone());
     let cache = Arc::clone(&opts.cache);
-    let scored: Vec<PallasResult<(FrameworkConfig, f64)>> =
-        par_map(opts.jobs, points, move |_, cfg| {
+
+    if !opts.prune {
+        let scored: Vec<PallasResult<(FrameworkConfig, f64)>> =
+            opts.pool.par_map(points, move |_, (_, cfg)| {
+                let lat = cache.latency(&prep, &plat, &cfg)?;
+                Ok((cfg, lat))
+            });
+        let mut best: Option<(FrameworkConfig, f64)> = None;
+        for scored_point in scored {
+            let (cfg, lat) = scored_point?;
+            if best.as_ref().map_or(true, |(_, b)| lat < *b) {
+                best = Some((cfg, lat));
+            }
+        }
+        let (best, best_latency_s) = best.expect("non-empty lattice");
+        return Ok(SearchResult { best, best_latency_s, evaluated, simulated: evaluated });
+    }
+
+    // Bound pass: price every point analytically (no engine runs; one
+    // family-table build amortized over all policy siblings, and the
+    // tables pre-warm the delta-sim path the survivors replay through),
+    // then order ascending so the strongest candidates simulate first
+    // and the incumbent tightens as early as possible. Index breaks
+    // bound ties, keeping the order deterministic.
+    let mut order: Vec<(f64, usize, FrameworkConfig)> = points
+        .into_iter()
+        .map(|(idx, cfg)| {
+            let b = bound::lower_bound(&cache, &prep, &plat, &cfg);
+            (b, idx, cfg)
+        })
+        .collect();
+    order.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+
+    // Exact latency of the best point simulated so far, shared across
+    // workers as f64 bits so pruning acts mid-sweep, not between chunks.
+    let incumbent = Arc::new(AtomicU64::new(f64::INFINITY.to_bits()));
+    let inc = Arc::clone(&incumbent);
+    let scored: Vec<PallasResult<Option<(usize, FrameworkConfig, f64)>>> =
+        opts.pool.par_map(order, move |_, (bnd, idx, cfg)| {
+            // strict `>`: a bound *equal* to the incumbent could still be
+            // an optimal point (bound == exact happens for serial
+            // configs), and ties must reach the index-ordered scan
+            if bnd > f64::from_bits(inc.load(Ordering::Relaxed)) {
+                return Ok(None);
+            }
             let lat = cache.latency(&prep, &plat, &cfg)?;
-            Ok((cfg, lat))
+            bound::record_if_unsound(bnd, lat);
+            tighten_incumbent(&inc, lat);
+            Ok(Some((idx, cfg, lat)))
         });
+    let mut survivors: Vec<(usize, FrameworkConfig, f64)> = Vec::with_capacity(evaluated);
+    for s in scored {
+        if let Some(t) = s? {
+            survivors.push(t);
+        }
+    }
+    let simulated = survivors.len();
+    survivors.sort_by_key(|&(idx, _, _)| idx);
     let mut best: Option<(FrameworkConfig, f64)> = None;
-    for scored_point in scored {
-        let (cfg, lat) = scored_point?;
+    for (_, cfg, lat) in survivors {
         if best.as_ref().map_or(true, |(_, b)| lat < *b) {
             best = Some((cfg, lat));
         }
     }
     let (best, best_latency_s) = best.expect("non-empty lattice");
-    Ok(SearchResult { best, best_latency_s, evaluated })
+    Ok(SearchResult { best, best_latency_s, evaluated, simulated })
 }
 
 #[cfg(test)]
@@ -160,7 +274,7 @@ mod tests {
             let points = lattice(&p);
             let set: std::collections::HashSet<_> = points.iter().cloned().collect();
             assert_eq!(set.len(), points.len(), "{}", p.name);
-            for c in &points {
+            for c in points.iter() {
                 assert_eq!(*c, crate::sim::canonical_config(&p, c), "{}", p.name);
                 if c.inter_op_pools == 1 {
                     assert_eq!(c.sched_policy, SchedPolicy::Topo, "{}", p.name);
@@ -170,10 +284,23 @@ mod tests {
     }
 
     #[test]
+    fn lattice_is_memoized_per_shape() {
+        // two calls share one allocation; a same-shape slice of a
+        // different platform shares it too (shape-not-name keying), and
+        // a different shape does not
+        let p = CpuPlatform::large2();
+        assert!(Arc::ptr_eq(&lattice(&p), &lattice(&p)));
+        let l = CpuPlatform::large();
+        assert!(Arc::ptr_eq(&lattice(&l.restrict(0, 8)), &lattice(&l.restrict(8, 8))));
+        assert!(!Arc::ptr_eq(&lattice(&p), &lattice(&l)));
+    }
+
+    #[test]
     fn sweeps_a_substantial_lattice() {
         let g = models::build("matmul_512", 0).unwrap();
         let r = exhaustive_search(&g, &CpuPlatform::small()).unwrap();
         assert!(r.evaluated > 50, "evaluated={}", r.evaluated);
+        assert!(r.simulated <= r.evaluated);
         assert!(r.best_latency_s > 0.0);
     }
 
@@ -206,6 +333,24 @@ mod tests {
             pinned.best.inter_op_pools == 1 || pinned.best.sched_policy == SchedPolicy::Topo
         );
         assert!(pinned.best_latency_s >= free.best_latency_s);
+    }
+
+    #[test]
+    fn pruned_matches_flat_and_stays_sound() {
+        // the full zoo-wide property lives in rust/tests/tuner_prune.rs;
+        // this is the unit-sized version of the tentpole claim
+        let g = models::build("inception_v2", 16).unwrap();
+        let p = CpuPlatform::small();
+        let flat =
+            exhaustive_search_with(&g, &p, &SweepOptions::with_jobs(1).prune(false)).unwrap();
+        let pruned =
+            exhaustive_search_with(&g, &p, &SweepOptions::with_jobs(1).prune(true)).unwrap();
+        assert_eq!(flat.best, pruned.best);
+        assert_eq!(flat.best_latency_s.to_bits(), pruned.best_latency_s.to_bits());
+        assert_eq!(flat.evaluated, pruned.evaluated);
+        assert_eq!(flat.simulated, flat.evaluated);
+        assert!(pruned.simulated <= pruned.evaluated);
+        assert_eq!(crate::tuner::bound::bound_unsound(), 0);
     }
 
     #[test]

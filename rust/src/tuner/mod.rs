@@ -8,24 +8,32 @@
 //!   TensorFlow out-of-the-box settings the paper compares against.
 //! * [`exhaustive`] — the global-optimum search over the design cube
 //!   (96³ points on `large.2`; pruned to the feasible lattice, with the
-//!   dispatch-policy dimension swept wherever > 1 pool makes it matter).
+//!   dispatch-policy dimension swept wherever > 1 pool makes it matter),
+//!   run as branch-and-bound: ascending-bound order, shared incumbent,
+//!   bit-identical optimum with far fewer simulations.
+//! * [`bound`] — the admissible analytic latency lower bound the search
+//!   prunes on (`max(critical path, work / pools)` from the family
+//!   phase tables), plus the `bound_unsound` soundness counter.
 //! * [`online`] — the windowed re-tuner: §8 as the prior, sim-scored
 //!   candidate core splits and per-group policy flips, applied live by
 //!   the coordinator.
 //! * [`parallel`] — the sweep executor every tier above runs on: a
-//!   `par_map` over the repo's own Eigen-style thread pool plus the
+//!   persistent [`parallel::SweepPool`] over the repo's own Eigen-style
+//!   thread pool (chunked submission, index-ordered results) plus the
 //!   shared [`crate::sim::SimCache`] memo, with deterministic
 //!   index-ordered reduction (results are bit-identical to the serial
 //!   uncached path at any `--jobs` value).
 
 pub mod baselines;
+pub mod bound;
 pub mod exhaustive;
 pub mod guidelines;
 pub mod online;
 pub mod parallel;
 
 pub use baselines::{baseline_config, Baseline};
+pub use bound::{bound_unsound, lower_bound};
 pub use exhaustive::{exhaustive_search, exhaustive_search_with, lattice, SearchResult};
 pub use guidelines::tune;
 pub use online::{OnlineTuner, OnlineTunerConfig};
-pub use parallel::{default_jobs, par_map, SweepOptions};
+pub use parallel::{default_jobs, par_map, parse_jobs, SweepOptions, SweepPool};

@@ -26,7 +26,7 @@ use crate::metrics::WindowSnapshot;
 use crate::sched::{LaneGroup, LanePlan};
 use crate::sim::SimCache;
 
-use super::parallel::{default_jobs, par_map};
+use super::parallel::{default_jobs, SweepPool};
 
 /// Controller knobs.
 #[derive(Debug, Clone)]
@@ -72,6 +72,10 @@ pub struct OnlineTuner {
     cfg: OnlineTunerConfig,
     rates: HashMap<String, f64>,
     cache: Arc<SimCache>,
+    /// Persistent candidate-scoring executor: workers spawn on the
+    /// first re-plan and are reused every window after, so the control
+    /// loop stops paying a pool spawn per window.
+    sweep: Arc<SweepPool>,
 }
 
 impl OnlineTuner {
@@ -82,12 +86,14 @@ impl OnlineTuner {
 
     /// Controller with explicit knobs.
     pub fn with_config(platform: CpuPlatform, kinds: &[&str], cfg: OnlineTunerConfig) -> Self {
+        let sweep = Arc::new(SweepPool::new(cfg.jobs));
         OnlineTuner {
             platform,
             kinds: kinds.iter().map(|s| s.to_string()).collect(),
             cfg,
             rates: HashMap::new(),
             cache: Arc::new(SimCache::new()),
+            sweep,
         }
     }
 
@@ -98,6 +104,21 @@ impl OnlineTuner {
     pub fn with_cache(mut self, cache: Arc<SimCache>) -> Self {
         self.cache = cache;
         self
+    }
+
+    /// Score candidates on a shared persistent executor (e.g. the
+    /// session's) instead of the tuner's own — lets an embedding tier
+    /// pool worker threads across every sweep it runs.
+    pub fn with_pool(mut self, pool: Arc<SweepPool>) -> Self {
+        self.sweep = pool;
+        self
+    }
+
+    /// The tuner's candidate-scoring executor (persists across
+    /// windows; its `spawn_count` stays at ≤ 1 however many re-plans
+    /// run).
+    pub fn sweep_pool(&self) -> &Arc<SweepPool> {
+        &self.sweep
     }
 
     /// Smoothed traffic share per kind (sums to 1; equal shares before
@@ -155,7 +176,7 @@ impl OnlineTuner {
         let bucket = self.cfg.score_bucket.max(1);
         let cache = Arc::clone(&self.cache);
         let scored: Vec<Option<(f64, LanePlan)>> =
-            par_map(self.cfg.jobs, candidates, move |_, c| {
+            self.sweep.par_map(candidates, move |_, c| {
                 if c.validate().is_err() {
                     return None;
                 }
@@ -396,6 +417,21 @@ mod tests {
             plans.push(p);
         }
         assert_eq!(plans[0], plans[1]);
+    }
+
+    #[test]
+    fn replans_share_one_persistent_pool() {
+        // the per-window pool-spawn fix: three proposes, at most one
+        // worker-pool spawn for the life of the tuner
+        let platform = CpuPlatform::large2();
+        let cfg = OnlineTunerConfig { jobs: 4, ..OnlineTunerConfig::default() };
+        let mut t = OnlineTuner::with_config(platform.clone(), &[A, B], cfg);
+        let initial = LanePlan::guideline(&platform, &[A, B]).unwrap();
+        t.observe(&window(8, 72));
+        for _ in 0..3 {
+            let _ = t.propose(&initial).unwrap();
+        }
+        assert!(t.sweep_pool().spawn_count() <= 1, "a pool was spawned per window");
     }
 
     #[test]

@@ -4,34 +4,197 @@
 //! The paper's §6.2 pool designs (`libs::threadpool`) existed only as
 //! benchmark subjects until this module; the tuner — the system's
 //! hottest loop — now dogfoods the Eigen-style work-stealing pool to
-//! fan simulation sweeps across cores. [`par_map`] is the single
-//! primitive: run a closure over every item, return results in item
-//! order. Because reduction happens index-ordered on the caller's
+//! fan simulation sweeps across cores. [`SweepPool`] is the executor:
+//! a lazily-spawned *persistent* `EigenPool` (owned by `api::Session`
+//! and by the online tuner across serving windows, so per-window
+//! re-plans stop paying a pool spawn) whose [`SweepPool::par_map`]
+//! submits work in index-contiguous chunks — one boxed closure and one
+//! channel send per chunk instead of per item — and returns results in
+//! item order. Because reduction happens index-ordered on the caller's
 //! thread (lowest-lattice-point tie-break preserved), a parallel sweep
 //! is bit-identical to the serial loop it replaces at any `--jobs`
 //! value.
 
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 
 use crate::config::SchedPolicy;
+use crate::error::{PallasError, PallasResult};
 use crate::libs::threadpool::{EigenPool, TaskPool};
 use crate::sim::SimCache;
 
-/// Default sweep worker count: the host's available parallelism, capped
-/// at 8 (sweep items are coarse simulations; beyond that the memo-cache
-/// lock and memory traffic eat the gain).
-pub fn default_jobs() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(1, 8)
+/// Strict parser for the `PALLAS_JOBS` override: `Ok(Some(n))` for a
+/// positive integer, `Ok(None)` when unset/empty/unparsable (fall back
+/// to the hardware default), `Err` for an explicit `0` — a request for
+/// "no workers" is a config error, not a default.
+///
+/// Pure function of its input so tests never race on the process
+/// environment (the `PARFRAME_BENCH_FAST` pattern).
+pub fn parse_jobs(value: Option<&str>) -> PallasResult<Option<usize>> {
+    let Some(raw) = value else { return Ok(None) };
+    let raw = raw.trim();
+    if raw.is_empty() {
+        return Ok(None);
+    }
+    match raw.parse::<usize>() {
+        Ok(0) => Err(PallasError::InvalidConfig(
+            "PALLAS_JOBS=0: sweep worker count must be >= 1 (unset it for the default)".into(),
+        )),
+        Ok(n) => Ok(Some(n)),
+        Err(_) => Ok(None),
+    }
 }
 
-/// Knobs shared by every sweep entry point: worker count (`--jobs`), the
-/// simulation memo-cache the workers consult, and an optional pin on the
-/// dispatch-policy dimension. Cloning shares the cache.
+/// Default sweep worker count: the `PALLAS_JOBS` env override when set
+/// to a positive integer (for CLI-less embedders; `0` panics with a
+/// config error, anything unparsable falls through), else the host's
+/// available parallelism capped at 8 (sweep items are coarse
+/// simulations; beyond that the memo-cache lock and memory traffic eat
+/// the gain).
+pub fn default_jobs() -> usize {
+    let env = std::env::var("PALLAS_JOBS").ok();
+    match parse_jobs(env.as_deref()) {
+        Ok(Some(n)) => n,
+        Ok(None) => {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(1, 8)
+        }
+        Err(e) => panic!("{e}"),
+    }
+}
+
+/// Chunks per worker in a [`SweepPool::par_map`] submission: enough
+/// slack for work stealing to even out uneven item costs (lattice
+/// points range from 1-pool serial sims to 8-pool wide ones), few
+/// enough that per-chunk overhead stays negligible.
+const OVERPARTITION: usize = 4;
+
+/// A persistent sweep executor: one lazily-spawned [`EigenPool`]
+/// reused across every sweep submitted to it. `api::Session` owns one
+/// for the exhaustive/guideline tiers and hands it to serving;
+/// `OnlineTuner` keeps one across windows — so steady-state re-plans
+/// and re-sweeps pay zero thread spawns (observable via
+/// [`Self::spawn_count`]).
+#[derive(Debug)]
+pub struct SweepPool {
+    jobs: usize,
+    /// The pool, spawned on first parallel submission. `Drop` of the
+    /// owning `SweepPool` joins the workers (via `EigenPool`'s Drop).
+    inner: Mutex<Option<Arc<EigenPool>>>,
+    spawns: AtomicUsize,
+}
+
+impl SweepPool {
+    /// An executor that will run up to `jobs` workers (1 = always
+    /// inline; no thread is ever spawned).
+    pub fn new(jobs: usize) -> Self {
+        SweepPool { jobs: jobs.max(1), inner: Mutex::new(None), spawns: AtomicUsize::new(0) }
+    }
+
+    /// The configured worker count.
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// How many times a pool has been spawned (0 or 1 for the life of
+    /// this executor — the reuse tests pin it).
+    pub fn spawn_count(&self) -> usize {
+        self.spawns.load(Ordering::Relaxed)
+    }
+
+    fn pool(&self) -> Arc<EigenPool> {
+        let mut guard = self.inner.lock().unwrap();
+        match &*guard {
+            Some(p) => Arc::clone(p),
+            None => {
+                let p = Arc::new(EigenPool::new(self.jobs));
+                self.spawns.fetch_add(1, Ordering::Relaxed);
+                *guard = Some(Arc::clone(&p));
+                p
+            }
+        }
+    }
+
+    /// Map `f` over `items`, returning results in item order (`f` also
+    /// receives the item index). With one job (or ≤ 1 item) this runs
+    /// inline — no pool, no channel. Worker panics re-raise on the
+    /// calling thread.
+    ///
+    /// Submission is chunked: index-contiguous chunks sized
+    /// `ceil(items / (jobs * OVERPARTITION))`, one boxed closure + one
+    /// channel send per *chunk* (not per item), each chunk's results
+    /// written back into preallocated slots by chunk start index.
+    pub fn par_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(usize, T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let jobs = self.jobs.min(n.max(1));
+        if jobs == 1 {
+            return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        }
+        let pool = self.pool();
+        let f = Arc::new(f);
+        let chunk = n.div_ceil(jobs * OVERPARTITION).max(1);
+        // each chunk reports (start index, caught results); panics
+        // re-raise below after the channel drains
+        let (tx, rx) = mpsc::channel::<(usize, std::thread::Result<Vec<R>>)>();
+        let mut items = items.into_iter();
+        let mut start = 0usize;
+        while start < n {
+            let take: Vec<T> = items.by_ref().take(chunk).collect();
+            let len = take.len();
+            let f = Arc::clone(&f);
+            let tx = tx.clone();
+            pool.execute(Box::new(move || {
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    take.into_iter()
+                        .enumerate()
+                        .map(|(off, t)| f(start + off, t))
+                        .collect::<Vec<R>>()
+                }));
+                let _ = tx.send((start, r));
+            }));
+            start += len;
+        }
+        drop(tx);
+        let mut out: Vec<Option<R>> = std::iter::repeat_with(|| None).take(n).collect();
+        for (start, r) in rx {
+            match r {
+                Ok(vs) => {
+                    for (off, v) in vs.into_iter().enumerate() {
+                        out[start + off] = Some(v);
+                    }
+                }
+                Err(panic) => std::panic::resume_unwind(panic),
+            }
+        }
+        out.into_iter().map(|o| o.expect("par_map worker dropped a result")).collect()
+    }
+}
+
+/// One-shot convenience: map over a transient [`SweepPool`]. Callers
+/// with a sweep loop (the session tiers, the online tuner) should hold
+/// a `SweepPool` instead, so the workers persist across calls.
+pub fn par_map<T, R, F>(jobs: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send + 'static,
+    R: Send + 'static,
+    F: Fn(usize, T) -> R + Send + Sync + 'static,
+{
+    SweepPool::new(jobs).par_map(items, f)
+}
+
+/// Knobs shared by every sweep entry point: the executor (worker count
+/// + persistent pool), the simulation memo-cache the workers consult,
+/// an optional pin on the dispatch-policy dimension, and the
+/// branch-and-bound switch. Cloning shares the pool and the cache.
 #[derive(Debug, Clone)]
 pub struct SweepOptions {
-    /// Sweep worker threads (1 = serial, no pool spawned).
-    pub jobs: usize,
+    /// The sweep executor; share one across sweeps (a `Session` does)
+    /// so repeated searches reuse the same worker threads.
+    pub pool: Arc<SweepPool>,
     /// Memoized-simulation cache; share one across sweeps to dedupe
     /// design points between tuner tiers.
     pub cache: Arc<SimCache>,
@@ -39,23 +202,38 @@ pub struct SweepOptions {
     /// are kept — a single pool serialises every order, so they belong
     /// to every policy's sub-lattice). `None` sweeps all policies.
     pub policy: Option<SchedPolicy>,
+    /// Branch-and-bound pruning (on by default; `tune --no-prune` and
+    /// the flat-baseline bench cases turn it off). Pruned and flat
+    /// sweeps return bit-identical results — the switch exists to
+    /// measure that, not to choose an answer.
+    pub prune: bool,
 }
 
 impl Default for SweepOptions {
     fn default() -> Self {
-        SweepOptions { jobs: default_jobs(), cache: Arc::new(SimCache::new()), policy: None }
+        Self::with_jobs(default_jobs())
     }
 }
 
 impl SweepOptions {
-    /// Explicit worker count, fresh cache.
+    /// Explicit worker count, fresh pool + fresh cache.
     pub fn with_jobs(jobs: usize) -> Self {
-        SweepOptions { jobs, ..Self::default() }
+        SweepOptions {
+            pool: Arc::new(SweepPool::new(jobs)),
+            cache: Arc::new(SimCache::new()),
+            policy: None,
+            prune: true,
+        }
     }
 
-    /// Explicit worker count over a shared cache.
+    /// Explicit worker count over a shared cache (fresh pool).
     pub fn shared(jobs: usize, cache: Arc<SimCache>) -> Self {
-        SweepOptions { jobs, cache, policy: None }
+        SweepOptions { cache, ..Self::with_jobs(jobs) }
+    }
+
+    /// The executor's worker count.
+    pub fn jobs(&self) -> usize {
+        self.pool.jobs()
     }
 
     /// Pin (or unpin) the swept policy dimension.
@@ -63,52 +241,20 @@ impl SweepOptions {
         self.policy = policy;
         self
     }
-}
 
-/// Map `f` over `items` on up to `jobs` Eigen-pool workers, returning
-/// results in item order (`f` also receives the item index). With one
-/// job (or ≤ 1 item) this runs inline — no pool, no channel. Worker
-/// panics are re-raised on the calling thread.
-///
-/// The pool is spawned per call and joined on return: sweep items are
-/// simulations (micro- to milliseconds each), so the one-off thread
-/// spawn is noise next to the work it parallelises — and per-window
-/// callers like the online tuner amortise it over a whole serving
-/// window.
-pub fn par_map<T, R, F>(jobs: usize, items: Vec<T>, f: F) -> Vec<R>
-where
-    T: Send + 'static,
-    R: Send + 'static,
-    F: Fn(usize, T) -> R + Send + Sync + 'static,
-{
-    let n = items.len();
-    let jobs = jobs.clamp(1, n.max(1));
-    if jobs == 1 {
-        return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    /// Run on a shared persistent executor instead of this option
+    /// set's own pool.
+    pub fn on_pool(mut self, pool: Arc<SweepPool>) -> Self {
+        self.pool = pool;
+        self
     }
-    let pool = EigenPool::new(jobs);
-    let f = Arc::new(f);
-    // each worker reports (index, caught result); panics re-raise below
-    let (tx, rx) = mpsc::channel::<(usize, std::thread::Result<R>)>();
-    for (i, item) in items.into_iter().enumerate() {
-        let f = Arc::clone(&f);
-        let tx = tx.clone();
-        pool.execute(Box::new(move || {
-            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i, item)));
-            let _ = tx.send((i, r));
-        }));
+
+    /// Enable/disable branch-and-bound pruning (the `--no-prune`
+    /// escape hatch; results are bit-identical either way).
+    pub fn prune(mut self, prune: bool) -> Self {
+        self.prune = prune;
+        self
     }
-    drop(tx);
-    let mut out: Vec<Option<R>> = std::iter::repeat_with(|| None).take(n).collect();
-    for (i, r) in rx {
-        match r {
-            Ok(v) => out[i] = Some(v),
-            Err(panic) => std::panic::resume_unwind(panic),
-        }
-    }
-    out.into_iter()
-        .map(|o| o.expect("par_map worker dropped a result"))
-        .collect()
 }
 
 #[cfg(test)]
@@ -153,8 +299,55 @@ mod tests {
     }
 
     #[test]
+    fn pool_is_reused_across_submissions() {
+        let pool = SweepPool::new(4);
+        assert_eq!(pool.spawn_count(), 0);
+        let a = pool.par_map((0..64).collect::<Vec<usize>>(), |_, x| x * 3);
+        let b = pool.par_map((0..64).collect::<Vec<usize>>(), |_, x| x * 3);
+        assert_eq!(a, b);
+        assert_eq!(a[63], 189);
+        assert_eq!(pool.spawn_count(), 1, "second sweep must reuse the first pool");
+    }
+
+    #[test]
+    fn serial_pool_never_spawns() {
+        let pool = SweepPool::new(1);
+        let out = pool.par_map((0..16).collect::<Vec<usize>>(), |i, x| i + x);
+        assert_eq!(out[8], 16);
+        assert_eq!(pool.spawn_count(), 0);
+    }
+
+    #[test]
+    fn chunked_results_land_in_their_slots() {
+        // more items than jobs * OVERPARTITION forces multi-item chunks;
+        // identity-map must still come back in exact item order
+        let pool = SweepPool::new(3);
+        let items: Vec<usize> = (0..1000).collect();
+        let out = pool.par_map(items, |i, x| {
+            assert_eq!(i, x);
+            x
+        });
+        assert_eq!(out, (0..1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parse_jobs_is_strict() {
+        assert_eq!(parse_jobs(None).unwrap(), None);
+        assert_eq!(parse_jobs(Some("")).unwrap(), None);
+        assert_eq!(parse_jobs(Some("  ")).unwrap(), None);
+        assert_eq!(parse_jobs(Some("nope")).unwrap(), None);
+        assert_eq!(parse_jobs(Some("-3")).unwrap(), None);
+        assert_eq!(parse_jobs(Some("6")).unwrap(), Some(6));
+        assert_eq!(parse_jobs(Some(" 2 ")).unwrap(), Some(2));
+        assert!(parse_jobs(Some("0")).is_err());
+    }
+
+    #[test]
     fn default_jobs_sane() {
+        // pure-parser tests above cover the env override race-free; here
+        // just pin the hardware fallback range (the env var may be set
+        // by an embedder's harness, so accept any positive count)
         let j = default_jobs();
-        assert!((1..=8).contains(&j));
+        assert!(j >= 1);
     }
 }

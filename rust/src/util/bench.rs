@@ -48,6 +48,9 @@ pub struct Bench {
     pub results: Vec<(String, Vec<f64>)>,
     /// (case name, value, unit) — custom metrics recorded with [`Bench::record`].
     pub records: Vec<(String, f64, String)>,
+    /// (case name, samples, unit) — multi-sample metrics recorded with
+    /// [`Bench::record_samples`]; get real `iters`/`p95`/`sd` columns.
+    pub sampled: Vec<(String, Vec<f64>, String)>,
     /// Wall-clock budget per case.
     pub budget: Duration,
     /// Minimum measured iterations per case.
@@ -64,6 +67,7 @@ impl Bench {
             name: name.to_string(),
             results: Vec::new(),
             records: Vec::new(),
+            sampled: Vec::new(),
             budget: if fast { Duration::from_millis(50) } else { Duration::from_millis(500) },
             min_iters: if fast { 3 } else { 10 },
             fast,
@@ -110,6 +114,24 @@ impl Bench {
         self.records.push((case.to_string(), value, unit.to_string()));
     }
 
+    /// Record a custom metric measured more than once (e.g. a whole-sweep
+    /// throughput re-timed over several full sweeps). Unlike [`Bench::record`]
+    /// the JSON row carries `iters = samples.len()` and real `p95`/`sd`
+    /// columns, so sweep-level cases are no longer single-shot statistics.
+    pub fn record_samples(&mut self, case: &str, samples: Vec<f64>, unit: &str) {
+        assert!(!samples.is_empty(), "record_samples needs at least one sample");
+        println!(
+            "{}/{:<40} iters={:<7} mean={:.6} p95={:.6} sd={:.6} {unit}",
+            self.name,
+            case,
+            samples.len(),
+            stats::mean(&samples),
+            stats::percentile(&samples, 95.0),
+            stats::stddev(&samples),
+        );
+        self.sampled.push((case.to_string(), samples, unit.to_string()));
+    }
+
     fn report_case(&self, case: &str, samples: &[f64]) {
         println!(
             "{}/{:<40} iters={:<7} mean={} p50={} p95={} sd={}",
@@ -130,7 +152,7 @@ impl Bench {
         println!(
             "bench suite '{}' done: {} cases",
             self.name,
-            self.results.len() + self.records.len()
+            self.results.len() + self.sampled.len() + self.records.len()
         );
         let dir = std::env::var("PARFRAME_BENCH_OUT").unwrap_or_else(|_| ".".to_string());
         match self.emit_to(Path::new(&dir)) {
@@ -177,6 +199,9 @@ impl Bench {
             .iter()
             .map(|(name, samples)| case(name, samples.len(), Some(samples), "s"))
             .collect();
+        for (name, samples, unit) in &self.sampled {
+            cases.push(case(name, samples.len(), Some(samples), unit));
+        }
         for (name, value, unit) in &self.records {
             let one = [*value];
             cases.push(case(name, 1, Some(&one), unit));
@@ -318,6 +343,23 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(Json::parse(&text).is_ok());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn record_samples_reports_real_iteration_stats() {
+        let _env = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        std::env::set_var("PARFRAME_BENCH_FAST", "1");
+        let mut b = Bench::new("samples");
+        b.record_samples("sweep/x/serial-cold", vec![100.0, 110.0, 90.0], "points/s");
+        let doc = Json::parse(&super::super::json::to_string(&b.to_json())).unwrap();
+        let cases = doc.get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), 1);
+        let row = &cases[0];
+        assert_eq!(row.get("iters").unwrap().as_usize(), Some(3));
+        assert_eq!(row.get("mean_s").unwrap().as_f64(), Some(100.0));
+        assert_eq!(row.get("unit").unwrap().as_str(), Some("points/s"));
+        // three distinct samples must surface as a nonzero spread
+        assert!(row.get("sd_s").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

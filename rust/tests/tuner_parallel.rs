@@ -29,7 +29,7 @@ fn serial_uncached_sweep(
 ) -> (FrameworkConfig, f64, usize) {
     let points = lattice(platform);
     let mut best: Option<(FrameworkConfig, f64)> = None;
-    for cfg in &points {
+    for cfg in points.iter() {
         let lat = sim::simulate(graph, platform, cfg).unwrap().latency_s;
         if best.as_ref().map_or(true, |(_, b)| lat < *b) {
             best = Some((cfg.clone(), lat));
@@ -158,10 +158,17 @@ fn cross_tier_dedupe_through_a_shared_cache() {
     let g = models::build("ncf", models::canonical_batch("ncf")).unwrap();
     let p = CpuPlatform::small();
     let cache = Arc::new(SimCache::new());
-    let first =
-        exhaustive_search_with(&g, &p, &SweepOptions::shared(2, Arc::clone(&cache))).unwrap();
+    let first = exhaustive_search_with(
+        &g,
+        &p,
+        &SweepOptions::shared(2, Arc::clone(&cache)).prune(false),
+    )
+    .unwrap();
     let misses_after_first = cache.misses();
     assert_eq!(misses_after_first as usize, first.evaluated);
+    assert_eq!(first.simulated, first.evaluated, "a flat sweep simulates every point");
+    // the re-sweep keeps branch-and-bound on: whatever subset it decides
+    // to simulate, the warm cache must already hold it
     let second =
         exhaustive_search_with(&g, &p, &SweepOptions::shared(4, Arc::clone(&cache))).unwrap();
     assert_eq!(cache.misses(), misses_after_first, "re-sweep must be pure cache hits");

@@ -1,0 +1,100 @@
+//! The tentpole property of the branch-and-bound tuner: across the
+//! model zoo, on both platform shapes, with or without a policy pin, at
+//! any `--jobs` value, the pruned sweep returns the **bit-identical**
+//! optimum of the flat sweep — same config, same latency bits, same
+//! unique-point count — while `simulated` reports how many points the
+//! admissible bound let it skip. And the bound must stay admissible the
+//! whole time: `bound_unsound()` counts every simulated point that came
+//! in below its analytic lower bound, and it must end at zero.
+
+use std::sync::Arc;
+
+use parframe::config::{CpuPlatform, SchedPolicy};
+use parframe::models;
+use parframe::sim::SimCache;
+use parframe::tuner::{bound_unsound, exhaustive_search_with, SweepOptions, SweepPool};
+
+const ZOO: [&str; 3] = ["wide_deep", "ncf", "squeezenet"];
+
+#[test]
+fn pruned_sweep_bit_identical_to_flat_across_zoo() {
+    for platform in [CpuPlatform::small(), CpuPlatform::large2()] {
+        for name in ZOO {
+            let g = models::build(name, models::canonical_batch(name)).unwrap();
+            for pin in [None, Some(SchedPolicy::Topo)] {
+                let flat = exhaustive_search_with(
+                    &g,
+                    &platform,
+                    &SweepOptions::with_jobs(1).prune(false).pinned(pin),
+                )
+                .unwrap();
+                assert_eq!(flat.simulated, flat.evaluated);
+                for jobs in [1usize, 4] {
+                    // cold cache each time: the pruned sweep must find the
+                    // same optimum while actually deciding what to skip,
+                    // not by replaying the flat sweep's memo entries
+                    let pruned = exhaustive_search_with(
+                        &g,
+                        &platform,
+                        &SweepOptions::with_jobs(jobs).pinned(pin),
+                    )
+                    .unwrap();
+                    let tag = format!("{name}/{}/pin={pin:?}/jobs={jobs}", platform.name);
+                    assert_eq!(pruned.best, flat.best, "{tag}: best config diverged");
+                    assert_eq!(
+                        pruned.best_latency_s.to_bits(),
+                        flat.best_latency_s.to_bits(),
+                        "{tag}: latency bits diverged"
+                    );
+                    assert_eq!(pruned.evaluated, flat.evaluated, "{tag}: lattice size diverged");
+                    assert!(pruned.simulated <= pruned.evaluated, "{tag}");
+                }
+            }
+        }
+    }
+    assert_eq!(bound_unsound(), 0, "a simulated point undercut its admissible bound");
+}
+
+#[test]
+fn pruning_actually_skips_points_on_the_large_platform() {
+    // the acceptance workload: a free (unpinned) wide_deep sweep on
+    // large.2. jobs=1 makes the best-first order — and therefore the
+    // skip count — deterministic.
+    let g = models::build("wide_deep", models::canonical_batch("wide_deep")).unwrap();
+    let p = CpuPlatform::large2();
+    let r = exhaustive_search_with(&g, &p, &SweepOptions::with_jobs(1)).unwrap();
+    assert!(
+        r.simulated < r.evaluated,
+        "branch-and-bound simulated every point: {}/{}",
+        r.simulated,
+        r.evaluated
+    );
+    assert_eq!(bound_unsound(), 0);
+}
+
+#[test]
+fn one_sweep_pool_serves_many_sweeps_bit_identically() {
+    // the persistent-executor satellite: two searches over one shared
+    // SweepPool spawn exactly one worker pool between them, and neither
+    // result drifts from a fresh-pool run
+    let p = CpuPlatform::small();
+    let pool = Arc::new(SweepPool::new(4));
+    let cache = Arc::new(SimCache::new());
+    for name in ["ncf", "squeezenet"] {
+        let g = models::build(name, models::canonical_batch(name)).unwrap();
+        let fresh = exhaustive_search_with(&g, &p, &SweepOptions::with_jobs(4)).unwrap();
+        let shared = exhaustive_search_with(
+            &g,
+            &p,
+            &SweepOptions::shared(4, Arc::clone(&cache)).on_pool(Arc::clone(&pool)),
+        )
+        .unwrap();
+        assert_eq!(shared.best, fresh.best, "{name}: shared-pool sweep diverged");
+        assert_eq!(
+            shared.best_latency_s.to_bits(),
+            fresh.best_latency_s.to_bits(),
+            "{name}: shared-pool latency bits diverged"
+        );
+    }
+    assert_eq!(pool.spawn_count(), 1, "re-sweeps must reuse the one spawned pool");
+}
