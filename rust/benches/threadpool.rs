@@ -1,26 +1,73 @@
 //! Bench: the paper's Fig. 14 measurement for real — 10k micro-tasks
-//! through each thread-pool implementation at 4 and 64 threads.
+//! through each thread-pool implementation at 4 and 64 threads — plus
+//! the pool-substrate cases: the preserved mutex [`ReferencePool`]
+//! plane, `EigenPool`'s batched scatter/gather, and the headline
+//! `fastpath-vs-reference` ratios that `parframe bench-check` validates
+//! in the committed `BENCH_threadpool.json`.
 //! (In-tree harness; criterion is unavailable offline.)
 
-use parframe::bench_tables::libraries::measure_pool_10k;
+use parframe::bench_tables::libraries::{measure_pool_10k_on, measure_pool_batch_10k_on};
 use parframe::config::PoolLib;
+use parframe::libs::threadpool::{make_pool, scatter_gather, EigenPool, ReferencePool};
 use parframe::util::bench::Bench;
 
 fn main() {
     let mut b = Bench::new("threadpool");
-    for lib in PoolLib::ALL {
-        for threads in [4usize, 64] {
+
+    // Per-task submission plane: one `execute` and one wrapper closure
+    // per task (the historical Fig. 14 shape) on every pool flavour.
+    for threads in [4usize, 64] {
+        for lib in PoolLib::ALL {
+            let pool = make_pool(lib, threads);
             b.run_with_output(&format!("{}/{}threads/10k-tasks", lib.name(), threads), || {
-                measure_pool_10k(lib, threads)
+                measure_pool_10k_on(pool.as_ref())
             });
         }
-    }
-    // dispatch-only cost: single submit+join round-trips
-    for lib in PoolLib::ALL {
-        let pool = parframe::libs::threadpool::make_pool(lib, 2);
-        b.run(&format!("{}/single-task-roundtrip", lib.name()), || {
-            parframe::libs::threadpool::scatter_gather(pool.as_ref(), vec![Box::new(|| {})]);
+        let reference = ReferencePool::new(threads);
+        b.run_with_output(&format!("reference/{threads}threads/10k-tasks"), || {
+            measure_pool_10k_on(&reference)
         });
     }
+
+    // Dispatch-only cost: single submit+join round-trips.
+    for lib in PoolLib::ALL {
+        let pool = make_pool(lib, 2);
+        b.run(&format!("{}/single-task-roundtrip", lib.name()), || {
+            scatter_gather(pool.as_ref(), vec![Box::new(|| {})]);
+        });
+    }
+    let reference = ReferencePool::new(2);
+    b.run("reference/single-task-roundtrip", || {
+        scatter_gather(&reference, vec![Box::new(|| {})]);
+    });
+
+    // Batch plane: `EigenPool::execute_batch_counted` — one injection,
+    // one wake decision, the completion latch carried inside the queue
+    // units instead of a wrapper box per task.
+    for threads in [4usize, 64] {
+        let pool = EigenPool::new(threads);
+        b.run_with_output(&format!("Eigen/{threads}threads/batch-submit"), || {
+            measure_pool_batch_10k_on(&pool)
+        });
+    }
+
+    // Headline ratios: 10k-task scatter/gather on the lock-free
+    // substrate vs the preserved mutex reference plane. ≥ 1.5x at
+    // 4 threads is the PR's acceptance bar; no regression at 64.
+    for (case, threads) in
+        [("fastpath-vs-reference", 4usize), ("fastpath-vs-reference/64threads", 64)]
+    {
+        let eigen = EigenPool::new(threads);
+        let reference = ReferencePool::new(threads);
+        let samples = if b.is_fast() { 3 } else { 7 };
+        let mut ratios = Vec::with_capacity(samples);
+        for _ in 0..samples {
+            let fast = measure_pool_batch_10k_on(&eigen);
+            let slow = measure_pool_batch_10k_on(&reference);
+            ratios.push(slow / fast);
+        }
+        b.record_samples(case, ratios, "x");
+    }
+
     b.finish();
 }

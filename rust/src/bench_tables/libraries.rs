@@ -7,7 +7,7 @@ use std::time::Instant;
 
 use crate::config::{CpuPlatform, MathLib, PoolLib};
 use crate::libs::math::MathModel;
-use crate::libs::threadpool::{make_pool, scatter_gather, Task};
+use crate::libs::threadpool::{make_pool, scatter_gather, Task, TaskPool, WaitGroup};
 use crate::sim::constants::{pool_dispatch_overhead, pool_oversubscription_factor};
 
 /// Fig. 13: single-thread GEMM top-down comparison of MKL / MKL-DNN /
@@ -46,36 +46,56 @@ pub fn fig13_library_comparison() -> String {
     out
 }
 
+fn count_tasks(counter: &Arc<AtomicU64>, n: usize) -> Vec<Task> {
+    (0..n)
+        .map(|_| {
+            let c = Arc::clone(counter);
+            Box::new(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            }) as Task
+        })
+        .collect()
+}
+
+/// 10k micro-tasks submitted one `execute` at a time (the historical
+/// Fig. 14 plane: per-task dispatch overhead, wrapper closure and all).
+/// Returns seconds.
+pub fn measure_pool_10k_on(pool: &dyn TaskPool) -> f64 {
+    let counter = Arc::new(AtomicU64::new(0));
+    let submit = |n: usize| {
+        let wg = WaitGroup::new(n);
+        for t in count_tasks(&counter, n) {
+            let h = wg.handle();
+            pool.execute(Box::new(move || {
+                t();
+                h.done();
+            }));
+        }
+        wg.wait();
+    };
+    submit(100); // warm-up
+    let t0 = Instant::now();
+    submit(10_000);
+    t0.elapsed().as_secs_f64()
+}
+
+/// 10k micro-tasks through [`scatter_gather`] — the batch-submission
+/// plane (one injection, one wake decision, pool-counted completions).
+/// Returns seconds.
+pub fn measure_pool_batch_10k_on(pool: &dyn TaskPool) -> f64 {
+    let counter = Arc::new(AtomicU64::new(0));
+    scatter_gather(pool, count_tasks(&counter, 100)); // warm-up
+    let t0 = Instant::now();
+    scatter_gather(pool, count_tasks(&counter, 10_000));
+    t0.elapsed().as_secs_f64()
+}
+
 /// Really run 10k micro-tasks through a pool (the paper's stress test:
-/// minimal compute, maximal synchronisation). Returns seconds.
+/// minimal compute, maximal synchronisation), per-task submission.
+/// Returns seconds.
 pub fn measure_pool_10k(lib: PoolLib, threads: usize) -> f64 {
     let pool = make_pool(lib, threads);
-    let counter = Arc::new(AtomicU64::new(0));
-    // warm-up
-    scatter_gather(
-        pool.as_ref(),
-        (0..100)
-            .map(|_| {
-                let c = Arc::clone(&counter);
-                Box::new(move || {
-                    c.fetch_add(1, Ordering::Relaxed);
-                }) as Task
-            })
-            .collect(),
-    );
-    let t0 = Instant::now();
-    scatter_gather(
-        pool.as_ref(),
-        (0..10_000)
-            .map(|_| {
-                let c = Arc::clone(&counter);
-                Box::new(move || {
-                    c.fetch_add(1, Ordering::Relaxed);
-                }) as Task
-            })
-            .collect(),
-    );
-    t0.elapsed().as_secs_f64()
+    measure_pool_10k_on(pool.as_ref())
 }
 
 /// Modelled 10k-task latency on the paper's `small` platform (4 cores / 8
@@ -159,5 +179,14 @@ mod tests {
             let secs = measure_pool_10k(lib, 4);
             assert!(secs > 0.0 && secs < 30.0, "{lib:?}: {secs}");
         }
+    }
+
+    #[test]
+    fn batch_plane_completes_10k() {
+        use crate::libs::threadpool::{EigenPool, ReferencePool};
+        let secs = measure_pool_batch_10k_on(&EigenPool::new(4));
+        assert!(secs > 0.0 && secs < 30.0, "eigen batch: {secs}");
+        let secs = measure_pool_batch_10k_on(&ReferencePool::new(4));
+        assert!(secs > 0.0 && secs < 30.0, "reference batch: {secs}");
     }
 }

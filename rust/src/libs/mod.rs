@@ -3,11 +3,12 @@
 //! * [`math`] — analytic models of the MKL / MKL-DNN / Eigen GEMM kernels:
 //!   efficiency vs size, prefetch effectiveness, LLC behaviour, top-down
 //!   cycle breakdown (the Fig. 13 quantities). These feed the simulator.
-//! * [`threadpool`] — three *real, runnable* thread pools mirroring the
-//!   designs the paper benchmarks in Fig. 14: a naive `std::thread` pool, an
-//!   Eigen-style work-stealing pool, and a Folly-style MPMC pool with LIFO
-//!   wake-up. They execute the coordinator's work and are measured by
-//!   `benches/threadpool.rs`.
+//! * [`threadpool`] — *real, runnable* thread pools mirroring the designs
+//!   the paper benchmarks in Fig. 14: a naive `std::thread` pool, the
+//!   lock-free Eigen-style work-stealing pool (Chase–Lev deques +
+//!   eventcount parking), a Folly-style MPMC pool with LIFO wake-up, and
+//!   the preserved mutex-based `ReferencePool` baseline. They execute the
+//!   coordinator's work and are measured by `benches/threadpool.rs`.
 
 pub mod math;
 pub mod threadpool;

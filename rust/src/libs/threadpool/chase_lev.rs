@@ -1,0 +1,450 @@
+//! Chase–Lev work-stealing deque (the queue inside Eigen's pool).
+//!
+//! Single producer, multiple consumers: the owning worker pushes and
+//! takes at the *bottom* (LIFO — its own most recent task is the
+//! cache-warm one), thieves steal at the *top* (FIFO — the oldest task
+//! is the one least likely to be in the owner's cache anyway). The
+//! implementation follows Chase & Lev ("Dynamic Circular Work-Stealing
+//! Deque", SPAA'05) with the C11 orderings of Lê et al. ("Correct and
+//! Efficient Work-Stealing for Weak Memory Models", PPoPP'13):
+//! `Acquire`/`Release` on the index pair plus the canonical `SeqCst`
+//! fences/CAS on the take-vs-steal race over the last element.
+//!
+//! The ring buffer grows by doubling when the owner pushes into a full
+//! ring. Retired rings are kept alive (owner-side, behind a mutex that
+//! only the grow path touches) until the deque itself drops, so a
+//! thief that loaded a stale ring pointer can still read through it:
+//! the element bits at any logical index are identical in every ring
+//! that contains that index, and the `top` CAS decides uniquely who
+//! consumes it.
+
+use std::cell::UnsafeCell;
+use std::marker::PhantomData;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{fence, AtomicIsize, AtomicPtr, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Initial ring capacity (grows by doubling; must be a power of two).
+const INITIAL_CAP: usize = 64;
+
+struct Ring<T> {
+    mask: usize,
+    slots: Box<[UnsafeCell<MaybeUninit<T>>]>,
+}
+
+impl<T> Ring<T> {
+    fn alloc(cap: usize) -> *mut Ring<T> {
+        assert!(cap.is_power_of_two());
+        let slots = (0..cap)
+            .map(|_| UnsafeCell::new(MaybeUninit::uninit()))
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        Box::into_raw(Box::new(Ring { mask: cap - 1, slots }))
+    }
+
+    fn cap(&self) -> usize {
+        self.mask + 1
+    }
+
+    /// Copy the element bits at logical index `i` out of the ring.
+    ///
+    /// # Safety
+    /// The caller must own logical index `i` (bottom reservation or a
+    /// successful `top` CAS) before *using* the value; a speculative
+    /// read that loses the race must be `mem::forget`-ten, not dropped.
+    unsafe fn read(&self, i: isize) -> T {
+        debug_assert!(i >= 0);
+        std::ptr::read((*self.slots[i as usize & self.mask].get()).as_ptr())
+    }
+
+    /// Write the element bits at logical index `i` (owner only; never
+    /// drops a previous occupant — slots are `MaybeUninit`).
+    ///
+    /// # Safety
+    /// Owner-thread only, and slot `i & mask` must not hold a live
+    /// element the deque still hands out.
+    unsafe fn write(&self, i: isize, v: T) {
+        debug_assert!(i >= 0);
+        (*self.slots[i as usize & self.mask].get()).write(v);
+    }
+}
+
+struct Inner<T> {
+    /// Steal cursor — only ever incremented (no ABA).
+    top: AtomicIsize,
+    /// Owner cursor — push increments, take decrements.
+    bottom: AtomicIsize,
+    ring: AtomicPtr<Ring<T>>,
+    /// Rings retired by growth, freed when the deque drops. Only the
+    /// owner's grow path pushes here, so the mutex is uncontended.
+    retired: Mutex<Vec<*mut Ring<T>>>,
+}
+
+unsafe impl<T: Send> Send for Inner<T> {}
+unsafe impl<T: Send> Sync for Inner<T> {}
+
+impl<T> Drop for Inner<T> {
+    fn drop(&mut self) {
+        // Sole remaining handle: plain loads are fine.
+        let t = *self.top.get_mut();
+        let b = *self.bottom.get_mut();
+        let ring = *self.ring.get_mut();
+        unsafe {
+            for i in t..b {
+                drop((*ring).read(i));
+            }
+            drop(Box::from_raw(ring));
+            for r in self.retired.get_mut().unwrap().drain(..) {
+                drop(Box::from_raw(r));
+            }
+        }
+    }
+}
+
+/// Owner handle: `push`/`take` at the bottom. `Send` (it moves into the
+/// worker thread) but deliberately `!Sync` — the Chase–Lev owner end is
+/// single-threaded by contract.
+pub struct Worker<T> {
+    inner: Arc<Inner<T>>,
+    _not_sync: PhantomData<std::cell::Cell<()>>,
+}
+
+/// Thief handle: `steal` at the top. Clone freely across threads.
+pub struct Stealer<T> {
+    inner: Arc<Inner<T>>,
+}
+
+impl<T> Clone for Stealer<T> {
+    fn clone(&self) -> Self {
+        Stealer { inner: Arc::clone(&self.inner) }
+    }
+}
+
+/// Outcome of a steal attempt.
+pub enum Steal<T> {
+    /// The deque was observably empty.
+    Empty,
+    /// Lost a race with the owner or another thief; worth retrying.
+    Retry,
+    /// Got the oldest element.
+    Success(T),
+}
+
+/// Create a deque, returning the owner and a thief handle.
+pub fn deque<T: Send>() -> (Worker<T>, Stealer<T>) {
+    let inner = Arc::new(Inner {
+        top: AtomicIsize::new(0),
+        bottom: AtomicIsize::new(0),
+        ring: AtomicPtr::new(Ring::alloc(INITIAL_CAP)),
+        retired: Mutex::new(Vec::new()),
+    });
+    (Worker { inner: Arc::clone(&inner), _not_sync: PhantomData }, Stealer { inner })
+}
+
+impl<T: Send> Worker<T> {
+    /// Push at the bottom (owner thread only). Grows the ring when full.
+    pub fn push(&self, value: T) {
+        let inner = &*self.inner;
+        let b = inner.bottom.load(Ordering::Relaxed);
+        let t = inner.top.load(Ordering::Acquire);
+        let mut ring = inner.ring.load(Ordering::Relaxed);
+        unsafe {
+            if b - t >= (*ring).cap() as isize {
+                ring = self.grow(ring, b, t);
+            }
+            (*ring).write(b, value);
+        }
+        // Publish the element before the new bottom becomes visible.
+        inner.bottom.store(b + 1, Ordering::Release);
+    }
+
+    /// Pop at the bottom (owner thread only) — LIFO relative to `push`.
+    pub fn take(&self) -> Option<T> {
+        let inner = &*self.inner;
+        let b = inner.bottom.load(Ordering::Relaxed) - 1;
+        let ring = inner.ring.load(Ordering::Relaxed);
+        inner.bottom.store(b, Ordering::Relaxed);
+        // Order the bottom decrement against the thieves' top reads.
+        fence(Ordering::SeqCst);
+        let t = inner.top.load(Ordering::Relaxed);
+        if t <= b {
+            // Non-empty: the speculative read is safe to *use* unless we
+            // lose the last-element race below.
+            let v = unsafe { (*ring).read(b) };
+            if t == b {
+                // Last element: race thieves for it via the top CAS.
+                let won = inner
+                    .top
+                    .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                    .is_ok();
+                inner.bottom.store(b + 1, Ordering::Relaxed);
+                if !won {
+                    // A thief claimed it; our copy must not drop.
+                    std::mem::forget(v);
+                    return None;
+                }
+            }
+            Some(v)
+        } else {
+            // Empty: restore bottom.
+            inner.bottom.store(b + 1, Ordering::Relaxed);
+            None
+        }
+    }
+
+    /// Owner-side size estimate (exact on the owner thread).
+    pub fn len(&self) -> usize {
+        let b = self.inner.bottom.load(Ordering::Relaxed);
+        let t = self.inner.top.load(Ordering::Relaxed);
+        (b - t).max(0) as usize
+    }
+
+    /// Whether the deque looks empty from the owner's side.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Double the ring, copying live logical indices; retires the old
+    /// ring until the deque drops (in-flight thieves may still read it).
+    unsafe fn grow(&self, old: *mut Ring<T>, b: isize, t: isize) -> *mut Ring<T> {
+        let new = Ring::alloc((*old).cap() * 2);
+        for i in t..b {
+            // Bit-copy; the old slot's copy is dead from here on (it is
+            // never read once `ring` points at the doubled ring, except
+            // by a thief whose logical index both rings agree on).
+            (*new).write(i, (*old).read(i));
+        }
+        self.inner.ring.store(new, Ordering::Release);
+        self.inner.retired.lock().unwrap().push(old);
+        new
+    }
+}
+
+impl<T: Send> Stealer<T> {
+    /// Steal at the top — FIFO relative to the owner's `push`.
+    pub fn steal(&self) -> Steal<T> {
+        let inner = &*self.inner;
+        let t = inner.top.load(Ordering::Acquire);
+        // Order the top read against the owner's bottom decrement.
+        fence(Ordering::SeqCst);
+        let b = inner.bottom.load(Ordering::Acquire);
+        if t >= b {
+            return Steal::Empty;
+        }
+        let ring = inner.ring.load(Ordering::Acquire);
+        // Speculative read; only ours if the CAS claims index `t`.
+        let v = unsafe { (*ring).read(t) };
+        if inner.top.compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed).is_ok() {
+            Steal::Success(v)
+        } else {
+            std::mem::forget(v);
+            Steal::Retry
+        }
+    }
+
+    /// Racy size estimate (for heuristics only).
+    pub fn len(&self) -> usize {
+        let t = self.inner.top.load(Ordering::Relaxed);
+        let b = self.inner.bottom.load(Ordering::Relaxed);
+        (b - t).max(0) as usize
+    }
+
+    /// Whether the deque looks empty right now.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+    #[test]
+    fn owner_take_is_lifo() {
+        let (w, _s) = deque::<usize>();
+        for i in 0..5 {
+            w.push(i);
+        }
+        assert_eq!(w.take(), Some(4));
+        assert_eq!(w.take(), Some(3));
+        w.push(9);
+        assert_eq!(w.take(), Some(9));
+        assert_eq!(w.take(), Some(2));
+        assert_eq!(w.take(), Some(1));
+        assert_eq!(w.take(), Some(0));
+        assert_eq!(w.take(), None);
+    }
+
+    #[test]
+    fn steal_is_fifo() {
+        let (w, s) = deque::<usize>();
+        for i in 0..4 {
+            w.push(i);
+        }
+        match s.steal() {
+            Steal::Success(v) => assert_eq!(v, 0),
+            _ => panic!("steal from a quiet 4-element deque must succeed"),
+        }
+        match s.steal() {
+            Steal::Success(v) => assert_eq!(v, 1),
+            _ => panic!("second steal must succeed"),
+        }
+        // owner still sees the LIFO end
+        assert_eq!(w.take(), Some(3));
+        assert_eq!(w.take(), Some(2));
+        assert_eq!(w.take(), None);
+    }
+
+    #[test]
+    fn ring_grows_past_initial_capacity() {
+        let (w, _s) = deque::<usize>();
+        let n = INITIAL_CAP * 8 + 3;
+        for i in 0..n {
+            w.push(i);
+        }
+        assert_eq!(w.len(), n);
+        let mut sum = 0usize;
+        while let Some(v) = w.take() {
+            sum += v;
+        }
+        assert_eq!(sum, n * (n - 1) / 2);
+    }
+
+    #[test]
+    fn interleaved_push_take_across_growth() {
+        // Push/takes straddling several growth boundaries keep LIFO order.
+        let (w, _s) = deque::<usize>();
+        let mut expect = Vec::new();
+        for round in 0..10 {
+            for i in 0..(INITIAL_CAP + 7) {
+                w.push(round * 1000 + i);
+                expect.push(round * 1000 + i);
+            }
+            for _ in 0..INITIAL_CAP / 2 {
+                assert_eq!(w.take(), expect.pop());
+            }
+        }
+        while let Some(v) = w.take() {
+            assert_eq!(Some(v), expect.pop());
+        }
+        assert!(expect.is_empty());
+    }
+
+    #[test]
+    fn drop_releases_queued_elements() {
+        // Arc elements: dropping a non-empty deque must drop its queue.
+        let marker = Arc::new(());
+        {
+            let (w, _s) = deque::<Arc<()>>();
+            for _ in 0..(INITIAL_CAP * 3) {
+                w.push(Arc::clone(&marker));
+            }
+            let _ = w.take(); // leave a mix of taken and queued
+        }
+        assert_eq!(Arc::strong_count(&marker), 1, "queued elements leaked on drop");
+    }
+
+    #[test]
+    fn concurrent_steal_take_conserves_items() {
+        // Owner pushes N and takes; 3 thieves steal; every item is
+        // consumed exactly once (the take/steal last-element race).
+        const N: usize = 20_000;
+        let (w, s) = deque::<usize>();
+        let seen: Arc<Vec<AtomicBool>> =
+            Arc::new((0..N).map(|_| AtomicBool::new(false)).collect());
+        let consumed = Arc::new(AtomicUsize::new(0));
+        let done = Arc::new(AtomicBool::new(false));
+        let thieves: Vec<_> = (0..3)
+            .map(|_| {
+                let s = s.clone();
+                let seen = Arc::clone(&seen);
+                let consumed = Arc::clone(&consumed);
+                let done = Arc::clone(&done);
+                std::thread::spawn(move || loop {
+                    match s.steal() {
+                        Steal::Success(v) => {
+                            assert!(!seen[v].swap(true, Ordering::SeqCst), "dup {v}");
+                            consumed.fetch_add(1, Ordering::SeqCst);
+                        }
+                        Steal::Retry => std::hint::spin_loop(),
+                        Steal::Empty => {
+                            if done.load(Ordering::SeqCst) {
+                                return;
+                            }
+                            std::hint::spin_loop();
+                        }
+                    }
+                })
+            })
+            .collect();
+        for v in 0..N {
+            w.push(v);
+            // interleave takes so both ends race for real
+            if v % 3 == 0 {
+                if let Some(got) = w.take() {
+                    assert!(!seen[got].swap(true, Ordering::SeqCst), "dup {got}");
+                    consumed.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+        }
+        while let Some(got) = w.take() {
+            assert!(!seen[got].swap(true, Ordering::SeqCst), "dup {got}");
+            consumed.fetch_add(1, Ordering::SeqCst);
+        }
+        // drain stragglers the thieves raced us for
+        while consumed.load(Ordering::SeqCst) < N {
+            std::hint::spin_loop();
+        }
+        done.store(true, Ordering::SeqCst);
+        for th in thieves {
+            th.join().unwrap();
+        }
+        assert_eq!(consumed.load(Ordering::SeqCst), N);
+        assert!(seen.iter().all(|b| b.load(Ordering::SeqCst)));
+    }
+
+    #[test]
+    fn growth_under_concurrent_steals() {
+        // Force repeated growth while thieves are active: starts at
+        // INITIAL_CAP and pushes far beyond it without the owner taking.
+        const N: usize = 50_000;
+        let (w, s) = deque::<usize>();
+        let stolen = Arc::new(AtomicUsize::new(0));
+        let done = Arc::new(AtomicBool::new(false));
+        let thieves: Vec<_> = (0..2)
+            .map(|_| {
+                let s = s.clone();
+                let stolen = Arc::clone(&stolen);
+                let done = Arc::clone(&done);
+                std::thread::spawn(move || {
+                    let mut sum = 0usize;
+                    loop {
+                        match s.steal() {
+                            Steal::Success(v) => {
+                                sum += v;
+                                stolen.fetch_add(1, Ordering::SeqCst);
+                            }
+                            Steal::Retry => {}
+                            Steal::Empty => {
+                                if done.load(Ordering::SeqCst) && s.is_empty() {
+                                    return sum;
+                                }
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        let mut owner_sum = 0usize;
+        for v in 0..N {
+            w.push(v);
+        }
+        while let Some(v) = w.take() {
+            owner_sum += v;
+        }
+        done.store(true, Ordering::SeqCst);
+        let thief_sum: usize = thieves.into_iter().map(|t| t.join().unwrap()).sum();
+        assert_eq!(owner_sum + thief_sum, N * (N - 1) / 2);
+    }
+}

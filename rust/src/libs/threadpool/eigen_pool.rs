@@ -1,155 +1,337 @@
-//! Eigen-style non-blocking pool: per-thread task deques with random work
-//! stealing and a spin-then-park idle policy.
+//! Eigen-style pool, rebuilt as a lock-free substrate.
 //!
-//! Contention is distributed — each worker owns a deque (LIFO for locality
-//! on its own tasks, FIFO when stolen), so pushes rarely collide. This is
-//! why Eigen tolerates oversubscription far better than the naive pool in
-//! the paper's Fig. 14.
+//! PR 4–8 dogfooded this pool under every hot sweep, but its deques
+//! were `Mutex<VecDeque>` and every `execute` took a *global* idle
+//! mutex — the faster the sim/search fast paths got, the larger the
+//! share of each sweep spent serialising on pool locks. This rebuild
+//! removes the locks from every steady-state path:
+//!
+//! * each worker owns a [`chase_lev`] stealing deque — owner pushes
+//!   and takes LIFO at the bottom with plain atomics, thieves steal
+//!   FIFO at the top with one CAS;
+//! * external submissions go through a lock-free Vyukov MPMC
+//!   *injector* ring ([`mpmc::MpmcQueue`]), falling back to a mutexed
+//!   overflow list only under extreme burst;
+//! * a task spawned *from inside a worker* lands in that worker's own
+//!   deque via a thread-local registry — no shared cursor, no lock,
+//!   and the spawning worker's next `take` gets it cache-warm;
+//! * parking is an [`eventcount::EventCount`] — uncontended submission
+//!   is a queue push plus one `SeqCst` read of the waiter count, and a
+//!   wake happens only when a worker is actually parked;
+//! * [`EigenPool::execute_batch`] / `execute_batch_counted` inject a
+//!   whole chunk of tasks with a single pending update and one wake
+//!   decision proportional to the batch size, and count completions on
+//!   the [`WaitGroup`] *inside* the pool — no wrapper closure, no
+//!   second box per task.
+//!
+//! The previous mutex-based implementation is preserved verbatim as
+//! [`super::ReferencePool`] — the measured baseline for
+//! `BENCH_threadpool.json`'s `fastpath-vs-reference` cases.
+//!
+//! Shutdown drains: `Drop` wakes everyone and workers only exit once
+//! the pool is both shut down and observably empty (`pending == 0`),
+//! so no submitted task is dropped.
 
+use std::cell::Cell;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::util::prng::Prng;
 
-use super::{Task, TaskPool};
+use super::chase_lev::{self, Steal};
+use super::eventcount::EventCount;
+use super::mpmc::MpmcQueue;
+use super::{Task, TaskPool, WaitGroup};
 
-struct Shared {
-    deques: Vec<Mutex<VecDeque<Task>>>,
-    /// parked-worker wake-up
-    idle: Mutex<usize>,
-    cv: Condvar,
-    shutdown: AtomicBool,
-    /// round-robin submission cursor
-    next: AtomicUsize,
-    /// outstanding task count (lets workers park safely)
-    pending: AtomicUsize,
+/// Injector ring capacity; bursts beyond it spill to the overflow list.
+const INJECTOR_CAP: usize = 8192;
+
+/// Scan attempts before a worker gives up and parks.
+const SPIN_TRIES: usize = 64;
+
+/// One queued unit of work: the task plus the batch latch the pool
+/// itself decrements on completion (the no-double-box path that
+/// `scatter_gather` rides).
+struct Unit {
+    task: Task,
+    wg: Option<WaitGroup>,
 }
 
-/// The work-stealing pool.
+impl Unit {
+    fn run(self) {
+        (self.task)();
+        if let Some(wg) = self.wg {
+            wg.done();
+        }
+    }
+}
+
+/// Process-unique pool ids for the thread-local worker registry
+/// (id 0 = "not a pool worker").
+static NEXT_POOL_ID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// (owning pool id, pointer to this thread's own deque). Set once
+    /// when a worker thread starts; the pointer targets the `worker`
+    /// stack frame, which outlives every task the worker runs.
+    static CURRENT_WORKER: Cell<(u64, *const ())> = const { Cell::new((0, std::ptr::null())) };
+}
+
+struct Shared {
+    pool_id: u64,
+    stealers: Vec<chase_lev::Stealer<Unit>>,
+    injector: MpmcQueue<Unit>,
+    /// Burst spill-over when the injector ring is full (rare).
+    overflow: Mutex<VecDeque<Unit>>,
+    overflow_len: AtomicUsize,
+    ec: EventCount,
+    shutdown: AtomicBool,
+    /// Submitted-but-not-yet-popped units: workers drain to zero before
+    /// exiting at shutdown, and skip parking while it is nonzero.
+    pending: AtomicUsize,
+    // --- observability (tests + tuning) ---
+    local_submits: AtomicUsize,
+    injected: AtomicUsize,
+    steals: AtomicUsize,
+}
+
+/// The lock-free work-stealing pool.
 pub struct EigenPool {
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
 }
 
 impl EigenPool {
-    /// Spawn `n` workers, each owning a deque.
+    /// Spawn `n` workers, each owning a Chase–Lev deque.
     pub fn new(n: usize) -> Self {
         assert!(n > 0);
+        let mut owners = Vec::with_capacity(n);
+        let mut stealers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (w, s) = chase_lev::deque::<Unit>();
+            owners.push(w);
+            stealers.push(s);
+        }
         let shared = Arc::new(Shared {
-            deques: (0..n).map(|_| Mutex::new(VecDeque::new())).collect(),
-            idle: Mutex::new(0),
-            cv: Condvar::new(),
+            pool_id: NEXT_POOL_ID.fetch_add(1, Ordering::Relaxed),
+            stealers,
+            injector: MpmcQueue::new(INJECTOR_CAP),
+            overflow: Mutex::new(VecDeque::new()),
+            overflow_len: AtomicUsize::new(0),
+            ec: EventCount::new(n),
             shutdown: AtomicBool::new(false),
-            next: AtomicUsize::new(0),
             pending: AtomicUsize::new(0),
+            local_submits: AtomicUsize::new(0),
+            injected: AtomicUsize::new(0),
+            steals: AtomicUsize::new(0),
         });
-        let workers = (0..n)
-            .map(|i| {
+        let workers = owners
+            .into_iter()
+            .enumerate()
+            .map(|(i, own)| {
                 let s = Arc::clone(&shared);
                 std::thread::Builder::new()
                     .name(format!("eigen-pool-{i}"))
-                    .spawn(move || worker(s, i))
+                    .spawn(move || worker(s, i, own))
                     .expect("spawn")
             })
             .collect();
         EigenPool { shared, workers }
     }
+
+    /// Tasks that took the worker-local fast path (submitted from
+    /// inside a worker of this pool, straight into its own deque).
+    pub fn local_submits(&self) -> usize {
+        self.shared.local_submits.load(Ordering::Relaxed)
+    }
+
+    /// Tasks that went through the external-submission injector.
+    pub fn injected(&self) -> usize {
+        self.shared.injected.load(Ordering::Relaxed)
+    }
+
+    /// Successful cross-worker steals so far.
+    pub fn steals(&self) -> usize {
+        self.shared.steals.load(Ordering::Relaxed)
+    }
+
+    /// This pool's own deque for the calling thread, when the calling
+    /// thread is one of this pool's workers.
+    fn local_worker(&self) -> Option<&chase_lev::Worker<Unit>> {
+        let (id, ptr) = CURRENT_WORKER.with(|c| c.get());
+        if id == self.shared.pool_id && !ptr.is_null() {
+            // In-bounds by construction: the registry entry was written
+            // by this very thread when its worker loop started, and the
+            // deque it points at lives in that loop's frame below us on
+            // this same thread's stack.
+            Some(unsafe { &*(ptr as *const chase_lev::Worker<Unit>) })
+        } else {
+            None
+        }
+    }
+
+    fn submit(&self, unit: Unit) {
+        // pending rises before the unit is reachable, so shutdown can
+        // never observe "empty" while a push is in flight.
+        self.shared.pending.fetch_add(1, Ordering::SeqCst);
+        if let Some(local) = self.local_worker() {
+            local.push(unit);
+            self.shared.local_submits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            inject(&self.shared, unit);
+            self.shared.injected.fetch_add(1, Ordering::Relaxed);
+        }
+        self.shared.ec.notify(1);
+    }
+
+    fn submit_batch(&self, tasks: Vec<Task>, wg: Option<&WaitGroup>) {
+        let n = tasks.len();
+        if n == 0 {
+            return;
+        }
+        self.shared.pending.fetch_add(n, Ordering::SeqCst);
+        if let Some(local) = self.local_worker() {
+            for task in tasks {
+                local.push(Unit { task, wg: wg.map(|w| w.handle()) });
+            }
+            self.shared.local_submits.fetch_add(n, Ordering::Relaxed);
+        } else {
+            for task in tasks {
+                inject(&self.shared, Unit { task, wg: wg.map(|w| w.handle()) });
+            }
+            self.shared.injected.fetch_add(n, Ordering::Relaxed);
+        }
+        // one wake decision for the whole batch, sized to it
+        self.shared.ec.notify(n.min(self.shared.stealers.len()));
+    }
 }
 
-const SPIN_TRIES: usize = 64;
-
-fn try_pop(shared: &Shared, me: usize, rng: &mut Prng) -> Option<Task> {
-    // own deque first (LIFO end — cache-warm)
-    if let Some(t) = shared.deques[me].lock().unwrap().pop_back() {
-        return Some(t);
-    }
-    // then steal a victim's FIFO end
-    let n = shared.deques.len();
-    let start = rng.below(n.max(1));
-    for off in 0..n {
-        let v = (start + off) % n;
-        if v == me {
-            continue;
+fn inject(shared: &Shared, unit: Unit) {
+    match shared.injector.push(unit) {
+        Ok(()) => {}
+        Err(unit) => {
+            let mut ov = shared.overflow.lock().unwrap();
+            ov.push_back(unit);
+            shared.overflow_len.fetch_add(1, Ordering::Release);
         }
-        if let Some(t) = shared.deques[v].lock().unwrap().pop_front() {
-            return Some(t);
+    }
+}
+
+fn pop_injected(shared: &Shared) -> Option<Unit> {
+    // Drain the (older) overflow first so a burst can't starve it.
+    if shared.overflow_len.load(Ordering::Acquire) > 0 {
+        let mut ov = shared.overflow.lock().unwrap();
+        if let Some(u) = ov.pop_front() {
+            shared.overflow_len.fetch_sub(1, Ordering::Release);
+            return Some(u);
+        }
+    }
+    shared.injector.pop()
+}
+
+fn find_work(
+    shared: &Shared,
+    local: &chase_lev::Worker<Unit>,
+    me: usize,
+    rng: &mut Prng,
+) -> Option<Unit> {
+    // own deque first (LIFO end — cache-warm)…
+    if let Some(u) = local.take() {
+        return Some(u);
+    }
+    // …then external submissions…
+    if let Some(u) = pop_injected(shared) {
+        return Some(u);
+    }
+    // …then steal a victim's FIFO end, random start for fairness.
+    let n = shared.stealers.len();
+    if n > 1 {
+        let start = rng.below(n);
+        for _pass in 0..2 {
+            let mut contended = false;
+            for off in 0..n {
+                let v = (start + off) % n;
+                if v == me {
+                    continue;
+                }
+                match shared.stealers[v].steal() {
+                    Steal::Success(u) => {
+                        shared.steals.fetch_add(1, Ordering::Relaxed);
+                        return Some(u);
+                    }
+                    Steal::Retry => contended = true,
+                    Steal::Empty => {}
+                }
+            }
+            if !contended {
+                break;
+            }
         }
     }
     None
 }
 
-fn worker(shared: Arc<Shared>, me: usize) {
+fn worker(shared: Arc<Shared>, me: usize, local: chase_lev::Worker<Unit>) {
+    CURRENT_WORKER
+        .with(|c| c.set((shared.pool_id, &local as *const chase_lev::Worker<Unit> as *const ())));
     let mut rng = Prng::new(me as u64 ^ 0x5eed);
     loop {
-        // spin phase
-        let mut got = None;
+        // spin-scan phase
+        let mut unit = None;
         for _ in 0..SPIN_TRIES {
             if shared.pending.load(Ordering::Acquire) > 0 {
-                if let Some(t) = try_pop(&shared, me, &mut rng) {
-                    got = Some(t);
+                if let Some(u) = find_work(&shared, &local, me, &mut rng) {
+                    unit = Some(u);
                     break;
                 }
             }
             std::hint::spin_loop();
         }
-        if let Some(t) = got {
+        if let Some(u) = unit {
             shared.pending.fetch_sub(1, Ordering::AcqRel);
-            t();
+            u.run();
             continue;
         }
-        if shared.shutdown.load(Ordering::Acquire)
-            && shared.pending.load(Ordering::Acquire) == 0
+        if shared.shutdown.load(Ordering::Acquire) && shared.pending.load(Ordering::Acquire) == 0
         {
-            return;
+            break;
         }
-        // park phase
-        let mut idle = shared.idle.lock().unwrap();
-        if shared.pending.load(Ordering::Acquire) > 0
-            || shared.shutdown.load(Ordering::Acquire)
-        {
-            continue; // re-check without sleeping
+        // park phase: two-phase eventcount wait with a queue re-check
+        // in the middle (see eventcount.rs for the no-lost-wake proof)
+        let key = shared.ec.prepare(me);
+        if shared.pending.load(Ordering::SeqCst) > 0 || shared.shutdown.load(Ordering::SeqCst) {
+            shared.ec.cancel(me);
+            continue;
         }
-        *idle += 1;
-        // The timeout is a belt-and-braces re-check, not the wakeup
-        // path: submitters bump `pending` before taking the `idle` lock
-        // and notifying, so a sleeping worker cannot miss work. 100 ms
-        // keeps a *persistent* pool (tuner::parallel::SweepPool holds
-        // one across sweeps/serving windows) close to 0% CPU while
-        // idle; the old 2 ms poll was tuned for pools that died with
-        // their one sweep.
-        let (guard, _timeout) = shared
-            .cv
-            .wait_timeout(idle, std::time::Duration::from_millis(100))
-            .unwrap();
-        idle = guard;
-        *idle -= 1;
+        shared.ec.commit(me, key);
     }
+    CURRENT_WORKER.with(|c| c.set((0, std::ptr::null())));
 }
 
 impl TaskPool for EigenPool {
     fn execute(&self, task: Task) {
-        let n = self.shared.deques.len();
-        let slot = self.shared.next.fetch_add(1, Ordering::Relaxed) % n;
-        self.shared.deques[slot].lock().unwrap().push_back(task);
-        self.shared.pending.fetch_add(1, Ordering::AcqRel);
-        // wake at most one parked worker
-        let idle = self.shared.idle.lock().unwrap();
-        if *idle > 0 {
-            self.shared.cv.notify_one();
-        }
+        self.submit(Unit { task, wg: None });
+    }
+
+    fn execute_batch(&self, tasks: Vec<Task>) {
+        self.submit_batch(tasks, None);
+    }
+
+    fn execute_batch_counted(&self, tasks: Vec<Task>, wg: &WaitGroup) {
+        self.submit_batch(tasks, Some(wg));
     }
 
     fn threads(&self) -> usize {
-        self.workers.len()
+        self.shared.stealers.len()
     }
 }
 
 impl Drop for EigenPool {
     fn drop(&mut self) {
-        self.shared.shutdown.store(true, Ordering::Release);
-        self.shared.cv.notify_all();
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.ec.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -159,15 +341,14 @@ impl Drop for EigenPool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicUsize;
 
     #[test]
     fn steals_across_deques() {
-        // With 4 workers and round-robin placement, a burst of slow tasks
-        // lands in all deques; completion requires stealing to balance.
+        // A burst submitted from outside lands in the injector; workers
+        // race it down and balance by stealing when one worker hoards.
         let pool = EigenPool::new(4);
         let counter = Arc::new(AtomicUsize::new(0));
-        let wg = super::super::WaitGroup::new(64);
+        let wg = WaitGroup::new(64);
         for _ in 0..64 {
             let c = Arc::clone(&counter);
             let h = wg.handle();
@@ -178,5 +359,79 @@ mod tests {
         }
         wg.wait();
         assert_eq!(counter.load(Ordering::Relaxed), 64);
+        assert_eq!(pool.injected(), 64, "external submissions go through the injector");
+    }
+
+    #[test]
+    fn worker_local_submission_skips_the_injector() {
+        let pool = Arc::new(EigenPool::new(2));
+        let wg = WaitGroup::new(1 + 32);
+        let h = wg.handle();
+        let p2 = Arc::clone(&pool);
+        pool.execute(Box::new(move || {
+            // from worker context: children take the local fast path
+            for _ in 0..32 {
+                let h2 = h.handle();
+                p2.execute(Box::new(move || h2.done()));
+            }
+            h.done();
+        }));
+        wg.wait();
+        assert_eq!(pool.local_submits(), 32, "worker-spawned tasks must land locally");
+        assert_eq!(pool.injected(), 1, "only the seed task came from outside");
+    }
+
+    #[test]
+    fn batch_counted_runs_everything_without_wrappers() {
+        let pool = EigenPool::new(3);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let tasks: Vec<Task> = (0..500)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                Box::new(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                }) as Task
+            })
+            .collect();
+        let wg = WaitGroup::new(tasks.len());
+        pool.execute_batch_counted(tasks, &wg);
+        wg.wait();
+        assert_eq!(counter.load(Ordering::Relaxed), 500);
+    }
+
+    #[test]
+    fn injector_overflow_spills_and_drains() {
+        // more external tasks than the injector ring holds
+        let pool = EigenPool::new(2);
+        let n = INJECTOR_CAP + 2000;
+        let counter = Arc::new(AtomicUsize::new(0));
+        let tasks: Vec<Task> = (0..n)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                Box::new(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                }) as Task
+            })
+            .collect();
+        let wg = WaitGroup::new(n);
+        pool.execute_batch_counted(tasks, &wg);
+        wg.wait();
+        assert_eq!(counter.load(Ordering::Relaxed), n);
+    }
+
+    #[test]
+    fn shutdown_drains_pending_work() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = EigenPool::new(2);
+            for _ in 0..2000 {
+                let c = Arc::clone(&counter);
+                pool.execute(Box::new(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                }));
+            }
+            // drop immediately: the pool must drain, not discard
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 2000);
     }
 }

@@ -1,0 +1,248 @@
+//! Eventcount: the parking layer under the lock-free pool.
+//!
+//! An eventcount is the condvar of lock-free land (Eigen's
+//! `EventCount`, folly's `LifoSem` underpinnings): it lets a worker
+//! park on "nothing in any queue" without any lock on the submit path,
+//! and without lost wakeups. The protocol is a two-phase wait against
+//! an epoch counter plus one park slot per worker:
+//!
+//! * **worker** — [`EventCount::prepare`]: mark own slot `WAITING`,
+//!   register in the waiter count, read the epoch. Then *re-check the
+//!   queues*. Work found → [`EventCount::cancel`]; still empty →
+//!   [`EventCount::commit`], which blocks unless the epoch moved or a
+//!   notifier already picked this slot.
+//! * **submitter** — after publishing work, [`EventCount::notify`]:
+//!   one `SeqCst` read of the waiter count; zero (the common case on a
+//!   busy pool) means *done* — no fence, no lock, no syscall. Nonzero
+//!   means bump the epoch and wake the requested number of `WAITING`
+//!   slots through their tiny per-slot mutexes.
+//!
+//! Why no lost wakeup: `prepare` orders `WAITING`-store → waiter-count
+//! increment → epoch read, all `SeqCst`; `notify` orders work-publish →
+//! waiter-count read. If the notifier reads waiters == 0, the worker's
+//! increment is later in the total order, so its epoch read (later
+//! still) synchronizes with any prior epoch bump and — decisively —
+//! its queue re-check sees the published work and cancels. If the
+//! notifier reads waiters > 0, the registered slot is already
+//! `WAITING` and the scan wakes it.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+const EMPTY: usize = 0;
+const WAITING: usize = 1;
+const NOTIFIED: usize = 2;
+
+/// Belt-and-braces park bound. The eventcount protocol makes wakeups
+/// lock-free-correct on its own; the timeout only bounds the damage of
+/// a hypothetical platform/ordering bug to 100 ms instead of a hang,
+/// and keeps a persistent idle pool near 0% CPU (10 self-wakes/s).
+const PARK_TIMEOUT: Duration = Duration::from_millis(100);
+
+struct ParkSlot {
+    state: AtomicUsize,
+    /// `true` = a wake is pending for this slot.
+    signal: Mutex<bool>,
+    cv: Condvar,
+}
+
+/// The eventcount: one epoch, one waiter count, one slot per worker.
+pub struct EventCount {
+    epoch: AtomicU64,
+    nwaiters: AtomicUsize,
+    slots: Box<[ParkSlot]>,
+}
+
+impl EventCount {
+    /// Eventcount for `n` workers (slot index = worker index).
+    pub fn new(n: usize) -> Self {
+        EventCount {
+            epoch: AtomicU64::new(0),
+            nwaiters: AtomicUsize::new(0),
+            slots: (0..n)
+                .map(|_| ParkSlot {
+                    state: AtomicUsize::new(EMPTY),
+                    signal: Mutex::new(false),
+                    cv: Condvar::new(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Phase one of parking: register worker `me` as a waiter and
+    /// return the epoch key for [`Self::commit`]. The caller MUST
+    /// re-check its queues between `prepare` and `commit`/`cancel`.
+    pub fn prepare(&self, me: usize) -> u64 {
+        self.slots[me].state.store(WAITING, Ordering::SeqCst);
+        self.nwaiters.fetch_add(1, Ordering::SeqCst);
+        self.epoch.load(Ordering::SeqCst)
+    }
+
+    /// Abort a prepared wait (the re-check found work). If a notifier
+    /// had already picked this slot, the wake is passed on to another
+    /// parked worker so the notification is never swallowed.
+    pub fn cancel(&self, me: usize) {
+        self.nwaiters.fetch_sub(1, Ordering::SeqCst);
+        let slot = &self.slots[me];
+        let prev = slot.state.swap(EMPTY, Ordering::SeqCst);
+        if prev == NOTIFIED {
+            *slot.signal.lock().unwrap() = false;
+            self.notify(1);
+        }
+    }
+
+    /// Phase two: block until notified, the epoch moves past `key`, or
+    /// the belt-and-braces timeout fires. Always deregisters.
+    pub fn commit(&self, me: usize, key: u64) {
+        let slot = &self.slots[me];
+        {
+            let mut signal = slot.signal.lock().unwrap();
+            while !*signal {
+                if self.epoch.load(Ordering::SeqCst) != key {
+                    break;
+                }
+                let (guard, timeout) = slot.cv.wait_timeout(signal, PARK_TIMEOUT).unwrap();
+                signal = guard;
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+            *signal = false;
+        }
+        self.nwaiters.fetch_sub(1, Ordering::SeqCst);
+        // A NOTIFIED state here is *our* notification — consumed by the
+        // rescan the caller is about to run.
+        slot.state.store(EMPTY, Ordering::SeqCst);
+    }
+
+    /// Wake up to `n` parked workers. The no-waiter fast path is a
+    /// single `SeqCst` load — this is what makes uncontended submission
+    /// "a push plus one atomic read".
+    pub fn notify(&self, n: usize) {
+        if self.nwaiters.load(Ordering::SeqCst) == 0 {
+            return;
+        }
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+        let mut woken = 0;
+        for slot in self.slots.iter() {
+            if woken >= n {
+                break;
+            }
+            if slot
+                .state
+                .compare_exchange(WAITING, NOTIFIED, Ordering::SeqCst, Ordering::SeqCst)
+                .is_ok()
+            {
+                let mut signal = slot.signal.lock().unwrap();
+                *signal = true;
+                slot.cv.notify_one();
+                woken += 1;
+            }
+        }
+    }
+
+    /// Wake every parked worker unconditionally (shutdown). Bumps the
+    /// epoch even with no registered waiter so a worker racing through
+    /// `prepare` sees the world changed and re-checks.
+    pub fn notify_all(&self) {
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+        for slot in self.slots.iter() {
+            if slot
+                .state
+                .compare_exchange(WAITING, NOTIFIED, Ordering::SeqCst, Ordering::SeqCst)
+                .is_ok()
+            {
+                let mut signal = slot.signal.lock().unwrap();
+                *signal = true;
+                slot.cv.notify_one();
+            }
+        }
+    }
+
+    /// Registered waiters right now (racy; tests and heuristics only).
+    pub fn waiters(&self) -> usize {
+        self.nwaiters.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+
+    #[test]
+    fn notify_without_waiters_is_a_noop() {
+        let ec = EventCount::new(2);
+        let e0 = ec.epoch.load(Ordering::SeqCst);
+        ec.notify(1);
+        // fast path: epoch untouched, nothing to wake
+        assert_eq!(ec.epoch.load(Ordering::SeqCst), e0);
+        assert_eq!(ec.waiters(), 0);
+    }
+
+    #[test]
+    fn cancel_clears_registration() {
+        let ec = EventCount::new(1);
+        let _key = ec.prepare(0);
+        assert_eq!(ec.waiters(), 1);
+        ec.cancel(0);
+        assert_eq!(ec.waiters(), 0);
+    }
+
+    #[test]
+    fn epoch_move_between_prepare_and_commit_does_not_sleep() {
+        let ec = EventCount::new(1);
+        let key = ec.prepare(0);
+        // a notify between prepare and commit bumps the epoch…
+        ec.notify_all();
+        let t0 = std::time::Instant::now();
+        ec.commit(0, key); // …so commit returns without the full timeout
+        assert!(t0.elapsed() < PARK_TIMEOUT, "commit slept through a moved epoch");
+        assert_eq!(ec.waiters(), 0);
+    }
+
+    #[test]
+    fn parked_worker_wakes_on_notify() {
+        let ec = Arc::new(EventCount::new(1));
+        let parked = Arc::new(AtomicBool::new(false));
+        let woke = Arc::new(AtomicBool::new(false));
+        let (ec2, parked2, woke2) = (Arc::clone(&ec), Arc::clone(&parked), Arc::clone(&woke));
+        let th = std::thread::spawn(move || {
+            let key = ec2.prepare(0);
+            parked2.store(true, Ordering::SeqCst);
+            ec2.commit(0, key);
+            woke2.store(true, Ordering::SeqCst);
+        });
+        while !parked.load(Ordering::SeqCst) {
+            std::hint::spin_loop();
+        }
+        ec.notify(1);
+        th.join().unwrap();
+        assert!(woke.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn notify_all_wakes_every_parked_worker() {
+        let n = 4;
+        let ec = Arc::new(EventCount::new(n));
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let ec = Arc::clone(&ec);
+                std::thread::spawn(move || {
+                    let key = ec.prepare(i);
+                    ec.commit(i, key);
+                })
+            })
+            .collect();
+        // let them all reach the park (racy but bounded by PARK_TIMEOUT
+        // — a worker that parks after the notify self-wakes anyway)
+        std::thread::sleep(Duration::from_millis(10));
+        ec.notify_all();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(ec.waiters(), 0);
+    }
+}

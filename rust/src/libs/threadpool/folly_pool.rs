@@ -3,106 +3,22 @@
 //! Two Folly CPUThreadPoolExecutor ideas reproduced here:
 //!
 //! * the queue is a fixed-capacity MPMC ring with per-slot sequence
-//!   numbers (Vyukov's design, what folly::MPMCQueue implements) — enqueue
-//!   and dequeue are single-CAS operations with no shared lock;
+//!   numbers (Vyukov's design, what folly::MPMCQueue implements —
+//!   shared with the Eigen pool's injector as
+//!   [`super::mpmc::MpmcQueue`]) — enqueue and dequeue are single-CAS
+//!   operations with no shared lock;
 //! * idle workers park on a LIFO stack ("LifoSem"), so the most recently
 //!   active (cache-warm) worker wakes first, and the rest stay asleep
 //!   instead of stampeding.
 
-use std::cell::UnsafeCell;
-use std::mem::MaybeUninit;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+use super::mpmc::MpmcQueue;
 use super::{Task, TaskPool};
 
 const QUEUE_CAP: usize = 4096; // power of two
-
-struct Slot {
-    seq: AtomicUsize,
-    value: UnsafeCell<MaybeUninit<Task>>,
-}
-
-/// Vyukov bounded MPMC queue specialised for `Task`.
-struct MpmcQueue {
-    slots: Box<[Slot]>,
-    head: AtomicUsize, // dequeue cursor
-    tail: AtomicUsize, // enqueue cursor
-    mask: usize,
-}
-
-unsafe impl Send for MpmcQueue {}
-unsafe impl Sync for MpmcQueue {}
-
-impl MpmcQueue {
-    fn new(cap: usize) -> Self {
-        assert!(cap.is_power_of_two());
-        let slots = (0..cap)
-            .map(|i| Slot { seq: AtomicUsize::new(i), value: UnsafeCell::new(MaybeUninit::uninit()) })
-            .collect::<Vec<_>>()
-            .into_boxed_slice();
-        MpmcQueue { slots, head: AtomicUsize::new(0), tail: AtomicUsize::new(0), mask: cap - 1 }
-    }
-
-    /// Try to enqueue; returns the task back when full.
-    fn push(&self, task: Task) -> Result<(), Task> {
-        let mut pos = self.tail.load(Ordering::Relaxed);
-        loop {
-            let slot = &self.slots[pos & self.mask];
-            let seq = slot.seq.load(Ordering::Acquire);
-            let diff = seq as isize - pos as isize;
-            if diff == 0 {
-                match self.tail.compare_exchange_weak(
-                    pos,
-                    pos + 1,
-                    Ordering::Relaxed,
-                    Ordering::Relaxed,
-                ) {
-                    Ok(_) => {
-                        unsafe { (*slot.value.get()).write(task) };
-                        slot.seq.store(pos + 1, Ordering::Release);
-                        return Ok(());
-                    }
-                    Err(actual) => pos = actual,
-                }
-            } else if diff < 0 {
-                return Err(task); // full
-            } else {
-                pos = self.tail.load(Ordering::Relaxed);
-            }
-        }
-    }
-
-    /// Try to dequeue.
-    fn pop(&self) -> Option<Task> {
-        let mut pos = self.head.load(Ordering::Relaxed);
-        loop {
-            let slot = &self.slots[pos & self.mask];
-            let seq = slot.seq.load(Ordering::Acquire);
-            let diff = seq as isize - (pos + 1) as isize;
-            if diff == 0 {
-                match self.head.compare_exchange_weak(
-                    pos,
-                    pos + 1,
-                    Ordering::Relaxed,
-                    Ordering::Relaxed,
-                ) {
-                    Ok(_) => {
-                        let task = unsafe { (*slot.value.get()).assume_init_read() };
-                        slot.seq.store(pos + self.mask + 1, Ordering::Release);
-                        return Some(task);
-                    }
-                    Err(actual) => pos = actual,
-                }
-            } else if diff < 0 {
-                return None; // empty
-            } else {
-                pos = self.head.load(Ordering::Relaxed);
-            }
-        }
-    }
-}
 
 /// LIFO parking lot: most recently parked worker wakes first.
 struct LifoSem {
@@ -149,7 +65,7 @@ impl LifoSem {
 }
 
 struct Shared {
-    queue: MpmcQueue,
+    queue: MpmcQueue<Task>,
     sem: LifoSem,
     shutdown: AtomicBool,
     /// overflow list when the ring is full (rare)
@@ -250,28 +166,6 @@ impl Drop for FollyPool {
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicUsize;
-
-    #[test]
-    fn mpmc_queue_fifo_single_thread() {
-        let q = MpmcQueue::new(8);
-        let log = Arc::new(Mutex::new(Vec::new()));
-        for i in 0..5 {
-            let l = Arc::clone(&log);
-            assert!(q.push(Box::new(move || l.lock().unwrap().push(i))).is_ok());
-        }
-        while let Some(t) = q.pop() {
-            t();
-        }
-        assert_eq!(*log.lock().unwrap(), vec![0, 1, 2, 3, 4]);
-    }
-
-    #[test]
-    fn queue_full_reports_back() {
-        let q = MpmcQueue::new(2);
-        assert!(q.push(Box::new(|| {})).is_ok());
-        assert!(q.push(Box::new(|| {})).is_ok());
-        assert!(q.push(Box::new(|| {})).is_err());
-    }
 
     #[test]
     fn overflow_path_executes() {

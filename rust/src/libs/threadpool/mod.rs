@@ -1,22 +1,33 @@
 //! Thread pools — the paper's §6.2 designs, implemented for real.
 //!
-//! | pool        | queue                         | wake policy          |
-//! |-------------|-------------------------------|----------------------|
-//! | `StdPool`   | one mutex-guarded deque       | condvar broadcast    |
-//! | `EigenPool` | per-thread deques + stealing  | spin-then-park       |
-//! | `FollyPool` | bounded MPMC ring (atomics)   | LIFO parking stack   |
+//! | pool            | queue                                   | wake policy          |
+//! |-----------------|-----------------------------------------|----------------------|
+//! | `StdPool`       | one mutex-guarded deque                 | condvar broadcast    |
+//! | `EigenPool`     | per-worker Chase–Lev deques + lock-free injector | eventcount (wake only if parked) |
+//! | `FollyPool`     | bounded MPMC ring (atomics)             | LIFO parking stack   |
+//! | `ReferencePool` | per-thread mutexed deques (PR 4–8 pool) | global idle mutex + condvar |
 //!
-//! All three run the same [`TaskPool`] interface so the coordinator and the
-//! Fig. 14 benchmark can swap them via [`crate::config::PoolLib`].
+//! All four run the same [`TaskPool`] interface so the coordinator, the
+//! tuner's sweep executor, and the Fig. 14 benchmark can swap them.
+//! `EigenPool` is the production substrate (see `chase_lev`,
+//! `eventcount`); `ReferencePool` is its preserved mutex-based
+//! predecessor, kept as the measured baseline for
+//! `BENCH_threadpool.json`'s `fastpath-vs-reference` cases.
 
+mod chase_lev;
 mod eigen_pool;
+mod eventcount;
 mod folly_pool;
+mod mpmc;
+mod reference_pool;
 mod std_pool;
 
 pub use eigen_pool::EigenPool;
 pub use folly_pool::FollyPool;
+pub use reference_pool::ReferencePool;
 pub use std_pool::StdPool;
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::config::PoolLib;
@@ -24,10 +35,36 @@ use crate::config::PoolLib;
 /// A boxed unit of work.
 pub type Task = Box<dyn FnOnce() + Send + 'static>;
 
-/// Common interface over the three pool designs.
+/// Common interface over the pool designs.
 pub trait TaskPool: Send + Sync {
     /// Submit a task for asynchronous execution.
     fn execute(&self, task: Task);
+
+    /// Submit a batch of tasks with (at most) one wake decision,
+    /// proportional to the batch size. The default just loops
+    /// [`TaskPool::execute`]; `EigenPool` overrides it with a real
+    /// batched injection.
+    fn execute_batch(&self, tasks: Vec<Task>) {
+        for t in tasks {
+            self.execute(t);
+        }
+    }
+
+    /// Submit a batch whose completions are counted on `wg` by the
+    /// pool itself. `EigenPool` carries the latch inside its queue
+    /// units — no wrapper closure, no second box per task; the default
+    /// wraps (which is exactly the per-task overhead the reference
+    /// plane is measured with).
+    fn execute_batch_counted(&self, tasks: Vec<Task>, wg: &WaitGroup) {
+        for t in tasks {
+            let h = wg.handle();
+            self.execute(Box::new(move || {
+                t();
+                h.done();
+            }));
+        }
+    }
+
     /// Number of worker threads.
     fn threads(&self) -> usize;
 }
@@ -41,24 +78,43 @@ pub fn make_pool(lib: PoolLib, n: usize) -> Arc<dyn TaskPool> {
     }
 }
 
+struct WgInner {
+    count: AtomicUsize,
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
 /// Counting latch used to join on a batch of submitted tasks.
+///
+/// `done` is lock-free except for the *final* decrement: the count is
+/// an atomic, and only the completion that drops it to zero touches
+/// the mutex/condvar pair to release waiters (the old implementation
+/// took a Mutex+Condvar round-trip on every single completion).
 pub struct WaitGroup {
-    inner: Arc<(Mutex<usize>, Condvar)>,
+    inner: Arc<WgInner>,
 }
 
 impl WaitGroup {
     /// New latch expecting `count` completions.
     pub fn new(count: usize) -> Self {
-        WaitGroup { inner: Arc::new((Mutex::new(count), Condvar::new())) }
+        WaitGroup {
+            inner: Arc::new(WgInner {
+                count: AtomicUsize::new(count),
+                lock: Mutex::new(()),
+                cv: Condvar::new(),
+            }),
+        }
     }
 
-    /// Signal one completion (call from the task).
+    /// Signal one completion (call from the task). Only the last
+    /// completion takes the lock, to hand off to waiters.
     pub fn done(&self) {
-        let (lock, cv) = &*self.inner;
-        let mut n = lock.lock().unwrap();
-        *n -= 1;
-        if *n == 0 {
-            cv.notify_all();
+        if self.inner.count.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // Taking the lock before notifying pins any waiter either
+            // before its count check (it will see 0) or inside
+            // `cv.wait` (the notify reaches it) — no lost wakeup.
+            let _guard = self.inner.lock.lock().unwrap();
+            self.inner.cv.notify_all();
         }
     }
 
@@ -69,25 +125,28 @@ impl WaitGroup {
 
     /// Block until all completions arrive.
     pub fn wait(&self) {
-        let (lock, cv) = &*self.inner;
-        let mut n = lock.lock().unwrap();
-        while *n > 0 {
-            n = cv.wait(n).unwrap();
+        if self.inner.count.load(Ordering::Acquire) == 0 {
+            return;
         }
+        let mut guard = self.inner.lock.lock().unwrap();
+        while self.inner.count.load(Ordering::Acquire) > 0 {
+            guard = self.inner.cv.wait(guard).unwrap();
+        }
+    }
+
+    /// Completions still outstanding (racy; tests only).
+    pub fn outstanding(&self) -> usize {
+        self.inner.count.load(Ordering::Acquire)
     }
 }
 
-/// Run `tasks` on `pool` and wait for all of them (the scatter/gather the
-/// framework's intra-op parallelism uses).
+/// Run `tasks` on `pool` and wait for all of them (the scatter/gather
+/// the framework's intra-op parallelism uses). Rides the pool's batch
+/// path: one submission, one wake decision, completions counted inside
+/// the pool where it supports it.
 pub fn scatter_gather(pool: &dyn TaskPool, tasks: Vec<Task>) {
     let wg = WaitGroup::new(tasks.len());
-    for t in tasks {
-        let h = wg.handle();
-        pool.execute(Box::new(move || {
-            t();
-            h.done();
-        }));
-    }
+    pool.execute_batch_counted(tasks, &wg);
     wg.wait();
 }
 
@@ -115,6 +174,7 @@ mod tests {
         for lib in PoolLib::ALL {
             exercise(make_pool(lib, 4));
         }
+        exercise(Arc::new(ReferencePool::new(4)));
     }
 
     #[test]
@@ -122,6 +182,7 @@ mod tests {
         for lib in PoolLib::ALL {
             exercise(make_pool(lib, 1));
         }
+        exercise(Arc::new(ReferencePool::new(1)));
     }
 
     #[test]
@@ -132,11 +193,43 @@ mod tests {
             assert_eq!(pool.threads(), 64);
             exercise(pool);
         }
+        let reference = Arc::new(ReferencePool::new(64));
+        assert_eq!(reference.threads(), 64);
+        exercise(reference);
     }
 
     #[test]
     fn waitgroup_zero_is_immediate() {
         WaitGroup::new(0).wait();
+    }
+
+    #[test]
+    fn waitgroup_counts_down_once_per_done() {
+        let wg = WaitGroup::new(3);
+        assert_eq!(wg.outstanding(), 3);
+        wg.done();
+        wg.done();
+        assert_eq!(wg.outstanding(), 1);
+        let h = wg.handle();
+        let waiter = std::thread::spawn(move || h.wait());
+        wg.done();
+        waiter.join().unwrap();
+        assert_eq!(wg.outstanding(), 0);
+    }
+
+    #[test]
+    fn waitgroup_releases_many_waiters() {
+        let wg = WaitGroup::new(1);
+        let waiters: Vec<_> = (0..4)
+            .map(|_| {
+                let h = wg.handle();
+                std::thread::spawn(move || h.wait())
+            })
+            .collect();
+        wg.done();
+        for w in waiters {
+            w.join().unwrap();
+        }
     }
 
     #[test]
@@ -149,5 +242,29 @@ mod tests {
             p2.execute(Box::new(move || h.done()));
         }));
         wg.wait();
+    }
+
+    #[test]
+    fn execute_batch_default_matches_loop() {
+        // the default trait impl must behave like per-task execute on
+        // every pool flavour
+        for lib in PoolLib::ALL {
+            let pool = make_pool(lib, 2);
+            let counter = Arc::new(AtomicUsize::new(0));
+            let wg = WaitGroup::new(100);
+            let tasks: Vec<Task> = (0..100)
+                .map(|_| {
+                    let c = Arc::clone(&counter);
+                    let h = wg.handle();
+                    Box::new(move || {
+                        c.fetch_add(1, Ordering::Relaxed);
+                        h.done();
+                    }) as Task
+                })
+                .collect();
+            pool.execute_batch(tasks);
+            wg.wait();
+            assert_eq!(counter.load(Ordering::Relaxed), 100, "{lib:?}");
+        }
     }
 }

@@ -1,0 +1,221 @@
+//! Vyukov bounded MPMC ring buffer, generic over the element.
+//!
+//! Per-slot sequence numbers make enqueue and dequeue single-CAS
+//! operations with no shared lock — this is what `folly::MPMCQueue`
+//! implements, and both the Folly-style pool's run queue and the
+//! Eigen-style pool's external-submission injector are instances of it.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+struct Slot<T> {
+    seq: AtomicUsize,
+    value: UnsafeCell<MaybeUninit<T>>,
+}
+
+/// Bounded lock-free MPMC queue (capacity must be a power of two).
+pub struct MpmcQueue<T> {
+    slots: Box<[Slot<T>]>,
+    head: AtomicUsize, // dequeue cursor
+    tail: AtomicUsize, // enqueue cursor
+    mask: usize,
+}
+
+unsafe impl<T: Send> Send for MpmcQueue<T> {}
+unsafe impl<T: Send> Sync for MpmcQueue<T> {}
+
+impl<T> MpmcQueue<T> {
+    /// New queue with `cap` slots.
+    pub fn new(cap: usize) -> Self {
+        assert!(cap.is_power_of_two());
+        let slots = (0..cap)
+            .map(|i| Slot { seq: AtomicUsize::new(i), value: UnsafeCell::new(MaybeUninit::uninit()) })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        MpmcQueue { slots, head: AtomicUsize::new(0), tail: AtomicUsize::new(0), mask: cap - 1 }
+    }
+
+    /// Try to enqueue; returns the value back when full.
+    pub fn push(&self, value: T) -> Result<(), T> {
+        let mut pos = self.tail.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let diff = seq as isize - pos as isize;
+            if diff == 0 {
+                match self.tail.compare_exchange_weak(
+                    pos,
+                    pos + 1,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        unsafe { (*slot.value.get()).write(value) };
+                        slot.seq.store(pos + 1, Ordering::Release);
+                        return Ok(());
+                    }
+                    Err(actual) => pos = actual,
+                }
+            } else if diff < 0 {
+                return Err(value); // full
+            } else {
+                pos = self.tail.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Try to dequeue.
+    pub fn pop(&self) -> Option<T> {
+        let mut pos = self.head.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let diff = seq as isize - (pos + 1) as isize;
+            if diff == 0 {
+                match self.head.compare_exchange_weak(
+                    pos,
+                    pos + 1,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        let value = unsafe { (*slot.value.get()).assume_init_read() };
+                        slot.seq.store(pos + self.mask + 1, Ordering::Release);
+                        return Some(value);
+                    }
+                    Err(actual) => pos = actual,
+                }
+            } else if diff < 0 {
+                return None; // empty
+            } else {
+                pos = self.head.load(Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+impl<T> Drop for MpmcQueue<T> {
+    fn drop(&mut self) {
+        // Sole handle at drop: release whatever is still queued.
+        while self.pop().is_some() {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn fifo_single_thread() {
+        let q = MpmcQueue::new(8);
+        for i in 0..5 {
+            assert!(q.push(i).is_ok());
+        }
+        let mut out = Vec::new();
+        while let Some(v) = q.pop() {
+            out.push(v);
+        }
+        assert_eq!(out, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn full_reports_back() {
+        let q = MpmcQueue::new(2);
+        assert!(q.push(1).is_ok());
+        assert!(q.push(2).is_ok());
+        assert_eq!(q.push(3), Err(3));
+        assert_eq!(q.pop(), Some(1));
+        assert!(q.push(3).is_ok());
+    }
+
+    #[test]
+    fn boxed_closures_run_in_order() {
+        let q: MpmcQueue<Box<dyn FnOnce() + Send>> = MpmcQueue::new(8);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        for i in 0..5 {
+            let l = Arc::clone(&log);
+            assert!(q.push(Box::new(move || l.lock().unwrap().push(i))).is_ok());
+        }
+        while let Some(t) = q.pop() {
+            t();
+        }
+        assert_eq!(*log.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn drop_releases_queued_elements() {
+        let marker = Arc::new(());
+        {
+            let q = MpmcQueue::new(8);
+            for _ in 0..6 {
+                assert!(q.push(Arc::clone(&marker)).is_ok());
+            }
+            let _ = q.pop();
+        }
+        assert_eq!(Arc::strong_count(&marker), 1);
+    }
+
+    #[test]
+    fn concurrent_producers_consumers_conserve() {
+        use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+        let q = Arc::new(MpmcQueue::new(64));
+        let produced = 4 * 5_000usize;
+        let consumed = Arc::new(AtomicUsize::new(0));
+        let sum = Arc::new(AtomicUsize::new(0));
+        let done = Arc::new(AtomicBool::new(false));
+        let consumers: Vec<_> = (0..2)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                let consumed = Arc::clone(&consumed);
+                let sum = Arc::clone(&sum);
+                let done = Arc::clone(&done);
+                std::thread::spawn(move || loop {
+                    match q.pop() {
+                        Some(v) => {
+                            sum.fetch_add(v, Ordering::Relaxed);
+                            consumed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        None => {
+                            if done.load(Ordering::SeqCst)
+                                && consumed.load(Ordering::SeqCst) >= produced
+                            {
+                                return;
+                            }
+                            std::hint::spin_loop();
+                        }
+                    }
+                })
+            })
+            .collect();
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    for i in 0..5_000usize {
+                        let mut v = p * 5_000 + i;
+                        loop {
+                            match q.push(v) {
+                                Ok(()) => break,
+                                Err(back) => {
+                                    v = back;
+                                    std::hint::spin_loop();
+                                }
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        done.store(true, Ordering::SeqCst);
+        for c in consumers {
+            c.join().unwrap();
+        }
+        assert_eq!(consumed.load(Ordering::SeqCst), produced);
+        assert_eq!(sum.load(Ordering::SeqCst), produced * (produced - 1) / 2);
+    }
+}

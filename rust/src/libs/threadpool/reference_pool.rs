@@ -1,0 +1,182 @@
+//! The PR 4–8 mutex-based Eigen-style pool, preserved verbatim as the
+//! measured baseline for the lock-free substrate (the
+//! `simulate_reference` / `with_reference_loop` pattern of PRs 6–7).
+//!
+//! Per-thread `Mutex<VecDeque>` deques with round-robin placement and
+//! random-start stealing, plus a **global idle mutex acquired on every
+//! `execute`** — the serialisation the rebuilt [`super::EigenPool`]
+//! removes. `BENCH_threadpool.json`'s `fastpath-vs-reference` cases
+//! measure the two planes against each other; nothing in the serving
+//! or tuning stack runs on this pool except by explicit choice in
+//! benches and tests.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::util::prng::Prng;
+
+use super::{Task, TaskPool};
+
+struct Shared {
+    deques: Vec<Mutex<VecDeque<Task>>>,
+    /// parked-worker wake-up
+    idle: Mutex<usize>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    /// round-robin submission cursor
+    next: AtomicUsize,
+    /// outstanding task count (lets workers park safely)
+    pending: AtomicUsize,
+}
+
+/// The mutex-based work-stealing pool (reference plane).
+pub struct ReferencePool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ReferencePool {
+    /// Spawn `n` workers, each owning a deque.
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        let shared = Arc::new(Shared {
+            deques: (0..n).map(|_| Mutex::new(VecDeque::new())).collect(),
+            idle: Mutex::new(0),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            next: AtomicUsize::new(0),
+            pending: AtomicUsize::new(0),
+        });
+        let workers = (0..n)
+            .map(|i| {
+                let s = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("reference-pool-{i}"))
+                    .spawn(move || worker(s, i))
+                    .expect("spawn")
+            })
+            .collect();
+        ReferencePool { shared, workers }
+    }
+}
+
+const SPIN_TRIES: usize = 64;
+
+fn try_pop(shared: &Shared, me: usize, rng: &mut Prng) -> Option<Task> {
+    // own deque first (LIFO end — cache-warm)
+    if let Some(t) = shared.deques[me].lock().unwrap().pop_back() {
+        return Some(t);
+    }
+    // then steal a victim's FIFO end
+    let n = shared.deques.len();
+    let start = rng.below(n.max(1));
+    for off in 0..n {
+        let v = (start + off) % n;
+        if v == me {
+            continue;
+        }
+        if let Some(t) = shared.deques[v].lock().unwrap().pop_front() {
+            return Some(t);
+        }
+    }
+    None
+}
+
+fn worker(shared: Arc<Shared>, me: usize) {
+    let mut rng = Prng::new(me as u64 ^ 0x5eed);
+    loop {
+        // spin phase
+        let mut got = None;
+        for _ in 0..SPIN_TRIES {
+            if shared.pending.load(Ordering::Acquire) > 0 {
+                if let Some(t) = try_pop(&shared, me, &mut rng) {
+                    got = Some(t);
+                    break;
+                }
+            }
+            std::hint::spin_loop();
+        }
+        if let Some(t) = got {
+            shared.pending.fetch_sub(1, Ordering::AcqRel);
+            t();
+            continue;
+        }
+        if shared.shutdown.load(Ordering::Acquire)
+            && shared.pending.load(Ordering::Acquire) == 0
+        {
+            return;
+        }
+        // park phase
+        let mut idle = shared.idle.lock().unwrap();
+        if shared.pending.load(Ordering::Acquire) > 0
+            || shared.shutdown.load(Ordering::Acquire)
+        {
+            continue; // re-check without sleeping
+        }
+        *idle += 1;
+        // The timeout is a belt-and-braces re-check, not the wakeup
+        // path: submitters bump `pending` before taking the `idle` lock
+        // and notifying, so a sleeping worker cannot miss work. 100 ms
+        // keeps a *persistent* pool close to 0% CPU while idle.
+        let (guard, _timeout) = shared
+            .cv
+            .wait_timeout(idle, std::time::Duration::from_millis(100))
+            .unwrap();
+        idle = guard;
+        *idle -= 1;
+    }
+}
+
+impl TaskPool for ReferencePool {
+    fn execute(&self, task: Task) {
+        let n = self.shared.deques.len();
+        let slot = self.shared.next.fetch_add(1, Ordering::Relaxed) % n;
+        self.shared.deques[slot].lock().unwrap().push_back(task);
+        self.shared.pending.fetch_add(1, Ordering::AcqRel);
+        // wake at most one parked worker — through the global idle lock
+        // on every submission, which is exactly what the lock-free pool
+        // is measured against
+        let idle = self.shared.idle.lock().unwrap();
+        if *idle > 0 {
+            self.shared.cv.notify_one();
+        }
+    }
+
+    fn threads(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ReferencePool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_plane_runs_all_tasks() {
+        let pool = ReferencePool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let wg = super::super::WaitGroup::new(64);
+        for _ in 0..64 {
+            let c = Arc::clone(&counter);
+            let h = wg.handle();
+            pool.execute(Box::new(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+                h.done();
+            }));
+        }
+        wg.wait();
+        assert_eq!(counter.load(Ordering::Relaxed), 64);
+    }
+}

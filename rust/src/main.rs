@@ -642,6 +642,26 @@ fn expected_bench_cases(suite: &str) -> Vec<String> {
             v.push("fastpath-vs-seed".to_string());
             v
         }
+        "threadpool" => {
+            let mut v = Vec::new();
+            // per-task submission plane: the three pool libraries plus
+            // the preserved mutex reference plane, at 4 and 64 threads
+            for threads in [4usize, 64] {
+                for pool in ["std::thread", "Eigen", "Folly", "reference"] {
+                    v.push(format!("{pool}/{threads}threads/10k-tasks"));
+                }
+            }
+            for pool in ["std::thread", "Eigen", "Folly", "reference"] {
+                v.push(format!("{pool}/single-task-roundtrip"));
+            }
+            // batch plane + the substrate-vs-reference headline ratios
+            for threads in [4usize, 64] {
+                v.push(format!("Eigen/{threads}threads/batch-submit"));
+            }
+            v.push("fastpath-vs-reference".to_string());
+            v.push("fastpath-vs-reference/64threads".to_string());
+            v
+        }
         _ => Vec::new(),
     }
 }
@@ -675,9 +695,17 @@ fn cmd_bench_check(flags: &HashMap<String, String>) -> PallasResult<()> {
     if got_suite != suite {
         return Err(fail(format!("suite is '{got_suite}', expected '{suite}'")));
     }
-    doc.get("git_rev")
+    let git_rev = doc
+        .get("git_rev")
         .and_then(Json::as_str)
         .ok_or_else(|| fail("missing string 'git_rev'".into()))?;
+    if git_rev == "unknown" {
+        return Err(fail(
+            "git_rev is 'unknown' — a committed BENCH_*.json must carry a real \
+             revision (re-run the bench inside the checkout, or export GIT_REV)"
+                .into(),
+        ));
+    }
     doc.get("timestamp")
         .and_then(Json::as_f64)
         .ok_or_else(|| fail("missing numeric 'timestamp'".into()))?;

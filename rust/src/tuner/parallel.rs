@@ -9,8 +9,9 @@
 //! and by the online tuner across serving windows, so per-window
 //! re-plans stop paying a pool spawn) whose [`SweepPool::par_map`]
 //! submits work in index-contiguous chunks — one boxed closure and one
-//! channel send per chunk instead of per item — and returns results in
-//! item order. Because reduction happens index-ordered on the caller's
+//! channel send per chunk instead of per item, the whole chunk set
+//! injected through the pool's `execute_batch` so a sweep pays one
+//! wake decision — and returns results in item order. Because reduction happens index-ordered on the caller's
 //! thread (lowest-lattice-point tie-break preserved), a parallel sweep
 //! is bit-identical to the serial loop it replaces at any `--jobs`
 //! value.
@@ -142,12 +143,14 @@ impl SweepPool {
         let (tx, rx) = mpsc::channel::<(usize, std::thread::Result<Vec<R>>)>();
         let mut items = items.into_iter();
         let mut start = 0usize;
+        let mut batch: Vec<crate::libs::threadpool::Task> =
+            Vec::with_capacity(n.div_ceil(chunk));
         while start < n {
             let take: Vec<T> = items.by_ref().take(chunk).collect();
             let len = take.len();
             let f = Arc::clone(&f);
             let tx = tx.clone();
-            pool.execute(Box::new(move || {
+            batch.push(Box::new(move || {
                 let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     take.into_iter()
                         .enumerate()
@@ -159,6 +162,9 @@ impl SweepPool {
             start += len;
         }
         drop(tx);
+        // one injection + one wake decision for the whole sweep, instead
+        // of a submit (and, pre-substrate, a lock) per chunk
+        pool.execute_batch(batch);
         let mut out: Vec<Option<R>> = std::iter::repeat_with(|| None).take(n).collect();
         for (start, r) in rx {
             match r {

@@ -1,0 +1,198 @@
+//! Integration: the lock-free pool substrate under adversarial load —
+//! shutdown-under-load drains, park/submit races, worker-local
+//! recursion, oversubscription, and the batch submission paths.
+//! (Chase–Lev steal/take interleavings and eventcount protocol races
+//! are covered by unit tests inside `libs::threadpool`.)
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use parframe::config::PoolLib;
+use parframe::libs::threadpool::{
+    make_pool, scatter_gather, EigenPool, ReferencePool, Task, TaskPool, WaitGroup,
+};
+use parframe::util::prng::Prng;
+
+fn counting_tasks(counter: &Arc<AtomicUsize>, n: usize) -> Vec<Task> {
+    (0..n)
+        .map(|_| {
+            let c = Arc::clone(counter);
+            Box::new(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            }) as Task
+        })
+        .collect()
+}
+
+#[test]
+fn shutdown_under_load_drains_every_task() {
+    // Both the lock-free substrate and the reference plane guarantee
+    // drain-on-shutdown: dropping the pool mid-stream runs everything
+    // already submitted — no task dropped, no hang. Seeded sleeps
+    // scatter the drop point across queue states.
+    let mut rng = Prng::new(0x9d5_0bad);
+    for round in 0..8u64 {
+        let n = 2_000 + rng.below(3_000);
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool: Box<dyn TaskPool> = if round % 2 == 0 {
+                Box::new(EigenPool::new(1 + rng.below(4)))
+            } else {
+                Box::new(ReferencePool::new(1 + rng.below(4)))
+            };
+            for t in counting_tasks(&counter, n) {
+                pool.execute(t);
+            }
+            if rng.below(2) == 1 {
+                std::thread::sleep(Duration::from_micros(rng.below(200) as u64));
+            }
+            // drop with work in flight
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), n, "round {round}");
+    }
+}
+
+#[test]
+fn park_submit_race_loses_no_wakeup() {
+    // Single-task round-trips with seeded idle gaps long enough for
+    // workers to park: a lost wakeup would hang the latch (or stall
+    // until the 100 ms belt-and-braces timeout fires, blowing the
+    // loose elapsed bound below).
+    let pool = EigenPool::new(2);
+    let mut rng = Prng::new(0xec_5eed);
+    let t0 = Instant::now();
+    for i in 0..2_000u32 {
+        let wg = WaitGroup::new(1);
+        let h = wg.handle();
+        pool.execute(Box::new(move || h.done()));
+        wg.wait();
+        if i % 64 == 0 {
+            // let the workers spin out and park before the next submit
+            std::thread::sleep(Duration::from_micros(100 + rng.below(400) as u64));
+        }
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "park/submit loop took {:?} — lost wakeups falling back to the park timeout?",
+        t0.elapsed()
+    );
+}
+
+#[test]
+fn deep_worker_recursion_uses_local_deques() {
+    // A chain of tasks each spawned from *inside* a worker must land in
+    // that worker's own deque (the TLS fast path), not the injector.
+    let pool = Arc::new(EigenPool::new(2));
+    let wg = WaitGroup::new(1);
+    fn chain(pool: Arc<EigenPool>, wg: WaitGroup, depth: usize) {
+        let p2 = Arc::clone(&pool);
+        pool.execute(Box::new(move || {
+            if depth == 0 {
+                wg.done();
+            } else {
+                chain(p2, wg, depth - 1);
+            }
+        }));
+    }
+    chain(Arc::clone(&pool), wg.handle(), 200);
+    wg.wait();
+    assert!(
+        pool.local_submits() >= 200,
+        "worker-spawned tasks bypassed the local deque: {} local, {} injected",
+        pool.local_submits(),
+        pool.injected()
+    );
+}
+
+#[test]
+fn oversubscribed_64_threads_on_the_substrate() {
+    // the Fig. 14 stress shape on the new pool and the reference plane
+    let eigen = EigenPool::new(64);
+    assert_eq!(eigen.threads(), 64);
+    let counter = Arc::new(AtomicUsize::new(0));
+    scatter_gather(&eigen, counting_tasks(&counter, 20_000));
+    assert_eq!(counter.load(Ordering::Relaxed), 20_000);
+
+    let reference = ReferencePool::new(64);
+    assert_eq!(reference.threads(), 64);
+    let counter = Arc::new(AtomicUsize::new(0));
+    scatter_gather(&reference, counting_tasks(&counter, 20_000));
+    assert_eq!(counter.load(Ordering::Relaxed), 20_000);
+}
+
+#[test]
+fn batch_paths_run_on_every_flavour() {
+    // execute_batch (fire-and-forget) and execute_batch_counted (pool-
+    // counted completions) on all four pool flavours
+    let mut pools: Vec<(String, Box<dyn TaskPool>)> = PoolLib::ALL
+        .into_iter()
+        .map(|lib| {
+            (format!("{lib:?}"), Box::new(ArcPool(make_pool(lib, 3))) as Box<dyn TaskPool>)
+        })
+        .collect();
+    pools.push(("Reference".into(), Box::new(ReferencePool::new(3))));
+    for (name, pool) in &pools {
+        let counter = Arc::new(AtomicUsize::new(0));
+        let wg = WaitGroup::new(500);
+        let tasks: Vec<Task> = (0..500)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                let h = wg.handle();
+                Box::new(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                    h.done();
+                }) as Task
+            })
+            .collect();
+        pool.execute_batch(tasks);
+        wg.wait();
+        assert_eq!(counter.load(Ordering::Relaxed), 500, "{name} execute_batch");
+
+        let counter = Arc::new(AtomicUsize::new(0));
+        let wg = WaitGroup::new(500);
+        pool.execute_batch_counted(counting_tasks(&counter, 500), &wg);
+        wg.wait();
+        assert_eq!(counter.load(Ordering::Relaxed), 500, "{name} execute_batch_counted");
+    }
+}
+
+/// Adapter so `Arc<dyn TaskPool>` fits in the same list as owned pools.
+struct ArcPool(Arc<dyn TaskPool>);
+
+impl TaskPool for ArcPool {
+    fn execute(&self, task: Task) {
+        self.0.execute(task)
+    }
+    fn execute_batch(&self, tasks: Vec<Task>) {
+        self.0.execute_batch(tasks)
+    }
+    fn execute_batch_counted(&self, tasks: Vec<Task>, wg: &WaitGroup) {
+        self.0.execute_batch_counted(tasks, wg)
+    }
+    fn threads(&self) -> usize {
+        self.0.threads()
+    }
+}
+
+#[test]
+fn nested_scatter_gather_from_worker_context() {
+    // An outer batch whose tasks each run an inner scatter_gather on
+    // the same pool. Sized so blocked outer tasks never exhaust the
+    // workers (2 outer waits on a 4-worker pool) — the same occupancy
+    // contract the mutex pool had.
+    let pool = Arc::new(EigenPool::new(4));
+    let counter = Arc::new(AtomicUsize::new(0));
+    let outer_wg = WaitGroup::new(2);
+    for _ in 0..2 {
+        let p2 = Arc::clone(&pool);
+        let c2 = Arc::clone(&counter);
+        let h = outer_wg.handle();
+        pool.execute(Box::new(move || {
+            scatter_gather(p2.as_ref(), counting_tasks(&c2, 16));
+            h.done();
+        }));
+    }
+    outer_wg.wait();
+    assert_eq!(counter.load(Ordering::Relaxed), 32);
+}
