@@ -1,0 +1,110 @@
+//! Bench: the trace-store subsystem (`BENCH_trace.json`).
+//!
+//! Two planes: *capture* (closed-loop saturation throughput with and
+//! without a recorder attached — `record-overhead` is the committed
+//! contract, required ≤ 1.05x by the trace design note) and *codec*
+//! (columnar encode/decode events-per-second plus the on-disk density
+//! of the `.plt` format).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use parframe::config::CpuPlatform;
+use parframe::coordinator::{loadgen, BatchPolicy, Coordinator, CoordinatorConfig, LoadgenConfig};
+use parframe::tracestore::{TraceData, TraceEvent, TraceRecorder};
+use parframe::util::bench::Bench;
+use parframe::util::prng::Prng;
+
+const KIND: &str = "wide_deep";
+
+fn coordinator(recorder: Option<Arc<TraceRecorder>>) -> Coordinator {
+    let platform = CpuPlatform::large();
+    let mut cfg = CoordinatorConfig::sim(platform, &[KIND]);
+    cfg.lanes = 2;
+    cfg.policy = BatchPolicy { max_wait: Duration::from_micros(200), max_batch: usize::MAX };
+    cfg.recorder = recorder;
+    Coordinator::start(cfg).expect("start sim coordinator")
+}
+
+/// Closed-loop saturation: 8 workers re-submit as fast as responses come
+/// back, so throughput is bounded by coordinator overhead — exactly the
+/// path trace capture adds its per-batch work to.
+fn saturation(coord: &Coordinator, requests: usize) -> f64 {
+    loadgen::run(coord, &LoadgenConfig::closed(KIND, requests / 4, 8)).expect("warm-up");
+    let r = loadgen::run(coord, &LoadgenConfig::closed(KIND, requests, 8)).expect("saturation");
+    assert_eq!(r.errors, 0, "saturation run had errors");
+    r.throughput_rps
+}
+
+/// Realistically-shaped synthetic events for the codec cases: monotone
+/// timestamps with small deltas, a few kinds/lanes, batched ids — the
+/// profile the delta-varint columns are designed around.
+fn synthetic_trace(events: usize) -> TraceData {
+    let mut rng = Prng::new(0x7A11A5);
+    let mut t = 0u64;
+    let evs = (0..events)
+        .map(|i| {
+            t += rng.below(2_000_000) as u64; // ≤ 2 ms inter-arrival
+            let cut = t + rng.below(500_000) as u64;
+            let dispatch = cut + rng.below(100_000) as u64;
+            TraceEvent {
+                request_id: i as u64,
+                kind: (i % 3) as u16,
+                lane: (i % 2) as u16,
+                batch_id: (i / 4) as u64,
+                occupancy: 4,
+                bucket: 4,
+                arrival_ns: t,
+                cut_ns: cut,
+                dispatch_ns: dispatch,
+                complete_ns: dispatch + rng.below(3_000_000) as u64,
+            }
+        })
+        .collect();
+    TraceData::new(vec!["wide_deep".into(), "ncf".into(), "resnet50".into()], evs)
+}
+
+fn main() {
+    let mut b = Bench::new("trace");
+    let (sat_n, codec_events, codec_iters) =
+        if b.is_fast() { (512, 20_000, 3u32) } else { (4096, 200_000, 10u32) };
+
+    // -- capture plane: record-on vs record-off saturation --------------
+    let off = {
+        let coord = coordinator(None);
+        saturation(&coord, sat_n)
+    };
+    b.record("saturation/record-off", off, "req/s");
+
+    let recorder = Arc::new(TraceRecorder::new());
+    let on = {
+        let coord = coordinator(Some(Arc::clone(&recorder)));
+        saturation(&coord, sat_n)
+    };
+    b.record("saturation/record-on", on, "req/s");
+    // > 1.0 means recording costs throughput; the contract is ≤ 1.05
+    b.record("record-overhead", off / on, "x");
+    println!("trace/capture: {} events captured at saturation", recorder.drain().len());
+
+    // -- codec plane -----------------------------------------------------
+    let trace = synthetic_trace(codec_events);
+    let mut bytes = trace.to_bytes();
+    let t0 = Instant::now();
+    for _ in 0..codec_iters {
+        bytes = trace.to_bytes();
+    }
+    let encode_eps = (codec_iters as usize * codec_events) as f64 / t0.elapsed().as_secs_f64();
+    b.record("encode/events-per-sec", encode_eps, "events/s");
+
+    let mut decoded = TraceData::default();
+    let t0 = Instant::now();
+    for _ in 0..codec_iters {
+        decoded = TraceData::from_bytes(&bytes).expect("decode");
+    }
+    let decode_eps = (codec_iters as usize * codec_events) as f64 / t0.elapsed().as_secs_f64();
+    b.record("decode/events-per-sec", decode_eps, "events/s");
+    assert_eq!(decoded, trace, "codec round-trip diverged");
+
+    b.record("file/bytes-per-event", bytes.len() as f64 / codec_events as f64, "B");
+    b.finish();
+}

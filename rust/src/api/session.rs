@@ -28,6 +28,7 @@ use crate::models;
 use crate::runtime::{BackendFactory, SimBackendConfig, SimBackendFactory};
 use crate::sched::{split_cores, LaneGroup, LanePlan};
 use crate::sim::{SimCache, SimReport};
+use crate::tracestore::{ReplayPlan, TraceData, TraceRecorder};
 use crate::tuner::{
     self, baseline_config, Baseline, OnlineTuner, OnlineTunerConfig, SweepOptions, SweepPool,
 };
@@ -327,6 +328,18 @@ impl Session {
     /// session cache). Works identically for a plan tuned in-process and
     /// one loaded from `plan.json`.
     pub fn serve(&self, plan: &Plan) -> PallasResult<ServeHandle> {
+        self.serve_with(plan, None)
+    }
+
+    /// [`Session::serve`] with an optional trace recorder attached to
+    /// the coordinator (the `serve --record` path): lanes emit one
+    /// trace event per request, and [`ServeHandle::drain_trace`]
+    /// collects them as a saveable [`TraceData`].
+    pub fn serve_with(
+        &self,
+        plan: &Plan,
+        recorder: Option<Arc<TraceRecorder>>,
+    ) -> PallasResult<ServeHandle> {
         // platform-name check first (PlanMismatch beats a confusing
         // fingerprint error when the whole machine is wrong)
         let lane_plan = plan.lane_plan(&self.platform)?;
@@ -336,7 +349,8 @@ impl Session {
         sc.jobs = self.jobs;
         let factory = Arc::new(SimBackendFactory::with_cache(sc, Arc::clone(&self.cache)));
         let dyn_factory: Arc<dyn BackendFactory> = Arc::clone(&factory);
-        let cfg = CoordinatorConfig::with_factory(dyn_factory).with_plan(lane_plan);
+        let mut cfg = CoordinatorConfig::with_factory(dyn_factory).with_plan(lane_plan);
+        cfg.recorder = recorder;
         let coord = Coordinator::start(cfg)?;
         Ok(ServeHandle {
             coord,
@@ -357,6 +371,17 @@ impl Session {
     /// per-bucket tuned tables (the single-kind `serve --kind` path; no
     /// core-aware plan).
     pub fn serve_unplanned(&self, kinds: &[&str], lanes: usize) -> PallasResult<ServeHandle> {
+        self.serve_unplanned_with(kinds, lanes, None)
+    }
+
+    /// [`Session::serve_unplanned`] with an optional trace recorder (the
+    /// single-kind `serve --kind ... --record` path).
+    pub fn serve_unplanned_with(
+        &self,
+        kinds: &[&str],
+        lanes: usize,
+        recorder: Option<Arc<TraceRecorder>>,
+    ) -> PallasResult<ServeHandle> {
         let mut sc = SimBackendConfig::new(self.platform.clone(), kinds);
         sc.jobs = self.jobs;
         sc.policy = self.policy;
@@ -364,6 +389,7 @@ impl Session {
         let dyn_factory: Arc<dyn BackendFactory> = Arc::clone(&factory);
         let mut cfg = CoordinatorConfig::with_factory(dyn_factory);
         cfg.lanes = lanes.max(1);
+        cfg.recorder = recorder;
         let coord = Coordinator::start(cfg)?;
         Ok(ServeHandle {
             coord,
@@ -371,6 +397,44 @@ impl Session {
             session: self.clone(),
             tuned_batches: std::collections::HashMap::new(),
         })
+    }
+
+    /// Score a plan against a recorded trace without serving: the
+    /// trace-weighted mean of the plan's per-kind simulated latencies at
+    /// each kind's recorded mode bucket, on each entry's core slice.
+    /// Fully simulator-backed, so the score is bit-identical across runs
+    /// and `--jobs` values — this is what `parframe trace ab` ranks two
+    /// plans by, and the scoring view behind `tune --trace`.
+    pub fn score_plan_on_trace(&self, plan: &Plan, trace: &TraceData) -> PallasResult<f64> {
+        // platform + fingerprint gate, same as deploying the plan
+        plan.lane_plan(&self.platform)?;
+        let counts = trace.per_kind_counts();
+        if counts.is_empty() {
+            return Err(PallasError::InvalidConfig("trace has no events to score".into()));
+        }
+        let mut weighted = 0.0f64;
+        let mut total = 0usize;
+        for (id, count) in counts {
+            let name = trace.kind_name(id);
+            let entry = plan.entries.iter().find(|e| e.kind == name).ok_or_else(|| {
+                PallasError::InvalidPlan(format!(
+                    "plan has no entry for traced kind '{name}'"
+                ))
+            })?;
+            let batch = trace
+                .mode_bucket(id)
+                .filter(|&b| b >= 1)
+                .map(|b| b as usize)
+                .unwrap_or(entry.batch);
+            let prep = self
+                .cache
+                .prepared(&name, batch)
+                .ok_or_else(|| PallasError::UnknownModel(name.clone()))?;
+            let slice = self.platform.restrict(entry.first_core, entry.cores);
+            weighted += count as f64 * self.cache.latency(&prep, &slice, &entry.config)?;
+            total += count;
+        }
+        Ok(weighted / total as f64)
     }
 
     // -- internals --------------------------------------------------------
@@ -488,6 +552,29 @@ impl ServeHandle {
     /// single submitter (offered load is fixed, latency is measured).
     pub fn run_open(&self, kind: &str, requests: usize, rate_rps: f64) -> PallasResult<LoadReport> {
         Ok(loadgen::run(&self.coord, &LoadgenConfig::open(kind, requests, rate_rps))?)
+    }
+
+    /// Re-issue a recorded trace's exact arrival process against this
+    /// deployment ([`crate::coordinator::Scenario::Replay`]).
+    pub fn run_replay(&self, plan: &ReplayPlan) -> PallasResult<LoadReport> {
+        Ok(loadgen::run_replay(&self.coord, plan)?)
+    }
+
+    /// The trace recorder attached at deployment, if recording is on.
+    pub fn recorder(&self) -> Option<Arc<TraceRecorder>> {
+        self.coord.recorder()
+    }
+
+    /// Drain the attached recorder into a saveable [`TraceData`] whose
+    /// kind table is the coordinator's interned id→name slice. Errors if
+    /// the deployment was started without a recorder.
+    pub fn drain_trace(&self) -> PallasResult<TraceData> {
+        let recorder = self.coord.recorder().ok_or_else(|| {
+            PallasError::InvalidConfig(
+                "no trace recorder attached (deploy with serve_with/--record)".into(),
+            )
+        })?;
+        Ok(TraceData::new(self.coord.router().id_names().to_vec(), recorder.drain()))
     }
 
     /// Drive a multi-phase shifting mix; with `adaptive` the online

@@ -9,6 +9,7 @@
 
 use crate::error::{PallasError, PallasResult};
 use crate::models;
+use crate::tracestore::TraceData;
 
 /// One model in a workload: the zoo kind, the batch size tuning targets,
 /// and the kind's share of traffic (relative; need not sum to 1).
@@ -73,6 +74,34 @@ impl Workload {
         Ok(Workload { entries })
     }
 
+    /// Derive a workload from a recorded serving trace (the `tune
+    /// --trace` path): one entry per kind that saw traffic, weighted by
+    /// its recorded request count, with the batch set to the kind's most
+    /// frequent compiled bucket — so the tuner optimises for the batch
+    /// shape the batcher actually produced, not the canonical default.
+    /// Kinds are validated against the zoo exactly like [`Self::mix`].
+    pub fn from_trace(trace: &TraceData) -> PallasResult<Self> {
+        let counts = trace.per_kind_counts();
+        if counts.is_empty() {
+            return Err(PallasError::InvalidConfig("workload: trace has no events".into()));
+        }
+        let names: Vec<String> = counts.iter().map(|&(id, _)| trace.kind_name(id)).collect();
+        let mix: Vec<(&str, f64)> = names
+            .iter()
+            .zip(&counts)
+            .map(|(name, &(_, count))| (name.as_str(), count as f64))
+            .collect();
+        let mut workload = Self::mix(&mix)?;
+        for (entry, &(id, _)) in workload.entries.iter_mut().zip(&counts) {
+            if let Some(bucket) = trace.mode_bucket(id) {
+                if bucket >= 1 {
+                    entry.batch = bucket as usize;
+                }
+            }
+        }
+        Ok(workload)
+    }
+
     /// Override the batch size of every entry (the `tune --batch` knob;
     /// meaningful for single-model workloads).
     pub fn with_batch(mut self, batch: usize) -> PallasResult<Self> {
@@ -125,6 +154,39 @@ mod tests {
             Workload::mix(&[("wide_deep", 0.9), ("wide_deep", 0.1)]),
             Err(PallasError::InvalidConfig(m)) if m.contains("duplicate")
         ));
+    }
+
+    #[test]
+    fn from_trace_weights_by_counts_and_sets_mode_buckets() {
+        use crate::tracestore::TraceEvent;
+        let ev = |id: u64, kind: u16, bucket: u32| TraceEvent {
+            request_id: id,
+            kind,
+            lane: 0,
+            batch_id: id,
+            occupancy: 1,
+            bucket,
+            arrival_ns: id * 100,
+            cut_ns: id * 100 + 1,
+            dispatch_ns: id * 100 + 2,
+            complete_ns: id * 100 + 3,
+        };
+        let trace = crate::tracestore::TraceData::new(
+            vec!["wide_deep".into(), "resnet50".into()],
+            vec![ev(0, 0, 4), ev(1, 0, 4), ev(2, 0, 8), ev(3, 1, 1)],
+        );
+        let w = Workload::from_trace(&trace).unwrap();
+        assert_eq!(w.kind_names(), vec!["wide_deep", "resnet50"]);
+        assert_eq!(w.entries[0].weight, 3.0);
+        assert_eq!(w.entries[0].batch, 4); // mode bucket, not canonical
+        assert_eq!(w.entries[1].weight, 1.0);
+        assert_eq!(w.entries[1].batch, 1);
+        // a kind name outside the zoo fails like mix() does
+        let bad = crate::tracestore::TraceData::new(vec!["gpt".into()], vec![ev(0, 0, 1)]);
+        assert!(matches!(Workload::from_trace(&bad), Err(PallasError::UnknownModel(_))));
+        // an empty trace cannot describe a workload
+        let empty = crate::tracestore::TraceData::default();
+        assert!(Workload::from_trace(&empty).is_err());
     }
 
     #[test]

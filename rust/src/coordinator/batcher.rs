@@ -41,6 +41,9 @@ pub struct PendingBatch {
     pub bucket: usize,
     /// The member requests, in arrival order.
     pub requests: Vec<Request>,
+    /// When the batcher cut this batch — the "cut" timestamp trace
+    /// recording attributes to every member request.
+    pub(crate) cut_at: Instant,
     /// Gather scratch carried from the pool; the executing lane fills it
     /// and returns it with the rest of the buffer after scatter.
     pub(crate) input: Vec<f32>,
@@ -139,7 +142,7 @@ impl DynamicBatcher {
         let take = self.queue.len().min(self.cap());
         requests.extend(self.queue.drain(..take));
         let bucket = self.bucket_for(requests.len());
-        PendingBatch { kind: self.kind, bucket, requests, input }
+        PendingBatch { kind: self.kind, bucket, requests, cut_at: Instant::now(), input }
     }
 
     /// Time until the oldest request hits `max_wait` (None if empty) —

@@ -13,6 +13,12 @@
 //! [`closed_tags`] is the exact per-worker tag stream of the closed
 //! loop. [`MixPhase`] describes shifting multi-model traffic (one model
 //! ramps up while another drains) for the core-aware scheduler.
+//!
+//! Beyond synthetic streams, [`Scenario::Replay`] re-issues a *recorded*
+//! trace's exact arrival process (inter-arrival offsets + kind sequence
+//! from a [`crate::tracestore::ReplayPlan`]) — the paper-faithful way to
+//! score a configuration against real traffic instead of a Poisson
+//! approximation of it.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
@@ -21,6 +27,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::metrics::{LatencyHistogram, WindowTracker};
 use crate::runtime::{gen_input, KindId};
+use crate::tracestore::ReplayPlan;
 use crate::tuner::OnlineTuner;
 use crate::util::prng::Prng;
 use crate::util::stats;
@@ -139,6 +146,76 @@ pub struct LoadReport {
     pub model_mean_ms: f64,
     /// Mean requests per dispatched batch over the coordinator lifetime.
     pub mean_batch: f64,
+}
+
+/// A request stream to drive: a seeded synthetic workload, or the replay
+/// of a recorded trace's exact arrival process.
+#[derive(Debug, Clone)]
+pub enum Scenario {
+    /// Seeded closed-/open-loop stream ([`run`]).
+    Synthetic(LoadgenConfig),
+    /// Re-issue a recorded trace's arrivals ([`run_replay`]).
+    Replay(ReplayPlan),
+}
+
+/// Run either scenario kind against a coordinator.
+pub fn run_scenario(coord: &Coordinator, scenario: &Scenario) -> Result<LoadReport> {
+    match scenario {
+        Scenario::Synthetic(cfg) => run(coord, cfg),
+        Scenario::Replay(plan) => run_replay(coord, plan),
+    }
+}
+
+/// Re-issue a recorded arrival process: every request is submitted at
+/// its recorded offset from the first arrival, with the recorded kind
+/// sequence, and input tags from the plan's seeded PRNG — the generator
+/// side is fully deterministic, so two replays of the same plan submit
+/// an identical request stream.
+pub fn run_replay(coord: &Coordinator, plan: &ReplayPlan) -> Result<LoadReport> {
+    // resolve each referenced trace kind → (served id, dims) once
+    let router = coord.router();
+    let mut resolved: Vec<Option<(KindId, Vec<usize>)>> = vec![None; plan.kinds.len()];
+    for &(_, k) in &plan.arrivals {
+        let slot = resolved
+            .get_mut(k as usize)
+            .ok_or_else(|| anyhow!("replay: kind id {k} outside the trace kind table"))?;
+        if slot.is_none() {
+            let name = &plan.kinds[k as usize];
+            let id = router
+                .resolve(name)
+                .ok_or_else(|| anyhow!("kind '{name}' not served"))?;
+            *slot = Some((id, router.item_shape_id(id).dims()));
+        }
+    }
+    let mut rng = Prng::new(plan.seed);
+    let submitter = coord.submitter();
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(plan.arrivals.len());
+    let mut errors = 0usize;
+    for &(offset, k) in &plan.arrivals {
+        let now = t0.elapsed().as_secs_f64();
+        if offset > now {
+            std::thread::sleep(Duration::from_secs_f64(offset - now));
+        }
+        let (id, dims) = resolved[k as usize].as_ref().expect("resolved above");
+        let input = gen_input(rng.below(TAG_MODULUS) as u32, dims, 1.0);
+        match submitter.submit_id(*id, input) {
+            Ok(rx) => pending.push((rx, Instant::now())),
+            Err(_) => errors += 1,
+        }
+    }
+    let mut wall = Vec::with_capacity(pending.len());
+    let mut model = Vec::with_capacity(pending.len());
+    for (rx, t) in pending {
+        match rx.recv() {
+            Ok(resp) if resp.is_ok() => {
+                wall.push(t.elapsed().as_secs_f64());
+                model.push(resp.queue_s + resp.execute_s);
+            }
+            _ => errors += 1,
+        }
+    }
+    Ok(build_report(coord, wall, model, errors, t0.elapsed().as_secs_f64()))
 }
 
 /// Run a workload against a coordinator and aggregate the results. The

@@ -32,7 +32,7 @@ pub mod server;
 pub mod worker;
 
 pub use batcher::{BatchPolicy, DynamicBatcher, PendingBatch};
-pub use loadgen::{Arrival, KindReport, LoadReport, LoadgenConfig, MixPhase, MixReport};
+pub use loadgen::{Arrival, KindReport, LoadReport, LoadgenConfig, MixPhase, MixReport, Scenario};
 pub use pool::{BatchBuf, BatchPool, PoolStats, BATCH_POOL_CAP};
 pub use request::{Request, RequestId, Response};
 pub use router::Router;

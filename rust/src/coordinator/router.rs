@@ -52,6 +52,13 @@ impl Router {
         self.table.sorted_names()
     }
 
+    /// The interned id→name table in dense [`KindId`] order — stable for
+    /// the life of the coordinator. Trace files store this slice once in
+    /// their footer so events carry only `u16` ids.
+    pub fn id_names(&self) -> &[String] {
+        self.table.names()
+    }
+
     /// Shape contract for a family.
     pub fn item_shape(&self, kind: &str) -> Option<&ItemShape> {
         self.table.resolve(kind).map(|id| &self.shapes[id.index()])
@@ -139,6 +146,8 @@ mod tests {
         // transformer bucket-2 artifact has 64 rows ⇒ 32 rows per sequence
         assert_eq!(r.item_shape("transformer").unwrap().rows_per_item, 32);
         assert_eq!(r.kinds(), vec!["mlp", "transformer"]);
+        // dense id order (catalog interning order), for trace footers
+        assert_eq!(r.id_names(), ["mlp", "transformer"]);
     }
 
     #[test]

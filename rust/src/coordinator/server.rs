@@ -45,6 +45,7 @@ use crate::runtime::{
     Tensor,
 };
 use crate::sched::{pick_lane, LanePlan};
+use crate::tracestore::TraceRecorder;
 
 use super::batcher::{BatchPolicy, DynamicBatcher};
 use super::pool::{BatchPool, PoolStats, BATCH_POOL_CAP};
@@ -70,6 +71,10 @@ pub struct CoordinatorConfig {
     /// Response semantics are identical to the fast path; only the
     /// constant factors differ. Defaults to false.
     pub reference_loop: bool,
+    /// Trace recorder the lanes emit per-request events into
+    /// ([`crate::tracestore`]). `None` (the default) disables capture at
+    /// the cost of one branch per batch.
+    pub recorder: Option<Arc<TraceRecorder>>,
 }
 
 impl CoordinatorConfig {
@@ -81,6 +86,7 @@ impl CoordinatorConfig {
             policy: BatchPolicy::default(),
             plan: None,
             reference_loop: false,
+            recorder: None,
         }
     }
 
@@ -115,6 +121,15 @@ impl CoordinatorConfig {
     /// Select the seed (reference) data plane.
     pub fn with_reference_loop(mut self, on: bool) -> Self {
         self.reference_loop = on;
+        self
+    }
+
+    /// Attach a trace recorder; lanes will emit one [`TraceEvent`]
+    /// per request at batch completion.
+    ///
+    /// [`TraceEvent`]: crate::tracestore::TraceEvent
+    pub fn with_recorder(mut self, recorder: Arc<TraceRecorder>) -> Self {
+        self.recorder = Some(recorder);
         self
     }
 }
@@ -222,6 +237,7 @@ impl Coordinator {
             metrics: Arc::clone(&metrics),
             table: Arc::clone(&table),
             pool: Arc::new(BatchPool::new(pool_cap)),
+            recorder: cfg.recorder.clone(),
             reference: cfg.reference_loop,
         };
 
@@ -404,6 +420,11 @@ impl Coordinator {
     /// tests use it to assert no buffer leaked across a full drain).
     pub fn batch_pool(&self) -> Arc<BatchPool> {
         Arc::clone(&self.lane_env.pool)
+    }
+
+    /// The attached trace recorder, if capture is on.
+    pub fn recorder(&self) -> Option<Arc<TraceRecorder>> {
+        self.lane_env.recorder.clone()
     }
 }
 

@@ -29,6 +29,7 @@ use crate::error::PallasError;
 use crate::metrics::{Gauge, KindCounters, ServingMetrics};
 use crate::runtime::{Backend, BackendFactory, KindId, KindTable, Tensor};
 use crate::sched::LaneAssignment;
+use crate::tracestore::{TraceEvent, TraceRecorder};
 
 use super::batcher::PendingBatch;
 use super::pool::{BatchBuf, BatchPool};
@@ -44,6 +45,9 @@ pub struct LaneEnv {
     pub table: Arc<KindTable>,
     /// Shared recycling pool batches return their buffers to.
     pub pool: Arc<BatchPool>,
+    /// Trace recorder lanes emit per-request [`TraceEvent`]s into at
+    /// batch completion; `None` (the default) costs one branch per batch.
+    pub recorder: Option<Arc<TraceRecorder>>,
     /// Run the seed (reference) data plane instead of the fast path.
     pub reference: bool,
 }
@@ -115,7 +119,7 @@ impl WorkerLane {
                         return;
                     }
                 };
-                lane_loop(&*backend, rx, &env, &lane_depth);
+                lane_loop(&*backend, lane_id, rx, &env, &lane_depth);
             })?;
         ready_rx.recv()??;
         Ok(WorkerLane { tx, handle: Some(handle), lane_id, hosts, depth })
@@ -159,7 +163,13 @@ impl Drop for WorkerLane {
     }
 }
 
-fn lane_loop(backend: &dyn Backend, rx: Receiver<LaneMsg>, env: &LaneEnv, depth: &Gauge) {
+fn lane_loop(
+    backend: &dyn Backend,
+    lane_id: usize,
+    rx: Receiver<LaneMsg>,
+    env: &LaneEnv,
+    depth: &Gauge,
+) {
     // resolve per-kind counters once — no string hashing per batch
     let kind_counters = env.metrics.intern_kinds(env.table.names());
     while let Ok(msg) = rx.recv() {
@@ -167,7 +177,7 @@ fn lane_loop(backend: &dyn Backend, rx: Receiver<LaneMsg>, env: &LaneEnv, depth:
             LaneMsg::Shutdown => return,
             LaneMsg::Batch(batch) => {
                 let items = batch.requests.len() as u64;
-                execute_batch(backend, batch, env, &kind_counters);
+                execute_batch(backend, lane_id, batch, env, &kind_counters);
                 depth.sub(items);
             }
         }
@@ -175,15 +185,17 @@ fn lane_loop(backend: &dyn Backend, rx: Receiver<LaneMsg>, env: &LaneEnv, depth:
 }
 
 /// Execute one batch: gather rows into the pooled scratch → run the
-/// bucketed backend → scatter → return the buffer to the pool.
+/// bucketed backend → record trace events → scatter → return the buffer
+/// to the pool.
 fn execute_batch(
     backend: &dyn Backend,
+    lane_id: usize,
     batch: PendingBatch,
     env: &LaneEnv,
     kind_counters: &[Arc<KindCounters>],
 ) {
     let dispatch_time = Instant::now();
-    let PendingBatch { kind, bucket, mut requests, input: mut data } = batch;
+    let PendingBatch { kind, bucket, mut requests, cut_at, input: mut data } = batch;
     let n = requests.len();
     let counters = &kind_counters[kind.index()];
     let name = env.table.name(kind);
@@ -213,6 +225,32 @@ fn execute_batch(
     counters.batch_items.add(n as u64);
     if bucket > n {
         env.metrics.padded.add((bucket - n) as u64);
+    }
+
+    // trace capture: one event per member request, one sharded-ring
+    // write per batch, while `requests` is still populated. Disabled
+    // recording costs exactly this branch.
+    if let Some(rec) = &env.recorder {
+        let complete_time = Instant::now();
+        let batch_id = rec.next_batch_id();
+        let cut_ns = rec.ns_since_epoch(cut_at);
+        let dispatch_ns = rec.ns_since_epoch(dispatch_time);
+        let complete_ns = rec.ns_since_epoch(complete_time);
+        rec.record(
+            lane_id,
+            requests.iter().map(|r| TraceEvent {
+                request_id: r.id.0,
+                kind: kind.0,
+                lane: lane_id as u16,
+                batch_id,
+                occupancy: n.min(u16::MAX as usize) as u16,
+                bucket: bucket.min(u32::MAX as usize) as u32,
+                arrival_ns: rec.ns_since_epoch(r.enqueued),
+                cut_ns,
+                dispatch_ns,
+                complete_ns,
+            }),
+        );
     }
 
     // scatter: slice each item's rows back out

@@ -35,8 +35,10 @@
 //!   AOT-compiled JAX/Pallas artifacts, and `SimBackend`, which serves the
 //!   model zoo through the simulator with zero external artifacts),
 //!   [`coordinator`] (request router + dynamic batcher + load generator),
-//!   and [`tuner`] (the paper's §8 guidelines + Intel/TensorFlow baselines +
-//!   exhaustive search + the online re-tuner).
+//!   [`tracestore`] (serving trace capture, the columnar `.plt` store,
+//!   and trace replay), and [`tuner`] (the paper's §8 guidelines +
+//!   Intel/TensorFlow baselines + exhaustive search + the online
+//!   re-tuner).
 //!
 //! [`bench_tables`] regenerates every figure and table of the paper's
 //! evaluation.
@@ -55,6 +57,7 @@ pub mod runtime;
 pub mod sched;
 pub mod sim;
 pub mod trace;
+pub mod tracestore;
 pub mod tuner;
 pub mod util;
 

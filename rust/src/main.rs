@@ -12,6 +12,11 @@
 //! parframe serve --kinds wide_deep,resnet50           (core-aware lane plan)
 //! parframe serve --kinds wide_deep,resnet50 --adaptive (online re-tuning)
 //! parframe serve --backend pjrt --artifacts artifacts --kind mlp
+//! parframe serve --kind wide_deep --record out.plt    (capture a serving trace)
+//! parframe serve --plan plan.json --trace out.plt     (replay recorded arrivals)
+//! parframe tune --trace out.plt             tune for a recorded traffic mix
+//! parframe trace summary --file out.plt     p50/p99 queue/service breakdowns
+//! parframe trace ab --file out.plt --plan a.json --plan b.json
 //! parframe check --artifacts artifacts     verify artifact digests via PJRT
 //! ```
 //!
@@ -21,12 +26,14 @@
 //! print.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
-use parframe::api::{model_catalog, Plan, Session, Workload};
+use parframe::api::{model_catalog, Plan, ServeHandle, Session, Workload};
 use parframe::bench_tables;
 use parframe::coordinator::loadgen;
 use parframe::coordinator::{Coordinator, CoordinatorConfig, LoadgenConfig, MixPhase};
 use parframe::runtime::ModelRuntime;
+use parframe::tracestore::{TraceData, TraceRecorder};
 use parframe::tuner::Baseline;
 use parframe::{PallasError, PallasResult};
 
@@ -59,6 +66,7 @@ const TUNE_FLAGS: &[FlagSpec] = &[
     flag("policy"),
     flag("jobs"),
     flag("emit-plan"),
+    flag("trace"),
     switch("exhaustive"),
     switch("no-prune"),
 ];
@@ -85,9 +93,14 @@ const SERVE_FLAGS: &[FlagSpec] = &[
     flag("policy"),
     flag("jobs"),
     flag("artifacts"),
+    flag("record"),
+    flag("trace"),
     switch("adaptive"),
 ];
 const PLAN_FLAGS: &[FlagSpec] = &[flag("show")];
+const TRACE_FILE_FLAGS: &[FlagSpec] = &[flag("file")];
+const TRACE_SLOWEST_FLAGS: &[FlagSpec] = &[flag("file"), flag("top")];
+const TRACE_SHOW_FLAGS: &[FlagSpec] = &[flag("file"), flag("width"), switch("chrome")];
 const CHECK_FLAGS: &[FlagSpec] = &[flag("artifacts")];
 const BENCH_CHECK_FLAGS: &[FlagSpec] = &[flag("file"), flag("suite")];
 const NO_FLAGS: &[FlagSpec] = &[];
@@ -190,6 +203,7 @@ fn run() -> PallasResult<()> {
             Ok(())
         }
         "serve" => cmd_serve(&parse_flags(cmd, rest, SERVE_FLAGS)?),
+        "trace" => cmd_trace(rest),
         "plan" => cmd_plan(&parse_flags(cmd, rest, PLAN_FLAGS)?),
         "check" => cmd_check(&parse_flags(cmd, rest, CHECK_FLAGS)?),
         "bench-check" => cmd_bench_check(&parse_flags(cmd, rest, BENCH_CHECK_FLAGS)?),
@@ -216,6 +230,9 @@ fn print_help() {
                     [--jobs N]             sweep worker threads (default: host cores, ≤8,\n\
                                            or the PALLAS_JOBS env override)\n\
                     [--emit-plan FILE]     write the tuning decision as plan.json\n\
+                    [--trace FILE.plt]     tune for a recorded traffic mix instead of\n\
+                                           --model (kinds, weights and batch shapes\n\
+                                           come from the trace; deterministic)\n\
            plan     --show FILE           inspect a plan artifact\n\
            simulate --model M [--pools/--mkl/--intra N] [--policy POL] [--platform P]\n\
            figures  --fig N | --table N | --all\n\
@@ -229,6 +246,13 @@ fn print_help() {
                     [--policy POL]         pin the dispatch policy (sim only)\n\
                     [--jobs N]             parallel latency-table pre-simulation\n\
                     [--artifacts DIR]      (pjrt backend only)\n\
+                    [--record FILE.plt]    capture a serving trace (sim only)\n\
+                    [--trace FILE.plt]     replay recorded arrivals (sim only)\n\
+           trace    summary|kinds|batches|slowest|show --file FILE.plt\n\
+                    slowest [--top N]      rank requests by end-to-end latency\n\
+                    show [--width N] [--chrome]  render per-lane batch timelines\n\
+                    ab --file FILE.plt --plan a.json --plan b.json\n\
+                                           score plans against one recorded trace\n\
            check    --artifacts DIR\n\
            bench-check --file BENCH_sim.json --suite sim\n\
                     validate an emitted/committed benchmark JSON (schema + case keys)\n\
@@ -265,6 +289,9 @@ fn workload_from(flags: &HashMap<String, String>) -> PallasResult<Workload> {
 }
 
 fn cmd_tune(flags: &HashMap<String, String>) -> PallasResult<()> {
+    if flags.contains_key("trace") {
+        return cmd_tune_trace(flags);
+    }
     let session = session_from(flags)?;
     let w = workload_from(flags)?;
     let guided = session.tune(&w)?;
@@ -312,6 +339,57 @@ fn cmd_tune(flags: &HashMap<String, String>) -> PallasResult<()> {
     if let Some(path) = flags.get("emit-plan") {
         emitted.save(path)?;
         println!("plan written to {path} (tier {})", emitted.tier.name());
+    }
+    Ok(())
+}
+
+/// `tune --trace out.plt`: tune for a *recorded* traffic mix. The trace
+/// fixes the kinds, their traffic weights (request counts) and batch
+/// shapes (mode compiled bucket), so `--model`/`--batch` are no-ops and
+/// rejected. Scoring is simulator-backed, so the output is bit-identical
+/// across runs and `--jobs` values.
+fn cmd_tune_trace(flags: &HashMap<String, String>) -> PallasResult<()> {
+    reject_flags(
+        flags,
+        &["model", "batch"],
+        "tune --trace (the trace fixes the kinds and batch shapes)",
+    )?;
+    let path = flags.get("trace").expect("dispatched on --trace");
+    let trace = TraceData::load(path)?;
+    let session = session_from(flags)?;
+    let w = Workload::from_trace(&trace)?;
+    println!(
+        "tuning from trace {path}: {} events, {} kinds on {}",
+        trace.events.len(),
+        w.entries.len(),
+        session.platform().name
+    );
+    for e in &w.entries {
+        println!("  {:<14} weight {:>6.0}  batch {}", e.kind, e.weight, e.batch);
+    }
+    let plan = if flags.contains_key("exhaustive") {
+        let p = session.tune_exhaustive(&w)?;
+        println!(
+            "global optimum (exhaustive, {} unique points, jobs={}):",
+            p.evaluated,
+            session.jobs()
+        );
+        p
+    } else {
+        session.tune(&w)?
+    };
+    for line in plan.group_lines() {
+        println!("{line}");
+    }
+    let score = session.score_plan_on_trace(&plan, &trace)?;
+    println!(
+        "trace-weighted simulated latency: {:.3} ms (tier {})",
+        score * 1e3,
+        plan.tier.name()
+    );
+    if let Some(out) = flags.get("emit-plan") {
+        plan.save(out)?;
+        println!("plan written to {out} (tier {})", plan.tier.name());
     }
     Ok(())
 }
@@ -450,7 +528,8 @@ fn cmd_serve_plan(flags: &HashMap<String, String>) -> PallasResult<()> {
         session = session.jobs(parse_num(j, "jobs")?);
     }
     let session = session.build();
-    let handle = session.serve(&plan)?;
+    let recorder = flags.contains_key("record").then(|| Arc::new(TraceRecorder::new()));
+    let handle = session.serve_with(&plan, recorder)?;
     println!(
         "serving plan {path}: tier={} evaluated={} platform={} fingerprint={:016x}",
         plan.tier.name(),
@@ -480,14 +559,47 @@ fn cmd_serve_plan(flags: &HashMap<String, String>) -> PallasResult<()> {
     for ((kind, bucket), lat) in handle.latency_table()? {
         println!("  {kind} b{bucket} {lat:e}");
     }
-    let n_requests = requests_from(flags)?;
-    let concurrency = concurrency_from(flags)?;
-    let per_kind = (n_requests / plan.entries.len()).max(1);
-    for e in &plan.entries {
-        let r = handle.run_closed(&e.kind, per_kind, concurrency)?;
-        println!("loadgen {}: {}", e.kind, r.summary());
+    if let Some(trace_path) = flags.get("trace") {
+        // a replay re-issues the trace's arrival process verbatim, so
+        // the synthetic-load knobs would be silent no-ops
+        reject_flags(
+            flags,
+            &["requests", "concurrency"],
+            "serve --trace (the trace fixes the arrival process)",
+        )?;
+        let trace = TraceData::load(trace_path)?;
+        let replay = trace.replay_plan(0x5EED);
+        println!("replaying {trace_path}: {} recorded arrivals", replay.arrivals.len());
+        let r = handle.run_replay(&replay)?;
+        println!("replay: {}", r.summary());
+    } else {
+        let n_requests = requests_from(flags)?;
+        let concurrency = concurrency_from(flags)?;
+        let per_kind = (n_requests / plan.entries.len()).max(1);
+        for e in &plan.entries {
+            let r = handle.run_closed(&e.kind, per_kind, concurrency)?;
+            println!("loadgen {}: {}", e.kind, r.summary());
+        }
     }
+    save_recorded(&handle, flags)?;
     println!("metrics: {}", handle.coordinator().metrics().summary());
+    Ok(())
+}
+
+/// After serving, drain an attached recorder to the `--record` path.
+fn save_recorded(handle: &ServeHandle, flags: &HashMap<String, String>) -> PallasResult<()> {
+    if let Some(path) = flags.get("record") {
+        let data = handle.drain_trace()?;
+        let stats = handle.recorder().expect("drain_trace found a recorder").stats();
+        data.save(path)?;
+        println!(
+            "trace written to {path}: {} events, {} kinds ({} recorded, {} dropped)",
+            data.events.len(),
+            data.kinds.len(),
+            stats.recorded,
+            stats.dropped
+        );
+    }
     Ok(())
 }
 
@@ -500,16 +612,45 @@ fn cmd_serve_single(flags: &HashMap<String, String>) -> PallasResult<()> {
          --backend pjrt)",
     )?;
     let session = session_from(flags)?;
-    let kind = flags.get("kind").map(String::as_str).unwrap_or("wide_deep");
     let lanes = flags.get("lanes").map(|l| parse_num(l, "lanes")).transpose()?.unwrap_or(1);
+    let recorder = flags.contains_key("record").then(|| Arc::new(TraceRecorder::new()));
+    if let Some(trace_path) = flags.get("trace") {
+        // replay mode: the trace names its kinds and fixes the arrival
+        // process, so the synthetic-load knobs are silent no-ops
+        reject_flags(
+            flags,
+            &["kind", "requests", "concurrency"],
+            "serve --trace (the trace fixes the kinds and arrival process)",
+        )?;
+        let trace = TraceData::load(trace_path)?;
+        if trace.kinds.is_empty() {
+            return Err(PallasError::Cli(format!("{trace_path}: trace has an empty kind table")));
+        }
+        let kinds: Vec<&str> = trace.kinds.iter().map(String::as_str).collect();
+        println!(
+            "starting coordinator: backend=sim kinds={} lanes={lanes} platform={} (replay)",
+            trace.kinds.join(","),
+            session.platform().name
+        );
+        let handle = session.serve_unplanned_with(&kinds, lanes, recorder)?;
+        let replay = trace.replay_plan(0x5EED);
+        println!("replaying {trace_path}: {} recorded arrivals", replay.arrivals.len());
+        let report = handle.run_replay(&replay)?;
+        println!("replay: {}", report.summary());
+        save_recorded(&handle, flags)?;
+        println!("metrics: {}", handle.coordinator().metrics().summary());
+        return Ok(());
+    }
+    let kind = flags.get("kind").map(String::as_str).unwrap_or("wide_deep");
     println!(
         "starting coordinator: backend=sim kind={kind} lanes={lanes} platform={} policy={}",
         session.platform().name,
         session.policy().map(|p| p.name()).unwrap_or("tuner")
     );
-    let handle = session.serve_unplanned(&[kind], lanes)?;
+    let handle = session.serve_unplanned_with(&[kind], lanes, recorder)?;
     let report = handle.run_closed(kind, requests_from(flags)?, concurrency_from(flags)?)?;
     println!("loadgen: {}", report.summary());
+    save_recorded(&handle, flags)?;
     println!("metrics: {}", handle.coordinator().metrics().summary());
     Ok(())
 }
@@ -519,8 +660,8 @@ fn cmd_serve_single(flags: &HashMap<String, String>) -> PallasResult<()> {
 fn cmd_serve_planned(flags: &HashMap<String, String>) -> PallasResult<()> {
     reject_flags(
         flags,
-        &["kind", "lanes", "artifacts"],
-        "core-aware serving (use --kinds A,B on the sim backend)",
+        &["kind", "lanes", "artifacts", "record", "trace"],
+        "core-aware serving (record/replay ride the --kind or --plan serving modes)",
     )?;
     let session = session_from(flags)?;
     let adaptive = flags.contains_key("adaptive");
@@ -579,7 +720,17 @@ fn cmd_serve_planned(flags: &HashMap<String, String>) -> PallasResult<()> {
 fn cmd_serve_pjrt(flags: &HashMap<String, String>) -> PallasResult<()> {
     reject_flags(
         flags,
-        &["policy", "kinds", "adaptive", "plan", "jobs", "emit-plan", "platform"],
+        &[
+            "policy",
+            "kinds",
+            "adaptive",
+            "plan",
+            "jobs",
+            "emit-plan",
+            "platform",
+            "record",
+            "trace",
+        ],
         "the pjrt backend (it owns scheduling and runs on the host machine)",
     )?;
     let dir = flags.get("artifacts").map(String::as_str).unwrap_or("artifacts");
@@ -595,6 +746,200 @@ fn cmd_serve_pjrt(flags: &HashMap<String, String>) -> PallasResult<()> {
     )?;
     println!("loadgen: {}", report.summary());
     println!("metrics: {}", coord.metrics().summary());
+    Ok(())
+}
+
+/// `parframe trace VERB --file out.plt`: offline queries over a recorded
+/// `.plt` serving trace. The verb is positional (like a git subcommand)
+/// so each verb can declare its own flag spec.
+fn cmd_trace(rest: &[String]) -> PallasResult<()> {
+    let Some(verb) = rest.first().map(String::as_str) else {
+        return Err(PallasError::Cli(
+            "trace needs a verb: summary | kinds | batches | slowest | show | ab \
+             (e.g. parframe trace summary --file out.plt)"
+                .into(),
+        ));
+    };
+    let rest = &rest[1..];
+    match verb {
+        "summary" => cmd_trace_summary(&parse_flags("trace summary", rest, TRACE_FILE_FLAGS)?),
+        "kinds" => cmd_trace_kinds(&parse_flags("trace kinds", rest, TRACE_FILE_FLAGS)?),
+        "batches" => cmd_trace_batches(&parse_flags("trace batches", rest, TRACE_FILE_FLAGS)?),
+        "slowest" => cmd_trace_slowest(&parse_flags("trace slowest", rest, TRACE_SLOWEST_FLAGS)?),
+        "show" => cmd_trace_show(&parse_flags("trace show", rest, TRACE_SHOW_FLAGS)?),
+        "ab" => cmd_trace_ab(rest),
+        other => Err(PallasError::Cli(format!(
+            "unknown trace verb '{other}' (summary | kinds | batches | slowest | show | ab)"
+        ))),
+    }
+}
+
+fn load_trace(flags: &HashMap<String, String>) -> PallasResult<TraceData> {
+    let path = flags
+        .get("file")
+        .ok_or_else(|| PallasError::Cli("--file TRACE.plt required".into()))?;
+    TraceData::load(path)
+}
+
+fn cmd_trace_summary(flags: &HashMap<String, String>) -> PallasResult<()> {
+    let t = load_trace(flags)?;
+    let s = t.summary();
+    println!(
+        "{} events over {:.3} s | {} batches (mean occupancy {:.2}) | {} lanes | {} kinds",
+        s.events, s.duration_s, s.batches, s.mean_occupancy, s.lanes, s.kinds.len()
+    );
+    println!("per-kind latency breakdown (ms):");
+    println!(
+        "{:<14} {:>6} {:>7} {:>9} {:>9} {:>9} {:>9} {:>9}",
+        "kind", "count", "bucket", "batch-p50", "wait-p50", "svc-p50", "total-p50", "total-p99"
+    );
+    for k in &s.kinds {
+        println!(
+            "{:<14} {:>6} {:>7} {:>9.3} {:>9.3} {:>9.3} {:>9.3} {:>9.3}",
+            k.name,
+            k.count,
+            k.mode_bucket,
+            k.p50_batching_ms,
+            k.p50_lane_wait_ms,
+            k.p50_service_ms,
+            k.p50_total_ms,
+            k.p99_total_ms
+        );
+    }
+    Ok(())
+}
+
+fn cmd_trace_kinds(flags: &HashMap<String, String>) -> PallasResult<()> {
+    let t = load_trace(flags)?;
+    let counts = t.per_kind_counts();
+    println!("{:<4} {:<14} {:>7}", "id", "kind", "events");
+    // the footer's full interned table, including kinds with no traffic
+    for (id, name) in t.kinds.iter().enumerate() {
+        let n = counts
+            .iter()
+            .find(|&&(k, _)| k as usize == id)
+            .map(|&(_, n)| n)
+            .unwrap_or(0);
+        println!("{id:<4} {name:<14} {n:>7}");
+    }
+    Ok(())
+}
+
+fn cmd_trace_batches(flags: &HashMap<String, String>) -> PallasResult<()> {
+    let t = load_trace(flags)?;
+    let rows = t.batch_rows();
+    println!("{} batches over {} events", rows.len(), t.events.len());
+    let hist = t.occupancy_histogram();
+    let peak = hist.iter().map(|&(_, n)| n).max().unwrap_or(1);
+    println!("occupancy histogram (requests per executed batch):");
+    for &(occ, n) in &hist {
+        let bar = "#".repeat((n * 40 / peak).max(1));
+        println!("  {occ:>4} | {n:>6} {bar}");
+    }
+    Ok(())
+}
+
+fn cmd_trace_slowest(flags: &HashMap<String, String>) -> PallasResult<()> {
+    let t = load_trace(flags)?;
+    let top = flags.get("top").map(|v| parse_num(v, "top")).transpose()?.unwrap_or(10);
+    println!("slowest {top} requests by end-to-end latency (ms):");
+    println!(
+        "{:<10} {:<14} {:>5} {:>8} {:>7} {:>9} {:>9} {:>9} {:>9}",
+        "request", "kind", "lane", "batch", "bucket", "batching", "wait", "service", "total"
+    );
+    for e in t.slowest(top) {
+        println!(
+            "{:<10} {:<14} {:>5} {:>8} {:>7} {:>9.3} {:>9.3} {:>9.3} {:>9.3}",
+            e.request_id,
+            t.kind_name(e.kind),
+            e.lane,
+            e.batch_id,
+            e.bucket,
+            e.batching_ns() as f64 / 1e6,
+            e.lane_wait_ns() as f64 / 1e6,
+            e.service_ns() as f64 / 1e6,
+            e.total_ns() as f64 / 1e6
+        );
+    }
+    Ok(())
+}
+
+/// Render a trace through the existing simulator-trace emitters: one
+/// compute burst per executed batch, one row per worker lane.
+fn cmd_trace_show(flags: &HashMap<String, String>) -> PallasResult<()> {
+    let t = load_trace(flags)?;
+    let (timelines, span) = t.lane_timelines();
+    if flags.contains_key("chrome") {
+        println!("{}", parframe::trace::chrome_trace(&timelines));
+        return Ok(());
+    }
+    let width = flags.get("width").map(|v| parse_num(v, "width")).transpose()?.unwrap_or(72);
+    print!("{}", parframe::trace::ascii_trace(&timelines, span, width));
+    println!("(rows are worker lanes; each # burst is one executed batch over {span:.3} s)");
+    Ok(())
+}
+
+/// `trace ab` hand-parses its args: `--plan` legitimately repeats, which
+/// the shared `parse_flags` map (last value wins) cannot express.
+fn cmd_trace_ab(args: &[String]) -> PallasResult<()> {
+    let mut file: Option<&str> = None;
+    let mut plans: Vec<&str> = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        let value = args.get(i + 1).map(String::as_str);
+        match args[i].as_str() {
+            "--file" => {
+                file = Some(value.ok_or_else(|| {
+                    PallasError::Cli("missing value for --file (usage: --file TRACE.plt)".into())
+                })?);
+            }
+            "--plan" => {
+                plans.push(value.ok_or_else(|| {
+                    PallasError::Cli("missing value for --plan (usage: --plan FILE)".into())
+                })?);
+            }
+            other => {
+                return Err(PallasError::Cli(format!(
+                    "unexpected argument '{other}' for 'trace ab' (accepted flags: \
+                     --file TRACE.plt, --plan FILE [repeatable])"
+                )))
+            }
+        }
+        i += 2;
+    }
+    let file = file.ok_or_else(|| PallasError::Cli("trace ab needs --file TRACE.plt".into()))?;
+    if plans.len() < 2 {
+        return Err(PallasError::Cli(
+            "trace ab needs at least two --plan FILE flags to compare".into(),
+        ));
+    }
+    let trace = TraceData::load(file)?;
+    println!("scoring {} plans against {file} ({} events):", plans.len(), trace.events.len());
+    let mut scored: Vec<(&str, f64)> = Vec::new();
+    for &path in &plans {
+        let plan = Plan::load(path)?;
+        // the plan names its platform; score on that exact machine
+        let session = Session::builder().platform_named(&plan.platform)?.build();
+        let s = session.score_plan_on_trace(&plan, &trace)?;
+        println!(
+            "  {path}: {:.3} ms trace-weighted (tier {}, platform {})",
+            s * 1e3,
+            plan.tier.name(),
+            plan.platform
+        );
+        scored.push((path, s));
+    }
+    let (best, best_s) = scored
+        .iter()
+        .copied()
+        .min_by(|a, b| a.1.total_cmp(&b.1))
+        .expect("at least two plans scored");
+    println!("winner: {best} at {:.3} ms", best_s * 1e3);
+    for &(path, s) in &scored {
+        if path != best {
+            println!("  beats {path} by {:.2}x", s / best_s);
+        }
+    }
     Ok(())
 }
 
@@ -642,6 +987,17 @@ fn expected_bench_cases(suite: &str) -> Vec<String> {
             v.push("fastpath-vs-seed".to_string());
             v
         }
+        "trace" => [
+            "saturation/record-off",
+            "saturation/record-on",
+            "record-overhead",
+            "encode/events-per-sec",
+            "decode/events-per-sec",
+            "file/bytes-per-event",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect(),
         "threadpool" => {
             let mut v = Vec::new();
             // per-task submission plane: the three pool libraries plus

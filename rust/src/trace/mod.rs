@@ -34,8 +34,17 @@ pub fn ascii_trace(timelines: &[Vec<Segment>], latency: f64, width: usize) -> St
         }
         let mut row = vec![' '; width];
         for seg in tl {
-            let c0 = ((seg.t0 / latency) * width as f64).floor() as usize;
-            let c1 = (((seg.t1 / latency) * width as f64).ceil() as usize).min(width);
+            // a zero-latency run (empty graph / all-cached path) has no
+            // time extent; dividing by it yields NaN column indices, so
+            // such segments draw nothing
+            let (c0, c1) = if latency > 0.0 {
+                (
+                    ((seg.t0 / latency) * width as f64).floor() as usize,
+                    (((seg.t1 / latency) * width as f64).ceil() as usize).min(width),
+                )
+            } else {
+                (0, 0)
+            };
             for slot in row.iter_mut().take(c1).skip(c0.min(width)) {
                 // later segments overwrite idle but not real work
                 if *slot == ' ' || *slot == '.' {
@@ -123,6 +132,19 @@ mod tests {
         let s = chrome_trace(&tls);
         let v = Json::parse(&s).unwrap();
         assert_eq!(v.as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn zero_latency_renders_without_nan() {
+        // regression: latency 0.0 (empty graph / all-cached) used to
+        // produce NaN column indices and garbage rows
+        let tls = vec![vec![seg(0.0, 0.0, Category::MklCompute)]];
+        let s = ascii_trace(&tls, 0.0, 12);
+        let row = s.lines().next().unwrap();
+        assert!(row.starts_with("core   0"));
+        assert!(row.contains("0%"));
+        assert!(!row.contains('#'), "zero-extent segment must draw nothing: {row}");
+        assert!(s.contains("legend"));
     }
 
     #[test]

@@ -1,0 +1,77 @@
+//! The per-request trace record the serving data plane emits.
+
+/// One served request's life-cycle, timestamps in nanoseconds since the
+/// recorder epoch. The data plane guarantees
+/// `arrival_ns <= cut_ns <= dispatch_ns <= complete_ns`; the columnar
+/// codec round-trips any values (wrapping deltas), so a malformed file
+/// cannot panic the reader.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Coordinator-assigned request id (submission order).
+    pub request_id: u64,
+    /// Interned kind id — resolves through the trace's footer kind table.
+    pub kind: u16,
+    /// Worker lane that executed the request's batch.
+    pub lane: u16,
+    /// Recorder-assigned batch id (groups co-batched requests).
+    pub batch_id: u64,
+    /// Requests in the batch (its real size, before bucket padding).
+    pub occupancy: u16,
+    /// Compiled bucket the batch was padded to.
+    pub bucket: u32,
+    /// Router admission (request enqueued).
+    pub arrival_ns: u64,
+    /// Batcher cut the request's batch.
+    pub cut_ns: u64,
+    /// Executing lane picked the batch up.
+    pub dispatch_ns: u64,
+    /// Backend execution finished.
+    pub complete_ns: u64,
+}
+
+impl TraceEvent {
+    /// Time spent waiting in the dynamic batcher (arrival → cut).
+    pub fn batching_ns(&self) -> u64 {
+        self.cut_ns.wrapping_sub(self.arrival_ns)
+    }
+
+    /// Time spent queued on the lane (cut → dispatch).
+    pub fn lane_wait_ns(&self) -> u64 {
+        self.dispatch_ns.wrapping_sub(self.cut_ns)
+    }
+
+    /// Backend execution time of the request's batch (dispatch → complete).
+    pub fn service_ns(&self) -> u64 {
+        self.complete_ns.wrapping_sub(self.dispatch_ns)
+    }
+
+    /// End-to-end latency (arrival → complete).
+    pub fn total_ns(&self) -> u64 {
+        self.complete_ns.wrapping_sub(self.arrival_ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_components_sum_to_total() {
+        let e = TraceEvent {
+            request_id: 7,
+            kind: 1,
+            lane: 0,
+            batch_id: 3,
+            occupancy: 4,
+            bucket: 8,
+            arrival_ns: 100,
+            cut_ns: 150,
+            dispatch_ns: 170,
+            complete_ns: 400,
+        };
+        assert_eq!(e.batching_ns(), 50);
+        assert_eq!(e.lane_wait_ns(), 20);
+        assert_eq!(e.service_ns(), 230);
+        assert_eq!(e.total_ns(), e.batching_ns() + e.lane_wait_ns() + e.service_ns());
+    }
+}

@@ -1,0 +1,526 @@
+//! The `.plt` columnar trace file.
+//!
+//! Zero-dependency, in the same spirit as the vendored [`crate::util::json`]:
+//!
+//! ```text
+//! "PLT1"                                  4-byte magic
+//! column payloads, back to back           LEB128 varints, one per event
+//! footer                                  compact JSON (schema version,
+//!                                         event count, interned kind
+//!                                         table, column index)
+//! footer length                           u32 little-endian
+//! "PLTE"                                  4-byte tail magic
+//! ```
+//!
+//! Ten columns per event, each independently decodable through the
+//! footer index. Timestamps are delta-encoded: `arrival_ns` against the
+//! previous row (rows are arrival-sorted, so deltas are tiny), and the
+//! cut/dispatch/complete instants as the *breakdown columns*
+//! `batching_ns` / `lane_wait_ns` / `service_ns` — the exact quantities
+//! the `parframe trace` queries want, so p50/p99 breakdowns read one
+//! column with no reconstruction. All deltas are wrapping, so any u64
+//! stream round-trips byte-identically regardless of ordering.
+//!
+//! Kind names are interned: events carry `u16` ids, the footer stores
+//! the id→name table once (`Router::id_names()` order).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{PallasError, PallasResult};
+use crate::util::json::{self, Json};
+
+use super::event::TraceEvent;
+
+/// Version stamped into every footer; readers reject other versions.
+pub const TRACE_SCHEMA_VERSION: u64 = 1;
+
+const MAGIC: &[u8; 4] = b"PLT1";
+const TAIL_MAGIC: &[u8; 4] = b"PLTE";
+
+/// Column order is part of the schema (the footer index repeats it, but
+/// writers always emit this order so files are byte-deterministic).
+const COLUMNS: [(&str, Encoding); 10] = [
+    ("request_id", Encoding::Varint),
+    ("kind", Encoding::Varint),
+    ("lane", Encoding::Varint),
+    ("batch_id", Encoding::Varint),
+    ("occupancy", Encoding::Varint),
+    ("bucket", Encoding::Varint),
+    ("arrival_ns", Encoding::DeltaVarint),
+    ("batching_ns", Encoding::Varint),
+    ("lane_wait_ns", Encoding::Varint),
+    ("service_ns", Encoding::Varint),
+];
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Encoding {
+    /// Plain LEB128 varints.
+    Varint,
+    /// LEB128 varints of wrapping deltas against the previous value.
+    DeltaVarint,
+}
+
+impl Encoding {
+    fn name(self) -> &'static str {
+        match self {
+            Encoding::Varint => "varint",
+            Encoding::DeltaVarint => "delta-varint",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Self> {
+        match s {
+            "varint" => Some(Encoding::Varint),
+            "delta-varint" => Some(Encoding::DeltaVarint),
+            _ => None,
+        }
+    }
+}
+
+fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    while v >= 0x80 {
+        out.push((v as u8) | 0x80);
+        v >>= 7;
+    }
+    out.push(v as u8);
+}
+
+fn err(msg: impl Into<String>) -> PallasError {
+    PallasError::parse("trace", msg.into())
+}
+
+/// A decoded trace: the interned kind table plus the events.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct TraceData {
+    /// id→name table, indexed by [`TraceEvent::kind`].
+    pub kinds: Vec<String>,
+    /// Events in arrival order.
+    pub events: Vec<TraceEvent>,
+}
+
+impl TraceData {
+    /// A trace over a kind table and events (sorted into arrival order —
+    /// the writer's canonical row order).
+    pub fn new(kinds: Vec<String>, mut events: Vec<TraceEvent>) -> Self {
+        events.sort_by_key(|e| (e.arrival_ns, e.request_id));
+        TraceData { kinds, events }
+    }
+
+    /// The kind name for an interned id (`"kind<id>"` when the footer
+    /// table is shorter than the id space — a malformed but readable file).
+    pub fn kind_name(&self, id: u16) -> String {
+        self.kinds
+            .get(id as usize)
+            .cloned()
+            .unwrap_or_else(|| format!("kind{id}"))
+    }
+
+    /// Serialise to `.plt` bytes. Deterministic: the same trace always
+    /// produces the same bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16 + self.events.len() * 12);
+        out.extend_from_slice(MAGIC);
+        let mut index = Vec::with_capacity(COLUMNS.len());
+        for (name, enc) in COLUMNS {
+            let start = out.len();
+            let mut prev = 0u64;
+            for e in &self.events {
+                let raw = column_value(e, name);
+                let stored = match enc {
+                    Encoding::Varint => raw,
+                    Encoding::DeltaVarint => {
+                        let d = raw.wrapping_sub(prev);
+                        prev = raw;
+                        d
+                    }
+                };
+                put_varint(&mut out, stored);
+            }
+            index.push((name, enc, start, out.len() - start));
+        }
+        let footer = json::to_string(&self.footer_json(&index));
+        out.extend_from_slice(footer.as_bytes());
+        out.extend_from_slice(&(footer.len() as u32).to_le_bytes());
+        out.extend_from_slice(TAIL_MAGIC);
+        out
+    }
+
+    fn footer_json(&self, index: &[(&str, Encoding, usize, usize)]) -> Json {
+        let columns = index
+            .iter()
+            .map(|&(name, enc, offset, len)| {
+                let mut col = BTreeMap::new();
+                col.insert("encoding".to_string(), Json::Str(enc.name().to_string()));
+                col.insert("len".to_string(), Json::Num(len as f64));
+                col.insert("name".to_string(), Json::Str(name.to_string()));
+                col.insert("offset".to_string(), Json::Num(offset as f64));
+                Json::Obj(col)
+            })
+            .collect();
+        let mut obj = BTreeMap::new();
+        obj.insert("columns".to_string(), Json::Arr(columns));
+        obj.insert("events".to_string(), Json::Num(self.events.len() as f64));
+        obj.insert(
+            "kinds".to_string(),
+            Json::Arr(self.kinds.iter().map(|k| Json::Str(k.clone())).collect()),
+        );
+        obj.insert(
+            "schema_version".to_string(),
+            Json::Num(TRACE_SCHEMA_VERSION as f64),
+        );
+        Json::Obj(obj)
+    }
+
+    /// Decode `.plt` bytes (the eager counterpart of [`TraceReader`]).
+    pub fn from_bytes(bytes: &[u8]) -> PallasResult<Self> {
+        let reader = TraceReader::open(bytes)?;
+        let n = reader.events();
+        let mut cols = Vec::with_capacity(COLUMNS.len());
+        for (name, _) in COLUMNS {
+            let col = reader.read_column(name)?;
+            if col.len() != n {
+                return Err(err(format!(
+                    "column '{name}': {} values for {n} events",
+                    col.len()
+                )));
+            }
+            cols.push(col);
+        }
+        let narrow = |v: u64, what: &str, max: u64| -> PallasResult<u64> {
+            if v > max {
+                return Err(err(format!("{what} {v} out of range (max {max})")));
+            }
+            Ok(v)
+        };
+        let mut events = Vec::with_capacity(n);
+        for i in 0..n {
+            let arrival_ns = cols[6][i];
+            let cut_ns = arrival_ns.wrapping_add(cols[7][i]);
+            let dispatch_ns = cut_ns.wrapping_add(cols[8][i]);
+            let complete_ns = dispatch_ns.wrapping_add(cols[9][i]);
+            events.push(TraceEvent {
+                request_id: cols[0][i],
+                kind: narrow(cols[1][i], "kind id", u16::MAX as u64)? as u16,
+                lane: narrow(cols[2][i], "lane id", u16::MAX as u64)? as u16,
+                batch_id: cols[3][i],
+                occupancy: narrow(cols[4][i], "occupancy", u16::MAX as u64)? as u16,
+                bucket: narrow(cols[5][i], "bucket", u32::MAX as u64)? as u32,
+                arrival_ns,
+                cut_ns,
+                dispatch_ns,
+                complete_ns,
+            });
+        }
+        Ok(TraceData { kinds: reader.kinds().to_vec(), events })
+    }
+
+    /// Write the trace to `path`.
+    pub fn save(&self, path: impl AsRef<Path>) -> PallasResult<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_bytes())
+            .map_err(|e| PallasError::io(path.display(), e))
+    }
+
+    /// Read a trace from `path`.
+    pub fn load(path: impl AsRef<Path>) -> PallasResult<Self> {
+        let path = path.as_ref();
+        let bytes =
+            std::fs::read(path).map_err(|e| PallasError::io(path.display(), e))?;
+        Self::from_bytes(&bytes)
+    }
+}
+
+fn column_value(e: &TraceEvent, name: &str) -> u64 {
+    match name {
+        "request_id" => e.request_id,
+        "kind" => e.kind as u64,
+        "lane" => e.lane as u64,
+        "batch_id" => e.batch_id,
+        "occupancy" => e.occupancy as u64,
+        "bucket" => e.bucket as u64,
+        "arrival_ns" => e.arrival_ns,
+        "batching_ns" => e.batching_ns(),
+        "lane_wait_ns" => e.lane_wait_ns(),
+        "service_ns" => e.service_ns(),
+        _ => unreachable!("unknown column '{name}'"),
+    }
+}
+
+#[derive(Debug, Clone)]
+struct ColumnMeta {
+    name: String,
+    encoding: Encoding,
+    offset: usize,
+    len: usize,
+}
+
+/// Streaming `.plt` reader: validates the envelope and footer once, then
+/// decodes individual columns on demand through [`ColumnCursor`] without
+/// materialising the others.
+pub struct TraceReader<'a> {
+    bytes: &'a [u8],
+    events: usize,
+    kinds: Vec<String>,
+    columns: Vec<ColumnMeta>,
+}
+
+impl<'a> TraceReader<'a> {
+    /// Validate the envelope (magics, footer index, column bounds) and
+    /// build a reader over borrowed bytes.
+    pub fn open(bytes: &'a [u8]) -> PallasResult<Self> {
+        if bytes.len() < MAGIC.len() + 4 + TAIL_MAGIC.len() || &bytes[..4] != MAGIC {
+            return Err(err("not a .plt trace (bad magic or truncated)"));
+        }
+        if &bytes[bytes.len() - 4..] != TAIL_MAGIC {
+            return Err(err("truncated .plt trace (bad tail magic)"));
+        }
+        let len_at = bytes.len() - 8;
+        let footer_len =
+            u32::from_le_bytes(bytes[len_at..len_at + 4].try_into().unwrap()) as usize;
+        let footer_start = len_at
+            .checked_sub(footer_len)
+            .ok_or_else(|| err("footer length exceeds file size"))?;
+        if footer_start < MAGIC.len() {
+            return Err(err("footer overlaps the header"));
+        }
+        let footer_text = std::str::from_utf8(&bytes[footer_start..len_at])
+            .map_err(|_| err("footer is not UTF-8"))?;
+        let footer = Json::parse(footer_text)
+            .map_err(|e| err(format!("footer is not valid JSON: {e}")))?;
+        let version = footer
+            .get("schema_version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| err("footer missing 'schema_version'"))?;
+        if version as u64 != TRACE_SCHEMA_VERSION {
+            return Err(err(format!(
+                "unsupported trace schema version {version} (reader supports \
+                 {TRACE_SCHEMA_VERSION})"
+            )));
+        }
+        let events = footer
+            .get("events")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| err("footer missing 'events'"))?;
+        let kinds = footer
+            .get("kinds")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| err("footer missing 'kinds'"))?
+            .iter()
+            .map(|k| {
+                k.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| err("footer 'kinds' entry is not a string"))
+            })
+            .collect::<PallasResult<Vec<_>>>()?;
+        let mut columns = Vec::new();
+        for c in footer
+            .get("columns")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| err("footer missing 'columns'"))?
+        {
+            let name = c
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| err("column missing 'name'"))?;
+            let encoding = c
+                .get("encoding")
+                .and_then(Json::as_str)
+                .and_then(Encoding::parse)
+                .ok_or_else(|| err(format!("column '{name}': unknown encoding")))?;
+            let offset = c
+                .get("offset")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| err(format!("column '{name}': missing 'offset'")))?;
+            let len = c
+                .get("len")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| err(format!("column '{name}': missing 'len'")))?;
+            let end = offset
+                .checked_add(len)
+                .filter(|&e| e <= footer_start)
+                .ok_or_else(|| err(format!("column '{name}': out of bounds")))?;
+            let _ = end;
+            columns.push(ColumnMeta { name: name.to_string(), encoding, offset, len });
+        }
+        Ok(TraceReader { bytes, events, kinds, columns })
+    }
+
+    /// Events per column.
+    pub fn events(&self) -> usize {
+        self.events
+    }
+
+    /// The interned id→name kind table from the footer.
+    pub fn kinds(&self) -> &[String] {
+        &self.kinds
+    }
+
+    /// Column names in file order.
+    pub fn column_names(&self) -> Vec<&str> {
+        self.columns.iter().map(|c| c.name.as_str()).collect()
+    }
+
+    /// A streaming cursor over one column (delta decoding applied).
+    pub fn column(&self, name: &str) -> PallasResult<ColumnCursor<'a>> {
+        let meta = self
+            .columns
+            .iter()
+            .find(|c| c.name == name)
+            .ok_or_else(|| err(format!("no column '{name}' in trace")))?;
+        Ok(ColumnCursor {
+            buf: &self.bytes[meta.offset..meta.offset + meta.len],
+            pos: 0,
+            left: self.events,
+            delta: meta.encoding == Encoding::DeltaVarint,
+            acc: 0,
+        })
+    }
+
+    /// Decode one whole column.
+    pub fn read_column(&self, name: &str) -> PallasResult<Vec<u64>> {
+        let mut cursor = self.column(name)?;
+        let mut out = Vec::with_capacity(self.events);
+        while let Some(v) = cursor.next()? {
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+/// Streaming decoder over one column's payload.
+pub struct ColumnCursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    left: usize,
+    delta: bool,
+    acc: u64,
+}
+
+impl ColumnCursor<'_> {
+    /// The next value, or `None` once all of the column's events have
+    /// been decoded. Truncated or oversized varints are errors.
+    #[allow(clippy::should_implement_trait)] // fallible: Iterator can't surface the error
+    pub fn next(&mut self) -> PallasResult<Option<u64>> {
+        if self.left == 0 {
+            return Ok(None);
+        }
+        let mut v = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let Some(&b) = self.buf.get(self.pos) else {
+                return Err(err("column payload truncated mid-varint"));
+            };
+            self.pos += 1;
+            if shift >= 64 {
+                return Err(err("varint longer than 64 bits"));
+            }
+            v |= ((b & 0x7f) as u64) << shift;
+            if b & 0x80 == 0 {
+                break;
+            }
+            shift += 7;
+        }
+        self.left -= 1;
+        if self.delta {
+            self.acc = self.acc.wrapping_add(v);
+            v = self.acc;
+        }
+        Ok(Some(v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(i: u64) -> TraceEvent {
+        TraceEvent {
+            request_id: i,
+            kind: (i % 3) as u16,
+            lane: (i % 2) as u16,
+            batch_id: i / 4,
+            occupancy: 4,
+            bucket: 8,
+            arrival_ns: i * 1000,
+            cut_ns: i * 1000 + 50,
+            dispatch_ns: i * 1000 + 70,
+            complete_ns: i * 1000 + 400,
+        }
+    }
+
+    fn sample(n: u64) -> TraceData {
+        TraceData::new(
+            vec!["a".into(), "b".into(), "c".into()],
+            (0..n).map(ev).collect(),
+        )
+    }
+
+    #[test]
+    fn round_trips_events_and_bytes() {
+        for n in [0u64, 1, 2, 100] {
+            let t = sample(n);
+            let bytes = t.to_bytes();
+            let back = TraceData::from_bytes(&bytes).unwrap();
+            assert_eq!(back, t, "n={n}");
+            assert_eq!(back.to_bytes(), bytes, "n={n}: re-encode not byte-identical");
+        }
+    }
+
+    #[test]
+    fn streaming_cursor_matches_eager_decode() {
+        let t = sample(37);
+        let bytes = t.to_bytes();
+        let r = TraceReader::open(&bytes).unwrap();
+        assert_eq!(r.events(), 37);
+        assert_eq!(r.kinds(), ["a", "b", "c"]);
+        let mut cursor = r.column("arrival_ns").unwrap();
+        let mut got = Vec::new();
+        while let Some(v) = cursor.next().unwrap() {
+            got.push(v);
+        }
+        let want: Vec<u64> = t.events.iter().map(|e| e.arrival_ns).collect();
+        assert_eq!(got, want);
+        // breakdown columns store the deltas directly
+        let svc = r.read_column("service_ns").unwrap();
+        assert!(svc.iter().all(|&v| v == 330));
+    }
+
+    #[test]
+    fn rejects_malformed_envelopes() {
+        assert!(TraceData::from_bytes(b"").is_err());
+        assert!(TraceData::from_bytes(b"nope").is_err());
+        let mut bytes = sample(3).to_bytes();
+        // flip the tail magic
+        let n = bytes.len();
+        bytes[n - 1] = b'X';
+        assert!(TraceData::from_bytes(&bytes).is_err());
+        // truncate mid-column
+        let bytes = sample(3).to_bytes();
+        assert!(TraceData::from_bytes(&bytes[..bytes.len() / 2]).is_err());
+    }
+
+    #[test]
+    fn rejects_future_schema_versions() {
+        let mut bytes = sample(2).to_bytes();
+        // patch "schema_version":1 -> 9 in place (same length, so the
+        // envelope still parses and only the version check fires)
+        let needle = b"\"schema_version\":1";
+        let at = bytes
+            .windows(needle.len())
+            .position(|w| w == needle)
+            .expect("footer carries the schema version");
+        bytes[at + needle.len() - 1] = b'9';
+        assert!(matches!(
+            TraceData::from_bytes(&bytes),
+            Err(PallasError::Parse { .. })
+        ));
+    }
+
+    #[test]
+    fn writer_sorts_rows_by_arrival() {
+        let t = TraceData::new(vec!["a".into()], vec![ev(5), ev(1), ev(3)]);
+        let ids: Vec<u64> = t.events.iter().map(|e| e.request_id).collect();
+        assert_eq!(ids, vec![1, 3, 5]);
+    }
+}

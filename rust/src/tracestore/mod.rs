@@ -1,0 +1,35 @@
+//! Trace capture, columnar storage and replay — the measurement side of
+//! the paper's workload-dependence claim. Tuning tiers score candidates
+//! against traffic; this subsystem makes that traffic *recorded* instead
+//! of synthetic:
+//!
+//! * **Capture** — [`TraceRecorder`], a lock-light, per-lane-sharded ring
+//!   buffer the serving data plane writes one [`TraceEvent`] per request
+//!   into at batch completion (arrival / cut / dispatch / complete
+//!   timestamps, batch id + occupancy, lane id). Bounded memory, one
+//!   branch of overhead when no recorder is attached.
+//! * **Store** — a schema-versioned columnar `.plt` file ([`TraceData`],
+//!   [`TraceReader`]): per-column varint payloads with delta-encoded
+//!   timestamps, and a JSON footer indexing the columns and carrying the
+//!   interned kind table once (ids in the event columns, names only in
+//!   the footer). Queries (p50/p99 queue/service breakdowns, occupancy
+//!   histograms) read the relevant columns directly.
+//! * **Replay** — [`ReplayPlan`], the exact arrival process of a
+//!   recorded trace (inter-arrival offsets + kind sequence), which
+//!   [`crate::coordinator::loadgen::Scenario::Replay`] re-issues against
+//!   a live coordinator and `Session::tune --trace` turns into a
+//!   trace-weighted tuning objective.
+//!
+//! The existing [`crate::trace`] module keeps its rendering role:
+//! `parframe trace show` converts a stored trace into per-lane timelines
+//! and hands them to the same ASCII/Chrome emitters sim reports use.
+
+pub mod event;
+pub mod format;
+pub mod query;
+pub mod recorder;
+
+pub use event::TraceEvent;
+pub use format::{TraceData, TraceReader, TRACE_SCHEMA_VERSION};
+pub use query::{KindBreakdown, ReplayPlan, TraceSummary};
+pub use recorder::{RecorderStats, TraceRecorder, DEFAULT_TRACE_CAPACITY};

@@ -1,0 +1,352 @@
+//! Queries over a decoded trace: per-kind latency breakdowns, batch
+//! occupancy histograms, slowest-request ranking, replay-plan
+//! extraction, and conversion to the per-lane timelines the existing
+//! [`crate::trace`] emitters render.
+//!
+//! Each query reads only the columns it needs conceptually; the numbers
+//! here are exactly the stored column values (the breakdown columns
+//! `batching_ns` / `lane_wait_ns` / `service_ns` are the deltas the
+//! codec wrote, so no reconstruction error can creep in).
+
+use std::collections::BTreeMap;
+
+use crate::sim::{Category, Segment};
+use crate::util::stats;
+
+use super::event::TraceEvent;
+use super::format::TraceData;
+
+/// Per-kind latency breakdown (milliseconds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct KindBreakdown {
+    /// Interned kind id.
+    pub kind: u16,
+    /// Kind name from the trace's footer table.
+    pub name: String,
+    /// Requests of this kind in the trace.
+    pub count: usize,
+    /// p50 / p99 time waiting in the dynamic batcher.
+    pub p50_batching_ms: f64,
+    /// 99th percentile of the batching wait.
+    pub p99_batching_ms: f64,
+    /// p50 time queued on the executing lane.
+    pub p50_lane_wait_ms: f64,
+    /// 99th percentile of the lane wait.
+    pub p99_lane_wait_ms: f64,
+    /// p50 backend execution time.
+    pub p50_service_ms: f64,
+    /// 99th percentile of backend execution time.
+    pub p99_service_ms: f64,
+    /// p50 end-to-end latency.
+    pub p50_total_ms: f64,
+    /// 99th percentile end-to-end latency.
+    pub p99_total_ms: f64,
+    /// Most frequent compiled bucket (smallest on ties).
+    pub mode_bucket: u32,
+}
+
+/// Whole-trace summary: wall-clock span, batch shape, per-kind breakdowns.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceSummary {
+    /// Total events (requests) in the trace.
+    pub events: usize,
+    /// First arrival → last completion, in seconds.
+    pub duration_s: f64,
+    /// Distinct batches executed.
+    pub batches: usize,
+    /// Mean requests per batch.
+    pub mean_occupancy: f64,
+    /// Distinct lanes that executed work.
+    pub lanes: usize,
+    /// Per-kind breakdowns, ascending kind id (kinds with no events omitted).
+    pub kinds: Vec<KindBreakdown>,
+}
+
+/// A recorded arrival process, ready to re-issue: kind table plus
+/// `(offset_s, kind_id)` pairs relative to the first arrival.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplayPlan {
+    /// Interned id→name kind table (from the trace footer).
+    pub kinds: Vec<String>,
+    /// Arrival offsets in seconds since the first arrival, with the
+    /// interned kind of each request, in arrival order.
+    pub arrivals: Vec<(f64, u16)>,
+    /// Seed for the replay's deterministic tag stream.
+    pub seed: u64,
+}
+
+impl ReplayPlan {
+    /// The kind name for an interned id.
+    pub fn kind_name(&self, id: u16) -> &str {
+        self.kinds.get(id as usize).map(String::as_str).unwrap_or("?")
+    }
+}
+
+fn ms(ns: u64) -> f64 {
+    ns as f64 / 1e6
+}
+
+impl TraceData {
+    /// Requests per kind id, ascending id, zero-count kinds omitted.
+    pub fn per_kind_counts(&self) -> Vec<(u16, usize)> {
+        let mut counts: BTreeMap<u16, usize> = BTreeMap::new();
+        for e in &self.events {
+            *counts.entry(e.kind).or_insert(0) += 1;
+        }
+        counts.into_iter().collect()
+    }
+
+    /// The most frequent compiled bucket for `kind` (smallest on ties);
+    /// `None` when the trace has no events of that kind.
+    pub fn mode_bucket(&self, kind: u16) -> Option<u32> {
+        let mut by_bucket: BTreeMap<u32, usize> = BTreeMap::new();
+        for e in self.events.iter().filter(|e| e.kind == kind) {
+            *by_bucket.entry(e.bucket).or_insert(0) += 1;
+        }
+        let mut best: Option<(u32, usize)> = None;
+        for (bucket, n) in by_bucket {
+            // ascending iteration: strictly-greater keeps the smallest
+            // bucket on ties
+            if best.is_none_or(|(_, bn)| n > bn) {
+                best = Some((bucket, n));
+            }
+        }
+        best.map(|(bucket, _)| bucket)
+    }
+
+    /// Distinct batches as `(batch_id, lane, occupancy, bucket)`,
+    /// ascending batch id.
+    pub fn batch_rows(&self) -> Vec<(u64, u16, u16, u32)> {
+        let mut rows: BTreeMap<u64, (u16, u16, u32)> = BTreeMap::new();
+        for e in &self.events {
+            rows.entry(e.batch_id).or_insert((e.lane, e.occupancy, e.bucket));
+        }
+        rows.into_iter().map(|(id, (lane, occ, bucket))| (id, lane, occ, bucket)).collect()
+    }
+
+    /// Batch-occupancy histogram: `(occupancy, batches)` ascending.
+    pub fn occupancy_histogram(&self) -> Vec<(u16, usize)> {
+        let mut hist: BTreeMap<u16, usize> = BTreeMap::new();
+        for (_, _, occ, _) in self.batch_rows() {
+            *hist.entry(occ).or_insert(0) += 1;
+        }
+        hist.into_iter().collect()
+    }
+
+    /// The `n` slowest requests by end-to-end latency, slowest first
+    /// (ties broken by request id for a stable order).
+    pub fn slowest(&self, n: usize) -> Vec<TraceEvent> {
+        let mut v = self.events.clone();
+        v.sort_by_key(|e| (std::cmp::Reverse(e.total_ns()), e.request_id));
+        v.truncate(n);
+        v
+    }
+
+    /// Whole-trace summary with per-kind p50/p99 breakdowns.
+    pub fn summary(&self) -> TraceSummary {
+        let batch_rows = self.batch_rows();
+        let mut lanes: Vec<u16> = batch_rows.iter().map(|&(_, lane, _, _)| lane).collect();
+        lanes.sort_unstable();
+        lanes.dedup();
+        let mean_occupancy = if batch_rows.is_empty() {
+            0.0
+        } else {
+            batch_rows.iter().map(|&(_, _, occ, _)| occ as f64).sum::<f64>()
+                / batch_rows.len() as f64
+        };
+        let start = self.events.iter().map(|e| e.arrival_ns).min().unwrap_or(0);
+        let end = self.events.iter().map(|e| e.complete_ns).max().unwrap_or(start);
+        let mut kinds = Vec::new();
+        for (kind, count) in self.per_kind_counts() {
+            let of = |f: fn(&TraceEvent) -> u64| -> Vec<f64> {
+                self.events
+                    .iter()
+                    .filter(|e| e.kind == kind)
+                    .map(|e| ms(f(e)))
+                    .collect()
+            };
+            let batching = of(TraceEvent::batching_ns);
+            let lane_wait = of(TraceEvent::lane_wait_ns);
+            let service = of(TraceEvent::service_ns);
+            let total = of(TraceEvent::total_ns);
+            kinds.push(KindBreakdown {
+                kind,
+                name: self.kind_name(kind),
+                count,
+                p50_batching_ms: stats::median(&batching),
+                p99_batching_ms: stats::percentile(&batching, 99.0),
+                p50_lane_wait_ms: stats::median(&lane_wait),
+                p99_lane_wait_ms: stats::percentile(&lane_wait, 99.0),
+                p50_service_ms: stats::median(&service),
+                p99_service_ms: stats::percentile(&service, 99.0),
+                p50_total_ms: stats::median(&total),
+                p99_total_ms: stats::percentile(&total, 99.0),
+                mode_bucket: self.mode_bucket(kind).unwrap_or(0),
+            });
+        }
+        TraceSummary {
+            events: self.events.len(),
+            duration_s: end.saturating_sub(start) as f64 / 1e9,
+            batches: batch_rows.len(),
+            mean_occupancy,
+            lanes: lanes.len(),
+            kinds,
+        }
+    }
+
+    /// Extract the recorded arrival process for replay: offsets in
+    /// seconds since the first arrival, in arrival order.
+    pub fn replay_plan(&self, seed: u64) -> ReplayPlan {
+        let start = self.events.iter().map(|e| e.arrival_ns).min().unwrap_or(0);
+        ReplayPlan {
+            kinds: self.kinds.clone(),
+            arrivals: self
+                .events
+                .iter()
+                .map(|e| ((e.arrival_ns - start) as f64 / 1e9, e.kind))
+                .collect(),
+            seed,
+        }
+    }
+
+    /// Convert the trace to per-lane timelines for the existing
+    /// [`crate::trace::ascii_trace`] / [`crate::trace::chrome_trace`]
+    /// emitters: one compute segment per batch (dispatch → complete,
+    /// `op` = batch id), times in seconds relative to the first arrival.
+    /// Returns `(timelines, span_s)`.
+    pub fn lane_timelines(&self) -> (Vec<Vec<Segment>>, f64) {
+        let start = self.events.iter().map(|e| e.arrival_ns).min().unwrap_or(0);
+        let end = self.events.iter().map(|e| e.complete_ns).max().unwrap_or(start);
+        // batch id → (lane, dispatch, complete); every request in a batch
+        // carries the same triple, first one wins
+        let mut batches: BTreeMap<u64, (u16, u64, u64)> = BTreeMap::new();
+        for e in &self.events {
+            batches.entry(e.batch_id).or_insert((e.lane, e.dispatch_ns, e.complete_ns));
+        }
+        let n_lanes = batches.values().map(|&(lane, _, _)| lane as usize + 1).max().unwrap_or(0);
+        let mut timelines = vec![Vec::new(); n_lanes];
+        for (batch_id, (lane, dispatch, complete)) in batches {
+            timelines[lane as usize].push(Segment {
+                t0: dispatch.saturating_sub(start) as f64 / 1e9,
+                t1: complete.saturating_sub(start) as f64 / 1e9,
+                cat: Category::MklCompute,
+                op: batch_id as usize,
+            });
+        }
+        for tl in &mut timelines {
+            tl.sort_by(|a, b| a.t0.partial_cmp(&b.t0).unwrap());
+        }
+        (timelines, end.saturating_sub(start) as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(id: u64, kind: u16, lane: u16, batch: u64, occ: u16, bucket: u32, t: u64) -> TraceEvent {
+        TraceEvent {
+            request_id: id,
+            kind,
+            lane,
+            batch_id: batch,
+            occupancy: occ,
+            bucket,
+            arrival_ns: t,
+            cut_ns: t + 1_000_000,
+            dispatch_ns: t + 2_000_000,
+            complete_ns: t + 10_000_000,
+        }
+    }
+
+    fn sample() -> TraceData {
+        TraceData::new(
+            vec!["mlp".into(), "cnn".into()],
+            vec![
+                ev(0, 0, 0, 0, 2, 4, 0),
+                ev(1, 0, 0, 0, 2, 4, 500_000),
+                ev(2, 1, 1, 1, 1, 1, 1_000_000),
+                ev(3, 0, 0, 2, 1, 8, 2_000_000),
+            ],
+        )
+    }
+
+    #[test]
+    fn summary_counts_batches_and_kinds() {
+        let s = sample().summary();
+        assert_eq!(s.events, 4);
+        assert_eq!(s.batches, 3);
+        assert_eq!(s.lanes, 2);
+        assert!((s.mean_occupancy - (2.0 + 1.0 + 1.0) / 3.0).abs() < 1e-12);
+        assert_eq!(s.kinds.len(), 2);
+        assert_eq!(s.kinds[0].name, "mlp");
+        assert_eq!(s.kinds[0].count, 3);
+        assert_eq!(s.kinds[0].mode_bucket, 4); // 4 twice, 8 once
+        assert_eq!(s.kinds[1].count, 1);
+        // every event has the same 8ms service time
+        assert!((s.kinds[0].p50_service_ms - 8.0).abs() < 1e-9);
+        assert!((s.duration_s - 0.012).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mode_bucket_breaks_ties_downward() {
+        let t = TraceData::new(
+            vec!["k".into()],
+            vec![ev(0, 0, 0, 0, 1, 8, 0), ev(1, 0, 0, 1, 1, 2, 10)],
+        );
+        assert_eq!(t.mode_bucket(0), Some(2));
+        assert_eq!(t.mode_bucket(9), None);
+    }
+
+    #[test]
+    fn occupancy_histogram_is_per_batch() {
+        let hist = sample().occupancy_histogram();
+        assert_eq!(hist, vec![(1, 2), (2, 1)]);
+    }
+
+    #[test]
+    fn slowest_ranks_by_total_latency() {
+        let mut t = sample();
+        t.events[2].complete_ns = t.events[2].arrival_ns + 50_000_000;
+        let top = t.slowest(2);
+        assert_eq!(top.len(), 2);
+        assert_eq!(top[0].request_id, 2);
+    }
+
+    #[test]
+    fn replay_plan_preserves_arrival_sequence() {
+        let plan = sample().replay_plan(7);
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.kinds, ["mlp", "cnn"]);
+        let kinds: Vec<u16> = plan.arrivals.iter().map(|&(_, k)| k).collect();
+        assert_eq!(kinds, vec![0, 0, 1, 0]);
+        assert_eq!(plan.arrivals[0].0, 0.0);
+        assert!((plan.arrivals[3].0 - 0.002).abs() < 1e-12);
+        assert_eq!(plan.kind_name(1), "cnn");
+    }
+
+    #[test]
+    fn lane_timelines_have_one_segment_per_batch() {
+        let (tls, span) = sample().lane_timelines();
+        assert_eq!(tls.len(), 2);
+        assert_eq!(tls[0].len(), 2); // batches 0 and 2 on lane 0
+        assert_eq!(tls[1].len(), 1);
+        assert!(span > 0.0);
+        assert!(tls[0].windows(2).all(|w| w[0].t0 <= w[1].t0));
+    }
+
+    #[test]
+    fn empty_trace_queries_are_benign() {
+        let t = TraceData::default();
+        let s = t.summary();
+        assert_eq!(s.events, 0);
+        assert_eq!(s.batches, 0);
+        assert!(s.kinds.is_empty());
+        assert!(t.slowest(5).is_empty());
+        assert!(t.occupancy_histogram().is_empty());
+        let (tls, span) = t.lane_timelines();
+        assert!(tls.is_empty());
+        assert_eq!(span, 0.0);
+        assert!(t.replay_plan(1).arrivals.is_empty());
+    }
+}

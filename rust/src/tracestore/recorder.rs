@@ -1,0 +1,186 @@
+//! Lock-light, per-lane-sharded capture of serving [`TraceEvent`]s.
+//!
+//! Lanes record whole batches under one short shard-mutex hold (shard =
+//! `lane % SHARDS`, so concurrent lanes rarely contend); each shard is a
+//! bounded ring that drops its *oldest* events under overflow, so a long
+//! run keeps the most recent window and memory stays capped. When no
+//! recorder is attached the data plane pays a single `Option` branch per
+//! batch — the near-zero-overhead-when-disabled contract the serving
+//! bench (`BENCH_trace.json`, `record-overhead`) measures.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::metrics::Counter;
+
+use super::event::TraceEvent;
+
+/// Default total event capacity of a recorder (across all shards).
+pub const DEFAULT_TRACE_CAPACITY: usize = 65_536;
+
+/// Shard count: lanes map to shards by `lane % SHARDS`, so up to this
+/// many lanes record without sharing a lock.
+const SHARDS: usize = 16;
+
+/// Point-in-time recorder accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecorderStats {
+    /// Events accepted (including ones later evicted by overflow).
+    pub recorded: u64,
+    /// Events evicted because a shard ring was full.
+    pub dropped: u64,
+    /// Events currently buffered across all shards.
+    pub buffered: usize,
+}
+
+/// Bounded, sharded ring buffer of serving trace events.
+pub struct TraceRecorder {
+    epoch: Instant,
+    shards: Vec<Mutex<VecDeque<TraceEvent>>>,
+    shard_cap: usize,
+    next_batch: AtomicU64,
+    recorded: Counter,
+    dropped: Counter,
+}
+
+impl Default for TraceRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TraceRecorder {
+    /// Recorder with the default capacity.
+    pub fn new() -> Self {
+        Self::with_capacity(DEFAULT_TRACE_CAPACITY)
+    }
+
+    /// Recorder bounded to roughly `capacity` events in total (rounded
+    /// up to a whole number per shard, minimum one per shard).
+    pub fn with_capacity(capacity: usize) -> Self {
+        let shard_cap = capacity.div_ceil(SHARDS).max(1);
+        TraceRecorder {
+            epoch: Instant::now(),
+            shards: (0..SHARDS).map(|_| Mutex::new(VecDeque::new())).collect(),
+            shard_cap,
+            next_batch: AtomicU64::new(0),
+            recorded: Counter::new(),
+            dropped: Counter::new(),
+        }
+    }
+
+    /// The instant timestamps are measured from (recorder construction).
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    /// Nanoseconds from the epoch to `t` (0 for instants before it —
+    /// the epoch predates every recorded request by construction).
+    pub fn ns_since_epoch(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_nanos() as u64
+    }
+
+    /// A fresh batch id (monotone; completion-ordered across lanes).
+    pub fn next_batch_id(&self) -> u64 {
+        self.next_batch.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Record one batch's per-request events from `lane` under a single
+    /// shard-lock hold. Overflow evicts the shard's oldest events.
+    pub fn record(&self, lane: usize, events: impl IntoIterator<Item = TraceEvent>) {
+        let mut ring = self.shards[lane % SHARDS].lock().unwrap();
+        for e in events {
+            if ring.len() >= self.shard_cap {
+                ring.pop_front();
+                self.dropped.add(1);
+            }
+            ring.push_back(e);
+            self.recorded.add(1);
+        }
+    }
+
+    /// Current accounting snapshot.
+    pub fn stats(&self) -> RecorderStats {
+        RecorderStats {
+            recorded: self.recorded.get(),
+            dropped: self.dropped.get(),
+            buffered: self.shards.iter().map(|s| s.lock().unwrap().len()).sum(),
+        }
+    }
+
+    /// Drain every shard and return the merged events sorted by arrival
+    /// (ties broken by request id, so one submitter's order is stable).
+    /// The recorder is reusable afterwards; batch ids keep counting.
+    pub fn drain(&self) -> Vec<TraceEvent> {
+        let mut all = Vec::new();
+        for shard in &self.shards {
+            all.extend(shard.lock().unwrap().drain(..));
+        }
+        all.sort_by_key(|e| (e.arrival_ns, e.request_id));
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(request_id: u64, arrival_ns: u64) -> TraceEvent {
+        TraceEvent {
+            request_id,
+            kind: 0,
+            lane: 0,
+            batch_id: 0,
+            occupancy: 1,
+            bucket: 1,
+            arrival_ns,
+            cut_ns: arrival_ns + 1,
+            dispatch_ns: arrival_ns + 2,
+            complete_ns: arrival_ns + 3,
+        }
+    }
+
+    #[test]
+    fn drain_merges_shards_in_arrival_order() {
+        let r = TraceRecorder::new();
+        // different lanes land in different shards; drain re-merges
+        r.record(3, [ev(2, 20), ev(3, 30)]);
+        r.record(0, [ev(0, 5)]);
+        r.record(7, [ev(1, 10)]);
+        let drained = r.drain();
+        let ids: Vec<u64> = drained.iter().map(|e| e.request_id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        assert_eq!(r.stats().buffered, 0);
+        assert_eq!(r.stats().recorded, 4);
+    }
+
+    #[test]
+    fn overflow_drops_oldest_and_counts() {
+        let r = TraceRecorder::with_capacity(SHARDS); // one slot per shard
+        r.record(1, (0..5).map(|i| ev(i, i)));
+        let s = r.stats();
+        assert_eq!(s.recorded, 5);
+        assert_eq!(s.dropped, 4);
+        assert_eq!(s.buffered, 1);
+        // the survivor is the newest event, not the oldest
+        assert_eq!(r.drain()[0].request_id, 4);
+    }
+
+    #[test]
+    fn batch_ids_are_monotone() {
+        let r = TraceRecorder::new();
+        let a = r.next_batch_id();
+        let b = r.next_batch_id();
+        assert!(b > a);
+    }
+
+    #[test]
+    fn epoch_clamps_earlier_instants() {
+        let r = TraceRecorder::new();
+        assert_eq!(r.ns_since_epoch(r.epoch()), 0);
+        let later = Instant::now();
+        assert!(r.ns_since_epoch(later) < 10_000_000_000);
+    }
+}

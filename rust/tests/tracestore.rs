@@ -1,0 +1,197 @@
+//! Trace-store integration: capture on a live coordinator → columnar
+//! `.plt` round-trip → replay and trace-driven tuning.
+//!
+//! The property pins are the subsystem's two contracts: encode→decode is
+//! *byte*-identical for any event stream (wrapping-delta varints make
+//! every `u64` representable), and a replayed trace re-issues the
+//! recorded per-kind arrival sequence exactly.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use parframe::api::{Session, Workload};
+use parframe::config::CpuPlatform;
+use parframe::tracestore::{ReplayPlan, TraceData, TraceEvent, TraceRecorder};
+use parframe::util::prng::Prng;
+
+fn tmp_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("parframe_{}_{name}", std::process::id()))
+}
+
+/// Random events over the full value range of every column — arbitrary
+/// `u64` timestamps (not even monotone) must survive the codec.
+fn random_events(rng: &mut Prng, n: usize) -> Vec<TraceEvent> {
+    (0..n)
+        .map(|i| TraceEvent {
+            request_id: i as u64,
+            kind: (rng.next_u64() % 7) as u16,
+            lane: (rng.next_u64() % 5) as u16,
+            batch_id: rng.next_u64() % 1000,
+            occupancy: rng.next_u64() as u16,
+            bucket: rng.next_u64() as u32,
+            arrival_ns: rng.next_u64(),
+            cut_ns: rng.next_u64(),
+            dispatch_ns: rng.next_u64(),
+            complete_ns: rng.next_u64(),
+        })
+        .collect()
+}
+
+#[test]
+fn random_traces_round_trip_byte_identically() {
+    let kinds: Vec<String> = (0..7).map(|i| format!("kind-{i}")).collect();
+    let mut rng = Prng::new(0x7A11A5);
+    for n in [0usize, 1, 2, 17, 513] {
+        let trace = TraceData::new(kinds.clone(), random_events(&mut rng, n));
+        let bytes = trace.to_bytes();
+        let decoded = TraceData::from_bytes(&bytes).unwrap();
+        assert_eq!(decoded, trace, "decode must reproduce the trace (n={n})");
+        assert_eq!(decoded.to_bytes(), bytes, "re-encode must be byte-identical (n={n})");
+    }
+}
+
+#[test]
+fn recorder_bounds_memory_and_counts_drops() {
+    let ev = |i: u64| TraceEvent {
+        request_id: i,
+        kind: 0,
+        lane: 0,
+        batch_id: 0,
+        occupancy: 1,
+        bucket: 1,
+        arrival_ns: i,
+        cut_ns: i + 1,
+        dispatch_ns: i + 2,
+        complete_ns: i + 3,
+    };
+    // capacity 32 over 16 shards → 2 slots in lane 0's shard
+    let r = TraceRecorder::with_capacity(32);
+    r.record(0, (0..100).map(ev));
+    let s = r.stats();
+    assert_eq!(s.recorded, 100);
+    assert_eq!(s.buffered, 2);
+    assert_eq!(s.dropped, 98);
+    // the ring keeps the *newest* window
+    let drained = r.drain();
+    assert_eq!(drained.len(), 2);
+    assert_eq!(drained[0].request_id, 98);
+    assert_eq!(drained[1].request_id, 99);
+}
+
+#[test]
+fn serving_captures_a_consistent_trace() {
+    let session = Session::on(CpuPlatform::large2());
+    // without a recorder the handle has no trace to drain
+    let bare = session.serve_unplanned(&["wide_deep"], 1).unwrap();
+    assert!(bare.drain_trace().is_err());
+    drop(bare);
+
+    let recorder = Arc::new(TraceRecorder::new());
+    let handle =
+        session.serve_unplanned_with(&["wide_deep"], 2, Some(Arc::clone(&recorder))).unwrap();
+    let report = handle.run_closed("wide_deep", 64, 4).unwrap();
+    assert_eq!(report.completed, 64);
+    let trace = handle.drain_trace().unwrap();
+    assert_eq!(trace.kinds, vec!["wide_deep".to_string()]);
+    assert_eq!(trace.events.len(), 64);
+    for e in &trace.events {
+        assert!(e.arrival_ns <= e.cut_ns, "arrival after cut: {e:?}");
+        assert!(e.cut_ns <= e.dispatch_ns, "cut after dispatch: {e:?}");
+        assert!(e.dispatch_ns <= e.complete_ns, "dispatch after complete: {e:?}");
+    }
+    // per-batch occupancies account for every request exactly once
+    let occ_sum: usize = trace.batch_rows().iter().map(|&(_, _, occ, _)| occ as usize).sum();
+    assert_eq!(occ_sum, 64);
+
+    // the capture round-trips through an actual .plt file
+    let path = tmp_path("capture.plt");
+    trace.save(&path).unwrap();
+    let loaded = TraceData::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded, trace);
+
+    let s = trace.summary();
+    assert_eq!(s.events, 64);
+    assert!(s.batches >= 1 && s.lanes >= 1);
+    assert_eq!(s.kinds.len(), 1);
+    assert_eq!(s.kinds[0].name, "wide_deep");
+    assert_eq!(s.kinds[0].count, 64);
+}
+
+#[test]
+fn replay_reissues_the_recorded_kind_sequence() {
+    let session = Session::on(CpuPlatform::large2());
+    // a synthetic arrival process interleaving two kinds at 0.2 ms spacing
+    let mut rng = Prng::new(7);
+    let arrivals: Vec<(f64, u16)> =
+        (0..40).map(|i| (i as f64 * 2e-4, (rng.next_u64() % 2) as u16)).collect();
+    let plan = ReplayPlan {
+        kinds: vec!["wide_deep".into(), "ncf".into()],
+        arrivals: arrivals.clone(),
+        seed: 0x5EED,
+    };
+    let recorder = Arc::new(TraceRecorder::new());
+    let handle =
+        session.serve_unplanned_with(&["wide_deep", "ncf"], 2, Some(recorder)).unwrap();
+    let report = handle.run_replay(&plan).unwrap();
+    assert_eq!(report.completed, 40);
+    assert_eq!(report.errors, 0);
+
+    let trace = handle.drain_trace().unwrap();
+    assert_eq!(trace.events.len(), 40);
+    // the coordinator interned its kinds in declaration order, so the
+    // captured ids are directly comparable to the plan's
+    let want: Vec<u16> = arrivals.iter().map(|&(_, k)| k).collect();
+    let got: Vec<u16> = trace.events.iter().map(|e| e.kind).collect();
+    assert_eq!(got, want, "replay must re-issue the recorded kind sequence exactly");
+    // and a plan extracted from the capture carries the same sequence
+    // forward (arrival order, offsets non-decreasing from zero)
+    let extracted = trace.replay_plan(1);
+    let again: Vec<u16> = extracted.arrivals.iter().map(|&(_, k)| k).collect();
+    assert_eq!(again, want);
+    assert_eq!(extracted.arrivals[0].0, 0.0);
+    assert!(extracted.arrivals.windows(2).all(|w| w[0].0 <= w[1].0));
+
+    // a replay naming an unserved kind fails loudly
+    let bad = ReplayPlan {
+        kinds: vec!["resnet50".into()],
+        arrivals: vec![(0.0, 0)],
+        seed: 1,
+    };
+    assert!(handle.run_replay(&bad).is_err());
+}
+
+#[test]
+fn tune_from_trace_is_deterministic_across_jobs() {
+    let ev = |id: u64, kind: u16, bucket: u32| TraceEvent {
+        request_id: id,
+        kind,
+        lane: 0,
+        batch_id: id,
+        occupancy: 1,
+        bucket,
+        arrival_ns: id * 1_000,
+        cut_ns: id * 1_000 + 100,
+        dispatch_ns: id * 1_000 + 200,
+        complete_ns: id * 1_000 + 900,
+    };
+    // 6 wide_deep requests at bucket 4, 2 ncf at bucket 2
+    let mut events: Vec<TraceEvent> = (0..6).map(|i| ev(i, 0, 4)).collect();
+    events.extend((6..8).map(|i| ev(i, 1, 2)));
+    let trace = TraceData::new(vec!["wide_deep".into(), "ncf".into()], events);
+    let w = Workload::from_trace(&trace).unwrap();
+    assert_eq!(w.entries[0].kind, "wide_deep");
+    assert_eq!(w.entries[0].weight, 6.0);
+    assert_eq!(w.entries[0].batch, 4); // mode bucket, not canonical
+    assert_eq!(w.entries[1].batch, 2);
+
+    // the full tune --trace pipeline is bit-identical at any --jobs
+    let mut outputs = Vec::new();
+    for jobs in [1usize, 4] {
+        let session = Session::builder().platform(CpuPlatform::small()).jobs(jobs).build();
+        let plan = session.tune_exhaustive(&w).unwrap();
+        let score = session.score_plan_on_trace(&plan, &trace).unwrap();
+        outputs.push((plan.group_lines(), score.to_bits()));
+    }
+    assert_eq!(outputs[0], outputs[1], "tune --trace must be bit-identical across --jobs");
+}
